@@ -1,0 +1,70 @@
+//! Design-space exploration: the workload the paper's §5.2 Fig-8 study
+//! motivates — how should a 16384-PE budget be chipletized, and how much
+//! distribution bandwidth does each configuration need?
+//!
+//! Sweeps (a) chiplet count at fixed total PEs and (b) SRAM read
+//! bandwidth, for both DNNs and all three partitioning strategies, and
+//! reports the throughput-optimal configuration per workload.
+//!
+//! Run with: `cargo run --release --example design_space`
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{evaluate_model, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::report::Table;
+use wienna::workload::{resnet50::resnet50, unet::unet};
+
+fn main() {
+    for model in [resnet50(64), unet(64)] {
+        println!("### {}\n", model.name);
+
+        // (a) Chiplet-count sweep at fixed 16384 PEs (Fig 8).
+        let mut t = Table::new(
+            "cluster-size sweep on WIENNA-C (MACs/cycle)",
+            &["chiplets", "PEs/chiplet", "KP-CP", "NP-CP", "YP-XP", "adaptive"],
+        );
+        let mut best: (f64, u64) = (0.0, 0);
+        for nc in [32u64, 64, 128, 256, 512, 1024] {
+            let sys = SystemConfig::with_chiplets(nc);
+            let e = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+            let per: Vec<f64> = Strategy::ALL
+                .iter()
+                .map(|&s| evaluate_model(&e, &model, Some(s)).macs_per_cycle)
+                .collect();
+            let adaptive = evaluate_model(&e, &model, None).macs_per_cycle;
+            if adaptive > best.0 {
+                best = (adaptive, nc);
+            }
+            t.row(vec![
+                nc.to_string(),
+                sys.pes_per_chiplet.to_string(),
+                format!("{:.0}", per[0]),
+                format!("{:.0}", per[1]),
+                format!("{:.0}", per[2]),
+                format!("{:.0}", adaptive),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("best configuration: {} chiplets ({:.0} MACs/cycle)\n", best.1, best.0);
+
+        // (b) Bandwidth requirement: smallest ideal-fabric BW reaching 95%
+        // of the saturated throughput (the Fig-3 takeaway, condensed).
+        let sys = SystemConfig::default();
+        let saturated = evaluate_model(&CostEngine::ideal(&sys, 1048576.0), &model, None).macs_per_cycle;
+        let mut need = None;
+        for bw in [4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0] {
+            let th = evaluate_model(&CostEngine::ideal(&sys, bw), &model, None).macs_per_cycle;
+            if th >= 0.95 * saturated {
+                need = Some((bw, th));
+                break;
+            }
+        }
+        match need {
+            Some((bw, th)) => println!(
+                "bandwidth to saturate (95% of {:.0} MACs/cyc): {bw} B/cycle ({th:.0} MACs/cyc)\n",
+                saturated
+            ),
+            None => println!("does not saturate below 512 B/cycle\n"),
+        }
+    }
+}

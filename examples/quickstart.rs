@@ -1,0 +1,59 @@
+//! Quickstart: evaluate one DNN on the four design points of the paper
+//! and print the throughput/energy comparison (the Fig-7 headline in
+//! miniature).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{evaluate_model, CostEngine};
+use wienna::report::Table;
+use wienna::workload::resnet50::resnet50;
+
+fn main() {
+    // The paper's default package: 256 chiplets x 64 PEs, 13 MiB global
+    // SRAM, 500 MHz (Table 4).
+    let sys = SystemConfig::default();
+    let model = resnet50(64);
+    println!(
+        "{}: {} layers, {:.1} GMACs\n",
+        model.name,
+        model.layers.len(),
+        model.total_macs() as f64 / 1e9
+    );
+
+    let mut t = Table::new(
+        "ResNet-50, adaptive partitioning, four design points",
+        &["design", "MACs/cycle", "latency (ms)", "dist energy (mJ)", "vs Interposer-C"],
+    );
+    let base = {
+        let e = CostEngine::for_design_point(&sys, DesignPoint::INTERPOSER_C);
+        evaluate_model(&e, &model, None).macs_per_cycle
+    };
+    for dp in DesignPoint::ALL {
+        let engine = CostEngine::for_design_point(&sys, dp);
+        let cost = evaluate_model(&engine, &model, None);
+        t.row(vec![
+            dp.label(),
+            format!("{:.0}", cost.macs_per_cycle),
+            format!("{:.2}", cost.total_latency / wienna::config::CLOCK_HZ * 1e3),
+            format!("{:.1}", cost.total_dist_energy_pj * 1e-9),
+            format!("{:.2}x", cost.macs_per_cycle / base),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\nPer-layer strategy choices (first 10 layers, WIENNA-C):");
+    let engine = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+    for layer in model.layers.iter().take(10) {
+        let (s, c) = wienna::cost::best_strategy(&engine, layer);
+        println!(
+            "  {:<16} {:<9} -> {:<6} ({} chiplets, {:.0} MACs/cyc, {})",
+            layer.name,
+            c.layer_type.label(),
+            s.label(),
+            c.used_chiplets,
+            c.macs_per_cycle,
+            c.bottleneck().label()
+        );
+    }
+}

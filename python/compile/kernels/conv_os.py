@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: output-stationary direct 3x3 convolution.
+
+The paper pairs the YP-XP (activation-partitioned) strategy with
+Shidiannao-like chiplets (Table 4): the PE array is spatially mapped onto
+the *output plane* and partial sums stay resident while inputs shift
+past. On TPU the same insight becomes an output-stationary Pallas kernel:
+
+* the output tile `[Kt, Y, X]` is the resident VMEM block (the Shidiannao
+  PE-array state);
+* the input halo window `[C, Y+2, X+2]` is staged once per grid step and
+  *shifted* nine times (the `x[:, rr:rr+Y, ss:ss+X]` slices) — exactly the
+  neighbour-shifting ShiDianNao performs with its inter-PE links;
+* the filter-bank contraction per shift is a `[Kt, C] x [C, Y*X]` matmul
+  on the MXU.
+
+Stride-1, 3x3, SAME padding — the shape class the YP-XP chiplets execute
+in the end-to-end demo. interpret=True for CPU-PJRT (see matmul_ws.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_kernel(x_ref, w_ref, o_ref, *, y: int, x: int):
+    """One grid step: one output-channel tile, full output plane resident.
+
+    x_ref: [C, Y+2, X+2] (SAME-padded input), w_ref: [Kt, C, 3, 3],
+    o_ref: [Kt, Y, X].
+    """
+    xin = x_ref[...]
+    w = w_ref[...]
+    kt = w.shape[0]
+    acc = jnp.zeros((kt, y, x), jnp.float32)
+    # Nine shifted contractions — the ShiDianNao systolic shift pattern.
+    for rr in range(3):
+        for ss in range(3):
+            patch = xin[:, rr:rr + y, ss:ss + x]          # [C, Y, X]
+            tap = w[:, :, rr, ss]                          # [Kt, C]
+            acc = acc + jnp.einsum(
+                "kc,cyx->kyx", tap, patch,
+                preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kt", "interpret"))
+def conv3x3_os(xp: jnp.ndarray, w: jnp.ndarray, *, kt: int = 8,
+               interpret: bool = True) -> jnp.ndarray:
+    """Output-stationary SAME 3x3 conv.
+
+    xp: [C, Y+2, X+2] pre-padded input; w: [K, C, 3, 3]; returns [K, Y, X].
+    `kt` is the output-channel tile (grid dimension).
+    """
+    c, yp_, xp_ = xp.shape
+    k = w.shape[0]
+    y, x = yp_ - 2, xp_ - 2
+    assert w.shape == (k, c, 3, 3)
+    assert k % kt == 0, f"K={k} not a multiple of kt={kt}"
+    return pl.pallas_call(
+        functools.partial(_conv3x3_kernel, y=y, x=x),
+        grid=(k // kt,),
+        in_specs=[
+            # Full input halo window resident each step.
+            pl.BlockSpec((c, yp_, xp_), lambda i: (0, 0, 0)),
+            pl.BlockSpec((kt, c, 3, 3), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((kt, y, x), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, y, x), jnp.float32),
+        interpret=interpret,
+    )(xp, w)
+
+
+def vmem_footprint_bytes(c: int, y: int, x: int, kt: int,
+                         dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step: the padded input window, one
+    filter tile and the resident output tile."""
+    xin = c * (y + 2) * (x + 2) * dtype_bytes
+    w = kt * c * 9 * dtype_bytes
+    out = kt * y * x * 4
+    return xin + w + out

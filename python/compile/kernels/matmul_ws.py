@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: weight-stationary tiled matmul.
+
+This is the compute hot-spot of a WIENNA chiplet. The paper's chiplets are
+NVDLA-like weight-stationary MAC arrays; on a TPU the same insight maps to
+(see DESIGN.md §Hardware-Adaptation):
+
+* chiplet local memory  -> VMEM: ``BlockSpec``s stage (patch, filter) tiles
+  HBM->VMEM the way WIENNA stages SRAM->chiplet-local-memory;
+* the 8x8 PE array      -> the MXU: the inner ``jnp.dot`` contracts a
+  (bm, bk) x (bk, bn) tile on the systolic array;
+* KP-CP "weights resident, inputs streamed" -> the grid order: the K
+  (contraction) dimension is innermost so the output tile accumulates in a
+  VMEM scratch register while input tiles stream past — exactly the
+  weight-stationary schedule.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path, and real-TPU
+efficiency is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = 64
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: accumulate a (bm, bk) x (bk, bn) product.
+
+    Grid is (m_tiles, n_tiles, k_tiles) with k innermost ("arbitrary"
+    semantics): the output tile block index is constant across the k steps
+    of one (m, n) tile, so ``o_ref`` stays resident in VMEM and serves as
+    the f32 accumulator — the weight-stationary accumulation.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_ws(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = DEFAULT_BLOCK,
+              bk: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK,
+              interpret: bool = True) -> jnp.ndarray:
+    """Tiled matmul ``a[m,k] @ b[k,n]`` with a weight-stationary schedule.
+
+    Shapes must be multiples of the block sizes (the AOT wrapper pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k})x({k},{n}) not a multiple of blocks ({bm},{bk},{bn})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def add_stream(a: jnp.ndarray, b: jnp.ndarray, *, block: int = 4096,
+               interpret: bool = True) -> jnp.ndarray:
+    """Elementwise residual addition, streamed through VMEM in `block`
+    chunks (the collection-side reuse of the chiplet SIMD lanes)."""
+    (n,) = a.shape
+    assert a.shape == b.shape
+    assert n % block == 0, f"length {n} not a multiple of {block}"
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step: an A tile, a B tile,
+    the output tile and the f32 accumulator (double-buffered inputs)."""
+    a = bm * bk * dtype_bytes * 2   # double buffer
+    b = bk * bn * dtype_bytes * 2
+    o = bm * bn * dtype_bytes
+    acc = bm * bn * 4
+    return a + b + o + acc
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int,
+                             mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (bm,bk)x(bk,bn) tile keeps busy: each MXU
+    pass contracts a (mxu, mxu) tile, so utilization is the product of the
+    per-dimension fill ratios."""
+    fill = lambda d: d / (mxu * -(-d // mxu))
+    return fill(bm) * fill(bk) * fill(bn)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package is validated against the corresponding function here (pytest +
+hypothesis sweeps in ``python/tests/``), and the Rust end-to-end path is
+in turn validated against an independent naive convolution oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul in f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def add_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise addition (residual/skip connections)."""
+    return a + b
+
+
+def conv2d_nchw_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                    padding: str = "SAME") -> jnp.ndarray:
+    """Reference NCHW conv2d via lax, used by the L2 model tests."""
+    import jax.lax as lax
+    return lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col_matmul_conv_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                           padding: str = "SAME") -> jnp.ndarray:
+    """Conv2d lowered the way the WIENNA chiplet computes it: im2col
+    patches x filter matrix. Used to check that the GEMM lowering is
+    numerically identical to the direct convolution."""
+    n, c, h, ww = x.shape
+    k, _, r, s = w.shape
+    if padding == "SAME":
+        ho, wo = -(-h // stride), -(-ww // stride)
+        pad_h = max((ho - 1) * stride + r - h, 0)
+        pad_w = max((wo - 1) * stride + s - ww, 0)
+        x = jnp.pad(x, ((0, 0), (0, 0),
+                        (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2)))
+    else:
+        ho, wo = (h - r) // stride + 1, (ww - s) // stride + 1
+    # Gather patches -> [n*ho*wo, c*r*s]
+    cols = []
+    for rr in range(r):
+        for ss in range(s):
+            sl = x[:, :, rr:rr + stride * ho:stride, ss:ss + stride * wo:stride]
+            cols.append(sl.reshape(n, c, ho * wo))
+    patches = jnp.stack(cols, axis=2)          # [n, c, r*s, ho*wo]
+    patches = patches.transpose(0, 3, 1, 2)    # [n, ho*wo, c, r*s]
+    patches = patches.reshape(n * ho * wo, c * r * s)
+    wmat = w.reshape(k, c * r * s).T           # [c*r*s, k]
+    out = matmul_ref(patches, wmat)            # [n*ho*wo, k]
+    return out.reshape(n, ho, wo, k).transpose(0, 3, 1, 2)

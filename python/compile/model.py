@@ -1,0 +1,96 @@
+"""L2: the chiplet compute graph in JAX, calling the L1 Pallas kernels.
+
+A WIENNA chiplet executes one sub-layer of the partitioned DNN. Its
+compute reduces to (a) GEMM tiles over im2col patches — the NVDLA-like
+weight-stationary path used by KP-CP / NP-CP and by FC layers — and
+(b) elementwise residual additions. Both are expressed here as jittable
+JAX functions whose hot loops are the Pallas kernels; ``aot.py`` lowers
+them ONCE to HLO text, and the Rust coordinator executes the artifacts
+from its request path. Python never runs at inference time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv_os import conv3x3_os
+from .kernels.matmul_ws import add_stream, matmul_ws
+
+
+def chiplet_matmul(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """One GEMM tile on the chiplet PE array (block == tile: a single
+    weight-stationary pass). Returns a 1-tuple: artifacts are lowered with
+    ``return_tuple=True`` and unwrapped by the Rust runtime."""
+    bm, bk = a.shape
+    bk2, bn = b.shape
+    assert bk == bk2
+    return (matmul_ws(a, b, bm=bm, bk=bk, bn=bn, interpret=True),)
+
+
+def chiplet_add(a: jnp.ndarray, b: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Residual addition chunk on the chiplet SIMD lanes."""
+    (n,) = a.shape
+    return (add_stream(a, b, block=n, interpret=True),)
+
+
+def chiplet_conv3x3(x: jnp.ndarray, w: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """SAME 3x3 stride-1 conv on a Shidiannao-style (output-stationary)
+    chiplet — the YP-XP compute path. x: [C, Y, X] unpadded; w: [K, C, 3, 3].
+    Lowered per shape by aot.py as ``conv3x3_c{C}k{K}y{Y}``."""
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    k = w.shape[0]
+    kt = 8 if k % 8 == 0 else (4 if k % 4 == 0 else 1)
+    return (conv3x3_os(xp, w, kt=kt, interpret=True),)
+
+
+def pad_to(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to (m, n)."""
+    return jnp.pad(x, ((0, m - x.shape[0]), (0, n - x.shape[1])))
+
+
+def chiplet_conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+                   tile: int = 64) -> jnp.ndarray:
+    """Full conv2d the way the package computes it: im2col + tiled Pallas
+    GEMM with zero-padding to the tile contract. Build-time only — used by
+    the L2 tests to prove the tiled lowering matches ``lax.conv``.
+
+    x: [N, C, H, W], w: [K, C, R, S], SAME padding.
+    """
+    n, c, h, ww = x.shape
+    k, _, r, s = w.shape
+    ho, wo = -(-h // stride), -(-ww // stride)
+    pad_h = max((ho - 1) * stride + r - h, 0)
+    pad_w = max((wo - 1) * stride + s - ww, 0)
+    xp = jnp.pad(x, ((0, 0), (0, 0),
+                     (pad_h // 2, pad_h - pad_h // 2),
+                     (pad_w // 2, pad_w - pad_w // 2)))
+    cols = []
+    for rr in range(r):
+        for ss in range(s):
+            sl = xp[:, :, rr:rr + stride * ho:stride, ss:ss + stride * wo:stride]
+            cols.append(sl.reshape(n, c, ho * wo))
+    patches = jnp.stack(cols, axis=2).transpose(0, 3, 1, 2)
+    patches = patches.reshape(n * ho * wo, c * r * s)
+    wmat = w.reshape(k, c * r * s).T
+
+    m_dim, k_dim = patches.shape
+    n_dim = wmat.shape[1]
+    mp = -(-m_dim // tile) * tile
+    kp = -(-k_dim // tile) * tile
+    np_ = -(-n_dim // tile) * tile
+    out = matmul_ws(pad_to(patches, mp, kp), pad_to(wmat, kp, np_),
+                    bm=tile, bk=tile, bn=tile, interpret=True)
+    out = out[:m_dim, :n_dim]
+    return out.reshape(n, ho, wo, k).transpose(0, 3, 1, 2)
+
+
+def tiny_cnn_block(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """One residual block of the tiny e2e network (conv-conv-add), the
+    shape-contract mirror of ``rust/src/workload/tiny.rs``."""
+    y = chiplet_conv2d(x, w1)
+    z = chiplet_conv2d(y, w2)
+    flat_a, flat_b = z.reshape(-1), y.reshape(-1)
+    pad = -(-flat_a.shape[0] // 4096) * 4096 - flat_a.shape[0]
+    fa = jnp.pad(flat_a, (0, pad))
+    fb = jnp.pad(flat_b, (0, pad))
+    out = add_stream(fa, fb, block=4096, interpret=True)[:flat_a.shape[0]]
+    return out.reshape(z.shape)

@@ -1,0 +1,99 @@
+"""L1 correctness: output-stationary 3x3 conv kernel vs lax reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.conv_os import conv3x3_os, vmem_footprint_bytes
+from compile.kernels.ref import conv2d_nchw_ref
+
+RTOL = 1e-3
+ATOL = 1e-3
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape),
+                       jnp.float32)
+
+
+def run_os(x, w, kt):
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    return conv3x3_os(xp, w, kt=kt)
+
+
+class TestConvOsBasic:
+    def test_matches_lax_same_conv(self):
+        x = rand((16, 16, 16), 0)
+        w = rand((32, 16, 3, 3), 1)
+        out = run_os(x, w, kt=8)
+        ref = conv2d_nchw_ref(x[None], w)[0]
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    def test_single_channel_tile(self):
+        x = rand((4, 8, 8), 2)
+        w = rand((3, 4, 3, 3), 3)  # K=3 not divisible by 8 -> kt=1
+        out = run_os(x, w, kt=1)
+        ref = conv2d_nchw_ref(x[None], w)[0]
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    def test_identity_filter_passthrough(self):
+        # Filter that picks the center tap of channel 0.
+        x = rand((2, 10, 10), 4)
+        w = np.zeros((1, 2, 3, 3), np.float32)
+        w[0, 0, 1, 1] = 1.0
+        out = run_os(x, jnp.asarray(w), kt=1)
+        np.testing.assert_allclose(out[0], x[0], rtol=1e-6, atol=1e-6)
+
+    def test_non_square_rejected(self):
+        x = rand((4, 8, 8), 5)
+        w = rand((8, 4, 3, 3), 6)
+        with pytest.raises(AssertionError):
+            conv3x3_os(jnp.pad(x, ((0, 0), (1, 1), (1, 1))), w, kt=3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.sampled_from([1, 4, 16]),
+    k=st.sampled_from([8, 16, 32]),
+    y=st.sampled_from([8, 16, 32]),
+    kt=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_os_property_sweep(c, k, y, kt, seed):
+    if k % kt != 0:
+        return
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(c, y, y), jnp.float32)
+    w = jnp.asarray(rs.randn(k, c, 3, 3), jnp.float32)
+    out = run_os(x, w, kt=kt)
+    ref = conv2d_nchw_ref(x[None], w)[0]
+    np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+class TestChipletConv3x3Entrypoint:
+    def test_artifact_entrypoint_matches_ref(self):
+        x = rand((16, 32, 32), 7)
+        w = rand((32, 16, 3, 3), 8)
+        (out,) = model.chiplet_conv3x3(x, w)
+        ref = conv2d_nchw_ref(x[None], w)[0]
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+    def test_kt_fallback_for_odd_k(self):
+        x = rand((4, 8, 8), 9)
+        w = rand((5, 4, 3, 3), 10)  # K=5 -> kt=1
+        (out,) = model.chiplet_conv3x3(x, w)
+        ref = conv2d_nchw_ref(x[None], w)[0]
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+class TestVmemFootprint:
+    def test_tiny_net_shapes_fit_vmem(self):
+        for (c, k, y) in [(16, 32, 32), (32, 32, 32), (64, 64, 16)]:
+            kt = 8
+            assert vmem_footprint_bytes(c, y, y, kt) < 16 * 2**20
+
+    def test_footprint_grows_with_plane(self):
+        assert vmem_footprint_bytes(16, 64, 64, 8) > \
+            vmem_footprint_bytes(16, 16, 16, 8)

@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/values; every property asserts allclose against
+``ref.py``. This is the core correctness signal of the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul_ws import (add_stream, matmul_ws,
+                                       mxu_utilization_estimate,
+                                       vmem_footprint_bytes)
+from compile.kernels.ref import add_ref, matmul_ref
+
+RTOL = 1e-4
+ATOL = 1e-4
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape),
+                       jnp.float32)
+
+
+class TestMatmulBasic:
+    def test_single_tile(self):
+        a, b = rand((64, 64), 0), rand((64, 64), 1)
+        np.testing.assert_allclose(matmul_ws(a, b), matmul_ref(a, b),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_multi_tile_all_dims(self):
+        a, b = rand((128, 192), 2), rand((192, 256), 3)
+        np.testing.assert_allclose(matmul_ws(a, b), matmul_ref(a, b),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_non_square_blocks(self):
+        a, b = rand((64, 128), 4), rand((128, 32), 5)
+        out = matmul_ws(a, b, bm=32, bk=64, bn=32)
+        np.testing.assert_allclose(out, matmul_ref(a, b), rtol=RTOL,
+                                   atol=ATOL)
+
+    def test_identity(self):
+        eye = jnp.eye(64, dtype=jnp.float32)
+        a = rand((64, 64), 6)
+        np.testing.assert_allclose(matmul_ws(a, eye), a, rtol=RTOL,
+                                   atol=ATOL)
+
+    def test_zeros(self):
+        z = jnp.zeros((64, 64), jnp.float32)
+        a = rand((64, 64), 7)
+        np.testing.assert_allclose(matmul_ws(a, z),
+                                   jnp.zeros((64, 64)), atol=1e-6)
+
+    def test_shape_mismatch_rejected(self):
+        a, b = rand((64, 64), 8), rand((128, 64), 9)
+        with pytest.raises(AssertionError):
+            matmul_ws(a, b)
+
+    def test_non_multiple_shape_rejected(self):
+        a, b = rand((65, 64), 8), rand((64, 64), 9)
+        with pytest.raises(AssertionError):
+            matmul_ws(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 3), kt=st.integers(1, 3), nt=st.integers(1, 3),
+    block=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_property_sweep(mt, kt, nt, block, seed):
+    """Kernel == oracle for every (grid, block) combination."""
+    rs = np.random.RandomState(seed)
+    a = jnp.asarray(rs.randn(mt * block, kt * block), jnp.float32)
+    b = jnp.asarray(rs.randn(kt * block, nt * block), jnp.float32)
+    out = matmul_ws(a, b, bm=block, bk=block, bn=block)
+    np.testing.assert_allclose(out, matmul_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    chunks=st.integers(1, 4),
+    block=st.sampled_from([256, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_add_property_sweep(chunks, block, seed):
+    rs = np.random.RandomState(seed)
+    n = chunks * block
+    a = jnp.asarray(rs.randn(n), jnp.float32)
+    b = jnp.asarray(rs.randn(n), jnp.float32)
+    out = add_stream(a, b, block=block)
+    np.testing.assert_allclose(out, add_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+class TestValueEdgeCases:
+    @pytest.mark.parametrize("scale", [1e-20, 1e6, -1e6])
+    def test_extreme_magnitudes(self, scale):
+        a = rand((64, 64), 10) * scale
+        b = rand((64, 64), 11)
+        np.testing.assert_allclose(matmul_ws(a, b), matmul_ref(a, b),
+                                   rtol=1e-3, atol=1e-3 * abs(scale))
+
+    def test_inf_propagates(self):
+        a = jnp.full((64, 64), jnp.inf, jnp.float32)
+        b = jnp.ones((64, 64), jnp.float32)
+        assert bool(jnp.all(jnp.isinf(matmul_ws(a, b))))
+
+
+class TestRooflineEstimates:
+    def test_vmem_footprint_fits_16mib_at_128(self):
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+    def test_vmem_footprint_formula(self):
+        # 2*(bm*bk + bk*bn)*4 + bm*bn*4 + bm*bn*4
+        assert vmem_footprint_bytes(64, 64, 64) == (2 * 2 * 64 * 64 * 4
+                                                    + 2 * 64 * 64 * 4)
+
+    def test_mxu_full_at_multiples_of_128(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(256, 128, 128) == 1.0
+
+    def test_mxu_partial_below_128(self):
+        u = mxu_utilization_estimate(64, 64, 64)
+        assert abs(u - 0.125) < 1e-9  # (1/2)^3

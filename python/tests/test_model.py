@@ -1,0 +1,92 @@
+"""L2 correctness: the chiplet compute graph vs lax references."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import conv2d_nchw_ref, im2col_matmul_conv_ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape),
+                       jnp.float32)
+
+
+class TestChipletConv:
+    def test_same_conv_3x3(self):
+        x = rand((1, 8, 16, 16), 0)
+        w = rand((4, 8, 3, 3), 1)
+        out = model.chiplet_conv2d(x, w)
+        ref = conv2d_nchw_ref(x, w)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+    def test_strided_conv(self):
+        x = rand((2, 4, 16, 16), 2)
+        w = rand((8, 4, 3, 3), 3)
+        out = model.chiplet_conv2d(x, w, stride=2)
+        ref = conv2d_nchw_ref(x, w, stride=2)
+        assert out.shape == (2, 8, 8, 8)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+    def test_1x1_conv_is_channel_mix(self):
+        x = rand((1, 16, 8, 8), 4)
+        w = rand((32, 16, 1, 1), 5)
+        out = model.chiplet_conv2d(x, w)
+        ref = conv2d_nchw_ref(x, w)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+    def test_im2col_ref_matches_lax(self):
+        x = rand((1, 3, 12, 12), 6)
+        w = rand((5, 3, 3, 3), 7)
+        np.testing.assert_allclose(im2col_matmul_conv_ref(x, w),
+                                   conv2d_nchw_ref(x, w),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 2), c=st.sampled_from([1, 3, 8]),
+    k=st.sampled_from([1, 4, 16]), hw=st.sampled_from([8, 12]),
+    rs=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_property_sweep(n, c, k, hw, rs, stride, seed):
+    rst = np.random.RandomState(seed)
+    x = jnp.asarray(rst.randn(n, c, hw, hw), jnp.float32)
+    w = jnp.asarray(rst.randn(k, c, rs, rs), jnp.float32)
+    out = model.chiplet_conv2d(x, w, stride=stride)
+    ref = conv2d_nchw_ref(x, w, stride=stride)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+class TestResidualBlock:
+    def test_block_matches_reference(self):
+        x = rand((1, 8, 16, 16), 8)
+        w1 = rand((8, 8, 3, 3), 9)
+        w2 = rand((8, 8, 3, 3), 10)
+        out = model.tiny_cnn_block(x, w1, w2)
+        y = conv2d_nchw_ref(x, w1)
+        ref = conv2d_nchw_ref(y, w2) + y
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+class TestArtifactEntrypoints:
+    def test_chiplet_matmul_returns_tuple(self):
+        a, b = rand((64, 64), 11), rand((64, 64), 12)
+        (out,) = model.chiplet_matmul(a, b)
+        np.testing.assert_allclose(out, jnp.matmul(a, b), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_chiplet_add_returns_tuple(self):
+        a, b = rand((4096,), 13), rand((4096,), 14)
+        (out,) = model.chiplet_add(a, b)
+        np.testing.assert_allclose(out, a + b, rtol=1e-6, atol=1e-6)
+
+    def test_pad_to(self):
+        x = rand((3, 5), 15)
+        p = model.pad_to(x, 8, 8)
+        assert p.shape == (8, 8)
+        np.testing.assert_allclose(p[:3, :5], x)
+        assert float(jnp.sum(jnp.abs(p[3:, :]))) == 0.0

@@ -1,0 +1,77 @@
+//! Fig 10 — Average multicast factor (received bytes / sent bytes) per
+//! layer type and partitioning strategy, at cluster size 64 (256 chiplets).
+//!
+//! The multicast factor quantifies the spatial-reuse opportunity each
+//! strategy exposes; the paper correlates high multicast factors (KP-CP)
+//! with the largest wireless energy reductions in Fig 9.
+
+use wienna::config::SystemConfig;
+use wienna::dataflow::{partition, Strategy};
+use wienna::report::Table;
+use wienna::testutil::bench;
+use wienna::workload::{classify, Model};
+use wienna::workload::{resnet50::resnet50, unet::unet};
+
+fn avg_multicast_factor(sys: &SystemConfig, model: &Model, ty: wienna::workload::LayerType, s: Strategy) -> f64 {
+    // Byte-weighted average over the layers of this type.
+    let mut sent = 0.0;
+    let mut recv = 0.0;
+    for l in model.layers.iter().filter(|l| classify(l) == ty) {
+        let p = partition::partition(l, s, sys.num_chiplets, sys.bytes_per_elem);
+        sent += p.sent_bytes() as f64;
+        recv += p.sent_bytes() as f64 * p.multicast_factor();
+    }
+    if sent == 0.0 {
+        0.0
+    } else {
+        recv / sent
+    }
+}
+
+fn main() {
+    // "cluster size of 64" = 64 PEs/chiplet -> 256 chiplets.
+    let sys = SystemConfig::with_chiplets(256);
+    assert_eq!(sys.pes_per_chiplet, 64);
+
+    for model in [resnet50(64), unet(64)] {
+        println!("\n##### Fig 10 — {} (256 chiplets)", model.name);
+        let mut t = Table::new(
+            "average multicast factor",
+            &["layer type", "KP-CP", "NP-CP", "YP-XP"],
+        );
+        for ty in model.layer_types() {
+            let row: Vec<f64> = Strategy::ALL.iter().map(|&s| avg_multicast_factor(&sys, &model, ty, s)).collect();
+            t.row(vec![
+                ty.label().to_string(),
+                format!("{:.1}", row[0]),
+                format!("{:.1}", row[1]),
+                format!("{:.1}", row[2]),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv(&format!("bench_out/fig10_{}.csv", model.name)).ok();
+
+        // Paper observation: KP-CP exposes the highest multicast factor.
+        let mut totals = [0.0f64; 3];
+        for (i, s) in Strategy::ALL.iter().enumerate() {
+            for ty in model.layer_types() {
+                totals[i] += avg_multicast_factor(&sys, &model, ty, *s);
+            }
+        }
+        let best = Strategy::ALL[totals
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        println!("highest multicast factor overall: {} (paper: KP-CP)", best.label());
+    }
+
+    let rn = resnet50(64);
+    bench("fig10_mf(resnet50 all types x strategies)", 20, || {
+        rn.layer_types()
+            .iter()
+            .map(|&ty| Strategy::ALL.iter().map(|&s| avg_multicast_factor(&sys, &rn, ty, s)).sum::<f64>())
+            .sum::<f64>()
+    });
+}

@@ -1,0 +1,77 @@
+//! Fig 3 — The impact of distribution bandwidth on throughput.
+//!
+//! Sweeps the global-SRAM read bandwidth on an idealized distribution
+//! fabric (multicast-free, as the motivation study assumes) and prints
+//! MACs/cycle per (layer type x partitioning strategy) for ResNet-50 and
+//! UNet. The paper's observations to reproduce:
+//!
+//! * Observation I — high-res layers favor YP-XP, low-res/FC favor KP-CP;
+//! * Observation II — high-res + YP-XP saturates at the 16K MACs/cycle
+//!   peak by 64 B/cycle; ResNet-50 low-res saturates around half peak
+//!   beyond 128 B/cycle.
+
+use wienna::config::SystemConfig;
+use wienna::cost::{evaluate_layer, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::report::Table;
+use wienna::testutil::bench;
+use wienna::workload::{classify, LayerType, Model};
+use wienna::workload::{resnet50::resnet50, unet::unet};
+
+const BANDWIDTHS: [f64; 10] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0];
+
+fn type_throughput(engine: &CostEngine, model: &Model, ty: LayerType, strategy: Strategy) -> f64 {
+    let layers: Vec<_> = model.layers.iter().filter(|l| classify(l) == ty).collect();
+    if layers.is_empty() {
+        return 0.0;
+    }
+    let mut macs = 0u64;
+    let mut cycles = 0.0;
+    for l in layers {
+        let c = evaluate_layer(engine, l, strategy);
+        macs += c.macs;
+        cycles += c.latency;
+    }
+    macs as f64 / cycles
+}
+
+fn main() {
+    let sys = SystemConfig::default();
+    for model in [resnet50(64), unet(64)] {
+        println!("\n##### Fig 3 — {} (ideal fabric, swept SRAM read BW)", model.name);
+        for ty in model.layer_types() {
+            let mut t = Table::new(
+                &format!("{} layers — MACs/cycle vs BW (B/cycle)", ty.label()),
+                &["strategy", "1", "2", "4", "8", "16", "32", "64", "128", "256", "512"],
+            );
+            for s in Strategy::ALL {
+                let mut row = vec![s.label().to_string()];
+                for bw in BANDWIDTHS {
+                    let e = CostEngine::ideal(&sys, bw);
+                    row.push(format!("{:.0}", type_throughput(&e, &model, ty, s)));
+                }
+                t.row(row);
+            }
+            print!("{}", t.render());
+            t.save_csv(&format!("bench_out/fig3_{}_{}.csv", model.name, ty.label().to_lowercase().replace('-', ""))).ok();
+        }
+    }
+
+    // Observation II spot checks.
+    let sys = SystemConfig::default();
+    let rn = resnet50(64);
+    let hi64 = type_throughput(&CostEngine::ideal(&sys, 64.0), &rn, LayerType::HighRes, Strategy::YpXp);
+    let peak = sys.total_pes() as f64;
+    println!("\nhigh-res YP-XP @64 B/cyc: {:.0} MACs/cyc ({:.0}% of the 16K peak)", hi64, hi64 / peak * 100.0);
+    let lo128 = type_throughput(&CostEngine::ideal(&sys, 128.0), &rn, LayerType::LowRes, Strategy::KpCp);
+    println!("low-res  KP-CP @128 B/cyc: {:.0} MACs/cyc ({:.0}% of peak)", lo128, lo128 / peak * 100.0);
+
+    // Timing: one full sweep is the unit of work.
+    bench("fig3_full_sweep(resnet50)", 10, || {
+        let e = CostEngine::ideal(&sys, 64.0);
+        Strategy::ALL
+            .iter()
+            .map(|&s| type_throughput(&e, &rn, LayerType::HighRes, s))
+            .sum::<f64>()
+    });
+}

@@ -1,0 +1,58 @@
+//! Fig 4 — Average per-bit energy of a multicast transmission.
+//!
+//! Compares, as a function of the destination count: (a) a silicon
+//! interposer with direct (dedicated point-to-point) connections, (b) a
+//! mesh NoP without hardware multicast (replicated unicasts, avg-hop
+//! energy per copy), and (c) the wireless NoP (one TX burst + d active
+//! receivers), at two bit-error rates. The paper's message: wireless
+//! crosses below the electrical options as fan-out grows.
+
+use wienna::config::SystemConfig;
+use wienna::nop::technology::interposer_hop_energy_pj;
+use wienna::nop::transceiver::TrxDesignPoint;
+use wienna::nop::{MeshNop, WirelessNop};
+use wienna::report::Table;
+use wienna::testutil::bench;
+
+fn main() {
+    let sys = SystemConfig::default();
+    let mesh = MeshNop::new(sys.num_chiplets, 16.0, true);
+    let direct_pj = interposer_hop_energy_pj(true); // one dedicated link per dest
+
+    let mut t = Table::new(
+        "Fig 4 — multicast energy (pJ per sent bit) vs destinations, 256-chiplet package",
+        &["dests", "direct", "mesh", "wireless 1e-9", "wireless 1e-12"],
+    );
+    let mut crossover: Option<u64> = None;
+    for d in [1u64, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let df = d as f64;
+        let direct = df * direct_pj;
+        let mesh_e = mesh.multicast_pj_per_sent_bit(df);
+        let mut w9 = WirelessNop::new(16.0, TrxDesignPoint::Conservative);
+        w9.ber = 1e-9;
+        let mut w12 = w9.clone();
+        w12.ber = 1e-12;
+        let w9e = w9.multicast_pj_per_sent_bit(df);
+        if crossover.is_none() && w9e < mesh_e {
+            crossover = Some(d);
+        }
+        t.row(vec![
+            d.to_string(),
+            format!("{:.2}", direct),
+            format!("{:.2}", mesh_e),
+            format!("{:.2}", w9e),
+            format!("{:.2}", w12.multicast_pj_per_sent_bit(df)),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/fig4_multicast_energy.csv").ok();
+    match crossover {
+        Some(d) => println!("wireless(1e-9) beats the mesh from {d} destinations onward"),
+        None => println!("no crossover observed (unexpected)"),
+    }
+
+    bench("fig4_energy_table", 1000, || {
+        let w = WirelessNop::new(16.0, TrxDesignPoint::Conservative);
+        (1..=256).map(|d| w.multicast_pj_per_sent_bit(d as f64) + mesh.multicast_pj_per_sent_bit(d as f64)).sum::<f64>()
+    });
+}

@@ -1,0 +1,98 @@
+//! Fig 7 — Throughput of conservative/aggressive interposer- and
+//! WIENNA-based accelerators, per layer type and end-to-end.
+//!
+//! Headline claims reproduced here (shape, not absolute numbers):
+//! * WIENNA improves end-to-end throughput 2.7–5.1x on ResNet-50 and
+//!   2.2–3.8x on UNet over the interposer baselines;
+//! * WIENNA-C beats Interposer-A (equal 16 B/cyc distribution BW);
+//! * adaptive partitioning gains a few extra percent over all-KP-CP.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{evaluate_layer, evaluate_model, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::report::Table;
+use wienna::testutil::bench;
+use wienna::workload::{classify, LayerType, Model};
+use wienna::workload::{resnet50::resnet50, unet::unet};
+
+fn type_throughput(engine: &CostEngine, model: &Model, ty: LayerType, strategy: Strategy) -> f64 {
+    let mut macs = 0u64;
+    let mut cycles = 0.0;
+    for l in model.layers.iter().filter(|l| classify(l) == ty) {
+        let c = evaluate_layer(engine, l, strategy);
+        macs += c.macs;
+        cycles += c.latency;
+    }
+    if cycles == 0.0 {
+        0.0
+    } else {
+        macs as f64 / cycles
+    }
+}
+
+fn main() {
+    let sys = SystemConfig::default();
+
+    for model in [resnet50(64), unet(64)] {
+        println!("\n##### Fig 7 — {}", model.name);
+        // Per layer type x strategy x design point.
+        for ty in model.layer_types() {
+            let mut t = Table::new(
+                &format!("{} layers — MACs/cycle", ty.label()),
+                &["strategy", "Interposer-C", "Interposer-A", "WIENNA-C", "WIENNA-A"],
+            );
+            for s in Strategy::ALL {
+                let mut row = vec![s.label().to_string()];
+                for dp in DesignPoint::ALL {
+                    let e = CostEngine::for_design_point(&sys, dp);
+                    row.push(format!("{:.0}", type_throughput(&e, &model, ty, s)));
+                }
+                t.row(row);
+            }
+            print!("{}", t.render());
+            t.save_csv(&format!("bench_out/fig7_{}_{}.csv", model.name, ty.label().to_lowercase().replace('-', ""))).ok();
+        }
+
+        // End-to-end with adaptive partitioning.
+        let mut e2e = Table::new(
+            "end-to-end (adaptive) — MACs/cycle",
+            &["design", "MACs/cycle", "vs Interposer-C", "vs Interposer-A"],
+        );
+        let mut th = Vec::new();
+        for dp in DesignPoint::ALL {
+            let e = CostEngine::for_design_point(&sys, dp);
+            th.push(evaluate_model(&e, &model, None).macs_per_cycle);
+        }
+        for (i, dp) in DesignPoint::ALL.iter().enumerate() {
+            e2e.row(vec![
+                dp.label(),
+                format!("{:.0}", th[i]),
+                format!("{:.2}x", th[i] / th[0]),
+                format!("{:.2}x", th[i] / th[1]),
+            ]);
+        }
+        print!("{}", e2e.render());
+        e2e.save_csv(&format!("bench_out/fig7_{}_e2e.csv", model.name)).ok();
+
+        println!(
+            "WIENNA speedup band: {:.2}x – {:.2}x  (paper: 2.7–5.1x ResNet50, 2.2–3.8x UNet)",
+            (th[2] / th[1]).min(th[3] / th[1]),
+            (th[2] / th[0]).max(th[3] / th[0])
+        );
+        println!("equal-bandwidth check — WIENNA-C vs Interposer-A: {:.2}x (paper: 2.58x / 2.21x)", th[2] / th[1]);
+
+        // Adaptive vs all-KP-CP on WIENNA-C.
+        let e = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+        let kpcp = evaluate_model(&e, &model, Some(Strategy::KpCp)).macs_per_cycle;
+        let ad = evaluate_model(&e, &model, None).macs_per_cycle;
+        println!("adaptive vs all-KP-CP: +{:.1}% (paper: +4.7% ResNet50, +9.1% UNet)", (ad / kpcp - 1.0) * 100.0);
+    }
+
+    let rn = resnet50(64);
+    bench("fig7_e2e_eval(resnet50, 4 design points)", 5, || {
+        DesignPoint::ALL
+            .iter()
+            .map(|&dp| evaluate_model(&CostEngine::for_design_point(&sys, dp), &rn, None).macs_per_cycle)
+            .sum::<f64>()
+    });
+}

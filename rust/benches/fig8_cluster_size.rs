@@ -1,0 +1,67 @@
+//! Fig 8 — Impact of cluster size (chiplet count at a fixed 16384-PE
+//! budget) for the three partitioning strategies on both DNNs.
+//!
+//! Paper findings to reproduce: throughput is *not* monotonic in chiplet
+//! count (chiplet size is an optimizable design parameter), and WIENNA is
+//! consistently faster and more sensitive to the cluster size than the
+//! interposer baseline.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{evaluate_model, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::report::Table;
+use wienna::testutil::bench;
+use wienna::workload::{resnet50::resnet50, unet::unet};
+
+const CHIPLETS: [u64; 6] = [32, 64, 128, 256, 512, 1024];
+
+fn main() {
+    for model in [resnet50(64), unet(64)] {
+        println!("\n##### Fig 8 — {} (16384 PEs total)", model.name);
+        for dp in [DesignPoint::WIENNA_C, DesignPoint::INTERPOSER_A] {
+            let mut t = Table::new(
+                &format!("{} — MACs/cycle vs chiplet count", dp.label()),
+                &["chiplets", "PEs/chiplet", "KP-CP", "NP-CP", "YP-XP"],
+            );
+            for nc in CHIPLETS {
+                let sys = SystemConfig::with_chiplets(nc);
+                let e = CostEngine::for_design_point(&sys, dp);
+                let th: Vec<String> = Strategy::ALL
+                    .iter()
+                    .map(|&s| format!("{:.0}", evaluate_model(&e, &model, Some(s)).macs_per_cycle))
+                    .collect();
+                t.row(vec![nc.to_string(), sys.pes_per_chiplet.to_string(), th[0].clone(), th[1].clone(), th[2].clone()]);
+            }
+            print!("{}", t.render());
+            t.save_csv(&format!("bench_out/fig8_{}_{}.csv", model.name, dp.label())).ok();
+        }
+
+        // Sensitivity (paper: 77.5% avg change for WIENNA vs 62.5% for the
+        // interposer between 64 and 512 PEs/chiplet, i.e. 256 vs 32
+        // chiplets).
+        for dp in [DesignPoint::WIENNA_C, DesignPoint::INTERPOSER_A] {
+            let mut diffs = Vec::new();
+            for s in Strategy::ALL {
+                let th_256 = evaluate_model(&CostEngine::for_design_point(&SystemConfig::with_chiplets(256), dp), &model, Some(s)).macs_per_cycle;
+                let th_32 = evaluate_model(&CostEngine::for_design_point(&SystemConfig::with_chiplets(32), dp), &model, Some(s)).macs_per_cycle;
+                diffs.push((th_256.max(th_32) / th_256.min(th_32) - 1.0) * 100.0);
+            }
+            println!(
+                "{}: avg |change| from 64 to 512 PEs/chiplet = {:.1}%  (paper: WIENNA 77.5%, interposer 62.5%)",
+                dp.label(),
+                diffs.iter().sum::<f64>() / diffs.len() as f64
+            );
+        }
+    }
+
+    let rn = resnet50(64);
+    bench("fig8_sweep(resnet50, 6 sizes x 3 strategies)", 5, || {
+        CHIPLETS
+            .iter()
+            .map(|&nc| {
+                let e = CostEngine::for_design_point(&SystemConfig::with_chiplets(nc), DesignPoint::WIENNA_C);
+                Strategy::ALL.iter().map(|&s| evaluate_model(&e, &rn, Some(s)).macs_per_cycle).sum::<f64>()
+            })
+            .sum::<f64>()
+    });
+}

@@ -1,0 +1,73 @@
+//! Fig 9 — Energy of distributing input activations and filters from the
+//! global SRAM to the chiplets, interposer vs WIENNA, per partitioning
+//! strategy and per layer type, plus the end-to-end reduction inset (9c).
+//!
+//! Paper claim: WIENNA always reduces distribution energy; average 38.2%.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{evaluate_layer, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::energy::model_distribution_energy;
+use wienna::report::Table;
+use wienna::testutil::bench;
+use wienna::workload::{classify, Model};
+use wienna::workload::{resnet50::resnet50, unet::unet};
+
+fn per_type_energy(sys: &SystemConfig, model: &Model, strategy: Strategy) -> Table {
+    let ei = CostEngine::for_design_point(sys, DesignPoint::INTERPOSER_C);
+    let ew = CostEngine::for_design_point(sys, DesignPoint::WIENNA_C);
+    let mut t = Table::new(
+        &format!("{} under {} — distribution energy (mJ)", model.name, strategy.label()),
+        &["layer type", "interposer", "WIENNA", "reduction"],
+    );
+    for ty in model.layer_types() {
+        let mut ipj = 0.0;
+        let mut wpj = 0.0;
+        for l in model.layers.iter().filter(|l| classify(l) == ty) {
+            ipj += evaluate_layer(&ei, l, strategy).dist_energy_pj;
+            wpj += evaluate_layer(&ew, l, strategy).dist_energy_pj;
+        }
+        t.row(vec![
+            ty.label().to_string(),
+            format!("{:.2}", ipj * 1e-9),
+            format!("{:.2}", wpj * 1e-9),
+            format!("{:.1}%", (1.0 - wpj / ipj) * 100.0),
+        ]);
+    }
+    t
+}
+
+fn main() {
+    let sys = SystemConfig::default();
+    let mut reductions = Vec::new();
+
+    for model in [resnet50(64), unet(64)] {
+        println!("\n##### Fig 9 — {}", model.name);
+        for s in Strategy::ALL {
+            let t = per_type_energy(&sys, &model, s);
+            print!("{}", t.render());
+            t.save_csv(&format!("bench_out/fig9_{}_{}.csv", model.name, s.label())).ok();
+        }
+        // Inset (c): end-to-end reduction, adaptive strategy sequence.
+        let cmp = model_distribution_energy(&sys, &model, None);
+        println!(
+            "end-to-end (adaptive): interposer {:.1} mJ vs WIENNA {:.1} mJ -> reduction {:.1}%",
+            cmp.interposer_pj * 1e-9,
+            cmp.wienna_pj * 1e-9,
+            cmp.reduction() * 100.0
+        );
+        reductions.push(cmp.reduction());
+        for s in Strategy::ALL {
+            let c = model_distribution_energy(&sys, &model, Some(s));
+            reductions.push(c.reduction());
+        }
+    }
+
+    println!(
+        "\naverage reduction across models/strategies: {:.1}%  (paper: 38.2%)",
+        reductions.iter().sum::<f64>() / reductions.len() as f64 * 100.0
+    );
+
+    let rn = resnet50(64);
+    bench("fig9_energy_eval(resnet50)", 10, || model_distribution_energy(&sys, &rn, None).reduction());
+}

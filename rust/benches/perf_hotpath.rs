@@ -1,0 +1,84 @@
+//! Performance benchmarks for the hot paths of each layer (EXPERIMENTS.md
+//! §Perf):
+//!
+//! * L3 cost engine — per-layer evaluation and whole-model adaptive runs;
+//! * L3 cycle-level mesh simulator — flit-hop throughput;
+//! * L3 coordinator — schedule generation;
+//! * runtime — PJRT tile dispatch latency (skipped gracefully when the
+//!   artifacts have not been built).
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::coordinator::{Coordinator, StrategyPolicy};
+use wienna::cost::{evaluate_layer, evaluate_model, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::nop::sim::{MeshSim, Transfer};
+use wienna::runtime::ExecutableCache;
+use wienna::testutil::bench;
+use wienna::workload::resnet50::resnet50;
+
+fn main() {
+    let sys = SystemConfig::default();
+    let rn = resnet50(64);
+    let engine = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+
+    // --- L3 cost engine ---
+    let layer = &rn.layers[10];
+    bench("cost/evaluate_layer(conv)", 20_000, || evaluate_layer(&engine, layer, Strategy::KpCp).latency);
+    let s = bench("cost/evaluate_model(resnet50 fixed)", 200, || {
+        evaluate_model(&engine, &rn, Some(Strategy::KpCp)).macs_per_cycle
+    });
+    println!("  -> {:.1} layer-evals/ms", rn.layers.len() as f64 / s.mean_ms());
+    bench("cost/evaluate_model(resnet50 adaptive)", 100, || evaluate_model(&engine, &rn, None).macs_per_cycle);
+    let full = bench("cost/full_fig7_grid(2 models x 4 dps)", 10, || {
+        DesignPoint::ALL
+            .iter()
+            .map(|&dp| evaluate_model(&CostEngine::for_design_point(&sys, dp), &rn, None).macs_per_cycle)
+            .sum::<f64>()
+    });
+    println!("  -> full design-point grid in {:.2} ms (target: well under 1 s)", full.mean_ms() * 1.0);
+
+    // --- coordinator schedule generation ---
+    let coord = Coordinator::new(sys.clone(), DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
+    bench("coordinator/run_model(resnet50)", 50, || coord.run_model(&rn).1.total_latency_cycles);
+
+    // --- cycle-level mesh simulator ---
+    let sim = MeshSim::new(16, 16.0);
+    let transfers: Vec<Transfer> = (0..1000)
+        .map(|i| {
+            if i % 4 == 0 {
+                Transfer::broadcast(256, 16)
+            } else {
+                Transfer::unicast(4096, wienna::nop::sim::NodeId::new((i % 16) as u32, (i / 16 % 16) as u32))
+            }
+        })
+        .collect();
+    let st = bench("nop_sim/1000_transfers(16x16 mesh)", 20, || sim.run_distribution(&transfers).makespan);
+    let report = sim.run_distribution(&transfers);
+    let flit_hops = report.byte_hops / 16.0; // 16-byte flits
+    println!(
+        "  -> {:.2} Mflit-hops/s (target >= 1 M/s)",
+        flit_hops / st.mean_ns * 1e9 / 1e6
+    );
+
+    // --- PJRT dispatch (needs `make artifacts`) ---
+    match ExecutableCache::new(std::path::Path::new("artifacts")) {
+        Ok(cache) => {
+            cache.warm_up().expect("compile artifacts");
+            let a = vec![1.0f32; 64 * 64];
+            let b = vec![0.5f32; 64 * 64];
+            bench("runtime/matmul64_dispatch", 200, || {
+                cache.execute_f32("matmul64", &[&a, &b]).unwrap().len()
+            });
+            if cache.manifest().get("matmul128").is_ok() {
+                let a = vec![1.0f32; 128 * 128];
+                let b = vec![0.5f32; 128 * 128];
+                bench("runtime/matmul128_dispatch", 200, || {
+                    cache.execute_f32("matmul128", &[&a, &b]).unwrap().len()
+                });
+            }
+            let x = vec![1.0f32; 4096];
+            bench("runtime/add4096_dispatch", 200, || cache.execute_f32("add4096", &[&x, &x]).unwrap().len());
+        }
+        Err(e) => println!("runtime benches skipped (artifacts not built): {e:#}"),
+    }
+}

@@ -1,0 +1,63 @@
+//! Table 2 — 2.5D interconnect technologies, plus the Fig-1 transceiver
+//! survey fit the wireless rows derive from.
+
+use wienna::config::SystemConfig;
+use wienna::nop::technology::TECHNOLOGIES;
+use wienna::nop::transceiver::{required_gbps, Transceiver, TrxDesignPoint};
+use wienna::report::Table;
+use wienna::testutil::bench;
+
+fn main() {
+    let nc = SystemConfig::default().num_chiplets as f64;
+
+    let mut t = Table::new(
+        &format!("Table 2 — 2.5D interconnect technologies (N_C = {nc})"),
+        &["technology", "node (nm)", "BWD (Gbps/mm)", "energy (pJ/bit)", "LL (mm)", "avg hops"],
+    );
+    for tech in TECHNOLOGIES {
+        t.row(vec![
+            tech.name.to_string(),
+            tech.node_nm.to_string(),
+            format!("{:.1}", (tech.bw_density_gbps_mm)(nc)),
+            format!("{:.2}", (tech.energy_pj_per_bit)(nc)),
+            tech.link_length_mm.map(|l| format!("{l:.1}")).unwrap_or_else(|| "N/A".into()),
+            format!("{:.1}", tech.avg_hops(nc)),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/table2_technologies.csv").ok();
+
+    // Fig 1: the transceiver survey fit at a sweep of datarates.
+    let trx = Transceiver::default();
+    let mut f = Table::new(
+        "Fig 1 — transceiver area/power vs datarate (fit anchored at [27], BER 1e-9)",
+        &["datarate (Gb/s)", "area (mm2)", "power (mW)", "pJ/bit"],
+    );
+    for gbps in [10.0, 20.0, 48.0, 64.0, 100.0, 128.0] {
+        f.row(vec![
+            format!("{gbps:.0}"),
+            format!("{:.2}", trx.area_mm2(gbps)),
+            format!("{:.1}", trx.power_mw(gbps, 1e-9)),
+            format!("{:.2}", trx.pj_per_bit(gbps, 1e-9)),
+        ]);
+    }
+    print!("{}", f.render());
+    f.save_csv("bench_out/fig1_transceiver_fit.csv").ok();
+
+    println!(
+        "\ndesign points: conservative {:.2} pJ/bit unicast (RX {:.2}), aggressive {:.2} (RX {:.2})",
+        TrxDesignPoint::Conservative.unicast_pj_per_bit(),
+        TrxDesignPoint::Conservative.rx_pj_per_bit(),
+        TrxDesignPoint::Aggressive.unicast_pj_per_bit(),
+        TrxDesignPoint::Aggressive.rx_pj_per_bit(),
+    );
+    println!(
+        "WIENNA-C needs {:.0} Gb/s, WIENNA-A {:.0} Gb/s at 500 MHz",
+        required_gbps(16.0, 500e6),
+        required_gbps(32.0, 500e6)
+    );
+
+    bench("table2_render", 1000, || {
+        TECHNOLOGIES.iter().map(|t| (t.energy_pj_per_bit)(nc) + t.avg_hops(nc)).sum::<f64>()
+    });
+}

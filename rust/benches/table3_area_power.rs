@@ -1,0 +1,51 @@
+//! Table 3 — WIENNA area and power breakdown (256 chiplets x 64 PEs,
+//! 13 MiB global SRAM, 65-nm CMOS, 1e-9 BER).
+//!
+//! Paper numbers to land near: total ~1699 mm² / ~99.8 W; the wireless RX
+//! is ~16% of a chiplet's area and ~25% of its power.
+
+use wienna::config::SystemConfig;
+use wienna::energy::AreaPowerBreakdown;
+use wienna::report::Table;
+use wienna::testutil::bench;
+
+fn main() {
+    let sys = SystemConfig::default();
+    let b = AreaPowerBreakdown::for_system(&sys, 16.0, 1e-9);
+
+    let (ta, tp) = (b.total_area_mm2(), b.total_power_mw());
+    let mut t = Table::new(
+        "Table 3 — WIENNA area and power breakdown (256 chiplets x 64 PEs)",
+        &["component", "count", "area (mm2)", "area %", "power (mW)", "power %"],
+    );
+    for c in &b.components {
+        t.row(vec![
+            c.name.clone(),
+            c.count.to_string(),
+            format!("{:.0}", c.area_mm2),
+            format!("{:.1}", c.area_mm2 / ta * 100.0),
+            format!("{:.0}", c.power_mw),
+            format!("{:.1}", c.power_mw / tp * 100.0),
+        ]);
+    }
+    t.row(vec!["Total".into(), "".into(), format!("{ta:.0}"), "100".into(), format!("{tp:.0}"), "100".into()]);
+    print!("{}", t.render());
+    t.save_csv("bench_out/table3_area_power.csv").ok();
+
+    println!("\npaper totals: 1699 mm², 99767 mW  |  measured: {ta:.0} mm², {tp:.0} mW");
+    println!(
+        "wireless RX share of a chiplet: area {:.1}% (paper 16%), power {:.1}% (paper 25%)",
+        b.rx_area_fraction_of_chiplet() * 100.0,
+        b.rx_power_fraction_of_chiplet() * 100.0
+    );
+
+    // Scaling corner: larger chiplets amortize the RX overhead (paper §4).
+    let big = SystemConfig { num_chiplets: 64, pes_per_chiplet: 256, ..Default::default() };
+    let bb = AreaPowerBreakdown::for_system(&big, 16.0, 1e-9);
+    println!(
+        "at 64 chiplets x 256 PEs the RX area share drops to {:.1}%",
+        bb.rx_area_fraction_of_chiplet() * 100.0
+    );
+
+    bench("table3_breakdown", 1000, || AreaPowerBreakdown::for_system(&sys, 16.0, 1e-9).total_area_mm2());
+}

@@ -1,0 +1,145 @@
+//! System configuration (paper Table 4) and NoP design points.
+
+use crate::nop::NopKind;
+
+/// Bytes per element; the paper's accelerators operate on 8-bit data
+/// (NVDLA-style int8 inference), so 1 byte/element. Kept symbolic so the
+/// model can be re-run at fp16/fp32.
+pub const BYTES_PER_ELEM: u64 = 1;
+
+/// Clock frequency used in Table 4 (cycles <-> seconds conversions).
+pub const CLOCK_HZ: f64 = 500e6;
+
+/// Conservative/aggressive axis for both baselines and WIENNA (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Aggressiveness {
+    Conservative,
+    Aggressive,
+}
+
+impl Aggressiveness {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Aggressiveness::Conservative => "C",
+            Aggressiveness::Aggressive => "A",
+        }
+    }
+}
+
+/// One evaluated system design point: which NoP distributes data and how
+/// aggressively it is provisioned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub nop: NopKind,
+    pub aggr: Aggressiveness,
+}
+
+impl DesignPoint {
+    pub const INTERPOSER_C: DesignPoint = DesignPoint { nop: NopKind::Interposer, aggr: Aggressiveness::Conservative };
+    pub const INTERPOSER_A: DesignPoint = DesignPoint { nop: NopKind::Interposer, aggr: Aggressiveness::Aggressive };
+    pub const WIENNA_C: DesignPoint = DesignPoint { nop: NopKind::Wireless, aggr: Aggressiveness::Conservative };
+    pub const WIENNA_A: DesignPoint = DesignPoint { nop: NopKind::Wireless, aggr: Aggressiveness::Aggressive };
+
+    /// The four design points of Fig 7, in presentation order.
+    pub const ALL: [DesignPoint; 4] =
+        [Self::INTERPOSER_C, Self::INTERPOSER_A, Self::WIENNA_C, Self::WIENNA_A];
+
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.nop.label(), self.aggr.label())
+    }
+
+    /// Distribution bandwidth in bytes/cycle at the global-SRAM side
+    /// (Table 4: interposer 8-16 B/cyc/link, WIENNA 16-32 B/cyc).
+    pub fn distribution_bw(&self) -> f64 {
+        match (self.nop, self.aggr) {
+            (NopKind::Interposer, Aggressiveness::Conservative) => 8.0,
+            (NopKind::Interposer, Aggressiveness::Aggressive) => 16.0,
+            (NopKind::Wireless, Aggressiveness::Conservative) => 16.0,
+            (NopKind::Wireless, Aggressiveness::Aggressive) => 32.0,
+        }
+    }
+}
+
+/// Full system configuration (Table 4 defaults).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Number of accelerator chiplets in the package.
+    pub num_chiplets: u64,
+    /// PEs per chiplet (64 in the default 256-chiplet instance).
+    pub pes_per_chiplet: u64,
+    /// Global SRAM capacity in bytes (13 MiB).
+    pub global_sram_bytes: u64,
+    /// Wired collection-NoP link bandwidth in bytes/cycle/link.
+    pub collection_bw_per_link: f64,
+    /// Bytes per tensor element.
+    pub bytes_per_elem: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            num_chiplets: 256,
+            pes_per_chiplet: 64,
+            global_sram_bytes: 13 * 1024 * 1024,
+            collection_bw_per_link: 8.0,
+            bytes_per_elem: BYTES_PER_ELEM,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Fixed-PE-budget variant used by the Fig-8 cluster-size sweep:
+    /// `num_chiplets * pes_per_chiplet == 16384` always.
+    pub fn with_chiplets(num_chiplets: u64) -> Self {
+        let total_pes = 16384;
+        assert!(total_pes % num_chiplets == 0, "chiplet count must divide 16384");
+        SystemConfig { num_chiplets, pes_per_chiplet: total_pes / num_chiplets, ..Default::default() }
+    }
+
+    /// Total MAC units in the package.
+    pub fn total_pes(&self) -> u64 {
+        self.num_chiplets * self.pes_per_chiplet
+    }
+
+    /// Mesh side length (chiplets are arranged in a √Nc x √Nc grid).
+    pub fn mesh_side(&self) -> u64 {
+        (self.num_chiplets as f64).sqrt().round() as u64
+    }
+
+    /// Average hop count of the mesh NoP, `√Nc / 2` (Table 4).
+    pub fn avg_mesh_hops(&self) -> f64 {
+        (self.num_chiplets as f64).sqrt() / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_defaults() {
+        let c = SystemConfig::default();
+        assert_eq!(c.total_pes(), 16384);
+        assert_eq!(c.mesh_side(), 16);
+        assert!((c.avg_mesh_hops() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig8_sweep_preserves_total_pes() {
+        for nc in [32, 64, 128, 256, 512, 1024] {
+            let c = SystemConfig::with_chiplets(nc);
+            assert_eq!(c.total_pes(), 16384);
+        }
+    }
+
+    #[test]
+    fn design_point_bandwidths_match_table4() {
+        assert_eq!(DesignPoint::INTERPOSER_C.distribution_bw(), 8.0);
+        assert_eq!(DesignPoint::INTERPOSER_A.distribution_bw(), 16.0);
+        assert_eq!(DesignPoint::WIENNA_C.distribution_bw(), 16.0);
+        assert_eq!(DesignPoint::WIENNA_A.distribution_bw(), 32.0);
+        // WIENNA-C and Interposer-A share raw bandwidth — the Fig 7
+        // comparison hinges on this.
+        assert_eq!(DesignPoint::WIENNA_C.distribution_bw(), DesignPoint::INTERPOSER_A.distribution_bw());
+    }
+}

@@ -1,0 +1,58 @@
+//! Collection-phase helpers: replaying a layer's schedule through the
+//! cycle-level mesh simulator (validation) and computing collection
+//! schedules for the wired plane.
+
+use crate::coordinator::scheduler::LayerSchedule;
+use crate::nop::sim::{MeshSim, SimReport};
+
+/// Replay a layer's distribution schedule through the cycle-level mesh
+/// simulator at `link_bw` bytes/cycle. Used by tests and by the
+//  `sim-validate` CLI subcommand to bound the analytical model's error.
+pub fn simulate_distribution(schedule: &LayerSchedule, side: u32, link_bw: f64) -> SimReport {
+    let sim = MeshSim::new(side, link_bw);
+    let mut all = schedule.preload.clone();
+    all.extend(schedule.stream.iter().cloned());
+    sim.run_distribution(&all)
+}
+
+/// Simulate the collection phase: every used chiplet returns its share of
+/// the layer's output bytes.
+pub fn simulate_collection(schedule: &LayerSchedule, side: u32, link_bw: f64) -> SimReport {
+    let sim = MeshSim::new(side, link_bw);
+    let per_chiplet = schedule.plan.collect_bytes / schedule.plan.used_chiplets.max(1);
+    sim.run_collection(per_chiplet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DesignPoint, SystemConfig};
+    use crate::coordinator::{Coordinator, StrategyPolicy};
+    use crate::dataflow::Strategy;
+    use crate::workload::conv_padded;
+
+    #[test]
+    fn sim_tracks_analytic_distribution_time() {
+        // On a 4x4 package the cycle-level simulator and the analytical
+        // mesh model must agree within a modest factor (fill effects).
+        let sys = SystemConfig { num_chiplets: 16, pes_per_chiplet: 64, ..Default::default() };
+        let c = Coordinator::new(sys, DesignPoint::INTERPOSER_A, StrategyPolicy::Fixed(Strategy::KpCp));
+        let l = conv_padded("c", 1, 32, 16, 16, 16, 3, 3, 1);
+        let s = c.schedule_layer(&l);
+        let sim = simulate_distribution(&s, 4, DesignPoint::INTERPOSER_A.distribution_bw());
+        let analytic = s.selection.cost.timeline.preload + s.selection.cost.timeline.stream;
+        let ratio = sim.makespan / analytic;
+        assert!(ratio > 0.5 && ratio < 2.0, "sim {} vs analytic {analytic} (ratio {ratio})", sim.makespan);
+    }
+
+    #[test]
+    fn collection_sim_runs() {
+        let sys = SystemConfig { num_chiplets: 16, pes_per_chiplet: 64, ..Default::default() };
+        let c = Coordinator::new(sys, DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
+        let l = conv_padded("c", 1, 32, 16, 16, 16, 3, 3, 1);
+        let s = c.schedule_layer(&l);
+        let r = simulate_collection(&s, 4, 8.0);
+        assert!(r.makespan > 0.0);
+        assert!(r.byte_hops > 0.0);
+    }
+}

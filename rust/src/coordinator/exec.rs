@@ -1,0 +1,567 @@
+//! Package executor: runs a model with *real numerics* through the AOT
+//! compute path, under the coordinator's schedules.
+//!
+//! Convolutions are lowered to im2col + tiled GEMM — exactly the shape the
+//! L1 Pallas kernel implements (NVDLA-style weight-stationary tiles; see
+//! DESIGN.md §Hardware-Adaptation). Every `TILE x TILE` GEMM tile is
+//! dispatched to a (simulated) chiplet according to the layer's partition
+//! strategy and executed on the PJRT runtime; residual additions run
+//! through the elementwise artifact. A naive Rust convolution provides an
+//! independent oracle for the end-to-end numerics.
+
+use crate::coordinator::scheduler::{Coordinator, LayerSchedule};
+use crate::runtime::ExecutableCache;
+use crate::workload::{Layer, Model, OpKind};
+use crate::dataflow::Strategy;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Tile edge shared with `python/compile/aot.py` (`tiny::TILE_M` etc.).
+pub const TILE: usize = 64;
+/// Elementwise artifact chunk (must match aot.py's `ADD_CHUNK`).
+pub const ADD_CHUNK: usize = 4096;
+/// Artifact names from the manifest.
+pub const MATMUL_ARTIFACT: &str = "matmul64";
+pub const ADD_ARTIFACT: &str = "add4096";
+
+/// A dense activation tensor in `[N, C, Y, X]` layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub n: usize,
+    pub c: usize,
+    pub y: usize,
+    pub x: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(n: usize, c: usize, y: usize, x: usize) -> Self {
+        Tensor { n, c, y, x, data: vec![0.0; n * c * y * x] }
+    }
+
+    pub fn from_fn(n: usize, c: usize, y: usize, x: usize, f: impl Fn(usize, usize, usize, usize) -> f32) -> Self {
+        let mut t = Tensor::zeros(n, c, y, x);
+        for ni in 0..n {
+            for ci in 0..c {
+                for yi in 0..y {
+                    for xi in 0..x {
+                        let idx = ((ni * c + ci) * y + yi) * x + xi;
+                        t.data[idx] = f(ni, ci, yi, xi);
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, c: usize, y: usize, x: usize) -> f32 {
+        self.data[((n * self.c + c) * self.y + y) * self.x + x]
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Conv weights in `[K, C, R, S]` layout.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub k: usize,
+    pub c: usize,
+    pub r: usize,
+    pub s: usize,
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    pub fn from_fn(k: usize, c: usize, r: usize, s: usize, f: impl Fn(usize) -> f32) -> Self {
+        let len = k * c * r * s;
+        Weights { k, c, r, s, data: (0..len).map(f).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, k: usize, c: usize, r: usize, s: usize) -> f32 {
+        self.data[((k * self.c + c) * self.r + r) * self.s + s]
+    }
+}
+
+/// Per-layer execution statistics.
+#[derive(Debug, Clone)]
+pub struct LayerExecStats {
+    pub layer_name: String,
+    pub strategy: String,
+    pub tiles_dispatched: usize,
+    pub chiplets_used: u64,
+    pub model_cycles: f64,
+    pub wall_us: f64,
+}
+
+/// End-to-end inference report.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub model_name: String,
+    pub layers: Vec<LayerExecStats>,
+    pub total_model_cycles: f64,
+    pub total_wall_ms: f64,
+    /// Max |xla - naive| over the final output.
+    pub max_abs_err: f32,
+    pub output_len: usize,
+}
+
+/// Runs a model's numerics through the PJRT artifacts under the
+/// coordinator's per-layer schedules.
+pub struct PackageExecutor {
+    pub coordinator: Coordinator,
+    cache: Arc<ExecutableCache>,
+    /// Round-robin cursor emulating per-chiplet dispatch.
+    tile_log: Vec<(usize, u64)>, // (tiles, chiplet)
+}
+
+impl PackageExecutor {
+    pub fn new(coordinator: Coordinator, cache: Arc<ExecutableCache>) -> Self {
+        PackageExecutor { coordinator, cache, tile_log: Vec::new() }
+    }
+
+    /// GEMM `a[m,kd] x b[kd,n]` via TILE³ artifact dispatches.
+    ///
+    /// `assign` maps a `(row_tile, col_tile)` to the chiplet that computes
+    /// it (partition-strategy dependent); returns the output buffer and
+    /// the number of tiles dispatched.
+    fn gemm_tiled(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        kd: usize,
+        n: usize,
+        assign: impl Fn(usize, usize) -> u64,
+    ) -> Result<(Vec<f32>, usize)> {
+        let mt = m.div_ceil(TILE);
+        let kt = kd.div_ceil(TILE);
+        let nt = n.div_ceil(TILE);
+        let mut out = vec![0.0f32; m * n];
+        let mut a_tile = vec![0.0f32; TILE * TILE];
+        let mut b_tile = vec![0.0f32; TILE * TILE];
+        let mut tiles = 0usize;
+        for mi in 0..mt {
+            for ni in 0..nt {
+                let chiplet = assign(mi, ni);
+                let mut acc = vec![0.0f32; TILE * TILE];
+                for ki in 0..kt {
+                    // Pack (zero-padded) tiles row-wise: interior rows are
+                    // a single memcpy, edges are zero-filled then patched
+                    // (EXPERIMENTS.md §Perf — the elementwise pack with
+                    // per-element bounds checks was the executor's second
+                    // hottest loop).
+                    pack_tile(a, m, kd, mi, ki, &mut a_tile);
+                    pack_tile(b, kd, n, ki, ni, &mut b_tile);
+                    let prod = self.cache.execute_f32(MATMUL_ARTIFACT, &[&a_tile, &b_tile])?;
+                    for (o, p) in acc.iter_mut().zip(prod.iter()) {
+                        *o += p;
+                    }
+                    tiles += 1;
+                }
+                // Scatter the accumulated tile into the output.
+                for r in 0..TILE {
+                    let or = mi * TILE + r;
+                    if or >= m {
+                        break;
+                    }
+                    for c in 0..TILE {
+                        let oc = ni * TILE + c;
+                        if oc < n {
+                            out[or * n + oc] = acc[r * TILE + c];
+                        }
+                    }
+                }
+                let _ = chiplet;
+            }
+        }
+        Ok((out, tiles))
+    }
+
+    /// im2col patch matrix `[(n,yo,xo) x (c,r,s)]` with symmetric
+    /// zero-padding derived from the layer's padded extents.
+    fn im2col(layer: &Layer, input: &Tensor) -> (Vec<f32>, usize, usize) {
+        let yo = layer.y_out() as usize;
+        let xo = layer.x_out() as usize;
+        let (r, s, stride) = (layer.r as usize, layer.s as usize, layer.stride as usize);
+        let m = input.n * yo * xo;
+        let kd = input.c * r * s;
+        let pad_y = (layer.y as usize).saturating_sub(input.y);
+        let pad_x = (layer.x as usize).saturating_sub(input.x);
+        let (py0, px0) = (pad_y / 2, pad_x / 2);
+        let mut patches = vec![0.0f32; m * kd];
+        for n in 0..input.n {
+            for oy in 0..yo {
+                for ox in 0..xo {
+                    let row = (n * yo + oy) * xo + ox;
+                    for c in 0..input.c {
+                        for rr in 0..r {
+                            for ss in 0..s {
+                                let iy = (oy * stride + rr) as isize - py0 as isize;
+                                let ix = (ox * stride + ss) as isize - px0 as isize;
+                                let col = (c * r + rr) * s + ss;
+                                if iy >= 0 && (iy as usize) < input.y && ix >= 0 && (ix as usize) < input.x {
+                                    patches[row * kd + col] = input.at(n, c, iy as usize, ix as usize);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (patches, m, kd)
+    }
+
+    /// Direct output-stationary conv through the Shidiannao-style
+    /// artifact (`conv3x3_c{C}k{K}y{Y}`), the YP-XP compute path. Returns
+    /// `None` when no artifact covers this shape.
+    fn conv3x3_direct(&self, layer: &Layer, input: &Tensor, weights: &Weights) -> Result<Option<(Tensor, usize)>> {
+        let same_conv = layer.op == OpKind::Conv2D
+            && layer.r == 3
+            && layer.s == 3
+            && layer.stride == 1
+            && layer.y_out() as usize == input.y;
+        if !same_conv {
+            return Ok(None);
+        }
+        let name = format!("conv3x3_c{}k{}y{}", input.c, weights.k, input.y);
+        if self.cache.manifest().get(&name).is_err() {
+            return Ok(None);
+        }
+        let yo = input.y;
+        let xo = input.x;
+        let mut out = Tensor::zeros(input.n, weights.k, yo, xo);
+        let plane = input.c * input.y * input.x;
+        let oplane = weights.k * yo * xo;
+        let mut calls = 0usize;
+        for n in 0..input.n {
+            let x = &input.data[n * plane..(n + 1) * plane];
+            let o = self.cache.execute_f32(&name, &[x, &weights.data])?;
+            out.data[n * oplane..(n + 1) * oplane].copy_from_slice(&o);
+            calls += 1;
+        }
+        Ok(Some((out, calls)))
+    }
+
+    /// Execute one convolution (or FC, which is a 1x1 conv) layer.
+    pub fn conv_layer(&mut self, layer: &Layer, input: &Tensor, weights: &Weights) -> Result<(Tensor, LayerExecStats)> {
+        let t0 = std::time::Instant::now();
+        let schedule: LayerSchedule = self.coordinator.schedule_layer(layer);
+        let used = schedule.plan.used_chiplets;
+        let strategy = schedule.selection.strategy;
+
+        // YP-XP layers run on Shidiannao-style chiplets (Table 4): use the
+        // output-stationary direct-conv artifact when one matches.
+        if strategy == Strategy::YpXp {
+            if let Some((out, calls)) = self.conv3x3_direct(layer, input, weights)? {
+                let stats = LayerExecStats {
+                    layer_name: layer.name.clone(),
+                    strategy: format!("{}*", strategy.label()), // '*' = direct-conv path
+                    tiles_dispatched: calls,
+                    chiplets_used: used,
+                    model_cycles: schedule.selection.cost.latency,
+                    wall_us: t0.elapsed().as_secs_f64() * 1e6,
+                };
+                self.tile_log.push((calls, used));
+                return Ok((out, stats));
+            }
+        }
+
+        let (patches, m, kd) = Self::im2col(layer, input);
+        let k_out = weights.k;
+        // Weight matrix [kd x k_out] (transposed filter bank).
+        let mut wmat = vec![0.0f32; kd * k_out];
+        for k in 0..k_out {
+            for c in 0..weights.c {
+                for r in 0..weights.r {
+                    for s in 0..weights.s {
+                        let row = (c * weights.r + r) * weights.s + s;
+                        wmat[row * k_out + k] = weights.at(k, c, r, s);
+                    }
+                }
+            }
+        }
+
+        // Tile-to-chiplet assignment mirrors the partition strategy:
+        // KP-CP owns output-channel tiles, NP-CP / YP-XP own row
+        // (batch/spatial) tiles.
+        let assign = move |mi: usize, ni: usize| -> u64 {
+            match strategy {
+                Strategy::KpCp => (ni as u64) % used,
+                Strategy::NpCp | Strategy::YpXp => (mi as u64) % used,
+            }
+        };
+        let (out_flat, tiles) = self.gemm_tiled(&patches, &wmat, m, kd, k_out, assign)?;
+
+        // Rearrange [m x k_out] -> [N, K, Yo, Xo].
+        let yo = layer.y_out() as usize;
+        let xo = layer.x_out() as usize;
+        let mut out = Tensor::zeros(input.n, k_out, yo, xo);
+        for n in 0..input.n {
+            for oy in 0..yo {
+                for ox in 0..xo {
+                    let row = (n * yo + oy) * xo + ox;
+                    for k in 0..k_out {
+                        out.data[((n * k_out + k) * yo + oy) * xo + ox] = out_flat[row * k_out + k];
+                    }
+                }
+            }
+        }
+        let stats = LayerExecStats {
+            layer_name: layer.name.clone(),
+            strategy: strategy.label().to_string(),
+            tiles_dispatched: tiles,
+            chiplets_used: used,
+            model_cycles: schedule.selection.cost.latency,
+            wall_us: t0.elapsed().as_secs_f64() * 1e6,
+        };
+        self.tile_log.push((tiles, used));
+        Ok((out, stats))
+    }
+
+    /// Execute a residual addition through the elementwise artifact.
+    pub fn residual_layer(&mut self, layer: &Layer, a: &Tensor, b: &Tensor) -> Result<(Tensor, LayerExecStats)> {
+        anyhow::ensure!(a.data.len() == b.data.len(), "residual operand shape mismatch");
+        let t0 = std::time::Instant::now();
+        let schedule = self.coordinator.schedule_layer(layer);
+        let mut out = a.clone();
+        let mut chunks = 0usize;
+        let mut xa = vec![0.0f32; ADD_CHUNK];
+        let mut xb = vec![0.0f32; ADD_CHUNK];
+        let mut off = 0usize;
+        while off < a.data.len() {
+            let len = ADD_CHUNK.min(a.data.len() - off);
+            xa[..len].copy_from_slice(&a.data[off..off + len]);
+            xb[..len].copy_from_slice(&b.data[off..off + len]);
+            xa[len..].fill(0.0);
+            xb[len..].fill(0.0);
+            let sum = self.cache.execute_f32(ADD_ARTIFACT, &[&xa, &xb])?;
+            out.data[off..off + len].copy_from_slice(&sum[..len]);
+            off += len;
+            chunks += 1;
+        }
+        let stats = LayerExecStats {
+            layer_name: layer.name.clone(),
+            strategy: schedule.selection.strategy.label().to_string(),
+            tiles_dispatched: chunks,
+            chiplets_used: schedule.plan.used_chiplets,
+            model_cycles: schedule.selection.cost.latency,
+            wall_us: t0.elapsed().as_secs_f64() * 1e6,
+        };
+        Ok((out, stats))
+    }
+
+    /// Run the whole model on `input`, generating deterministic weights
+    /// per layer, and verify against the naive Rust oracle.
+    pub fn run_model(&mut self, model: &Model, input: &Tensor) -> Result<InferenceReport> {
+        let t0 = std::time::Instant::now();
+        let mut stats = Vec::new();
+        let mut cur = input.clone();
+        let mut residual_src: Option<Tensor> = None;
+        let mut ref_cur = input.clone();
+        let mut ref_residual: Option<Tensor> = None;
+
+        for layer in &model.layers {
+            match layer.op {
+                OpKind::ResidualAdd => {
+                    let a = residual_src.take().context("no residual source saved")?;
+                    let (out, st) = self.residual_layer(layer, &cur, &a)?;
+                    stats.push(st);
+                    cur = out;
+                    let ra = ref_residual.take().unwrap();
+                    for (o, x) in ref_cur.data.iter_mut().zip(ra.data.iter()) {
+                        *o += x;
+                    }
+                }
+                OpKind::Conv2D | OpKind::FullyConnected => {
+                    // Save the residual source *before* channel-changing
+                    // convs that open a block (convention: layers named
+                    // `*conv1`/`*conv3` in tiny_cnn start blocks).
+                    if layer.name.ends_with("conv1") || layer.name.ends_with("conv3") {
+                        // block opens after this layer computes
+                    }
+                    let (k, c) = (layer.k as usize, layer.c as usize);
+                    let (r, s) = (layer.r as usize, layer.s as usize);
+                    let w = deterministic_weights(&layer.name, k, c, r, s);
+                    let (inp, ref_inp) = if layer.op == OpKind::FullyConnected {
+                        // Flatten to [N, C, 1, 1].
+                        (flatten(&cur), flatten(&ref_cur))
+                    } else {
+                        (cur.clone(), ref_cur.clone())
+                    };
+                    let (out, st) = self.conv_layer(layer, &inp, &w)?;
+                    stats.push(st);
+                    cur = out;
+                    ref_cur = naive_conv(layer, &ref_inp, &w);
+                    // The layer after a block-opening conv consumes its
+                    // output as the residual source.
+                    if layer.name.ends_with("conv1") || layer.name.ends_with("conv3") {
+                        residual_src = Some(cur.clone());
+                        ref_residual = Some(ref_cur.clone());
+                    }
+                }
+                OpKind::UpConv => anyhow::bail!("UpConv not supported by the tiny e2e path"),
+            }
+        }
+
+        let max_abs_err = cur
+            .data
+            .iter()
+            .zip(ref_cur.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        Ok(InferenceReport {
+            model_name: model.name.clone(),
+            total_model_cycles: stats.iter().map(|s| s.model_cycles).sum(),
+            total_wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            layers: stats,
+            max_abs_err,
+            output_len: cur.data.len(),
+        })
+    }
+}
+
+/// Pack the `(ti, tj)` TILE x TILE block of the `rows x cols` row-major
+/// matrix `src` into `dst`, zero-padding beyond the matrix edge.
+#[inline]
+fn pack_tile(src: &[f32], rows: usize, cols: usize, ti: usize, tj: usize, dst: &mut [f32]) {
+    let r0 = ti * TILE;
+    let c0 = tj * TILE;
+    let nrows = TILE.min(rows.saturating_sub(r0));
+    let ncols = TILE.min(cols.saturating_sub(c0));
+    if nrows < TILE || ncols < TILE {
+        dst.fill(0.0);
+    }
+    for r in 0..nrows {
+        let s = (r0 + r) * cols + c0;
+        dst[r * TILE..r * TILE + ncols].copy_from_slice(&src[s..s + ncols]);
+    }
+}
+
+/// Deterministic pseudo-random weights: reproducible across Rust and any
+/// re-run without an RNG dependency on the hot path.
+pub fn deterministic_weights(name: &str, k: usize, c: usize, r: usize, s: usize) -> Weights {
+    let seed: u32 = name.bytes().fold(0x811c9dc5u32, |h, b| (h ^ b as u32).wrapping_mul(0x01000193));
+    Weights::from_fn(k, c, r, s, |i| {
+        let h = (seed ^ (i as u32).wrapping_mul(0x9e3779b9)).wrapping_mul(0x85ebca6b);
+        // Map to [-0.05, 0.05) — keeps deep activations in f32 range.
+        ((h >> 8) as f32 / (1u32 << 24) as f32 - 0.5) * 0.1
+    })
+}
+
+/// Flatten `[N, C, Y, X]` to `[N, C*Y*X, 1, 1]` for FC layers.
+pub fn flatten(t: &Tensor) -> Tensor {
+    Tensor { n: t.n, c: t.c * t.y * t.x, y: 1, x: 1, data: t.data.clone() }
+}
+
+/// Naive direct convolution oracle (padding derived like `im2col`).
+pub fn naive_conv(layer: &Layer, input: &Tensor, w: &Weights) -> Tensor {
+    let yo = layer.y_out() as usize;
+    let xo = layer.x_out() as usize;
+    let stride = layer.stride as usize;
+    let pad_y = (layer.y as usize).saturating_sub(input.y);
+    let pad_x = (layer.x as usize).saturating_sub(input.x);
+    let (py0, px0) = (pad_y / 2, pad_x / 2);
+    let mut out = Tensor::zeros(input.n, w.k, yo, xo);
+    for n in 0..input.n {
+        for k in 0..w.k {
+            for oy in 0..yo {
+                for ox in 0..xo {
+                    let mut acc = 0.0f32;
+                    for c in 0..input.c {
+                        for r in 0..w.r {
+                            for s in 0..w.s {
+                                let iy = (oy * stride + r) as isize - py0 as isize;
+                                let ix = (ox * stride + s) as isize - px0 as isize;
+                                if iy >= 0 && (iy as usize) < input.y && ix >= 0 && (ix as usize) < input.x {
+                                    acc += input.at(n, c, iy as usize, ix as usize) * w.at(k, c, r, s);
+                                }
+                            }
+                        }
+                    }
+                    out.data[((n * w.k + k) * yo + oy) * xo + ox] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::conv_padded;
+
+    #[test]
+    fn im2col_matches_naive_conv_via_cpu_gemm() {
+        // Validate the im2col + GEMM lowering against the naive oracle
+        // with a pure-Rust GEMM (no artifacts needed).
+        let layer = conv_padded("t", 1, 4, 3, 8, 8, 3, 3, 1);
+        let input = Tensor::from_fn(1, 3, 8, 8, |_, c, y, x| (c * 64 + y * 8 + x) as f32 * 0.01);
+        let w = deterministic_weights("t", 4, 3, 3, 3);
+        let (patches, m, kd) = PackageExecutor::im2col(&layer, &input);
+        let mut wmat = vec![0.0f32; kd * 4];
+        for k in 0..4 {
+            for c in 0..3 {
+                for r in 0..3 {
+                    for s in 0..3 {
+                        wmat[((c * 3 + r) * 3 + s) * 4 + k] = w.at(k, c, r, s);
+                    }
+                }
+            }
+        }
+        // Plain GEMM.
+        let mut out_flat = vec![0.0f32; m * 4];
+        for i in 0..m {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for p in 0..kd {
+                    acc += patches[i * kd + p] * wmat[p * 4 + j];
+                }
+                out_flat[i * 4 + j] = acc;
+            }
+        }
+        let oracle = naive_conv(&layer, &input, &w);
+        let yo = layer.y_out() as usize;
+        let xo = layer.x_out() as usize;
+        for oy in 0..yo {
+            for ox in 0..xo {
+                for k in 0..4 {
+                    let a = out_flat[(oy * xo + ox) * 4 + k];
+                    let b = oracle.at(0, k, oy, ox);
+                    assert!((a - b).abs() < 1e-4, "mismatch at k={k} oy={oy} ox={ox}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_conv_with_asymmetric_padding() {
+        let layer = conv_padded("t", 1, 2, 2, 8, 8, 3, 3, 2);
+        let input = Tensor::from_fn(1, 2, 8, 8, |_, c, y, x| ((c + y + x) % 5) as f32);
+        let w = deterministic_weights("t2", 2, 2, 3, 3);
+        let out = naive_conv(&layer, &input, &w);
+        assert_eq!((out.y, out.x), (4, 4));
+    }
+
+    #[test]
+    fn deterministic_weights_are_stable_and_bounded() {
+        let a = deterministic_weights("layer", 4, 4, 3, 3);
+        let b = deterministic_weights("layer", 4, 4, 3, 3);
+        assert_eq!(a.data, b.data);
+        assert!(a.data.iter().all(|v| v.abs() <= 0.05));
+        let c = deterministic_weights("other", 4, 4, 3, 3);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn flatten_preserves_data() {
+        let t = Tensor::from_fn(2, 3, 4, 4, |n, c, y, x| (n + c + y + x) as f32);
+        let f = flatten(&t);
+        assert_eq!(f.c, 48);
+        assert_eq!(f.data, t.data);
+    }
+}

@@ -1,0 +1,234 @@
+//! Heterogeneous chiplet arrays (paper §4: "WIENNA makes no assumptions
+//! about the chiplet architecture and can thus accommodate heterogeneous
+//! combinations of chiplets with different architectures and networks").
+//!
+//! This module implements that claim: a package whose chiplets differ in
+//! PE count (e.g. a mix of big NVDLA-like tiles and small Shidiannao-like
+//! tiles), with a work-partitioner that splits the partitioned dimension
+//! *proportionally to compute capability* instead of uniformly, and a
+//! load-balance analysis showing when heterogeneity helps (layers whose
+//! parallelism does not divide evenly) and what a naive uniform split
+//! loses.
+
+use crate::dataflow::{ChipletArch, MapPolicy, Strategy};
+use crate::workload::Layer;
+
+/// One chiplet class in a heterogeneous package.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipletClass {
+    pub name: String,
+    pub count: u64,
+    pub pes: u64,
+    pub arch: ChipletArch,
+}
+
+/// A heterogeneous package description.
+#[derive(Debug, Clone)]
+pub struct HeteroPackage {
+    pub classes: Vec<ChipletClass>,
+}
+
+impl HeteroPackage {
+    /// A homogeneous package, for comparison.
+    pub fn homogeneous(count: u64, pes: u64, arch: ChipletArch) -> Self {
+        HeteroPackage { classes: vec![ChipletClass { name: "uniform".into(), count, pes, arch }] }
+    }
+
+    pub fn total_chiplets(&self) -> u64 {
+        self.classes.iter().map(|c| c.count).sum()
+    }
+
+    pub fn total_pes(&self) -> u64 {
+        self.classes.iter().map(|c| c.count * c.pes).sum()
+    }
+}
+
+/// Work assignment for one chiplet class.
+#[derive(Debug, Clone)]
+pub struct ClassAssignment {
+    pub class: ChipletClass,
+    /// Units of the partitioned dimension given to each chiplet of this
+    /// class (worst case).
+    pub units_per_chiplet: u64,
+    /// Compute cycles for this class's worst chiplet.
+    pub cycles: u64,
+}
+
+/// Result of partitioning a layer across a heterogeneous package.
+#[derive(Debug, Clone)]
+pub struct HeteroPlan {
+    pub assignments: Vec<ClassAssignment>,
+    /// Makespan = max over classes (the slowest chiplet gates the layer).
+    pub makespan: u64,
+    /// Load imbalance: makespan / ideal (1.0 = perfectly balanced).
+    pub imbalance: f64,
+}
+
+/// Units of the partitioned dimension for `strategy`.
+fn partitioned_units(layer: &Layer, strategy: Strategy) -> u64 {
+    match strategy {
+        Strategy::KpCp => layer.k,
+        Strategy::NpCp => layer.n,
+        Strategy::YpXp => layer.y_out().max(1) * layer.x_out().max(1),
+    }
+}
+
+/// Per-unit sub-layer for cycle estimation: the layer with the
+/// partitioned dimension set to `units`.
+fn sub_layer(layer: &Layer, strategy: Strategy, units: u64) -> Layer {
+    match strategy {
+        Strategy::KpCp => Layer { k: units, ..layer.clone() },
+        Strategy::NpCp => Layer { n: units, ..layer.clone() },
+        Strategy::YpXp => {
+            // Interpret `units` as output rows (column dim kept whole).
+            let rows = units.div_ceil(layer.x_out().max(1)).max(1);
+            let y = (rows - 1) * layer.stride + layer.r;
+            Layer { y, ..layer.clone() }
+        }
+    }
+}
+
+/// Partition `layer` across `pkg` proportionally to per-chiplet compute.
+///
+/// Each class receives a share of the partitioned dimension proportional
+/// to `count x pes`, rounded to whole units; remainders go to the most
+/// capable class.
+pub fn partition_hetero(layer: &Layer, strategy: Strategy, pkg: &HeteroPackage, bytes_per_elem: u64) -> HeteroPlan {
+    let units = partitioned_units(layer, strategy);
+    let total_cap: u64 = pkg.total_pes();
+    assert!(total_cap > 0);
+
+    // Proportional shares (floor), remainder to the biggest class.
+    let mut shares: Vec<u64> = pkg
+        .classes
+        .iter()
+        .map(|c| units * c.count * c.pes / total_cap)
+        .collect();
+    let assigned: u64 = shares.iter().sum();
+    let biggest = pkg
+        .classes
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| c.pes)
+        .map(|(i, _)| i)
+        .unwrap();
+    shares[biggest] += units - assigned;
+
+    let mut assignments = Vec::new();
+    let mut makespan = 0u64;
+    for (c, &share) in pkg.classes.iter().zip(shares.iter()) {
+        let per_chiplet = share.div_ceil(c.count.max(1));
+        let cycles = if per_chiplet == 0 {
+            0
+        } else {
+            let sub = sub_layer(layer, strategy, per_chiplet);
+            crate::dataflow::intra::map_layer(&sub, c.arch, c.pes, MapPolicy::Flexible, bytes_per_elem).cycles
+        };
+        makespan = makespan.max(cycles);
+        assignments.push(ClassAssignment { class: c.clone(), units_per_chiplet: per_chiplet, cycles });
+    }
+
+    // Ideal: all MACs spread over all PEs at 1 MAC/PE/cycle.
+    let ideal = layer.macs() as f64 / total_cap as f64;
+    HeteroPlan { assignments, makespan, imbalance: makespan as f64 / ideal.max(1.0) }
+}
+
+/// Naive uniform split (every chiplet gets the same unit count) for
+/// comparison — what a heterogeneity-unaware coordinator would do.
+pub fn partition_uniform(layer: &Layer, strategy: Strategy, pkg: &HeteroPackage, bytes_per_elem: u64) -> HeteroPlan {
+    let units = partitioned_units(layer, strategy);
+    let n = pkg.total_chiplets();
+    let per_chiplet = units.div_ceil(n.max(1)).max(1);
+    let mut assignments = Vec::new();
+    let mut makespan = 0u64;
+    for c in &pkg.classes {
+        let sub = sub_layer(layer, strategy, per_chiplet);
+        let cycles = crate::dataflow::intra::map_layer(&sub, c.arch, c.pes, MapPolicy::Flexible, bytes_per_elem).cycles;
+        makespan = makespan.max(cycles);
+        assignments.push(ClassAssignment { class: c.clone(), units_per_chiplet: per_chiplet, cycles });
+    }
+    let ideal = layer.macs() as f64 / pkg.total_pes() as f64;
+    HeteroPlan { assignments, makespan, imbalance: makespan as f64 / ideal.max(1.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::conv_padded;
+
+    fn mixed() -> HeteroPackage {
+        HeteroPackage {
+            classes: vec![
+                ChipletClass { name: "big".into(), count: 32, pes: 256, arch: ChipletArch::NvdlaLike },
+                ChipletClass { name: "small".into(), count: 128, pes: 64, arch: ChipletArch::NvdlaLike },
+            ],
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let p = mixed();
+        assert_eq!(p.total_chiplets(), 160);
+        assert_eq!(p.total_pes(), 32 * 256 + 128 * 64);
+    }
+
+    #[test]
+    fn proportional_beats_uniform_on_mixed_package() {
+        let l = conv_padded("c", 8, 512, 256, 14, 14, 3, 3, 1);
+        let pkg = mixed();
+        let prop = partition_hetero(&l, Strategy::KpCp, &pkg, 1);
+        let unif = partition_uniform(&l, Strategy::KpCp, &pkg, 1);
+        assert!(
+            prop.makespan <= unif.makespan,
+            "proportional {} vs uniform {}",
+            prop.makespan,
+            unif.makespan
+        );
+    }
+
+    #[test]
+    fn homogeneous_matches_either_split() {
+        let l = conv_padded("c", 4, 256, 128, 14, 14, 3, 3, 1);
+        let pkg = HeteroPackage::homogeneous(256, 64, ChipletArch::NvdlaLike);
+        let prop = partition_hetero(&l, Strategy::KpCp, &pkg, 1);
+        let unif = partition_uniform(&l, Strategy::KpCp, &pkg, 1);
+        assert_eq!(prop.makespan, unif.makespan);
+    }
+
+    #[test]
+    fn all_units_assigned() {
+        let l = conv_padded("c", 8, 500, 64, 28, 28, 3, 3, 1);
+        let pkg = mixed();
+        let plan = partition_hetero(&l, Strategy::KpCp, &pkg, 1);
+        let covered: u64 = plan
+            .assignments
+            .iter()
+            .map(|a| a.units_per_chiplet * a.class.count)
+            .sum();
+        assert!(covered >= 500, "covered {covered}");
+    }
+
+    #[test]
+    fn imbalance_at_least_one() {
+        let l = conv_padded("c", 2, 64, 64, 28, 28, 3, 3, 1);
+        for strat in Strategy::ALL {
+            let plan = partition_hetero(&l, strat, &mixed(), 1);
+            assert!(plan.imbalance >= 0.99, "{strat}: {}", plan.imbalance);
+        }
+    }
+
+    #[test]
+    fn ypxp_hetero_split() {
+        let l = conv_padded("c", 1, 64, 64, 56, 56, 3, 3, 1);
+        let pkg = HeteroPackage {
+            classes: vec![
+                ChipletClass { name: "big".into(), count: 16, pes: 256, arch: ChipletArch::ShidiannaoLike },
+                ChipletClass { name: "small".into(), count: 64, pes: 64, arch: ChipletArch::ShidiannaoLike },
+            ],
+        };
+        let plan = partition_hetero(&l, Strategy::YpXp, &pkg, 1);
+        assert!(plan.makespan > 0);
+        // The big class must take more rows per chiplet than the small.
+        assert!(plan.assignments[0].units_per_chiplet >= plan.assignments[1].units_per_chiplet);
+    }
+}

@@ -1,0 +1,22 @@
+//! WIENNA coordinator (substrate S11) — the system layer of the paper's
+//! contribution.
+//!
+//! The coordinator owns the package: for every layer of a DNN it
+//! (1) selects the partitioning strategy (fixed or adaptive, §5.2),
+//! (2) derives the partition plan and the concrete distribution schedule
+//! (unicasts for the partitioned tensor, broadcasts for the replicated
+//! one — the Fig-6 timeline), (3) accounts cycles and energy through the
+//! cost model and NoP models, and (4) — in execution mode — dispatches
+//! the chiplets' tile computations onto the PJRT runtime and collects the
+//! outputs, producing real numerics end to end.
+
+pub mod adaptive;
+pub mod collective;
+pub mod exec;
+pub mod hetero;
+pub mod pipeline;
+pub mod scheduler;
+
+pub use adaptive::{StrategyPolicy, StrategySelection};
+pub use exec::{InferenceReport, PackageExecutor};
+pub use scheduler::{Coordinator, LayerSchedule, RunSummary};

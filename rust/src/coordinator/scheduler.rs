@@ -1,0 +1,141 @@
+//! The coordinator proper: walks a model layer by layer, selects
+//! strategies, builds distribution schedules, and accounts the run.
+
+use crate::config::{DesignPoint, SystemConfig, CLOCK_HZ};
+use crate::coordinator::adaptive::{select, StrategyPolicy, StrategySelection};
+use crate::cost::traffic::expand_plan;
+use crate::cost::CostEngine;
+use crate::dataflow::{partition, PartitionPlan};
+use crate::nop::sim::Transfer;
+use crate::workload::Model;
+
+/// Everything the coordinator decided for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub selection: StrategySelection,
+    pub plan: PartitionPlan,
+    /// Concrete preload transfers (partitioned tensor, Fig-6 `t_0`).
+    pub preload: Vec<Transfer>,
+    /// Concrete streamed transfers (replicated tensor, Fig-6 `t_1`).
+    pub stream: Vec<Transfer>,
+}
+
+impl LayerSchedule {
+    /// Schedule invariant: unique bytes in the transfer lists equal the
+    /// plan's traffic payload.
+    pub fn scheduled_bytes(&self) -> u64 {
+        self.preload.iter().map(|t| t.bytes).sum::<u64>() + self.stream.iter().map(|t| t.bytes).sum::<u64>()
+    }
+}
+
+/// Aggregate statistics of a coordinated run.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub model_name: String,
+    pub design_point: String,
+    pub policy: String,
+    pub total_latency_cycles: f64,
+    pub total_macs: u64,
+    pub macs_per_cycle: f64,
+    /// Wall-clock at the Table-4 clock (500 MHz).
+    pub latency_ms: f64,
+    pub dist_energy_mj: f64,
+    /// Per-layer-type strategy histogram (adaptive mode introspection).
+    pub strategy_histogram: Vec<(String, String, usize)>,
+}
+
+/// The WIENNA package coordinator.
+pub struct Coordinator {
+    pub sys: SystemConfig,
+    pub design_point: DesignPoint,
+    pub engine: CostEngine,
+    pub policy: StrategyPolicy,
+}
+
+impl Coordinator {
+    pub fn new(sys: SystemConfig, design_point: DesignPoint, policy: StrategyPolicy) -> Self {
+        let engine = CostEngine::for_design_point(&sys, design_point);
+        Coordinator { sys, design_point, engine, policy }
+    }
+
+    /// Build the full schedule for one layer.
+    pub fn schedule_layer(&self, layer: &crate::workload::Layer) -> LayerSchedule {
+        let selection = select(&self.engine, layer, self.policy);
+        let plan = partition::partition(layer, selection.strategy, self.sys.num_chiplets, self.sys.bytes_per_elem);
+        let (preload, stream) = expand_plan(&plan, self.sys.mesh_side() as u32);
+        LayerSchedule { selection, plan, preload, stream }
+    }
+
+    /// Schedule the whole model and summarize.
+    pub fn run_model(&self, model: &Model) -> (Vec<LayerSchedule>, RunSummary) {
+        let schedules: Vec<LayerSchedule> = model.layers.iter().map(|l| self.schedule_layer(l)).collect();
+        let total_latency: f64 = schedules.iter().map(|s| s.selection.cost.latency).sum();
+        let total_macs: u64 = schedules.iter().map(|s| s.selection.cost.macs).sum();
+        let energy_pj: f64 = schedules.iter().map(|s| s.selection.cost.dist_energy_pj).sum();
+
+        // Histogram: (layer type, strategy) -> count.
+        let mut hist: std::collections::BTreeMap<(String, String), usize> = Default::default();
+        for s in &schedules {
+            *hist
+                .entry((s.selection.cost.layer_type.label().to_string(), s.selection.strategy.label().to_string()))
+                .or_insert(0) += 1;
+        }
+
+        let summary = RunSummary {
+            model_name: model.name.clone(),
+            design_point: self.design_point.label(),
+            policy: self.policy.label(),
+            total_latency_cycles: total_latency,
+            total_macs,
+            macs_per_cycle: total_macs as f64 / total_latency,
+            latency_ms: total_latency / CLOCK_HZ * 1e3,
+            dist_energy_mj: energy_pj * 1e-9,
+            strategy_histogram: hist.into_iter().map(|((t, s), c)| (t, s, c)).collect(),
+        };
+        (schedules, summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Strategy;
+    use crate::workload::{resnet50, tiny};
+
+    fn coord(policy: StrategyPolicy) -> Coordinator {
+        Coordinator::new(SystemConfig::default(), DesignPoint::WIENNA_C, policy)
+    }
+
+    #[test]
+    fn schedule_conserves_bytes() {
+        let c = coord(StrategyPolicy::Adaptive);
+        let m = tiny::tiny_cnn(4);
+        for l in &m.layers {
+            let s = c.schedule_layer(l);
+            assert_eq!(s.scheduled_bytes(), s.plan.sent_bytes(), "layer {}", l.name);
+        }
+    }
+
+    #[test]
+    fn run_summary_aggregates() {
+        let c = coord(StrategyPolicy::Fixed(Strategy::KpCp));
+        let m = tiny::tiny_cnn(4);
+        let (schedules, sum) = c.run_model(&m);
+        assert_eq!(schedules.len(), m.layers.len());
+        assert_eq!(sum.total_macs, m.total_macs());
+        assert!(sum.macs_per_cycle > 0.0);
+        assert!(sum.latency_ms > 0.0);
+    }
+
+    #[test]
+    fn adaptive_histogram_uses_multiple_strategies_on_resnet() {
+        let c = coord(StrategyPolicy::Adaptive);
+        let (_, sum) = c.run_model(&resnet50::resnet50(64));
+        let strategies: std::collections::HashSet<&String> =
+            sum.strategy_histogram.iter().map(|(_, s, _)| s).collect();
+        assert!(
+            strategies.len() >= 2,
+            "adaptive should mix strategies on ResNet50, got {strategies:?}"
+        );
+    }
+}

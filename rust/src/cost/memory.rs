@@ -1,0 +1,146 @@
+//! Memory-hierarchy substrate: HBM → global-SRAM staging (Fig 5's left
+//! edge).
+//!
+//! The paper's package has an HBM stack feeding the 13 MiB global SRAM
+//! chiplet, which in turn distributes to the chiplets. The evaluation
+//! assumes distribution is the bottleneck, which holds while a layer's
+//! working set fits the (double-buffered) SRAM; larger layers must be
+//! staged from HBM in passes, and when the required staging rate exceeds
+//! the HBM bandwidth the *memory* side becomes the critical path.
+//!
+//! This module makes that explicit so the cost engine can (a) bound the
+//! distribution stream by the achievable SRAM refill rate and (b) report
+//! which layers spill.
+
+use crate::workload::Layer;
+
+/// HBM interface model.
+#[derive(Debug, Clone)]
+pub struct HbmModel {
+    /// Sustained HBM read bandwidth in bytes/cycle at the system clock.
+    /// An HBM2 stack at ~256 GB/s and 500 MHz is ~512 B/cyc; we default
+    /// conservatively to one pseudo-channel's worth.
+    pub bw_bytes_per_cycle: f64,
+    /// Access granularity in bytes (row-buffer burst).
+    pub burst_bytes: u64,
+    /// Energy per bit moved from HBM, in pJ (≈3.9 pJ/bit for HBM2).
+    pub pj_per_bit: f64,
+}
+
+impl Default for HbmModel {
+    fn default() -> Self {
+        HbmModel { bw_bytes_per_cycle: 64.0, burst_bytes: 256, pj_per_bit: 3.9 }
+    }
+}
+
+/// Staging analysis of one layer against the SRAM capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagingPlan {
+    /// Bytes that must transit HBM→SRAM for the layer (first touch of
+    /// weights + inputs; outputs write back).
+    pub staged_bytes: u64,
+    /// Whether the full distribution working set is SRAM-resident.
+    pub resident: bool,
+    /// Number of staging passes through the (double-buffered) SRAM.
+    pub passes: u64,
+    /// Cycles the HBM needs to stage the layer.
+    pub hbm_cycles: f64,
+    /// HBM energy in pJ.
+    pub hbm_energy_pj: f64,
+}
+
+impl HbmModel {
+    /// Analyze `layer` against an SRAM of `sram_bytes`, double-buffered
+    /// (half the capacity holds the active working set while the other
+    /// half stages the next tile).
+    pub fn stage(&self, layer: &Layer, sram_bytes: u64, bytes_per_elem: u64) -> StagingPlan {
+        let ws = (layer.input_elems() + layer.weight_elems()) * bytes_per_elem;
+        let out = layer.output_elems() * bytes_per_elem;
+        let staged = ws + out; // inputs+weights read, outputs written back
+        let usable = (sram_bytes / 2).max(1);
+        let resident = ws <= usable;
+        let passes = ws.div_ceil(usable).max(1);
+        // Burst-align the HBM traffic.
+        let bursts = staged.div_ceil(self.burst_bytes);
+        let bytes_moved = bursts * self.burst_bytes;
+        StagingPlan {
+            staged_bytes: staged,
+            resident,
+            passes,
+            hbm_cycles: bytes_moved as f64 / self.bw_bytes_per_cycle,
+            hbm_energy_pj: bytes_moved as f64 * 8.0 * self.pj_per_bit,
+        }
+    }
+
+    /// Effective distribution stream bound: the SRAM cannot distribute
+    /// faster than HBM refills it once the working set spills.
+    pub fn stream_bound_cycles(&self, plan: &StagingPlan, dist_bytes: u64) -> f64 {
+        if plan.resident {
+            0.0
+        } else {
+            // The distribution stream and the HBM refill proceed in
+            // lockstep; the refill of the *distributed* bytes bounds it.
+            dist_bytes as f64 / self.bw_bytes_per_cycle
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{conv_padded, Layer};
+
+    #[test]
+    fn small_layer_is_resident() {
+        let hbm = HbmModel::default();
+        let l = conv_padded("s", 1, 32, 16, 16, 16, 3, 3, 1);
+        let p = hbm.stage(&l, 13 * 1024 * 1024, 1);
+        assert!(p.resident);
+        assert_eq!(p.passes, 1);
+    }
+
+    #[test]
+    fn large_layer_spills_and_needs_passes() {
+        let hbm = HbmModel::default();
+        // conv1 of ResNet-50 at batch 64: ~10 MB of inputs.
+        let l = conv_padded("conv1", 64, 64, 3, 224, 224, 7, 7, 2);
+        let p = hbm.stage(&l, 13 * 1024 * 1024, 1);
+        assert!(!p.resident);
+        assert!(p.passes >= 2, "passes {}", p.passes);
+        assert!(p.hbm_cycles > 0.0);
+    }
+
+    #[test]
+    fn stream_bound_zero_when_resident() {
+        let hbm = HbmModel::default();
+        let l = Layer::fc("fc", 1, 100, 100);
+        let p = hbm.stage(&l, 13 * 1024 * 1024, 1);
+        assert_eq!(hbm.stream_bound_cycles(&p, 10_000), 0.0);
+    }
+
+    #[test]
+    fn stream_bound_kicks_in_on_spill() {
+        let hbm = HbmModel::default();
+        let l = conv_padded("big", 64, 64, 3, 224, 224, 7, 7, 2);
+        let p = hbm.stage(&l, 13 * 1024 * 1024, 1);
+        let bound = hbm.stream_bound_cycles(&p, 1_000_000);
+        assert!((bound - 1_000_000.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_alignment_rounds_up() {
+        let hbm = HbmModel::default();
+        let l = Layer::fc("fc", 1, 3, 3); // tiny: 9 weights + 3 in + 3 out
+        let p = hbm.stage(&l, 1 << 20, 1);
+        // One 256-byte burst minimum.
+        assert!(p.hbm_cycles >= 256.0 / hbm.bw_bytes_per_cycle);
+    }
+
+    #[test]
+    fn energy_proportional_to_bytes() {
+        let hbm = HbmModel::default();
+        let small = hbm.stage(&Layer::fc("a", 1, 64, 64), 1 << 20, 1);
+        let large = hbm.stage(&Layer::fc("b", 1, 640, 640), 1 << 20, 1);
+        assert!(large.hbm_energy_pj > small.hbm_energy_pj * 10.0);
+    }
+}

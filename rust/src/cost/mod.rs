@@ -1,0 +1,14 @@
+//! MAESTRO-like analytical cost model (substrate S4).
+//!
+//! Combines the partition plan (S2), intra-chiplet mapping (S3) and NoP
+//! models (S5–S8) into per-layer latency, throughput, utilization and
+//! distribution-energy estimates, following the paper's §5.1 methodology.
+
+pub mod memory;
+pub mod model;
+pub mod phase;
+pub mod traffic;
+
+pub use memory::{HbmModel, StagingPlan};
+pub use model::{best_strategy, evaluate_layer, evaluate_model, CostEngine, DistFabric, LayerCost, ModelCost};
+pub use phase::PhaseTimeline;

@@ -1,0 +1,109 @@
+//! Fig-6 phase timeline: how distribution, compute and collection overlap.
+//!
+//! The paper's walkthrough (Fig 6) splits a layer into four phases:
+//!
+//! 1. `t_0`   — the *partitioned* tensor is unicast to each chiplet
+//!              (preload; compute cannot start without it);
+//! 2. `t_1`   — the *replicated* tensor is streamed (broadcast) element
+//!              by element, overlapping compute;
+//! 3. `t_2`   — chiplets compute, consuming the stream;
+//! 4. `t_3`   — outputs are collected over the wired NoP; collection is
+//!              off the critical path unless it outruns compute (§2:
+//!              "collection can be hidden behind compute delay,
+//!              distribution is in the critical path").
+
+
+/// Cycle budget of one layer execution, broken into phases.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimeline {
+    /// Preload (non-overlapped distribution) cycles — Fig 6 `t_0`.
+    pub preload: f64,
+    /// Streamed distribution cycles — Fig 6 `t_1`.
+    pub stream: f64,
+    /// Compute cycles — Fig 6 `t_2`.
+    pub compute: f64,
+    /// Collection cycles — Fig 6 `t_3`.
+    pub collect: f64,
+    /// One-time NoP pipeline-fill latency.
+    pub fill: f64,
+}
+
+impl PhaseTimeline {
+    /// End-to-end latency of the layer.
+    ///
+    /// Preload serializes before the steady state; the steady state runs
+    /// at the pace of the slowest of {input stream, compute, collection};
+    /// the NoP fill latency is paid once.
+    pub fn latency(&self) -> f64 {
+        self.preload + self.stream.max(self.compute).max(self.collect) + self.fill
+    }
+
+    /// Which phase bounds the steady state.
+    pub fn bottleneck(&self) -> Phase {
+        if self.stream >= self.compute && self.stream >= self.collect {
+            Phase::Distribution
+        } else if self.compute >= self.collect {
+            Phase::Compute
+        } else {
+            Phase::Collection
+        }
+    }
+}
+
+/// Steady-state bottleneck classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Distribution,
+    Compute,
+    Collection,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Distribution => "distribution-bound",
+            Phase::Compute => "compute-bound",
+            Phase::Collection => "collection-bound",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_layer() {
+        let t = PhaseTimeline { preload: 10.0, stream: 50.0, compute: 100.0, collect: 20.0, fill: 8.0 };
+        assert_eq!(t.latency(), 10.0 + 100.0 + 8.0);
+        assert_eq!(t.bottleneck(), Phase::Compute);
+    }
+
+    #[test]
+    fn distribution_bound_layer() {
+        let t = PhaseTimeline { preload: 0.0, stream: 500.0, compute: 100.0, collect: 20.0, fill: 1.0 };
+        assert_eq!(t.latency(), 501.0);
+        assert_eq!(t.bottleneck(), Phase::Distribution);
+    }
+
+    #[test]
+    fn collection_can_bound_when_outputs_dominate() {
+        let t = PhaseTimeline { preload: 0.0, stream: 10.0, compute: 10.0, collect: 90.0, fill: 0.0 };
+        assert_eq!(t.bottleneck(), Phase::Collection);
+        assert_eq!(t.latency(), 90.0);
+    }
+
+    #[test]
+    fn latency_monotone_in_each_phase() {
+        let base = PhaseTimeline { preload: 5.0, stream: 10.0, compute: 20.0, collect: 5.0, fill: 2.0 };
+        for bump in [
+            PhaseTimeline { preload: 6.0, ..base },
+            PhaseTimeline { stream: 25.0, ..base },
+            PhaseTimeline { compute: 30.0, ..base },
+            PhaseTimeline { collect: 40.0, ..base },
+            PhaseTimeline { fill: 3.0, ..base },
+        ] {
+            assert!(bump.latency() >= base.latency());
+        }
+    }
+}

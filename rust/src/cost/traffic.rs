@@ -1,0 +1,151 @@
+//! Traffic-schedule generation: turn a partition plan's abstract traffic
+//! classes into the concrete transfer lists consumed by the cycle-level
+//! mesh simulator and by the coordinator's distribution scheduler.
+
+use crate::dataflow::{PartitionPlan, TrafficClass};
+use crate::nop::sim::{NodeId, Transfer};
+
+/// Chunk size for streamed transfers (one "element row" per broadcast, as
+/// in the Fig-6 walkthrough). Preloads use larger DMA-style chunks.
+///
+/// The transfer lists are *logical*: the cycle-level simulator packetizes
+/// long transfers itself (`MeshSim::max_packet_bytes`), so expansion
+/// coalesces chunks and caps the number of emitted transfers per class to
+/// keep schedules O(chiplets), not O(bytes).
+pub const STREAM_CHUNK_BYTES: u64 = 64;
+pub const PRELOAD_CHUNK_BYTES: u64 = 4096;
+/// Upper bound on transfers emitted per traffic class.
+pub const MAX_TRANSFERS_PER_CLASS: usize = 512;
+
+/// First `n` nodes of a `side`-wide mesh in row-major order — the layout
+/// the coordinator assigns work in.
+pub fn used_nodes(side: u32, n: u64) -> Vec<NodeId> {
+    (0..n.min((side as u64) * (side as u64)))
+        .map(|i| NodeId::new((i / side as u64) as u32, (i % side as u64) as u32))
+        .collect()
+}
+
+/// Expand one traffic class into concrete mesh transfers.
+///
+/// * Unicast classes (`avg_dests == 1`) are round-robined across the used
+///   chiplets in per-chiplet shares.
+/// * Multicast/broadcast classes are chunked and sent to the whole used
+///   set (fractional halo fan-outs are conservatively rounded up to the
+///   nearest whole destination subset).
+pub fn expand_class(class: &TrafficClass, used: &[NodeId]) -> Vec<Transfer> {
+    assert!(!used.is_empty());
+    let base_chunk = if class.streamed { STREAM_CHUNK_BYTES } else { PRELOAD_CHUNK_BYTES };
+    let mut out = Vec::new();
+    if class.avg_dests <= 1.0 + 1e-9 {
+        // Partitioned tensor: each chiplet gets its share as one logical
+        // transfer (the simulator packetizes).
+        let share = class.bytes / used.len() as u64;
+        let mut rem_extra = class.bytes - share * used.len() as u64;
+        for &node in used {
+            let mut bytes = share;
+            if rem_extra > 0 {
+                bytes += 1;
+                rem_extra -= 1;
+            }
+            if bytes > 0 {
+                out.push(Transfer::unicast(bytes, node));
+            }
+        }
+    } else {
+        // Replicated tensor: chunks go to a destination subset of size
+        // ceil(avg_dests) chiplets (== all used chiplets for a broadcast).
+        let fan = (class.avg_dests.ceil() as usize).min(used.len()).max(1);
+        if fan == used.len() {
+            // Full broadcast: every chunk has the identical destination
+            // set, so one logical transfer suffices (the simulator
+            // packetizes; the MAC layer slots it) — keeps schedules
+            // O(chiplets), not O(bytes). See EXPERIMENTS.md §Perf.
+            out.push(Transfer { bytes: class.bytes, dests: used.to_vec() });
+            return out;
+        }
+        // Coalesce so at most MAX_TRANSFERS_PER_CLASS transfers emerge.
+        let chunk = base_chunk.max(class.bytes.div_ceil(MAX_TRANSFERS_PER_CLASS as u64));
+        let mut remaining = class.bytes;
+        let mut offset = 0usize;
+        while remaining > 0 {
+            let c = remaining.min(chunk);
+            remaining -= c;
+            // Rotate the subset start so halo-style partial multicasts
+            // spread over the grid rather than hammering one corner.
+            let dests: Vec<NodeId> = (0..fan).map(|i| used[(offset + i) % used.len()]).collect();
+            offset = (offset + fan) % used.len();
+            out.push(Transfer { bytes: c, dests });
+        }
+    }
+    out
+}
+
+/// Expand a whole partition plan into (preload, stream) transfer lists for
+/// `side x side` mesh with `used` chiplets active.
+pub fn expand_plan(plan: &PartitionPlan, side: u32) -> (Vec<Transfer>, Vec<Transfer>) {
+    let used = used_nodes(side, plan.used_chiplets);
+    let mut preload = Vec::new();
+    let mut stream = Vec::new();
+    for class in &plan.traffic {
+        if class.bytes == 0 {
+            continue;
+        }
+        let ts = expand_class(class, &used);
+        if class.streamed {
+            stream.extend(ts);
+        } else {
+            preload.extend(ts);
+        }
+    }
+    (preload, stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{partition, Strategy, TensorKind};
+    use crate::workload::Layer;
+
+    #[test]
+    fn unicast_conserves_bytes() {
+        let class = TrafficClass { tensor: TensorKind::Weight, bytes: 1000, avg_dests: 1.0, streamed: false };
+        let used = used_nodes(4, 10);
+        let ts = expand_class(&class, &used);
+        let total: u64 = ts.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 1000);
+        // Every transfer is a unicast.
+        assert!(ts.iter().all(|t| t.dests.len() == 1));
+    }
+
+    #[test]
+    fn broadcast_conserves_bytes_and_fans_out() {
+        let class = TrafficClass { tensor: TensorKind::Input, bytes: 300, avg_dests: 16.0, streamed: true };
+        let used = used_nodes(4, 16);
+        let ts = expand_class(&class, &used);
+        let total: u64 = ts.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 300);
+        assert!(ts.iter().all(|t| t.dests.len() == 16));
+        // Full broadcast coalesces to one logical transfer (the sim and
+        // MAC layers packetize it).
+        assert_eq!(ts.len(), 1);
+    }
+
+    #[test]
+    fn halo_fanout_rounds_up() {
+        let class = TrafficClass { tensor: TensorKind::Input, bytes: 128, avg_dests: 1.3, streamed: true };
+        let used = used_nodes(4, 16);
+        let ts = expand_class(&class, &used);
+        assert!(ts.iter().all(|t| t.dests.len() == 2));
+    }
+
+    #[test]
+    fn plan_expansion_covers_all_classes() {
+        let l = Layer::conv("c", 1, 64, 32, 14, 14, 3, 3, 1);
+        let plan = partition::partition(&l, Strategy::KpCp, 16, 1);
+        let (pre, stream) = expand_plan(&plan, 4);
+        let pre_bytes: u64 = pre.iter().map(|t| t.bytes).sum();
+        let stream_bytes: u64 = stream.iter().map(|t| t.bytes).sum();
+        assert_eq!(pre_bytes, l.weight_elems());
+        assert_eq!(stream_bytes, l.input_elems());
+    }
+}

@@ -1,0 +1,223 @@
+//! Intra-chiplet dataflow mapping (substrate S3).
+//!
+//! Each WIENNA chiplet is a small fixed-function accelerator whose PE
+//! array is spatially mapped according to the partitioning strategy
+//! (paper Table 4):
+//!
+//! * **NVDLA-like** (used with KP-CP and NP-CP): weight-stationary, the PE
+//!   array is spatially partitioned over `K x C` (filters x input
+//!   channels) with an adder-tree reduction over the `C` slice.
+//! * **Shidiannao-like** (used with YP-XP): output-stationary, the PE
+//!   array is spatially partitioned over the output plane `Y' x X'`.
+//!
+//! Given a chiplet's sub-layer, the mapping determines how many passes the
+//! array needs and hence the effective PE utilization and compute cycles
+//! (1 MAC/PE/cycle, as in MAESTRO's peak model).
+
+use crate::dataflow::Strategy;
+use crate::workload::{Layer, OpKind};
+
+/// The two chiplet microarchitectures of Table 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChipletArch {
+    /// Weight-stationary `K x C` spatial array (NVDLA [1] style).
+    NvdlaLike,
+    /// Output-stationary `Y x X` spatial array (Shidiannao [9] style).
+    ShidiannaoLike,
+}
+
+impl ChipletArch {
+    /// The paper pairs KP-CP / NP-CP with NVDLA-like chiplets and YP-XP
+    /// with Shidiannao-like chiplets (Table 4).
+    pub fn for_strategy(s: Strategy) -> ChipletArch {
+        match s {
+            Strategy::KpCp | Strategy::NpCp => ChipletArch::NvdlaLike,
+            Strategy::YpXp => ChipletArch::ShidiannaoLike,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChipletArch::NvdlaLike => "NVDLA-like",
+            ChipletArch::ShidiannaoLike => "Shidiannao-like",
+        }
+    }
+}
+
+/// How the 2-D PE array dimensions are chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MapPolicy {
+    /// Pick the divisor pair of the PE count that maximizes utilization
+    /// for the given sub-layer (a flexible-NoC chiplet, MAERI-style).
+    Flexible,
+    /// Fixed array aspect (e.g. NVDLA's native 8x8 MAC cell organisation);
+    /// `dim0 x dim1` must equal the PE count.
+    Fixed { dim0: u64, dim1: u64 },
+}
+
+/// Result of mapping a sub-layer onto one chiplet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntraMapping {
+    pub arch: ChipletArch,
+    /// Spatial array shape actually used (`d0 x d1` PEs).
+    pub d0: u64,
+    pub d1: u64,
+    /// Compute cycles for the chiplet's sub-layer at 1 MAC/PE/cycle.
+    pub cycles: u64,
+    /// Effective PE utilization in steady state (0, 1].
+    pub utilization: f64,
+    /// Minimum local (per-chiplet) buffer bytes for one working set:
+    /// stationary tile + one streaming slice + output slice.
+    pub local_buffer_bytes: u64,
+}
+
+/// All divisor pairs `(d0, d1)` with `d0 * d1 == p`.
+fn divisor_pairs(p: u64) -> Vec<(u64, u64)> {
+    let mut v = Vec::new();
+    let mut d = 1;
+    while d * d <= p {
+        if p % d == 0 {
+            v.push((d, p / d));
+            if d != p / d {
+                v.push((p / d, d));
+            }
+        }
+        d += 1;
+    }
+    v
+}
+
+/// Cycles for a spatial mapping of extents `(e0, e1)` over an array
+/// `(d0, d1)`, times the `inner` sequential loop trip count.
+fn spatial_cycles(e0: u64, e1: u64, d0: u64, d1: u64, inner: u64) -> u64 {
+    e0.div_ceil(d0) * e1.div_ceil(d1) * inner
+}
+
+/// Map `sub` (a per-chiplet sub-layer) onto a chiplet with `pes` PEs.
+pub fn map_layer(sub: &Layer, arch: ChipletArch, pes: u64, policy: MapPolicy, bytes_per_elem: u64) -> IntraMapping {
+    assert!(pes >= 1);
+    let macs = sub.macs();
+
+    // Elementwise layers use the array as a flat SIMD lane regardless of
+    // microarchitecture: one add per element.
+    if sub.op == OpKind::ResidualAdd {
+        let elems = sub.n * sub.c * sub.y * sub.x;
+        let cycles = elems.div_ceil(pes).max(1);
+        return IntraMapping {
+            arch,
+            d0: pes,
+            d1: 1,
+            cycles,
+            utilization: macs as f64 / (cycles as f64 * pes as f64),
+            local_buffer_bytes: 3 * pes * bytes_per_elem,
+        };
+    }
+
+    // Spatial extents by microarchitecture.
+    let (e0, e1) = match arch {
+        ChipletArch::NvdlaLike => (sub.k, sub.c),
+        ChipletArch::ShidiannaoLike => (sub.y_out().max(1), sub.x_out().max(1)),
+    };
+    // Sequential (temporal) loop trip count per spatial pass.
+    let inner = match arch {
+        ChipletArch::NvdlaLike => sub.n * sub.y_out().max(1) * sub.x_out().max(1) * sub.r * sub.s,
+        ChipletArch::ShidiannaoLike => sub.n * sub.k * sub.c * sub.r * sub.s,
+    };
+
+    let candidates: Vec<(u64, u64)> = match policy {
+        MapPolicy::Flexible => divisor_pairs(pes),
+        MapPolicy::Fixed { dim0, dim1 } => {
+            assert_eq!(dim0 * dim1, pes, "fixed array shape must use all PEs");
+            vec![(dim0, dim1)]
+        }
+    };
+    let (d0, d1, cycles) = candidates
+        .into_iter()
+        .map(|(a, b)| (a, b, spatial_cycles(e0, e1, a, b, inner).max(1)))
+        .min_by_key(|&(_, _, c)| c)
+        .expect("at least one divisor pair");
+
+    // Local working set: stationary tile + streamed slice + output slice.
+    let local = match arch {
+        ChipletArch::NvdlaLike => {
+            // Weight-stationary: d0*d1 weights resident per (r,s) position
+            // plus an input row and an output row.
+            (d0 * d1 * sub.r * sub.s + sub.c * sub.x + sub.k * sub.x_out().max(1)) * bytes_per_elem
+        }
+        ChipletArch::ShidiannaoLike => {
+            // Output-stationary: d0*d1 partial sums resident plus the
+            // input halo window and one filter.
+            (d0 * d1 + sub.y * sub.x + sub.k * sub.c * sub.r * sub.s / sub.k.max(1)) * bytes_per_elem
+        }
+    };
+
+    IntraMapping {
+        arch,
+        d0,
+        d1,
+        cycles,
+        utilization: macs as f64 / (cycles as f64 * pes as f64),
+        local_buffer_bytes: local,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Layer;
+
+    #[test]
+    fn arch_pairing_follows_table4() {
+        assert_eq!(ChipletArch::for_strategy(Strategy::KpCp), ChipletArch::NvdlaLike);
+        assert_eq!(ChipletArch::for_strategy(Strategy::NpCp), ChipletArch::NvdlaLike);
+        assert_eq!(ChipletArch::for_strategy(Strategy::YpXp), ChipletArch::ShidiannaoLike);
+    }
+
+    #[test]
+    fn perfect_fit_is_full_utilization() {
+        // K=8, C=8 on 64 PEs: exact 8x8 fit.
+        let sub = Layer::conv("s", 1, 8, 8, 10, 10, 3, 3, 1);
+        let m = map_layer(&sub, ChipletArch::NvdlaLike, 64, MapPolicy::Flexible, 1);
+        assert!((m.utilization - 1.0).abs() < 1e-9, "util {}", m.utilization);
+        assert_eq!(m.cycles, 1 * 8 * 8 * 9); // n*yo*xo*r*s
+    }
+
+    #[test]
+    fn flexible_beats_fixed_on_skewed_layers() {
+        // K=2, C=512: a fixed 8x8 array wastes 6/8 of its K rows.
+        let sub = Layer::conv("s", 1, 2, 512, 9, 9, 3, 3, 1);
+        let flex = map_layer(&sub, ChipletArch::NvdlaLike, 64, MapPolicy::Flexible, 1);
+        let fixed = map_layer(&sub, ChipletArch::NvdlaLike, 64, MapPolicy::Fixed { dim0: 8, dim1: 8 }, 1);
+        assert!(flex.cycles <= fixed.cycles);
+        assert!(flex.utilization > 0.9, "flexible should find 2x32, util {}", flex.utilization);
+        assert!(fixed.utilization < 0.3);
+    }
+
+    #[test]
+    fn shidiannao_maps_output_plane() {
+        let sub = Layer::conv("s", 1, 64, 64, 10, 10, 3, 3, 1); // 8x8 out
+        let m = map_layer(&sub, ChipletArch::ShidiannaoLike, 64, MapPolicy::Flexible, 1);
+        assert_eq!((m.d0, m.d1), (8, 8));
+        assert!((m.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_is_simd() {
+        let sub = Layer::residual("r", 1, 4, 8, 8);
+        let m = map_layer(&sub, ChipletArch::NvdlaLike, 64, MapPolicy::Flexible, 1);
+        assert_eq!(m.cycles, (4 * 8 * 8u64).div_ceil(64));
+    }
+
+    #[test]
+    fn cycles_times_pes_bounds_macs() {
+        // Invariant: cycles * PEs >= MACs (cannot do more than 1 MAC/PE/cyc).
+        for (k, c) in [(1u64, 1u64), (3, 7), (64, 64), (2, 512), (1000, 3)] {
+            let sub = Layer::conv("s", 2, k, c, 12, 12, 3, 3, 1);
+            for arch in [ChipletArch::NvdlaLike, ChipletArch::ShidiannaoLike] {
+                let m = map_layer(&sub, arch, 64, MapPolicy::Flexible, 1);
+                assert!(m.cycles * 64 >= sub.macs(), "{arch:?} k={k} c={c}");
+                assert!(m.utilization <= 1.0 + 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Dataflow substrate (S2, S3): inter-chiplet tensor partitioning
+//! strategies (Fig 2) and intra-chiplet dataflow mapping (NVDLA-like /
+//! Shidiannao-like, Table 4).
+
+pub mod intra;
+pub mod partition;
+pub mod reuse;
+pub mod tiling;
+
+pub use intra::{ChipletArch, IntraMapping, MapPolicy};
+pub use partition::{PartitionPlan, Strategy, TensorKind, TrafficClass};

@@ -1,0 +1,336 @@
+//! Inter-chiplet tensor partitioning strategies (paper Fig 2, substrate S2).
+//!
+//! The paper implements three strategies that leverage parallelism across
+//! three DNN dimensions:
+//!
+//! * **KP-CP** (filter partitioning, Fig 2a): output channels `K` are
+//!   partitioned across chiplets; each chiplet's filters are *unicast* to
+//!   it, while the input activation is *replicated* (broadcast) to every
+//!   used chiplet. Intra-chiplet dataflow partitions `C` across PEs
+//!   (NVDLA-like).
+//! * **NP-CP** (batch partitioning, Fig 2b): the batch `N` is partitioned;
+//!   per-batch inputs are unicast, filters are broadcast.
+//! * **YP-XP** (activation partitioning, Fig 2c): the output activation
+//!   plane `Y x X` is tiled across a 2-D grid of chiplets; filters are
+//!   broadcast, input tiles (with `R - stride` halo rows/columns shared by
+//!   neighbouring chiplets) are distributed with a small multicast factor.
+//!
+//! For each (layer, strategy, chiplet count) this module derives the
+//! *partition plan*: how many chiplets are used, the sub-layer each chiplet
+//! computes, and the distribution traffic broken into classes
+//! (payload bytes from the SRAM, average destinations per byte).
+
+use crate::workload::{Layer, OpKind};
+use std::fmt;
+
+/// The three inter-chiplet partitioning strategies of Fig 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Filter (output-channel) partitioning across chiplets.
+    KpCp,
+    /// Batch partitioning across chiplets.
+    NpCp,
+    /// Output-activation (spatial) partitioning across chiplets.
+    YpXp,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [Strategy::KpCp, Strategy::NpCp, Strategy::YpXp];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::KpCp => "KP-CP",
+            Strategy::NpCp => "NP-CP",
+            Strategy::YpXp => "YP-XP",
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Which tensor a traffic class carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    Input,
+    Weight,
+}
+
+/// One distribution traffic class: a set of transfers sharing payload type
+/// and fan-out.
+///
+/// `bytes` counts *unique* payload bytes read from the global SRAM;
+/// `avg_dests` is the average number of chiplets that must receive each
+/// byte (1.0 for pure unicast, `used_chiplets` for a broadcast, fractional
+/// for halo-overlapped spatial tiles). Total delivered bytes are therefore
+/// `bytes * avg_dests`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficClass {
+    pub tensor: TensorKind,
+    pub bytes: u64,
+    pub avg_dests: f64,
+    /// Whether this class is *preloaded* (must fully arrive before compute
+    /// starts, e.g. stationary weights) or *streamed* (overlaps compute) —
+    /// drives the Fig-6 phase timeline.
+    pub streamed: bool,
+}
+
+impl TrafficClass {
+    /// Bytes delivered across all destination chiplets.
+    pub fn delivered_bytes(&self) -> f64 {
+        self.bytes as f64 * self.avg_dests
+    }
+}
+
+/// Result of applying a [`Strategy`] to a layer on `num_chiplets` chiplets.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub strategy: Strategy,
+    /// Chiplets that receive work (≤ `num_chiplets`).
+    pub used_chiplets: u64,
+    /// The sub-problem a single (worst-case) chiplet computes.
+    pub sub_layer: Layer,
+    /// Distribution traffic classes (SRAM → chiplets).
+    pub traffic: Vec<TrafficClass>,
+    /// Output bytes collected back over the wired NoP.
+    pub collect_bytes: u64,
+}
+
+impl PartitionPlan {
+    /// Average multicast factor of the distribution phase:
+    /// `Σ received bytes / Σ sent bytes` (paper Fig 10).
+    pub fn multicast_factor(&self) -> f64 {
+        let sent: f64 = self.traffic.iter().map(|t| t.bytes as f64).sum();
+        if sent == 0.0 {
+            return 1.0;
+        }
+        let recv: f64 = self.traffic.iter().map(|t| t.delivered_bytes()).sum();
+        recv / sent
+    }
+
+    /// Unique distribution payload in bytes.
+    pub fn sent_bytes(&self) -> u64 {
+        self.traffic.iter().map(|t| t.bytes).sum()
+    }
+}
+
+/// Split `total` across at most `parts` workers; returns
+/// `(workers_used, worst_case_share)`.
+fn split(total: u64, parts: u64) -> (u64, u64) {
+    let used = total.min(parts).max(1);
+    (used, total.div_ceil(used))
+}
+
+/// Build the partition plan for `layer` under `strategy` on a package of
+/// `num_chiplets` chiplets with `bytes_per_elem`-byte tensor elements.
+pub fn partition(layer: &Layer, strategy: Strategy, num_chiplets: u64, bytes_per_elem: u64) -> PartitionPlan {
+    assert!(num_chiplets >= 1, "need at least one chiplet");
+    let bpe = bytes_per_elem;
+    let in_bytes = layer.input_elems() * bpe;
+    let w_bytes = layer.weight_elems() * bpe;
+    let out_bytes = layer.output_elems() * bpe;
+
+    // Residual adds carry no weights: every strategy degenerates to
+    // partitioning the (pair of) input tensors; all traffic is unicast.
+    if layer.op == OpKind::ResidualAdd {
+        let (used, sub) = match strategy {
+            Strategy::KpCp => {
+                let (u, c) = split(layer.c, num_chiplets);
+                (u, Layer { c, k: c, ..layer.clone() })
+            }
+            Strategy::NpCp => {
+                let (u, n) = split(layer.n, num_chiplets);
+                (u, Layer { n, ..layer.clone() })
+            }
+            Strategy::YpXp => {
+                let side = (num_chiplets as f64).sqrt().floor() as u64;
+                let py = layer.y.min(side.max(1));
+                let px = layer.x.min(side.max(1));
+                let sub = Layer { y: layer.y.div_ceil(py), x: layer.x.div_ceil(px), ..layer.clone() };
+                (py * px, sub)
+            }
+        };
+        return PartitionPlan {
+            strategy,
+            used_chiplets: used,
+            sub_layer: sub,
+            traffic: vec![TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: 1.0, streamed: true }],
+            collect_bytes: out_bytes,
+        };
+    }
+
+    match strategy {
+        // Fig 2(a): filters partitioned (unicast, preloaded), inputs
+        // replicated (broadcast, streamed one by one — Fig 6 timeline).
+        Strategy::KpCp => {
+            let (used, k_sub) = split(layer.k, num_chiplets);
+            let sub = Layer { k: k_sub, ..layer.clone() };
+            PartitionPlan {
+                strategy,
+                used_chiplets: used,
+                sub_layer: sub,
+                traffic: vec![
+                    TrafficClass { tensor: TensorKind::Weight, bytes: w_bytes, avg_dests: 1.0, streamed: false },
+                    TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: used as f64, streamed: true },
+                ],
+                collect_bytes: out_bytes,
+            }
+        }
+        // Fig 2(b): batch partitioned (inputs unicast), filters replicated
+        // (broadcast, preloaded — weight-stationary chiplets).
+        Strategy::NpCp => {
+            let (used, n_sub) = split(layer.n, num_chiplets);
+            let sub = Layer { n: n_sub, ..layer.clone() };
+            PartitionPlan {
+                strategy,
+                used_chiplets: used,
+                sub_layer: sub,
+                traffic: vec![
+                    TrafficClass { tensor: TensorKind::Weight, bytes: w_bytes, avg_dests: used as f64, streamed: false },
+                    TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: 1.0, streamed: true },
+                ],
+                collect_bytes: out_bytes,
+            }
+        }
+        // Fig 2(c): output plane tiled over a 2-D chiplet grid; filters
+        // broadcast; input tiles unicast with halo overlap shared between
+        // grid neighbours (fractional multicast).
+        Strategy::YpXp => {
+            let yo = layer.y_out().max(1);
+            let xo = layer.x_out().max(1);
+            let side = (num_chiplets as f64).sqrt().floor().max(1.0) as u64;
+            // Favour a square grid, clipped by available parallelism.
+            let py = yo.min(side);
+            let px = xo.min(num_chiplets / py.max(1)).max(1);
+            let used = py * px;
+            let yo_sub = yo.div_ceil(py);
+            let xo_sub = xo.div_ceil(px);
+            // Input tile each chiplet needs (with halo).
+            let (y_sub, x_sub) = match layer.op {
+                OpKind::UpConv => (layer.y.div_ceil(py), layer.x.div_ceil(px)),
+                _ => (
+                    (yo_sub - 1) * layer.stride + layer.r,
+                    (xo_sub - 1) * layer.stride + layer.s,
+                ),
+            };
+            let sub = Layer { y: y_sub, x: x_sub, ..layer.clone() };
+            // Delivered input bytes = Σ per-chiplet tiles; unique bytes =
+            // the full input tensor. Their ratio is the halo multicast
+            // factor (≥ 1).
+            let delivered_in = (layer.n * layer.c * y_sub * x_sub * used) as f64 * bpe as f64;
+            let avg_dests_in = if in_bytes > 0 { (delivered_in / in_bytes as f64).max(1.0) } else { 1.0 };
+            PartitionPlan {
+                strategy,
+                used_chiplets: used,
+                sub_layer: sub,
+                traffic: vec![
+                    TrafficClass { tensor: TensorKind::Weight, bytes: w_bytes, avg_dests: used as f64, streamed: false },
+                    TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: avg_dests_in, streamed: true },
+                ],
+                collect_bytes: out_bytes,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Layer;
+
+    fn conv() -> Layer {
+        // Low-res-ish conv: K=C=512, 7x7 padded to 9x9.
+        Layer::conv("c", 1, 512, 512, 9, 9, 3, 3, 1)
+    }
+
+    #[test]
+    fn kpcp_partitions_filters() {
+        let p = partition(&conv(), Strategy::KpCp, 256, 1);
+        assert_eq!(p.used_chiplets, 256);
+        assert_eq!(p.sub_layer.k, 2);
+        // Weights unicast once, inputs broadcast to all used chiplets.
+        let w = &p.traffic[0];
+        assert_eq!(w.tensor, TensorKind::Weight);
+        assert_eq!(w.bytes, 512 * 512 * 9);
+        assert_eq!(w.avg_dests, 1.0);
+        let i = &p.traffic[1];
+        assert_eq!(i.avg_dests, 256.0);
+        assert!(i.streamed && !w.streamed);
+    }
+
+    #[test]
+    fn npcp_limited_by_batch() {
+        let l = Layer { n: 16, ..conv() };
+        let p = partition(&l, Strategy::NpCp, 256, 1);
+        assert_eq!(p.used_chiplets, 16);
+        assert_eq!(p.sub_layer.n, 1);
+        // Weights broadcast to the 16 used chiplets only.
+        assert_eq!(p.traffic[0].avg_dests, 16.0);
+    }
+
+    #[test]
+    fn ypxp_grid_and_halo() {
+        // High-res conv: 64ch, 58x58 padded input, 56x56 output.
+        let l = Layer::conv("h", 1, 64, 64, 58, 58, 3, 3, 1);
+        let p = partition(&l, Strategy::YpXp, 256, 1);
+        assert_eq!(p.used_chiplets, 256); // 16x16 grid over 56x56.
+        // Sub-tile: ceil(56/16)=4 output rows -> 6 input rows with halo.
+        assert_eq!(p.sub_layer.y, (4 - 1) + 3);
+        let i = &p.traffic[1];
+        assert!(i.avg_dests > 1.0, "halo must create multicast > 1, got {}", i.avg_dests);
+        assert!(i.avg_dests < 4.0, "halo multicast should be small, got {}", i.avg_dests);
+        // Weights broadcast to all used chiplets.
+        assert_eq!(p.traffic[0].avg_dests, 256.0);
+    }
+
+    #[test]
+    fn multicast_factor_matches_hand_calc() {
+        let p = partition(&conv(), Strategy::KpCp, 256, 1);
+        let w = (512 * 512 * 9) as f64;
+        let i = (512 * 9 * 9) as f64;
+        let expect = (w + i * 256.0) / (w + i);
+        assert!((p.multicast_factor() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_all_unicast() {
+        let l = Layer::residual("r", 8, 256, 56, 56);
+        for s in Strategy::ALL {
+            let p = partition(&l, s, 256, 1);
+            assert_eq!(p.multicast_factor(), 1.0, "{s}");
+            assert_eq!(p.sent_bytes(), 2 * 8 * 256 * 56 * 56);
+        }
+    }
+
+    #[test]
+    fn fc_has_no_spatial_parallelism() {
+        let l = Layer::fc("fc", 4, 1000, 2048);
+        let p = partition(&l, Strategy::YpXp, 256, 1);
+        // Output plane is 1x1: a single chiplet.
+        assert_eq!(p.used_chiplets, 1);
+        let p = partition(&l, Strategy::KpCp, 256, 1);
+        assert_eq!(p.used_chiplets, 256);
+    }
+
+    #[test]
+    fn conservation_delivered_ge_sent() {
+        for s in Strategy::ALL {
+            let p = partition(&conv(), s, 64, 2);
+            for t in &p.traffic {
+                assert!(t.delivered_bytes() >= t.bytes as f64 - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn single_chiplet_degenerates_to_unicast() {
+        for s in Strategy::ALL {
+            let p = partition(&conv(), s, 1, 1);
+            assert_eq!(p.used_chiplets, 1);
+            assert!((p.multicast_factor() - 1.0).abs() < 1e-9, "{s}");
+        }
+    }
+}

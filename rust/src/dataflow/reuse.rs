@@ -1,0 +1,130 @@
+//! Algorithmic data-reuse analysis (MAESTRO's data-centric metrics [16]).
+//!
+//! For each tensor of a layer, the *algorithmic reuse* is how many MACs
+//! touch each element — the upper bound any dataflow can exploit, and the
+//! quantity partitioning strategies trade against each other (the paper's
+//! §2: "DNNs exhibit plenty of data reuse ... exploited via custom memory
+//! hierarchies"). The multicast factor of Fig 10 is exactly the fraction
+//! of *spatial* (inter-chiplet) reuse a strategy turns into broadcast.
+
+use crate::dataflow::{partition, Strategy, TensorKind};
+use crate::workload::{Layer, OpKind};
+
+/// Algorithmic (maximum) reuse per tensor element.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlgorithmicReuse {
+    /// MACs per input-activation element: `K · R · S / stride²`.
+    pub input: f64,
+    /// MACs per weight element: `N · Y' · X'`.
+    pub weight: f64,
+    /// MACs per output element (accumulation depth): `C · R · S`.
+    pub output: f64,
+}
+
+/// Compute the algorithmic reuse of a layer.
+pub fn algorithmic(layer: &Layer) -> AlgorithmicReuse {
+    if layer.op == OpKind::ResidualAdd {
+        return AlgorithmicReuse { input: 1.0, weight: 0.0, output: 1.0 };
+    }
+    let macs = layer.macs() as f64;
+    AlgorithmicReuse {
+        input: macs / layer.input_elems() as f64,
+        weight: if layer.weight_elems() == 0 { 0.0 } else { macs / layer.weight_elems() as f64 },
+        output: macs / layer.output_elems() as f64,
+    }
+}
+
+/// How much of each tensor's reuse a strategy realizes *spatially*
+/// (across chiplets, via multicast) on a package of `num_chiplets`.
+#[derive(Debug, Clone)]
+pub struct SpatialReuse {
+    pub strategy: Strategy,
+    /// Multicast fan-out achieved for the input tensor.
+    pub input_spatial: f64,
+    /// Multicast fan-out achieved for the weight tensor.
+    pub weight_spatial: f64,
+    /// Fraction of the layer's algorithmic input reuse exploited
+    /// spatially (0..=1).
+    pub input_fraction: f64,
+    pub weight_fraction: f64,
+}
+
+/// Analyze the spatial reuse a strategy extracts.
+pub fn spatial(layer: &Layer, strategy: Strategy, num_chiplets: u64) -> SpatialReuse {
+    let plan = partition::partition(layer, strategy, num_chiplets, 1);
+    let alg = algorithmic(layer);
+    let mut input_spatial = 1.0;
+    let mut weight_spatial = 1.0;
+    for t in &plan.traffic {
+        match t.tensor {
+            TensorKind::Input => input_spatial = t.avg_dests,
+            TensorKind::Weight => weight_spatial = t.avg_dests,
+        }
+    }
+    SpatialReuse {
+        strategy,
+        input_spatial,
+        weight_spatial,
+        input_fraction: if alg.input > 0.0 { (input_spatial / alg.input).min(1.0) } else { 0.0 },
+        weight_fraction: if alg.weight > 0.0 { (weight_spatial / alg.weight).min(1.0) } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{conv_padded, Layer};
+
+    #[test]
+    fn conv_reuse_formulas() {
+        let l = Layer::conv("c", 1, 64, 32, 12, 12, 3, 3, 1);
+        let r = algorithmic(&l);
+        // input reuse = K*R*S scaled by the output/input plane ratio.
+        let macs = l.macs() as f64;
+        assert!((r.input - macs / l.input_elems() as f64).abs() < 1e-9);
+        assert!((r.output - (32.0 * 9.0)).abs() < 1e-9); // C*R*S
+        assert!((r.weight - (10.0 * 10.0)).abs() < 1e-9); // N*Yo*Xo
+    }
+
+    #[test]
+    fn fc_weight_reuse_is_batch() {
+        let l = Layer::fc("fc", 8, 100, 200);
+        let r = algorithmic(&l);
+        assert!((r.weight - 8.0).abs() < 1e-9);
+        assert!((r.input - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_has_no_reuse() {
+        let r = algorithmic(&Layer::residual("r", 1, 8, 4, 4));
+        assert_eq!(r.weight, 0.0);
+        assert_eq!(r.input, 1.0);
+    }
+
+    #[test]
+    fn kpcp_spatializes_input_reuse() {
+        let l = conv_padded("c", 1, 512, 256, 14, 14, 3, 3, 1);
+        let s = spatial(&l, Strategy::KpCp, 256);
+        assert!(s.input_spatial > 100.0, "broadcast fan-out {}", s.input_spatial);
+        assert!((s.weight_spatial - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn npcp_spatializes_weight_reuse() {
+        let l = conv_padded("c", 64, 128, 64, 14, 14, 3, 3, 1);
+        let s = spatial(&l, Strategy::NpCp, 256);
+        assert!(s.weight_spatial > 10.0);
+        assert!((s.input_spatial - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spatial_reuse_never_exceeds_algorithmic() {
+        for strat in Strategy::ALL {
+            let l = conv_padded("c", 4, 64, 32, 28, 28, 3, 3, 1);
+            let alg = algorithmic(&l);
+            let s = spatial(&l, strat, 256);
+            assert!(s.input_spatial <= alg.input.max(1.0) * 256.0);
+            assert!(s.input_fraction <= 1.0 && s.weight_fraction <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Mapping-space exploration (mRNA [28] / MAESTRO [16]-style): exhaustive
+//! search over intra-chiplet spatial array shapes *and* temporal loop
+//! orders for one chiplet's sub-layer.
+//!
+//! The main cost engine uses the closed-form `intra::map_layer`; this
+//! explorer exists for the design-space studies the paper cites as the
+//! surrounding literature — it enumerates candidate mappings, scores them
+//! with the same 1 MAC/PE/cycle model plus a local-buffer constraint, and
+//! reports the Pareto set (cycles vs buffer bytes).
+
+use crate::dataflow::intra::{map_layer, ChipletArch, IntraMapping, MapPolicy};
+use crate::workload::Layer;
+
+/// Temporal loop orders considered for the innermost streaming dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopOrder {
+    /// Weight-stationary: outputs stream, weights resident.
+    WeightStationary,
+    /// Output-stationary: weights stream, partial sums resident.
+    OutputStationary,
+    /// Input-stationary: inputs resident, weights and outputs stream.
+    InputStationary,
+}
+
+impl LoopOrder {
+    pub const ALL: [LoopOrder; 3] = [LoopOrder::WeightStationary, LoopOrder::OutputStationary, LoopOrder::InputStationary];
+
+    /// Stationary-tile bytes for a sub-layer under this order with a
+    /// `d0 x d1` array (what must stay resident per pass).
+    fn stationary_bytes(&self, sub: &Layer, d0: u64, d1: u64, bpe: u64) -> u64 {
+        match self {
+            LoopOrder::WeightStationary => d0 * d1 * sub.r * sub.s * bpe,
+            LoopOrder::OutputStationary => d0 * d1 * 4, // f32 partial sums
+            LoopOrder::InputStationary => sub.c.min(d1) * sub.y * sub.x * bpe / sub.c.max(1).min(d1).max(1),
+        }
+    }
+}
+
+/// One explored mapping candidate.
+#[derive(Debug, Clone)]
+pub struct MappingCandidate {
+    pub arch: ChipletArch,
+    pub order: LoopOrder,
+    pub d0: u64,
+    pub d1: u64,
+    pub cycles: u64,
+    pub utilization: f64,
+    pub buffer_bytes: u64,
+}
+
+/// Exhaustively enumerate mappings of `sub` on a `pes`-PE chiplet.
+pub fn enumerate(sub: &Layer, pes: u64, bpe: u64) -> Vec<MappingCandidate> {
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d <= pes {
+        if pes % d == 0 {
+            let (d0, d1) = (d, pes / d);
+            for arch in [ChipletArch::NvdlaLike, ChipletArch::ShidiannaoLike] {
+                let m: IntraMapping = map_layer(sub, arch, pes, MapPolicy::Fixed { dim0: d0, dim1: d1 }, bpe);
+                for order in LoopOrder::ALL {
+                    let stationary = order.stationary_bytes(sub, d0, d1, bpe);
+                    // Streaming slices: one input row + one output row.
+                    let stream = (sub.c * sub.x + sub.k * sub.x) * bpe;
+                    out.push(MappingCandidate {
+                        arch,
+                        order,
+                        d0,
+                        d1,
+                        cycles: m.cycles,
+                        utilization: m.utilization,
+                        buffer_bytes: stationary + stream,
+                    });
+                }
+            }
+        }
+        d += 1;
+    }
+    out
+}
+
+/// The Pareto frontier of (cycles, buffer_bytes): no candidate dominates
+/// another on both axes.
+pub fn pareto(cands: &[MappingCandidate]) -> Vec<MappingCandidate> {
+    let mut front: Vec<MappingCandidate> = Vec::new();
+    for c in cands {
+        if front.iter().any(|f| f.cycles <= c.cycles && f.buffer_bytes <= c.buffer_bytes && (f.cycles < c.cycles || f.buffer_bytes < c.buffer_bytes)) {
+            continue;
+        }
+        front.retain(|f| !(c.cycles <= f.cycles && c.buffer_bytes <= f.buffer_bytes && (c.cycles < f.cycles || c.buffer_bytes < f.buffer_bytes)));
+        front.push(c.clone());
+    }
+    front.sort_by_key(|c| c.cycles);
+    front
+}
+
+/// Best mapping under a buffer budget (the constrained pick a real
+/// chiplet would ship with).
+pub fn best_under_budget(cands: &[MappingCandidate], budget_bytes: u64) -> Option<MappingCandidate> {
+    cands
+        .iter()
+        .filter(|c| c.buffer_bytes <= budget_bytes)
+        .min_by_key(|c| c.cycles)
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Layer;
+
+    fn sub() -> Layer {
+        Layer::conv("s", 1, 8, 16, 12, 12, 3, 3, 1)
+    }
+
+    #[test]
+    fn enumeration_covers_all_shapes_orders() {
+        let cands = enumerate(&sub(), 64, 1);
+        // 7 divisor splits x 2 archs x 3 orders.
+        assert_eq!(cands.len(), 7 * 2 * 3);
+    }
+
+    #[test]
+    fn pareto_is_nondominated_and_sorted() {
+        let cands = enumerate(&sub(), 64, 1);
+        let front = pareto(&cands);
+        assert!(!front.is_empty());
+        for a in &front {
+            for b in &front {
+                let dominates = a.cycles <= b.cycles && a.buffer_bytes <= b.buffer_bytes && (a.cycles < b.cycles || a.buffer_bytes < b.buffer_bytes);
+                assert!(!dominates, "{a:?} dominates {b:?}");
+            }
+        }
+        assert!(front.windows(2).all(|w| w[0].cycles <= w[1].cycles));
+    }
+
+    #[test]
+    fn best_under_budget_respects_constraint() {
+        let cands = enumerate(&sub(), 64, 1);
+        let tight = best_under_budget(&cands, 600);
+        if let Some(c) = &tight {
+            assert!(c.buffer_bytes <= 600);
+        }
+        let loose = best_under_budget(&cands, u64::MAX).unwrap();
+        if let Some(t) = tight {
+            assert!(loose.cycles <= t.cycles);
+        }
+    }
+
+    #[test]
+    fn flexible_policy_matches_best_enumerated_shape() {
+        // The closed-form mapper must find the same optimum cycles as the
+        // exhaustive search over array shapes (same arch).
+        let cands = enumerate(&sub(), 64, 1);
+        let best_nvdla = cands
+            .iter()
+            .filter(|c| c.arch == ChipletArch::NvdlaLike)
+            .map(|c| c.cycles)
+            .min()
+            .unwrap();
+        let flex = map_layer(&sub(), ChipletArch::NvdlaLike, 64, MapPolicy::Flexible, 1);
+        assert_eq!(flex.cycles, best_nvdla);
+    }
+
+    #[test]
+    fn impossible_budget_returns_none() {
+        let cands = enumerate(&sub(), 64, 1);
+        assert!(best_under_budget(&cands, 1).is_none());
+    }
+}

@@ -1,0 +1,151 @@
+//! WIENNA area/power breakdown (paper Table 3, substrate S9).
+//!
+//! Component constants follow the paper's sources: PE array and SRAM
+//! numbers are Eyeriss-derived [6] at 65-nm CMOS; the wireless TX/RX are
+//! produced by the Fig-1 transceiver fit at the design bandwidth and
+//! 1e-9 BER; the collection-NoP router is a Simba-class mesh router.
+
+use crate::config::{SystemConfig, CLOCK_HZ};
+use crate::nop::transceiver::{required_gbps, Transceiver};
+
+/// Eyeriss-derived per-PE constants at 65 nm (PE + its slice of local
+/// memory). Chosen so that 64 PEs + local memory ≈ 5 mm² / 90 mW as in
+/// Table 3.
+pub const PE_AREA_MM2: f64 = 5.0 / 64.0;
+pub const PE_POWER_MW: f64 = 90.0 / 64.0;
+
+/// Global SRAM at 65 nm: 51 mm² and 10 W for 13 MiB (Table 3).
+pub const SRAM_AREA_MM2_PER_MIB: f64 = 51.0 / 13.0;
+pub const SRAM_POWER_MW_PER_MIB: f64 = 10000.0 / 13.0;
+
+/// Collection-NoP router per chiplet (Table 3).
+pub const ROUTER_AREA_MM2: f64 = 0.43;
+pub const ROUTER_POWER_MW: f64 = 170.0;
+
+/// One component row of the breakdown.
+#[derive(Debug, Clone)]
+pub struct ComponentBudget {
+    pub name: String,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    /// Number of instances aggregated into this row.
+    pub count: u64,
+}
+
+/// Full Table-3-style breakdown.
+#[derive(Debug, Clone)]
+pub struct AreaPowerBreakdown {
+    pub components: Vec<ComponentBudget>,
+}
+
+impl AreaPowerBreakdown {
+    /// Build the breakdown for a system configuration with the given
+    /// wireless distribution bandwidth (bytes/cycle). RX datarate equals
+    /// the air rate; the single TX must sustain the same rate.
+    pub fn for_system(sys: &SystemConfig, wireless_bw_bytes_per_cycle: f64, ber: f64) -> Self {
+        let trx = Transceiver::default();
+        let gbps = required_gbps(wireless_bw_bytes_per_cycle, CLOCK_HZ);
+        // An RX is roughly half a transceiver; the TX needs more gain
+        // (it drives the whole package) — Table 3 charges it 2x the RX
+        // area and ~2x power.
+        let rx_area = trx.area_mm2(gbps) * 0.55;
+        let rx_power = trx.power_mw(gbps, ber) * 0.5;
+        let tx_area = rx_area * 2.0;
+        let tx_power = rx_power * 1.85;
+
+        let nc = sys.num_chiplets;
+        let pes = sys.pes_per_chiplet;
+        let sram_mib = sys.global_sram_bytes as f64 / (1024.0 * 1024.0);
+
+        AreaPowerBreakdown {
+            components: vec![
+                ComponentBudget {
+                    name: format!("PEs ({pes}x) + Mem"),
+                    area_mm2: PE_AREA_MM2 * pes as f64 * nc as f64,
+                    power_mw: PE_POWER_MW * pes as f64 * nc as f64,
+                    count: nc,
+                },
+                ComponentBudget {
+                    name: "Wireless RX".into(),
+                    area_mm2: rx_area * nc as f64,
+                    power_mw: rx_power * nc as f64,
+                    count: nc,
+                },
+                ComponentBudget {
+                    name: "Collection NoP Router".into(),
+                    area_mm2: ROUTER_AREA_MM2 * nc as f64,
+                    power_mw: ROUTER_POWER_MW * nc as f64,
+                    count: nc,
+                },
+                ComponentBudget {
+                    name: "Global SRAM".into(),
+                    area_mm2: SRAM_AREA_MM2_PER_MIB * sram_mib,
+                    power_mw: SRAM_POWER_MW_PER_MIB * sram_mib,
+                    count: 1,
+                },
+                ComponentBudget { name: "Wireless TX".into(), area_mm2: tx_area, power_mw: tx_power, count: 1 },
+            ],
+        }
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.components.iter().map(|c| c.area_mm2).sum()
+    }
+
+    pub fn total_power_mw(&self) -> f64 {
+        self.components.iter().map(|c| c.power_mw).sum()
+    }
+
+    fn find(&self, name: &str) -> &ComponentBudget {
+        self.components.iter().find(|c| c.name.contains(name)).unwrap()
+    }
+
+    /// Wireless RX share of one chiplet's area (paper: 16%).
+    pub fn rx_area_fraction_of_chiplet(&self) -> f64 {
+        let rx = self.find("Wireless RX");
+        let pe = self.find("PEs");
+        let router = self.find("Router");
+        rx.area_mm2 / (rx.area_mm2 + pe.area_mm2 + router.area_mm2)
+    }
+
+    /// Wireless RX share of one chiplet's power (paper: 25%).
+    pub fn rx_power_fraction_of_chiplet(&self) -> f64 {
+        let rx = self.find("Wireless RX");
+        let pe = self.find("PEs");
+        let router = self.find("Router");
+        rx.power_mw / (rx.power_mw + pe.power_mw + router.power_mw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_near_table3() {
+        let b = AreaPowerBreakdown::for_system(&SystemConfig::default(), 16.0, 1e-9);
+        // Table 3: total 1699 mm², 99.8 W. Allow modest slack — the
+        // TRX sub-model is a fit, not a lookup.
+        let area = b.total_area_mm2();
+        let power = b.total_power_mw();
+        assert!(area > 1400.0 && area < 2000.0, "area {area}");
+        assert!(power > 80_000.0 && power < 120_000.0, "power {power}");
+    }
+
+    #[test]
+    fn rx_fractions_near_paper() {
+        let b = AreaPowerBreakdown::for_system(&SystemConfig::default(), 16.0, 1e-9);
+        let fa = b.rx_area_fraction_of_chiplet();
+        let fp = b.rx_power_fraction_of_chiplet();
+        assert!(fa > 0.05 && fa < 0.30, "area fraction {fa}");
+        assert!(fp > 0.10 && fp < 0.40, "power fraction {fp}");
+    }
+
+    #[test]
+    fn sram_dominates_memory_chiplet() {
+        let b = AreaPowerBreakdown::for_system(&SystemConfig::default(), 16.0, 1e-9);
+        let sram = b.components.iter().find(|c| c.name == "Global SRAM").unwrap();
+        let tx = b.components.iter().find(|c| c.name == "Wireless TX").unwrap();
+        assert!(sram.area_mm2 > 10.0 * tx.area_mm2);
+    }
+}

@@ -1,0 +1,10 @@
+//! Energy and area models (substrate S9): the Table-3 component library
+//! and the Fig-9 distribution-energy aggregation.
+
+pub mod area;
+pub mod distribution;
+pub mod system;
+
+pub use area::{AreaPowerBreakdown, ComponentBudget};
+pub use distribution::{model_distribution_energy, EnergyComparison};
+pub use system::{system_energy, EnergyConstants, SystemEnergy};

@@ -1,0 +1,50 @@
+//! # WIENNA — Wireless-Enabled 2.5D DNN Accelerator, reproduced
+//!
+//! Reproduction of *"Dataflow-Architecture Co-Design for 2.5D DNN
+//! Accelerators using Wireless Network-on-Package"* (Guirado, Kwon,
+//! Abadal, Alarcón, Krishna; 2020).
+//!
+//! The crate provides:
+//!
+//! * [`workload`] — DNN layer descriptors, Table-1 layer typing, and the
+//!   ResNet-50 / UNet evaluation networks;
+//! * [`dataflow`] — the three inter-chiplet partitioning strategies
+//!   (KP-CP, NP-CP, YP-XP; Fig 2) and the NVDLA-like / Shidiannao-like
+//!   intra-chiplet dataflow mappings;
+//! * [`nop`] — interconnect technology models (Table 2), the wireless
+//!   transceiver scaling fit (Fig 1), analytical mesh-interposer and
+//!   wireless NoP models, and a cycle-level mesh simulator;
+//! * [`cost`] — the MAESTRO-like analytical cost model driving every
+//!   figure of the evaluation;
+//! * [`energy`] — the Table-3 area/power breakdown and Fig-9 distribution
+//!   energy comparison;
+//! * [`coordinator`] — the WIENNA system layer: adaptive per-layer
+//!   strategy selection, distribution/collection scheduling, and dispatch
+//!   of real tile compute onto the PJRT runtime;
+//! * [`runtime`] — loading and executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) via the XLA PJRT CPU client;
+//! * [`report`] — ASCII/CSV renderers used by the benchmark harnesses.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use wienna::config::{DesignPoint, SystemConfig};
+//! use wienna::cost::{evaluate_model, CostEngine};
+//! use wienna::workload::resnet50::resnet50;
+//!
+//! let sys = SystemConfig::default(); // 256 chiplets x 64 PEs (Table 4)
+//! let engine = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+//! let cost = evaluate_model(&engine, &resnet50(16), None); // adaptive
+//! println!("{:.0} MACs/cycle", cost.macs_per_cycle);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dataflow;
+pub mod energy;
+pub mod nop;
+pub mod report;
+pub mod runtime;
+pub mod testutil;
+pub mod workload;

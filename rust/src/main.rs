@@ -1,0 +1,307 @@
+//! `wienna` — CLI for the WIENNA 2.5D accelerator reproduction.
+//!
+//! Usage:
+//! ```text
+//! wienna simulate  [--workload resnet50|unet|tiny] [--design interposer-c|interposer-a|wienna-c|wienna-a]
+//!                  [--strategy kp-cp|np-cp|yp-xp|adaptive] [--batch N] [--chiplets N] [--verbose]
+//! wienna sweep     [--workload ...] [--batch N]
+//! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
+//! wienna sim-validate [--chiplets N]
+//! wienna breakdown [--chiplets N] [--wireless-bw B]
+//! ```
+//!
+//! (The CLI is hand-rolled: the build environment is offline and `clap`
+//! is not in the vendored crate set.)
+
+use std::collections::HashMap;
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::coordinator::collective::simulate_distribution;
+use wienna::coordinator::exec::Tensor;
+use wienna::coordinator::{Coordinator, PackageExecutor, StrategyPolicy};
+use wienna::cost::{evaluate_model, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::energy::AreaPowerBreakdown;
+use wienna::report::Table;
+use wienna::runtime::ExecutableCache;
+use wienna::workload::{resnet50::resnet50, tiny::tiny_cnn, unet::unet, Model};
+
+const USAGE: &str = "usage: wienna <simulate|sweep|e2e|sim-validate|breakdown|report> [--flag value ...]
+  simulate      cost-model run of a workload on one design point
+  sweep         Fig-8-style cluster-size sweep (fixed 16384 PEs)
+  e2e           real-numerics inference through the PJRT artifacts
+  sim-validate  analytical mesh model vs cycle-level simulator
+  breakdown     Table-3 area/power breakdown
+  report        condensed Fig-7/Fig-9 evaluation of one workload
+common flags: --workload resnet50|unet|tiny|mlp|rnn|<file>.trace
+              --design interposer-c|interposer-a|wienna-c|wienna-a
+              --strategy kp-cp|np-cp|yp-xp|adaptive  --batch N  --chiplets N  --verbose
+              --artifacts DIR  --wireless-bw B";
+
+/// Parsed flags: `--key value` pairs plus bare `--switch`es.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Self> {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("unexpected argument '{a}'\n{USAGE}"))?;
+            if key == "verbose" {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                m.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Flags(m))
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad number '{v}'")),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad number '{v}'")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.0.contains_key(key)
+    }
+}
+
+fn parse_workload(s: &str, batch: u64) -> anyhow::Result<Model> {
+    Ok(match s {
+        "resnet50" => resnet50(batch),
+        "unet" => unet(batch),
+        "tiny" => tiny_cnn(batch),
+        "mlp" => wienna::workload::mlp::mlp(batch, 784, 4096, 4, 1000),
+        "rnn" => wienna::workload::mlp::rnn_unrolled(batch, 1024, 16),
+        path if path.ends_with(".trace") => wienna::workload::trace::load(std::path::Path::new(path))?,
+        _ => anyhow::bail!("unknown workload '{s}' (resnet50|unet|tiny|mlp|rnn|<file>.trace)"),
+    })
+}
+
+fn parse_design(s: &str) -> anyhow::Result<DesignPoint> {
+    Ok(match s {
+        "interposer-c" => DesignPoint::INTERPOSER_C,
+        "interposer-a" => DesignPoint::INTERPOSER_A,
+        "wienna-c" => DesignPoint::WIENNA_C,
+        "wienna-a" => DesignPoint::WIENNA_A,
+        _ => anyhow::bail!("unknown design point '{s}'"),
+    })
+}
+
+fn parse_policy(s: &str) -> anyhow::Result<StrategyPolicy> {
+    Ok(match s {
+        "kp-cp" => StrategyPolicy::Fixed(Strategy::KpCp),
+        "np-cp" => StrategyPolicy::Fixed(Strategy::NpCp),
+        "yp-xp" => StrategyPolicy::Fixed(Strategy::YpXp),
+        "adaptive" => StrategyPolicy::Adaptive,
+        _ => anyhow::bail!("unknown strategy '{s}'"),
+    })
+}
+
+fn cmd_simulate(f: &Flags) -> anyhow::Result<()> {
+    let sys = SystemConfig { num_chiplets: f.u64("chiplets", 256)?, ..Default::default() };
+    let model = parse_workload(&f.str("workload", "resnet50"), f.u64("batch", 64)?)?;
+    let coord = Coordinator::new(sys, parse_design(&f.str("design", "wienna-c"))?, parse_policy(&f.str("strategy", "adaptive"))?);
+    let (schedules, sum) = coord.run_model(&model);
+    if f.flag("verbose") {
+        let mut t = Table::new(
+            &format!("{} on {} ({})", model.name, sum.design_point, sum.policy),
+            &["layer", "type", "strategy", "chiplets", "latency(cyc)", "MACs/cyc", "bottleneck"],
+        );
+        for s in &schedules {
+            let c = &s.selection.cost;
+            t.row(vec![
+                c.layer_name.clone(),
+                c.layer_type.label().into(),
+                c.strategy.label().into(),
+                c.used_chiplets.to_string(),
+                format!("{:.0}", c.latency),
+                format!("{:.0}", c.macs_per_cycle),
+                c.bottleneck().label().into(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "{} | {} | {} | {:.0} MACs/cyc | {:.3} ms | {:.3} mJ dist-energy",
+        sum.model_name, sum.design_point, sum.policy, sum.macs_per_cycle, sum.latency_ms, sum.dist_energy_mj
+    );
+    Ok(())
+}
+
+fn cmd_sweep(f: &Flags) -> anyhow::Result<()> {
+    let model = parse_workload(&f.str("workload", "resnet50"), f.u64("batch", 64)?)?;
+    let mut t = Table::new(&format!("Fig-8 style sweep: {}", model.name), &["chiplets", "PEs/chiplet", "KP-CP", "NP-CP", "YP-XP"]);
+    for nc in [32u64, 64, 128, 256, 512, 1024] {
+        let sys = SystemConfig::with_chiplets(nc);
+        let e = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+        let row: Vec<String> = Strategy::ALL
+            .iter()
+            .map(|&s| format!("{:.0}", evaluate_model(&e, &model, Some(s)).macs_per_cycle))
+            .collect();
+        t.row(vec![nc.to_string(), sys.pes_per_chiplet.to_string(), row[0].clone(), row[1].clone(), row[2].clone()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_e2e(f: &Flags) -> anyhow::Result<()> {
+    let sys = SystemConfig { num_chiplets: f.u64("chiplets", 16)?, ..Default::default() };
+    let batch = f.u64("batch", 1)?;
+    let artifacts = f.str("artifacts", "artifacts");
+    let cache = std::sync::Arc::new(ExecutableCache::new(std::path::Path::new(&artifacts))?);
+    println!("platform: {} | artifacts: {}", cache.platform(), cache.specs().len());
+    cache.warm_up()?;
+    let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, parse_policy(&f.str("strategy", "adaptive"))?);
+    let mut exec = PackageExecutor::new(coord, cache);
+    let model = tiny_cnn(batch);
+    let input = Tensor::from_fn(batch as usize, 16, 32, 32, |n, c, y, x| {
+        ((n * 7 + c * 5 + y * 3 + x) % 17) as f32 * 0.05 - 0.4
+    });
+    let report = exec.run_model(&model, &input)?;
+    for l in &report.layers {
+        println!(
+            "  {:<12} {:<6} tiles={:<4} chiplets={:<3} model-cycles={:<10.0} wall={:.0}us",
+            l.layer_name, l.strategy, l.tiles_dispatched, l.chiplets_used, l.model_cycles, l.wall_us
+        );
+    }
+    println!(
+        "e2e: {} | max|err| = {:.3e} | {} outputs | {:.1} ms wall | {:.0} model cycles",
+        report.model_name, report.max_abs_err, report.output_len, report.total_wall_ms, report.total_model_cycles
+    );
+    anyhow::ensure!(report.max_abs_err < 1e-3, "numerics mismatch vs oracle");
+    println!("NUMERICS OK (XLA path == naive oracle)");
+    Ok(())
+}
+
+fn cmd_sim_validate(f: &Flags) -> anyhow::Result<()> {
+    let chiplets = f.u64("chiplets", 64)?;
+    let sys = SystemConfig { num_chiplets: chiplets, ..Default::default() };
+    let side = sys.mesh_side() as u32;
+    let coord = Coordinator::new(sys, DesignPoint::INTERPOSER_A, StrategyPolicy::Adaptive);
+    let model = resnet50(8);
+    let mut t = Table::new(
+        &format!("analytical vs cycle-level mesh ({chiplets} chiplets)"),
+        &["layer", "analytic(cyc)", "sim(cyc)", "ratio"],
+    );
+    for l in model.layers.iter().take(12) {
+        let s = coord.schedule_layer(l);
+        let analytic = s.selection.cost.timeline.preload + s.selection.cost.timeline.stream;
+        let sim = simulate_distribution(&s, side, DesignPoint::INTERPOSER_A.distribution_bw());
+        t.row(vec![
+            l.name.clone(),
+            format!("{analytic:.0}"),
+            format!("{:.0}", sim.makespan),
+            format!("{:.2}", sim.makespan / analytic),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_breakdown(f: &Flags) -> anyhow::Result<()> {
+    let sys = SystemConfig { num_chiplets: f.u64("chiplets", 256)?, ..Default::default() };
+    let b = AreaPowerBreakdown::for_system(&sys, f.f64("wireless-bw", 16.0)?, 1e-9);
+    let mut t = Table::new("Table 3: WIENNA area and power breakdown", &["component", "area (mm2)", "power (mW)"]);
+    for c in &b.components {
+        t.row(vec![c.name.clone(), format!("{:.1}", c.area_mm2), format!("{:.0}", c.power_mw)]);
+    }
+    t.row(vec!["Total".into(), format!("{:.1}", b.total_area_mm2()), format!("{:.0}", b.total_power_mw())]);
+    print!("{}", t.render());
+    println!(
+        "RX fraction of chiplet: area {:.1}% power {:.1}%",
+        b.rx_area_fraction_of_chiplet() * 100.0,
+        b.rx_power_fraction_of_chiplet() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_report(f: &Flags) -> anyhow::Result<()> {
+    let sys = SystemConfig { num_chiplets: f.u64("chiplets", 256)?, ..Default::default() };
+    let model = parse_workload(&f.str("workload", "resnet50"), f.u64("batch", 64)?)?;
+    println!("{}: {} layers, {:.2} GMACs", model.name, model.layers.len(), model.total_macs() as f64 / 1e9);
+
+    let mut t = Table::new("throughput (adaptive)", &["design", "MACs/cycle", "vs Interposer-C"]);
+    let mut th = Vec::new();
+    for dp in DesignPoint::ALL {
+        let e = CostEngine::for_design_point(&sys, dp);
+        th.push(evaluate_model(&e, &model, None).macs_per_cycle);
+    }
+    for (i, dp) in DesignPoint::ALL.iter().enumerate() {
+        t.row(vec![dp.label(), format!("{:.0}", th[i]), format!("{:.2}x", th[i] / th[0])]);
+    }
+    print!("{}", t.render());
+
+    let cmp = wienna::energy::model_distribution_energy(&sys, &model, None);
+    println!(
+        "distribution energy: interposer {:.2} mJ vs WIENNA {:.2} mJ ({:.1}% reduction)",
+        cmp.interposer_pj * 1e-9,
+        cmp.wienna_pj * 1e-9,
+        cmp.reduction() * 100.0
+    );
+
+    // Whole-system energy on WIENNA-C (compute + SRAM + NoPs + idle).
+    let ew = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+    let cost = evaluate_model(&ew, &model, None);
+    let se = wienna::energy::system_energy(&cost, sys.avg_mesh_hops(), &wienna::energy::EnergyConstants::default());
+    println!(
+        "whole-system (WIENNA-C): {:.1} mJ total (compute {:.1}, SRAM {:.1}, dist {:.1}, collect {:.1}, idle {:.1}) | {:.0} GMAC/s/W",
+        se.total_mj(),
+        se.compute_mj,
+        se.sram_mj,
+        se.distribution_mj,
+        se.collection_mj,
+        se.idle_mj,
+        se.gmacs_per_watt(cost.total_macs, cost.total_latency)
+    );
+
+    // Strategy histogram under WIENNA-C.
+    let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
+    let (_, sum) = coord.run_model(&model);
+    let mut h = Table::new("adaptive strategy histogram", &["layer type", "strategy", "layers"]);
+    for (ty, s, n) in &sum.strategy_histogram {
+        h.row(vec![ty.clone(), s.clone(), n.to_string()]);
+    }
+    print!("{}", h.render());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "e2e" => cmd_e2e(&flags),
+        "sim-validate" => cmd_sim_validate(&flags),
+        "breakdown" => cmd_breakdown(&flags),
+        "report" => cmd_report(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}

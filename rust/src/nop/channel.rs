@@ -1,0 +1,150 @@
+//! In-package wireless channel model (substrate S8, physical layer).
+//!
+//! The paper (§2, citing Timoneda et al. [25]) reports that an engineered
+//! package channel keeps system-wide attenuation below 30 dB, compatible
+//! with the 65-nm TRX of [27] (48 Gb/s at 25 mm, BER < 1e-12). This module
+//! models that link budget: TSV-monopole antennas, log-distance path loss
+//! inside the package medium, and the resulting achievable datarate /
+//! required TX power per (distance, BER) point.
+//!
+//! It exists so the MAC layer (`nop/mac.rs`) can verify that a TDM
+//! schedule's rate assignments are actually feasible at the package
+//! geometry — the analytical models above it assume the Table-4 rates,
+//! and this closes the loop.
+
+/// Speed of light in m/s.
+const C0: f64 = 2.998e8;
+
+/// Package channel parameters (engineered medium, [25]-style).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    /// Carrier frequency in Hz (60 GHz mm-wave band).
+    pub carrier_hz: f64,
+    /// Path-loss exponent of the enclosed package medium. Free space is
+    /// 2.0; an *engineered* intra-package channel ([25]: tuned lid and
+    /// dielectric) behaves nearly waveguide-like, ≈1.0–1.4.
+    pub path_loss_exp: f64,
+    /// Additional fixed losses (antenna mismatch, dielectric) in dB.
+    pub fixed_loss_db: f64,
+    /// Receiver noise figure in dB.
+    pub noise_figure_db: f64,
+    /// Signal bandwidth in Hz available to the NoP.
+    pub bandwidth_hz: f64,
+}
+
+impl Default for Channel {
+    fn default() -> Self {
+        Channel {
+            carrier_hz: 60e9,
+            path_loss_exp: 1.0,
+            fixed_loss_db: 4.0,
+            noise_figure_db: 8.0,
+            bandwidth_hz: 20e9,
+        }
+    }
+}
+
+/// Thermal noise floor in dBm for a given bandwidth.
+fn noise_floor_dbm(bandwidth_hz: f64, noise_figure_db: f64) -> f64 {
+    -174.0 + 10.0 * bandwidth_hz.log10() + noise_figure_db
+}
+
+/// SNR (dB) needed for a given BER under non-coherent OOK-class
+/// modulation: BER = 0.5 * exp(-SNR/2)  =>  SNR = -2 ln(2 BER).
+pub fn required_snr_db(ber: f64) -> f64 {
+    assert!(ber > 0.0 && ber < 0.5);
+    let snr_lin = -2.0 * (2.0 * ber).ln();
+    10.0 * snr_lin.log10()
+}
+
+impl Channel {
+    /// Free-space-reference path loss at `distance_m`, in dB.
+    pub fn path_loss_db(&self, distance_m: f64) -> f64 {
+        assert!(distance_m > 0.0);
+        let lambda = C0 / self.carrier_hz;
+        let ref_loss = 20.0 * (4.0 * std::f64::consts::PI * 0.001 / lambda).log10(); // at 1 mm
+        ref_loss + 10.0 * self.path_loss_exp * (distance_m / 0.001).log10() + self.fixed_loss_db
+    }
+
+    /// Worst-case attenuation across a package of the given diagonal (m).
+    pub fn worst_case_attenuation_db(&self, package_diag_m: f64) -> f64 {
+        self.path_loss_db(package_diag_m)
+    }
+
+    /// Required TX power (dBm) to reach `distance_m` at `ber`.
+    pub fn required_tx_power_dbm(&self, distance_m: f64, ber: f64) -> f64 {
+        noise_floor_dbm(self.bandwidth_hz, self.noise_figure_db) + required_snr_db(ber) + self.path_loss_db(distance_m)
+    }
+
+    /// Shannon-bound achievable rate (bit/s) at `distance_m` for a TX
+    /// power of `tx_dbm`.
+    pub fn achievable_rate_bps(&self, distance_m: f64, tx_dbm: f64) -> f64 {
+        let snr_db = tx_dbm - self.path_loss_db(distance_m) - noise_floor_dbm(self.bandwidth_hz, self.noise_figure_db);
+        let snr = 10f64.powf(snr_db / 10.0);
+        self.bandwidth_hz * (1.0 + snr).log2()
+    }
+
+    /// Feasibility check used by the MAC layer: can `gbps` be sustained
+    /// across `distance_m` with `tx_dbm` of TX power at `ber`?
+    pub fn supports(&self, gbps: f64, distance_m: f64, tx_dbm: f64, ber: f64) -> bool {
+        let rate_ok = self.achievable_rate_bps(distance_m, tx_dbm) >= gbps * 1e9;
+        let power_ok = tx_dbm >= self.required_tx_power_dbm(distance_m, ber) - 1e-9;
+        rate_ok && power_ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attenuation_below_30db_at_package_scale() {
+        // [25]: system-wide attenuation below 30 dB is achievable; our
+        // defaults must land under that for a 40 mm package diagonal.
+        let ch = Channel::default();
+        let att = ch.worst_case_attenuation_db(0.040);
+        assert!(att < 30.0, "attenuation {att:.1} dB");
+        assert!(att > 10.0, "suspiciously low attenuation {att:.1} dB");
+    }
+
+    #[test]
+    fn path_loss_monotone_in_distance() {
+        let ch = Channel::default();
+        assert!(ch.path_loss_db(0.040) > ch.path_loss_db(0.010));
+        assert!(ch.path_loss_db(0.010) > ch.path_loss_db(0.001));
+    }
+
+    #[test]
+    fn lower_ber_needs_more_snr() {
+        assert!(required_snr_db(1e-12) > required_snr_db(1e-9));
+        // OOK-class: 1e-9 needs ~16 dB, 1e-12 ~17.3 dB.
+        let s9 = required_snr_db(1e-9);
+        assert!(s9 > 12.0 && s9 < 20.0, "{s9}");
+    }
+
+    #[test]
+    fn table4_rates_feasible_at_modest_power() {
+        // The Table-4 WIENNA rates (64 / 128 Gb/s) must be feasible across
+        // the 40 mm package with a TX power consistent with the Fig-1
+        // power budget (~10 dBm radiated is the right order for 100+ mW
+        // transceivers).
+        let ch = Channel::default();
+        assert!(ch.supports(64.0, 0.040, 10.0, 1e-9), "64 Gb/s infeasible");
+        assert!(ch.supports(128.0, 0.040, 10.0, 1e-9), "128 Gb/s infeasible");
+    }
+
+    #[test]
+    fn absurd_rates_rejected() {
+        let ch = Channel::default();
+        // >> bandwidth * log2(1+SNR) at any sane power.
+        assert!(!ch.supports(10_000.0, 0.040, 10.0, 1e-9));
+    }
+
+    #[test]
+    fn rate_decreases_with_distance() {
+        let ch = Channel::default();
+        let near = ch.achievable_rate_bps(0.005, 5.0);
+        let far = ch.achievable_rate_bps(0.040, 5.0);
+        assert!(near > far);
+    }
+}

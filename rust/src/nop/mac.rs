@@ -1,0 +1,181 @@
+//! Wireless MAC layer: the statically scheduled TDM sequence of the
+//! asymmetric distribution plane (substrate S8, link layer).
+//!
+//! WIENNA's wireless NoP needs no arbiter — there is exactly one
+//! transmitter (at the global SRAM) and distributions are known ahead of
+//! time (§4: "distributions are scheduled beforehand", which renders flow
+//! and congestion control trivial). The MAC is therefore a deterministic
+//! token schedule: an ordered list of airtime slots, one per transfer,
+//! each tagged with the receiver set that must power its RX on. Receivers
+//! not in the set stay power-gated — this is what makes unicast energy
+//! `TX + 1 RX` instead of `TX + N_C RX`.
+//!
+//! The schedule also models the *reconfiguration guard*: switching the
+//! active partitioning strategy between layers re-programs the RX filter
+//! tables, costing a small fixed number of cycles (the paper's adaptive
+//! reconfigurability is cheap but not free).
+
+use super::channel::Channel;
+use super::sim::Transfer;
+use crate::config::CLOCK_HZ;
+
+/// One TDM airtime slot.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    /// Start cycle of the slot.
+    pub start: f64,
+    /// Airtime in cycles (payload bytes / air bandwidth).
+    pub cycles: f64,
+    /// Number of receivers that must be active.
+    pub active_rx: usize,
+    /// Payload bytes.
+    pub bytes: u64,
+}
+
+/// A compiled TDM schedule for one layer's distribution phase.
+#[derive(Debug, Clone, Default)]
+pub struct TdmSchedule {
+    pub slots: Vec<Slot>,
+    /// Total makespan in cycles, including the reconfiguration guard.
+    pub makespan: f64,
+    /// Guard cycles spent on strategy reconfiguration.
+    pub guard_cycles: f64,
+}
+
+impl TdmSchedule {
+    /// Total airtime (busy cycles) of the schedule.
+    pub fn airtime(&self) -> f64 {
+        self.slots.iter().map(|s| s.cycles).sum()
+    }
+
+    /// Medium utilization: airtime / makespan.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan == 0.0 {
+            0.0
+        } else {
+            self.airtime() / self.makespan
+        }
+    }
+
+    /// Receiver-activation integral: Σ slot cycles x active receivers —
+    /// proportional to total RX energy.
+    pub fn rx_cycle_integral(&self) -> f64 {
+        self.slots.iter().map(|s| s.cycles * s.active_rx as f64).sum()
+    }
+}
+
+/// TDM scheduler for the single-TX wireless plane.
+#[derive(Debug, Clone)]
+pub struct TdmMac {
+    /// Air bandwidth in bytes/cycle (Table 4: 16 or 32).
+    pub bw: f64,
+    /// Guard cycles charged when the partitioning strategy (and hence the
+    /// RX filter configuration) changes between consecutive layers.
+    pub reconfig_guard_cycles: f64,
+    /// Per-slot turnaround overhead in cycles (preamble + header).
+    pub slot_overhead_cycles: f64,
+}
+
+impl Default for TdmMac {
+    fn default() -> Self {
+        TdmMac { bw: 16.0, reconfig_guard_cycles: 8.0, slot_overhead_cycles: 0.25 }
+    }
+}
+
+impl TdmMac {
+    pub fn new(bw: f64) -> Self {
+        TdmMac { bw, ..Default::default() }
+    }
+
+    /// Compile a transfer list into a TDM schedule.
+    ///
+    /// `reconfigured` marks whether this layer switched strategy relative
+    /// to the previous one (adaptive mode) and therefore pays the guard.
+    pub fn compile(&self, transfers: &[Transfer], reconfigured: bool) -> TdmSchedule {
+        let guard = if reconfigured { self.reconfig_guard_cycles } else { 0.0 };
+        let mut t = guard;
+        let mut slots = Vec::with_capacity(transfers.len());
+        for tr in transfers {
+            assert!(!tr.dests.is_empty(), "transfer without destinations");
+            let cycles = tr.bytes as f64 / self.bw + self.slot_overhead_cycles;
+            slots.push(Slot { start: t, cycles, active_rx: tr.dests.len(), bytes: tr.bytes });
+            t += cycles;
+        }
+        TdmSchedule { slots, makespan: t, guard_cycles: guard }
+    }
+
+    /// Verify the schedule is collision-free (slots strictly ordered and
+    /// non-overlapping) — the invariant that lets WIENNA drop the arbiter.
+    pub fn verify(&self, s: &TdmSchedule) -> bool {
+        s.slots.windows(2).all(|w| w[1].start >= w[0].start + w[0].cycles - 1e-9)
+    }
+
+    /// Check the physical layer supports this MAC's rate across the
+    /// package (closing the loop with `nop/channel.rs`).
+    pub fn feasible_on(&self, ch: &Channel, package_diag_m: f64, tx_dbm: f64, ber: f64) -> bool {
+        let gbps = self.bw * 8.0 * CLOCK_HZ / 1e9;
+        ch.supports(gbps, package_diag_m, tx_dbm, ber)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nop::sim::NodeId;
+
+    fn transfers() -> Vec<Transfer> {
+        vec![
+            Transfer::unicast(160, NodeId::new(0, 0)),
+            Transfer::broadcast(64, 4),
+            Transfer::unicast(16, NodeId::new(3, 3)),
+        ]
+    }
+
+    #[test]
+    fn schedule_is_collision_free_and_ordered() {
+        let mac = TdmMac::new(16.0);
+        let s = mac.compile(&transfers(), false);
+        assert!(mac.verify(&s));
+        assert_eq!(s.slots.len(), 3);
+        assert!(s.makespan >= s.airtime());
+    }
+
+    #[test]
+    fn guard_charged_only_on_reconfiguration() {
+        let mac = TdmMac::new(16.0);
+        let a = mac.compile(&transfers(), false);
+        let b = mac.compile(&transfers(), true);
+        assert_eq!(b.makespan - a.makespan, mac.reconfig_guard_cycles);
+        assert_eq!(a.guard_cycles, 0.0);
+    }
+
+    #[test]
+    fn airtime_matches_payload_over_bw() {
+        let mac = TdmMac { bw: 16.0, reconfig_guard_cycles: 0.0, slot_overhead_cycles: 0.0 };
+        let s = mac.compile(&transfers(), false);
+        let payload: u64 = transfers().iter().map(|t| t.bytes).sum();
+        assert!((s.airtime() - payload as f64 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rx_integral_counts_broadcast_fanout() {
+        let mac = TdmMac { bw: 16.0, reconfig_guard_cycles: 0.0, slot_overhead_cycles: 0.0 };
+        let s = mac.compile(&transfers(), false);
+        // unicast 10cyc x1 + broadcast 4cyc x16 + unicast 1cyc x1.
+        assert!((s.rx_cycle_integral() - (10.0 + 64.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mac_feasible_on_default_channel() {
+        let ch = Channel::default();
+        assert!(TdmMac::new(16.0).feasible_on(&ch, 0.040, 10.0, 1e-9));
+        assert!(TdmMac::new(32.0).feasible_on(&ch, 0.040, 10.0, 1e-9));
+    }
+
+    #[test]
+    fn full_utilization_without_overhead() {
+        let mac = TdmMac { bw: 16.0, reconfig_guard_cycles: 0.0, slot_overhead_cycles: 0.0 };
+        let s = mac.compile(&transfers(), false);
+        assert!((s.utilization() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,221 @@
+//! Analytical mesh-interposer NoP model (baseline, substrate S7).
+//!
+//! The baseline 2.5D accelerator distributes *and* collects over an
+//! electrical mesh on the silicon interposer (Table 4); WIENNA uses the
+//! mesh for collection only.
+//!
+//! # Distribution model
+//!
+//! The mesh has **no hardware multicast** (Table 4). A transfer to `d`
+//! destinations is performed as `d` replicated unicasts, all serialized
+//! through the global-SRAM injection port at the per-link bandwidth —
+//! this is the bandwidth amplification that makes broadcasts the paper's
+//! §3 Achilles heel. Each (pipelined) transfer additionally pays a
+//! one-time fill latency of the average hop count `√N_C / 2` plus the
+//! forwarding depth.
+//!
+//! An ablation mode (`tree_multicast`) grants the mesh path-based
+//! in-column forwarding ("broadcast via point-to-point forwarding", §3),
+//! which caps injection copies at one per destination column,
+//! `min(d, √N_C)` — used to quantify how much of WIENNA's win survives a
+//! smarter electrical baseline (see `benches/` ablations).
+//!
+//! # Energy model
+//!
+//! Following the paper's §5.1 method — "the average number of hops
+//! multiplied by the per-hop energy" — every *delivered* copy of a byte is
+//! charged `avg_hops x E_hop` per bit, i.e.
+//! `E = bytes · 8 · d · (√N_C / 2) · E_hop`.
+//!
+//! # Collection model
+//!
+//! Output collection converges onto the global SRAM chiplet's mesh links;
+//! its `√N_C`-column edge gives an aggregate drain bandwidth of
+//! `√N_C x` the link bandwidth (writes are spread over columns and can be
+//! hidden behind compute, paper §2).
+
+use super::technology::interposer_hop_energy_pj;
+use super::DistributionCost;
+use crate::dataflow::TrafficClass;
+
+/// Analytical model of the wired mesh NoP.
+#[derive(Debug, Clone)]
+pub struct MeshNop {
+    /// Chiplet count (mesh is √N_C x √N_C).
+    pub num_chiplets: u64,
+    /// Per-link bandwidth in bytes/cycle (Table 4: 8 conservative,
+    /// 16 aggressive).
+    pub link_bw: f64,
+    /// Per-hop link energy in pJ/bit.
+    pub hop_energy_pj: f64,
+    /// Ablation switch: `false` (Table-4 baseline, default) replicates a
+    /// multicast into one unicast per destination, all serialized at the
+    /// SRAM injection port; `true` grants the mesh path-based in-column
+    /// forwarding, capping injection copies at one per destination column.
+    pub tree_multicast: bool,
+}
+
+impl MeshNop {
+    pub fn new(num_chiplets: u64, link_bw: f64, aggressive: bool) -> Self {
+        MeshNop {
+            num_chiplets,
+            link_bw,
+            hop_energy_pj: interposer_hop_energy_pj(aggressive),
+            tree_multicast: false,
+        }
+    }
+
+    /// Mesh side length.
+    pub fn side(&self) -> f64 {
+        (self.num_chiplets as f64).sqrt()
+    }
+
+    /// Average unicast hop count, `√N_C / 2` (Table 4).
+    pub fn avg_hops(&self) -> f64 {
+        self.side() / 2.0
+    }
+
+    /// Injection-port copies required for a transfer with `d` average
+    /// destinations. The Table-4 baseline has no multicast capability, so
+    /// a `d`-destination transfer is `d` replicated unicasts through the
+    /// SRAM port; the `tree_multicast` ablation forwards in-column
+    /// replicas point-to-point, needing only one copy per column.
+    pub fn injection_copies(&self, avg_dests: f64) -> f64 {
+        if self.tree_multicast {
+            avg_dests.min(self.side()).max(1.0)
+        } else {
+            avg_dests.max(1.0)
+        }
+    }
+
+    /// Serialization cycles to push one traffic class through the SRAM
+    /// injection port.
+    fn class_cycles(&self, t: &TrafficClass) -> f64 {
+        t.bytes as f64 * self.injection_copies(t.avg_dests) / self.link_bw
+    }
+
+    /// Energy (pJ) to deliver one traffic class.
+    ///
+    /// Baseline (§5.1 method): every delivered copy travels the average
+    /// hop count, `bytes·8·d·(√N_C/2)·E_hop`. Under the `tree_multicast`
+    /// ablation the payload crosses a spanning tree instead — roughly the
+    /// average hop count to reach the destination region plus one link
+    /// per additional destination.
+    fn class_energy_pj(&self, t: &TrafficClass) -> f64 {
+        if self.tree_multicast {
+            let links = self.avg_hops() + (t.avg_dests - 1.0).max(0.0);
+            t.bytes as f64 * 8.0 * links * self.hop_energy_pj
+        } else {
+            t.delivered_bytes() * 8.0 * self.avg_hops() * self.hop_energy_pj
+        }
+    }
+
+    /// Distribution cost of a set of traffic classes.
+    pub fn distribution(&self, traffic: &[TrafficClass]) -> DistributionCost {
+        let mut c = DistributionCost::default();
+        for t in traffic {
+            let cycles = self.class_cycles(t);
+            if t.streamed {
+                c.stream_cycles += cycles;
+            } else {
+                c.preload_cycles += cycles;
+            }
+            c.energy_pj += self.class_energy_pj(t);
+        }
+        // Pipeline fill: average hops to the first destination plus the
+        // in-column forwarding depth for multicasts.
+        let max_fanout = traffic.iter().map(|t| t.avg_dests).fold(1.0, f64::max);
+        let col_depth = (max_fanout / self.side()).min(self.side()).max(1.0);
+        c.fill_latency = self.avg_hops() + col_depth;
+        c
+    }
+
+    /// Collection cycles for `bytes` of outputs converging on the SRAM
+    /// edge (aggregate `√N_C` links).
+    pub fn collection_cycles(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.link_bw * self.side())
+    }
+
+    /// Collection energy: outputs travel the average hop count once.
+    pub fn collection_energy_pj(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.avg_hops() * self.hop_energy_pj
+    }
+
+    /// Per-sent-bit energy of a `d`-destination multicast (Fig 4's
+    /// mesh curve): replicated unicasts, each travelling `avg_hops`
+    /// links, or a spanning tree under the `tree_multicast` ablation.
+    pub fn multicast_pj_per_sent_bit(&self, dests: f64) -> f64 {
+        if self.tree_multicast {
+            (self.avg_hops() + (dests - 1.0).max(0.0)) * self.hop_energy_pj
+        } else {
+            dests * self.avg_hops() * self.hop_energy_pj
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{TensorKind, TrafficClass};
+
+    fn class(bytes: u64, dests: f64, streamed: bool) -> TrafficClass {
+        TrafficClass { tensor: TensorKind::Input, bytes, avg_dests: dests, streamed }
+    }
+
+    #[test]
+    fn unicast_is_bandwidth_bound() {
+        let m = MeshNop::new(256, 16.0, true);
+        let c = m.distribution(&[class(1600, 1.0, true)]);
+        assert!((c.stream_cycles - 100.0).abs() < 1e-9);
+        assert_eq!(c.preload_cycles, 0.0);
+    }
+
+    #[test]
+    fn broadcast_amplifies_by_destinations() {
+        let m = MeshNop::new(256, 16.0, true);
+        // 256-dest broadcast with no multicast hw: 256 replicated
+        // unicasts through the injection port.
+        let c = m.distribution(&[class(1600, 256.0, true)]);
+        assert!((c.stream_cycles - 1600.0 * 256.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_multicast_ablation_caps_at_mesh_side() {
+        let mut m = MeshNop::new(256, 16.0, true);
+        m.tree_multicast = true;
+        let c = m.distribution(&[class(1600, 256.0, true)]);
+        // One copy per column: x16 instead of x256.
+        assert!((c.stream_cycles - 1600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_counts_every_copy_and_hop() {
+        let m = MeshNop::new(256, 16.0, true);
+        let c = m.distribution(&[class(100, 256.0, false)]);
+        // 100 B * 256 dests * 8 bit * 8 hops * 0.82 pJ.
+        let expect = 100.0 * 256.0 * 8.0 * 8.0 * 0.82;
+        assert!((c.energy_pj - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conservative_link_is_pricier() {
+        let c = MeshNop::new(256, 8.0, false);
+        let a = MeshNop::new(256, 16.0, true);
+        assert!(c.hop_energy_pj > a.hop_energy_pj);
+    }
+
+    #[test]
+    fn collection_uses_edge_aggregate() {
+        let m = MeshNop::new(256, 8.0, false);
+        // 16 links * 8 B/cyc = 128 B/cyc drain.
+        assert!((m.collection_cycles(1280) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_latency_reasonable() {
+        let m = MeshNop::new(256, 8.0, false);
+        let c = m.distribution(&[class(16, 1.0, true)]);
+        assert!(c.fill_latency >= m.avg_hops());
+        assert!(c.fill_latency <= 2.0 * m.side());
+    }
+}

@@ -1,0 +1,52 @@
+//! Network-on-Package substrate (S5–S8): interconnect technology models
+//! (Table 2), the wireless transceiver scaling model (Fig 1), the
+//! analytical mesh-interposer and wireless NoP models, and a cycle-level
+//! event-driven mesh simulator used to validate the analytical model.
+
+pub mod channel;
+pub mod mac;
+pub mod mesh;
+pub mod sim;
+pub mod technology;
+pub mod transceiver;
+pub mod wireless;
+
+pub use channel::Channel;
+pub use mac::{TdmMac, TdmSchedule};
+pub use mesh::MeshNop;
+pub use technology::{Technology, TECHNOLOGIES};
+pub use transceiver::{Transceiver, TrxDesignPoint};
+pub use wireless::WirelessNop;
+
+
+/// Which NoP performs data *distribution* (SRAM → chiplets). Collection is
+/// always on the wired mesh (paper §4: the wireless plane is asymmetric).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NopKind {
+    /// Electrical mesh over the silicon interposer (baseline).
+    Interposer,
+    /// WIENNA's wireless distribution plane.
+    Wireless,
+}
+
+impl NopKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NopKind::Interposer => "Interposer",
+            NopKind::Wireless => "WIENNA",
+        }
+    }
+}
+
+/// Timing/energy of one distribution phase computed by a NoP model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DistributionCost {
+    /// Cycles to move all *preloaded* (non-streamed) traffic.
+    pub preload_cycles: f64,
+    /// Cycles to move all *streamed* traffic (overlappable with compute).
+    pub stream_cycles: f64,
+    /// One-time pipeline-fill latency (hops) in cycles.
+    pub fill_latency: f64,
+    /// Total distribution energy in picojoules.
+    pub energy_pj: f64,
+}

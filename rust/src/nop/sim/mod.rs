@@ -1,0 +1,16 @@
+//! Cycle-level mesh NoP simulator (substrate S7, validation side).
+//!
+//! The analytical [`super::MeshNop`] model makes two first-order claims:
+//! multicast injection serializes one payload copy per destination column,
+//! and pipelined (virtual cut-through) transfers pay hop latency once.
+//! This simulator replays the same transfer lists through an explicit
+//! `√N_C x √N_C` mesh with per-link occupancy tracking, XY routing and
+//! in-column forwarding, so integration tests can bound the analytical
+//! model's error instead of trusting it.
+
+pub mod network;
+pub mod packet;
+pub mod router;
+
+pub use network::{MeshSim, SimReport};
+pub use packet::{NodeId, Transfer};

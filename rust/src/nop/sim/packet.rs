@@ -1,0 +1,94 @@
+//! Packets and transfers for the cycle-level mesh simulator.
+
+
+/// A mesh node, addressed by `(row, col)` in a `side x side` grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId {
+    pub row: u32,
+    pub col: u32,
+}
+
+impl NodeId {
+    pub fn new(row: u32, col: u32) -> Self {
+        NodeId { row, col }
+    }
+
+    /// Linear index within a `side`-wide mesh.
+    pub fn index(&self, side: u32) -> usize {
+        (self.row * side + self.col) as usize
+    }
+
+    /// XY-routing hop count from `self` to `other`.
+    pub fn hops_to(&self, other: NodeId) -> u32 {
+        self.col.abs_diff(other.col) + self.row.abs_diff(other.row)
+    }
+}
+
+/// One logical transfer from the global SRAM to a set of chiplets.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    /// Unique payload bytes.
+    pub bytes: u64,
+    /// Destination chiplets. An empty list is invalid.
+    pub dests: Vec<NodeId>,
+}
+
+impl Transfer {
+    pub fn unicast(bytes: u64, dest: NodeId) -> Self {
+        Transfer { bytes, dests: vec![dest] }
+    }
+
+    /// Broadcast to every node of a `side x side` mesh.
+    pub fn broadcast(bytes: u64, side: u32) -> Self {
+        let dests = (0..side).flat_map(|r| (0..side).map(move |c| NodeId::new(r, c))).collect();
+        Transfer { bytes, dests }
+    }
+
+    /// Multicast to the first `n` nodes in row-major order.
+    pub fn multicast_first_n(bytes: u64, side: u32, n: u32) -> Self {
+        let dests = (0..n.min(side * side)).map(|i| NodeId::new(i / side, i % side)).collect();
+        Transfer { bytes, dests }
+    }
+
+    /// Destination columns, deduplicated and sorted. One payload copy is
+    /// injected per column (in-column replicas are forwarded).
+    pub fn dest_columns(&self) -> Vec<u32> {
+        let mut cols: Vec<u32> = self.dests.iter().map(|d| d.col).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        cols
+    }
+
+    /// Deepest destination row within `col`.
+    pub fn max_row_in_col(&self, col: u32) -> u32 {
+        self.dests.iter().filter(|d| d.col == col).map(|d| d.row).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hops_are_manhattan() {
+        assert_eq!(NodeId::new(0, 0).hops_to(NodeId::new(3, 4)), 7);
+        assert_eq!(NodeId::new(2, 2).hops_to(NodeId::new(2, 2)), 0);
+    }
+
+    #[test]
+    fn broadcast_covers_mesh() {
+        let t = Transfer::broadcast(64, 4);
+        assert_eq!(t.dests.len(), 16);
+        assert_eq!(t.dest_columns(), vec![0, 1, 2, 3]);
+        assert_eq!(t.max_row_in_col(2), 3);
+    }
+
+    #[test]
+    fn multicast_prefix() {
+        let t = Transfer::multicast_first_n(8, 4, 6);
+        assert_eq!(t.dests.len(), 6);
+        // Rows 0 (cols 0-3) and row 1 (cols 0-1).
+        assert_eq!(t.max_row_in_col(0), 1);
+        assert_eq!(t.max_row_in_col(3), 0);
+    }
+}

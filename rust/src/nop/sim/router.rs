@@ -1,0 +1,248 @@
+//! Link-level resource model for the mesh simulator.
+//!
+//! The simulator tracks per-link occupancy with virtual cut-through
+//! pipelining: a packet of `S` serialization cycles entering a path of
+//! links `l_0..l_h` occupies link `l_i` during `[start + i, start + i + S)`.
+//! A link is a unidirectional channel between mesh neighbours (or the SRAM
+//! injection port).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): links are identified by dense
+//! indices into flat arrays, not hashed — the simulator's hot loop is
+//! `earliest_start`/`commit` over 4–35-link paths, and a HashMap-keyed
+//! table cost ~10x the wall time of the dense layout.
+
+use super::packet::NodeId;
+
+/// Unidirectional link identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkId {
+    /// The single SRAM → mesh injection port (attached at node (0,0)).
+    Injection,
+    /// Mesh link from `from` towards `to` (must be neighbours).
+    Mesh { from: NodeId, to: NodeId },
+    /// Drain link from a top-row node into the SRAM edge (collection).
+    Drain { col: u32 },
+}
+
+impl LinkId {
+    /// Dense index within a `side`-wide mesh.
+    ///
+    /// Layout: `[injection | east(r,c) | west(r,c) | south(r,c) |
+    /// north(r,c) | drain(c)]` — directional planes of `side*side` slots
+    /// (edge slots unused but keeping the math branch-free).
+    pub fn index(&self, side: u32) -> usize {
+        let plane = (side * side) as usize;
+        match *self {
+            LinkId::Injection => 0,
+            LinkId::Mesh { from, to } => {
+                let base = 1 + (from.row * side + from.col) as usize;
+                if to.col == from.col + 1 {
+                    base // east
+                } else if from.col == to.col + 1 {
+                    base + plane // west
+                } else if to.row == from.row + 1 {
+                    base + 2 * plane // south
+                } else {
+                    base + 3 * plane // north
+                }
+            }
+            LinkId::Drain { col } => 1 + 4 * plane + col as usize,
+        }
+    }
+
+    /// Total dense slots for a `side`-wide mesh.
+    pub fn table_size(side: u32) -> usize {
+        1 + 4 * (side * side) as usize + side as usize
+    }
+}
+
+/// Per-link occupancy with dense storage.
+#[derive(Debug)]
+pub struct LinkTable {
+    side: u32,
+    free_at: Vec<f64>,
+    /// Total busy cycles per link, for utilization reporting.
+    busy: Vec<f64>,
+    /// Total flit-hops moved (bytes x links crossed).
+    pub byte_hops: f64,
+}
+
+impl LinkTable {
+    pub fn new(side: u32) -> Self {
+        let n = LinkId::table_size(side);
+        LinkTable { side, free_at: vec![0.0; n], busy: vec![0.0; n], byte_hops: 0.0 }
+    }
+
+    /// Earliest start time for a cut-through packet over `path` (dense
+    /// indices), not before `earliest`: link `i` is entered at `start+i`.
+    pub fn earliest_start(&self, path: &[usize], earliest: f64) -> f64 {
+        let mut start = earliest;
+        for (i, &l) in path.iter().enumerate() {
+            let s = self.free_at[l] - i as f64;
+            if s > start {
+                start = s;
+            }
+        }
+        start
+    }
+
+    /// Commit a packet: occupy every link on `path` for `ser` cycles in a
+    /// pipelined fashion, moving `bytes` across each. Returns the cycle at
+    /// which the tail arrives at the last node.
+    pub fn commit(&mut self, path: &[usize], start: f64, ser: f64, bytes: f64) -> f64 {
+        for (i, &l) in path.iter().enumerate() {
+            let t = start + i as f64;
+            self.free_at[l] = t + ser;
+            self.busy[l] += ser;
+        }
+        self.byte_hops += bytes * path.len() as f64;
+        start + path.len() as f64 + ser
+    }
+
+    /// Resolve a [`LinkId`] path into dense indices.
+    pub fn resolve(&self, path: &[LinkId]) -> Vec<usize> {
+        path.iter().map(|l| l.index(self.side)).collect()
+    }
+
+    /// Peak busy-until time across all links (makespan lower bound).
+    pub fn makespan(&self) -> f64 {
+        self.free_at.iter().fold(0.0, |a, &b| a.max(b))
+    }
+
+    /// Utilization of the busiest link relative to `horizon` cycles.
+    pub fn peak_utilization(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        self.busy.iter().fold(0.0f64, |a, &b| a.max(b)) / horizon
+    }
+
+    pub fn num_links_touched(&self) -> usize {
+        self.busy.iter().filter(|&&b| b > 0.0).count()
+    }
+}
+
+/// Build the XY (column-forwarding) path for one injected copy: from the
+/// injection port, east along row 0 to `col`, then south to `max_row`.
+pub fn column_path(col: u32, max_row: u32) -> Vec<LinkId> {
+    let mut path = vec![LinkId::Injection];
+    for c in 0..col {
+        path.push(LinkId::Mesh { from: NodeId::new(0, c), to: NodeId::new(0, c + 1) });
+    }
+    for r in 0..max_row {
+        path.push(LinkId::Mesh { from: NodeId::new(r, col), to: NodeId::new(r + 1, col) });
+    }
+    path
+}
+
+/// Dense-index variant of [`column_path`], allocation-conscious: writes
+/// into `buf` (cleared first) to avoid per-packet Vec churn.
+pub fn column_path_dense(side: u32, col: u32, max_row: u32, buf: &mut Vec<usize>) {
+    let plane = (side * side) as usize;
+    buf.clear();
+    buf.push(0); // injection
+    for c in 0..col {
+        buf.push(1 + c as usize); // east links of row 0: from (0,c)
+    }
+    for r in 0..max_row {
+        buf.push(1 + 2 * plane + (r * side + col) as usize); // south from (r,col)
+    }
+}
+
+/// Collection path: from `src` north to row 0, then into the column drain.
+pub fn collection_path(src: NodeId) -> Vec<LinkId> {
+    let mut path = Vec::new();
+    for r in (1..=src.row).rev() {
+        path.push(LinkId::Mesh { from: NodeId::new(r, src.col), to: NodeId::new(r - 1, src.col) });
+    }
+    path.push(LinkId::Drain { col: src.col });
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_indices_unique() {
+        let side = 4;
+        let mut seen = std::collections::HashSet::new();
+        assert!(seen.insert(LinkId::Injection.index(side)));
+        for r in 0..side {
+            for c in 0..side - 1 {
+                assert!(seen.insert(LinkId::Mesh { from: NodeId::new(r, c), to: NodeId::new(r, c + 1) }.index(side)));
+                assert!(seen.insert(LinkId::Mesh { from: NodeId::new(r, c + 1), to: NodeId::new(r, c) }.index(side)));
+            }
+        }
+        for r in 0..side - 1 {
+            for c in 0..side {
+                assert!(seen.insert(LinkId::Mesh { from: NodeId::new(r, c), to: NodeId::new(r + 1, c) }.index(side)));
+                assert!(seen.insert(LinkId::Mesh { from: NodeId::new(r + 1, c), to: NodeId::new(r, c) }.index(side)));
+            }
+        }
+        for c in 0..side {
+            assert!(seen.insert(LinkId::Drain { col: c }.index(side)));
+        }
+        assert!(seen.iter().all(|&i| i < LinkId::table_size(side)));
+    }
+
+    #[test]
+    fn dense_column_path_matches_symbolic() {
+        let side = 8;
+        let lt = LinkTable::new(side);
+        for (col, row) in [(0u32, 0u32), (3, 2), (7, 7)] {
+            let symbolic = lt.resolve(&column_path(col, row));
+            let mut dense = Vec::new();
+            column_path_dense(side, col, row, &mut dense);
+            assert_eq!(symbolic, dense, "col {col} row {row}");
+        }
+    }
+
+    #[test]
+    fn column_path_lengths() {
+        // col 3, max_row 2: injection + 3 east + 2 south = 6 links.
+        assert_eq!(column_path(3, 2).len(), 6);
+        assert_eq!(column_path(0, 0), vec![LinkId::Injection]);
+    }
+
+    #[test]
+    fn cut_through_pipelines_back_to_back() {
+        let mut lt = LinkTable::new(4);
+        let path = lt.resolve(&column_path(2, 2));
+        let s1 = lt.earliest_start(&path, 0.0);
+        let e1 = lt.commit(&path, s1, 10.0, 160.0);
+        // Tail arrival: start + hops + ser.
+        assert_eq!(e1, 0.0 + 5.0 + 10.0);
+        // Second packet on the same path starts right after the first
+        // clears the injection link, not after full delivery.
+        let s2 = lt.earliest_start(&path, 0.0);
+        assert_eq!(s2, 10.0);
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_conflict_after_injection() {
+        let mut lt = LinkTable::new(4);
+        let p1 = lt.resolve(&column_path(0, 3));
+        let p2 = lt.resolve(&column_path(1, 3));
+        let s1 = lt.earliest_start(&p1, 0.0);
+        lt.commit(&p1, s1, 4.0, 16.0);
+        let s2 = lt.earliest_start(&p2, 0.0);
+        // Only the shared injection port serializes them.
+        assert_eq!(s2, 4.0);
+    }
+
+    #[test]
+    fn collection_path_goes_north() {
+        let p = collection_path(NodeId::new(2, 5));
+        assert_eq!(p.len(), 3); // two north hops + drain
+        assert!(matches!(p.last(), Some(LinkId::Drain { col: 5 })));
+    }
+
+    #[test]
+    fn byte_hops_accumulate() {
+        let mut lt = LinkTable::new(4);
+        let p = lt.resolve(&column_path(2, 1)); // 4 links
+        lt.commit(&p, 0.0, 1.0, 10.0);
+        assert_eq!(lt.byte_hops, 40.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Analytical wireless NoP model (WIENNA's distribution plane, S8).
+//!
+//! A single transmitter at the global SRAM chiplet and one receiver per
+//! accelerator chiplet (paper §4): the plane is *asymmetric* — it only
+//! distributes. There are no collisions (one TX), so medium access is a
+//! statically scheduled TDM sequence and flow control is trivial; every
+//! transfer reaches all of its destinations in a single hop.
+//!
+//! * A **unicast** keeps one RX active; all other receivers are
+//!   power-gated for the duration of the transfer.
+//! * A **broadcast/multicast** activates the destination set; the payload
+//!   is transmitted exactly once regardless of fan-out — this is the
+//!   bandwidth-amplification WIENNA's dataflow co-design exploits.
+
+use super::transceiver::TrxDesignPoint;
+use super::DistributionCost;
+use crate::dataflow::TrafficClass;
+
+/// Analytical model of the wireless distribution plane.
+#[derive(Debug, Clone)]
+pub struct WirelessNop {
+    /// Air datarate in bytes/cycle (Table 4: 16 conservative,
+    /// 32 aggressive).
+    pub bw: f64,
+    /// Transceiver efficiency design point (Fig 1 scatter end).
+    pub trx: TrxDesignPoint,
+    /// Target bit-error rate (energy is scaled from the 1e-9 reference).
+    pub ber: f64,
+}
+
+impl WirelessNop {
+    pub fn new(bw: f64, trx: TrxDesignPoint) -> Self {
+        WirelessNop { bw, trx, ber: 1e-9 }
+    }
+
+    /// Energy (pJ) for one traffic class: one TX burst for the unique
+    /// payload plus RX energy per active destination.
+    fn class_energy_pj(&self, t: &TrafficClass) -> f64 {
+        let bits = t.bytes as f64 * 8.0;
+        let scale = TrxDesignPoint::ber_scale(self.ber);
+        bits * self.trx.multicast_pj_per_bit(t.avg_dests) * scale
+    }
+
+    /// Distribution cost of a set of traffic classes: pure serialization
+    /// of unique payload bytes at the air rate, single-hop latency.
+    pub fn distribution(&self, traffic: &[TrafficClass]) -> DistributionCost {
+        let mut c = DistributionCost::default();
+        for t in traffic {
+            let cycles = t.bytes as f64 / self.bw;
+            if t.streamed {
+                c.stream_cycles += cycles;
+            } else {
+                c.preload_cycles += cycles;
+            }
+            c.energy_pj += self.class_energy_pj(t);
+        }
+        c.fill_latency = 1.0; // single hop
+        c
+    }
+
+    /// Per-sent-bit energy of a `d`-destination multicast (Fig 4's
+    /// wireless curve).
+    pub fn multicast_pj_per_sent_bit(&self, dests: f64) -> f64 {
+        self.trx.multicast_pj_per_bit(dests) * TrxDesignPoint::ber_scale(self.ber)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{TensorKind, TrafficClass};
+
+    fn class(bytes: u64, dests: f64, streamed: bool) -> TrafficClass {
+        TrafficClass { tensor: TensorKind::Input, bytes, avg_dests: dests, streamed }
+    }
+
+    #[test]
+    fn broadcast_costs_one_transmission() {
+        let w = WirelessNop::new(16.0, TrxDesignPoint::Conservative);
+        let uni = w.distribution(&[class(1600, 1.0, true)]);
+        let bcast = w.distribution(&[class(1600, 256.0, true)]);
+        // Same serialization time regardless of fan-out.
+        assert_eq!(uni.stream_cycles, bcast.stream_cycles);
+        assert!((uni.stream_cycles - 100.0).abs() < 1e-9);
+        // But energy grows with the number of active receivers.
+        assert!(bcast.energy_pj > uni.energy_pj);
+    }
+
+    #[test]
+    fn unicast_energy_matches_table2() {
+        let w = WirelessNop::new(16.0, TrxDesignPoint::Conservative);
+        // 4.01 pJ/bit for TX + 1 RX.
+        assert!((w.multicast_pj_per_sent_bit(1.0) - 4.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_energy_asymptote() {
+        let w = WirelessNop::new(16.0, TrxDesignPoint::Conservative);
+        // ~1.4 pJ/bit per destination at high fan-out (Table 2).
+        let per_dest = w.multicast_pj_per_sent_bit(1024.0) / 1024.0;
+        assert!((per_dest - 1.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn ber_increases_energy() {
+        let mut w = WirelessNop::new(16.0, TrxDesignPoint::Aggressive);
+        let e9 = w.multicast_pj_per_sent_bit(16.0);
+        w.ber = 1e-12;
+        let e12 = w.multicast_pj_per_sent_bit(16.0);
+        assert!((e12 / e9 - 12.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_hop_fill() {
+        let w = WirelessNop::new(32.0, TrxDesignPoint::Aggressive);
+        assert_eq!(w.distribution(&[class(32, 8.0, false)]).fill_latency, 1.0);
+    }
+}

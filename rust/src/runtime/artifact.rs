@@ -1,0 +1,194 @@
+//! Artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the Rust runtime (run time).
+//!
+//! The manifest is a line-based format (this build environment is fully
+//! offline and dependency-light, so no JSON library):
+//!
+//! ```text
+//! # wienna artifact manifest
+//! version 1
+//! artifact <name> <file> <dtype> <in0;in1;...> <out>
+//! ```
+//!
+//! where each shape is `64x64`-style. Example:
+//!
+//! ```text
+//! artifact matmul64 matmul64.hlo.txt f32 64x64;64x64 64x64
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered computation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Stable name the coordinator dispatches by, e.g. `"matmul64"`.
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Input shapes, row-major.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape (single tensor; lowered with `return_tuple=True` and
+    /// unwrapped on the Rust side).
+    pub output: Vec<usize>,
+    /// Element dtype; only `"f32"` is used by the tiny e2e network.
+    pub dtype: String,
+}
+
+impl ArtifactSpec {
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output.iter().product()
+    }
+}
+
+/// The parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Version tag so stale artifact dirs fail loudly.
+    pub version: u32,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+pub const MANIFEST_VERSION: u32 = 1;
+pub const MANIFEST_FILE: &str = "manifest.txt";
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse::<usize>().with_context(|| format!("bad shape dim '{d}' in '{s}'")))
+        .collect()
+}
+
+/// Parse the manifest text (exposed for tests).
+pub fn parse_manifest(text: &str) -> Result<(u32, Vec<ArtifactSpec>)> {
+    let mut version: Option<u32> = None;
+    let mut artifacts = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("version") => {
+                let v = parts.next().context("version line missing value")?;
+                version = Some(v.parse().with_context(|| format!("bad version '{v}'"))?);
+            }
+            Some("artifact") => {
+                let name = parts.next().context("artifact line: missing name")?.to_string();
+                let file = parts.next().context("artifact line: missing file")?.to_string();
+                let dtype = parts.next().context("artifact line: missing dtype")?.to_string();
+                let ins = parts.next().context("artifact line: missing input shapes")?;
+                let out = parts.next().context("artifact line: missing output shape")?;
+                if parts.next().is_some() {
+                    bail!("line {}: trailing tokens", lineno + 1);
+                }
+                let inputs = ins.split(';').map(parse_shape).collect::<Result<Vec<_>>>()?;
+                let output = parse_shape(out)?;
+                artifacts.push(ArtifactSpec { name, file, inputs, output, dtype });
+            }
+            Some(tok) => bail!("line {}: unknown directive '{tok}'", lineno + 1),
+            None => unreachable!(),
+        }
+    }
+    let version = version.context("manifest missing 'version' line")?;
+    Ok((version, artifacts))
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let (version, artifacts) = parse_manifest(&text)?;
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "manifest version {version} != expected {MANIFEST_VERSION}; re-run `make artifacts`"
+        );
+        anyhow::ensure!(!artifacts.is_empty(), "manifest lists no artifacts");
+        for a in &artifacts {
+            let f = dir.join(&a.file);
+            anyhow::ensure!(f.exists(), "artifact file missing: {f:?}");
+            anyhow::ensure!(a.dtype == "f32", "unsupported dtype {} in {}", a.dtype, a.name);
+            anyhow::ensure!(!a.inputs.is_empty(), "artifact {} has no inputs", a.name);
+        }
+        let mut names: Vec<&str> = artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(names.len() == artifacts.len(), "duplicate artifact names in manifest");
+        Ok(ArtifactManifest { version, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    const GOOD: &str = "# comment\nversion 1\nartifact m m.hlo.txt f32 2x2;2x2 2x2\n";
+
+    #[test]
+    fn parses_valid_text() {
+        let (v, a) = parse_manifest(GOOD).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].inputs, vec![vec![2, 2], vec![2, 2]]);
+        assert_eq!(a[0].output_elems(), 4);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_manifest("version 1\nartifact only-name\n").is_err());
+        assert!(parse_manifest("artifact m f f32 2x2 2x2\n").is_err()); // no version
+        assert!(parse_manifest("version 1\nbogus line\n").is_err());
+        assert!(parse_manifest("version 1\nartifact m f f32 2xq 2x2\n").is_err());
+        assert!(parse_manifest("version 1\nartifact m f f32 2x2 2x2 extra\n").is_err());
+    }
+
+    #[test]
+    fn loads_valid_manifest_dir() {
+        let d = TempDir::new("wienna_manifest");
+        std::fs::write(d.path().join(MANIFEST_FILE), GOOD).unwrap();
+        std::fs::write(d.path().join("m.hlo.txt"), "HloModule m").unwrap();
+        let m = ArtifactManifest::load(d.path()).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert!(m.get("m").is_ok());
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_missing_file() {
+        let d = TempDir::new("wienna_manifest_bad");
+        std::fs::write(d.path().join(MANIFEST_FILE), "version 99\nartifact m m.hlo.txt f32 2x2 2x2\n").unwrap();
+        std::fs::write(d.path().join("m.hlo.txt"), "x").unwrap();
+        assert!(ArtifactManifest::load(d.path()).is_err());
+        std::fs::write(d.path().join(MANIFEST_FILE), GOOD).unwrap();
+        std::fs::remove_file(d.path().join("m.hlo.txt")).unwrap();
+        assert!(ArtifactManifest::load(d.path()).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let d = TempDir::new("wienna_manifest_dup");
+        let text = "version 1\nartifact m m.hlo.txt f32 2x2 2x2\nartifact m m.hlo.txt f32 2x2 2x2\n";
+        std::fs::write(d.path().join(MANIFEST_FILE), text).unwrap();
+        std::fs::write(d.path().join("m.hlo.txt"), "x").unwrap();
+        assert!(ArtifactManifest::load(d.path()).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! PJRT executable cache and chiplet compute engine.
+//!
+//! One `PjRtClient` (CPU) is created per process; each HLO artifact is
+//! compiled exactly once and cached. The coordinator then executes tile
+//! computations against the cache from its hot path — this is the "one
+//! compiled executable per model variant" runtime of the architecture.
+
+use super::artifact::{ArtifactManifest, ArtifactSpec};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Compiled-executable cache over an artifact manifest.
+pub struct ExecutableCache {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ExecutableCache {
+    /// Create the PJRT CPU client and attach it to `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ExecutableCache { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling artifact '{name}'"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (start-of-run warm-up).
+    pub fn warm_up(&self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute artifact `name` on f32 input buffers.
+    ///
+    /// Shapes are taken from the manifest; `inputs[i].len()` must match.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let spec = self.manifest.get(name)?.clone();
+        anyhow::ensure!(inputs.len() == spec.inputs.len(), "artifact '{name}' wants {} inputs, got {}", spec.inputs.len(), inputs.len());
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            anyhow::ensure!(
+                buf.len() == spec.input_elems(i),
+                "artifact '{name}' input {i}: want {} elems, got {}",
+                spec.input_elems(i),
+                buf.len()
+            );
+            let dims: Vec<i64> = spec.inputs[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf).reshape(&dims).context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading f32 output")?;
+        anyhow::ensure!(values.len() == spec.output_elems(), "artifact '{name}' output: want {} elems, got {}", spec.output_elems(), values.len());
+        Ok(values)
+    }
+
+    /// Specs available, for introspection.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.manifest.artifacts
+    }
+}
+
+/// A chiplet-level compute engine: thin façade the coordinator uses to run
+/// one chiplet's tile work. Today all chiplets share one CPU PJRT client;
+/// the abstraction point is where per-chiplet devices would attach.
+pub struct ChipletEngine {
+    cache: std::sync::Arc<ExecutableCache>,
+}
+
+impl ChipletEngine {
+    pub fn new(cache: std::sync::Arc<ExecutableCache>) -> Self {
+        ChipletEngine { cache }
+    }
+
+    /// Run one GEMM tile `a[m,k] x b[k,n]` through the named artifact.
+    pub fn run_tile(&self, artifact: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        self.cache.execute_f32(artifact, &[a, b])
+    }
+
+    pub fn cache(&self) -> &ExecutableCache {
+        &self.cache
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime (substrate S10): loads the AOT-compiled HLO artifacts
+//! produced by `python/compile/aot.py` and executes them from the
+//! coordinator's hot path. Python never runs at inference time — the
+//! interchange format is HLO *text* (see DESIGN.md and aot_recipe notes):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids and round-trips
+//! cleanly.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use client::{ChipletEngine, ExecutableCache};

@@ -1,0 +1,194 @@
+//! Test and benchmark utilities (this build is fully offline, so the crate
+//! ships its own tiny replacements for `tempfile`, `proptest`-style random
+//! input generation, and `criterion`-style timing).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// RAII temporary directory under the system temp dir.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(prefix: &str) -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let pid = std::process::id();
+        let path = std::env::temp_dir().join(format!("{prefix}_{pid}_{nanos}"));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// SplitMix64: a tiny, deterministic RNG for property-style tests.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.next_u64() % (hi - lo + 1)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in `[-a, a)`.
+    pub fn sym_f32(&mut self, a: f32) -> f32 {
+        (self.next_f32() * 2.0 - 1.0) * a
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+}
+
+/// Benchmark result of [`bench`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Criterion-style micro-benchmark: warm up, then time `iters` runs of
+/// `f`, batching the clock reads.
+pub fn bench<T>(label: &str, iters: u64, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    // Warm-up.
+    for _ in 0..iters.min(3) {
+        std::hint::black_box(f());
+    }
+    let mut min = f64::INFINITY;
+    let mut max: f64 = 0.0;
+    let mut total = 0.0f64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64() * 1e9;
+        total += dt;
+        min = min.min(dt);
+        max = max.max(dt);
+    }
+    let stats = BenchStats { iters, mean_ns: total / iters as f64, min_ns: min, max_ns: max };
+    println!(
+        "bench {label:<44} {:>12.2} us/iter  (min {:.2}, max {:.2}, n={})",
+        stats.mean_us(),
+        min / 1e3,
+        max / 1e3,
+        iters
+    );
+    stats
+}
+
+/// Relative-equality assertion helper (replaces `approx`).
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, 1e-9)
+    };
+    ($a:expr, $b:expr, $eps:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        let scale = a.abs().max(b.abs()).max(1e-12);
+        assert!(
+            (a - b).abs() <= $eps * scale + $eps,
+            "assert_close failed: {} vs {} (eps {})",
+            a,
+            b,
+            $eps
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new("wienna_tu");
+            p = d.path().to_path_buf();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn rng_ranges() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.range_u64(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = r.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn close_macro() {
+        assert_close!(1.0, 1.0 + 1e-12);
+        assert_close!(1000.0, 1000.1, 1e-3);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let s = bench("noop", 5, || 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_ns >= 0.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! DNN layer descriptors (substrate S1).
+//!
+//! A layer is described by the seven classic convolution loop bounds plus
+//! stride/upsample factors. Fully-connected layers are convolutions with
+//! `Y = X = R = S = 1`; residual (skip-connection) adds are elementwise
+//! layers; up-convolutions ("UpCONV" in the paper, Table 1) are transposed
+//! convolutions that enlarge the activation by `upsample`.
+
+
+/// Operator kind, mirroring the paper's Table 1 row "Description".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Standard 2-D convolution.
+    Conv2D,
+    /// GEMM layer (`Y=X=R=S=1`).
+    FullyConnected,
+    /// Elementwise addition of two activation tensors (skip connection).
+    ResidualAdd,
+    /// Transposed convolution that increases activation resolution.
+    UpConv,
+}
+
+/// A single DNN layer with its full loop-nest bounds.
+///
+/// Dimension names follow the MAESTRO convention the paper uses:
+/// `N` batch, `K` output channels, `C` input channels, `Y`/`X` input
+/// activation height/width, `R`/`S` filter height/width.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    /// Human-readable identifier, e.g. `"conv2_1_3x3"`.
+    pub name: String,
+    pub op: OpKind,
+    /// Batch size.
+    pub n: u64,
+    /// Output channels (filters).
+    pub k: u64,
+    /// Input channels.
+    pub c: u64,
+    /// Input activation height.
+    pub y: u64,
+    /// Input activation width.
+    pub x: u64,
+    /// Filter height.
+    pub r: u64,
+    /// Filter width.
+    pub s: u64,
+    /// Convolution stride (1 for FC/residual).
+    pub stride: u64,
+    /// Up-sampling factor for [`OpKind::UpConv`] (1 otherwise).
+    pub upsample: u64,
+}
+
+impl Layer {
+    /// Standard convolution layer constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(name: &str, n: u64, k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, stride: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            op: OpKind::Conv2D,
+            n,
+            k,
+            c,
+            y,
+            x,
+            r,
+            s,
+            stride,
+            upsample: 1,
+        }
+    }
+
+    /// Fully-connected layer: `out = W[k,c] · in[c]` per batch element.
+    pub fn fc(name: &str, n: u64, k: u64, c: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            op: OpKind::FullyConnected,
+            n,
+            k,
+            c,
+            y: 1,
+            x: 1,
+            r: 1,
+            s: 1,
+            stride: 1,
+            upsample: 1,
+        }
+    }
+
+    /// Residual (elementwise) addition over a `[n, c, y, x]` activation.
+    pub fn residual(name: &str, n: u64, c: u64, y: u64, x: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            op: OpKind::ResidualAdd,
+            n,
+            k: c,
+            c,
+            y,
+            x,
+            r: 1,
+            s: 1,
+            stride: 1,
+            upsample: 1,
+        }
+    }
+
+    /// Up-convolution (transposed conv) with the given upsampling factor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn upconv(name: &str, n: u64, k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, upsample: u64) -> Self {
+        Layer {
+            name: name.to_string(),
+            op: OpKind::UpConv,
+            n,
+            k,
+            c,
+            y,
+            x,
+            r,
+            s,
+            stride: 1,
+            upsample,
+        }
+    }
+
+    /// Output activation height.
+    pub fn y_out(&self) -> u64 {
+        match self.op {
+            OpKind::UpConv => self.y * self.upsample,
+            _ => ((self.y.saturating_sub(self.r)) / self.stride) + 1,
+        }
+    }
+
+    /// Output activation width.
+    pub fn x_out(&self) -> u64 {
+        match self.op {
+            OpKind::UpConv => self.x * self.upsample,
+            _ => ((self.x.saturating_sub(self.s)) / self.stride) + 1,
+        }
+    }
+
+    /// Total multiply-accumulate operations in the layer.
+    ///
+    /// Residual adds are counted as one MAC per output element (one add on
+    /// the adder of a PE), matching how an elementwise op occupies the
+    /// array for one pass.
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            OpKind::ResidualAdd => self.n * self.c * self.y * self.x,
+            _ => self.n * self.k * self.c * self.y_out() * self.x_out() * self.r * self.s,
+        }
+    }
+
+    /// Input activation tensor volume in elements (`N·C·Y·X`).
+    pub fn input_elems(&self) -> u64 {
+        let base = self.n * self.c * self.y * self.x;
+        match self.op {
+            // Residual adds read two input tensors.
+            OpKind::ResidualAdd => 2 * base,
+            _ => base,
+        }
+    }
+
+    /// Weight tensor volume in elements (`K·C·R·S`), zero for residual.
+    pub fn weight_elems(&self) -> u64 {
+        match self.op {
+            OpKind::ResidualAdd => 0,
+            _ => self.k * self.c * self.r * self.s,
+        }
+    }
+
+    /// Output activation tensor volume in elements.
+    pub fn output_elems(&self) -> u64 {
+        self.n * self.k * self.y_out() * self.x_out()
+    }
+
+    /// `true` if the layer has a spatial (Y/X) extent larger than 1.
+    pub fn is_spatial(&self) -> bool {
+        self.y > 1 || self.x > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims() {
+        let l = Layer::conv("c", 1, 64, 3, 224, 224, 7, 7, 2);
+        assert_eq!(l.y_out(), 109 + 0 / 2); // (224-7)/2+1 = 109
+        assert_eq!(l.y_out(), 109);
+        assert_eq!(l.x_out(), 109);
+    }
+
+    #[test]
+    fn fc_is_1x1() {
+        let l = Layer::fc("fc", 4, 1000, 2048);
+        assert_eq!(l.y_out(), 1);
+        assert_eq!(l.x_out(), 1);
+        assert_eq!(l.macs(), 4 * 1000 * 2048);
+    }
+
+    #[test]
+    fn upconv_scales_resolution() {
+        let l = Layer::upconv("u", 1, 256, 512, 28, 28, 2, 2, 2);
+        assert_eq!(l.y_out(), 56);
+        assert_eq!(l.x_out(), 56);
+    }
+
+    #[test]
+    fn residual_macs_equal_elements() {
+        let l = Layer::residual("r", 1, 256, 56, 56);
+        assert_eq!(l.macs(), 256 * 56 * 56);
+        // Reads both addends.
+        assert_eq!(l.input_elems(), 2 * 256 * 56 * 56);
+        assert_eq!(l.weight_elems(), 0);
+    }
+
+    #[test]
+    fn stride_one_conv_macs() {
+        let l = Layer::conv("c", 1, 8, 4, 10, 10, 3, 3, 1);
+        // y_out = x_out = 8
+        assert_eq!(l.macs(), 8 * 4 * 8 * 8 * 3 * 3);
+    }
+}

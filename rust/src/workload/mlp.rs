@@ -1,0 +1,62 @@
+//! MLP and GEMM-sequence workloads.
+//!
+//! Table 1 notes that fully-connected layers appear "in CNNs, MLPs, RNNs,
+//! and so on"; these generators provide FC-dominated networks for the
+//! strategy studies (KP-CP territory) beyond the paper's two CNNs.
+
+use super::{Layer, Model};
+
+/// A classic classifier MLP: `in -> hidden x depth -> out`.
+pub fn mlp(batch: u64, input: u64, hidden: u64, depth: u64, out: u64) -> Model {
+    assert!(depth >= 1);
+    let mut layers = Vec::new();
+    let mut prev = input;
+    for i in 0..depth {
+        layers.push(Layer::fc(&format!("fc{i}"), batch, hidden, prev));
+        prev = hidden;
+    }
+    layers.push(Layer::fc("fc_out", batch, out, prev));
+    Model { name: format!("mlp_b{batch}_h{hidden}x{depth}"), layers }
+}
+
+/// An unrolled RNN cell sequence: `steps` GEMMs of `[hidden x hidden]`
+/// (the recurrent weight), modelling per-timestep inference traffic.
+pub fn rnn_unrolled(batch: u64, hidden: u64, steps: u64) -> Model {
+    let mut layers = Vec::new();
+    for t in 0..steps {
+        // Input and recurrent projections of one timestep.
+        layers.push(Layer::fc(&format!("t{t}_ih"), batch, hidden, hidden));
+        layers.push(Layer::fc(&format!("t{t}_hh"), batch, hidden, hidden));
+        layers.push(Layer::residual(&format!("t{t}_add"), batch, hidden, 1, 1));
+    }
+    Model { name: format!("rnn_b{batch}_h{hidden}x{steps}"), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{classify, LayerType};
+
+    #[test]
+    fn mlp_shapes_chain() {
+        let m = mlp(8, 784, 1024, 3, 10);
+        assert_eq!(m.layers.len(), 4);
+        assert_eq!(m.layers[0].c, 784);
+        assert_eq!(m.layers[3].k, 10);
+        assert_eq!(m.layers[3].c, 1024);
+        assert!(m.layers.iter().all(|l| classify(l) == LayerType::FullyConnected));
+    }
+
+    #[test]
+    fn mlp_macs() {
+        let m = mlp(1, 10, 20, 1, 5);
+        assert_eq!(m.total_macs(), 10 * 20 + 20 * 5);
+    }
+
+    #[test]
+    fn rnn_structure() {
+        let m = rnn_unrolled(4, 256, 3);
+        assert_eq!(m.layers.len(), 9);
+        assert!(m.layer_types().contains(&LayerType::Residual));
+    }
+}

@@ -1,0 +1,86 @@
+//! Workload substrate (S1): layer descriptors, Table-1 layer typing, and
+//! the two evaluation networks from the paper (ResNet-50 and UNet), plus a
+//! scaled-down CNN used by the end-to-end real-numerics example.
+
+pub mod layer;
+pub mod mlp;
+pub mod resnet50;
+pub mod tiny;
+pub mod trace;
+pub mod types;
+pub mod unet;
+
+pub use layer::{Layer, OpKind};
+pub use types::{classify, LayerType};
+
+
+/// A named DNN model: an ordered list of layers.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Total MAC count across all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Layers of a given Table-1 type.
+    pub fn layers_of_type(&self, t: LayerType) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| classify(l) == t).collect()
+    }
+
+    /// The distinct layer types present in this model, in Table-1 order.
+    pub fn layer_types(&self) -> Vec<LayerType> {
+        LayerType::ALL
+            .iter()
+            .copied()
+            .filter(|t| self.layers.iter().any(|l| classify(l) == *t))
+            .collect()
+    }
+}
+
+/// Convolution with implicit "same"-style padding: the stored `y`/`x` are
+/// the *padded* input extents so that `y_out = ceil(y_in / stride)`.
+///
+/// The cost model works on loop bounds only, so folding padding into the
+/// input extent reproduces the correct output size and MAC count without a
+/// separate padding field.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_padded(name: &str, n: u64, k: u64, c: u64, y_in: u64, x_in: u64, r: u64, s: u64, stride: u64) -> Layer {
+    let y_out = y_in.div_ceil(stride);
+    let x_out = x_in.div_ceil(stride);
+    let y = (y_out - 1) * stride + r;
+    let x = (x_out - 1) * stride + s;
+    Layer::conv(name, n, k, c, y, x, r, s, stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_padded_preserves_output_dims() {
+        // 3x3 stride-1 "same" conv: 56 -> 56.
+        let l = conv_padded("p", 1, 64, 64, 56, 56, 3, 3, 1);
+        assert_eq!(l.y_out(), 56);
+        assert_eq!(l.x_out(), 56);
+        // 7x7 stride-2 "same" conv: 224 -> 112.
+        let l = conv_padded("p", 1, 64, 3, 224, 224, 7, 7, 2);
+        assert_eq!(l.y_out(), 112);
+        assert_eq!(l.x_out(), 112);
+    }
+
+    #[test]
+    fn model_helpers() {
+        let m = Model {
+            name: "m".into(),
+            layers: vec![Layer::fc("fc", 1, 10, 20), Layer::residual("r", 1, 4, 8, 8)],
+        };
+        assert_eq!(m.total_macs(), 10 * 20 + 4 * 8 * 8);
+        assert_eq!(m.layers_of_type(LayerType::FullyConnected).len(), 1);
+        assert_eq!(m.layer_types(), vec![LayerType::Residual, LayerType::FullyConnected]);
+    }
+}

@@ -1,0 +1,129 @@
+//! ResNet-50 [He et al., CVPR'16] layer table.
+//!
+//! The full 50-layer network as evaluated in the paper (classification
+//! workload): the stem convolution, four bottleneck stages (3/4/6/3
+//! blocks), the projection shortcuts, the per-block residual additions,
+//! and the final fully-connected classifier.
+
+use super::{conv_padded, Layer, Model};
+
+/// Configuration of one bottleneck stage.
+struct Stage {
+    /// Stage index (2..=5), used for layer names (`conv2_x` …).
+    idx: usize,
+    /// Number of bottleneck blocks.
+    blocks: usize,
+    /// Bottleneck width (the `1x1`/`3x3` channel count).
+    width: u64,
+    /// Input spatial resolution of the stage (pre-downsampling).
+    res: u64,
+    /// Input channels to the first block of the stage.
+    in_ch: u64,
+    /// Stride applied by the first block (spatial downsampling).
+    stride: u64,
+}
+
+/// Build ResNet-50 with the given batch size.
+///
+/// Input is the standard `batch x 3 x 224 x 224` image tensor. Max-pool
+/// layers are memory-reshape operations with no MACs and negligible
+/// distribution traffic at the package level, so they are not modeled
+/// (consistent with MAESTRO-style cost analysis).
+pub fn resnet50(batch: u64) -> Model {
+    let mut layers: Vec<Layer> = Vec::new();
+    let n = batch;
+
+    // Stem: 7x7/2, 64 filters, 224 -> 112 (then 3x3/2 max-pool -> 56).
+    layers.push(conv_padded("conv1_7x7", n, 64, 3, 224, 224, 7, 7, 2));
+
+    let stages = [
+        Stage { idx: 2, blocks: 3, width: 64, res: 56, in_ch: 64, stride: 1 },
+        Stage { idx: 3, blocks: 4, width: 128, res: 56, in_ch: 256, stride: 2 },
+        Stage { idx: 4, blocks: 6, width: 256, res: 28, in_ch: 512, stride: 2 },
+        Stage { idx: 5, blocks: 3, width: 512, res: 14, in_ch: 1024, stride: 2 },
+    ];
+
+    for st in &stages {
+        let out_ch = st.width * 4;
+        let out_res = st.res / st.stride;
+        for b in 0..st.blocks {
+            let first = b == 0;
+            let block_in_ch = if first { st.in_ch } else { out_ch };
+            let block_in_res = if first { st.res } else { out_res };
+            let stride = if first { st.stride } else { 1 };
+            let tag = |op: &str| format!("conv{}_{}_{}", st.idx, b + 1, op);
+
+            // 1x1 reduce.
+            layers.push(conv_padded(&tag("1x1a"), n, st.width, block_in_ch, block_in_res, block_in_res, 1, 1, stride));
+            // 3x3.
+            layers.push(conv_padded(&tag("3x3"), n, st.width, st.width, out_res, out_res, 3, 3, 1));
+            // 1x1 expand.
+            layers.push(conv_padded(&tag("1x1b"), n, out_ch, st.width, out_res, out_res, 1, 1, 1));
+            // Projection shortcut on the first block of each stage.
+            if first {
+                layers.push(conv_padded(&tag("proj"), n, out_ch, block_in_ch, block_in_res, block_in_res, 1, 1, stride));
+            }
+            // Residual addition closing the block.
+            layers.push(Layer::residual(&tag("add"), n, out_ch, out_res, out_res));
+        }
+    }
+
+    // Global average pool is negligible; final classifier GEMM.
+    layers.push(Layer::fc("fc1000", n, 1000, 2048));
+
+    Model { name: format!("resnet50_b{batch}"), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{classify, LayerType};
+
+    #[test]
+    fn layer_count() {
+        let m = resnet50(1);
+        // Convs: 1 stem + (3+4+6+3) blocks * 3 + 4 projections = 53.
+        // Residual adds: 16. FC: 1. Total 70.
+        let convs = m.layers.iter().filter(|l| l.op == crate::workload::OpKind::Conv2D).count();
+        assert_eq!(convs, 53);
+        let adds = m.layers.iter().filter(|l| l.op == crate::workload::OpKind::ResidualAdd).count();
+        assert_eq!(adds, 16);
+        assert_eq!(m.layers.len(), 70);
+    }
+
+    #[test]
+    fn total_macs_close_to_published() {
+        // ResNet-50 is ~3.8 GMACs per image at 224x224 (4.1e9 with
+        // padding folded into input extents). Check the right ballpark.
+        let m = resnet50(1);
+        let g = m.total_macs() as f64 / 1e9;
+        assert!(g > 3.0 && g < 4.6, "got {g} GMACs");
+    }
+
+    #[test]
+    fn macs_scale_linearly_with_batch() {
+        assert_eq!(resnet50(4).total_macs(), 4 * resnet50(1).total_macs());
+    }
+
+    #[test]
+    fn has_expected_layer_types() {
+        let m = resnet50(1);
+        let types = m.layer_types();
+        assert!(types.contains(&LayerType::HighRes));
+        assert!(types.contains(&LayerType::LowRes));
+        assert!(types.contains(&LayerType::Residual));
+        assert!(types.contains(&LayerType::FullyConnected));
+        assert!(!types.contains(&LayerType::UpConv));
+        // The stem conv (3 channels, 224px) is high-res.
+        assert_eq!(classify(&m.layers[0]), LayerType::HighRes);
+    }
+
+    #[test]
+    fn stage_output_resolutions() {
+        let m = resnet50(1);
+        // Last conv of stage 5 runs at 7x7.
+        let l = m.layers.iter().rev().find(|l| l.name.contains("conv5") && l.name.contains("1x1b")).unwrap();
+        assert_eq!(l.y_out(), 7);
+        assert_eq!(l.k, 2048);
+    }
+}

@@ -1,0 +1,46 @@
+//! Scaled-down CNN used by the end-to-end real-numerics example.
+//!
+//! The paper's evaluation networks run through the analytical cost model;
+//! this small ResNet-style network additionally runs with *real numerics*
+//! through the AOT-compiled JAX/Pallas compute path on a simulated
+//! multi-chiplet package, proving the three layers compose. Its tile shapes
+//! are the ones `python/compile/aot.py` lowers to HLO artifacts.
+
+use super::{conv_padded, Layer, Model};
+
+/// Tile-shape contract shared with `python/compile/aot.py`:
+/// every conv in the tiny network reduces to GEMM tiles of
+/// `[TILE_M, TILE_K] x [TILE_K, TILE_N]` after im2col.
+pub const TILE_M: usize = 64;
+pub const TILE_K: usize = 64;
+pub const TILE_N: usize = 64;
+
+/// Build the tiny end-to-end CNN.
+///
+/// Input is `batch x 16 x 32 x 32`. All convs are "same"-padded 3x3 or
+/// 1x1 so that im2col dimensions stay multiples of the tile contract.
+pub fn tiny_cnn(batch: u64) -> Model {
+    let n = batch;
+    let mut layers = Vec::new();
+    layers.push(conv_padded("t_conv1", n, 32, 16, 32, 32, 3, 3, 1));
+    layers.push(conv_padded("t_conv2", n, 32, 32, 32, 32, 3, 3, 1));
+    layers.push(Layer::residual("t_add1", n, 32, 32, 32));
+    layers.push(conv_padded("t_conv3", n, 64, 32, 32, 32, 3, 3, 2));
+    layers.push(conv_padded("t_conv4", n, 64, 64, 16, 16, 3, 3, 1));
+    layers.push(Layer::residual("t_add2", n, 64, 16, 16));
+    layers.push(Layer::fc("t_fc", n, 64, 64 * 16 * 16));
+    Model { name: format!("tiny_cnn_b{batch}"), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_dims() {
+        let m = tiny_cnn(1);
+        assert_eq!(m.layers.len(), 7);
+        assert_eq!(m.layers[3].y_out(), 16);
+        assert!(m.total_macs() > 0);
+    }
+}

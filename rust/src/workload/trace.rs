@@ -1,0 +1,145 @@
+//! Workload trace files: load arbitrary layer lists from a simple text
+//! format so downstream users can evaluate their own networks without
+//! recompiling.
+//!
+//! Format (one layer per line, `#` comments):
+//!
+//! ```text
+//! model my_net
+//! conv   <name> n k c y x r s stride
+//! fc     <name> n k c
+//! res    <name> n c y x
+//! upconv <name> n k c y x r s up
+//! ```
+//!
+//! `conv` takes *padded* input extents (as stored in [`Layer`]); use
+//! `convp` for "SAME"-style auto-padding from unpadded extents.
+
+use super::{conv_padded, Layer, Model};
+use anyhow::{bail, Context, Result};
+
+/// Parse a workload trace from text.
+pub fn parse(text: &str) -> Result<Model> {
+    let mut name = "trace".to_string();
+    let mut layers = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        let ctx = || format!("trace line {}", i + 1);
+        let num = |s: &str| -> Result<u64> { s.parse::<u64>().with_context(|| format!("bad number '{s}' on line {}", i + 1)) };
+        match tok[0] {
+            "model" => {
+                if tok.len() != 2 {
+                    bail!("{}: 'model' takes one name", ctx());
+                }
+                name = tok[1].to_string();
+            }
+            "conv" | "convp" => {
+                if tok.len() != 10 {
+                    bail!("{}: conv takes name + 8 numbers", ctx());
+                }
+                let v: Vec<u64> = tok[2..].iter().map(|s| num(s)).collect::<Result<_>>()?;
+                let l = if tok[0] == "convp" {
+                    conv_padded(tok[1], v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7])
+                } else {
+                    Layer::conv(tok[1], v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7])
+                };
+                layers.push(l);
+            }
+            "fc" => {
+                if tok.len() != 5 {
+                    bail!("{}: fc takes name + 3 numbers", ctx());
+                }
+                layers.push(Layer::fc(tok[1], num(tok[2])?, num(tok[3])?, num(tok[4])?));
+            }
+            "res" => {
+                if tok.len() != 6 {
+                    bail!("{}: res takes name + 4 numbers", ctx());
+                }
+                layers.push(Layer::residual(tok[1], num(tok[2])?, num(tok[3])?, num(tok[4])?, num(tok[5])?));
+            }
+            "upconv" => {
+                if tok.len() != 10 {
+                    bail!("{}: upconv takes name + 8 numbers", ctx());
+                }
+                let v: Vec<u64> = tok[2..].iter().map(|s| num(s)).collect::<Result<_>>()?;
+                layers.push(Layer::upconv(tok[1], v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]));
+            }
+            other => bail!("{}: unknown layer kind '{other}'", ctx()),
+        }
+    }
+    if layers.is_empty() {
+        bail!("trace defines no layers");
+    }
+    Ok(Model { name, layers })
+}
+
+/// Load a trace from a file.
+pub fn load(path: &std::path::Path) -> Result<Model> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+    parse(&text)
+}
+
+/// Serialize a model back to trace text (round-trip support).
+pub fn dump(model: &Model) -> String {
+    use super::OpKind;
+    let mut out = format!("model {}\n", model.name);
+    for l in &model.layers {
+        match l.op {
+            OpKind::Conv2D => out.push_str(&format!(
+                "conv {} {} {} {} {} {} {} {} {}\n",
+                l.name, l.n, l.k, l.c, l.y, l.x, l.r, l.s, l.stride
+            )),
+            OpKind::FullyConnected => out.push_str(&format!("fc {} {} {} {}\n", l.name, l.n, l.k, l.c)),
+            OpKind::ResidualAdd => out.push_str(&format!("res {} {} {} {} {}\n", l.name, l.n, l.c, l.y, l.x)),
+            OpKind::UpConv => out.push_str(&format!(
+                "upconv {} {} {} {} {} {} {} {} {}\n",
+                l.name, l.n, l.k, l.c, l.y, l.x, l.r, l.s, l.upsample
+            )),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# test net\nmodel tiny\nconvp c1 1 8 3 16 16 3 3 1\nfc f1 1 10 128\nres r1 1 8 16 16\nupconv u1 1 4 8 8 8 2 2 2\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.layers.len(), 4);
+        assert_eq!(m.layers[0].y_out(), 16); // convp SAME
+        assert_eq!(m.layers[3].y_out(), 16); // upconv x2
+    }
+
+    #[test]
+    fn round_trip() {
+        let m = parse(SAMPLE).unwrap();
+        let m2 = parse(&dump(&m)).unwrap();
+        assert_eq!(m.layers, m2.layers);
+        assert_eq!(m.name, m2.name);
+    }
+
+    #[test]
+    fn round_trips_resnet50() {
+        let m = crate::workload::resnet50::resnet50(4);
+        let m2 = parse(&dump(&m)).unwrap();
+        assert_eq!(m.layers, m2.layers);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("").is_err());
+        assert!(parse("bogus x\n").is_err());
+        assert!(parse("fc too few\n").is_err());
+        assert!(parse("conv c 1 2 3\n").is_err());
+        assert!(parse("fc f 1 x 3\n").is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Layer-type classification (paper Table 1).
+//!
+//! The paper buckets layers into five types whose bandwidth/partitioning
+//! behaviour differs (Figs 3, 7, 9, 10):
+//!
+//! | Type       | Description                                               |
+//! |------------|-----------------------------------------------------------|
+//! | High-res   | CONV2D with fewer channels than input-activation width    |
+//! | Low-res    | CONV2D with more channels than input-activation width     |
+//! | Residual   | Skip connections                                          |
+//! | Fully-conn.| GEMM layer                                                |
+//! | UpCONV     | CONV2D variant that increases activation resolution       |
+
+use super::layer::{Layer, OpKind};
+use std::fmt;
+
+/// The five layer categories from Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerType {
+    HighRes,
+    LowRes,
+    Residual,
+    FullyConnected,
+    UpConv,
+}
+
+impl LayerType {
+    /// All types in the order the paper's figures list them.
+    pub const ALL: [LayerType; 5] = [
+        LayerType::HighRes,
+        LayerType::LowRes,
+        LayerType::Residual,
+        LayerType::FullyConnected,
+        LayerType::UpConv,
+    ];
+
+    /// Short label used in figure axes.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerType::HighRes => "High-res",
+            LayerType::LowRes => "Low-res",
+            LayerType::Residual => "Residual",
+            LayerType::FullyConnected => "FC",
+            LayerType::UpConv => "Up-Conv",
+        }
+    }
+}
+
+impl fmt::Display for LayerType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Classify a layer per Table 1.
+///
+/// A CONV2D layer is *high-resolution* when its input-activation width
+/// exceeds its channel count (`X > C`), i.e. parallelism is plentiful in
+/// the spatial dims; *low-resolution* otherwise.
+pub fn classify(layer: &Layer) -> LayerType {
+    match layer.op {
+        OpKind::FullyConnected => LayerType::FullyConnected,
+        OpKind::ResidualAdd => LayerType::Residual,
+        OpKind::UpConv => LayerType::UpConv,
+        OpKind::Conv2D => {
+            if layer.x > layer.c {
+                LayerType::HighRes
+            } else {
+                LayerType::LowRes
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layer::Layer;
+
+    #[test]
+    fn classify_all_kinds() {
+        // 224-wide input, 3 channels: high resolution.
+        assert_eq!(classify(&Layer::conv("a", 1, 64, 3, 224, 224, 7, 7, 2)), LayerType::HighRes);
+        // 7-wide input, 512 channels: low resolution.
+        assert_eq!(classify(&Layer::conv("b", 1, 512, 512, 7, 7, 3, 3, 1)), LayerType::LowRes);
+        assert_eq!(classify(&Layer::fc("c", 1, 1000, 2048)), LayerType::FullyConnected);
+        assert_eq!(classify(&Layer::residual("d", 1, 256, 56, 56)), LayerType::Residual);
+        assert_eq!(classify(&Layer::upconv("e", 1, 256, 512, 28, 28, 2, 2, 2)), LayerType::UpConv);
+    }
+
+    #[test]
+    fn boundary_equal_width_and_channels_is_low_res() {
+        // X == C → "more channels than width" bucket (not strictly more,
+        // but the paper's high-res definition requires input dim > channel
+        // dim).
+        assert_eq!(classify(&Layer::conv("b", 1, 64, 56, 56, 56, 3, 3, 1)), LayerType::LowRes);
+    }
+}

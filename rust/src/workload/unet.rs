@@ -1,0 +1,112 @@
+//! UNet [Ronneberger et al., MICCAI'15] layer table.
+//!
+//! The classic unpadded 572x572 segmentation network the paper uses as its
+//! second workload: a 4-level contracting path, 1024-channel bottleneck,
+//! and an expanding path of 2x2 up-convolutions followed by unpadded 3x3
+//! convolutions, closed by a 1x1 classifier conv.
+
+use super::{Layer, Model};
+
+/// Build UNet with the given batch size.
+///
+/// All 3x3 convolutions are *unpadded* (`valid`), as in the original
+/// architecture, so each conv shrinks the activation by 2 pixels; 2x2
+/// max-pools (not modeled, zero MACs) halve resolution between encoder
+/// levels; 2x2 up-convolutions double it on the way up. Decoder 3x3 convs
+/// consume the channel-concatenated skip tensor (2x channels in).
+pub fn unet(batch: u64) -> Model {
+    let mut layers: Vec<Layer> = Vec::new();
+    let n = batch;
+
+    // (level, in_channels, out_channels, input resolution)
+    // Encoder: two valid 3x3 convs per level.
+    let mut res: u64 = 572;
+    let mut in_ch: u64 = 1;
+    let enc_widths = [64u64, 128, 256, 512];
+    let mut skip_res: Vec<u64> = Vec::new();
+    for (lvl, &w) in enc_widths.iter().enumerate() {
+        layers.push(Layer::conv(&format!("enc{}_conv_a", lvl + 1), n, w, in_ch, res, res, 3, 3, 1));
+        res -= 2;
+        layers.push(Layer::conv(&format!("enc{}_conv_b", lvl + 1), n, w, w, res, res, 3, 3, 1));
+        res -= 2;
+        skip_res.push(res);
+        in_ch = w;
+        res /= 2; // 2x2 max-pool.
+    }
+
+    // Bottleneck at 1024 channels.
+    layers.push(Layer::conv("bott_conv_a", n, 1024, 512, res, res, 3, 3, 1));
+    res -= 2;
+    layers.push(Layer::conv("bott_conv_b", n, 1024, 1024, res, res, 3, 3, 1));
+    res -= 2;
+    in_ch = 1024;
+
+    // Decoder: up-conv then two valid 3x3 convs per level.
+    for (i, &w) in enc_widths.iter().rev().enumerate() {
+        let lvl = enc_widths.len() - i; // 4, 3, 2, 1
+        layers.push(Layer::upconv(&format!("dec{lvl}_upconv"), n, w, in_ch, res, res, 2, 2, 2));
+        res *= 2;
+        // Skip tensor is center-cropped to `res`; concat doubles channels.
+        layers.push(Layer::conv(&format!("dec{lvl}_conv_a"), n, w, 2 * w, res, res, 3, 3, 1));
+        res -= 2;
+        layers.push(Layer::conv(&format!("dec{lvl}_conv_b"), n, w, w, res, res, 3, 3, 1));
+        res -= 2;
+        in_ch = w;
+    }
+
+    // Final 1x1 conv to 2 classes.
+    layers.push(Layer::conv("final_1x1", n, 2, 64, res, res, 1, 1, 1));
+
+    Model { name: format!("unet_b{batch}"), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{classify, LayerType, OpKind};
+
+    #[test]
+    fn layer_count_and_final_resolution() {
+        let m = unet(1);
+        // 8 encoder convs + 2 bottleneck + 4 * (upconv + 2 convs) + final.
+        assert_eq!(m.layers.len(), 8 + 2 + 12 + 1);
+        let last = m.layers.last().unwrap();
+        // Classic UNet output is 388x388.
+        assert_eq!(last.y_out(), 388);
+        assert_eq!(last.k, 2);
+    }
+
+    #[test]
+    fn resolutions_match_published_table() {
+        let m = unet(1);
+        let bott = m.layers.iter().find(|l| l.name == "bott_conv_b").unwrap();
+        assert_eq!(bott.y, 30);
+        assert_eq!(bott.y_out(), 28);
+        let up4 = m.layers.iter().find(|l| l.name == "dec4_upconv").unwrap();
+        assert_eq!(up4.y_out(), 56);
+    }
+
+    #[test]
+    fn has_upconv_layers() {
+        let m = unet(1);
+        let ups = m.layers.iter().filter(|l| l.op == OpKind::UpConv).count();
+        assert_eq!(ups, 4);
+        assert!(m.layer_types().contains(&LayerType::UpConv));
+    }
+
+    #[test]
+    fn encoder_is_high_res_deep_is_low_res() {
+        let m = unet(1);
+        assert_eq!(classify(&m.layers[0]), LayerType::HighRes);
+        let bott = m.layers.iter().find(|l| l.name == "bott_conv_a").unwrap();
+        assert_eq!(classify(bott), LayerType::LowRes);
+    }
+
+    #[test]
+    fn total_macs_in_expected_range() {
+        // Classic UNet at 572x572 with the full decoder works out to
+        // ~167 GMACs; accept a generous band.
+        let g = unet(1).total_macs() as f64 / 1e9;
+        assert!(g > 120.0 && g < 220.0, "got {g} GMACs");
+    }
+}

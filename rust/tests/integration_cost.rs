@@ -1,0 +1,166 @@
+//! Integration tests over the full cost pipeline: workload -> partition ->
+//! intra-chiplet mapping -> NoP models -> phase timeline, checking the
+//! paper's qualitative claims end to end.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{evaluate_layer, evaluate_model, CostEngine};
+use wienna::dataflow::Strategy;
+use wienna::energy::model_distribution_energy;
+use wienna::workload::{classify, resnet50::resnet50, unet::unet, LayerType};
+
+fn sys() -> SystemConfig {
+    SystemConfig::default()
+}
+
+#[test]
+fn headline_resnet50_speedup_band() {
+    // Paper Fig 7: 2.7-5.1x end-to-end over the interposer baselines.
+    // Accept a wider band for the reimplemented substrate: >= 1.8x and
+    // <= 10x across the {WIENNA} x {Interposer} grid.
+    let m = resnet50(64);
+    let th: Vec<f64> = DesignPoint::ALL
+        .iter()
+        .map(|&dp| evaluate_model(&CostEngine::for_design_point(&sys(), dp), &m, None).macs_per_cycle)
+        .collect();
+    let (ic, ia, wc, wa) = (th[0], th[1], th[2], th[3]);
+    let min_gain = (wc / ia).min(wa / ia).min(wc / ic).min(wa / ic);
+    let max_gain = (wc / ia).max(wa / ia).max(wc / ic).max(wa / ic);
+    assert!(min_gain > 1.2, "min gain {min_gain:.2}");
+    assert!(max_gain > 2.2 && max_gain < 12.0, "max gain {max_gain:.2}");
+}
+
+#[test]
+fn headline_unet_speedup_band() {
+    let m = unet(64);
+    let th: Vec<f64> = DesignPoint::ALL
+        .iter()
+        .map(|&dp| evaluate_model(&CostEngine::for_design_point(&sys(), dp), &m, None).macs_per_cycle)
+        .collect();
+    assert!(th[2] > th[1], "WIENNA-C must beat Interposer-A at equal BW");
+    assert!(th[3] > th[2], "aggressive WIENNA beats conservative");
+    assert!(th[1] > th[0], "aggressive interposer beats conservative");
+}
+
+#[test]
+fn equal_bandwidth_wienna_wins_on_broadcast() {
+    // WIENNA-C and Interposer-A share 16 B/cyc; the broadcast advantage
+    // must be visible on both networks (paper: 2.58x / 2.21x).
+    for m in [resnet50(64), unet(64)] {
+        let w = evaluate_model(&CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_C), &m, None);
+        let i = evaluate_model(&CostEngine::for_design_point(&sys(), DesignPoint::INTERPOSER_A), &m, None);
+        let r = w.macs_per_cycle / i.macs_per_cycle;
+        assert!(r > 1.3 && r < 8.0, "{}: {r:.2}x", m.name);
+    }
+}
+
+#[test]
+fn adaptive_beats_fixed_on_both_models() {
+    // Paper: +4.7% (ResNet50) and +9.1% (UNet) over all-KP-CP.
+    for m in [resnet50(64), unet(64)] {
+        let e = CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_C);
+        let ad = evaluate_model(&e, &m, None).macs_per_cycle;
+        let kp = evaluate_model(&e, &m, Some(Strategy::KpCp)).macs_per_cycle;
+        assert!(ad >= kp, "{}: adaptive {ad:.0} < kp-cp {kp:.0}", m.name);
+    }
+}
+
+#[test]
+fn energy_reduction_everywhere() {
+    // Paper Fig 9: WIENNA reduces distribution energy across all
+    // strategies and both DNNs; average 38.2%.
+    let mut all = Vec::new();
+    for m in [resnet50(16), unet(4)] {
+        for s in [None, Some(Strategy::KpCp), Some(Strategy::NpCp), Some(Strategy::YpXp)] {
+            let c = model_distribution_energy(&sys(), &m, s);
+            assert!(c.reduction() > 0.0, "{} {:?}", m.name, s);
+            all.push(c.reduction());
+        }
+    }
+    let avg = all.iter().sum::<f64>() / all.len() as f64;
+    assert!(avg > 0.2 && avg < 0.95, "avg reduction {:.1}%", avg * 100.0);
+}
+
+#[test]
+fn observation1_strategy_preferences() {
+    // High-res conv layers favor YP-XP; FC layers favor KP-CP (Fig 3).
+    let e = CostEngine::ideal(&sys(), 64.0);
+    let m = resnet50(64);
+    let mut hi_votes = std::collections::HashMap::new();
+    let mut fc_votes = std::collections::HashMap::new();
+    for l in &m.layers {
+        let (s, _) = wienna::cost::best_strategy(&e, l);
+        match classify(l) {
+            LayerType::HighRes => *hi_votes.entry(s).or_insert(0) += 1,
+            LayerType::FullyConnected => *fc_votes.entry(s).or_insert(0) += 1,
+            _ => {}
+        }
+    }
+    let top = |v: &std::collections::HashMap<Strategy, i32>| *v.iter().max_by_key(|(_, &c)| c).unwrap().0;
+    assert_eq!(top(&hi_votes), Strategy::YpXp, "{hi_votes:?}");
+    assert_eq!(top(&fc_votes), Strategy::KpCp, "{fc_votes:?}");
+}
+
+#[test]
+fn fig8_nonmonotonic_or_spread() {
+    // Fig 8: throughput is not a monotone function of chiplet count for
+    // all (model, strategy) combinations.
+    let m = resnet50(64);
+    let mut any_nonmonotone = false;
+    for s in Strategy::ALL {
+        let th: Vec<f64> = [32u64, 64, 128, 256, 512, 1024]
+            .iter()
+            .map(|&nc| {
+                let e = CostEngine::for_design_point(&SystemConfig::with_chiplets(nc), DesignPoint::WIENNA_C);
+                evaluate_model(&e, &m, Some(s)).macs_per_cycle
+            })
+            .collect();
+        let increasing = th.windows(2).all(|w| w[1] >= w[0]);
+        let decreasing = th.windows(2).all(|w| w[1] <= w[0]);
+        if !increasing && !decreasing {
+            any_nonmonotone = true;
+        }
+    }
+    assert!(any_nonmonotone, "expected a non-monotonic cluster-size curve");
+}
+
+#[test]
+fn multicast_factor_ranking() {
+    // Fig 10: KP-CP exposes the highest average multicast factor.
+    let m = resnet50(64);
+    let mut avg = [0.0f64; 3];
+    for (i, &s) in Strategy::ALL.iter().enumerate() {
+        let mut total = 0.0;
+        for l in &m.layers {
+            let p = wienna::dataflow::partition::partition(l, s, 256, 1);
+            total += p.multicast_factor();
+        }
+        avg[i] = total / m.layers.len() as f64;
+    }
+    assert!(avg[0] > avg[1] && avg[0] > avg[2], "KP-CP should rank first: {avg:?}");
+}
+
+#[test]
+fn bottleneck_classification_consistent() {
+    let e = CostEngine::for_design_point(&sys(), DesignPoint::INTERPOSER_C);
+    let m = resnet50(16);
+    for l in &m.layers {
+        for s in Strategy::ALL {
+            let c = evaluate_layer(&e, l, s);
+            // The latency must be at least the bottleneck phase length.
+            let t = c.timeline;
+            let steady = t.stream.max(t.compute).max(t.collect);
+            assert!(c.latency >= steady, "{}", l.name);
+            assert!(c.latency <= t.preload + steady + t.fill + 1e-6);
+        }
+    }
+}
+
+#[test]
+fn local_buffer_requirements_reported() {
+    let e = CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_C);
+    let m = unet(4);
+    for l in &m.layers {
+        let c = evaluate_layer(&e, l, Strategy::KpCp);
+        assert!(c.local_buffer_bytes > 0, "{}", l.name);
+    }
+}

@@ -1,0 +1,160 @@
+//! End-to-end integration over the PJRT runtime: artifacts -> executable
+//! cache -> package executor -> numerics vs the naive oracle.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with
+//! a loud message) when the artifact directory is absent so that pure
+//! Rust-side CI still passes.
+
+use std::path::Path;
+use std::sync::Arc;
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::coordinator::exec::{deterministic_weights, naive_conv, Tensor};
+use wienna::coordinator::{Coordinator, PackageExecutor, StrategyPolicy};
+use wienna::dataflow::Strategy;
+use wienna::runtime::ExecutableCache;
+use wienna::workload::tiny::tiny_cnn;
+use wienna::workload::Layer;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIPPED: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn cache() -> Option<Arc<ExecutableCache>> {
+    artifacts_dir().map(|d| Arc::new(ExecutableCache::new(d).expect("load artifacts")))
+}
+
+#[test]
+fn manifest_has_expected_artifacts() {
+    let Some(c) = cache() else { return };
+    assert!(c.manifest().get("matmul64").is_ok());
+    assert!(c.manifest().get("add4096").is_ok());
+}
+
+#[test]
+fn matmul_artifact_matches_cpu_reference() {
+    let Some(c) = cache() else { return };
+    // a = counting matrix, b = identity-ish.
+    let a: Vec<f32> = (0..64 * 64).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
+    let mut b = vec![0.0f32; 64 * 64];
+    for i in 0..64 {
+        b[i * 64 + i] = 2.0;
+    }
+    let out = c.execute_f32("matmul64", &[&a, &b]).unwrap();
+    for i in 0..64 * 64 {
+        assert!((out[i] - 2.0 * a[i]).abs() < 1e-4, "elem {i}: {} vs {}", out[i], 2.0 * a[i]);
+    }
+}
+
+#[test]
+fn add_artifact_adds() {
+    let Some(c) = cache() else { return };
+    let a: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..4096).map(|i| -2.0 * i as f32).collect();
+    let out = c.execute_f32("add4096", &[&a, &b]).unwrap();
+    for i in 0..4096 {
+        assert_eq!(out[i], -(i as f32));
+    }
+}
+
+#[test]
+fn wrong_input_shapes_rejected() {
+    let Some(c) = cache() else { return };
+    let short = vec![0.0f32; 10];
+    let ok = vec![0.0f32; 64 * 64];
+    assert!(c.execute_f32("matmul64", &[&short, &ok]).is_err());
+    assert!(c.execute_f32("matmul64", &[&ok]).is_err());
+    assert!(c.execute_f32("no_such_artifact", &[&ok, &ok]).is_err());
+}
+
+#[test]
+fn conv_layer_via_xla_matches_oracle() {
+    let Some(c) = cache() else { return };
+    let sys = SystemConfig { num_chiplets: 16, pes_per_chiplet: 64, ..Default::default() };
+    let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, StrategyPolicy::Fixed(Strategy::KpCp));
+    let mut exec = PackageExecutor::new(coord, c);
+    let layer = wienna::workload::conv_padded("itest", 1, 8, 4, 12, 12, 3, 3, 1);
+    let input = Tensor::from_fn(1, 4, 12, 12, |_, ci, y, x| ((ci * 31 + y * 7 + x) % 11) as f32 * 0.1 - 0.5);
+    let w = deterministic_weights("itest", 8, 4, 3, 3);
+    let (out, stats) = exec.conv_layer(&layer, &input, &w).unwrap();
+    let oracle = naive_conv(&layer, &input, &w);
+    let err = out
+        .data
+        .iter()
+        .zip(oracle.data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-4, "max err {err}");
+    assert!(stats.tiles_dispatched > 0);
+}
+
+#[test]
+fn full_tiny_cnn_e2e_all_policies() {
+    let Some(c) = cache() else { return };
+    let input = Tensor::from_fn(1, 16, 32, 32, |_, ci, y, x| ((ci * 5 + y * 3 + x) % 17) as f32 * 0.05 - 0.4);
+    for policy in [
+        StrategyPolicy::Adaptive,
+        StrategyPolicy::Fixed(Strategy::KpCp),
+        StrategyPolicy::Fixed(Strategy::YpXp),
+    ] {
+        let sys = SystemConfig { num_chiplets: 16, pes_per_chiplet: 64, ..Default::default() };
+        let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, policy);
+        let mut exec = PackageExecutor::new(coord, c.clone());
+        let report = exec.run_model(&tiny_cnn(1), &input).unwrap();
+        assert!(
+            report.max_abs_err < 1e-3,
+            "{policy:?}: max err {}",
+            report.max_abs_err
+        );
+        assert_eq!(report.output_len, 64);
+        // Numerics must be identical regardless of the partition policy —
+        // partitioning moves data, it must not change math.
+    }
+}
+
+#[test]
+fn corrupt_hlo_artifact_fails_loudly_not_silently() {
+    // Failure injection: a manifest that points at garbage HLO text must
+    // fail at compile time with a useful error, not produce numbers.
+    use wienna::testutil::TempDir;
+    let d = TempDir::new("wienna_corrupt");
+    std::fs::write(
+        d.path().join("manifest.txt"),
+        "version 1\nartifact bad bad.hlo.txt f32 2x2;2x2 2x2\n",
+    )
+    .unwrap();
+    std::fs::write(d.path().join("bad.hlo.txt"), "this is not HLO text {{{").unwrap();
+    let cache = ExecutableCache::new(d.path()).expect("manifest itself is well-formed");
+    let a = vec![0.0f32; 4];
+    let err = cache.execute_f32("bad", &[&a, &a]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad"), "error should name the artifact: {msg}");
+}
+
+#[test]
+fn truncated_manifest_rejected() {
+    use wienna::testutil::TempDir;
+    let d = TempDir::new("wienna_trunc");
+    std::fs::write(d.path().join("manifest.txt"), "version 1\nartifact m m.hlo.txt f32\n").unwrap();
+    assert!(ExecutableCache::new(d.path()).is_err());
+}
+
+#[test]
+fn residual_layer_via_xla() {
+    let Some(c) = cache() else { return };
+    let sys = SystemConfig { num_chiplets: 16, pes_per_chiplet: 64, ..Default::default() };
+    let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
+    let mut exec = PackageExecutor::new(coord, c);
+    let a = Tensor::from_fn(1, 8, 10, 10, |_, ci, y, x| (ci + y + x) as f32);
+    let b = Tensor::from_fn(1, 8, 10, 10, |_, ci, y, x| -((ci * y * x) as f32));
+    let layer = Layer::residual("r", 1, 8, 10, 10);
+    let (out, _) = exec.residual_layer(&layer, &a, &b).unwrap();
+    for i in 0..a.data.len() {
+        assert_eq!(out.data[i], a.data[i] + b.data[i]);
+    }
+}

@@ -1,0 +1,279 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state), driven by the crate's deterministic SplitMix64 generator.
+//!
+//! Each property runs over hundreds of randomly drawn (layer, package,
+//! strategy) configurations; failures print the seed for reproduction.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::coordinator::{Coordinator, StrategyPolicy};
+use wienna::cost::{evaluate_layer, CostEngine};
+use wienna::dataflow::{partition, ChipletArch, MapPolicy, Strategy};
+use wienna::nop::sim::MeshSim;
+use wienna::testutil::Rng;
+use wienna::workload::{Layer, OpKind};
+
+/// Draw a random but well-formed layer.
+fn arb_layer(rng: &mut Rng) -> Layer {
+    match rng.range_u64(0, 3) {
+        0 => {
+            // Conv2D with padded input extents.
+            let r = *rng.pick(&[1u64, 3, 5, 7]);
+            let stride = *rng.pick(&[1u64, 2]);
+            let yo = rng.range_u64(1, 56);
+            let y = (yo - 1) * stride + r;
+            Layer::conv(
+                "p_conv",
+                rng.range_u64(1, 64),
+                rng.range_u64(1, 512),
+                rng.range_u64(1, 512),
+                y,
+                y,
+                r,
+                r,
+                stride,
+            )
+        }
+        1 => Layer::fc("p_fc", rng.range_u64(1, 64), rng.range_u64(1, 4096), rng.range_u64(1, 4096)),
+        2 => Layer::residual("p_res", rng.range_u64(1, 64), rng.range_u64(1, 512), rng.range_u64(1, 56), rng.range_u64(1, 56)),
+        _ => Layer::upconv(
+            "p_up",
+            rng.range_u64(1, 8),
+            rng.range_u64(1, 256),
+            rng.range_u64(1, 256),
+            rng.range_u64(2, 32),
+            rng.range_u64(2, 32),
+            2,
+            2,
+            2,
+        ),
+    }
+}
+
+fn arb_sys(rng: &mut Rng) -> SystemConfig {
+    let nc = *rng.pick(&[4u64, 16, 64, 256, 1024]);
+    SystemConfig {
+        num_chiplets: nc,
+        pes_per_chiplet: *rng.pick(&[16u64, 64, 256]),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_partition_conserves_work_and_bytes() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for iter in 0..500 {
+        let layer = arb_layer(&mut rng);
+        let sys = arb_sys(&mut rng);
+        let s = *rng.pick(&Strategy::ALL);
+        let p = partition::partition(&layer, s, sys.num_chiplets, sys.bytes_per_elem);
+
+        // Work conservation: used chiplets x per-chiplet sub-problem must
+        // cover the layer's MACs.
+        assert!(
+            p.used_chiplets * p.sub_layer.macs() >= layer.macs(),
+            "iter {iter}: {s} on {layer:?}: {} x {} < {}",
+            p.used_chiplets,
+            p.sub_layer.macs(),
+            layer.macs()
+        );
+        // Never more chiplets than available or than parallelism.
+        assert!(p.used_chiplets >= 1 && p.used_chiplets <= sys.num_chiplets);
+        // Traffic sanity: delivered >= sent >= 0, multicast factor >= 1.
+        for t in &p.traffic {
+            assert!(t.avg_dests >= 1.0 - 1e-9, "iter {iter}");
+            assert!(t.avg_dests <= sys.num_chiplets as f64 + 1e-9, "iter {iter}");
+        }
+        assert!(p.multicast_factor() >= 1.0 - 1e-9, "iter {iter}");
+        // The partitioned dims never exceed the original.
+        assert!(p.sub_layer.k <= layer.k && p.sub_layer.n <= layer.n);
+    }
+}
+
+#[test]
+fn prop_intra_mapping_bounds() {
+    let mut rng = Rng::new(0xBEEF);
+    for iter in 0..500 {
+        let layer = arb_layer(&mut rng);
+        let pes = *rng.pick(&[16u64, 64, 128, 256]);
+        let arch = *rng.pick(&[ChipletArch::NvdlaLike, ChipletArch::ShidiannaoLike]);
+        let m = wienna::dataflow::intra::map_layer(&layer, arch, pes, MapPolicy::Flexible, 1);
+        // 1 MAC/PE/cycle is a hard roof.
+        assert!(m.cycles * pes >= layer.macs(), "iter {iter}: {arch:?} {layer:?}");
+        assert!(m.utilization > 0.0 && m.utilization <= 1.0 + 1e-9, "iter {iter}: util {}", m.utilization);
+        assert_eq!(m.d0 * m.d1, if layer.op == OpKind::ResidualAdd { pes } else { pes }, "iter {iter}");
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_bandwidth() {
+    // More distribution bandwidth never hurts.
+    let mut rng = Rng::new(0x5EED);
+    let sys = SystemConfig::default();
+    for iter in 0..200 {
+        let layer = arb_layer(&mut rng);
+        let s = *rng.pick(&Strategy::ALL);
+        let lo = evaluate_layer(&CostEngine::ideal(&sys, 8.0), &layer, s).latency;
+        let hi = evaluate_layer(&CostEngine::ideal(&sys, 64.0), &layer, s).latency;
+        assert!(hi <= lo + 1e-6, "iter {iter}: {s} bw8 {lo} < bw64 {hi}");
+    }
+}
+
+#[test]
+fn prop_schedule_bytes_match_plan() {
+    // The coordinator's concrete transfer lists carry exactly the plan's
+    // payload, for every strategy and random layer.
+    let mut rng = Rng::new(0xACE);
+    for iter in 0..200 {
+        let layer = arb_layer(&mut rng);
+        let sys = arb_sys(&mut rng);
+        let policy = match rng.range_u64(0, 3) {
+            0 => StrategyPolicy::Fixed(Strategy::KpCp),
+            1 => StrategyPolicy::Fixed(Strategy::NpCp),
+            2 => StrategyPolicy::Fixed(Strategy::YpXp),
+            _ => StrategyPolicy::Adaptive,
+        };
+        let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, policy);
+        let sched = coord.schedule_layer(&layer);
+        assert_eq!(sched.scheduled_bytes(), sched.plan.sent_bytes(), "iter {iter}: {layer:?}");
+        // Every transfer destination is a valid used chiplet node.
+        let side = coord.sys.mesh_side() as u32;
+        for t in sched.preload.iter().chain(sched.stream.iter()) {
+            assert!(!t.dests.is_empty(), "iter {iter}");
+            for d in &t.dests {
+                assert!(d.row < side && d.col < side, "iter {iter}: dest {d:?} outside {side}x{side}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sim_never_faster_than_serialization() {
+    // The cycle-level sim can never beat the injection-port serialization
+    // bound: sum of (bytes x copies) / link_bw.
+    let mut rng = Rng::new(0xF00D);
+    for iter in 0..100 {
+        let layer = arb_layer(&mut rng);
+        let sys = SystemConfig { num_chiplets: 16, pes_per_chiplet: 64, ..Default::default() };
+        let coord = Coordinator::new(sys, DesignPoint::INTERPOSER_A, StrategyPolicy::Adaptive);
+        let sched = coord.schedule_layer(&layer);
+        let sim = MeshSim::new(4, 16.0);
+        let all: Vec<_> = sched.preload.iter().chain(sched.stream.iter()).cloned().collect();
+        if all.is_empty() {
+            continue;
+        }
+        let report = sim.run_distribution(&all);
+        let bound: f64 = all.iter().map(|t| (t.bytes * t.dests.len() as u64) as f64 / 16.0).sum();
+        assert!(
+            report.makespan >= bound - 1e-6,
+            "iter {iter}: sim {} < serialization bound {bound}",
+            report.makespan
+        );
+    }
+}
+
+#[test]
+fn prop_reuse_invariants() {
+    // Algorithmic reuse is >= 1 for every tensor a layer touches, and
+    // spatial multicast never exceeds the used-chiplet count.
+    use wienna::dataflow::reuse;
+    let mut rng = Rng::new(0x5E1FE);
+    for iter in 0..300 {
+        let layer = arb_layer(&mut rng);
+        let alg = reuse::algorithmic(&layer);
+        assert!(alg.input >= 1.0 - 1e-9, "iter {iter}: input reuse {}", alg.input);
+        assert!(alg.output >= 1.0 - 1e-9, "iter {iter}");
+        if layer.weight_elems() > 0 {
+            assert!(alg.weight >= 1.0 - 1e-9, "iter {iter}");
+        }
+        let nc = *rng.pick(&[16u64, 64, 256]);
+        for s in Strategy::ALL {
+            let sp = reuse::spatial(&layer, s, nc);
+            assert!(sp.input_spatial <= nc as f64 + 1e-9, "iter {iter}");
+            assert!(sp.weight_spatial <= nc as f64 + 1e-9, "iter {iter}");
+        }
+    }
+}
+
+#[test]
+fn prop_mac_schedules_collision_free_and_lossless() {
+    // Every coordinator schedule compiles into a collision-free TDM
+    // sequence that carries exactly the scheduled payload.
+    use wienna::nop::TdmMac;
+    let mut rng = Rng::new(0x7D7);
+    for iter in 0..150 {
+        let layer = arb_layer(&mut rng);
+        let sys = arb_sys(&mut rng);
+        let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
+        let sched = coord.schedule_layer(&layer);
+        let all: Vec<_> = sched.preload.iter().chain(sched.stream.iter()).cloned().collect();
+        let mac = TdmMac::new(16.0);
+        let tdm = mac.compile(&all, iter % 2 == 0);
+        assert!(mac.verify(&tdm), "iter {iter}");
+        let slot_bytes: u64 = tdm.slots.iter().map(|s| s.bytes).sum();
+        assert_eq!(slot_bytes, sched.scheduled_bytes(), "iter {iter}");
+    }
+}
+
+#[test]
+fn prop_hetero_proportional_never_worse_than_uniform() {
+    use wienna::coordinator::hetero::{partition_hetero, partition_uniform, ChipletClass, HeteroPackage};
+    use wienna::dataflow::ChipletArch;
+    let mut rng = Rng::new(0x4E7);
+    for iter in 0..150 {
+        let layer = arb_layer(&mut rng);
+        let pkg = HeteroPackage {
+            classes: vec![
+                ChipletClass {
+                    name: "big".into(),
+                    count: rng.range_u64(1, 32),
+                    pes: 256,
+                    arch: ChipletArch::NvdlaLike,
+                },
+                ChipletClass {
+                    name: "small".into(),
+                    count: rng.range_u64(1, 128),
+                    pes: 64,
+                    arch: ChipletArch::NvdlaLike,
+                },
+            ],
+        };
+        let s = *rng.pick(&Strategy::ALL);
+        let prop = partition_hetero(&layer, s, &pkg, 1);
+        let unif = partition_uniform(&layer, s, &pkg, 1);
+        // Allow tiny rounding slack on the unit split.
+        assert!(
+            prop.makespan as f64 <= unif.makespan as f64 * 1.05 + 16.0,
+            "iter {iter}: {s} prop {} vs unif {}",
+            prop.makespan,
+            unif.makespan
+        );
+    }
+}
+
+#[test]
+fn prop_trace_round_trip() {
+    use wienna::workload::trace;
+    let mut rng = Rng::new(0x77ACE);
+    for iter in 0..100 {
+        let layers: Vec<_> = (0..rng.range_u64(1, 8)).map(|_| arb_layer(&mut rng)).collect();
+        let m = wienna::workload::Model { name: format!("fuzz{iter}"), layers };
+        let text = trace::dump(&m);
+        let back = trace::parse(&text).unwrap_or_else(|e| panic!("iter {iter}: {e:#}\n{text}"));
+        assert_eq!(m.layers, back.layers, "iter {iter}");
+    }
+}
+
+#[test]
+fn prop_adaptive_is_min_of_fixed() {
+    let mut rng = Rng::new(0xDADA);
+    let sys = SystemConfig::default();
+    let engine = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_A);
+    for iter in 0..200 {
+        let layer = arb_layer(&mut rng);
+        let (_, best) = wienna::cost::best_strategy(&engine, &layer);
+        for s in Strategy::ALL {
+            let c = evaluate_layer(&engine, &layer, s);
+            assert!(best.latency <= c.latency + 1e-6, "iter {iter}: adaptive {} > {s} {}", best.latency, c.latency);
+        }
+    }
+}

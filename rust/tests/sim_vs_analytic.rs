@@ -1,0 +1,140 @@
+//! Validation: the analytical mesh NoP model against the cycle-level
+//! simulator. The analytic model is the engine behind every figure, so
+//! its serialization and fill-latency assumptions are bounded here.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::coordinator::collective::{simulate_collection, simulate_distribution};
+use wienna::coordinator::{Coordinator, StrategyPolicy};
+use wienna::dataflow::Strategy;
+use wienna::nop::sim::{MeshSim, NodeId, Transfer};
+use wienna::nop::MeshNop;
+use wienna::workload::{conv_padded, resnet50::resnet50, Layer};
+
+/// Relative agreement bound between the sim and the analytic model for
+/// distribution phases. Pipelining effects and per-column packing differ,
+/// so the bound is loose but two-sided (the model is neither wildly
+/// optimistic nor pessimistic).
+const AGREEMENT: f64 = 2.0;
+
+fn check_layer(layer: &Layer, nc: u64, strategy: Strategy) {
+    let sys = SystemConfig { num_chiplets: nc, pes_per_chiplet: 64, ..Default::default() };
+    let side = sys.mesh_side() as u32;
+    let coord = Coordinator::new(sys, DesignPoint::INTERPOSER_A, StrategyPolicy::Fixed(strategy));
+    let sched = coord.schedule_layer(layer);
+    let analytic = sched.selection.cost.timeline.preload + sched.selection.cost.timeline.stream;
+    let sim = simulate_distribution(&sched, side, DesignPoint::INTERPOSER_A.distribution_bw());
+    let ratio = sim.makespan / analytic.max(1.0);
+    assert!(
+        ratio > 1.0 / AGREEMENT && ratio < AGREEMENT,
+        "{} {strategy} on {nc} chiplets: sim {} vs analytic {analytic} (ratio {ratio:.2})",
+        layer.name,
+        sim.makespan,
+    );
+}
+
+#[test]
+fn distribution_agreement_across_strategies() {
+    let layer = conv_padded("c", 4, 64, 32, 28, 28, 3, 3, 1);
+    for s in Strategy::ALL {
+        for nc in [16u64, 64] {
+            check_layer(&layer, nc, s);
+        }
+    }
+}
+
+#[test]
+fn distribution_agreement_on_resnet_prefix() {
+    let m = resnet50(4);
+    for l in m.layers.iter().take(8) {
+        check_layer(l, 16, Strategy::KpCp);
+    }
+}
+
+#[test]
+fn injected_copies_match_analytic_amplification() {
+    // A broadcast of B bytes to all nodes must inject ~dests copies in
+    // the no-multicast baseline (packetization may add a few).
+    let sim = MeshSim::new(8, 16.0);
+    let r = sim.run_distribution(&[Transfer::broadcast(4096, 8)]);
+    assert_eq!(r.injected_copies, 64);
+    let mesh = MeshNop::new(64, 16.0, true);
+    assert_eq!(mesh.injection_copies(64.0), 64.0);
+}
+
+#[test]
+fn collection_agreement() {
+    let sys = SystemConfig { num_chiplets: 64, pes_per_chiplet: 64, ..Default::default() };
+    let coord = Coordinator::new(sys.clone(), DesignPoint::INTERPOSER_A, StrategyPolicy::Fixed(Strategy::KpCp));
+    let layer = conv_padded("c", 2, 64, 32, 28, 28, 3, 3, 1);
+    let sched = coord.schedule_layer(&layer);
+    let sim = simulate_collection(&sched, 8, sys.collection_bw_per_link);
+    let mesh = MeshNop::new(64, sys.collection_bw_per_link, true);
+    let analytic = mesh.collection_cycles(sched.plan.collect_bytes);
+    let ratio = sim.makespan / analytic.max(1.0);
+    // Collection converges on the drain links; the analytic model uses
+    // the aggregate-edge approximation.
+    assert!(ratio > 0.5 && ratio < 4.0, "sim {} vs analytic {analytic} ({ratio:.2})", sim.makespan);
+}
+
+#[test]
+fn sim_hop_latency_visible_on_small_transfers() {
+    // A tiny unicast to the far corner is latency- (not bandwidth-)
+    // dominated: makespan ≈ hops + ser.
+    let sim = MeshSim::new(16, 16.0);
+    let r = sim.run_distribution(&[Transfer::unicast(16, NodeId::new(15, 15))]);
+    assert!((r.makespan - (31.0 + 1.0)).abs() < 1e-9, "makespan {}", r.makespan);
+}
+
+#[test]
+fn wireless_mac_schedule_matches_analytic_model() {
+    // The TDM MAC (link layer) and the WirelessNop analytic model must
+    // agree on distribution time up to per-slot overhead.
+    use wienna::nop::{TdmMac, WirelessNop};
+    use wienna::nop::transceiver::TrxDesignPoint;
+
+    let sys = SystemConfig { num_chiplets: 64, pes_per_chiplet: 64, ..Default::default() };
+    let coord = Coordinator::new(sys, DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
+    let layer = conv_padded("c", 4, 64, 32, 28, 28, 3, 3, 1);
+    let sched = coord.schedule_layer(&layer);
+
+    let all: Vec<Transfer> = sched.preload.iter().chain(sched.stream.iter()).cloned().collect();
+    let mac = TdmMac { bw: 16.0, reconfig_guard_cycles: 0.0, slot_overhead_cycles: 0.0 };
+    let tdm = mac.compile(&all, false);
+    assert!(mac.verify(&tdm), "TDM schedule must be collision-free");
+
+    let w = WirelessNop::new(16.0, TrxDesignPoint::Conservative);
+    let analytic = w.distribution(&sched.plan.traffic);
+    let analytic_total = analytic.preload_cycles + analytic.stream_cycles;
+    let ratio = tdm.makespan / analytic_total;
+    assert!(
+        (ratio - 1.0).abs() < 0.05,
+        "TDM {} vs analytic {analytic_total} (ratio {ratio:.3})",
+        tdm.makespan
+    );
+}
+
+#[test]
+fn wireless_mac_feasible_at_package_scale() {
+    // Close the loop down to the physical layer: the Table-4 air rates
+    // must be feasible on the engineered package channel.
+    use wienna::nop::{Channel, TdmMac};
+    let ch = Channel::default();
+    assert!(TdmMac::new(16.0).feasible_on(&ch, 0.040, 10.0, 1e-9));
+    assert!(TdmMac::new(32.0).feasible_on(&ch, 0.040, 10.0, 1e-12));
+}
+
+#[test]
+fn forwarding_ablation_strictly_faster_on_broadcasts() {
+    let base = MeshSim::new(8, 16.0);
+    let mut fwd = MeshSim::new(8, 16.0);
+    fwd.multicast_forwarding = true;
+    let t = vec![Transfer::broadcast(4096, 8); 4];
+    let rb = base.run_distribution(&t);
+    let rf = fwd.run_distribution(&t);
+    assert!(
+        rf.makespan < rb.makespan / 4.0,
+        "forwarding {} vs baseline {}",
+        rf.makespan,
+        rb.makespan
+    );
+}
