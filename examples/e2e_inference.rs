@@ -14,6 +14,7 @@
 //!
 //! Run with: `make artifacts && cargo run --release --example e2e_inference`
 
+use wienna::anyhow;
 use wienna::config::{DesignPoint, SystemConfig};
 use wienna::coordinator::{Coordinator, PackageExecutor, StrategyPolicy};
 use wienna::coordinator::exec::Tensor;

@@ -1,0 +1,116 @@
+//! Serving load sweep — offered load vs. tail latency, goodput and SLO
+//! violations per design point, locating each design's saturation knee.
+//!
+//! For every design point the sweep offers Poisson traffic at a fraction
+//! of the fleet's estimated capacity and reports the achieved goodput;
+//! the *knee* is the first load level where goodput stops tracking the
+//! offered rate (falls below 90% of it). WIENNA's wireless distribution
+//! plane should push the knee to a higher absolute request rate than the
+//! interposer baseline at the same nominal bandwidth (WIENNA-C vs
+//! Interposer-A, the Fig-7 comparison replayed under traffic).
+
+use wienna::config::DesignPoint;
+use wienna::report::Table;
+use wienna::serve::{ms_to_cycles, Fleet, PackageSpec, RoutePolicy, ServeStats, Source, WorkloadMix};
+use wienna::testutil::bench;
+
+/// The crate's canonical ResNet-50 / UNet / BERT serving mix.
+fn mix() -> WorkloadMix {
+    WorkloadMix::cnn_transformer_default()
+}
+
+const LOADS: [f64; 8] = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.6, 2.0];
+const PACKAGES: usize = 2;
+const HORIZON_MS: f64 = 50.0;
+
+struct Point {
+    load: f64,
+    offered_rps: f64,
+    goodput_rps: f64,
+    p99_ms: f64,
+    violations: f64,
+    mean_batch: f64,
+}
+
+fn sweep(dp: DesignPoint) -> Vec<Point> {
+    LOADS
+        .iter()
+        .map(|&load| {
+            let mut fleet = Fleet::new(
+                PackageSpec::homogeneous(PACKAGES, dp),
+                RoutePolicy::EarliestDeadline,
+            );
+            let capacity = fleet.estimate_capacity_rps(&mix(), 8);
+            let offered_rps = capacity * load;
+            let mut source = Source::poisson(mix(), offered_rps, 42);
+            let mut stats = ServeStats::new();
+            fleet.run(&mut source, ms_to_cycles(HORIZON_MS), &mut stats);
+            Point {
+                load,
+                offered_rps,
+                goodput_rps: stats.goodput_rps(),
+                p99_ms: stats.latency_ms(99.0),
+                violations: stats.violation_rate(),
+                mean_batch: stats.mean_batch(),
+            }
+        })
+        .collect()
+}
+
+/// First load level where goodput drops below 90% of the offered rate.
+fn knee(points: &[Point]) -> Option<&Point> {
+    points.iter().find(|p| p.goodput_rps < 0.9 * p.offered_rps)
+}
+
+fn main() {
+    println!("##### Serving load sweep ({PACKAGES}-package fleets, {HORIZON_MS} ms of traffic per point)\n");
+    for dp in [DesignPoint::INTERPOSER_C, DesignPoint::INTERPOSER_A, DesignPoint::WIENNA_C, DesignPoint::WIENNA_A] {
+        let points = sweep(dp);
+        let mut t = Table::new(
+            &format!("{} — offered load vs. serving quality", dp.label()),
+            &["load", "offered req/s", "goodput req/s", "p99 ms", "SLO viol %", "mean batch"],
+        );
+        for p in &points {
+            t.row(vec![
+                format!("{:.1}", p.load),
+                format!("{:.0}", p.offered_rps),
+                format!("{:.0}", p.goodput_rps),
+                format!("{:.2}", p.p99_ms),
+                format!("{:.1}", p.violations * 100.0),
+                format!("{:.2}", p.mean_batch),
+            ]);
+        }
+        print!("{}", t.render());
+        t.save_csv(&format!("bench_out/serving_load_{}.csv", dp.label())).ok();
+        match knee(&points) {
+            Some(k) => println!(
+                "saturation knee at load {:.1} ({:.0} req/s offered, {:.0} req/s good)\n",
+                k.load, k.offered_rps, k.goodput_rps
+            ),
+            None => println!("no saturation knee up to load {:.1}\n", LOADS[LOADS.len() - 1]),
+        }
+    }
+
+    // Absolute capacity comparison at the equal-bandwidth pair.
+    let mut wc = Fleet::new(PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C), RoutePolicy::EarliestDeadline);
+    let mut ia = Fleet::new(PackageSpec::homogeneous(PACKAGES, DesignPoint::INTERPOSER_A), RoutePolicy::EarliestDeadline);
+    let cap_wc = wc.estimate_capacity_rps(&mix(), 8);
+    let cap_ia = ia.estimate_capacity_rps(&mix(), 8);
+    println!(
+        "estimated capacity at 16 B/cyc distribution BW: WIENNA-C {cap_wc:.0} req/s vs Interposer-A {cap_ia:.0} req/s ({:.2}x)",
+        cap_wc / cap_ia
+    );
+
+    // Hot-loop timing: one full 50 ms simulated run at 0.8 load.
+    bench("serve/50ms_wienna_c_load0.8", 10, || {
+        let mut fleet = Fleet::new(
+            PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+            RoutePolicy::EarliestDeadline,
+        );
+        let capacity = fleet.estimate_capacity_rps(&mix(), 8);
+        let mut source = Source::poisson(mix(), capacity * 0.8, 42);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, ms_to_cycles(HORIZON_MS), &mut stats);
+        stats.completed()
+    });
+}

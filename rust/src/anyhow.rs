@@ -1,0 +1,235 @@
+//! Minimal, dependency-free replacement for the `anyhow` error crate.
+//!
+//! The build environment is fully offline (see `testutil`, which likewise
+//! replaces `tempfile`/`proptest`/`criterion`), so the crate ships its own
+//! drop-in subset of the `anyhow` API surface it actually uses:
+//!
+//! * [`Error`] — a context-chained, message-only error value;
+//! * [`Result`] — `Result<T, Error>` with the usual default type param;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * the `anyhow!`, `bail!` and `ensure!` macros, re-exported here so both
+//!   `use crate::anyhow::{bail, ...}` and qualified `anyhow::bail!(..)`
+//!   call sites keep working.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and thus `?` on any standard
+//! error) coherent.
+
+use std::fmt;
+
+/// A message-chained error. The chain is stored innermost (root cause)
+/// first; `Display` shows the outermost message, `{:#}` the whole chain
+/// separated by `": "`, and `Debug` an `anyhow`-style "Caused by" block.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// Context messages, outermost first (the order `{:#}` prints them).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, msg) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().expect("error chain is never empty"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.last().expect("error chain is never empty"))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, msg) in self.chain.iter().rev().skip(1).enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.insert(0, s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result` and `Option` values, as in `anyhow`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`-style error constructor from a format string.
+#[macro_export]
+macro_rules! __wienna_anyhow {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted error.
+#[macro_export]
+macro_rules! __wienna_bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Early-return with a formatted error when a condition does not hold.
+#[macro_export]
+macro_rules! __wienna_ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow::Error::msg(format!(
+                "condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+pub use crate::{__wienna_anyhow as anyhow, __wienna_bail as bail, __wienna_ensure as ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    // Qualified `anyhow::...` call sites (as `main.rs` and the examples
+    // use) resolve through this module import.
+    use crate::anyhow;
+
+    fn parse_number(s: &str) -> Result<u64> {
+        let n: u64 = s.parse().with_context(|| format!("bad number '{s}'"))?;
+        ensure!(n < 100, "number {n} out of range");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_number("42").unwrap(), 42);
+        let e = parse_number("nope").unwrap_err();
+        assert_eq!(e.to_string(), "bad number 'nope'");
+        assert!(format!("{e:#}").starts_with("bad number 'nope': "));
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        let e = parse_number("500").unwrap_err();
+        assert_eq!(e.to_string(), "number 500 out of range");
+
+        fn fail() -> Result<()> {
+            bail!("kind {}", "bad");
+        }
+        assert_eq!(fail().unwrap_err().to_string(), "kind bad");
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("1: root"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u64> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u64).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn qualified_macro_paths_work() {
+        fn f() -> anyhow::Result<u64> {
+            anyhow::ensure!(1 + 1 == 2);
+            Err(anyhow::anyhow!("boom {}", 1))
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+}

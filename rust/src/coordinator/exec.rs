@@ -13,7 +13,7 @@ use crate::coordinator::scheduler::{Coordinator, LayerSchedule};
 use crate::runtime::ExecutableCache;
 use crate::workload::{Layer, Model, OpKind};
 use crate::dataflow::Strategy;
-use anyhow::{Context, Result};
+use crate::anyhow::{self, Context, Result};
 use std::sync::Arc;
 
 /// Tile edge shared with `python/compile/aot.py` (`tiny::TILE_M` etc.).

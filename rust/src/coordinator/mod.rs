@@ -12,11 +12,13 @@
 
 pub mod adaptive;
 pub mod collective;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod hetero;
 pub mod pipeline;
 pub mod scheduler;
 
 pub use adaptive::{StrategyPolicy, StrategySelection};
+#[cfg(feature = "pjrt")]
 pub use exec::{InferenceReport, PackageExecutor};
 pub use scheduler::{Coordinator, LayerSchedule, RunSummary};

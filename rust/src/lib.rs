@@ -21,9 +21,28 @@
 //! * [`coordinator`] — the WIENNA system layer: adaptive per-layer
 //!   strategy selection, distribution/collection scheduling, and dispatch
 //!   of real tile compute onto the PJRT runtime;
+//! * [`serve`] — a request-serving simulator over fleets of WIENNA
+//!   packages: open- and closed-loop request sources over a CNN /
+//!   transformer model mix, a dynamic batcher driven by a memoized cost
+//!   cache, pluggable routing policies (round-robin, least-loaded,
+//!   SLO-aware earliest-deadline), and tail-latency / goodput / SLO
+//!   statistics;
 //! * [`runtime`] — loading and executing the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) via the XLA PJRT CPU client;
-//! * [`report`] — ASCII/CSV renderers used by the benchmark harnesses.
+//!   artifacts (`artifacts/*.hlo.txt`) via the XLA PJRT CPU client
+//!   (behind the `pjrt` cargo feature, together with
+//!   `coordinator::exec`);
+//! * [`report`] — ASCII/CSV renderers used by the benchmark harnesses;
+//! * [`anyhow`] — an offline, dependency-free stand-in for the `anyhow`
+//!   error crate.
+//!
+//! ## Feature flags
+//!
+//! * `pjrt` (off by default) — enables the real-numerics execution path
+//!   ([`runtime`], `coordinator::exec`, the `e2e` CLI command and the
+//!   `e2e_inference` example). Requires the `xla` PJRT bindings and the
+//!   compiled HLO artifacts; everything else — the analytical cost model,
+//!   the coordinator, and the serving simulator — builds and tests
+//!   without it.
 //!
 //! ## Quickstart
 //!
@@ -38,6 +57,7 @@
 //! println!("{:.0} MACs/cycle", cost.macs_per_cycle);
 //! ```
 
+pub mod anyhow;
 pub mod config;
 pub mod coordinator;
 pub mod cost;
@@ -45,6 +65,8 @@ pub mod dataflow;
 pub mod energy;
 pub mod nop;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 pub mod workload;

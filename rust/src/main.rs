@@ -5,6 +5,8 @@
 //! wienna simulate  [--workload resnet50|unet|tiny] [--design interposer-c|interposer-a|wienna-c|wienna-a]
 //!                  [--strategy kp-cp|np-cp|yp-xp|adaptive] [--batch N] [--chiplets N] [--verbose]
 //! wienna sweep     [--workload ...] [--batch N]
+//! wienna serve     [--mix cnn|mixed|resnet50|bert] [--design ...] [--packages N]
+//!                  [--policy rr|ll|edf] [--load F] [--duration-ms MS] [--slo-ms MS]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -14,28 +16,34 @@
 //! is not in the vendored crate set.)
 
 use std::collections::HashMap;
+use wienna::anyhow;
 use wienna::config::{DesignPoint, SystemConfig};
 use wienna::coordinator::collective::simulate_distribution;
-use wienna::coordinator::exec::Tensor;
-use wienna::coordinator::{Coordinator, PackageExecutor, StrategyPolicy};
+use wienna::coordinator::{Coordinator, StrategyPolicy};
 use wienna::cost::{evaluate_model, CostEngine};
 use wienna::dataflow::Strategy;
 use wienna::energy::AreaPowerBreakdown;
 use wienna::report::Table;
-use wienna::runtime::ExecutableCache;
+use wienna::serve::{
+    ms_to_cycles, Fleet, MixEntry, ModelKind, PackageSpec, RoutePolicy, ServeStats, Source,
+    WorkloadMix,
+};
 use wienna::workload::{resnet50::resnet50, tiny::tiny_cnn, unet::unet, Model};
 
-const USAGE: &str = "usage: wienna <simulate|sweep|e2e|sim-validate|breakdown|report> [--flag value ...]
+const USAGE: &str = "usage: wienna <simulate|sweep|serve|e2e|sim-validate|breakdown|report> [--flag value ...]
   simulate      cost-model run of a workload on one design point
   sweep         Fig-8-style cluster-size sweep (fixed 16384 PEs)
-  e2e           real-numerics inference through the PJRT artifacts
+  serve         request-serving simulation on a package fleet
+  e2e           real-numerics inference through the PJRT artifacts (needs --features pjrt)
   sim-validate  analytical mesh model vs cycle-level simulator
   breakdown     Table-3 area/power breakdown
   report        condensed Fig-7/Fig-9 evaluation of one workload
-common flags: --workload resnet50|unet|tiny|mlp|rnn|<file>.trace
+common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --design interposer-c|interposer-a|wienna-c|wienna-a
               --strategy kp-cp|np-cp|yp-xp|adaptive  --batch N  --chiplets N  --verbose
-              --artifacts DIR  --wireless-bw B";
+              --artifacts DIR  --wireless-bw B
+serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
+              --load F (fraction of fleet capacity)  --duration-ms MS  --slo-ms MS  --seed N";
 
 /// Parsed flags: `--key value` pairs plus bare `--switch`es.
 struct Flags(HashMap<String, String>);
@@ -91,8 +99,9 @@ fn parse_workload(s: &str, batch: u64) -> anyhow::Result<Model> {
         "tiny" => tiny_cnn(batch),
         "mlp" => wienna::workload::mlp::mlp(batch, 784, 4096, 4, 1000),
         "rnn" => wienna::workload::mlp::rnn_unrolled(batch, 1024, 16),
+        "bert" => wienna::workload::transformer::bert_base(batch),
         path if path.ends_with(".trace") => wienna::workload::trace::load(std::path::Path::new(path))?,
-        _ => anyhow::bail!("unknown workload '{s}' (resnet50|unet|tiny|mlp|rnn|<file>.trace)"),
+        _ => anyhow::bail!("unknown workload '{s}' (resnet50|unet|tiny|mlp|rnn|bert|<file>.trace)"),
     })
 }
 
@@ -163,7 +172,12 @@ fn cmd_sweep(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_e2e(f: &Flags) -> anyhow::Result<()> {
+    use wienna::coordinator::exec::Tensor;
+    use wienna::coordinator::PackageExecutor;
+    use wienna::runtime::ExecutableCache;
+
     let sys = SystemConfig { num_chiplets: f.u64("chiplets", 16)?, ..Default::default() };
     let batch = f.u64("batch", 1)?;
     let artifacts = f.str("artifacts", "artifacts");
@@ -189,6 +203,96 @@ fn cmd_e2e(f: &Flags) -> anyhow::Result<()> {
     );
     anyhow::ensure!(report.max_abs_err < 1e-3, "numerics mismatch vs oracle");
     println!("NUMERICS OK (XLA path == naive oracle)");
+    Ok(())
+}
+
+fn parse_route(s: &str) -> anyhow::Result<RoutePolicy> {
+    Ok(match s {
+        "rr" | "round-robin" => RoutePolicy::RoundRobin,
+        "ll" | "least-loaded" => RoutePolicy::LeastLoaded,
+        "edf" | "earliest-deadline" => RoutePolicy::EarliestDeadline,
+        _ => anyhow::bail!("unknown routing policy '{s}' (rr|ll|edf)"),
+    })
+}
+
+fn parse_mix(s: &str, slo_ms: f64) -> anyhow::Result<WorkloadMix> {
+    let e = |kind, weight, slo: f64| MixEntry { kind, weight, slo_cycles: ms_to_cycles(slo) };
+    Ok(match s {
+        "resnet50" => WorkloadMix::single(ModelKind::ResNet50, slo_ms),
+        "bert" => WorkloadMix::single(ModelKind::BertBase, slo_ms),
+        "cnn" => WorkloadMix::new(vec![
+            e(ModelKind::ResNet50, 2.0, slo_ms),
+            e(ModelKind::UNet, 1.0, 2.0 * slo_ms),
+        ]),
+        "mixed" => WorkloadMix::new(vec![
+            e(ModelKind::ResNet50, 2.0, slo_ms),
+            e(ModelKind::UNet, 1.0, 2.0 * slo_ms),
+            e(ModelKind::BertBase, 1.0, slo_ms),
+        ]),
+        _ => anyhow::bail!("unknown mix '{s}' (cnn|mixed|resnet50|bert)"),
+    })
+}
+
+fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
+    let packages = f.u64("packages", 4)? as usize;
+    let dp = parse_design(&f.str("design", "wienna-c"))?;
+    let policy = parse_route(&f.str("policy", "edf"))?;
+    let load = f.f64("load", 0.8)?;
+    let duration_ms = f.f64("duration-ms", 100.0)?;
+    let slo_ms = f.f64("slo-ms", 25.0)?;
+    anyhow::ensure!(packages >= 1, "--packages must be >= 1");
+    anyhow::ensure!(load > 0.0, "--load must be positive");
+    anyhow::ensure!(duration_ms > 0.0, "--duration-ms must be positive");
+    anyhow::ensure!(slo_ms > 0.0, "--slo-ms must be positive");
+    let mix = parse_mix(&f.str("mix", "cnn"), slo_ms)?;
+
+    let mut fleet = Fleet::new(PackageSpec::homogeneous(packages, dp), policy);
+    let capacity = fleet.estimate_capacity_rps(&mix, 8);
+    let rate = capacity * load;
+    let mut source = Source::poisson(mix, rate, f.u64("seed", 42)?);
+    let mut stats = ServeStats::new();
+    let end = fleet.run(&mut source, ms_to_cycles(duration_ms), &mut stats);
+
+    println!(
+        "fleet: {packages} x {} | policy {} | est. capacity {capacity:.0} req/s | offered {rate:.0} req/s ({load:.2}x)",
+        dp.label(),
+        policy.label()
+    );
+    println!(
+        "served {} requests in {:.1} ms simulated | p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        stats.completed(),
+        wienna::serve::cycles_to_ms(end),
+        stats.latency_ms(50.0),
+        stats.latency_ms(95.0),
+        stats.latency_ms(99.0),
+    );
+    println!(
+        "throughput {:.0} req/s | goodput {:.0} req/s | SLO violations {:.1}% | mean batch {:.2} (max {})",
+        stats.throughput_rps(),
+        stats.goodput_rps(),
+        stats.violation_rate() * 100.0,
+        stats.mean_batch(),
+        stats.max_batch(),
+    );
+    if f.flag("verbose") {
+        let mut t = Table::new(
+            "per-package accounting",
+            &["package", "completed", "batches", "mean batch", "busy %", "dist-plane %", "compute %"],
+        );
+        for p in &fleet.packages {
+            t.row(vec![
+                p.spec.name.clone(),
+                p.requests_completed.to_string(),
+                p.batches_dispatched.to_string(),
+                format!("{:.2}", p.mean_batch()),
+                format!("{:.1}", p.utilization(end) * 100.0),
+                format!("{:.1}", p.dist_plane_utilization(end) * 100.0),
+                format!("{:.1}", p.compute_utilization(end) * 100.0),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("cost cache: {} entries, {} hits, {} misses", fleet.cache.len(), fleet.cache.hits, fleet.cache.misses);
+    }
     Ok(())
 }
 
@@ -294,7 +398,11 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "simulate" => cmd_simulate(&flags),
         "sweep" => cmd_sweep(&flags),
+        "serve" => cmd_serve(&flags),
+        #[cfg(feature = "pjrt")]
         "e2e" => cmd_e2e(&flags),
+        #[cfg(not(feature = "pjrt"))]
+        "e2e" => anyhow::bail!("this binary was built without the 'pjrt' feature; rebuild with `cargo build --features pjrt`"),
         "sim-validate" => cmd_sim_validate(&flags),
         "breakdown" => cmd_breakdown(&flags),
         "report" => cmd_report(&flags),

@@ -16,7 +16,7 @@
 //! artifact matmul64 matmul64.hlo.txt f32 64x64;64x64 64x64
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{self, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-lowered computation.

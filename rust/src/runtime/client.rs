@@ -6,7 +6,7 @@
 //! compiled executable per model variant" runtime of the architecture.
 
 use super::artifact::{ArtifactManifest, ArtifactSpec};
-use anyhow::{Context, Result};
+use crate::anyhow::{self, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;

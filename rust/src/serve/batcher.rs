@@ -1,0 +1,306 @@
+//! Dynamic batch-size selection over a memoized cost cache.
+//!
+//! The batcher turns the analytical cost model into an online scheduling
+//! signal: for the current queue depth it queries the latency/throughput
+//! frontier over candidate batch sizes and dispatches the batch with the
+//! highest throughput whose completion still meets the head-of-line
+//! request's SLO deadline. All cost-model evaluations go through
+//! [`CostCache`], keyed by `(design point, package shape, model, batch)`,
+//! so the simulator's hot loop never re-runs `evaluate_model` for a
+//! configuration it has already priced.
+
+use super::request::ModelKind;
+use crate::config::{DesignPoint, CLOCK_HZ};
+use crate::coordinator::pipeline::pipeline_makespan;
+use crate::cost::{evaluate_model, CostEngine};
+use std::collections::HashMap;
+
+/// Everything that changes the serving cost of one batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CostKey {
+    pub dp: DesignPoint,
+    pub num_chiplets: u64,
+    pub pes_per_chiplet: u64,
+    /// Pipelining double-buffer budget — changes the pipelined makespan,
+    /// so packages differing only in buffer size must not share entries.
+    pub local_buffer_bytes: u64,
+    pub kind: ModelKind,
+    pub batch: u64,
+}
+
+/// Memoized serving cost of one `(design, model, batch)` combination.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCost {
+    /// Pipelined makespan of one batch in cycles (inter-layer
+    /// double-buffered preloads, `coordinator::pipeline`).
+    pub latency: f64,
+    /// Busy cycles on the distribution plane (wireless or interposer).
+    pub dist_busy: f64,
+    /// Busy cycles on the chiplets' compute arrays.
+    pub compute_busy: f64,
+    /// Busy cycles on the wired collection mesh.
+    pub collect_busy: f64,
+}
+
+impl BatchCost {
+    /// Steady-state throughput of back-to-back batches of this size.
+    pub fn throughput_rps(&self, batch: u64) -> f64 {
+        batch as f64 * CLOCK_HZ / self.latency
+    }
+}
+
+/// Memoized per-`(design, model, batch)` cost store.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: HashMap<CostKey, BatchCost>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        CostCache::default()
+    }
+
+    /// Memoized lookup: runs `evaluate_model` (adaptive strategy per
+    /// layer) plus inter-layer pipelining only on a miss.
+    pub fn get(
+        &mut self,
+        engine: &CostEngine,
+        dp: DesignPoint,
+        kind: ModelKind,
+        batch: u64,
+        local_buffer_bytes: u64,
+    ) -> BatchCost {
+        assert!(batch >= 1);
+        let key = CostKey {
+            dp,
+            num_chiplets: engine.sys.num_chiplets,
+            pes_per_chiplet: engine.sys.pes_per_chiplet,
+            local_buffer_bytes,
+            kind,
+            batch,
+        };
+        if let Some(c) = self.map.get(&key) {
+            self.hits += 1;
+            return *c;
+        }
+        self.misses += 1;
+        let model = kind.build(batch);
+        let cost = evaluate_model(engine, &model, None);
+        let pipe = pipeline_makespan(&cost.layers, local_buffer_bytes);
+        let bc = BatchCost {
+            latency: pipe.pipelined_cycles,
+            dist_busy: cost.layers.iter().map(|l| l.timeline.preload + l.timeline.stream).sum(),
+            compute_busy: cost.layers.iter().map(|l| l.timeline.compute).sum(),
+            collect_busy: cost.layers.iter().map(|l| l.timeline.collect).sum(),
+        };
+        self.map.insert(key, bc);
+        bc
+    }
+
+    /// Distinct configurations priced so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Dynamic-batcher tuning knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Largest batch one dispatch may serve.
+    pub max_batch: u64,
+    /// Candidate batch sizes, ascending; must contain 1.
+    pub candidates: Vec<u64>,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, candidates: vec![1, 2, 4, 8, 16, 32] }
+    }
+}
+
+/// Outcome of one batch-size decision.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchDecision {
+    pub batch: u64,
+    pub cost: BatchCost,
+    /// Whether the chosen batch is predicted to meet the head-of-line
+    /// deadline (`false` only when no candidate could).
+    pub meets_slo: bool,
+}
+
+/// Pick the batch size for one dispatch.
+///
+/// Among candidate sizes no larger than the queue depth (and
+/// `cfg.max_batch`), pick the highest-throughput batch whose predicted
+/// completion `now + latency(b)` still meets `head_deadline`. When no
+/// candidate can meet the deadline the head request is late regardless,
+/// so the highest-throughput candidate is dispatched instead — shrinking
+/// the batch would only deepen the backlog (throughput death spiral).
+#[allow(clippy::too_many_arguments)]
+pub fn choose_batch(
+    cfg: &BatcherConfig,
+    cache: &mut CostCache,
+    engine: &CostEngine,
+    dp: DesignPoint,
+    kind: ModelKind,
+    queue_depth: u64,
+    now: f64,
+    head_deadline: f64,
+    local_buffer_bytes: u64,
+) -> BatchDecision {
+    assert!(queue_depth >= 1, "nothing to dispatch");
+    let limit = queue_depth.min(cfg.max_batch).max(1);
+    let mut best_slo: Option<BatchDecision> = None;
+    let mut best_any: Option<BatchDecision> = None;
+    for &b in cfg.candidates.iter().filter(|&&b| b <= limit) {
+        let cost = cache.get(engine, dp, kind, b, local_buffer_bytes);
+        let meets_slo = now + cost.latency <= head_deadline;
+        let d = BatchDecision { batch: b, cost, meets_slo };
+        let tput = b as f64 / cost.latency;
+        let beats = |cur: &Option<BatchDecision>| match cur {
+            None => true,
+            Some(x) => tput > x.batch as f64 / x.cost.latency,
+        };
+        if beats(&best_any) {
+            best_any = Some(d);
+        }
+        if meets_slo && beats(&best_slo) {
+            best_slo = Some(d);
+        }
+    }
+    best_slo.or(best_any).expect("candidate set always contains batch 1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn engine(dp: DesignPoint) -> CostEngine {
+        CostEngine::for_design_point(&SystemConfig::default(), dp)
+    }
+
+    const BUF: u64 = 512 * 1024;
+
+    #[test]
+    fn cache_memoizes() {
+        let e = engine(DesignPoint::WIENNA_C);
+        let mut cache = CostCache::new();
+        let a = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 4, BUF);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 0);
+        let b = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 4, BUF);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(a.latency, b.latency);
+        // A different batch is a different key.
+        cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 8, BUF);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.len(), 2);
+        // A different pipelining budget is a different key too.
+        cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 8, BUF / 8);
+        assert_eq!(cache.misses, 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn batching_amortizes_latency() {
+        let e = engine(DesignPoint::WIENNA_C);
+        let mut cache = CostCache::new();
+        let c1 = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 1, BUF);
+        let c8 = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 8, BUF);
+        // Sub-linear latency growth: batch 8 costs less than 8x batch 1.
+        assert!(c8.latency < 8.0 * c1.latency);
+        assert!(c8.throughput_rps(8) > c1.throughput_rps(1));
+    }
+
+    #[test]
+    fn low_load_picks_batch_one() {
+        let e = engine(DesignPoint::WIENNA_C);
+        let mut cache = CostCache::new();
+        let d = choose_batch(
+            &BatcherConfig::default(),
+            &mut cache,
+            &e,
+            DesignPoint::WIENNA_C,
+            ModelKind::TinyCnn,
+            1,
+            0.0,
+            f64::INFINITY,
+            BUF,
+        );
+        assert_eq!(d.batch, 1);
+        assert!(d.meets_slo);
+    }
+
+    #[test]
+    fn backlog_grows_the_batch() {
+        let e = engine(DesignPoint::WIENNA_C);
+        let mut cache = CostCache::new();
+        let cfg = BatcherConfig::default();
+        let mut last = 0;
+        for depth in [1u64, 4, 16, 64] {
+            let d = choose_batch(
+                &cfg,
+                &mut cache,
+                &e,
+                DesignPoint::WIENNA_C,
+                ModelKind::TinyCnn,
+                depth,
+                0.0,
+                f64::INFINITY,
+                BUF,
+            );
+            assert!(d.batch >= last, "batch shrank at depth {depth}");
+            assert!(d.batch <= depth.min(cfg.max_batch));
+            last = d.batch;
+        }
+        // Deep backlog with no deadline pressure batches well past 1.
+        assert!(last >= 4, "deep backlog only reached batch {last}");
+    }
+
+    #[test]
+    fn tight_deadline_caps_the_batch() {
+        let e = engine(DesignPoint::WIENNA_C);
+        let mut cache = CostCache::new();
+        let cfg = BatcherConfig::default();
+        let c1 = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 1, BUF);
+        let c32 = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 32, BUF);
+        // Deadline admits batch 1 but not batch 32.
+        let deadline = (c1.latency + c32.latency) / 2.0;
+        let d = choose_batch(
+            &cfg,
+            &mut cache,
+            &e,
+            DesignPoint::WIENNA_C,
+            ModelKind::TinyCnn,
+            64,
+            0.0,
+            deadline,
+            BUF,
+        );
+        assert!(d.meets_slo);
+        assert!(d.batch < 32, "deadline should cap the batch, got {}", d.batch);
+        // An impossible deadline falls back to the highest-throughput
+        // batch (the head request is late either way).
+        let d = choose_batch(
+            &cfg,
+            &mut cache,
+            &e,
+            DesignPoint::WIENNA_C,
+            ModelKind::TinyCnn,
+            64,
+            0.0,
+            0.0,
+            BUF,
+        );
+        assert!(!d.meets_slo);
+        assert!(d.batch > 1, "overloaded dispatch should keep batching, got {}", d.batch);
+    }
+}

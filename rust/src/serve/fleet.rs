@@ -1,0 +1,500 @@
+//! Package fleets: routing policies and the discrete-event serving loop.
+//!
+//! A fleet is N (possibly heterogeneous) WIENNA/interposer packages, each
+//! with its own admission [`QueueSet`]. Arrivals are routed to a package
+//! by a pluggable [`RoutePolicy`]; each package dispatches homogeneous
+//! batches chosen by the dynamic batcher (`serve::batcher`) from its EDF
+//! model queue. The event loop advances simulated time from arrival to
+//! completion events only — service times come from the memoized cost
+//! model, so a multi-second traffic trace simulates in microseconds.
+
+use super::batcher::{choose_batch, BatcherConfig, CostCache};
+use super::queue::QueueSet;
+use super::request::{Request, Source};
+use super::stats::ServeStats;
+use crate::config::{DesignPoint, SystemConfig};
+use crate::cost::CostEngine;
+
+/// Static description of one package in the fleet.
+#[derive(Debug, Clone)]
+pub struct PackageSpec {
+    pub name: String,
+    pub sys: SystemConfig,
+    pub dp: DesignPoint,
+    /// Per-chiplet double-buffer budget for inter-layer pipelining.
+    pub local_buffer_bytes: u64,
+}
+
+impl PackageSpec {
+    /// A Table-4 default package at `dp`.
+    pub fn new(name: &str, dp: DesignPoint) -> Self {
+        PackageSpec {
+            name: name.to_string(),
+            sys: SystemConfig::default(),
+            dp,
+            local_buffer_bytes: 512 * 1024,
+        }
+    }
+
+    /// `count` identical Table-4 packages at `dp`.
+    pub fn homogeneous(count: usize, dp: DesignPoint) -> Vec<PackageSpec> {
+        (0..count).map(|i| PackageSpec::new(&format!("{}-{i}", dp.label()), dp)).collect()
+    }
+}
+
+/// Run-time state and accounting of one package.
+#[derive(Debug)]
+pub struct Package {
+    pub spec: PackageSpec,
+    pub(crate) engine: CostEngine,
+    pub queue: QueueSet,
+    /// Cycle at which the in-flight batch completes.
+    busy_until: f64,
+    in_flight: Vec<Request>,
+    /// Batch-1 estimate of queued work, for load-aware routing.
+    backlog_cycles: f64,
+    // --- accounting ---
+    pub busy_cycles: f64,
+    pub dist_busy_cycles: f64,
+    pub compute_busy_cycles: f64,
+    pub collect_busy_cycles: f64,
+    pub batches_dispatched: u64,
+    pub requests_completed: u64,
+    pub batch_size_sum: u64,
+    pub max_batch_seen: u64,
+}
+
+impl Package {
+    pub fn new(spec: PackageSpec) -> Self {
+        let engine = CostEngine::for_design_point(&spec.sys, spec.dp);
+        Package {
+            engine,
+            spec,
+            queue: QueueSet::new(),
+            busy_until: 0.0,
+            in_flight: Vec::new(),
+            backlog_cycles: 0.0,
+            busy_cycles: 0.0,
+            dist_busy_cycles: 0.0,
+            compute_busy_cycles: 0.0,
+            collect_busy_cycles: 0.0,
+            batches_dispatched: 0,
+            requests_completed: 0,
+            batch_size_sum: 0,
+            max_batch_seen: 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.in_flight.is_empty()
+    }
+
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Mean dispatched batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches_dispatched == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches_dispatched as f64
+        }
+    }
+
+    /// Fraction of `elapsed` cycles the package was serving a batch.
+    pub fn utilization(&self, elapsed: f64) -> f64 {
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            (self.busy_cycles / elapsed).min(1.0)
+        }
+    }
+
+    /// Fraction of `elapsed` the distribution plane (wireless for WIENNA,
+    /// interposer mesh for the baseline) was moving data.
+    pub fn dist_plane_utilization(&self, elapsed: f64) -> f64 {
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            (self.dist_busy_cycles / elapsed).min(1.0)
+        }
+    }
+
+    /// Fraction of `elapsed` the chiplet arrays were computing.
+    pub fn compute_utilization(&self, elapsed: f64) -> f64 {
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            (self.compute_busy_cycles / elapsed).min(1.0)
+        }
+    }
+
+    /// Work backlog (busy remainder + queued batch-1 estimates) at `now`.
+    pub fn load_cycles(&self, now: f64) -> f64 {
+        (self.busy_until - now).max(0.0) + self.backlog_cycles
+    }
+}
+
+/// How arrivals are assigned to packages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through packages in order.
+    RoundRobin,
+    /// Send to the package with the least pending work (busy remainder
+    /// plus queued batch-1 estimates).
+    LeastLoaded,
+    /// SLO-aware: send to the package with the earliest estimated
+    /// completion for this request (earliest-deadline-first service order
+    /// is applied package-locally by the dispatcher).
+    EarliestDeadline,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::EarliestDeadline];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::EarliestDeadline => "earliest-deadline",
+        }
+    }
+}
+
+/// A fleet of packages sharing a routing policy, a batcher configuration,
+/// and one memoized cost cache.
+pub struct Fleet {
+    pub packages: Vec<Package>,
+    pub policy: RoutePolicy,
+    pub batcher: BatcherConfig,
+    pub cache: CostCache,
+    rr_cursor: usize,
+}
+
+impl Fleet {
+    pub fn new(specs: Vec<PackageSpec>, policy: RoutePolicy) -> Self {
+        assert!(!specs.is_empty(), "fleet needs at least one package");
+        Fleet {
+            packages: specs.into_iter().map(Package::new).collect(),
+            policy,
+            batcher: BatcherConfig::default(),
+            cache: CostCache::new(),
+            rr_cursor: 0,
+        }
+    }
+
+    pub fn with_batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.batcher = batcher;
+        self
+    }
+
+    /// Requests sitting in admission queues.
+    pub fn queued_total(&self) -> usize {
+        self.packages.iter().map(|p| p.queue.depth_total()).sum()
+    }
+
+    /// Requests currently being served.
+    pub fn in_flight_total(&self) -> usize {
+        self.packages.iter().map(|p| p.in_flight.len()).sum()
+    }
+
+    /// Mean dispatched batch size across the fleet.
+    pub fn mean_batch(&self) -> f64 {
+        let batches: u64 = self.packages.iter().map(|p| p.batches_dispatched).sum();
+        if batches == 0 {
+            0.0
+        } else {
+            let sum: u64 = self.packages.iter().map(|p| p.batch_size_sum).sum();
+            sum as f64 / batches as f64
+        }
+    }
+
+    /// Estimate the fleet's sustainable throughput in requests/s for a
+    /// traffic mix, with batches of `ref_batch` (used to calibrate offered
+    /// load in the examples and the load-sweep bench).
+    pub fn estimate_capacity_rps(&mut self, mix: &super::request::WorkloadMix, ref_batch: u64) -> f64 {
+        let weight_total: f64 = mix.entries.iter().map(|e| e.weight).sum();
+        let mut total_rps = 0.0;
+        for i in 0..self.packages.len() {
+            let mut cycles_per_req = 0.0;
+            for e in &mix.entries {
+                let c = self.cache.get(
+                    &self.packages[i].engine,
+                    self.packages[i].spec.dp,
+                    e.kind,
+                    ref_batch,
+                    self.packages[i].spec.local_buffer_bytes,
+                );
+                cycles_per_req += (e.weight / weight_total) * c.latency / ref_batch as f64;
+            }
+            total_rps += crate::config::CLOCK_HZ / cycles_per_req;
+        }
+        total_rps
+    }
+
+    /// Route one arrival to a package queue.
+    fn route(&mut self, now: f64, req: Request) {
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_cursor % self.packages.len();
+                self.rr_cursor += 1;
+                i
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                for i in 1..self.packages.len() {
+                    if self.packages[i].load_cycles(now) < self.packages[best].load_cycles(now) {
+                        best = i;
+                    }
+                }
+                best
+            }
+            RoutePolicy::EarliestDeadline => {
+                // Estimated completion of this request on each package:
+                // current load plus its own batch-1 service time.
+                let mut best = 0;
+                let mut best_eta = f64::INFINITY;
+                for i in 0..self.packages.len() {
+                    let service = self
+                        .cache
+                        .get(
+                            &self.packages[i].engine,
+                            self.packages[i].spec.dp,
+                            req.kind,
+                            1,
+                            self.packages[i].spec.local_buffer_bytes,
+                        )
+                        .latency;
+                    let eta = now + self.packages[i].load_cycles(now) + service;
+                    if eta < best_eta {
+                        best_eta = eta;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        let est = self
+            .cache
+            .get(
+                &self.packages[idx].engine,
+                self.packages[idx].spec.dp,
+                req.kind,
+                1,
+                self.packages[idx].spec.local_buffer_bytes,
+            )
+            .latency;
+        let p = &mut self.packages[idx];
+        p.backlog_cycles += est;
+        p.queue.push(req);
+    }
+
+    /// Dispatch one batch on an idle package with queued work.
+    fn dispatch(&mut self, idx: usize, now: f64, stats: &mut ServeStats) {
+        debug_assert!(self.packages[idx].is_idle());
+        let Some(kind) = self.packages[idx].queue.edf_kind() else {
+            return;
+        };
+        let depth = self.packages[idx].queue.depth(kind) as u64;
+        let head_deadline = self.packages[idx].queue.head_deadline(kind).unwrap();
+        let decision = choose_batch(
+            &self.batcher,
+            &mut self.cache,
+            &self.packages[idx].engine,
+            self.packages[idx].spec.dp,
+            kind,
+            depth,
+            now,
+            head_deadline,
+            self.packages[idx].spec.local_buffer_bytes,
+        );
+        let est1 = self
+            .cache
+            .get(
+                &self.packages[idx].engine,
+                self.packages[idx].spec.dp,
+                kind,
+                1,
+                self.packages[idx].spec.local_buffer_bytes,
+            )
+            .latency;
+        let p = &mut self.packages[idx];
+        let reqs = p.queue.pop_batch(kind, decision.batch as usize);
+        debug_assert_eq!(reqs.len(), decision.batch as usize);
+        p.backlog_cycles = (p.backlog_cycles - est1 * reqs.len() as f64).max(0.0);
+        p.busy_until = now + decision.cost.latency;
+        p.busy_cycles += decision.cost.latency;
+        p.dist_busy_cycles += decision.cost.dist_busy;
+        p.compute_busy_cycles += decision.cost.compute_busy;
+        p.collect_busy_cycles += decision.cost.collect_busy;
+        p.batches_dispatched += 1;
+        p.batch_size_sum += decision.batch;
+        p.max_batch_seen = p.max_batch_seen.max(decision.batch);
+        p.in_flight = reqs;
+        stats.record_dispatch(decision.batch);
+    }
+
+    /// Complete the in-flight batch on `idx`.
+    fn complete(&mut self, idx: usize, stats: &mut ServeStats, source: &mut Source) {
+        let p = &mut self.packages[idx];
+        let t = p.busy_until;
+        let reqs = std::mem::take(&mut p.in_flight);
+        p.requests_completed += reqs.len() as u64;
+        for r in &reqs {
+            stats.record_completion(r, t);
+            source.on_complete(t, r);
+        }
+    }
+
+    /// Run the discrete-event loop: admit arrivals up to `horizon_cycles`,
+    /// then drain every queued and in-flight request. Returns the cycle of
+    /// the last event.
+    ///
+    /// An infinite horizon is only meaningful for sources that run dry on
+    /// their own (trace replay, closed loop); an open-loop Poisson source
+    /// would make the loop admit arrivals forever.
+    pub fn run(&mut self, source: &mut Source, horizon_cycles: f64, stats: &mut ServeStats) -> f64 {
+        assert!(
+            horizon_cycles.is_finite() || source.is_bounded(),
+            "an unbounded (Poisson) source needs a finite horizon"
+        );
+        let mut now = 0.0f64;
+        loop {
+            // Put every idle package with queued work to work.
+            for i in 0..self.packages.len() {
+                if self.packages[i].is_idle() && !self.packages[i].queue.is_empty() {
+                    self.dispatch(i, now, stats);
+                }
+            }
+
+            let next_arrival = source.next_arrival_at().filter(|&t| t <= horizon_cycles);
+            let mut next_completion = f64::INFINITY;
+            let mut completing = usize::MAX;
+            for (i, p) in self.packages.iter().enumerate() {
+                if !p.in_flight.is_empty() && p.busy_until < next_completion {
+                    next_completion = p.busy_until;
+                    completing = i;
+                }
+            }
+
+            match next_arrival {
+                Some(t) if t <= next_completion => {
+                    now = now.max(t);
+                    let req = source.pop();
+                    stats.record_arrival(&req);
+                    self.route(now, req);
+                }
+                _ if completing != usize::MAX => {
+                    now = now.max(next_completion);
+                    self.complete(completing, stats, source);
+                }
+                _ => break,
+            }
+        }
+        stats.finish(now);
+        now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::{ms_to_cycles, MixEntry, ModelKind, WorkloadMix};
+
+    fn tiny_mix(slo_ms: f64) -> WorkloadMix {
+        WorkloadMix::new(vec![MixEntry {
+            kind: ModelKind::TinyCnn,
+            weight: 1.0,
+            slo_cycles: ms_to_cycles(slo_ms),
+        }])
+    }
+
+    fn run_at(load: f64, policy: RoutePolicy) -> (Fleet, ServeStats) {
+        let mut fleet = Fleet::new(PackageSpec::homogeneous(2, DesignPoint::WIENNA_C), policy);
+        let mix = tiny_mix(50.0);
+        let cap = fleet.estimate_capacity_rps(&mix, 8);
+        let mut source = Source::poisson(mix, cap * load, 11);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+        (fleet, stats)
+    }
+
+    #[test]
+    fn conservation_invariant_holds() {
+        for policy in RoutePolicy::ALL {
+            let (fleet, stats) = run_at(0.8, policy);
+            // The run drains: everything admitted was completed.
+            assert_eq!(fleet.queued_total(), 0, "{}", policy.label());
+            assert_eq!(fleet.in_flight_total(), 0, "{}", policy.label());
+            assert_eq!(stats.arrived(), stats.completed(), "{}", policy.label());
+            assert!(stats.arrived() > 0);
+            // Per-package accounting adds back up to the fleet totals.
+            let by_pkg: u64 = fleet.packages.iter().map(|p| p.requests_completed).sum();
+            assert_eq!(by_pkg, stats.completed());
+            let admitted: u64 = fleet.packages.iter().map(|p| p.queue.arrived).sum();
+            assert_eq!(admitted, stats.arrived());
+        }
+    }
+
+    #[test]
+    fn batch_grows_with_load() {
+        let (low_fleet, _) = run_at(0.2, RoutePolicy::LeastLoaded);
+        let (high_fleet, _) = run_at(1.6, RoutePolicy::LeastLoaded);
+        assert!(
+            high_fleet.mean_batch() > low_fleet.mean_batch(),
+            "mean batch {:.2} (overload) vs {:.2} (light)",
+            high_fleet.mean_batch(),
+            low_fleet.mean_batch()
+        );
+    }
+
+    #[test]
+    fn round_robin_spreads_work() {
+        let (fleet, _) = run_at(0.8, RoutePolicy::RoundRobin);
+        let a = fleet.packages[0].queue.arrived;
+        let b = fleet.packages[1].queue.arrived;
+        assert!(a.abs_diff(b) <= 1, "round-robin admitted {a} vs {b}");
+    }
+
+    #[test]
+    fn least_loaded_beats_round_robin_on_hetero_fleet() {
+        // One fast wireless package + one slow interposer package: load
+        // awareness must not split arrivals 50/50.
+        let specs = vec![
+            PackageSpec::new("fast", DesignPoint::WIENNA_A),
+            PackageSpec::new("slow", DesignPoint::INTERPOSER_C),
+        ];
+        let mut fleet = Fleet::new(specs, RoutePolicy::LeastLoaded);
+        let mix = tiny_mix(50.0);
+        let cap = fleet.estimate_capacity_rps(&mix, 8);
+        let mut source = Source::poisson(mix, cap * 0.9, 5);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+        let fast = fleet.packages[0].requests_completed;
+        let slow = fleet.packages[1].requests_completed;
+        assert!(fast > slow, "fast {fast} vs slow {slow}");
+    }
+
+    #[test]
+    fn drains_leftover_queue_after_horizon() {
+        // Overload: queues are non-empty at the horizon, and run() must
+        // still drain them (completions after the horizon).
+        let (fleet, stats) = run_at(3.0, RoutePolicy::EarliestDeadline);
+        assert_eq!(fleet.queued_total(), 0);
+        assert_eq!(stats.arrived(), stats.completed());
+        assert!(stats.end_cycle() > ms_to_cycles(20.0));
+    }
+
+    #[test]
+    fn utilization_rises_with_load() {
+        let (low, ls) = run_at(0.2, RoutePolicy::LeastLoaded);
+        let (high, hs) = run_at(1.2, RoutePolicy::LeastLoaded);
+        let u_low: f64 =
+            low.packages.iter().map(|p| p.utilization(ls.end_cycle())).sum::<f64>() / 2.0;
+        let u_high: f64 =
+            high.packages.iter().map(|p| p.utilization(hs.end_cycle())).sum::<f64>() / 2.0;
+        assert!(u_high > u_low, "util {u_high:.2} vs {u_low:.2}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Request serving over fleets of WIENNA packages (substrate S13).
+//!
+//! The paper motivates WIENNA with real-time inference; this module turns
+//! the analytical cost model into a discrete-event *serving* simulator so
+//! design points can be compared under production-style traffic instead
+//! of one isolated inference:
+//!
+//! * [`request`] — the served-model catalog (ResNet-50, UNet, BERT-base,
+//!   …), SLO-tagged workload mixes, and arrival processes: open-loop
+//!   Poisson, open-loop trace replay, and a closed-loop client pool;
+//! * [`queue`] — per-model FIFO admission queues (EDF across models);
+//! * [`batcher`] — dynamic batch-size selection from the cost model's
+//!   latency/throughput frontier, memoized per
+//!   `(design, model, batch)` in a [`CostCache`] so the event loop never
+//!   re-runs `evaluate_model`;
+//! * [`fleet`] — N possibly-heterogeneous packages with pluggable routing
+//!   (round-robin, least-loaded, SLO-aware earliest-deadline) and the
+//!   event loop itself;
+//! * [`stats`] — p50/p95/p99 latency, goodput, SLO-violation rate, batch
+//!   histograms and per-plane utilization.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use wienna::config::DesignPoint;
+//! use wienna::serve::{
+//!     Fleet, ModelKind, PackageSpec, RoutePolicy, ServeStats, Source, WorkloadMix,
+//! };
+//!
+//! // Four WIENNA-C packages behind a least-loaded router.
+//! let mut fleet = Fleet::new(
+//!     PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+//!     RoutePolicy::LeastLoaded,
+//! );
+//! // ResNet-50 at a 25 ms SLO, 2000 requests/s offered for 100 ms.
+//! let mix = WorkloadMix::single(ModelKind::ResNet50, 25.0);
+//! let mut source = Source::poisson(mix, 2000.0, 42);
+//! let mut stats = ServeStats::new();
+//! fleet.run(&mut source, wienna::serve::ms_to_cycles(100.0), &mut stats);
+//! println!(
+//!     "p99 {:.2} ms, goodput {:.0} req/s, violations {:.1}%",
+//!     stats.latency_ms(99.0),
+//!     stats.goodput_rps(),
+//!     stats.violation_rate() * 100.0
+//! );
+//! ```
+
+pub mod batcher;
+pub mod fleet;
+pub mod queue;
+pub mod request;
+pub mod stats;
+
+pub use batcher::{choose_batch, BatchCost, BatchDecision, BatcherConfig, CostCache, CostKey};
+pub use fleet::{Fleet, Package, PackageSpec, RoutePolicy};
+pub use queue::QueueSet;
+pub use request::{cycles_to_ms, ms_to_cycles, MixEntry, ModelKind, Request, Source, WorkloadMix};
+pub use stats::{LatencyRecorder, ModelStats, ServeStats};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignPoint;
+
+    #[test]
+    fn doc_example_pipeline_runs() {
+        // The `no_run` crate-docs example, at test-friendly scale.
+        let mut fleet =
+            Fleet::new(PackageSpec::homogeneous(2, DesignPoint::WIENNA_C), RoutePolicy::LeastLoaded);
+        let mix = WorkloadMix::single(ModelKind::TinyCnn, 20.0);
+        let mut source = Source::poisson(mix, 5000.0, 42);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, ms_to_cycles(5.0), &mut stats);
+        assert!(stats.completed() > 0);
+        assert!(stats.latency_ms(50.0) > 0.0);
+        assert!(stats.latency_ms(99.0) >= stats.latency_ms(50.0));
+        assert!(fleet.cache.hits > fleet.cache.misses, "cache should be hot");
+    }
+}

@@ -1,0 +1,137 @@
+//! Per-model FIFO admission queues with conservation counters.
+//!
+//! Each package owns one [`QueueSet`]: requests are FIFO within a model
+//! (batches must be homogeneous in model), and the dispatcher picks the
+//! model whose head-of-line request has the earliest deadline (EDF across
+//! queues, FIFO within a queue).
+
+use super::request::{ModelKind, Request};
+use std::collections::VecDeque;
+
+/// A set of per-model FIFO queues.
+#[derive(Debug, Default)]
+pub struct QueueSet {
+    queues: Vec<(ModelKind, VecDeque<Request>)>,
+    /// Requests ever admitted to this queue set.
+    pub arrived: u64,
+    /// Largest total depth observed.
+    pub peak_depth: usize,
+}
+
+impl QueueSet {
+    pub fn new() -> Self {
+        QueueSet::default()
+    }
+
+    fn queue_mut(&mut self, kind: ModelKind) -> &mut VecDeque<Request> {
+        if let Some(pos) = self.queues.iter().position(|(k, _)| *k == kind) {
+            &mut self.queues[pos].1
+        } else {
+            self.queues.push((kind, VecDeque::new()));
+            &mut self.queues.last_mut().unwrap().1
+        }
+    }
+
+    /// Admit one request (FIFO within its model queue).
+    pub fn push(&mut self, req: Request) {
+        self.arrived += 1;
+        self.queue_mut(req.kind).push_back(req);
+        let depth = self.depth_total();
+        if depth > self.peak_depth {
+            self.peak_depth = depth;
+        }
+    }
+
+    /// Queued requests for one model.
+    pub fn depth(&self, kind: ModelKind) -> usize {
+        self.queues.iter().find(|(k, _)| *k == kind).map_or(0, |(_, q)| q.len())
+    }
+
+    /// Queued requests across all models.
+    pub fn depth_total(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.depth_total() == 0
+    }
+
+    /// The model whose head-of-line request has the earliest deadline.
+    pub fn edf_kind(&self) -> Option<ModelKind> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by(|a, b| a.1[0].deadline.partial_cmp(&b.1[0].deadline).unwrap())
+            .map(|(k, _)| *k)
+    }
+
+    /// Deadline of the head-of-line request for `kind`.
+    pub fn head_deadline(&self, kind: ModelKind) -> Option<f64> {
+        self.queues
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .and_then(|(_, q)| q.front())
+            .map(|r| r.deadline)
+    }
+
+    /// Pop up to `n` requests of `kind` in FIFO order.
+    pub fn pop_batch(&mut self, kind: ModelKind, n: usize) -> Vec<Request> {
+        let q = self.queue_mut(kind);
+        let take = n.min(q.len());
+        q.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, kind: ModelKind, arrival: f64, slo: f64) -> Request {
+        Request { id, kind, arrival, deadline: arrival + slo, client: None }
+    }
+
+    #[test]
+    fn fifo_within_model() {
+        let mut q = QueueSet::new();
+        for i in 0..5 {
+            q.push(req(i, ModelKind::TinyCnn, i as f64, 100.0));
+        }
+        let batch = q.pop_batch(ModelKind::TinyCnn, 3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.depth(ModelKind::TinyCnn), 2);
+        assert_eq!(q.arrived, 5);
+    }
+
+    #[test]
+    fn edf_picks_earliest_head_deadline() {
+        let mut q = QueueSet::new();
+        q.push(req(0, ModelKind::TinyCnn, 0.0, 1000.0)); // deadline 1000
+        q.push(req(1, ModelKind::Mlp, 10.0, 500.0)); // deadline 510
+        assert_eq!(q.edf_kind(), Some(ModelKind::Mlp));
+        assert_eq!(q.head_deadline(ModelKind::Mlp), Some(510.0));
+        q.pop_batch(ModelKind::Mlp, 1);
+        assert_eq!(q.edf_kind(), Some(ModelKind::TinyCnn));
+    }
+
+    #[test]
+    fn pop_batch_clamps_to_depth() {
+        let mut q = QueueSet::new();
+        q.push(req(0, ModelKind::TinyCnn, 0.0, 1.0));
+        let batch = q.pop_batch(ModelKind::TinyCnn, 8);
+        assert_eq!(batch.len(), 1);
+        assert!(q.is_empty());
+        assert!(q.pop_batch(ModelKind::Mlp, 4).is_empty());
+    }
+
+    #[test]
+    fn peak_depth_tracks_high_water_mark() {
+        let mut q = QueueSet::new();
+        for i in 0..4 {
+            q.push(req(i, ModelKind::TinyCnn, 0.0, 1.0));
+        }
+        q.pop_batch(ModelKind::TinyCnn, 4);
+        q.push(req(9, ModelKind::TinyCnn, 0.0, 1.0));
+        assert_eq!(q.peak_depth, 4);
+        assert_eq!(q.depth_total(), 1);
+    }
+}

@@ -1,0 +1,422 @@
+//! Requests, the served-model catalog, and arrival processes.
+//!
+//! A request asks for one inference of a [`ModelKind`] and carries an SLO
+//! deadline. Arrival processes generate the request stream: an open-loop
+//! Poisson source (arrivals independent of service), an open-loop trace
+//! replay (recorded inter-arrival gaps), and a closed-loop client pool
+//! (each client waits for its completion plus a think time before issuing
+//! the next request — service pushback throttles the offered load).
+
+use crate::config::CLOCK_HZ;
+use crate::testutil::Rng;
+use crate::workload::{mlp, resnet50, tiny, transformer, unet, Model};
+
+/// Convert milliseconds to cycles at the Table-4 clock.
+pub fn ms_to_cycles(ms: f64) -> f64 {
+    ms * 1e-3 * CLOCK_HZ
+}
+
+/// Convert cycles to milliseconds at the Table-4 clock.
+pub fn cycles_to_ms(cycles: f64) -> f64 {
+    cycles / CLOCK_HZ * 1e3
+}
+
+/// The catalog of servable models. Keys the batcher's cost cache, so each
+/// variant must build identically for a given batch size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelKind {
+    /// ResNet-50 classifier (the paper's CNN workload).
+    ResNet50,
+    /// UNet segmentation network (the paper's second workload).
+    UNet,
+    /// BERT-base encoder, seq 128 (`workload::transformer`).
+    BertBase,
+    /// The scaled-down CNN (fast; used by tests).
+    TinyCnn,
+    /// FC-dominated MLP classifier.
+    Mlp,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 5] =
+        [ModelKind::ResNet50, ModelKind::UNet, ModelKind::BertBase, ModelKind::TinyCnn, ModelKind::Mlp];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelKind::ResNet50 => "resnet50",
+            ModelKind::UNet => "unet",
+            ModelKind::BertBase => "bert-base",
+            ModelKind::TinyCnn => "tiny-cnn",
+            ModelKind::Mlp => "mlp",
+        }
+    }
+
+    /// Instantiate the model at `batch` requests per inference.
+    pub fn build(&self, batch: u64) -> Model {
+        match self {
+            ModelKind::ResNet50 => resnet50::resnet50(batch),
+            ModelKind::UNet => unet::unet(batch),
+            ModelKind::BertBase => transformer::bert_base(batch),
+            ModelKind::TinyCnn => tiny::tiny_cnn(batch),
+            ModelKind::Mlp => mlp::mlp(batch, 784, 4096, 4, 1000),
+        }
+    }
+}
+
+/// One entry of a traffic mix: a model, its relative share of requests,
+/// and its latency SLO.
+#[derive(Debug, Clone, Copy)]
+pub struct MixEntry {
+    pub kind: ModelKind,
+    /// Relative traffic weight (need not sum to 1).
+    pub weight: f64,
+    /// Latency budget in cycles; a request's deadline is
+    /// `arrival + slo_cycles`.
+    pub slo_cycles: f64,
+}
+
+/// A weighted traffic mix over the model catalog.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    pub entries: Vec<MixEntry>,
+}
+
+impl WorkloadMix {
+    pub fn new(entries: Vec<MixEntry>) -> Self {
+        assert!(!entries.is_empty(), "mix needs at least one entry");
+        assert!(entries.iter().all(|e| e.weight > 0.0 && e.slo_cycles > 0.0));
+        WorkloadMix { entries }
+    }
+
+    /// A single-model mix with an SLO in milliseconds.
+    pub fn single(kind: ModelKind, slo_ms: f64) -> Self {
+        WorkloadMix::new(vec![MixEntry { kind, weight: 1.0, slo_cycles: ms_to_cycles(slo_ms) }])
+    }
+
+    /// The canonical CNN+transformer serving mix shared by the serving
+    /// example and the load-sweep bench: ResNet-50 (50% of traffic,
+    /// 25 ms SLO), UNet (25%, 50 ms — it is much heavier), BERT-base
+    /// (25%, 20 ms).
+    pub fn cnn_transformer_default() -> Self {
+        WorkloadMix::new(vec![
+            MixEntry { kind: ModelKind::ResNet50, weight: 2.0, slo_cycles: ms_to_cycles(25.0) },
+            MixEntry { kind: ModelKind::UNet, weight: 1.0, slo_cycles: ms_to_cycles(50.0) },
+            MixEntry { kind: ModelKind::BertBase, weight: 1.0, slo_cycles: ms_to_cycles(20.0) },
+        ])
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.entries.iter().map(|e| e.weight).sum()
+    }
+
+    /// Draw one entry with probability proportional to its weight.
+    fn draw(&self, rng: &mut Rng) -> MixEntry {
+        let mut u = rng.next_f32() as f64 * self.total_weight();
+        for e in &self.entries {
+            if u < e.weight {
+                return *e;
+            }
+            u -= e.weight;
+        }
+        *self.entries.last().unwrap()
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub kind: ModelKind,
+    /// Arrival cycle.
+    pub arrival: f64,
+    /// SLO deadline cycle (`arrival + slo`).
+    pub deadline: f64,
+    /// Closed-loop client that issued this request (`None` open-loop).
+    pub client: Option<usize>,
+}
+
+/// Open-loop Poisson arrivals at a fixed offered rate.
+#[derive(Debug, Clone)]
+pub struct PoissonSource {
+    mix: WorkloadMix,
+    mean_gap_cycles: f64,
+    rng: Rng,
+    next_at: f64,
+    next_id: u64,
+}
+
+/// Open-loop replay of recorded inter-arrival gaps (one pass).
+#[derive(Debug, Clone)]
+pub struct ReplaySource {
+    mix: WorkloadMix,
+    /// Remaining gaps in cycles, consumed front to back.
+    gaps: Vec<f64>,
+    cursor: usize,
+    rng: Rng,
+    next_at: f64,
+    next_id: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Client {
+    /// When this client issues its next request (`None`: in flight).
+    ready_at: Option<f64>,
+    remaining: u64,
+}
+
+/// Closed-loop client pool: each client re-issues `think` cycles after its
+/// previous request completes.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopSource {
+    mix: WorkloadMix,
+    think_cycles: f64,
+    clients: Vec<Client>,
+    rng: Rng,
+    next_id: u64,
+}
+
+/// An arrival process over a workload mix.
+#[derive(Debug, Clone)]
+pub enum Source {
+    Poisson(PoissonSource),
+    Replay(ReplaySource),
+    ClosedLoop(ClosedLoopSource),
+}
+
+impl Source {
+    /// Open-loop Poisson arrivals at `rate_rps` requests per second.
+    pub fn poisson(mix: WorkloadMix, rate_rps: f64, seed: u64) -> Source {
+        assert!(rate_rps > 0.0);
+        let mean_gap_cycles = CLOCK_HZ / rate_rps;
+        let mut rng = Rng::new(seed);
+        let first = exp_sample(&mut rng, mean_gap_cycles);
+        Source::Poisson(PoissonSource { mix, mean_gap_cycles, rng, next_at: first, next_id: 0 })
+    }
+
+    /// Open-loop replay of recorded inter-arrival gaps (milliseconds).
+    pub fn replay(mix: WorkloadMix, gaps_ms: &[f64], seed: u64) -> Source {
+        assert!(!gaps_ms.is_empty());
+        let gaps: Vec<f64> = gaps_ms.iter().map(|&g| ms_to_cycles(g)).collect();
+        let first = gaps[0];
+        Source::Replay(ReplaySource { mix, gaps, cursor: 0, rng: Rng::new(seed), next_at: first, next_id: 0 })
+    }
+
+    /// Closed-loop pool of `clients`, each issuing `requests_per_client`
+    /// requests with `think_ms` of think time after every completion.
+    pub fn closed_loop(mix: WorkloadMix, clients: usize, think_ms: f64, requests_per_client: u64, seed: u64) -> Source {
+        assert!(clients > 0 && requests_per_client > 0);
+        let think_cycles = ms_to_cycles(think_ms);
+        let mut rng = Rng::new(seed);
+        let clients = (0..clients)
+            .map(|_| Client {
+                // Stagger the initial issue times over one think window.
+                ready_at: Some(rng.next_f32() as f64 * think_cycles.max(1.0)),
+                remaining: requests_per_client,
+            })
+            .collect();
+        Source::ClosedLoop(ClosedLoopSource { mix, think_cycles, clients, rng, next_id: 0 })
+    }
+
+    /// Cycle of the next pending arrival, if any.
+    pub fn next_arrival_at(&self) -> Option<f64> {
+        match self {
+            Source::Poisson(s) => Some(s.next_at),
+            Source::Replay(s) => {
+                if s.cursor < s.gaps.len() {
+                    Some(s.next_at)
+                } else {
+                    None
+                }
+            }
+            Source::ClosedLoop(s) => s
+                .clients
+                .iter()
+                .filter_map(|c| c.ready_at)
+                .fold(None, |m: Option<f64>, t| Some(m.map_or(t, |m| m.min(t)))),
+        }
+    }
+
+    /// Emit the pending arrival (callers must have seen
+    /// [`Source::next_arrival_at`] return `Some`).
+    pub fn pop(&mut self) -> Request {
+        match self {
+            Source::Poisson(s) => {
+                let e = s.mix.draw(&mut s.rng);
+                let req = request(s.next_id, &e, s.next_at, None);
+                s.next_id += 1;
+                s.next_at += exp_sample(&mut s.rng, s.mean_gap_cycles);
+                req
+            }
+            Source::Replay(s) => {
+                assert!(s.cursor < s.gaps.len(), "replay source exhausted");
+                let e = s.mix.draw(&mut s.rng);
+                let req = request(s.next_id, &e, s.next_at, None);
+                s.next_id += 1;
+                s.cursor += 1;
+                if s.cursor < s.gaps.len() {
+                    s.next_at += s.gaps[s.cursor];
+                }
+                req
+            }
+            Source::ClosedLoop(s) => {
+                let (idx, at) = s
+                    .clients
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, c)| c.ready_at.map(|t| (i, t)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .expect("closed-loop source has no ready client");
+                let e = s.mix.draw(&mut s.rng);
+                let req = request(s.next_id, &e, at, Some(idx));
+                s.next_id += 1;
+                s.clients[idx].ready_at = None;
+                s.clients[idx].remaining -= 1;
+                req
+            }
+        }
+    }
+
+    /// Completion feedback; drives the closed-loop clients and is a no-op
+    /// for open-loop sources.
+    pub fn on_complete(&mut self, now: f64, req: &Request) {
+        if let Source::ClosedLoop(s) = self {
+            if let Some(idx) = req.client {
+                if s.clients[idx].remaining > 0 {
+                    s.clients[idx].ready_at = Some(now + s.think_cycles);
+                }
+            }
+        }
+    }
+
+    /// Requests emitted so far.
+    pub fn emitted(&self) -> u64 {
+        match self {
+            Source::Poisson(s) => s.next_id,
+            Source::Replay(s) => s.next_id,
+            Source::ClosedLoop(s) => s.next_id,
+        }
+    }
+
+    /// Whether the source runs dry on its own. A Poisson source never
+    /// does — running one needs a finite horizon (`Fleet::run` asserts
+    /// this); replay and closed-loop sources are finite by construction.
+    pub fn is_bounded(&self) -> bool {
+        !matches!(self, Source::Poisson(_))
+    }
+}
+
+fn request(id: u64, e: &MixEntry, at: f64, client: Option<usize>) -> Request {
+    Request { id, kind: e.kind, arrival: at, deadline: at + e.slo_cycles, client }
+}
+
+/// Exponential inter-arrival sample with the given mean.
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    let u = rng.next_f32() as f64; // [0, 1)
+    -mean * (1.0 - u).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix() -> WorkloadMix {
+        WorkloadMix::new(vec![
+            MixEntry { kind: ModelKind::TinyCnn, weight: 3.0, slo_cycles: ms_to_cycles(10.0) },
+            MixEntry { kind: ModelKind::Mlp, weight: 1.0, slo_cycles: ms_to_cycles(20.0) },
+        ])
+    }
+
+    #[test]
+    fn poisson_rate_matches_mean_gap() {
+        let mut s = Source::poisson(mix(), 1000.0, 42);
+        let n = 2000;
+        let mut last = 0.0;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let r = s.pop();
+            assert!(r.arrival >= last);
+            total = r.arrival;
+            last = r.arrival;
+        }
+        let mean_gap = total / n as f64;
+        let expect = CLOCK_HZ / 1000.0;
+        assert!(
+            (mean_gap - expect).abs() / expect < 0.1,
+            "mean gap {mean_gap:.0} vs expected {expect:.0}"
+        );
+        assert_eq!(s.emitted(), n);
+    }
+
+    #[test]
+    fn mix_weights_respected() {
+        let mut s = Source::poisson(mix(), 1000.0, 7);
+        let mut tiny = 0u64;
+        let n = 4000;
+        for _ in 0..n {
+            if s.pop().kind == ModelKind::TinyCnn {
+                tiny += 1;
+            }
+        }
+        let frac = tiny as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.05, "tiny fraction {frac:.2}");
+    }
+
+    #[test]
+    fn deadlines_offset_by_slo() {
+        let mut s = Source::poisson(mix(), 100.0, 1);
+        for _ in 0..50 {
+            let r = s.pop();
+            let slo = r.deadline - r.arrival;
+            let expect = match r.kind {
+                ModelKind::TinyCnn => ms_to_cycles(10.0),
+                _ => ms_to_cycles(20.0),
+            };
+            assert!((slo - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn replay_walks_the_trace_once() {
+        let mut s = Source::replay(mix(), &[1.0, 2.0, 3.0], 9);
+        let a = s.pop().arrival;
+        let b = s.pop().arrival;
+        let c = s.pop().arrival;
+        assert!((a - ms_to_cycles(1.0)).abs() < 1e-6);
+        assert!((b - a - ms_to_cycles(2.0)).abs() < 1e-6);
+        assert!((c - b - ms_to_cycles(3.0)).abs() < 1e-6);
+        assert!(s.next_arrival_at().is_none());
+    }
+
+    #[test]
+    fn closed_loop_waits_for_completion() {
+        let mut s = Source::closed_loop(mix(), 2, 1.0, 2, 3);
+        let r1 = s.pop();
+        let r2 = s.pop();
+        // Both clients are now in flight: no further arrivals.
+        assert!(s.next_arrival_at().is_none());
+        // Completing r1 re-arms its client one think time later.
+        s.on_complete(r1.arrival + 100.0, &r1);
+        let t = s.next_arrival_at().expect("client re-armed");
+        assert!((t - (r1.arrival + 100.0 + ms_to_cycles(1.0))).abs() < 1e-6);
+        let r3 = s.pop();
+        assert_eq!(r3.client, r1.client);
+        // Each client issues exactly two requests.
+        s.on_complete(r3.arrival + 50.0, &r3);
+        assert!(s.next_arrival_at().is_none());
+        s.on_complete(r2.arrival + 50.0, &r2);
+        let r4 = s.pop();
+        assert_eq!(r4.client, r2.client);
+        s.on_complete(r4.arrival + 50.0, &r4);
+        assert!(s.next_arrival_at().is_none());
+        assert_eq!(s.emitted(), 4);
+    }
+
+    #[test]
+    fn model_catalog_builds() {
+        for kind in ModelKind::ALL {
+            let m = kind.build(2);
+            assert!(!m.layers.is_empty(), "{} has layers", kind.label());
+            assert!(m.total_macs() > 0);
+        }
+    }
+}

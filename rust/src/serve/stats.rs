@@ -1,0 +1,301 @@
+//! Serving statistics: tail latency, goodput, SLO violations, batches.
+//!
+//! Latency percentiles use the exact nearest-rank definition over all
+//! recorded samples (the simulator records every completion, so there is
+//! no need for streaming sketches), checked against a sorted-vector
+//! oracle in the tests.
+
+use super::request::{cycles_to_ms, ModelKind, Request};
+use crate::config::CLOCK_HZ;
+use std::collections::BTreeMap;
+
+/// Exact latency sample recorder.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    /// Lazily sorted view, built at most once per recorder state (pushes
+    /// invalidate it) so querying p50/p95/p99/p100 sorts only once.
+    sorted: std::cell::OnceCell<Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        LatencyRecorder::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = std::cell::OnceCell::new();
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn sorted(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut s = self.samples.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        })
+    }
+
+    /// Nearest-rank percentile: the smallest sample such that at least
+    /// `p`% of samples are `<=` it. `NaN` when no samples were recorded.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let sorted = self.sorted();
+        let n = sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            f64::NAN
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NAN, f64::max)
+    }
+}
+
+/// Per-model serving counters.
+#[derive(Debug, Default, Clone)]
+pub struct ModelStats {
+    /// Completion latencies in cycles.
+    pub latency: LatencyRecorder,
+    pub arrived: u64,
+    pub completed: u64,
+    pub slo_met: u64,
+    pub slo_violated: u64,
+}
+
+/// Fleet-wide serving statistics for one run.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub per_model: BTreeMap<ModelKind, ModelStats>,
+    all: ModelStats,
+    /// Histogram of dispatched batch sizes.
+    pub batch_hist: BTreeMap<u64, u64>,
+    dispatches: u64,
+    end_cycle: f64,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        ServeStats::default()
+    }
+
+    pub fn record_arrival(&mut self, req: &Request) {
+        self.all.arrived += 1;
+        self.per_model.entry(req.kind).or_default().arrived += 1;
+    }
+
+    pub fn record_dispatch(&mut self, batch: u64) {
+        self.dispatches += 1;
+        *self.batch_hist.entry(batch).or_insert(0) += 1;
+    }
+
+    pub fn record_completion(&mut self, req: &Request, completion_cycle: f64) {
+        let latency = completion_cycle - req.arrival;
+        let met = completion_cycle <= req.deadline;
+        for m in [&mut self.all, self.per_model.entry(req.kind).or_default()] {
+            m.latency.push(latency);
+            m.completed += 1;
+            if met {
+                m.slo_met += 1;
+            } else {
+                m.slo_violated += 1;
+            }
+        }
+    }
+
+    /// Mark the end of the run (cycle of the last event).
+    pub fn finish(&mut self, end_cycle: f64) {
+        self.end_cycle = end_cycle;
+    }
+
+    pub fn arrived(&self) -> u64 {
+        self.all.arrived
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.all.completed
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    pub fn end_cycle(&self) -> f64 {
+        self.end_cycle
+    }
+
+    pub fn end_seconds(&self) -> f64 {
+        self.end_cycle / CLOCK_HZ
+    }
+
+    /// Aggregate latency percentile in milliseconds.
+    pub fn latency_ms(&self, percentile: f64) -> f64 {
+        cycles_to_ms(self.all.latency.percentile(percentile))
+    }
+
+    /// Completed requests per second over the whole run.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.end_cycle <= 0.0 {
+            0.0
+        } else {
+            self.all.completed as f64 / self.end_seconds()
+        }
+    }
+
+    /// SLO-meeting completions per second over the whole run.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.end_cycle <= 0.0 {
+            0.0
+        } else {
+            self.all.slo_met as f64 / self.end_seconds()
+        }
+    }
+
+    /// Fraction of completions that missed their deadline.
+    pub fn violation_rate(&self) -> f64 {
+        if self.all.completed == 0 {
+            0.0
+        } else {
+            self.all.slo_violated as f64 / self.all.completed as f64
+        }
+    }
+
+    /// Mean dispatched batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            let weighted: u64 = self.batch_hist.iter().map(|(b, n)| b * n).sum();
+            weighted as f64 / self.dispatches as f64
+        }
+    }
+
+    /// Largest batch ever dispatched.
+    pub fn max_batch(&self) -> u64 {
+        self.batch_hist.keys().next_back().copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::ms_to_cycles;
+    use crate::testutil::Rng;
+
+    /// Independent oracle, straight from the nearest-rank *definition*
+    /// (not the implementation's ceil/clamp formula): the smallest sorted
+    /// value whose cumulative sample count reaches `p`% of `n`.
+    fn oracle_percentile(samples: &[f64], p: f64) -> f64 {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        for (i, &v) in s.iter().enumerate() {
+            if (i + 1) as f64 * 100.0 >= p * n as f64 {
+                return v;
+            }
+        }
+        s[n - 1]
+    }
+
+    #[test]
+    fn percentiles_match_sorted_vector_oracle() {
+        let mut rng = Rng::new(123);
+        let samples: Vec<f64> = (0..997).map(|_| rng.next_f32() as f64 * 1e6).collect();
+        let mut rec = LatencyRecorder::new();
+        for &s in &samples {
+            rec.push(s);
+        }
+        for p in [0.0, 1.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            assert_eq!(rec.percentile(p), oracle_percentile(&samples, p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentiles_match_hand_computed_values() {
+        // Ten known samples in scrambled insertion order.
+        let mut rec = LatencyRecorder::new();
+        for v in [70.0, 10.0, 90.0, 30.0, 50.0, 100.0, 20.0, 80.0, 40.0, 60.0] {
+            rec.push(v);
+        }
+        // Nearest-rank over {10..100}: p50 -> 5th smallest, p90 -> 9th,
+        // p91 rounds the rank up to the 10th, p10 -> 1st.
+        assert_eq!(rec.percentile(50.0), 50.0);
+        assert_eq!(rec.percentile(90.0), 90.0);
+        assert_eq!(rec.percentile(91.0), 100.0);
+        assert_eq!(rec.percentile(10.0), 10.0);
+        assert_eq!(rec.percentile(0.0), 10.0);
+        assert_eq!(rec.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        let mut rec = LatencyRecorder::new();
+        assert!(rec.percentile(50.0).is_nan());
+        rec.push(7.0);
+        assert_eq!(rec.percentile(0.0), 7.0);
+        assert_eq!(rec.percentile(50.0), 7.0);
+        assert_eq!(rec.percentile(100.0), 7.0);
+        rec.push(3.0);
+        // p50 of {3, 7} is the first element (rank ceil(0.5*2)=1).
+        assert_eq!(rec.percentile(50.0), 3.0);
+        assert_eq!(rec.percentile(100.0), 7.0);
+        assert_eq!(rec.mean(), 5.0);
+        assert_eq!(rec.max(), 7.0);
+    }
+
+    fn req(id: u64, kind: ModelKind, arrival: f64, slo: f64) -> Request {
+        Request { id, kind, arrival, deadline: arrival + slo, client: None }
+    }
+
+    #[test]
+    fn slo_accounting() {
+        let mut s = ServeStats::new();
+        let a = req(0, ModelKind::TinyCnn, 0.0, 100.0);
+        let b = req(1, ModelKind::Mlp, 10.0, 100.0);
+        s.record_arrival(&a);
+        s.record_arrival(&b);
+        s.record_completion(&a, 90.0); // met (90 <= 100)
+        s.record_completion(&b, 200.0); // violated (200 > 110)
+        s.finish(ms_to_cycles(1.0));
+        assert_eq!(s.arrived(), 2);
+        assert_eq!(s.completed(), 2);
+        assert!((s.violation_rate() - 0.5).abs() < 1e-12);
+        // Goodput counts only the SLO-meeting completion: 1 req / 1 ms.
+        assert!((s.goodput_rps() - 1000.0).abs() < 1e-6);
+        assert!((s.throughput_rps() - 2000.0).abs() < 1e-6);
+        let tiny = &s.per_model[&ModelKind::TinyCnn];
+        assert_eq!((tiny.slo_met, tiny.slo_violated), (1, 0));
+        let mlp = &s.per_model[&ModelKind::Mlp];
+        assert_eq!((mlp.slo_met, mlp.slo_violated), (0, 1));
+    }
+
+    #[test]
+    fn batch_histogram_and_means() {
+        let mut s = ServeStats::new();
+        s.record_dispatch(1);
+        s.record_dispatch(4);
+        s.record_dispatch(4);
+        s.record_dispatch(16);
+        assert_eq!(s.dispatches(), 4);
+        assert_eq!(s.max_batch(), 16);
+        assert!((s.mean_batch() - 6.25).abs() < 1e-12);
+    }
+}

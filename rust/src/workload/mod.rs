@@ -1,12 +1,14 @@
 //! Workload substrate (S1): layer descriptors, Table-1 layer typing, and
 //! the two evaluation networks from the paper (ResNet-50 and UNet), plus a
-//! scaled-down CNN used by the end-to-end real-numerics example.
+//! scaled-down CNN used by the end-to-end real-numerics example, MLP/RNN
+//! generators, and a BERT-style transformer encoder for the serving mix.
 
 pub mod layer;
 pub mod mlp;
 pub mod resnet50;
 pub mod tiny;
 pub mod trace;
+pub mod transformer;
 pub mod types;
 pub mod unet;
 

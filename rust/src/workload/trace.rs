@@ -16,7 +16,7 @@
 //! `convp` for "SAME"-style auto-padding from unpadded extents.
 
 use super::{conv_padded, Layer, Model};
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 /// Parse a workload trace from text.
 pub fn parse(text: &str) -> Result<Model> {

@@ -1,0 +1,166 @@
+//! BERT-style transformer encoder workloads.
+//!
+//! The paper evaluates two CNNs (ResNet-50, UNet); the serving scenarios
+//! of `wienna::serve` additionally mix in a matmul-dominated transformer
+//! so the fleet sees both CNN and GEMM traffic. Every projection and
+//! attention matmul is expressed through the existing [`Layer`] loop-nest
+//! descriptors, so the Table-1 layer typing ([`crate::workload::classify`])
+//! applies unchanged: projections / FFN / attention GEMMs classify as
+//! `FullyConnected`, the skip connections as `Residual` — exactly the
+//! KP-CP-friendly traffic mix the paper's Observation I predicts.
+//!
+//! Shapes follow the standard encoder block: per layer, Q/K/V and output
+//! projections (`[hidden x hidden]` GEMMs over `batch*seq` rows), the
+//! two attention matmuls (`QK^T` and `attn x V`, folded over
+//! `batch * heads` score matrices), and the 4x feed-forward pair, with a
+//! residual add after the attention and FFN sub-blocks.
+
+use super::{Layer, Model};
+
+/// Configuration of a BERT-style encoder stack.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerConfig {
+    pub batch: u64,
+    /// Sequence length (tokens per request).
+    pub seq: u64,
+    /// Model (hidden) dimension.
+    pub hidden: u64,
+    /// Attention heads; must divide `hidden`.
+    pub heads: u64,
+    /// Encoder blocks.
+    pub blocks: u64,
+    /// FFN expansion factor (4 in BERT).
+    pub ffn_mult: u64,
+}
+
+impl TransformerConfig {
+    /// BERT-base: 12 blocks, hidden 768, 12 heads, seq 128.
+    pub fn bert_base(batch: u64) -> Self {
+        TransformerConfig { batch, seq: 128, hidden: 768, heads: 12, blocks: 12, ffn_mult: 4 }
+    }
+
+    /// A small encoder for fast tests.
+    pub fn tiny(batch: u64) -> Self {
+        TransformerConfig { batch, seq: 16, hidden: 64, heads: 4, blocks: 2, ffn_mult: 4 }
+    }
+
+    pub fn head_dim(&self) -> u64 {
+        self.hidden / self.heads
+    }
+}
+
+/// Build the encoder stack for `cfg`.
+///
+/// Token dimensions are folded into the GEMM row dimension `N`
+/// (`batch * seq` rows for projections, `batch * heads * seq` rows for
+/// the per-head attention matmuls), which preserves exact MAC counts and
+/// exact activation (input/output) volumes within the 7-loop CONV/GEMM
+/// descriptor.
+///
+/// One deliberate approximation: a [`Layer`] carries a single weight
+/// tensor, so the folded attention matmuls model their K (resp. V)
+/// operand as one `seq x head_dim` stationary tensor shared by all
+/// `batch * heads` score matrices — undercounting K/V distribution
+/// traffic by that factor, exactly as if K/V stayed resident like
+/// weights do. Expressing per-(batch, head) operands would need
+/// `batch * heads` separate layers per matmul. MAC counts, Q-side
+/// volumes and all non-attention layers are exact.
+pub fn transformer(cfg: TransformerConfig) -> Model {
+    assert!(cfg.hidden % cfg.heads == 0, "heads must divide hidden");
+    assert!(cfg.batch >= 1 && cfg.seq >= 1 && cfg.blocks >= 1);
+    let rows = cfg.batch * cfg.seq;
+    let d = cfg.head_dim();
+    let ffn = cfg.hidden * cfg.ffn_mult;
+    let mut layers = Vec::new();
+    for b in 0..cfg.blocks {
+        let tag = |op: &str| format!("enc{b}_{op}");
+        // Q, K, V projections: [rows x hidden] x [hidden x hidden].
+        layers.push(Layer::fc(&tag("q_proj"), rows, cfg.hidden, cfg.hidden));
+        layers.push(Layer::fc(&tag("k_proj"), rows, cfg.hidden, cfg.hidden));
+        layers.push(Layer::fc(&tag("v_proj"), rows, cfg.hidden, cfg.hidden));
+        // Attention scores QK^T: per (batch, head), [seq x d] x [d x seq].
+        layers.push(Layer::fc(&tag("qk_scores"), cfg.batch * cfg.heads * cfg.seq, cfg.seq, d));
+        // Attention-weighted values: per (batch, head), [seq x seq] x [seq x d].
+        layers.push(Layer::fc(&tag("attn_v"), cfg.batch * cfg.heads * cfg.seq, d, cfg.seq));
+        // Output projection and the attention skip connection.
+        layers.push(Layer::fc(&tag("out_proj"), rows, cfg.hidden, cfg.hidden));
+        layers.push(Layer::residual(&tag("attn_res"), cfg.batch, cfg.hidden, cfg.seq, 1));
+        // Feed-forward pair and its skip connection.
+        layers.push(Layer::fc(&tag("ffn_up"), rows, ffn, cfg.hidden));
+        layers.push(Layer::fc(&tag("ffn_down"), rows, cfg.hidden, ffn));
+        layers.push(Layer::residual(&tag("ffn_res"), cfg.batch, cfg.hidden, cfg.seq, 1));
+    }
+    // Pooler / classifier head on the [CLS] token.
+    layers.push(Layer::fc("pooler", cfg.batch, cfg.hidden, cfg.hidden));
+    Model {
+        name: format!("bert_b{}_s{}_h{}x{}", cfg.batch, cfg.seq, cfg.hidden, cfg.blocks),
+        layers,
+    }
+}
+
+/// BERT-base encoder at the given batch size (seq 128).
+pub fn bert_base(batch: u64) -> Model {
+    transformer(TransformerConfig::bert_base(batch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{classify, LayerType};
+
+    #[test]
+    fn block_structure_and_count() {
+        let m = transformer(TransformerConfig::tiny(2));
+        // 10 layers per block x 2 blocks + pooler.
+        assert_eq!(m.layers.len(), 21);
+        assert_eq!(m.layers[0].name, "enc0_q_proj");
+        assert_eq!(m.layers[20].name, "pooler");
+    }
+
+    #[test]
+    fn table1_typing_is_fc_plus_residual() {
+        let m = bert_base(4);
+        let types = m.layer_types();
+        assert_eq!(types, vec![LayerType::Residual, LayerType::FullyConnected]);
+        // 8 GEMMs + 2 residuals per block, 12 blocks, + pooler.
+        assert_eq!(m.layers_of_type(LayerType::FullyConnected).len(), 8 * 12 + 1);
+        assert_eq!(m.layers_of_type(LayerType::Residual).len(), 2 * 12);
+    }
+
+    #[test]
+    fn attention_macs_match_closed_form() {
+        let cfg = TransformerConfig::tiny(3);
+        let m = transformer(cfg);
+        let d = cfg.head_dim();
+        // QK^T: batch * heads * seq^2 * d MACs.
+        let qk = m.layers.iter().find(|l| l.name == "enc0_qk_scores").unwrap();
+        assert_eq!(qk.macs(), cfg.batch * cfg.heads * cfg.seq * cfg.seq * d);
+        // attn x V has the same MAC count by symmetry.
+        let av = m.layers.iter().find(|l| l.name == "enc0_attn_v").unwrap();
+        assert_eq!(av.macs(), qk.macs());
+        // Projections: batch * seq * hidden^2.
+        let q = m.layers.iter().find(|l| l.name == "enc0_q_proj").unwrap();
+        assert_eq!(q.macs(), cfg.batch * cfg.seq * cfg.hidden * cfg.hidden);
+    }
+
+    #[test]
+    fn total_macs_scale_linearly_with_batch() {
+        let m1 = bert_base(1);
+        let m4 = bert_base(4);
+        assert_eq!(m4.total_macs(), 4 * m1.total_macs());
+    }
+
+    #[test]
+    fn residual_volume_matches_token_embeddings() {
+        let cfg = TransformerConfig::tiny(2);
+        let m = transformer(cfg);
+        let r = m.layers.iter().find(|l| l.name == "enc0_attn_res").unwrap();
+        assert_eq!(r.macs(), cfg.batch * cfg.hidden * cfg.seq);
+    }
+
+    #[test]
+    #[should_panic]
+    fn heads_must_divide_hidden() {
+        transformer(TransformerConfig { batch: 1, seq: 8, hidden: 65, heads: 4, blocks: 1, ffn_mult: 4 });
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests over the serving subsystem: sources -> routing ->
+//! dynamic batching -> completion statistics, end to end.
+//!
+//! Scenarios use the tiny CNN so debug-mode runs stay fast; the cost
+//! cache keeps every run to a handful of `evaluate_model` calls.
+
+use wienna::config::DesignPoint;
+use wienna::serve::{
+    ms_to_cycles, Fleet, MixEntry, ModelKind, PackageSpec, RoutePolicy, ServeStats, Source,
+    WorkloadMix,
+};
+
+fn tiny_mix(slo_ms: f64) -> WorkloadMix {
+    WorkloadMix::new(vec![MixEntry {
+        kind: ModelKind::TinyCnn,
+        weight: 1.0,
+        slo_cycles: ms_to_cycles(slo_ms),
+    }])
+}
+
+fn two_model_mix() -> WorkloadMix {
+    WorkloadMix::new(vec![
+        MixEntry { kind: ModelKind::TinyCnn, weight: 3.0, slo_cycles: ms_to_cycles(20.0) },
+        MixEntry { kind: ModelKind::Mlp, weight: 1.0, slo_cycles: ms_to_cycles(40.0) },
+    ])
+}
+
+fn poisson_run(load: f64, slo_ms: f64, seed: u64) -> (Fleet, ServeStats) {
+    let mut fleet =
+        Fleet::new(PackageSpec::homogeneous(2, DesignPoint::WIENNA_C), RoutePolicy::EarliestDeadline);
+    let mix = tiny_mix(slo_ms);
+    let capacity = fleet.estimate_capacity_rps(&mix, 8);
+    let mut source = Source::poisson(mix, capacity * load, seed);
+    let mut stats = ServeStats::new();
+    fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+    (fleet, stats)
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let (_, a) = poisson_run(0.7, 30.0, 99);
+    let (_, b) = poisson_run(0.7, 30.0, 99);
+    assert_eq!(a.arrived(), b.arrived());
+    assert_eq!(a.completed(), b.completed());
+    assert_eq!(a.latency_ms(99.0), b.latency_ms(99.0));
+    assert_eq!(a.mean_batch(), b.mean_batch());
+}
+
+#[test]
+fn light_load_meets_generous_slo() {
+    let (_, stats) = poisson_run(0.2, 50.0, 4);
+    assert!(stats.completed() > 0);
+    assert!(
+        stats.violation_rate() < 0.05,
+        "light load violated {:.1}%",
+        stats.violation_rate() * 100.0
+    );
+    // Near-idle fleet: batches stay small.
+    assert!(stats.mean_batch() < 4.0, "mean batch {:.2}", stats.mean_batch());
+}
+
+#[test]
+fn overload_violates_and_batches_up() {
+    let (_, light) = poisson_run(0.2, 10.0, 4);
+    let (_, heavy) = poisson_run(2.5, 10.0, 4);
+    assert!(
+        heavy.violation_rate() > light.violation_rate(),
+        "overload {:.2} vs light {:.2}",
+        heavy.violation_rate(),
+        light.violation_rate()
+    );
+    assert!(
+        heavy.mean_batch() > light.mean_batch(),
+        "overload batch {:.2} vs light {:.2}",
+        heavy.mean_batch(),
+        light.mean_batch()
+    );
+    assert!(heavy.latency_ms(99.0) > light.latency_ms(99.0));
+}
+
+#[test]
+fn conservation_across_sources_and_policies() {
+    for policy in RoutePolicy::ALL {
+        // Open loop: replayed gap trace over two models.
+        let gaps: Vec<f64> = (0..200).map(|i| 0.01 + 0.002 * (i % 7) as f64).collect();
+        let mut fleet = Fleet::new(PackageSpec::homogeneous(3, DesignPoint::WIENNA_C), policy);
+        let mut source = Source::replay(two_model_mix(), &gaps, 5);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, f64::INFINITY, &mut stats);
+        assert_eq!(source.emitted(), 200, "{}", policy.label());
+        assert_eq!(stats.arrived(), 200);
+        assert_eq!(stats.completed(), 200);
+        assert_eq!(fleet.queued_total(), 0);
+        assert_eq!(fleet.in_flight_total(), 0);
+        let per_pkg: u64 = fleet.packages.iter().map(|p| p.requests_completed).sum();
+        assert_eq!(per_pkg, 200);
+    }
+}
+
+#[test]
+fn closed_loop_serves_every_client_request() {
+    let clients = 8;
+    let per_client = 5;
+    let mut fleet =
+        Fleet::new(PackageSpec::homogeneous(2, DesignPoint::WIENNA_A), RoutePolicy::LeastLoaded);
+    let mut source = Source::closed_loop(two_model_mix(), clients, 0.5, per_client, 11);
+    let mut stats = ServeStats::new();
+    fleet.run(&mut source, f64::INFINITY, &mut stats);
+    let expected = (clients as u64) * per_client;
+    assert_eq!(source.emitted(), expected);
+    assert_eq!(stats.completed(), expected);
+    // Closed loop never queues more than one request per client.
+    assert!(fleet.packages.iter().all(|p| p.queue.peak_depth <= clients));
+}
+
+#[test]
+fn cost_cache_stays_hot_in_the_event_loop() {
+    let (fleet, stats) = poisson_run(1.0, 30.0, 21);
+    assert!(stats.completed() > 20, "need a busy run, got {}", stats.completed());
+    // Misses are bounded by the distinct (model, batch) keys, hits grow
+    // with traffic: the hot loop must not re-run evaluate_model.
+    let max_keys = 2 * fleet.batcher.candidates.len() as u64 + 2;
+    assert!(fleet.cache.misses <= max_keys, "{} misses", fleet.cache.misses);
+    assert!(
+        fleet.cache.hits > 4 * fleet.cache.misses,
+        "{} hits vs {} misses",
+        fleet.cache.hits,
+        fleet.cache.misses
+    );
+}
+
+#[test]
+fn percentiles_are_ordered_and_bounded_by_max() {
+    let (_, stats) = poisson_run(1.2, 15.0, 8);
+    let p50 = stats.latency_ms(50.0);
+    let p95 = stats.latency_ms(95.0);
+    let p99 = stats.latency_ms(99.0);
+    let p100 = stats.latency_ms(100.0);
+    assert!(p50 <= p95 && p95 <= p99 && p99 <= p100, "{p50} {p95} {p99} {p100}");
+    assert!(p50 > 0.0);
+}
+
+#[test]
+fn hetero_fleet_with_slo_routing_beats_round_robin_on_goodput() {
+    let specs = || {
+        let mut v = PackageSpec::homogeneous(1, DesignPoint::WIENNA_A);
+        v.extend(PackageSpec::homogeneous(1, DesignPoint::INTERPOSER_C));
+        v
+    };
+    let mix = tiny_mix(8.0);
+    let run = |policy| {
+        let mut fleet = Fleet::new(specs(), policy);
+        let capacity = fleet.estimate_capacity_rps(&mix, 8);
+        let mut source = Source::poisson(mix.clone(), capacity * 0.9, 17);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+        stats
+    };
+    let rr = run(RoutePolicy::RoundRobin);
+    let edf = run(RoutePolicy::EarliestDeadline);
+    assert!(
+        edf.violation_rate() <= rr.violation_rate(),
+        "edf {:.3} vs rr {:.3}",
+        edf.violation_rate(),
+        rr.violation_rate()
+    );
+}
