@@ -41,7 +41,7 @@ fn main() {
             let prop = partition_hetero(l, Strategy::KpCp, pkg, 1);
             let unif = partition_uniform(l, Strategy::KpCp, pkg, 1);
             t.row(vec![
-                l.name.clone(),
+                l.name.to_string(),
                 format!("{}", prop.makespan),
                 format!("{}", unif.makespan),
                 format!("{:.2}x", unif.makespan as f64 / prop.makespan.max(1) as f64),

@@ -1,41 +1,83 @@
 //! Performance benchmarks for the hot paths of each layer (EXPERIMENTS.md
 //! §Perf):
 //!
-//! * L3 cost engine — per-layer evaluation and whole-model adaptive runs;
+//! * L3 cost engine — per-layer evaluation (cold vs memoized), whole-model
+//!   adaptive runs, and the full Fig-7 design-point grid (memo + worker
+//!   pool — the acceptance metric for the fast-path PR);
 //! * L3 cycle-level mesh simulator — flit-hop throughput;
 //! * L3 coordinator — schedule generation;
-//! * runtime — PJRT tile dispatch latency (skipped gracefully when the
-//!   artifacts have not been built).
+//! * runtime — PJRT tile dispatch latency (only with `--features pjrt`
+//!   and built artifacts).
+//!
+//! Results are also dumped to `BENCH_perf.json` (override with
+//! `$BENCH_JSON`) for the CI perf-trajectory artifact.
 
 use wienna::config::{DesignPoint, SystemConfig};
 use wienna::coordinator::{Coordinator, StrategyPolicy};
-use wienna::cost::{evaluate_layer, evaluate_model, CostEngine};
+use wienna::cost::{
+    evaluate_grid, evaluate_layer, evaluate_layer_uncached, evaluate_model, evaluate_model_par,
+    memo, par, CostEngine,
+};
 use wienna::dataflow::Strategy;
 use wienna::nop::sim::{MeshSim, Transfer};
-use wienna::runtime::ExecutableCache;
 use wienna::testutil::bench;
 use wienna::workload::resnet50::resnet50;
+use wienna::workload::unet::unet;
 
 fn main() {
     let sys = SystemConfig::default();
     let rn = resnet50(64);
     let engine = CostEngine::for_design_point(&sys, DesignPoint::WIENNA_C);
+    let threads = par::num_threads();
+    println!("worker pool: {threads} threads");
 
     // --- L3 cost engine ---
     let layer = &rn.layers[10];
-    bench("cost/evaluate_layer(conv)", 20_000, || evaluate_layer(&engine, layer, Strategy::KpCp).latency);
+    bench("cost/evaluate_layer_uncached(conv)", 20_000, || {
+        evaluate_layer_uncached(&engine, layer, Strategy::KpCp).latency
+    });
+    bench("cost/evaluate_layer(conv, memoized)", 20_000, || {
+        evaluate_layer(&engine, layer, Strategy::KpCp).latency
+    });
     let s = bench("cost/evaluate_model(resnet50 fixed)", 200, || {
         evaluate_model(&engine, &rn, Some(Strategy::KpCp)).macs_per_cycle
     });
     println!("  -> {:.1} layer-evals/ms", rn.layers.len() as f64 / s.mean_ms());
     bench("cost/evaluate_model(resnet50 adaptive)", 100, || evaluate_model(&engine, &rn, None).macs_per_cycle);
+    bench("cost/evaluate_model_par(resnet50 adaptive)", 100, || {
+        evaluate_model_par(&engine, &rn, None, threads).macs_per_cycle
+    });
+
+    // The acceptance metric: the full Fig-7 grid, memo + worker pool. The
+    // first iteration pays the cold evaluations; steady-state iterations
+    // are pure memo lookups — exactly how the serve loop and the
+    // auto-sizer hit the engine.
+    let models = [resnet50(64), unet(64)];
+    memo::clear();
     let full = bench("cost/full_fig7_grid(2 models x 4 dps)", 10, || {
-        DesignPoint::ALL
+        evaluate_grid(&sys, &DesignPoint::ALL, &models, None, threads)
             .iter()
-            .map(|&dp| evaluate_model(&CostEngine::for_design_point(&sys, dp), &rn, None).macs_per_cycle)
+            .map(|c| c.macs_per_cycle)
             .sum::<f64>()
     });
-    println!("  -> full design-point grid in {:.2} ms (target: well under 1 s)", full.mean_ms() * 1.0);
+    println!("  -> full design-point grid in {:.2} ms (target: well under 1 s)", full.mean_ms());
+    let ms = memo::stats();
+    println!(
+        "  -> memo: {} entries, {:.1}% hit rate ({} hits / {} misses)",
+        ms.entries,
+        ms.hit_rate() * 100.0,
+        ms.hits,
+        ms.misses
+    );
+    // Cold counterpart (memo cleared every iteration) for an honest
+    // before/after: parallelism only, no caching.
+    bench("cost/full_fig7_grid_cold(no memo reuse)", 10, || {
+        memo::clear();
+        evaluate_grid(&sys, &DesignPoint::ALL, &models, None, threads)
+            .iter()
+            .map(|c| c.macs_per_cycle)
+            .sum::<f64>()
+    });
 
     // --- coordinator schedule generation ---
     let coord = Coordinator::new(sys.clone(), DesignPoint::WIENNA_C, StrategyPolicy::Adaptive);
@@ -60,8 +102,9 @@ fn main() {
         flit_hops / st.mean_ns * 1e9 / 1e6
     );
 
-    // --- PJRT dispatch (needs `make artifacts`) ---
-    match ExecutableCache::new(std::path::Path::new("artifacts")) {
+    // --- PJRT dispatch (needs `make artifacts` and `--features pjrt`) ---
+    #[cfg(feature = "pjrt")]
+    match wienna::runtime::ExecutableCache::new(std::path::Path::new("artifacts")) {
         Ok(cache) => {
             cache.warm_up().expect("compile artifacts");
             let a = vec![1.0f32; 64 * 64];
@@ -80,5 +123,10 @@ fn main() {
             bench("runtime/add4096_dispatch", 200, || cache.execute_f32("add4096", &[&x, &x]).unwrap().len());
         }
         Err(e) => println!("runtime benches skipped (artifacts not built): {e:#}"),
+    }
+
+    match wienna::testutil::write_bench_json("BENCH_perf.json") {
+        Ok(p) => println!("bench json -> {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
     }
 }

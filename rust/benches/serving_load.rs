@@ -113,4 +113,9 @@ fn main() {
         fleet.run(&mut source, ms_to_cycles(HORIZON_MS), &mut stats);
         stats.completed()
     });
+
+    match wienna::testutil::write_bench_json("BENCH_serving.json") {
+        Ok(p) => println!("bench json -> {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
 }

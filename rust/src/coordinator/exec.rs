@@ -258,7 +258,7 @@ impl PackageExecutor {
         if strategy == Strategy::YpXp {
             if let Some((out, calls)) = self.conv3x3_direct(layer, input, weights)? {
                 let stats = LayerExecStats {
-                    layer_name: layer.name.clone(),
+                    layer_name: layer.name.to_string(),
                     strategy: format!("{}*", strategy.label()), // '*' = direct-conv path
                     tiles_dispatched: calls,
                     chiplets_used: used,
@@ -311,7 +311,7 @@ impl PackageExecutor {
             }
         }
         let stats = LayerExecStats {
-            layer_name: layer.name.clone(),
+            layer_name: layer.name.to_string(),
             strategy: strategy.label().to_string(),
             tiles_dispatched: tiles,
             chiplets_used: used,
@@ -344,7 +344,7 @@ impl PackageExecutor {
             chunks += 1;
         }
         let stats = LayerExecStats {
-            layer_name: layer.name.clone(),
+            layer_name: layer.name.to_string(),
             strategy: schedule.selection.strategy.label().to_string(),
             tiles_dispatched: chunks,
             chiplets_used: schedule.plan.used_chiplets,

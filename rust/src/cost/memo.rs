@@ -1,0 +1,164 @@
+//! Crate-level layer-cost memo table.
+//!
+//! Layer shapes repeat everywhere: within a model (ResNet's residual
+//! stages), across batch sizes probed by the serve-time batcher, across
+//! the design-point grid of the Fig-7 sweep, and massively across the
+//! `search::autosize` design-space exploration. The memo table caches one
+//! [`LayerCost`] per `(shape, strategy, engine)` so all of those callers
+//! — `evaluate_model`, the serve `CostCache`, the benches, and every
+//! worker thread of `cost::par` — share each cold evaluation.
+//!
+//! Shapes are interned to a dense [`ShapeId`] first, so the (much hotter)
+//! memo lookup hashes a 4-byte id plus the small engine key instead of
+//! ten `u64` loop bounds.
+//!
+//! The table is process-global, append-only and thread-safe (`RwLock`
+//! around a `HashMap`; reads dominate). Entries are deterministic pure
+//! functions of their key, so a racing double-insert is harmless — both
+//! writers computed bit-identical values.
+
+use crate::cost::model::{EngineKey, LayerCost};
+use crate::dataflow::Strategy;
+use crate::workload::LayerShape;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+/// Dense id of an interned [`LayerShape`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeId(u32);
+
+fn interner() -> &'static RwLock<HashMap<LayerShape, u32>> {
+    static INTERNER: OnceLock<RwLock<HashMap<LayerShape, u32>>> = OnceLock::new();
+    INTERNER.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Intern `shape`, returning its stable dense id. Idempotent; the id
+/// space only grows (a few hundred distinct shapes even across a large
+/// design-space search).
+pub fn intern(shape: LayerShape) -> ShapeId {
+    let lock = interner();
+    if let Some(&id) = lock.read().expect("interner lock").get(&shape) {
+        return ShapeId(id);
+    }
+    let mut map = lock.write().expect("interner lock");
+    let next = map.len() as u32;
+    ShapeId(*map.entry(shape).or_insert(next))
+}
+
+/// Number of distinct shapes interned so far.
+pub fn interned_shapes() -> usize {
+    interner().read().expect("interner lock").len()
+}
+
+type MemoKey = (ShapeId, Strategy, EngineKey);
+
+fn table() -> &'static RwLock<HashMap<MemoKey, LayerCost>> {
+    static TABLE: OnceLock<RwLock<HashMap<MemoKey, LayerCost>>> = OnceLock::new();
+    TABLE.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Fetch the memoized cost of `(shape, strategy, engine)`, if present.
+pub fn lookup(shape: ShapeId, strategy: Strategy, engine: EngineKey) -> Option<LayerCost> {
+    let hit = table().read().expect("memo lock").get(&(shape, strategy, engine)).cloned();
+    match hit {
+        Some(c) => {
+            HITS.fetch_add(1, Ordering::Relaxed);
+            Some(c)
+        }
+        None => {
+            MISSES.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+/// Record the cost of `(shape, strategy, engine)`. Last writer wins;
+/// racing writers computed identical values (see module docs).
+pub fn insert(shape: ShapeId, strategy: Strategy, engine: EngineKey, cost: LayerCost) {
+    table().write().expect("memo lock").insert((shape, strategy, engine), cost);
+}
+
+/// Snapshot of the memo table's accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl MemoStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+pub fn stats() -> MemoStats {
+    MemoStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+        entries: table().read().expect("memo lock").len(),
+    }
+}
+
+/// Drop every cached cost and reset the hit/miss counters (the interner
+/// keeps its ids — they stay valid). Benches call this to time cold
+/// evaluations honestly.
+pub fn clear() {
+    table().write().expect("memo lock").clear();
+    HITS.store(0, Ordering::Relaxed);
+    MISSES.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Layer;
+
+    #[test]
+    fn intern_is_idempotent_and_distinguishes_shapes() {
+        let a = Layer::conv("a", 1, 8, 8, 12, 12, 3, 3, 1).shape();
+        let b = Layer::conv("b", 1, 8, 8, 12, 12, 3, 3, 1).shape();
+        let c = Layer::fc("c", 1, 8, 8).shape();
+        assert_eq!(intern(a), intern(b));
+        assert_ne!(intern(a), intern(c));
+        assert_eq!(intern(a), intern(a));
+    }
+
+    #[test]
+    fn stats_track_hits_and_misses() {
+        // Other tests share the process-global table, so assert deltas on
+        // a key no other test uses.
+        let shape = Layer::conv("memo_stats_probe", 3, 7, 11, 13, 13, 3, 3, 1).shape();
+        let sid = intern(shape);
+        let ek = crate::cost::CostEngine::for_design_point(
+            &crate::config::SystemConfig { num_chiplets: 4, pes_per_chiplet: 16, ..Default::default() },
+            crate::config::DesignPoint::WIENNA_C,
+        )
+        .memo_key()
+        .expect("design-point engines are memoizable");
+        let before = stats();
+        assert!(lookup(sid, Strategy::KpCp, ek).is_none());
+        let engine = crate::cost::CostEngine::for_design_point(
+            &crate::config::SystemConfig { num_chiplets: 4, pes_per_chiplet: 16, ..Default::default() },
+            crate::config::DesignPoint::WIENNA_C,
+        );
+        let layer = Layer::conv("memo_stats_probe", 3, 7, 11, 13, 13, 3, 3, 1);
+        let cost = crate::cost::evaluate_layer_uncached(&engine, &layer, Strategy::KpCp);
+        insert(sid, Strategy::KpCp, ek, cost.clone());
+        let hit = lookup(sid, Strategy::KpCp, ek).expect("inserted");
+        assert_eq!(hit.latency, cost.latency);
+        let after = stats();
+        assert!(after.misses >= before.misses + 1);
+        assert!(after.hits >= before.hits + 1);
+        assert!(after.entries >= 1);
+    }
+}

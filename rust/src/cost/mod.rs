@@ -4,11 +4,17 @@
 //! models (S5–S8) into per-layer latency, throughput, utilization and
 //! distribution-energy estimates, following the paper's §5.1 methodology.
 
+pub mod memo;
 pub mod memory;
 pub mod model;
+pub mod par;
 pub mod phase;
 pub mod traffic;
 
+pub use memo::MemoStats;
 pub use memory::{HbmModel, StagingPlan};
-pub use model::{best_strategy, evaluate_layer, evaluate_model, CostEngine, DistFabric, LayerCost, ModelCost};
+pub use model::{
+    best_strategy, evaluate_grid, evaluate_layer, evaluate_layer_uncached, evaluate_model,
+    evaluate_model_par, CostEngine, DistFabric, EngineKey, LayerCost, ModelCost,
+};
 pub use phase::PhaseTimeline;

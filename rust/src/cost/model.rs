@@ -37,6 +37,35 @@ impl DistFabric {
     }
 }
 
+/// Everything about a [`CostEngine`] that determines a layer's cost,
+/// condensed into a hashable memo-table key (see `cost::memo`). Only
+/// engines built by [`CostEngine::for_design_point`] carry one; the
+/// ideal-fabric engines of the Fig-3 sweep are not memoized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EngineKey {
+    pub dp: DesignPoint,
+    pub num_chiplets: u64,
+    pub pes_per_chiplet: u64,
+    pub global_sram_bytes: u64,
+    /// Collection bandwidth (bytes/cycle/link) as its IEEE-754 bit
+    /// pattern, so the key stays `Eq + Hash`.
+    pub collection_bw_bits: u64,
+    pub bytes_per_elem: u64,
+}
+
+impl EngineKey {
+    fn for_system(sys: &SystemConfig, dp: DesignPoint) -> Self {
+        EngineKey {
+            dp,
+            num_chiplets: sys.num_chiplets,
+            pes_per_chiplet: sys.pes_per_chiplet,
+            global_sram_bytes: sys.global_sram_bytes,
+            collection_bw_bits: sys.collection_bw_per_link.to_bits(),
+            bytes_per_elem: sys.bytes_per_elem,
+        }
+    }
+}
+
 /// Fully-configured cost engine: package, NoP pair, mapping policy.
 #[derive(Debug, Clone)]
 pub struct CostEngine {
@@ -50,6 +79,16 @@ pub struct CostEngine {
     /// the stream by the HBM refill rate when a layer's working set
     /// spills the global SRAM (see `cost::memory`, ablation bench).
     pub hbm: Option<crate::cost::memory::HbmModel>,
+    /// Memo-table key; `Some` only for design-point engines whose whole
+    /// configuration the key captures.
+    memo_key: Option<EngineKey>,
+    /// Fingerprint of every cost-relevant field at construction time.
+    /// All engine fields are public (the ablation benches mutate `dist`,
+    /// `map_policy` and `hbm` freely), so [`CostEngine::memo_key`]
+    /// re-fingerprints on every call and silently falls back to uncached
+    /// evaluation when anything changed — a mutated engine must never
+    /// alias memo entries with its pristine design point.
+    memo_fingerprint: u64,
 }
 
 impl CostEngine {
@@ -64,21 +103,99 @@ impl CostEngine {
                 DistFabric::Wireless(WirelessNop::new(dp.distribution_bw(), trx))
             }
         };
-        CostEngine { sys: sys.clone(), dist, collect, map_policy: MapPolicy::Flexible, hbm: None }
+        let mut engine = CostEngine {
+            sys: sys.clone(),
+            dist,
+            collect,
+            map_policy: MapPolicy::Flexible,
+            hbm: None,
+            memo_key: None,
+            memo_fingerprint: 0,
+        };
+        engine.memo_fingerprint = engine.config_fingerprint();
+        engine.memo_key = Some(EngineKey::for_system(sys, dp));
+        engine
     }
 
     /// Engine with an idealized distribution fabric at `bw` bytes/cycle
-    /// (Fig-3 bandwidth sweep).
+    /// (Fig-3 bandwidth sweep). Not memoized: the swept bandwidth is not
+    /// part of the memo key.
     pub fn ideal(sys: &SystemConfig, bw: f64) -> Self {
         let collect = MeshNop::new(sys.num_chiplets, sys.collection_bw_per_link, true);
-        CostEngine { sys: sys.clone(), dist: DistFabric::Ideal { bw }, collect, map_policy: MapPolicy::Flexible, hbm: None }
+        CostEngine {
+            sys: sys.clone(),
+            dist: DistFabric::Ideal { bw },
+            collect,
+            map_policy: MapPolicy::Flexible,
+            hbm: None,
+            memo_key: None,
+            memo_fingerprint: 0,
+        }
+    }
+
+    /// Hash of every field that influences a layer's cost. Computed at
+    /// construction and re-checked per lookup so post-construction
+    /// mutations (ablation benches flip `tree_multicast`, `map_policy`,
+    /// `hbm`, …) disable memoization instead of aliasing entries.
+    fn config_fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.sys.num_chiplets.hash(&mut h);
+        self.sys.pes_per_chiplet.hash(&mut h);
+        self.sys.global_sram_bytes.hash(&mut h);
+        self.sys.collection_bw_per_link.to_bits().hash(&mut h);
+        self.sys.bytes_per_elem.hash(&mut h);
+        match self.map_policy {
+            MapPolicy::Flexible => 0u8.hash(&mut h),
+            MapPolicy::Fixed { dim0, dim1 } => {
+                1u8.hash(&mut h);
+                dim0.hash(&mut h);
+                dim1.hash(&mut h);
+            }
+        }
+        self.hbm.is_some().hash(&mut h);
+        match &self.dist {
+            DistFabric::Mesh(m) => {
+                0u8.hash(&mut h);
+                m.num_chiplets.hash(&mut h);
+                m.link_bw.to_bits().hash(&mut h);
+                m.hop_energy_pj.to_bits().hash(&mut h);
+                m.tree_multicast.hash(&mut h);
+            }
+            DistFabric::Wireless(w) => {
+                1u8.hash(&mut h);
+                w.bw.to_bits().hash(&mut h);
+                matches!(w.trx, TrxDesignPoint::Aggressive).hash(&mut h);
+                w.ber.to_bits().hash(&mut h);
+            }
+            DistFabric::Ideal { bw } => {
+                2u8.hash(&mut h);
+                bw.to_bits().hash(&mut h);
+            }
+        }
+        self.collect.num_chiplets.hash(&mut h);
+        self.collect.link_bw.to_bits().hash(&mut h);
+        self.collect.hop_energy_pj.to_bits().hash(&mut h);
+        self.collect.tree_multicast.hash(&mut h);
+        h.finish()
+    }
+
+    /// The memo-table key, when this engine's evaluations are memoizable:
+    /// a design-point engine still in exactly the configuration it was
+    /// constructed with. Engines customized after construction (fixed PE
+    /// arrays, tree-multicast meshes, HBM ablations) evaluate uncached.
+    pub fn memo_key(&self) -> Option<EngineKey> {
+        match self.memo_key {
+            Some(ek) if self.config_fingerprint() == self.memo_fingerprint => Some(ek),
+            _ => None,
+        }
     }
 }
 
 /// Cost of one layer under one strategy on one design point.
 #[derive(Debug, Clone)]
 pub struct LayerCost {
-    pub layer_name: String,
+    pub layer_name: std::sync::Arc<str>,
     pub layer_type: LayerType,
     pub strategy: Strategy,
     pub used_chiplets: u64,
@@ -114,8 +231,43 @@ impl LayerCost {
     }
 }
 
-/// Evaluate one layer under `strategy`.
+/// Evaluate one layer under `strategy`, consulting the crate-level memo
+/// table (`cost::memo`) when the engine is memoizable: repeated
+/// evaluations of the same layer *shape* on the same design point —
+/// across models, serve-time batch probes, benches and threads — cost a
+/// hash lookup instead of a partition + mapping + NoP walk.
 pub fn evaluate_layer(engine: &CostEngine, layer: &Layer, strategy: Strategy) -> LayerCost {
+    evaluate_layer_keyed(engine, layer, strategy, engine.memo_key())
+}
+
+/// [`evaluate_layer`] with the engine's memo key resolved by the caller.
+/// Model-level loops fetch the key (and pay its mutation-detecting
+/// fingerprint hash) once instead of per layer; an engine cannot change
+/// configuration mid-call while shared borrows of it are live.
+fn evaluate_layer_keyed(
+    engine: &CostEngine,
+    layer: &Layer,
+    strategy: Strategy,
+    key: Option<EngineKey>,
+) -> LayerCost {
+    if let Some(ek) = key {
+        let sid = crate::cost::memo::intern(layer.shape());
+        if let Some(mut hit) = crate::cost::memo::lookup(sid, strategy, ek) {
+            // Same shape, possibly a different layer name.
+            hit.layer_name = layer.name.clone();
+            return hit;
+        }
+        let cost = evaluate_layer_uncached(engine, layer, strategy);
+        crate::cost::memo::insert(sid, strategy, ek, cost.clone());
+        return cost;
+    }
+    evaluate_layer_uncached(engine, layer, strategy)
+}
+
+/// Evaluate one layer under `strategy`, bypassing the memo table. The
+/// memoized path produces bit-identical results (its entries come from
+/// this function); tests use the pair to prove it.
+pub fn evaluate_layer_uncached(engine: &CostEngine, layer: &Layer, strategy: Strategy) -> LayerCost {
     let sys = &engine.sys;
     let plan: PartitionPlan = dataflow::partition::partition(layer, strategy, sys.num_chiplets, sys.bytes_per_elem);
     let arch = ChipletArch::for_strategy(strategy);
@@ -150,7 +302,9 @@ pub fn evaluate_layer(engine: &CostEngine, layer: &Layer, strategy: Strategy) ->
         timeline,
         latency,
         macs,
-        macs_per_cycle: macs as f64 / latency,
+        // Guard the degenerate zero-latency case (e.g. an empty layer on
+        // an ideal fabric) rather than emitting NaN/inf throughput.
+        macs_per_cycle: if latency > 0.0 { macs as f64 / latency } else { 0.0 },
         pe_utilization: mapping.utilization,
         chiplet_utilization: plan.used_chiplets as f64 / sys.num_chiplets as f64,
         dist_energy_pj: dist.energy_pj,
@@ -162,12 +316,19 @@ pub fn evaluate_layer(engine: &CostEngine, layer: &Layer, strategy: Strategy) ->
     }
 }
 
-/// Pick the strategy with the highest throughput for `layer` (the
-/// coordinator's adaptive mode re-uses this).
+/// Pick the strategy with the lowest end-to-end layer latency for
+/// `layer` (the coordinator's adaptive mode re-uses this). For a single
+/// layer minimum latency and maximum throughput coincide only when the
+/// MAC count is fixed across strategies — which holds here — but the
+/// selection criterion is, and always was, minimum `LayerCost::latency`.
 pub fn best_strategy(engine: &CostEngine, layer: &Layer) -> (Strategy, LayerCost) {
+    best_strategy_keyed(engine, layer, engine.memo_key())
+}
+
+fn best_strategy_keyed(engine: &CostEngine, layer: &Layer, key: Option<EngineKey>) -> (Strategy, LayerCost) {
     Strategy::ALL
         .iter()
-        .map(|&s| (s, evaluate_layer(engine, layer, s)))
+        .map(|&s| (s, evaluate_layer_keyed(engine, layer, s, key)))
         .min_by(|a, b| a.1.latency.partial_cmp(&b.1.latency).unwrap())
         .unwrap()
 }
@@ -185,14 +346,55 @@ pub struct ModelCost {
 }
 
 pub fn evaluate_model(engine: &CostEngine, model: &Model, strategy: Option<Strategy>) -> ModelCost {
+    let key = engine.memo_key();
     let layers: Vec<LayerCost> = model
         .layers
         .iter()
         .map(|l| match strategy {
-            Some(s) => evaluate_layer(engine, l, s),
-            None => best_strategy(engine, l).1,
+            Some(s) => evaluate_layer_keyed(engine, l, s, key),
+            None => best_strategy_keyed(engine, l, key).1,
         })
         .collect();
+    summarize_model(model, layers)
+}
+
+/// `evaluate_model` with the per-layer evaluations spread over `threads`
+/// worker threads (`cost::par`). Layer costs are independent, and the
+/// memo table is shared and thread-safe, so the result is bit-identical
+/// to the sequential evaluation — in the same layer order.
+pub fn evaluate_model_par(engine: &CostEngine, model: &Model, strategy: Option<Strategy>, threads: usize) -> ModelCost {
+    let key = engine.memo_key();
+    let layers = crate::cost::par::par_map(model.layers.len(), threads, |i| {
+        let l = &model.layers[i];
+        match strategy {
+            Some(s) => evaluate_layer_keyed(engine, l, s, key),
+            None => best_strategy_keyed(engine, l, key).1,
+        }
+    });
+    summarize_model(model, layers)
+}
+
+/// Evaluate a whole (design point × model) grid, farming the cells out to
+/// `threads` workers. Returns costs in row-major order: all models under
+/// `dps[0]`, then all models under `dps[1]`, … This is the Fig-7 / search
+/// hot loop: with a warm memo each cell is pure table lookups.
+pub fn evaluate_grid(
+    sys: &SystemConfig,
+    dps: &[DesignPoint],
+    models: &[Model],
+    strategy: Option<Strategy>,
+    threads: usize,
+) -> Vec<ModelCost> {
+    let n = dps.len() * models.len();
+    crate::cost::par::par_map(n, threads, |i| {
+        let dp = dps[i / models.len()];
+        let model = &models[i % models.len()];
+        let engine = CostEngine::for_design_point(sys, dp);
+        evaluate_model(&engine, model, strategy)
+    })
+}
+
+fn summarize_model(model: &Model, layers: Vec<LayerCost>) -> ModelCost {
     let total_latency: f64 = layers.iter().map(|c| c.latency).sum();
     let total_macs: u64 = layers.iter().map(|c| c.macs).sum();
     let total_dist_energy_pj: f64 = layers.iter().map(|c| c.dist_energy_pj).sum();
@@ -201,7 +403,7 @@ pub fn evaluate_model(engine: &CostEngine, model: &Model, strategy: Option<Strat
         layers,
         total_latency,
         total_macs,
-        macs_per_cycle: total_macs as f64 / total_latency,
+        macs_per_cycle: if total_latency > 0.0 { total_macs as f64 / total_latency } else { 0.0 },
         total_dist_energy_pj,
     }
 }
@@ -295,6 +497,75 @@ mod tests {
         let (s_fc, _) = best_strategy(&e, &fc);
         assert_eq!(s_hi, Strategy::YpXp, "high-res should favor YP-XP");
         assert_eq!(s_fc, Strategy::KpCp, "FC should favor KP-CP");
+    }
+
+    #[test]
+    fn memoized_matches_uncached_and_adopts_names() {
+        let e = CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_C);
+        let a = crate::workload::conv_padded("first", 4, 64, 64, 28, 28, 3, 3, 1);
+        let b = crate::workload::conv_padded("second", 4, 64, 64, 28, 28, 3, 3, 1);
+        for s in Strategy::ALL {
+            let direct = evaluate_layer_uncached(&e, &a, s);
+            let cached_a = evaluate_layer(&e, &a, s);
+            let cached_b = evaluate_layer(&e, &b, s); // same shape, other name
+            assert_eq!(direct.latency, cached_a.latency, "{s}");
+            assert_eq!(direct.timeline, cached_a.timeline, "{s}");
+            assert_eq!(cached_a.latency, cached_b.latency, "{s}");
+            assert_eq!(&*cached_a.layer_name, "first");
+            assert_eq!(&*cached_b.layer_name, "second");
+        }
+    }
+
+    #[test]
+    fn ideal_and_mutated_engines_are_not_memoized() {
+        let ideal = CostEngine::ideal(&sys(), 64.0);
+        assert!(ideal.memo_key().is_none());
+        let mut hbm = CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_C);
+        assert!(hbm.memo_key().is_some());
+        hbm.hbm = Some(crate::cost::memory::HbmModel::default());
+        assert!(hbm.memo_key().is_none());
+        let mut fixed = CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_C);
+        fixed.map_policy = MapPolicy::Fixed { dim0: 8, dim1: 8 };
+        assert!(fixed.memo_key().is_none());
+        // The A1 ablation flips the mesh's multicast capability on a
+        // cloned engine — it must drop out of the memo, not alias it.
+        let mut tree = CostEngine::for_design_point(&sys(), DesignPoint::INTERPOSER_A);
+        assert!(tree.memo_key().is_some());
+        if let DistFabric::Mesh(mesh) = &mut tree.dist {
+            mesh.tree_multicast = true;
+        }
+        assert!(tree.memo_key().is_none());
+    }
+
+    #[test]
+    fn parallel_model_eval_matches_sequential_exactly() {
+        let e = CostEngine::for_design_point(&sys(), DesignPoint::WIENNA_A);
+        let m = resnet50::resnet50(8);
+        let seq = evaluate_model(&e, &m, None);
+        for threads in [1, 2, 4] {
+            let par = evaluate_model_par(&e, &m, None, threads);
+            assert_eq!(seq.total_latency, par.total_latency, "{threads} threads");
+            assert_eq!(seq.layers.len(), par.layers.len());
+            for (a, b) in seq.layers.iter().zip(&par.layers) {
+                assert_eq!(a.layer_name, b.layer_name);
+                assert_eq!(a.latency, b.latency);
+                assert_eq!(a.strategy, b.strategy);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_matches_per_design_evaluation() {
+        let models = [tiny::tiny_cnn(4), unet::unet(2)];
+        let grid = evaluate_grid(&sys(), &DesignPoint::ALL, &models, None, 2);
+        assert_eq!(grid.len(), DesignPoint::ALL.len() * models.len());
+        for (i, dp) in DesignPoint::ALL.iter().enumerate() {
+            for (j, m) in models.iter().enumerate() {
+                let direct = evaluate_model(&CostEngine::for_design_point(&sys(), *dp), m, None);
+                let cell = &grid[i * models.len() + j];
+                assert_eq!(cell.total_latency, direct.total_latency, "{} {}", dp.label(), m.name);
+            }
+        }
     }
 
     #[test]

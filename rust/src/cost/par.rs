@@ -1,0 +1,116 @@
+//! Zero-dependency scoped worker pool for embarrassingly parallel cost
+//! evaluations.
+//!
+//! The build is offline (no `rayon`), so this is a minimal work-stealing
+//! fan-out on `std::thread::scope`: workers pull indices from a shared
+//! atomic cursor, which load-balances the wildly uneven per-item costs of
+//! (layer, strategy) and (design point, model) evaluations. Results come
+//! back in input order, so parallel callers are drop-in replacements for
+//! their sequential counterparts (`evaluate_model_par`, `evaluate_grid`,
+//! `search::autosize`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count to use when the caller has no opinion: the machine's
+/// available parallelism.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `0..n` on up to `threads` scoped workers; results are
+/// returned in index order. `threads <= 1` (or `n <= 1`) degrades to a
+/// plain sequential loop with no thread spawned.
+///
+/// Panics in `f` propagate to the caller after all workers stop.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut acc = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        acc.push((i, f(i)));
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("cost::par worker panicked")).collect()
+    });
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(out[i].is_none(), "index {i} produced twice");
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|o| o.expect("every index produced exactly once")).collect()
+}
+
+/// [`par_map`] over the items of a slice.
+pub fn par_map_slice<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map(items.len(), threads, |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_every_index() {
+        for threads in [1, 2, 3, 8] {
+            let out = par_map(100, threads, |i| i * i);
+            assert_eq!(out.len(), 100);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "{threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        assert!(par_map(0, 4, |i| i).is_empty());
+        assert_eq!(par_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn slice_variant_borrows_items() {
+        let items = vec!["a".to_string(), "bb".to_string(), "ccc".to_string()];
+        let lens = par_map_slice(&items, 2, |s| s.len());
+        assert_eq!(lens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn uneven_work_is_balanced() {
+        // Nothing to assert beyond completion + order: the cursor-based
+        // pull loop cannot deadlock and must terminate.
+        let out = par_map(64, 4, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i as u64 % 7) * 1000 {
+                acc = acc.wrapping_add(k);
+            }
+            (i, acc)
+        });
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().enumerate().all(|(i, (j, _))| i == *j));
+    }
+}

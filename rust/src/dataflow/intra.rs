@@ -71,22 +71,6 @@ pub struct IntraMapping {
     pub local_buffer_bytes: u64,
 }
 
-/// All divisor pairs `(d0, d1)` with `d0 * d1 == p`.
-fn divisor_pairs(p: u64) -> Vec<(u64, u64)> {
-    let mut v = Vec::new();
-    let mut d = 1;
-    while d * d <= p {
-        if p % d == 0 {
-            v.push((d, p / d));
-            if d != p / d {
-                v.push((p / d, d));
-            }
-        }
-        d += 1;
-    }
-    v
-}
-
 /// Cycles for a spatial mapping of extents `(e0, e1)` over an array
 /// `(d0, d1)`, times the `inner` sequential loop trip count.
 fn spatial_cycles(e0: u64, e1: u64, d0: u64, d1: u64, inner: u64) -> u64 {
@@ -124,18 +108,37 @@ pub fn map_layer(sub: &Layer, arch: ChipletArch, pes: u64, policy: MapPolicy, by
         ChipletArch::ShidiannaoLike => sub.n * sub.k * sub.c * sub.r * sub.s,
     };
 
-    let candidates: Vec<(u64, u64)> = match policy {
-        MapPolicy::Flexible => divisor_pairs(pes),
+    // Walk divisor pairs of the PE count without materializing them (this
+    // runs on every layer evaluation; the hot path must not allocate).
+    // Pairs are visited in the same `(d, p/d), (p/d, d)` order the old
+    // candidate list used, and ties keep the first minimum.
+    let (d0, d1, cycles) = match policy {
         MapPolicy::Fixed { dim0, dim1 } => {
             assert_eq!(dim0 * dim1, pes, "fixed array shape must use all PEs");
-            vec![(dim0, dim1)]
+            (dim0, dim1, spatial_cycles(e0, e1, dim0, dim1, inner).max(1))
+        }
+        MapPolicy::Flexible => {
+            let mut best = (1u64, pes, u64::MAX);
+            let mut d = 1;
+            while d * d <= pes {
+                if pes % d == 0 {
+                    let q = pes / d;
+                    let c = spatial_cycles(e0, e1, d, q, inner).max(1);
+                    if c < best.2 {
+                        best = (d, q, c);
+                    }
+                    if d != q {
+                        let c = spatial_cycles(e0, e1, q, d, inner).max(1);
+                        if c < best.2 {
+                            best = (q, d, c);
+                        }
+                    }
+                }
+                d += 1;
+            }
+            best
         }
     };
-    let (d0, d1, cycles) = candidates
-        .into_iter()
-        .map(|(a, b)| (a, b, spatial_cycles(e0, e1, a, b, inner).max(1)))
-        .min_by_key(|&(_, _, c)| c)
-        .expect("at least one divisor pair");
 
     // Local working set: stationary tile + streamed slice + output slice.
     let local = match arch {

@@ -8,4 +8,4 @@ pub mod reuse;
 pub mod tiling;
 
 pub use intra::{ChipletArch, IntraMapping, MapPolicy};
-pub use partition::{PartitionPlan, Strategy, TensorKind, TrafficClass};
+pub use partition::{PartitionPlan, Strategy, TensorKind, TrafficClass, TrafficVec};

@@ -67,7 +67,7 @@ pub enum TensorKind {
 /// byte (1.0 for pure unicast, `used_chiplets` for a broadcast, fractional
 /// for halo-overlapped spatial tiles). Total delivered bytes are therefore
 /// `bytes * avg_dests`.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrafficClass {
     pub tensor: TensorKind,
     pub bytes: u64,
@@ -85,6 +85,53 @@ impl TrafficClass {
     }
 }
 
+/// Fixed-capacity, inline list of [`TrafficClass`]es.
+///
+/// Every strategy produces at most two distribution classes (one weight,
+/// one input), so the partitioner stores them inline instead of in a
+/// `Vec` — building a [`PartitionPlan`] performs no heap allocation,
+/// which matters in the cost engine's hot loop. Dereferences to a slice,
+/// so call sites index and iterate it like a `Vec`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficVec {
+    len: u8,
+    buf: [TrafficClass; 2],
+}
+
+const EMPTY_CLASS: TrafficClass =
+    TrafficClass { tensor: TensorKind::Input, bytes: 0, avg_dests: 1.0, streamed: false };
+
+impl TrafficVec {
+    pub fn one(a: TrafficClass) -> Self {
+        TrafficVec { len: 1, buf: [a, EMPTY_CLASS] }
+    }
+
+    pub fn two(a: TrafficClass, b: TrafficClass) -> Self {
+        TrafficVec { len: 2, buf: [a, b] }
+    }
+
+    pub fn as_slice(&self) -> &[TrafficClass] {
+        &self.buf[..self.len as usize]
+    }
+}
+
+impl std::ops::Deref for TrafficVec {
+    type Target = [TrafficClass];
+
+    fn deref(&self) -> &[TrafficClass] {
+        self.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a TrafficVec {
+    type Item = &'a TrafficClass;
+    type IntoIter = std::slice::Iter<'a, TrafficClass>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
 /// Result of applying a [`Strategy`] to a layer on `num_chiplets` chiplets.
 #[derive(Debug, Clone)]
 pub struct PartitionPlan {
@@ -93,8 +140,8 @@ pub struct PartitionPlan {
     pub used_chiplets: u64,
     /// The sub-problem a single (worst-case) chiplet computes.
     pub sub_layer: Layer,
-    /// Distribution traffic classes (SRAM → chiplets).
-    pub traffic: Vec<TrafficClass>,
+    /// Distribution traffic classes (SRAM → chiplets), stored inline.
+    pub traffic: TrafficVec,
     /// Output bytes collected back over the wired NoP.
     pub collect_bytes: u64,
 }
@@ -157,7 +204,7 @@ pub fn partition(layer: &Layer, strategy: Strategy, num_chiplets: u64, bytes_per
             strategy,
             used_chiplets: used,
             sub_layer: sub,
-            traffic: vec![TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: 1.0, streamed: true }],
+            traffic: TrafficVec::one(TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: 1.0, streamed: true }),
             collect_bytes: out_bytes,
         };
     }
@@ -172,10 +219,10 @@ pub fn partition(layer: &Layer, strategy: Strategy, num_chiplets: u64, bytes_per
                 strategy,
                 used_chiplets: used,
                 sub_layer: sub,
-                traffic: vec![
+                traffic: TrafficVec::two(
                     TrafficClass { tensor: TensorKind::Weight, bytes: w_bytes, avg_dests: 1.0, streamed: false },
                     TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: used as f64, streamed: true },
-                ],
+                ),
                 collect_bytes: out_bytes,
             }
         }
@@ -188,10 +235,10 @@ pub fn partition(layer: &Layer, strategy: Strategy, num_chiplets: u64, bytes_per
                 strategy,
                 used_chiplets: used,
                 sub_layer: sub,
-                traffic: vec![
+                traffic: TrafficVec::two(
                     TrafficClass { tensor: TensorKind::Weight, bytes: w_bytes, avg_dests: used as f64, streamed: false },
                     TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: 1.0, streamed: true },
-                ],
+                ),
                 collect_bytes: out_bytes,
             }
         }
@@ -226,10 +273,10 @@ pub fn partition(layer: &Layer, strategy: Strategy, num_chiplets: u64, bytes_per
                 strategy,
                 used_chiplets: used,
                 sub_layer: sub,
-                traffic: vec![
+                traffic: TrafficVec::two(
                     TrafficClass { tensor: TensorKind::Weight, bytes: w_bytes, avg_dests: used as f64, streamed: false },
                     TrafficClass { tensor: TensorKind::Input, bytes: in_bytes, avg_dests: avg_dests_in, streamed: true },
-                ],
+                ),
                 collect_bytes: out_bytes,
             }
         }
@@ -323,6 +370,24 @@ mod tests {
                 assert!(t.delivered_bytes() >= t.bytes as f64 - 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn traffic_vec_slices_and_iterates() {
+        let a = TrafficClass { tensor: TensorKind::Weight, bytes: 10, avg_dests: 1.0, streamed: false };
+        let b = TrafficClass { tensor: TensorKind::Input, bytes: 20, avg_dests: 2.0, streamed: true };
+        let one = TrafficVec::one(a);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].bytes, 10);
+        let two = TrafficVec::two(a, b);
+        assert_eq!(two.len(), 2);
+        assert_eq!(two.iter().map(|t| t.bytes).sum::<u64>(), 30);
+        let mut n = 0;
+        for t in &two {
+            assert!(t.bytes > 0);
+            n += 1;
+        }
+        assert_eq!(n, 2);
     }
 
     #[test]

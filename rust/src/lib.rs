@@ -15,7 +15,11 @@
 //!   transceiver scaling fit (Fig 1), analytical mesh-interposer and
 //!   wireless NoP models, and a cycle-level mesh simulator;
 //! * [`cost`] — the MAESTRO-like analytical cost model driving every
-//!   figure of the evaluation;
+//!   figure of the evaluation. Its hot path is allocation-free and
+//!   memoized: repeated layer shapes resolve through a crate-level
+//!   interned memo table (`cost::memo`), and independent (layer,
+//!   strategy) and (design point, model) evaluations fan out over a
+//!   zero-dependency scoped worker pool (`cost::par`);
 //! * [`energy`] — the Table-3 area/power breakdown and Fig-9 distribution
 //!   energy comparison;
 //! * [`coordinator`] — the WIENNA system layer: adaptive per-layer
@@ -27,6 +31,10 @@
 //!   cache, pluggable routing policies (round-robin, least-loaded,
 //!   SLO-aware earliest-deadline), and tail-latency / goodput / SLO
 //!   statistics;
+//! * [`search`] — the fleet auto-sizer: enumerate package design points
+//!   (chiplet count × PEs × buffer × NoP), prune dominated candidates,
+//!   bisect fleet widths on short serve replays, and return the cheapest
+//!   fleet meeting a target SLO at a target load (`wienna search`);
 //! * [`runtime`] — loading and executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) via the XLA PJRT CPU client
 //!   (behind the `pjrt` cargo feature, together with
@@ -67,6 +75,7 @@ pub mod nop;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod search;
 pub mod serve;
 pub mod testutil;
 pub mod workload;

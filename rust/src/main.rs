@@ -30,10 +30,11 @@ use wienna::serve::{
 };
 use wienna::workload::{resnet50::resnet50, tiny::tiny_cnn, unet::unet, Model};
 
-const USAGE: &str = "usage: wienna <simulate|sweep|serve|e2e|sim-validate|breakdown|report> [--flag value ...]
+const USAGE: &str = "usage: wienna <simulate|sweep|serve|search|e2e|sim-validate|breakdown|report> [--flag value ...]
   simulate      cost-model run of a workload on one design point
   sweep         Fig-8-style cluster-size sweep (fixed 16384 PEs)
   serve         request-serving simulation on a package fleet
+  search        auto-size the cheapest fleet meeting an SLO at a load
   e2e           real-numerics inference through the PJRT artifacts (needs --features pjrt)
   sim-validate  analytical mesh model vs cycle-level simulator
   breakdown     Table-3 area/power breakdown
@@ -43,7 +44,10 @@ common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --strategy kp-cp|np-cp|yp-xp|adaptive  --batch N  --chiplets N  --verbose
               --artifacts DIR  --wireless-bw B
 serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
-              --load F (fraction of fleet capacity)  --duration-ms MS  --slo-ms MS  --seed N";
+              --load F (fraction of fleet capacity)  --duration-ms MS  --slo-ms MS  --seed N
+search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
+              --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
+              --no-prune (exhaustive)  --verbose";
 
 /// Parsed flags: `--key value` pairs plus bare `--switch`es.
 struct Flags(HashMap<String, String>);
@@ -57,7 +61,7 @@ impl Flags {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("unexpected argument '{a}'\n{USAGE}"))?;
-            if key == "verbose" {
+            if key == "verbose" || key == "no-prune" {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
             } else {
@@ -138,7 +142,7 @@ fn cmd_simulate(f: &Flags) -> anyhow::Result<()> {
         for s in &schedules {
             let c = &s.selection.cost;
             t.row(vec![
-                c.layer_name.clone(),
+                c.layer_name.to_string(),
                 c.layer_type.label().into(),
                 c.strategy.label().into(),
                 c.used_chiplets.to_string(),
@@ -296,6 +300,79 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_search(f: &Flags) -> anyhow::Result<()> {
+    use wienna::search::{autosize, AutosizeConfig, CostModel, SearchSpace};
+
+    let slo_ms = f.f64("slo", 25.0)?;
+    let load_rps = f.f64("load", 3000.0)?;
+    anyhow::ensure!(slo_ms > 0.0, "--slo must be positive (milliseconds)");
+    anyhow::ensure!(load_rps > 0.0, "--load must be positive (requests/second)");
+    let mix = parse_mix(&f.str("mix", "cnn"), slo_ms)?;
+
+    let mut cfg = AutosizeConfig::new(slo_ms, load_rps, mix);
+    cfg.horizon_ms = f.f64("duration-ms", 40.0)?;
+    cfg.seed = f.u64("seed", 42)?;
+    if let Some(t) = f.0.get("threads") {
+        cfg.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads: bad number '{t}'"))?;
+    }
+    cfg.prune = !f.flag("no-prune");
+    let mut space = SearchSpace::default();
+    space.max_width = f.u64("max-width", 32)?;
+    let costs = CostModel::default();
+
+    let t0 = std::time::Instant::now();
+    let result = autosize(&cfg, &space, &costs);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!(
+        "searched {} package design points in {elapsed:.2} s ({} pruned analytically, {} serve probes, {} threads)",
+        result.explored, result.pruned, result.simulated_runs, cfg.threads
+    );
+    let memo = wienna::cost::memo::stats();
+    println!(
+        "cost memo: {} entries | {:.1}% hit rate ({} hits / {} misses)",
+        memo.entries,
+        memo.hit_rate() * 100.0,
+        memo.hits,
+        memo.misses
+    );
+    match &result.best {
+        None => println!(
+            "no fleet of <= {} packages meets p99 <= {slo_ms} ms at {load_rps:.0} req/s",
+            space.max_width
+        ),
+        Some(best) => {
+            println!(
+                "cheapest fleet: {} x{} | cost {:.0} | p99 {:.2} ms (SLO {slo_ms} ms) | goodput {:.0} req/s | violations {:.2}%",
+                best.point.label(),
+                best.width,
+                best.fleet_cost,
+                best.p99_ms,
+                best.goodput_rps,
+                best.violation_rate * 100.0
+            );
+            if f.flag("verbose") {
+                let mut t = Table::new(
+                    "feasible fleets, cheapest first",
+                    &["package", "width", "cost", "p99 ms", "goodput req/s", "viol %"],
+                );
+                for p in result.plans.iter().take(12) {
+                    t.row(vec![
+                        p.point.label(),
+                        p.width.to_string(),
+                        format!("{:.0}", p.fleet_cost),
+                        format!("{:.2}", p.p99_ms),
+                        format!("{:.0}", p.goodput_rps),
+                        format!("{:.2}", p.violation_rate * 100.0),
+                    ]);
+                }
+                print!("{}", t.render());
+            }
+        }
+    }
+    Ok(())
+}
+
 fn cmd_sim_validate(f: &Flags) -> anyhow::Result<()> {
     let chiplets = f.u64("chiplets", 64)?;
     let sys = SystemConfig { num_chiplets: chiplets, ..Default::default() };
@@ -311,7 +388,7 @@ fn cmd_sim_validate(f: &Flags) -> anyhow::Result<()> {
         let analytic = s.selection.cost.timeline.preload + s.selection.cost.timeline.stream;
         let sim = simulate_distribution(&s, side, DesignPoint::INTERPOSER_A.distribution_bw());
         t.row(vec![
-            l.name.clone(),
+            l.name.to_string(),
             format!("{analytic:.0}"),
             format!("{:.0}", sim.makespan),
             format!("{:.2}", sim.makespan / analytic),
@@ -399,6 +476,7 @@ fn main() -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&flags),
         "sweep" => cmd_sweep(&flags),
         "serve" => cmd_serve(&flags),
+        "search" => cmd_search(&flags),
         #[cfg(feature = "pjrt")]
         "e2e" => cmd_e2e(&flags),
         #[cfg(not(feature = "pjrt"))]

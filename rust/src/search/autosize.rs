@@ -1,0 +1,335 @@
+//! The fleet auto-sizer: find the cheapest fleet meeting an SLO at a load.
+//!
+//! Pipeline per search:
+//!
+//! 1. **Enumerate** every [`PackagePoint`] of the [`SearchSpace`].
+//! 2. **Characterize** each candidate analytically (parallel over
+//!    candidates, memo-backed): its batch-latency curve at probe batch
+//!    sizes for every model of the mix, its mix-weighted single-package
+//!    capacity, and whether a lone idle package can meet each model's SLO
+//!    at batch 1 at all.
+//! 3. **Prune** infeasible candidates and dominated ones — a candidate
+//!    whose package costs at least as much as another's while being
+//!    pointwise no faster across the whole probed latency curve can never
+//!    anchor a cheaper feasible fleet (more chiplets never raises
+//!    per-batch latency, so the curves order cleanly along that axis).
+//! 4. **Bisect** each survivor's fleet width on short discrete-event
+//!    `serve` replays until the simulated p99 meets the SLO, and return
+//!    the cheapest such fleet.
+
+use super::space::{CostModel, PackagePoint, SearchSpace};
+use crate::config::CLOCK_HZ;
+use crate::cost::{par, CostEngine};
+use crate::serve::{ms_to_cycles, CostCache, Fleet, RoutePolicy, ServeStats, Source, WorkloadMix};
+
+/// Batch sizes at which candidate latency curves are probed — the dynamic
+/// batcher's full default candidate ladder (`BatcherConfig::default`), so
+/// the dominance check sees exactly the frontier the serve loop will use
+/// and latency-curve crossings between ladder rungs cannot hide from it.
+pub const PROBE_BATCHES: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+/// What the auto-sizer is asked for.
+#[derive(Debug, Clone)]
+pub struct AutosizeConfig {
+    /// Fleet-level p99 target, in milliseconds.
+    pub slo_ms: f64,
+    /// Offered load the fleet must absorb, in requests/second.
+    pub load_rps: f64,
+    /// Traffic mix (each entry carries its own per-request deadline).
+    pub mix: WorkloadMix,
+    /// Simulated horizon of each serve probe, in milliseconds.
+    pub horizon_ms: f64,
+    /// Seed for the probes' Poisson arrivals (same for every candidate,
+    /// so fleets are compared on identical traffic).
+    pub seed: u64,
+    /// Worker threads for candidate characterization and bisection.
+    pub threads: usize,
+    /// Disable dominance pruning (exhaustive mode; tests compare the two).
+    pub prune: bool,
+}
+
+impl AutosizeConfig {
+    pub fn new(slo_ms: f64, load_rps: f64, mix: WorkloadMix) -> Self {
+        AutosizeConfig {
+            slo_ms,
+            load_rps,
+            mix,
+            horizon_ms: 40.0,
+            seed: 42,
+            threads: par::num_threads(),
+            prune: true,
+        }
+    }
+}
+
+/// Analytic characterization of one candidate (search stage 2).
+#[derive(Debug, Clone)]
+pub struct CandidateEval {
+    pub point: PackagePoint,
+    pub package_cost: f64,
+    /// Pipelined batch latency in cycles at every (mix entry × probe
+    /// batch), in mix-major order — the dominance-check curve.
+    pub latency_curve: Vec<f64>,
+    /// Mix-weighted best-case sustainable throughput of ONE package
+    /// (requests/second): per mix entry, the *lowest* cycles/request over
+    /// the probed batch ladder. An upper bound on real capacity — the
+    /// batcher may dispatch any rung — so widths derived from it are true
+    /// lower bounds for the bisection.
+    pub capacity_rps: f64,
+    /// Whether a lone idle package meets every mix entry's deadline at
+    /// batch 1. If not, no fleet of this package ever meets the SLO.
+    pub feasible_alone: bool,
+}
+
+/// One sized fleet with its simulated serving quality.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub point: PackagePoint,
+    pub width: u64,
+    pub fleet_cost: f64,
+    pub p99_ms: f64,
+    pub goodput_rps: f64,
+    pub violation_rate: f64,
+}
+
+/// Outcome of one auto-sizing search.
+#[derive(Debug, Clone)]
+pub struct AutosizeResult {
+    /// Cheapest fleet meeting the SLO, if any candidate produced one.
+    pub best: Option<FleetPlan>,
+    /// Package points enumerated (the design points explored).
+    pub explored: usize,
+    /// Candidates discarded before simulation (infeasible or dominated).
+    pub pruned: usize,
+    /// Discrete-event serve probes executed across all bisections.
+    pub simulated_runs: usize,
+    /// Every survivor's best fleet, cheapest first.
+    pub plans: Vec<FleetPlan>,
+}
+
+/// Characterize one candidate analytically. All cost-model work funnels
+/// through the serve [`CostCache`] and, underneath it, the crate-level
+/// layer memo — across 256 candidates most layer shapes repeat.
+fn characterize(point: &PackagePoint, cfg: &AutosizeConfig, costs: &CostModel) -> CandidateEval {
+    let engine = CostEngine::for_design_point(&point.sys(), point.dp);
+    let mut cache = CostCache::new();
+    let mut latency_curve = Vec::with_capacity(cfg.mix.entries.len() * PROBE_BATCHES.len());
+    let mut feasible_alone = true;
+    let weight_total: f64 = cfg.mix.entries.iter().map(|e| e.weight).sum();
+    let mut cycles_per_req = 0.0;
+    for e in &cfg.mix.entries {
+        // Best amortization this package can reach for this model across
+        // the batcher's ladder (usually the largest batch, but pipelining
+        // and buffer effects can make the curve non-trivial).
+        let mut best_cycles_per_req = f64::INFINITY;
+        for &b in &PROBE_BATCHES {
+            let c = cache.get(&engine, point.dp, e.kind, b, point.local_buffer_bytes);
+            latency_curve.push(c.latency);
+            if b == 1 && c.latency > e.slo_cycles {
+                feasible_alone = false;
+            }
+            best_cycles_per_req = best_cycles_per_req.min(c.latency / b as f64);
+        }
+        cycles_per_req += (e.weight / weight_total) * best_cycles_per_req;
+    }
+    CandidateEval {
+        point: *point,
+        package_cost: costs.package_cost(point),
+        latency_curve,
+        capacity_rps: CLOCK_HZ / cycles_per_req,
+        feasible_alone,
+    }
+}
+
+/// `true` if `b` dominates `a`: costs no more and is pointwise no slower
+/// across the probed latency curve. Any fleet feasible around `a` is then
+/// feasible no wider around `b`, at no higher cost.
+fn dominates(b: &CandidateEval, a: &CandidateEval) -> bool {
+    b.package_cost <= a.package_cost
+        && b.latency_curve.len() == a.latency_curve.len()
+        && b.latency_curve.iter().zip(&a.latency_curve).all(|(lb, la)| lb <= la)
+}
+
+/// Run one serve probe: `width` packages of `point` under the configured
+/// Poisson load, EDF routing, default dynamic batcher.
+fn probe(point: &PackagePoint, width: u64, cfg: &AutosizeConfig, costs: &CostModel) -> FleetPlan {
+    let mut fleet = Fleet::new(point.fleet(width), RoutePolicy::EarliestDeadline);
+    let mut source = Source::poisson(cfg.mix.clone(), cfg.load_rps, cfg.seed);
+    let mut stats = ServeStats::new();
+    fleet.run(&mut source, ms_to_cycles(cfg.horizon_ms), &mut stats);
+    FleetPlan {
+        point: *point,
+        width,
+        fleet_cost: costs.fleet_cost(point, width),
+        p99_ms: stats.latency_ms(99.0),
+        goodput_rps: stats.goodput_rps(),
+        violation_rate: stats.violation_rate(),
+    }
+}
+
+fn meets_slo(plan: &FleetPlan, cfg: &AutosizeConfig) -> bool {
+    plan.p99_ms <= cfg.slo_ms
+}
+
+/// Find the narrowest feasible fleet of `point` by bisection, plus how
+/// many probes it took. Width feasibility is monotone: adding a package
+/// never slows any request's service in the simulator.
+fn bisect_width(
+    eval: &CandidateEval,
+    max_width: u64,
+    cfg: &AutosizeConfig,
+    costs: &CostModel,
+) -> (Option<FleetPlan>, usize) {
+    // Stability lower bound: below this many packages the offered load
+    // exceeds fleet capacity and queues grow without bound.
+    let lb = (cfg.load_rps / eval.capacity_rps).ceil().max(1.0) as u64;
+    if lb > max_width {
+        return (None, 0);
+    }
+    let mut probes = 0;
+    let lo_plan = {
+        probes += 1;
+        probe(&eval.point, lb, cfg, costs)
+    };
+    if meets_slo(&lo_plan, cfg) {
+        return (Some(lo_plan), probes);
+    }
+    if lb == max_width {
+        return (None, probes);
+    }
+    probes += 1;
+    let hi_plan = probe(&eval.point, max_width, cfg, costs);
+    if !meets_slo(&hi_plan, cfg) {
+        return (None, probes);
+    }
+    // Invariant: `lo` infeasible, `hi` feasible (with its plan in hand).
+    let (mut lo, mut hi, mut hi_plan) = (lb, max_width, hi_plan);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        probes += 1;
+        let mid_plan = probe(&eval.point, mid, cfg, costs);
+        if meets_slo(&mid_plan, cfg) {
+            hi = mid;
+            hi_plan = mid_plan;
+        } else {
+            lo = mid;
+        }
+    }
+    (Some(hi_plan), probes)
+}
+
+/// Search `space` for the cheapest fleet meeting `cfg`'s SLO at its load.
+pub fn autosize(cfg: &AutosizeConfig, space: &SearchSpace, costs: &CostModel) -> AutosizeResult {
+    let points = space.enumerate();
+    let explored = points.len();
+
+    // Stage 2: analytic characterization, parallel over candidates.
+    let evals: Vec<CandidateEval> =
+        par::par_map_slice(&points, cfg.threads, |p| characterize(p, cfg, costs));
+
+    // Stage 3: drop candidates that can never meet the SLO, then the
+    // dominated ones (cheapest-first scan keeps the Pareto frontier).
+    let mut survivors: Vec<&CandidateEval> = evals.iter().filter(|e| e.feasible_alone).collect();
+    if cfg.prune {
+        survivors.sort_by(|a, b| {
+            a.package_cost
+                .partial_cmp(&b.package_cost)
+                .expect("package costs are finite")
+        });
+        // Frontier members cost no more than `cand` thanks to the sort,
+        // so a pointwise-no-slower member makes `cand` redundant.
+        let mut frontier: Vec<&CandidateEval> = Vec::new();
+        for cand in survivors {
+            if !frontier.iter().any(|&kept| dominates(kept, cand)) {
+                frontier.push(cand);
+            }
+        }
+        survivors = frontier;
+    }
+    let pruned = explored - survivors.len();
+
+    // Stage 4: size each survivor's fleet on short serve replays.
+    let sized: Vec<(Option<FleetPlan>, usize)> =
+        par::par_map_slice(&survivors, cfg.threads, |&e| bisect_width(e, space.max_width, cfg, costs));
+
+    let simulated_runs: usize = sized.iter().map(|(_, n)| *n).sum();
+    let mut plans: Vec<FleetPlan> = sized.into_iter().filter_map(|(p, _)| p).collect();
+    plans.sort_by(|a, b| {
+        a.fleet_cost
+            .partial_cmp(&b.fleet_cost)
+            .expect("fleet costs are finite")
+            .then(a.p99_ms.partial_cmp(&b.p99_ms).expect("p99s are finite"))
+    });
+    AutosizeResult { best: plans.first().cloned(), explored, pruned, simulated_runs, plans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{MixEntry, ModelKind};
+
+    fn tiny_cfg(load_rps: f64) -> AutosizeConfig {
+        let mix = WorkloadMix::new(vec![MixEntry {
+            kind: ModelKind::TinyCnn,
+            weight: 1.0,
+            slo_cycles: ms_to_cycles(20.0),
+        }]);
+        AutosizeConfig { horizon_ms: 10.0, threads: 2, ..AutosizeConfig::new(20.0, load_rps, mix) }
+    }
+
+    #[test]
+    fn finds_a_feasible_fleet_on_the_tiny_space() {
+        let cfg = tiny_cfg(2000.0);
+        let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+        assert_eq!(r.explored, 4);
+        let best = r.best.expect("tiny space must contain a feasible fleet");
+        assert!(best.p99_ms <= cfg.slo_ms, "p99 {:.2} ms vs SLO {} ms", best.p99_ms, cfg.slo_ms);
+        assert!(best.width >= 1);
+        assert!(best.fleet_cost > 0.0);
+        // Plans come back cheapest-first.
+        for w in r.plans.windows(2) {
+            assert!(w[0].fleet_cost <= w[1].fleet_cost);
+        }
+    }
+
+    #[test]
+    fn pruning_never_changes_the_best_fleet_cost() {
+        let cfg = tiny_cfg(1500.0);
+        let pruned = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+        let exhaustive =
+            autosize(&AutosizeConfig { prune: false, ..cfg.clone() }, &SearchSpace::tiny(), &CostModel::default());
+        let (p, e) = (
+            pruned.best.expect("pruned search found a fleet"),
+            exhaustive.best.expect("exhaustive search found a fleet"),
+        );
+        assert_eq!(p.fleet_cost, e.fleet_cost, "pruning changed the optimum");
+        assert_eq!(p.width, e.width);
+        assert!(pruned.pruned >= exhaustive.pruned);
+    }
+
+    #[test]
+    fn impossible_slo_returns_no_plan() {
+        let mix = WorkloadMix::new(vec![MixEntry {
+            kind: ModelKind::ResNet50,
+            weight: 1.0,
+            // 1 µs: no package can run ResNet-50 that fast.
+            slo_cycles: ms_to_cycles(0.001),
+        }]);
+        let mut cfg = AutosizeConfig::new(0.001, 100.0, mix);
+        cfg.horizon_ms = 5.0;
+        cfg.threads = 2;
+        let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+        assert!(r.best.is_none());
+        assert_eq!(r.pruned, r.explored, "every candidate is infeasible at batch 1");
+        assert_eq!(r.simulated_runs, 0);
+    }
+
+    #[test]
+    fn dominance_is_reflexive_safe() {
+        let cfg = tiny_cfg(1000.0);
+        let costs = CostModel::default();
+        let p = SearchSpace::tiny().enumerate()[0];
+        let e = characterize(&p, &cfg, &costs);
+        assert!(dominates(&e, &e), "a candidate trivially dominates itself");
+    }
+}

@@ -1,0 +1,51 @@
+//! Design-space search (substrate S14): the fleet auto-sizer.
+//!
+//! The ROADMAP's follow-on to the serving subsystem: given a target SLO
+//! and a target load, search the space of buildable packages — design
+//! point (wireless vs interposer × conservative vs aggressive), chiplet
+//! count, PEs per chiplet, per-chiplet buffer — and fleet widths for the
+//! *cheapest* fleet whose simulated p99 latency meets the SLO. This is
+//! the WIENNA co-design loop run in reverse: instead of fixing hardware
+//! and measuring throughput (Fig 7), fix the service objective and let
+//! the fast cost engine pick the hardware.
+//!
+//! The search is only tractable because of the cost engine's hot-path
+//! work in this crate: candidate characterization leans on the
+//! crate-level layer memo (`cost::memo`), fans out over a scoped worker
+//! pool (`cost::par`), and the final feasibility proof of each surviving
+//! candidate is a short discrete-event `serve` replay rather than an
+//! analytic guess.
+//!
+//! * [`space`] — candidate enumeration ([`SearchSpace`] →
+//!   [`PackagePoint`]) and the relative dollar [`CostModel`];
+//! * [`autosize`] — dominance pruning, fleet-width bisection over serve
+//!   probes, and the [`AutosizeResult`] report.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use wienna::search::{autosize, AutosizeConfig, CostModel, SearchSpace};
+//! use wienna::serve::WorkloadMix;
+//!
+//! // Cheapest fleet that serves the canonical CNN+transformer mix at
+//! // 3000 req/s with a 25 ms p99.
+//! let cfg = AutosizeConfig::new(25.0, 3000.0, WorkloadMix::cnn_transformer_default());
+//! let result = autosize(&cfg, &SearchSpace::default(), &CostModel::default());
+//! if let Some(best) = &result.best {
+//!     println!(
+//!         "{} x{} | cost {:.0} | p99 {:.2} ms",
+//!         best.point.label(),
+//!         best.width,
+//!         best.fleet_cost,
+//!         best.p99_ms
+//!     );
+//! }
+//! ```
+
+pub mod autosize;
+pub mod space;
+
+pub use autosize::{
+    autosize, AutosizeConfig, AutosizeResult, CandidateEval, FleetPlan, PROBE_BATCHES,
+};
+pub use space::{CostModel, PackagePoint, SearchSpace};

@@ -1,0 +1,241 @@
+//! The auto-sizer's design space: package candidates, their dollar-cost
+//! model, and dominance pruning.
+//!
+//! A *package point* is one buildable package configuration — design
+//! point (NoP kind × aggressiveness), chiplet count, PEs per chiplet and
+//! per-chiplet buffer budget. The fleet dimension (how many packages sit
+//! behind the router) is searched separately per candidate
+//! (`search::autosize`), because feasibility at a load is a property of
+//! the whole fleet.
+
+use crate::config::{DesignPoint, SystemConfig};
+use crate::nop::NopKind;
+use crate::serve::PackageSpec;
+
+/// One candidate package configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PackagePoint {
+    pub dp: DesignPoint,
+    pub num_chiplets: u64,
+    pub pes_per_chiplet: u64,
+    /// Per-chiplet double-buffer budget for inter-layer pipelining.
+    pub local_buffer_bytes: u64,
+}
+
+impl PackagePoint {
+    /// The package's system configuration (Table-4 defaults for the axes
+    /// the search does not vary).
+    pub fn sys(&self) -> SystemConfig {
+        SystemConfig {
+            num_chiplets: self.num_chiplets,
+            pes_per_chiplet: self.pes_per_chiplet,
+            ..Default::default()
+        }
+    }
+
+    /// Instantiate this point as a named [`PackageSpec`].
+    pub fn spec(&self, name: &str) -> PackageSpec {
+        PackageSpec::custom(name, self.sys(), self.dp, self.local_buffer_bytes)
+    }
+
+    /// `width` identical packages of this point.
+    pub fn fleet(&self, width: u64) -> Vec<PackageSpec> {
+        (0..width).map(|i| self.spec(&format!("{}-{i}", self.label()))).collect()
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}c x {}pe/{}KiB",
+            self.dp.label(),
+            self.num_chiplets,
+            self.pes_per_chiplet,
+            self.local_buffer_bytes / 1024
+        )
+    }
+}
+
+/// Relative dollar cost of building packages. Absolute calibration is
+/// irrelevant to the search — only ratios steer it — so the defaults are
+/// round numbers: silicon scales with PE count, per-chiplet overhead
+/// covers packaging/test, SRAM-backed buffers are priced per KiB, and
+/// wireless packages pay a transceiver premium per chiplet but skip the
+/// interposer's per-link wiring cost.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Cost per PE (compute silicon).
+    pub per_pe: f64,
+    /// Fixed cost per chiplet (die overhead, packaging, test).
+    pub per_chiplet: f64,
+    /// Cost per KiB of per-chiplet buffer.
+    pub per_buffer_kib: f64,
+    /// Extra cost per chiplet for the wireless transceiver pair.
+    pub wireless_per_chiplet: f64,
+    /// Extra cost per chiplet for interposer wiring + µbumps.
+    pub interposer_per_chiplet: f64,
+    /// Multiplier applied to aggressive (higher-BW) NoP provisioning.
+    pub aggressive_factor: f64,
+    /// Fixed per-package cost (substrate, HBM, global SRAM chiplet).
+    pub per_package: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            per_pe: 1.0,
+            per_chiplet: 40.0,
+            per_buffer_kib: 0.05,
+            wireless_per_chiplet: 12.0,
+            interposer_per_chiplet: 8.0,
+            aggressive_factor: 1.5,
+            per_package: 2000.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Cost of one package built at `p`.
+    pub fn package_cost(&self, p: &PackagePoint) -> f64 {
+        let nop_per_chiplet = match p.dp.nop {
+            NopKind::Wireless => self.wireless_per_chiplet,
+            NopKind::Interposer => self.interposer_per_chiplet,
+        };
+        let aggr = match p.dp.aggr {
+            crate::config::Aggressiveness::Aggressive => self.aggressive_factor,
+            crate::config::Aggressiveness::Conservative => 1.0,
+        };
+        let per_chiplet = self.per_chiplet
+            + self.per_pe * p.pes_per_chiplet as f64
+            + self.per_buffer_kib * (p.local_buffer_bytes as f64 / 1024.0)
+            + nop_per_chiplet * aggr;
+        self.per_package + per_chiplet * p.num_chiplets as f64
+    }
+
+    /// Cost of `width` packages at `p`.
+    pub fn fleet_cost(&self, p: &PackagePoint, width: u64) -> f64 {
+        self.package_cost(p) * width as f64
+    }
+}
+
+/// The grid of package candidates the auto-sizer enumerates.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub chiplet_counts: Vec<u64>,
+    pub pes_per_chiplet: Vec<u64>,
+    pub buffer_bytes: Vec<u64>,
+    pub design_points: Vec<DesignPoint>,
+    /// Largest fleet width the per-candidate bisection may try.
+    pub max_width: u64,
+}
+
+impl Default for SearchSpace {
+    /// 4 × 4 × 4 × 4 = 256 package points around the Table-4 instance.
+    fn default() -> Self {
+        SearchSpace {
+            chiplet_counts: vec![32, 64, 128, 256],
+            pes_per_chiplet: vec![16, 32, 64, 128],
+            buffer_bytes: vec![128 * 1024, 256 * 1024, 512 * 1024, 1024 * 1024],
+            design_points: DesignPoint::ALL.to_vec(),
+            max_width: 32,
+        }
+    }
+}
+
+impl SearchSpace {
+    /// A deliberately tiny space for tests: 2 × 1 × 1 × 2 = 4 points.
+    pub fn tiny() -> Self {
+        SearchSpace {
+            chiplet_counts: vec![64, 256],
+            pes_per_chiplet: vec![64],
+            buffer_bytes: vec![512 * 1024],
+            design_points: vec![DesignPoint::WIENNA_C, DesignPoint::INTERPOSER_C],
+            max_width: 8,
+        }
+    }
+
+    /// Every package point of the grid, in deterministic order.
+    pub fn enumerate(&self) -> Vec<PackagePoint> {
+        let mut out = Vec::with_capacity(
+            self.design_points.len()
+                * self.chiplet_counts.len()
+                * self.pes_per_chiplet.len()
+                * self.buffer_bytes.len(),
+        );
+        for &dp in &self.design_points {
+            for &num_chiplets in &self.chiplet_counts {
+                for &pes_per_chiplet in &self.pes_per_chiplet {
+                    for &local_buffer_bytes in &self.buffer_bytes {
+                        out.push(PackagePoint { dp, num_chiplets, pes_per_chiplet, local_buffer_bytes });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.design_points.len()
+            * self.chiplet_counts.len()
+            * self.pes_per_chiplet.len()
+            * self.buffer_bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_space_has_at_least_256_points() {
+        let s = SearchSpace::default();
+        assert!(s.len() >= 256, "{} points", s.len());
+        assert_eq!(s.enumerate().len(), s.len());
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_and_unique() {
+        let s = SearchSpace::default();
+        let a = s.enumerate();
+        let b = s.enumerate();
+        assert_eq!(a, b);
+        let set: std::collections::HashSet<PackagePoint> = a.iter().copied().collect();
+        assert_eq!(set.len(), a.len());
+    }
+
+    #[test]
+    fn cost_grows_with_every_axis() {
+        let m = CostModel::default();
+        let base = PackagePoint {
+            dp: DesignPoint::WIENNA_C,
+            num_chiplets: 64,
+            pes_per_chiplet: 64,
+            local_buffer_bytes: 256 * 1024,
+        };
+        let c0 = m.package_cost(&base);
+        assert!(c0 > 0.0);
+        assert!(m.package_cost(&PackagePoint { num_chiplets: 128, ..base }) > c0);
+        assert!(m.package_cost(&PackagePoint { pes_per_chiplet: 128, ..base }) > c0);
+        assert!(m.package_cost(&PackagePoint { local_buffer_bytes: 1024 * 1024, ..base }) > c0);
+        assert!(m.package_cost(&PackagePoint { dp: DesignPoint::WIENNA_A, ..base }) > c0);
+        assert!(m.fleet_cost(&base, 3) > m.fleet_cost(&base, 2));
+    }
+
+    #[test]
+    fn package_point_builds_specs() {
+        let p = PackagePoint {
+            dp: DesignPoint::WIENNA_C,
+            num_chiplets: 64,
+            pes_per_chiplet: 32,
+            local_buffer_bytes: 256 * 1024,
+        };
+        let fleet = p.fleet(3);
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet[0].sys.num_chiplets, 64);
+        assert_eq!(fleet[0].sys.pes_per_chiplet, 32);
+        assert_eq!(fleet[2].dp, DesignPoint::WIENNA_C);
+        assert_eq!(fleet[1].local_buffer_bytes, 256 * 1024);
+    }
+}

@@ -21,6 +21,15 @@ pub struct CostKey {
     pub dp: DesignPoint,
     pub num_chiplets: u64,
     pub pes_per_chiplet: u64,
+    /// Global SRAM capacity — packages that differ only in SRAM must not
+    /// alias (the HBM-staging and search paths vary it).
+    pub global_sram_bytes: u64,
+    /// Collection-NoP link bandwidth (bytes/cycle/link) as its IEEE-754
+    /// bit pattern, so the key stays `Eq + Hash`.
+    pub collection_bw_bits: u64,
+    /// Tensor element width — scales every traffic class's byte count
+    /// (mirrors `cost::EngineKey`).
+    pub bytes_per_elem: u64,
     /// Pipelining double-buffer budget — changes the pipelined makespan,
     /// so packages differing only in buffer size must not share entries.
     pub local_buffer_bytes: u64,
@@ -77,6 +86,9 @@ impl CostCache {
             dp,
             num_chiplets: engine.sys.num_chiplets,
             pes_per_chiplet: engine.sys.pes_per_chiplet,
+            global_sram_bytes: engine.sys.global_sram_bytes,
+            collection_bw_bits: engine.sys.collection_bw_per_link.to_bits(),
+            bytes_per_elem: engine.sys.bytes_per_elem,
             local_buffer_bytes,
             kind,
             batch,
@@ -207,6 +219,23 @@ mod tests {
         cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 8, BUF / 8);
         assert_eq!(cache.misses, 3);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn sram_and_collection_bw_do_not_alias() {
+        // ROADMAP item: packages that differ only in SRAM size or
+        // collection bandwidth must occupy distinct cache entries.
+        let base = SystemConfig::default();
+        let small_sram = SystemConfig { global_sram_bytes: base.global_sram_bytes / 4, ..base.clone() };
+        let fat_collect = SystemConfig { collection_bw_per_link: 2.0 * base.collection_bw_per_link, ..base.clone() };
+        let wide_elems = SystemConfig { bytes_per_elem: 2 * base.bytes_per_elem, ..base.clone() };
+        let mut cache = CostCache::new();
+        for sys in [&base, &small_sram, &fat_collect, &wide_elems] {
+            let e = CostEngine::for_design_point(sys, DesignPoint::WIENNA_C);
+            cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 4, BUF);
+        }
+        assert_eq!(cache.misses, 4, "each package shape must be priced separately");
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]

@@ -40,6 +40,11 @@ impl PackageSpec {
     pub fn homogeneous(count: usize, dp: DesignPoint) -> Vec<PackageSpec> {
         (0..count).map(|i| PackageSpec::new(&format!("{}-{i}", dp.label()), dp)).collect()
     }
+
+    /// A fully-custom package — the `search` subsystem varies every axis.
+    pub fn custom(name: &str, sys: SystemConfig, dp: DesignPoint, local_buffer_bytes: u64) -> Self {
+        PackageSpec { name: name.to_string(), sys, dp, local_buffer_bytes }
+    }
 }
 
 /// Run-time state and accounting of one package.

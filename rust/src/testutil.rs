@@ -94,7 +94,9 @@ impl BenchStats {
 }
 
 /// Criterion-style micro-benchmark: warm up, then time `iters` runs of
-/// `f`, batching the clock reads.
+/// `f`, batching the clock reads. Every result is also recorded in a
+/// process-global registry so bench mains can dump a machine-readable
+/// summary with [`write_bench_json`] (the CI perf job uploads it).
 pub fn bench<T>(label: &str, iters: u64, mut f: impl FnMut() -> T) -> BenchStats {
     assert!(iters > 0);
     // Warm-up.
@@ -120,7 +122,63 @@ pub fn bench<T>(label: &str, iters: u64, mut f: impl FnMut() -> T) -> BenchStats
         max / 1e3,
         iters
     );
+    bench_registry().lock().expect("bench registry").push((label.to_string(), stats));
     stats
+}
+
+fn bench_registry() -> &'static std::sync::Mutex<Vec<(String, BenchStats)>> {
+    static REGISTRY: std::sync::OnceLock<std::sync::Mutex<Vec<(String, BenchStats)>>> =
+        std::sync::OnceLock::new();
+    REGISTRY.get_or_init(|| std::sync::Mutex::new(Vec::new()))
+}
+
+/// Minimal JSON string escaping (labels are code-controlled, but keep the
+/// output well-formed regardless).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write every [`bench`] result recorded so far to a JSON file — an array
+/// of `{"name", "mean_ms", "iters"}` objects (plus min/max for context) —
+/// and return its path. `$BENCH_JSON` overrides the path; otherwise
+/// `default_name` lands in the working directory. Each bench main passes
+/// its own default (`BENCH_perf.json`, `BENCH_serving.json`, …) so
+/// back-to-back local bench runs never clobber each other's results.
+pub fn write_bench_json(default_name: &str) -> std::io::Result<PathBuf> {
+    let path =
+        PathBuf::from(std::env::var("BENCH_JSON").unwrap_or_else(|_| default_name.to_string()));
+    write_bench_json_to(&path)?;
+    Ok(path)
+}
+
+/// [`write_bench_json`] to an explicit path (tests use this directly so
+/// they never have to mutate the process environment).
+pub fn write_bench_json_to(path: &Path) -> std::io::Result<()> {
+    let list = bench_registry().lock().expect("bench registry");
+    let mut s = String::from("[\n");
+    for (i, (name, st)) in list.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"mean_ms\": {:.6}, \"iters\": {}, \"min_ms\": {:.6}, \"max_ms\": {:.6}}}{}\n",
+            json_escape(name),
+            st.mean_ms(),
+            st.iters,
+            st.min_ns / 1e6,
+            st.max_ns / 1e6,
+            if i + 1 < list.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
 }
 
 /// Relative-equality assertion helper (replaces `approx`).
@@ -190,5 +248,28 @@ mod tests {
         let s = bench("noop", 5, || 1 + 1);
         assert_eq!(s.iters, 5);
         assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_json_is_wellformed_and_contains_results() {
+        let d = TempDir::new("wienna_bench_json");
+        let path = d.path().join("BENCH_perf.json");
+        bench("json_probe", 3, || 2 + 2);
+        write_bench_json_to(&path).expect("write json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('['));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"name\": \"json_probe\""));
+        assert!(text.contains("\"iters\": 3"));
+        assert!(text.contains("\"mean_ms\""));
+        // No trailing comma before the closing bracket.
+        assert!(!text.contains(",\n]"));
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\ny");
     }
 }

@@ -5,7 +5,14 @@
 //! `Y = X = R = S = 1`; residual (skip-connection) adds are elementwise
 //! layers; up-convolutions ("UpCONV" in the paper, Table 1) are transposed
 //! convolutions that enlarge the activation by `upsample`.
+//!
+//! Layer names are reference-counted (`Arc<str>`) so that cloning a layer
+//! — which the partitioner does on every cost evaluation to derive the
+//! per-chiplet sub-layer — never touches the heap. The name-free geometry
+//! lives in [`LayerShape`], the `Copy` key the cost engine's memo table
+//! interns (`cost::memo`).
 
+use std::sync::Arc;
 
 /// Operator kind, mirroring the paper's Table 1 row "Description".
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -27,8 +34,8 @@ pub enum OpKind {
 /// activation height/width, `R`/`S` filter height/width.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
-    /// Human-readable identifier, e.g. `"conv2_1_3x3"`.
-    pub name: String,
+    /// Human-readable identifier, e.g. `"conv2_1_3x3"` (cheaply clonable).
+    pub name: Arc<str>,
     pub op: OpKind,
     /// Batch size.
     pub n: u64,
@@ -55,7 +62,7 @@ impl Layer {
     #[allow(clippy::too_many_arguments)]
     pub fn conv(name: &str, n: u64, k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, stride: u64) -> Self {
         Layer {
-            name: name.to_string(),
+            name: Arc::from(name),
             op: OpKind::Conv2D,
             n,
             k,
@@ -72,7 +79,7 @@ impl Layer {
     /// Fully-connected layer: `out = W[k,c] · in[c]` per batch element.
     pub fn fc(name: &str, n: u64, k: u64, c: u64) -> Self {
         Layer {
-            name: name.to_string(),
+            name: Arc::from(name),
             op: OpKind::FullyConnected,
             n,
             k,
@@ -89,7 +96,7 @@ impl Layer {
     /// Residual (elementwise) addition over a `[n, c, y, x]` activation.
     pub fn residual(name: &str, n: u64, c: u64, y: u64, x: u64) -> Self {
         Layer {
-            name: name.to_string(),
+            name: Arc::from(name),
             op: OpKind::ResidualAdd,
             n,
             k: c,
@@ -107,7 +114,7 @@ impl Layer {
     #[allow(clippy::too_many_arguments)]
     pub fn upconv(name: &str, n: u64, k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, upsample: u64) -> Self {
         Layer {
-            name: name.to_string(),
+            name: Arc::from(name),
             op: OpKind::UpConv,
             n,
             k,
@@ -176,6 +183,42 @@ impl Layer {
     pub fn is_spatial(&self) -> bool {
         self.y > 1 || self.x > 1
     }
+
+    /// The name-free geometry of this layer — everything that determines
+    /// its cost under a given strategy and system configuration.
+    pub fn shape(&self) -> LayerShape {
+        LayerShape {
+            op: self.op,
+            n: self.n,
+            k: self.k,
+            c: self.c,
+            y: self.y,
+            x: self.x,
+            r: self.r,
+            s: self.s,
+            stride: self.stride,
+            upsample: self.upsample,
+        }
+    }
+}
+
+/// The geometric identity of a [`Layer`]: its full loop-nest bounds minus
+/// the human-readable name. Two layers with equal shapes have identical
+/// cost under every strategy and system configuration, so this is the key
+/// the crate-level cost memo table (`cost::memo`) interns — layers named
+/// `conv2_1` and `conv2_2` with the same bounds share one cached cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerShape {
+    pub op: OpKind,
+    pub n: u64,
+    pub k: u64,
+    pub c: u64,
+    pub y: u64,
+    pub x: u64,
+    pub r: u64,
+    pub s: u64,
+    pub stride: u64,
+    pub upsample: u64,
 }
 
 #[cfg(test)]
@@ -212,6 +255,23 @@ mod tests {
         // Reads both addends.
         assert_eq!(l.input_elems(), 2 * 256 * 56 * 56);
         assert_eq!(l.weight_elems(), 0);
+    }
+
+    #[test]
+    fn shape_ignores_name_only() {
+        let a = Layer::conv("a", 1, 8, 4, 10, 10, 3, 3, 1);
+        let b = Layer::conv("b", 1, 8, 4, 10, 10, 3, 3, 1);
+        assert_ne!(a, b); // names differ
+        assert_eq!(a.shape(), b.shape()); // geometry identical
+        let c = Layer::conv("a", 1, 8, 4, 10, 10, 3, 3, 2);
+        assert_ne!(a.shape(), c.shape());
+    }
+
+    #[test]
+    fn layer_clone_shares_name_storage() {
+        let a = Layer::conv("a", 1, 8, 4, 10, 10, 3, 3, 1);
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.name, &b.name));
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod transformer;
 pub mod types;
 pub mod unet;
 
-pub use layer::{Layer, OpKind};
+pub use layer::{Layer, LayerShape, OpKind};
 pub use types::{classify, LayerType};
 
 

@@ -113,8 +113,8 @@ mod tests {
         let m = transformer(TransformerConfig::tiny(2));
         // 10 layers per block x 2 blocks + pooler.
         assert_eq!(m.layers.len(), 21);
-        assert_eq!(m.layers[0].name, "enc0_q_proj");
-        assert_eq!(m.layers[20].name, "pooler");
+        assert_eq!(&*m.layers[0].name, "enc0_q_proj");
+        assert_eq!(&*m.layers[20].name, "pooler");
     }
 
     #[test]
@@ -133,13 +133,13 @@ mod tests {
         let m = transformer(cfg);
         let d = cfg.head_dim();
         // QK^T: batch * heads * seq^2 * d MACs.
-        let qk = m.layers.iter().find(|l| l.name == "enc0_qk_scores").unwrap();
+        let qk = m.layers.iter().find(|l| &*l.name == "enc0_qk_scores").unwrap();
         assert_eq!(qk.macs(), cfg.batch * cfg.heads * cfg.seq * cfg.seq * d);
         // attn x V has the same MAC count by symmetry.
-        let av = m.layers.iter().find(|l| l.name == "enc0_attn_v").unwrap();
+        let av = m.layers.iter().find(|l| &*l.name == "enc0_attn_v").unwrap();
         assert_eq!(av.macs(), qk.macs());
         // Projections: batch * seq * hidden^2.
-        let q = m.layers.iter().find(|l| l.name == "enc0_q_proj").unwrap();
+        let q = m.layers.iter().find(|l| &*l.name == "enc0_q_proj").unwrap();
         assert_eq!(q.macs(), cfg.batch * cfg.seq * cfg.hidden * cfg.hidden);
     }
 
@@ -154,7 +154,7 @@ mod tests {
     fn residual_volume_matches_token_embeddings() {
         let cfg = TransformerConfig::tiny(2);
         let m = transformer(cfg);
-        let r = m.layers.iter().find(|l| l.name == "enc0_attn_res").unwrap();
+        let r = m.layers.iter().find(|l| &*l.name == "enc0_attn_res").unwrap();
         assert_eq!(r.macs(), cfg.batch * cfg.hidden * cfg.seq);
     }
 

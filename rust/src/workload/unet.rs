@@ -79,10 +79,10 @@ mod tests {
     #[test]
     fn resolutions_match_published_table() {
         let m = unet(1);
-        let bott = m.layers.iter().find(|l| l.name == "bott_conv_b").unwrap();
+        let bott = m.layers.iter().find(|l| &*l.name == "bott_conv_b").unwrap();
         assert_eq!(bott.y, 30);
         assert_eq!(bott.y_out(), 28);
-        let up4 = m.layers.iter().find(|l| l.name == "dec4_upconv").unwrap();
+        let up4 = m.layers.iter().find(|l| &*l.name == "dec4_upconv").unwrap();
         assert_eq!(up4.y_out(), 56);
     }
 
@@ -98,7 +98,7 @@ mod tests {
     fn encoder_is_high_res_deep_is_low_res() {
         let m = unet(1);
         assert_eq!(classify(&m.layers[0]), LayerType::HighRes);
-        let bott = m.layers.iter().find(|l| l.name == "bott_conv_a").unwrap();
+        let bott = m.layers.iter().find(|l| &*l.name == "bott_conv_a").unwrap();
         assert_eq!(classify(bott), LayerType::LowRes);
     }
 

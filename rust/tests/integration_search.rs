@@ -1,0 +1,225 @@
+//! Integration tests for the fast-path cost engine (memo + worker pool)
+//! and the `search::autosize` fleet auto-sizer.
+//!
+//! The memo/parallel properties are the load-bearing guarantees of this
+//! crate's hot-path rework: caching and threading must change *nothing*
+//! about the numbers, only how fast they arrive. The search tests close
+//! the loop the ISSUE asks for: the fleet the auto-sizer returns is
+//! re-verified by an independent `serve` replay.
+
+use wienna::config::{DesignPoint, SystemConfig};
+use wienna::cost::{
+    evaluate_grid, evaluate_layer, evaluate_layer_uncached, evaluate_model, evaluate_model_par,
+    CostEngine,
+};
+use wienna::dataflow::Strategy;
+use wienna::search::{autosize, AutosizeConfig, CostModel, SearchSpace};
+use wienna::serve::{
+    ms_to_cycles, Fleet, MixEntry, ModelKind, RoutePolicy, ServeStats, Source, WorkloadMix,
+};
+use wienna::testutil::Rng;
+use wienna::workload::{Layer, Model};
+
+/// Draw a random but well-formed layer (mirrors `proptest_coordinator`).
+fn arb_layer(rng: &mut Rng) -> Layer {
+    match rng.range_u64(0, 2) {
+        0 => {
+            let r = *rng.pick(&[1u64, 3, 5]);
+            let stride = *rng.pick(&[1u64, 2]);
+            let yo = rng.range_u64(1, 28);
+            let y = (yo - 1) * stride + r;
+            Layer::conv(
+                "p_conv",
+                rng.range_u64(1, 16),
+                rng.range_u64(1, 256),
+                rng.range_u64(1, 256),
+                y,
+                y,
+                r,
+                r,
+                stride,
+            )
+        }
+        1 => Layer::fc("p_fc", rng.range_u64(1, 32), rng.range_u64(1, 2048), rng.range_u64(1, 2048)),
+        _ => Layer::residual("p_res", rng.range_u64(1, 32), rng.range_u64(1, 256), rng.range_u64(1, 28), rng.range_u64(1, 28)),
+    }
+}
+
+fn arb_sys(rng: &mut Rng) -> SystemConfig {
+    SystemConfig {
+        num_chiplets: *rng.pick(&[16u64, 64, 256]),
+        pes_per_chiplet: *rng.pick(&[16u64, 64]),
+        ..Default::default()
+    }
+}
+
+/// Property: for random layers, strategies and packages, the memoized
+/// path (first call populates, second call hits) returns bit-identical
+/// numbers to a direct uncached evaluation.
+#[test]
+fn prop_memoized_layer_eval_is_exact() {
+    let mut rng = Rng::new(0xC057);
+    for iter in 0..200 {
+        let layer = arb_layer(&mut rng);
+        let sys = arb_sys(&mut rng);
+        let dp = *rng.pick(&DesignPoint::ALL);
+        let s = *rng.pick(&Strategy::ALL);
+        let engine = CostEngine::for_design_point(&sys, dp);
+        let direct = evaluate_layer_uncached(&engine, &layer, s);
+        let first = evaluate_layer(&engine, &layer, s); // may populate
+        let second = evaluate_layer(&engine, &layer, s); // must hit
+        for (label, got) in [("first", &first), ("second", &second)] {
+            assert_eq!(direct.latency, got.latency, "iter {iter} {label}");
+            assert_eq!(direct.timeline, got.timeline, "iter {iter} {label}");
+            assert_eq!(direct.macs, got.macs, "iter {iter} {label}");
+            assert_eq!(direct.used_chiplets, got.used_chiplets, "iter {iter} {label}");
+            assert_eq!(direct.dist_energy_pj, got.dist_energy_pj, "iter {iter} {label}");
+            assert_eq!(direct.local_buffer_bytes, got.local_buffer_bytes, "iter {iter} {label}");
+            assert_eq!(direct.layer_name, got.layer_name, "iter {iter} {label}");
+        }
+    }
+}
+
+/// Property: multi-threaded, memo-backed whole-model evaluation matches
+/// the direct single-threaded, uncached result exactly — per layer, in
+/// order, across random models and thread counts.
+#[test]
+fn prop_parallel_model_eval_is_exact() {
+    let mut rng = Rng::new(0xBEEF);
+    for iter in 0..25 {
+        let layers: Vec<Layer> = (0..rng.range_u64(1, 12)).map(|_| arb_layer(&mut rng)).collect();
+        let model = Model { name: format!("fuzz{iter}"), layers };
+        let sys = arb_sys(&mut rng);
+        let dp = *rng.pick(&DesignPoint::ALL);
+        let engine = CostEngine::for_design_point(&sys, dp);
+        // Uncached single-threaded reference, layer by layer (adaptive).
+        let reference: Vec<f64> = model
+            .layers
+            .iter()
+            .map(|l| {
+                Strategy::ALL
+                    .iter()
+                    .map(|&s| evaluate_layer_uncached(&engine, l, s).latency)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let threads = *rng.pick(&[1usize, 2, 4]);
+        let par = evaluate_model_par(&engine, &model, None, threads);
+        let seq = evaluate_model(&engine, &model, None);
+        assert_eq!(seq.total_latency, par.total_latency, "iter {iter}");
+        assert_eq!(par.layers.len(), model.layers.len());
+        for (i, lc) in par.layers.iter().enumerate() {
+            assert_eq!(lc.latency, reference[i], "iter {iter} layer {i}");
+            assert_eq!(lc.layer_name, model.layers[i].name, "iter {iter} layer {i}");
+        }
+    }
+}
+
+/// The Fig-7 grid evaluated through the pool equals cell-by-cell direct
+/// evaluation.
+#[test]
+fn grid_equals_direct_cells() {
+    let sys = SystemConfig::default();
+    let models = [wienna::workload::tiny::tiny_cnn(8)];
+    let grid = evaluate_grid(&sys, &DesignPoint::ALL, &models, None, 4);
+    for (i, dp) in DesignPoint::ALL.iter().enumerate() {
+        let direct = evaluate_model(&CostEngine::for_design_point(&sys, *dp), &models[0], None);
+        assert_eq!(grid[i].total_latency, direct.total_latency, "{}", dp.label());
+        assert_eq!(grid[i].macs_per_cycle, direct.macs_per_cycle, "{}", dp.label());
+    }
+}
+
+fn tiny_mix(slo_ms: f64) -> WorkloadMix {
+    WorkloadMix::new(vec![MixEntry {
+        kind: ModelKind::TinyCnn,
+        weight: 1.0,
+        slo_cycles: ms_to_cycles(slo_ms),
+    }])
+}
+
+/// Small 8-point grid for search tests: 2 chiplet counts × 2 PE counts ×
+/// 2 design points.
+fn small_space() -> SearchSpace {
+    SearchSpace {
+        chiplet_counts: vec![64, 256],
+        pes_per_chiplet: vec![32, 64],
+        buffer_bytes: vec![512 * 1024],
+        design_points: vec![DesignPoint::WIENNA_C, DesignPoint::INTERPOSER_C],
+        max_width: 8,
+    }
+}
+
+/// Pruned and exhaustive searches must agree on the optimum.
+#[test]
+fn pruned_search_equals_exhaustive_on_small_grid() {
+    let mut cfg = AutosizeConfig::new(20.0, 2500.0, tiny_mix(20.0));
+    cfg.horizon_ms = 15.0;
+    cfg.threads = 2;
+    let costs = CostModel::default();
+    let pruned = autosize(&cfg, &small_space(), &costs);
+    let exhaustive = autosize(&AutosizeConfig { prune: false, ..cfg }, &small_space(), &costs);
+    let p = pruned.best.expect("pruned search found a fleet");
+    let e = exhaustive.best.expect("exhaustive search found a fleet");
+    assert_eq!(p.fleet_cost, e.fleet_cost, "pruning changed the optimal cost");
+    assert_eq!(p.width, e.width, "pruning changed the optimal width");
+    assert_eq!(pruned.explored, exhaustive.explored);
+}
+
+/// The acceptance loop: the auto-sized fleet, rebuilt from its returned
+/// plan and driven by an independent trace *replay* at the target load,
+/// meets the SLO it was sized for.
+#[test]
+fn autosized_fleet_survives_replay_verification() {
+    let slo_ms = 20.0;
+    let load_rps = 2500.0;
+    let mut cfg = AutosizeConfig::new(slo_ms, load_rps, tiny_mix(slo_ms));
+    cfg.horizon_ms = 15.0;
+    cfg.threads = 2;
+    let result = autosize(&cfg, &small_space(), &CostModel::default());
+    assert!(result.explored >= 8);
+    let best = result.best.expect("search must find a feasible fleet");
+    assert!(best.p99_ms <= slo_ms);
+
+    // Independent verification: a uniform-gap replay at the same offered
+    // rate (different arrival process AND different seed than the search
+    // probes used).
+    let n_requests = 400;
+    let gap_ms = 1000.0 / load_rps;
+    let gaps: Vec<f64> = vec![gap_ms; n_requests];
+    let mut fleet = Fleet::new(best.point.fleet(best.width), RoutePolicy::EarliestDeadline);
+    let mut source = Source::replay(tiny_mix(slo_ms), &gaps, 7);
+    let mut stats = ServeStats::new();
+    fleet.run(&mut source, f64::INFINITY, &mut stats);
+    assert_eq!(stats.completed(), n_requests as u64);
+    assert!(
+        stats.latency_ms(99.0) <= slo_ms,
+        "replayed p99 {:.2} ms exceeds the {slo_ms} ms SLO the fleet was sized for",
+        stats.latency_ms(99.0)
+    );
+}
+
+/// Analytic sanity on the monotonicity motivating the pruner: on the
+/// wireless designs, more chiplets never raises a model's (adaptive)
+/// per-batch latency — broadcasts cost one transmission regardless of
+/// fan-out, so growing the package only shrinks compute and collection.
+/// (The interposer's replicated-unicast broadcasts amplify with fan-out,
+/// which is why the pruner compares *measured* latency curves instead of
+/// assuming monotonicity across the board.)
+#[test]
+fn more_chiplets_never_raise_batch_latency() {
+    let model = wienna::workload::tiny::tiny_cnn(8);
+    for dp in [DesignPoint::WIENNA_C, DesignPoint::WIENNA_A] {
+        let mut prev = f64::INFINITY;
+        for nc in [16u64, 64, 256] {
+            let sys = SystemConfig { num_chiplets: nc, ..Default::default() };
+            let engine = CostEngine::for_design_point(&sys, dp);
+            let lat = evaluate_model(&engine, &model, None).total_latency;
+            assert!(
+                lat <= prev + 1e-6,
+                "{}: latency rose from {prev:.0} to {lat:.0} cycles at {nc} chiplets",
+                dp.label()
+            );
+            prev = lat;
+        }
+    }
+}
