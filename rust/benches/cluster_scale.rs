@@ -1,0 +1,144 @@
+//! Cluster scaling bench: event-loop thread scaling + shed-rate sweep.
+//!
+//! Part 1 — **thread scaling**: one 16-package WIENNA-C fleet in 8
+//! shards serves the canonical CNN/transformer mix at 0.9x capacity for a
+//! fixed simulated horizon, timed at 1, 2 and 4 worker threads. The
+//! shards are pure functions of their input slices, so every run produces
+//! bit-identical stats (asserted) — threads only buy wall-clock. The
+//! headline number is the 4-thread speedup over 1 thread (the PR target
+//! is > 1.5x on a 4-core runner).
+//!
+//! Part 2 — **shed-rate sweep**: the same cluster at 1.5x capacity under
+//! queue caps from 0 to unbounded, reporting shed %, per-class p99 and
+//! goodput — the admission-control dial from "drop everything" to "queue
+//! everything".
+//!
+//! Both parts run under a `cost::memo::run_scope` after a warm-up pass,
+//! so the timed runs see a hot layer memo (steady-state behavior) and the
+//! bench process doesn't leak its working set into `memo::stats()`.
+
+use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, TrafficClass};
+use wienna::config::DesignPoint;
+use wienna::cost::memo;
+use wienna::report::Table;
+use wienna::serve::{ms_to_cycles, Fleet, PackageSpec, RoutePolicy, Source, WorkloadMix};
+use wienna::testutil::bench;
+
+const PACKAGES: usize = 16;
+const SHARDS: usize = 8;
+/// Requests per timed run. Fixed event count (the horizon is derived
+/// from it) so per-shard work dwarfs thread spawn/merge overhead and the
+/// speedup measures the event loops, whatever the fleet's capacity is.
+const SCALE_REQUESTS: f64 = 40_000.0;
+const SWEEP_REQUESTS: f64 = 8_000.0;
+
+fn mix() -> WorkloadMix {
+    WorkloadMix::cnn_transformer_default()
+}
+
+fn run_once(
+    threads: usize,
+    rate: f64,
+    horizon_ms: f64,
+    queue_cap: Option<usize>,
+) -> wienna::cluster::ClusterStats {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: SHARDS,
+            threads,
+            admission: AdmissionConfig { queue_cap, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let mut source = Source::poisson(mix(), rate, 42);
+    cluster.run(&mut source, ms_to_cycles(horizon_ms))
+}
+
+fn main() {
+    println!("##### Cluster scaling ({PACKAGES} packages, {SHARDS} shards)\n");
+    let capacity = Fleet::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    )
+    .estimate_capacity_rps(&mix(), 8);
+    let rate = 0.9 * capacity;
+    let horizon_ms = SCALE_REQUESTS / rate * 1e3;
+    println!(
+        "estimated fleet capacity {capacity:.0} req/s -> offered {rate:.0} req/s (0.9x) for {horizon_ms:.0} ms (~{SCALE_REQUESTS:.0} requests)\n"
+    );
+
+    // Warm the layer memo once so every timed run sees steady state.
+    let warm = run_once(1, rate, horizon_ms, Some(256));
+    let _scope = memo::run_scope();
+
+    // --- Part 1: thread scaling -----------------------------------------
+    // Determinism cross-check once per thread count, OUTSIDE the timed
+    // loop: serializing and diffing multi-KB stats JSON is serial work
+    // that would deflate the measured speedup (the integration test and
+    // the CI gate re-prove this property anyway).
+    let reference = warm.to_json();
+    for threads in [2usize, 4] {
+        let s = run_once(threads, rate, horizon_ms, Some(256));
+        assert_eq!(s.to_json(), reference, "thread count changed the stats");
+    }
+    let mut means = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let stats = bench(&format!("cluster/{PACKAGES}pkg_{SHARDS}shard_t{threads}"), 5, || {
+            run_once(threads, rate, horizon_ms, Some(256)).serve.completed()
+        });
+        means.push((threads, stats.mean_ns));
+    }
+    let t1 = means[0].1;
+    println!();
+    for &(threads, mean) in &means {
+        println!(
+            "threads {threads}: {:>8.2} ms/run | speedup {:.2}x vs 1 thread",
+            mean / 1e6,
+            t1 / mean
+        );
+    }
+    let speedup4 = t1 / means[2].1;
+    println!(
+        "event-loop throughput at 4 threads: {:.2}x vs single-threaded (target > 1.5x)\n",
+        speedup4
+    );
+
+    // --- Part 2: shed-rate sweep over queue caps ------------------------
+    let overload = 1.5 * capacity;
+    let sweep_horizon_ms = SWEEP_REQUESTS / overload * 1e3;
+    let mut t = Table::new(
+        &format!("admission sweep at {overload:.0} req/s (1.5x capacity, {sweep_horizon_ms:.0} ms)"),
+        &["queue cap", "shed %", "queue-full", "deadline", "interactive p99 ms", "batch p99 ms", "goodput req/s"],
+    );
+    for cap in [Some(0usize), Some(1), Some(4), Some(16), Some(64), Some(256), None] {
+        let s = run_once(4, overload, sweep_horizon_ms, cap);
+        t.row(vec![
+            cap.map_or("none".to_string(), |c| c.to_string()),
+            format!("{:.1}", s.serve.shed_rate() * 100.0),
+            s.shed_queue_full.to_string(),
+            s.shed_deadline.to_string(),
+            format!("{:.2}", s.class_latency_ms(TrafficClass::Interactive, 99.0)),
+            format!("{:.2}", s.class_latency_ms(TrafficClass::Batch, 99.0)),
+            format!("{:.0}", s.serve.goodput_rps()),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/cluster_shed.csv").ok();
+
+    let ms = memo::stats();
+    println!(
+        "\nlayer memo: {} entries (cap {}), {:.1}% hit rate ({} hits / {} misses, {} evictions)",
+        ms.entries,
+        ms.capacity,
+        ms.hit_rate() * 100.0,
+        ms.hits,
+        ms.misses,
+        ms.evictions
+    );
+
+    match wienna::testutil::write_bench_json("BENCH_cluster.json") {
+        Ok(p) => println!("bench json -> {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

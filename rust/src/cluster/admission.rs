@@ -1,0 +1,146 @@
+//! Per-package admission control: queue caps and deadline-aware shedding.
+//!
+//! Admission is decided at routing time, before a request touches a
+//! queue. Two independent gates:
+//!
+//! * **queue cap** — a hard bound on how many requests may wait at one
+//!   package (all classes combined). Protects queue memory and keeps the
+//!   worst-case queueing delay bounded under overload.
+//! * **deadline-aware shedding** — refuse a request whose *predicted*
+//!   completion already misses its deadline; serving it would burn array
+//!   cycles on an answer nobody can use. Only applies to classes that
+//!   opted in (`ClassSpec::deadline_shed`) and only when the request
+//!   carries a finite deadline.
+//!
+//! Both decisions are pure functions of the (deterministic) simulation
+//! state, so admission introduces no cross-shard coupling.
+
+/// Why a request was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The target package's admission queue is at its cap.
+    QueueFull,
+    /// The predicted completion misses the request's deadline even before
+    /// it queues (deadline-aware load shedding).
+    DeadlineHopeless,
+}
+
+impl ShedReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::DeadlineHopeless => "deadline",
+        }
+    }
+}
+
+/// Admission-control knobs, applied per package.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Most requests that may wait at one package, all classes combined
+    /// (`None` = unbounded). A cap of 0 sheds every arrival — useful as a
+    /// drain switch and as a property-test anchor. Two refinements to the
+    /// bound: a higher-class arrival meeting a full queue *displaces* the
+    /// newest strictly-lower-class queued request instead of being
+    /// refused (priority isolation extends to admission — see
+    /// `cluster::shard`), and a preemption requeues its aborted batch
+    /// even at cap (dropping already-admitted work would be worse), so
+    /// depth can transiently exceed the cap by up to the batcher's max
+    /// batch.
+    pub queue_cap: Option<usize>,
+    /// Enable deadline-aware shedding for classes that allow it.
+    pub shed_late: bool,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_cap: Some(256), shed_late: true }
+    }
+}
+
+impl AdmissionConfig {
+    /// No caps, no shedding: every arrival is admitted (the plain
+    /// `serve::Fleet` behavior).
+    pub fn admit_all() -> Self {
+        AdmissionConfig { queue_cap: None, shed_late: false }
+    }
+
+    /// Decide admission for one arrival routed to a package currently
+    /// holding `queued_depth` requests, with predicted completion
+    /// `eta_cycles` against `deadline_cycles`. `deadline_shed` is the
+    /// arriving request's class policy.
+    ///
+    /// The deadline gate runs *first*: a hopeless request is refused as
+    /// hopeless whatever the queue looks like, so a `QueueFull` verdict
+    /// certifies the request was still viable — the cluster's push-out
+    /// path relies on that to never displace queued work in favor of an
+    /// arrival that would miss its deadline anyway.
+    pub fn admit(
+        &self,
+        queued_depth: usize,
+        eta_cycles: f64,
+        deadline_cycles: f64,
+        deadline_shed: bool,
+    ) -> Result<(), ShedReason> {
+        if self.shed_late && deadline_shed && deadline_cycles.is_finite() && eta_cycles > deadline_cycles
+        {
+            return Err(ShedReason::DeadlineHopeless);
+        }
+        if let Some(cap) = self.queue_cap {
+            if queued_depth >= cap {
+                return Err(ShedReason::QueueFull);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cap_sheds_everything() {
+        let cfg = AdmissionConfig { queue_cap: Some(0), shed_late: false };
+        assert_eq!(cfg.admit(0, 0.0, f64::INFINITY, true), Err(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn uncapped_and_unshed_admits_everything() {
+        let cfg = AdmissionConfig::admit_all();
+        assert!(cfg.admit(usize::MAX - 1, 1e18, 1.0, true).is_ok());
+    }
+
+    #[test]
+    fn cap_binds_at_the_boundary() {
+        let cfg = AdmissionConfig { queue_cap: Some(4), shed_late: false };
+        assert!(cfg.admit(3, 0.0, f64::INFINITY, false).is_ok());
+        assert_eq!(cfg.admit(4, 0.0, f64::INFINITY, false), Err(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn hopeless_beats_queue_full_when_both_apply() {
+        // The deadline gate runs first: a hopeless arrival at a full
+        // queue is refused as hopeless, so QueueFull certifies viability
+        // (the push-out path depends on this ordering).
+        let cfg = AdmissionConfig { queue_cap: Some(0), shed_late: true };
+        assert_eq!(cfg.admit(0, 200.0, 100.0, true), Err(ShedReason::DeadlineHopeless));
+        assert_eq!(cfg.admit(0, 200.0, 100.0, false), Err(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn deadline_shed_respects_class_policy_and_finiteness() {
+        let cfg = AdmissionConfig { queue_cap: None, shed_late: true };
+        // Hopeless and sheddable: refused.
+        assert_eq!(cfg.admit(0, 200.0, 100.0, true), Err(ShedReason::DeadlineHopeless));
+        // Hopeless but the class opted out: admitted.
+        assert!(cfg.admit(0, 200.0, 100.0, false).is_ok());
+        // No deadline at all: admitted.
+        assert!(cfg.admit(0, 200.0, f64::INFINITY, true).is_ok());
+        // Reachable deadline: admitted.
+        assert!(cfg.admit(0, 50.0, 100.0, true).is_ok());
+        // Shedding disabled globally: admitted.
+        let off = AdmissionConfig { queue_cap: None, shed_late: false };
+        assert!(off.admit(0, 200.0, 100.0, true).is_ok());
+    }
+}

@@ -1,0 +1,244 @@
+//! Multi-tenant traffic classes: interactive / batch / best-effort.
+//!
+//! A class bundles everything that distinguishes one tenant population's
+//! traffic from another's *besides* the model being run: its share of the
+//! request stream, how much its SLO deadline is relaxed relative to the
+//! mix entry's base SLO, and whether admission control may shed it for
+//! being hopelessly late. Classes are totally ordered by scheduling
+//! priority — the dispatcher always serves the highest-priority class
+//! with queued work first, and (optionally) preempts a lower-class batch
+//! already on the array when an interactive request would otherwise miss
+//! its deadline.
+//!
+//! Class assignment is a **pure function of `(seed, request id)`** — not
+//! of simulation state — so any sharded layout of the same request stream
+//! tags every request identically. That property is one leg of the
+//! cluster's bit-identical-at-any-thread-count guarantee.
+
+use crate::serve::Request;
+use crate::testutil::Rng;
+
+/// Number of traffic classes (array dimension in the shard engine).
+pub const NUM_CLASSES: usize = 3;
+
+/// A tenant traffic class, ordered by scheduling priority (the derived
+/// `Ord` puts `Interactive` first — highest priority).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TrafficClass {
+    /// Latency-sensitive user-facing traffic: full-strength SLO, may be
+    /// shed when its deadline is already unreachable (a late answer is
+    /// worthless), preempts lower classes when enabled.
+    Interactive,
+    /// Throughput-oriented offline work with a relaxed deadline.
+    Batch,
+    /// Scavenger traffic with no deadline at all; runs whenever nothing
+    /// better is queued.
+    BestEffort,
+}
+
+impl TrafficClass {
+    /// All classes, highest priority first.
+    pub const ALL: [TrafficClass; NUM_CLASSES] =
+        [TrafficClass::Interactive, TrafficClass::Batch, TrafficClass::BestEffort];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrafficClass::Interactive => "interactive",
+            TrafficClass::Batch => "batch",
+            TrafficClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Scheduling priority; 0 is served first.
+    pub fn priority(&self) -> usize {
+        *self as usize
+    }
+
+    /// Dense index for per-class arrays (identical to priority).
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// Per-class traffic configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassSpec {
+    pub class: TrafficClass,
+    /// Relative share of the request stream (need not sum to 1).
+    pub weight: f64,
+    /// Multiplier on the mix entry's SLO window. `f64::INFINITY` removes
+    /// the deadline entirely (best-effort).
+    pub slo_scale: f64,
+    /// Whether deadline-aware load shedding may refuse this class's
+    /// arrivals when their predicted completion already misses the
+    /// deadline.
+    pub deadline_shed: bool,
+}
+
+/// The tenant population: class weights and per-class SLO handling.
+#[derive(Debug, Clone)]
+pub struct ClassMix {
+    specs: Vec<ClassSpec>,
+}
+
+impl Default for ClassMix {
+    /// A production-flavored default: half the stream is interactive at
+    /// the mix SLO, 30% is batch at a 4x-relaxed deadline, the rest is
+    /// deadline-free best-effort filler.
+    fn default() -> Self {
+        ClassMix::new(vec![
+            ClassSpec { class: TrafficClass::Interactive, weight: 0.5, slo_scale: 1.0, deadline_shed: true },
+            ClassSpec { class: TrafficClass::Batch, weight: 0.3, slo_scale: 4.0, deadline_shed: false },
+            ClassSpec {
+                class: TrafficClass::BestEffort,
+                weight: 0.2,
+                slo_scale: f64::INFINITY,
+                deadline_shed: false,
+            },
+        ])
+    }
+}
+
+impl ClassMix {
+    pub fn new(specs: Vec<ClassSpec>) -> Self {
+        assert!(!specs.is_empty(), "class mix needs at least one class");
+        assert!(specs.iter().all(|s| s.weight > 0.0 && s.slo_scale >= 1.0));
+        let mut seen = [false; NUM_CLASSES];
+        for s in &specs {
+            assert!(!seen[s.class.index()], "duplicate class {}", s.class.label());
+            seen[s.class.index()] = true;
+        }
+        ClassMix { specs }
+    }
+
+    /// A single-class population (used by tests and the single-tenant
+    /// compatibility path).
+    pub fn single(class: TrafficClass, slo_scale: f64, deadline_shed: bool) -> Self {
+        ClassMix::new(vec![ClassSpec { class, weight: 1.0, slo_scale, deadline_shed }])
+    }
+
+    pub fn specs(&self) -> &[ClassSpec] {
+        &self.specs
+    }
+
+    /// The spec for `class`, if this population carries that class.
+    pub fn spec_for(&self, class: TrafficClass) -> Option<&ClassSpec> {
+        self.specs.iter().find(|s| s.class == class)
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.specs.iter().map(|s| s.weight).sum()
+    }
+
+    /// Assign a class to request `req_id` — a pure function of
+    /// `(seed, req_id)`, independent of any simulation state (see the
+    /// module docs for why that matters).
+    pub fn assign(&self, seed: u64, req_id: u64) -> &ClassSpec {
+        // One SplitMix64 draw keyed by (seed, id): SplitMix is an
+        // avalanche permutation, so consecutive ids decorrelate fully.
+        let mut rng = Rng::new(seed ^ req_id.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut u = rng.next_f32() as f64 * self.total_weight();
+        for s in &self.specs {
+            if u < s.weight {
+                return s;
+            }
+            u -= s.weight;
+        }
+        self.specs.last().unwrap()
+    }
+
+    /// Tag `req` with its class and stretch its deadline by the class's
+    /// SLO scale. Returns the assigned class.
+    pub fn classify(&self, seed: u64, req: &mut Request) -> TrafficClass {
+        let spec = self.assign(seed, req.id);
+        // An infinite scale removes the deadline outright — computed as
+        // `window * INFINITY` it would turn a zero window into a NaN
+        // deadline, which the EDF comparators must never see.
+        req.deadline = if spec.slo_scale.is_finite() {
+            let window = req.deadline - req.arrival;
+            req.arrival + window * spec.slo_scale
+        } else {
+            f64::INFINITY
+        };
+        spec.class
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ModelKind;
+
+    fn req(id: u64) -> Request {
+        Request { id, kind: ModelKind::TinyCnn, arrival: 1000.0, deadline: 2000.0, client: None }
+    }
+
+    #[test]
+    fn priority_order_is_interactive_first() {
+        assert!(TrafficClass::Interactive < TrafficClass::Batch);
+        assert!(TrafficClass::Batch < TrafficClass::BestEffort);
+        assert_eq!(TrafficClass::Interactive.priority(), 0);
+        assert_eq!(TrafficClass::ALL[0], TrafficClass::Interactive);
+    }
+
+    #[test]
+    fn assignment_is_deterministic_in_seed_and_id() {
+        let mix = ClassMix::default();
+        for id in 0..200 {
+            assert_eq!(mix.assign(7, id).class, mix.assign(7, id).class);
+        }
+        // A different seed produces a different tagging somewhere.
+        let differs = (0..200).any(|id| mix.assign(7, id).class != mix.assign(8, id).class);
+        assert!(differs, "seed must steer the class assignment");
+    }
+
+    #[test]
+    fn assignment_respects_weights() {
+        let mix = ClassMix::default();
+        let n = 8000u64;
+        let mut counts = [0u64; NUM_CLASSES];
+        for id in 0..n {
+            counts[mix.assign(42, id).class.index()] += 1;
+        }
+        let frac = |c: usize| counts[c] as f64 / n as f64;
+        assert!((frac(0) - 0.5).abs() < 0.05, "interactive {:.2}", frac(0));
+        assert!((frac(1) - 0.3).abs() < 0.05, "batch {:.2}", frac(1));
+        assert!((frac(2) - 0.2).abs() < 0.05, "best-effort {:.2}", frac(2));
+    }
+
+    #[test]
+    fn classify_scales_the_deadline() {
+        let mix = ClassMix::single(TrafficClass::Batch, 4.0, false);
+        let mut r = req(3);
+        let class = mix.classify(1, &mut r);
+        assert_eq!(class, TrafficClass::Batch);
+        assert!((r.deadline - (1000.0 + 4.0 * 1000.0)).abs() < 1e-9);
+
+        let free = ClassMix::single(TrafficClass::BestEffort, f64::INFINITY, false);
+        let mut r = req(4);
+        free.classify(1, &mut r);
+        assert!(r.deadline.is_infinite(), "best-effort carries no deadline");
+
+        // A zero SLO window with an infinite scale must yield an infinite
+        // deadline, not the NaN that 0 * INFINITY would produce (NaN
+        // deadlines panic the EDF comparators).
+        let mut zero = Request {
+            id: 5,
+            kind: ModelKind::TinyCnn,
+            arrival: 1000.0,
+            deadline: 1000.0,
+            client: None,
+        };
+        free.classify(1, &mut zero);
+        assert!(zero.deadline.is_infinite());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate class")]
+    fn duplicate_classes_are_rejected() {
+        ClassMix::new(vec![
+            ClassSpec { class: TrafficClass::Batch, weight: 1.0, slo_scale: 1.0, deadline_shed: false },
+            ClassSpec { class: TrafficClass::Batch, weight: 1.0, slo_scale: 2.0, deadline_shed: false },
+        ]);
+    }
+}

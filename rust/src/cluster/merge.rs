@@ -1,0 +1,266 @@
+//! Deterministic merge of per-shard event streams into cluster stats.
+//!
+//! Shards emit chronologically ordered completion/shed streams that are
+//! independent of the worker-thread count (`cluster::shard`). This module
+//! interleaves them into one global stream ordered by
+//! `(cycle, shard id, emission index)` — exactly the order a
+//! single-threaded simulation of the whole cluster would produce, with
+//! the shard id as the total tie-break — and folds it into
+//! [`ClusterStats`]. Because both the inputs and the merge order are
+//! thread-count-independent, a fixed RNG seed yields **bit-identical**
+//! stats (and stats JSON) at any thread count; `wienna cluster
+//! --stats-json` + the CI determinism gate diff exactly this output.
+
+use super::admission::ShedReason;
+use super::class::TrafficClass;
+use super::shard::{ShardEventOutcome, ShardOutcome};
+use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
+use std::collections::BTreeMap;
+
+/// Cluster-wide serving statistics: the fleet-level [`ServeStats`] plus
+/// per-class SLO accounting and the admission/preemption counters.
+#[derive(Debug, Default)]
+pub struct ClusterStats {
+    /// Fleet-level aggregates (latency percentiles, goodput, sheds, batch
+    /// histogram) over the merged event stream.
+    pub serve: ServeStats,
+    /// Per-traffic-class accounting, priority order.
+    pub per_class: BTreeMap<TrafficClass, ModelStats>,
+    /// Batches aborted by priority preemption.
+    pub preemptions: u64,
+    /// Arrivals refused because the target package's queue was at cap.
+    pub shed_queue_full: u64,
+    /// Arrivals refused by deadline-aware load shedding.
+    pub shed_deadline: u64,
+    /// Shards the run was partitioned into (thread count is deliberately
+    /// *not* recorded here — stats must not depend on it).
+    pub shards: usize,
+    /// Final per-package accounting, shard-major deterministic order.
+    pub packages: Vec<Package>,
+    /// Shard-local cost-cache totals (hits, misses).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ClusterStats {
+    pub(crate) fn new(shards: usize) -> Self {
+        ClusterStats { shards, ..Default::default() }
+    }
+
+    /// Record one classified arrival at cluster ingress.
+    pub(crate) fn record_ingress(&mut self, req: &Request, class: TrafficClass) {
+        self.serve.record_arrival(req);
+        self.per_class.entry(class).or_default().arrived += 1;
+    }
+
+    /// Latency percentile of one class, in milliseconds (`NaN` when the
+    /// class completed nothing).
+    pub fn class_latency_ms(&self, class: TrafficClass, p: f64) -> f64 {
+        self.per_class.get(&class).map_or(f64::NAN, |m| cycles_to_ms(m.latency.percentile(p)))
+    }
+
+    /// Per-class SLO violation rate (0 when nothing completed).
+    pub fn class_violation_rate(&self, class: TrafficClass) -> f64 {
+        self.per_class.get(&class).map_or(0.0, |m| {
+            if m.completed == 0 {
+                0.0
+            } else {
+                m.slo_violated as f64 / m.completed as f64
+            }
+        })
+    }
+
+    /// Machine-readable summary. Deterministic field order; floats are
+    /// printed with Rust's shortest-round-trip formatting, so two JSON
+    /// dumps are byte-identical iff the underlying stats are bit-identical
+    /// (the CI determinism gate diffs this across thread counts).
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"shards\": {},\n", self.shards));
+        s.push_str(&format!("  \"arrived\": {},\n", self.serve.arrived()));
+        s.push_str(&format!("  \"completed\": {},\n", self.serve.completed()));
+        s.push_str(&format!("  \"shed\": {},\n", self.serve.shed()));
+        s.push_str(&format!("  \"shed_queue_full\": {},\n", self.shed_queue_full));
+        s.push_str(&format!("  \"shed_deadline\": {},\n", self.shed_deadline));
+        s.push_str(&format!("  \"preemptions\": {},\n", self.preemptions));
+        s.push_str(&format!("  \"dispatches\": {},\n", self.serve.dispatches()));
+        s.push_str(&format!("  \"mean_batch\": {},\n", num(self.serve.mean_batch())));
+        s.push_str(&format!("  \"end_cycle\": {},\n", num(self.serve.end_cycle())));
+        for p in [50.0, 95.0, 99.0] {
+            s.push_str(&format!("  \"p{p:.0}_ms\": {},\n", num(self.serve.latency_ms(p))));
+        }
+        s.push_str(&format!("  \"violation_rate\": {},\n", num(self.serve.violation_rate())));
+        s.push_str("  \"per_class\": [\n");
+        let n = self.per_class.len();
+        for (i, (class, m)) in self.per_class.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}}}{}\n",
+                class.label(),
+                m.arrived,
+                m.completed,
+                m.shed,
+                m.slo_met,
+                m.slo_violated,
+                num(cycles_to_ms(m.latency.percentile(50.0))),
+                num(cycles_to_ms(m.latency.percentile(99.0))),
+                if i + 1 < n { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Fold per-shard outcomes into `stats` via the deterministic k-way merge
+/// (see module docs for the ordering contract).
+pub(crate) fn merge_into(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>) {
+    debug_assert!(
+        outcomes.iter().enumerate().all(|(i, o)| o.shard_id == i),
+        "outcomes arrive in shard order (cost::par preserves input order)"
+    );
+
+    // Dispatch histograms, package accounting and counters merge by
+    // shard id — plain sums, order-insensitive but kept deterministic.
+    let mut end_cycle = 0.0f64;
+    for o in &outcomes {
+        stats.preemptions += o.preemptions;
+        stats.cache_hits += o.cache_hits;
+        stats.cache_misses += o.cache_misses;
+        end_cycle = end_cycle.max(o.end_cycle);
+        for (&batch, &n) in &o.dispatch_hist {
+            stats.serve.record_dispatches(batch, n);
+        }
+    }
+
+    // K-way merge of the event streams by (cycle, shard id); within a
+    // shard the stream is already chronological, so per-shard cursors
+    // suffice. Ties across shards resolve to the lower shard id.
+    let mut cursors = vec![0usize; outcomes.len()];
+    loop {
+        let mut best: Option<(f64, usize)> = None;
+        for (s, o) in outcomes.iter().enumerate() {
+            if cursors[s] < o.events.len() {
+                let c = o.events[cursors[s]].cycle;
+                let better = match best {
+                    None => true,
+                    Some((bc, _)) => c < bc,
+                };
+                if better {
+                    best = Some((c, s));
+                }
+            }
+        }
+        let Some((_, s)) = best else {
+            break;
+        };
+        let ev = &outcomes[s].events[cursors[s]];
+        cursors[s] += 1;
+        let m = stats.per_class.entry(ev.class).or_default();
+        match ev.outcome {
+            ShardEventOutcome::Completed => {
+                m.record_completion(&ev.req, ev.cycle);
+                stats.serve.record_completion(&ev.req, ev.cycle);
+            }
+            ShardEventOutcome::Shed(reason) => {
+                m.shed += 1;
+                match reason {
+                    ShedReason::QueueFull => stats.shed_queue_full += 1,
+                    ShedReason::DeadlineHopeless => stats.shed_deadline += 1,
+                }
+                stats.serve.record_shed(&ev.req);
+            }
+        }
+    }
+
+    for o in outcomes {
+        stats.packages.extend(o.packages);
+    }
+    stats.serve.finish(end_cycle);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ModelKind;
+    use std::collections::BTreeMap;
+
+    fn req(id: u64, arrival: f64, slo: f64) -> Request {
+        Request { id, kind: ModelKind::TinyCnn, arrival, deadline: arrival + slo, client: None }
+    }
+
+    fn completion(cycle: f64, id: u64, class: TrafficClass) -> super::super::shard::ShardEvent {
+        super::super::shard::ShardEvent {
+            cycle,
+            outcome: ShardEventOutcome::Completed,
+            class,
+            req: req(id, 0.0, 1e9),
+        }
+    }
+
+    fn outcome(shard_id: usize, events: Vec<super::super::shard::ShardEvent>) -> ShardOutcome {
+        ShardOutcome {
+            shard_id,
+            events,
+            dispatch_hist: BTreeMap::new(),
+            preemptions: 0,
+            packages: Vec::new(),
+            end_cycle: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    #[test]
+    fn merge_orders_by_cycle_then_shard() {
+        let a = outcome(
+            0,
+            vec![
+                completion(10.0, 0, TrafficClass::Interactive),
+                completion(30.0, 1, TrafficClass::Interactive),
+            ],
+        );
+        let b = outcome(
+            1,
+            vec![
+                completion(10.0, 2, TrafficClass::Batch),
+                completion(20.0, 3, TrafficClass::Batch),
+            ],
+        );
+        let mut stats = ClusterStats::new(2);
+        for e in a.events.iter().chain(b.events.iter()) {
+            stats.record_ingress(&e.req, e.class);
+        }
+        merge_into(&mut stats, vec![a, b]);
+        assert_eq!(stats.serve.completed(), 4);
+        assert_eq!(stats.per_class[&TrafficClass::Interactive].completed, 2);
+        assert_eq!(stats.per_class[&TrafficClass::Batch].completed, 2);
+        // The cycle-10 tie resolves to shard 0 first, then shard 1, then
+        // strictly by cycle — the recorder saw (10, 10, 20, 30).
+        assert_eq!(stats.serve.latency_ms(100.0), cycles_to_ms(30.0));
+    }
+
+    #[test]
+    fn json_is_deterministic_and_balanced() {
+        let a = outcome(0, vec![completion(5.0, 0, TrafficClass::Interactive)]);
+        let mut s1 = ClusterStats::new(1);
+        s1.record_ingress(&a.events[0].req, TrafficClass::Interactive);
+        merge_into(&mut s1, vec![a]);
+        let b = outcome(0, vec![completion(5.0, 0, TrafficClass::Interactive)]);
+        let mut s2 = ClusterStats::new(1);
+        s2.record_ingress(&b.events[0].req, TrafficClass::Interactive);
+        merge_into(&mut s2, vec![b]);
+        assert_eq!(s1.to_json(), s2.to_json());
+        let j = s1.to_json();
+        assert!(j.contains("\"arrived\": 1"));
+        assert!(j.contains("\"completed\": 1"));
+        assert!(j.contains("\"class\": \"interactive\""));
+        assert!(!j.contains(",\n  ]"), "no trailing comma before array close");
+    }
+}

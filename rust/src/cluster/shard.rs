@@ -1,0 +1,532 @@
+//! The per-shard serving engine: a class-aware discrete-event loop over
+//! one slice of the cluster's packages.
+//!
+//! A shard receives its arrivals **pre-routed and pre-classified** by the
+//! cluster ingress (`cluster::Cluster::run`), so its simulation depends
+//! only on that input slice — never on scheduling, other shards, or the
+//! worker-thread count. Shards therefore run embarrassingly parallel
+//! under `cost::par` and still produce bit-identical event streams at any
+//! thread count; `cluster::merge` interleaves the streams afterwards.
+//!
+//! Inside a shard the loop mirrors `serve::Fleet::run`, extended with the
+//! multi-tenant machinery:
+//!
+//! * one [`QueueSet`] per `(package, traffic class)` — strict priority
+//!   across classes, EDF across models within a class, FIFO within a
+//!   model;
+//! * per-package admission control at routing time
+//!   (`cluster::admission`): queue caps and deadline-aware shedding;
+//! * optional preemption: an arriving higher-class request whose deadline
+//!   cannot survive waiting for the in-flight lower-class batch aborts
+//!   that batch (`Package::preempt_batch`) and sends its requests back to
+//!   the front of their queue.
+
+use super::admission::ShedReason;
+use super::class::{TrafficClass, NUM_CLASSES};
+use super::ClusterConfig;
+use crate::serve::{choose_batch, CostCache, ModelKind, Package, PackageSpec, QueueSet, Request, RoutePolicy};
+use std::collections::BTreeMap;
+
+/// One ingress-classified request bound for a shard.
+#[derive(Debug, Clone)]
+pub(crate) struct ClassedRequest {
+    pub req: Request,
+    pub class: TrafficClass,
+}
+
+/// What happened to a request inside the shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ShardEventOutcome {
+    Completed,
+    Shed(ShedReason),
+}
+
+/// One emitted event, in shard-chronological order.
+#[derive(Debug, Clone)]
+pub(crate) struct ShardEvent {
+    pub cycle: f64,
+    pub outcome: ShardEventOutcome,
+    pub class: TrafficClass,
+    pub req: Request,
+}
+
+/// Everything a finished shard hands back for the deterministic merge.
+#[derive(Debug)]
+pub(crate) struct ShardOutcome {
+    pub shard_id: usize,
+    /// Completion and shed events, chronological within the shard.
+    pub events: Vec<ShardEvent>,
+    /// Dispatched-batch-size histogram.
+    pub dispatch_hist: BTreeMap<u64, u64>,
+    pub preemptions: u64,
+    /// Final package state (utilization accounting), shard-local order.
+    pub packages: Vec<Package>,
+    pub end_cycle: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+struct ShardSim<'a> {
+    cfg: &'a ClusterConfig,
+    packages: Vec<Package>,
+    /// Admission queues, indexed `[package][class]`.
+    queues: Vec<Vec<QueueSet>>,
+    /// Batch-1 backlog estimate per `[package][class]`, for load-aware
+    /// routing and priority-aware completion estimates.
+    backlog: Vec<[f64; NUM_CLASSES]>,
+    /// Class of each package's in-flight batch.
+    inflight_class: Vec<Option<TrafficClass>>,
+    cache: CostCache,
+    rr_cursor: usize,
+    events: Vec<ShardEvent>,
+    dispatch_hist: BTreeMap<u64, u64>,
+    preemptions: u64,
+}
+
+impl<'a> ShardSim<'a> {
+    fn new(specs: Vec<PackageSpec>, cfg: &'a ClusterConfig) -> Self {
+        assert!(!specs.is_empty(), "a shard needs at least one package");
+        let n = specs.len();
+        ShardSim {
+            cfg,
+            packages: specs.into_iter().map(Package::new).collect(),
+            queues: (0..n).map(|_| (0..NUM_CLASSES).map(|_| QueueSet::new()).collect()).collect(),
+            backlog: vec![[0.0; NUM_CLASSES]; n],
+            inflight_class: vec![None; n],
+            cache: CostCache::new(),
+            rr_cursor: 0,
+            events: Vec::new(),
+            dispatch_hist: BTreeMap::new(),
+            preemptions: 0,
+        }
+    }
+
+    /// Memoized batch-1 service estimate of `kind` on package `i`.
+    fn est1(&mut self, i: usize, kind: ModelKind) -> f64 {
+        self.cache
+            .get(
+                &self.packages[i].engine,
+                self.packages[i].spec.dp,
+                kind,
+                1,
+                self.packages[i].spec.local_buffer_bytes,
+            )
+            .latency
+    }
+
+    fn queued_total(&self, i: usize) -> usize {
+        self.queues[i].iter().map(|q| q.depth_total()).sum()
+    }
+
+    /// All pending work on package `i`: busy remainder plus every class's
+    /// batch-1 backlog estimate.
+    fn load(&self, i: usize, now: f64) -> f64 {
+        let busy_rem = (self.packages[i].busy_until() - now).max(0.0);
+        busy_rem + self.backlog[i].iter().sum::<f64>()
+    }
+
+    /// Estimated wait-plus-service for a `class` arrival of `kind` on
+    /// package `i`: the busy remainder, the backlog of classes at the
+    /// same or higher priority (lower classes will be bypassed), and its
+    /// own batch-1 service time.
+    fn eta_wait(&mut self, i: usize, class: TrafficClass, kind: ModelKind, now: f64) -> f64 {
+        let service1 = self.est1(i, kind);
+        let busy_rem = (self.packages[i].busy_until() - now).max(0.0);
+        let ahead: f64 = self.backlog[i][..=class.index()].iter().sum();
+        busy_rem + ahead + service1
+    }
+
+    /// Preemption-aware completion estimate — THE estimate both EDF
+    /// routing and admission use, so they cannot disagree: when the
+    /// in-flight batch is strictly lower class and preemption is on, the
+    /// arrival would not wait for it, so its busy remainder leaves the
+    /// estimate. (Deadline shedding must not refuse — nor routing steer
+    /// away from — a request that preemption can still rescue.)
+    fn completion_eta(&mut self, i: usize, class: TrafficClass, kind: ModelKind, now: f64) -> f64 {
+        let mut wait = self.eta_wait(i, class, kind, now);
+        let can_preempt = self.cfg.preemption
+            && self.inflight_class[i].is_some_and(|v| v.priority() > class.priority());
+        if can_preempt {
+            wait -= (self.packages[i].busy_until() - now).max(0.0);
+        }
+        now + wait
+    }
+
+    /// Pick the target package for one arrival under the route policy.
+    fn route(&mut self, now: f64, kind: ModelKind, class: TrafficClass) -> usize {
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.rr_cursor % self.packages.len();
+                self.rr_cursor += 1;
+                i
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                for i in 1..self.packages.len() {
+                    if self.load(i, now) < self.load(best, now) {
+                        best = i;
+                    }
+                }
+                best
+            }
+            RoutePolicy::EarliestDeadline => {
+                let mut best = 0;
+                let mut best_eta = f64::INFINITY;
+                for i in 0..self.packages.len() {
+                    let eta = self.completion_eta(i, class, kind, now);
+                    if eta < best_eta {
+                        best_eta = eta;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route one arrival, apply admission control, enqueue or shed, and
+    /// run the preemption check.
+    fn admit(&mut self, now: f64, req: Request, class: TrafficClass) {
+        let kind = req.kind;
+        let idx = self.route(now, kind, class);
+        let service1 = self.est1(idx, kind);
+        let eta = self.completion_eta(idx, class, kind, now);
+        let depth = self.queued_total(idx);
+        let deadline_shed =
+            self.cfg.classes.spec_for(class).map_or(false, |s| s.deadline_shed);
+        match self.cfg.admission.admit(depth, eta, req.deadline, deadline_shed) {
+            Err(ShedReason::QueueFull) if self.push_out_lowest(idx, class, now) => {
+                // A strictly-lower-class queued request was displaced to
+                // make room: priority isolation extends to admission, so
+                // scavenger backlog can never crowd a full queue against
+                // higher-class arrivals.
+                let deadline = req.deadline;
+                self.backlog[idx][class.index()] += service1;
+                self.queues[idx][class.index()].push(req);
+                self.maybe_preempt(idx, class, deadline, now);
+            }
+            Err(reason) => {
+                self.events.push(ShardEvent {
+                    cycle: now,
+                    outcome: ShardEventOutcome::Shed(reason),
+                    class,
+                    req,
+                });
+            }
+            Ok(()) => {
+                let deadline = req.deadline;
+                self.backlog[idx][class.index()] += service1;
+                self.queues[idx][class.index()].push(req);
+                self.maybe_preempt(idx, class, deadline, now);
+            }
+        }
+    }
+
+    /// Push-out on a full queue: shed the *newest* queued request of the
+    /// lowest class strictly below `class` on package `idx`, freeing its
+    /// slot. Returns whether a victim was found (same-or-higher-class
+    /// occupants are never displaced — FIFO fairness within a priority
+    /// level stays intact).
+    fn push_out_lowest(&mut self, idx: usize, class: TrafficClass, now: f64) -> bool {
+        for victim_class in TrafficClass::ALL.iter().rev() {
+            if victim_class.priority() <= class.priority() {
+                return false;
+            }
+            let ci = victim_class.index();
+            if let Some(victim) = self.queues[idx][ci].pop_newest() {
+                let v1 = self.est1(idx, victim.kind);
+                self.backlog[idx][ci] = (self.backlog[idx][ci] - v1).max(0.0);
+                self.events.push(ShardEvent {
+                    cycle: now,
+                    outcome: ShardEventOutcome::Shed(ShedReason::QueueFull),
+                    class: *victim_class,
+                    req: victim,
+                });
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Abort the in-flight batch on `idx` when a just-queued higher-class
+    /// request cannot survive waiting for it. The preempted requests go
+    /// back to the *front* of their class queue (they keep their original
+    /// deadlines); the cycles the aborted batch already burnt stay
+    /// counted as busy — preemption has a real cost.
+    fn maybe_preempt(&mut self, idx: usize, class: TrafficClass, deadline: f64, now: f64) {
+        if !self.cfg.preemption || !deadline.is_finite() {
+            return;
+        }
+        let Some(victim) = self.inflight_class[idx] else {
+            return;
+        };
+        if victim.priority() <= class.priority() {
+            return; // only ever preempt strictly lower-priority work
+        }
+        if now >= self.packages[idx].busy_until() {
+            // The batch completes at this very cycle (arrival/completion
+            // tie): preempting would discard fully-finished work and
+            // re-serve it. Let the completion fire.
+            return;
+        }
+        // Completion estimate if the batch is NOT preempted: batch end,
+        // then everything queued at the same or higher priority — the
+        // request itself included (its service1 is already in the
+        // backlog). Must mirror the admission ETA, which admitted this
+        // request assuming a preemption would rescue it; a looser check
+        // here would admit-then-neither-preempt-nor-meet.
+        let pending: f64 = self.backlog[idx][..=class.index()].iter().sum();
+        if self.packages[idx].busy_until() + pending <= deadline {
+            return; // waiting still meets the deadline: don't waste work
+        }
+        if now + pending > deadline {
+            // Hopeless even with an immediate preemption (possible for
+            // classes admission does not deadline-shed): aborting the
+            // victim batch would burn its work for nothing.
+            return;
+        }
+        let reqs = self.packages[idx].preempt_batch(now);
+        let vkind = reqs[0].kind;
+        let v1 = self.est1(idx, vkind);
+        self.backlog[idx][victim.index()] += v1 * reqs.len() as f64;
+        self.queues[idx][victim.index()].requeue_front(reqs);
+        self.inflight_class[idx] = None;
+        self.preemptions += 1;
+    }
+
+    /// Dispatch one batch on idle package `i`: strict class priority,
+    /// then EDF across that class's model queues.
+    fn try_dispatch(&mut self, i: usize, now: f64) {
+        debug_assert!(self.packages[i].is_idle());
+        for class in TrafficClass::ALL {
+            let ci = class.index();
+            if self.queues[i][ci].is_empty() {
+                continue;
+            }
+            let kind = self.queues[i][ci].edf_kind().expect("non-empty queue has an EDF head");
+            let depth = self.queues[i][ci].depth(kind) as u64;
+            let head_deadline =
+                self.queues[i][ci].head_deadline(kind).expect("EDF head has a deadline");
+            let decision = choose_batch(
+                &self.cfg.batcher,
+                &mut self.cache,
+                &self.packages[i].engine,
+                self.packages[i].spec.dp,
+                kind,
+                depth,
+                now,
+                head_deadline,
+                self.packages[i].spec.local_buffer_bytes,
+            );
+            let est1 = self.est1(i, kind);
+            let reqs = self.queues[i][ci].pop_batch(kind, decision.batch as usize);
+            debug_assert_eq!(reqs.len(), decision.batch as usize);
+            self.backlog[i][ci] = (self.backlog[i][ci] - est1 * reqs.len() as f64).max(0.0);
+            self.packages[i].begin_batch(now, &decision, reqs);
+            self.inflight_class[i] = Some(class);
+            *self.dispatch_hist.entry(decision.batch).or_insert(0) += 1;
+            return;
+        }
+    }
+
+    /// Complete the in-flight batch on `i`, emitting completion events.
+    fn complete(&mut self, i: usize) {
+        let class = self.inflight_class[i].take().expect("completing package has a batch class");
+        let (t, reqs) = self.packages[i].finish_batch();
+        for req in reqs {
+            self.events.push(ShardEvent { cycle: t, outcome: ShardEventOutcome::Completed, class, req });
+        }
+    }
+
+    /// The event loop: admit arrivals in input order, then drain.
+    fn run(mut self, shard_id: usize, arrivals: &[ClassedRequest]) -> ShardOutcome {
+        let mut now = 0.0f64;
+        let mut cursor = 0usize;
+        loop {
+            for i in 0..self.packages.len() {
+                if self.packages[i].is_idle() && self.queued_total(i) > 0 {
+                    self.try_dispatch(i, now);
+                }
+            }
+
+            let next_arrival = arrivals.get(cursor).map(|a| a.req.arrival);
+            let mut next_completion = f64::INFINITY;
+            let mut completing = usize::MAX;
+            for (i, p) in self.packages.iter().enumerate() {
+                if !p.is_idle() && p.busy_until() < next_completion {
+                    next_completion = p.busy_until();
+                    completing = i;
+                }
+            }
+
+            match next_arrival {
+                Some(t) if t <= next_completion => {
+                    now = now.max(t);
+                    let a = arrivals[cursor].clone();
+                    cursor += 1;
+                    self.admit(now, a.req, a.class);
+                }
+                _ if completing != usize::MAX => {
+                    now = now.max(next_completion);
+                    self.complete(completing);
+                }
+                _ => break,
+            }
+        }
+        debug_assert!((0..self.packages.len()).all(|i| self.queued_total(i) == 0));
+        ShardOutcome {
+            shard_id,
+            events: self.events,
+            dispatch_hist: self.dispatch_hist,
+            preemptions: self.preemptions,
+            packages: self.packages,
+            end_cycle: now,
+            cache_hits: self.cache.hits,
+            cache_misses: self.cache.misses,
+        }
+    }
+}
+
+/// Run one shard to completion over its classified arrival slice.
+pub(crate) fn run_shard(
+    shard_id: usize,
+    specs: Vec<PackageSpec>,
+    arrivals: &[ClassedRequest],
+    cfg: &ClusterConfig,
+) -> ShardOutcome {
+    ShardSim::new(specs, cfg).run(shard_id, arrivals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignPoint;
+    use crate::serve::{ms_to_cycles, ModelKind};
+
+    fn arrival(id: u64, at_ms: f64, slo_ms: f64, class: TrafficClass) -> ClassedRequest {
+        let arrival = ms_to_cycles(at_ms);
+        ClassedRequest {
+            req: Request {
+                id,
+                kind: ModelKind::TinyCnn,
+                arrival,
+                deadline: arrival + ms_to_cycles(slo_ms),
+                client: None,
+            },
+            class,
+        }
+    }
+
+    fn outcome_of(cfg: &ClusterConfig, arrivals: &[ClassedRequest]) -> ShardOutcome {
+        run_shard(0, vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], arrivals, cfg)
+    }
+
+    #[test]
+    fn drains_everything_and_balances() {
+        let cfg = ClusterConfig { admission: super::super::AdmissionConfig::admit_all(), ..Default::default() };
+        let arrivals: Vec<ClassedRequest> = (0..40)
+            .map(|i| arrival(i, 0.01 * i as f64, 50.0, TrafficClass::ALL[(i % 3) as usize]))
+            .collect();
+        let out = outcome_of(&cfg, &arrivals);
+        let completed =
+            out.events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+        assert_eq!(completed, 40, "everything admitted completes");
+        assert!(out.end_cycle > 0.0);
+        // Events are chronological — the merge relies on this.
+        assert!(out.events.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+    }
+
+    #[test]
+    fn zero_cap_sheds_every_arrival() {
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig { queue_cap: Some(0), shed_late: false },
+            ..Default::default()
+        };
+        let arrivals: Vec<ClassedRequest> =
+            (0..10).map(|i| arrival(i, 0.01 * i as f64, 50.0, TrafficClass::Interactive)).collect();
+        let out = outcome_of(&cfg, &arrivals);
+        assert!(out
+            .events
+            .iter()
+            .all(|e| e.outcome == ShardEventOutcome::Shed(ShedReason::QueueFull)));
+        assert_eq!(out.events.len(), 10);
+        assert_eq!(out.dispatch_hist.len(), 0, "nothing admitted, nothing dispatched");
+    }
+
+    #[test]
+    fn full_queue_pushes_out_lower_class_instead_of_shedding_interactive() {
+        // Queue cap 2, no deadline shedding, no preemption. Four
+        // best-effort arrivals fill (and overflow) the queue, then an
+        // interactive arrival hits the full queue: the newest queued
+        // best-effort request must be pushed out in its favor.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig { queue_cap: Some(2), shed_late: false },
+            preemption: false,
+            ..Default::default()
+        };
+        let mut arrivals: Vec<ClassedRequest> =
+            (0..4).map(|i| arrival(i, 0.0, 1000.0, TrafficClass::BestEffort)).collect();
+        arrivals.push(arrival(4, 0.0, 1000.0, TrafficClass::Interactive));
+        let out = outcome_of(&cfg, &arrivals);
+        let shed: Vec<(u64, TrafficClass)> = out
+            .events
+            .iter()
+            .filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_)))
+            .map(|e| (e.req.id, e.class))
+            .collect();
+        // BE id 3 was refused outright (full queue, no lower class to
+        // displace); BE id 2 — the newest queued — was pushed out by the
+        // interactive arrival. The interactive request itself completes.
+        assert_eq!(shed, vec![(3, TrafficClass::BestEffort), (2, TrafficClass::BestEffort)]);
+        let completed: Vec<u64> = out
+            .events
+            .iter()
+            .filter(|e| e.outcome == ShardEventOutcome::Completed)
+            .map(|e| e.req.id)
+            .collect();
+        assert!(completed.contains(&4), "interactive request must be served, got {completed:?}");
+        assert_eq!(completed.len(), 3);
+    }
+
+    #[test]
+    fn preemption_aborts_a_lower_class_batch() {
+        // A best-effort backlog starts first; an interactive request whose
+        // deadline cannot survive waiting for the in-flight batch — but
+        // IS reachable after a preemption — lands mid-batch and must
+        // preempt it, *under the default admission config* (deadline
+        // shedding on): the shed estimate must account for preemption or
+        // it would drop the request before the preemption check runs.
+        // Timings derive from the actual batch-1 latency L1 so the
+        // scenario is robust to cost-model changes: the interactive
+        // request arrives at 0.05*L1 with a 1.5*L1 window, so waiting
+        // (batch end at L1 + own L1 = 2*L1) misses the deadline at
+        // 1.55*L1 while preempt-now (0.05*L1 + L1) meets it.
+        let spec = PackageSpec::new("p0", DesignPoint::WIENNA_C);
+        let engine = crate::cost::CostEngine::for_design_point(&spec.sys, spec.dp);
+        let l1 = crate::serve::CostCache::new()
+            .get(&engine, spec.dp, ModelKind::TinyCnn, 1, spec.local_buffer_bytes)
+            .latency;
+        let l1_ms = crate::serve::cycles_to_ms(l1);
+        let cfg = ClusterConfig { preemption: true, ..Default::default() };
+        let mut arrivals: Vec<ClassedRequest> =
+            (0..16).map(|i| arrival(i, 0.0, 1000.0 * l1_ms, TrafficClass::BestEffort)).collect();
+        arrivals.push(arrival(16, 0.05 * l1_ms, 1.5 * l1_ms, TrafficClass::Interactive));
+        let out = outcome_of(&cfg, &arrivals);
+        assert!(out.preemptions >= 1, "interactive arrival should preempt");
+        // Everything still completes (preempted work is requeued, and the
+        // rescued interactive request was admitted, not shed).
+        let completed =
+            out.events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+        assert_eq!(completed, 17);
+
+        // Same scenario with preemption off: no preemptions, and the
+        // interactive request is now hopeless, so deadline shedding
+        // (default-on) refuses it instead.
+        let no = ClusterConfig { preemption: false, ..cfg };
+        let out = outcome_of(&no, &arrivals);
+        assert_eq!(out.preemptions, 0);
+        let shed =
+            out.events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
+        assert_eq!(shed, 1, "without preemption the interactive arrival is shed as hopeless");
+    }
+}

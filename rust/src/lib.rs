@@ -27,10 +27,17 @@
 //!   of real tile compute onto the PJRT runtime;
 //! * [`serve`] — a request-serving simulator over fleets of WIENNA
 //!   packages: open- and closed-loop request sources over a CNN /
-//!   transformer model mix, a dynamic batcher driven by a memoized cost
-//!   cache, pluggable routing policies (round-robin, least-loaded,
-//!   SLO-aware earliest-deadline), and tail-latency / goodput / SLO
-//!   statistics;
+//!   transformer model mix (including recorded per-client trace replay),
+//!   a dynamic batcher driven by a memoized cost cache, pluggable routing
+//!   policies (round-robin, least-loaded, SLO-aware earliest-deadline),
+//!   and tail-latency / goodput / SLO statistics;
+//! * [`cluster`] — the datacenter tier above `serve`: shards a large
+//!   package fleet across worker threads with a deterministic event merge
+//!   (bit-identical stats at any thread count), multi-tenant traffic
+//!   classes (interactive / batch / best-effort) with priority scheduling
+//!   and optional preemption, per-package admission control (queue caps,
+//!   deadline-aware load shedding), and per-class SLO accounting
+//!   (`wienna cluster`);
 //! * [`search`] — the fleet auto-sizer: enumerate package design points
 //!   (chiplet count × PEs × buffer × NoP), prune dominated candidates,
 //!   bisect fleet widths on short serve replays, and return the cheapest
@@ -66,6 +73,7 @@
 //! ```
 
 pub mod anyhow;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

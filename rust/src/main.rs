@@ -7,6 +7,10 @@
 //! wienna sweep     [--workload ...] [--batch N]
 //! wienna serve     [--mix cnn|mixed|resnet50|bert] [--design ...] [--packages N]
 //!                  [--policy rr|ll|edf] [--load F] [--duration-ms MS] [--slo-ms MS]
+//!                  [--client-trace FILE]
+//! wienna cluster   [--packages N] [--shards N] [--threads N] [--mix ...] [--policy ...]
+//!                  [--load F | --rps R] [--queue-cap N|none] [--no-shed-late] [--no-preempt]
+//!                  [--stats-json FILE]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -30,10 +34,11 @@ use wienna::serve::{
 };
 use wienna::workload::{resnet50::resnet50, tiny::tiny_cnn, unet::unet, Model};
 
-const USAGE: &str = "usage: wienna <simulate|sweep|serve|search|e2e|sim-validate|breakdown|report> [--flag value ...]
+const USAGE: &str = "usage: wienna <simulate|sweep|serve|cluster|search|e2e|sim-validate|breakdown|report> [--flag value ...]
   simulate      cost-model run of a workload on one design point
   sweep         Fig-8-style cluster-size sweep (fixed 16384 PEs)
   serve         request-serving simulation on a package fleet
+  cluster       sharded multi-tenant serving simulation (priority classes + admission control)
   search        auto-size the cheapest fleet meeting an SLO at a load
   e2e           real-numerics inference through the PJRT artifacts (needs --features pjrt)
   sim-validate  analytical mesh model vs cycle-level simulator
@@ -45,9 +50,15 @@ common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --artifacts DIR  --wireless-bw B
 serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
               --load F (fraction of fleet capacity)  --duration-ms MS  --slo-ms MS  --seed N
+              --client-trace FILE (closed-loop replay of recorded per-client timestamps;
+              the trace sets the load and the run drains it fully — ignores --load/--duration-ms)
+cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|ll|edf  --mix ...
+              --slo-ms MS  --load F (x capacity) | --rps R (absolute)  --duration-ms MS  --seed N
+              --queue-cap N|none  --no-shed-late  --no-preempt  --stats-json FILE  --verbose
 search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
               --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
-              --no-prune (exhaustive)  --verbose";
+              --class-slos I,B,E (per-class p99 targets in ms, 'inf' allowed; sizes on the
+              cluster engine against the SLO vector)  --no-prune (exhaustive)  --verbose";
 
 /// Parsed flags: `--key value` pairs plus bare `--switch`es.
 struct Flags(HashMap<String, String>);
@@ -61,7 +72,7 @@ impl Flags {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("unexpected argument '{a}'\n{USAGE}"))?;
-            if key == "verbose" || key == "no-prune" {
+            if key == "verbose" || key == "no-prune" || key == "no-shed-late" || key == "no-preempt" {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
             } else {
@@ -252,13 +263,34 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
 
     let mut fleet = Fleet::new(PackageSpec::homogeneous(packages, dp), policy);
     let capacity = fleet.estimate_capacity_rps(&mix, 8);
-    let rate = capacity * load;
-    let mut source = Source::poisson(mix, rate, f.u64("seed", 42)?);
+    // A recorded client trace replaces the Poisson source: closed-loop
+    // replay of per-client issue timestamps (the trace sets the load, so
+    // --load is ignored and the run ends when the trace drains).
+    let (mut source, horizon, offered) = match f.0.get("client-trace") {
+        Some(path) => {
+            if f.0.contains_key("load") || f.0.contains_key("duration-ms") {
+                eprintln!(
+                    "note: --load/--duration-ms are ignored with --client-trace — the recorded \
+                     trace sets the load and the run ends when it drains"
+                );
+            }
+            let clients = wienna::workload::trace::load_arrivals(std::path::Path::new(path))?;
+            let recorded: usize = clients.iter().map(|c| c.len()).sum();
+            let offered =
+                format!("replaying {} clients / {recorded} recorded requests from {path}", clients.len());
+            (Source::client_trace(mix, &clients, f.u64("seed", 42)?), f64::INFINITY, offered)
+        }
+        None => {
+            let rate = capacity * load;
+            let offered = format!("offered {rate:.0} req/s ({load:.2}x)");
+            (Source::poisson(mix, rate, f.u64("seed", 42)?), ms_to_cycles(duration_ms), offered)
+        }
+    };
     let mut stats = ServeStats::new();
-    let end = fleet.run(&mut source, ms_to_cycles(duration_ms), &mut stats);
+    let end = fleet.run(&mut source, horizon, &mut stats);
 
     println!(
-        "fleet: {packages} x {} | policy {} | est. capacity {capacity:.0} req/s | offered {rate:.0} req/s ({load:.2}x)",
+        "fleet: {packages} x {} | policy {} | est. capacity {capacity:.0} req/s | {offered}",
         dp.label(),
         policy.label()
     );
@@ -300,8 +332,138 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
+    use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig};
+
+    let packages = f.u64("packages", 16)? as usize;
+    let shards = f.u64("shards", 4)? as usize;
+    let dp = parse_design(&f.str("design", "wienna-c"))?;
+    let policy = parse_route(&f.str("policy", "edf"))?;
+    let load = f.f64("load", 0.8)?;
+    let duration_ms = f.f64("duration-ms", 100.0)?;
+    let slo_ms = f.f64("slo-ms", 25.0)?;
+    anyhow::ensure!(packages >= 1, "--packages must be >= 1");
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+    anyhow::ensure!(load > 0.0, "--load must be positive");
+    anyhow::ensure!(duration_ms > 0.0, "--duration-ms must be positive");
+    anyhow::ensure!(slo_ms > 0.0, "--slo-ms must be positive");
+    // Default the CLI cap to the library default so the two can't drift.
+    let default_cap =
+        AdmissionConfig::default().queue_cap.map_or("none".to_string(), |c| c.to_string());
+    let queue_cap = match f.str("queue-cap", &default_cap).as_str() {
+        "none" => None,
+        v => Some(v.parse::<usize>().map_err(|_| anyhow::anyhow!("--queue-cap: bad value '{v}' (number or 'none')"))?),
+    };
+    let mix = parse_mix(&f.str("mix", "mixed"), slo_ms)?;
+
+    let mut cfg = ClusterConfig {
+        shards,
+        policy,
+        preemption: !f.flag("no-preempt"),
+        admission: AdmissionConfig { queue_cap, shed_late: !f.flag("no-shed-late") },
+        ..Default::default()
+    };
+    if let Some(t) = f.0.get("threads") {
+        cfg.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads: bad number '{t}'"))?;
+    }
+    let threads = cfg.threads;
+
+    let specs = PackageSpec::homogeneous(packages, dp);
+    // Offered rate: absolute --rps, or --load as a fraction of the
+    // fleet's estimated capacity.
+    let rate = match f.0.get("rps") {
+        Some(r) => r.parse::<f64>().map_err(|_| anyhow::anyhow!("--rps: bad number '{r}'"))?,
+        None => Fleet::new(specs.clone(), policy).estimate_capacity_rps(&mix, 8) * load,
+    };
+    anyhow::ensure!(rate > 0.0, "offered rate must be positive");
+
+    let cluster = Cluster::new(specs, cfg);
+    let mut source = Source::poisson(mix, rate, f.u64("seed", 42)?);
+    let t0 = std::time::Instant::now();
+    let stats = cluster.run(&mut source, ms_to_cycles(duration_ms));
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "cluster: {packages} x {} in {} shards ({} threads) | policy {} | offered {rate:.0} req/s for {duration_ms:.0} ms",
+        dp.label(),
+        cluster.shards(),
+        threads,
+        policy.label()
+    );
+    println!(
+        "arrived {} | completed {} | shed {} (queue-full {}, deadline {}) | preemptions {} | {:.1} ms wall",
+        stats.serve.arrived(),
+        stats.serve.completed(),
+        stats.serve.shed(),
+        stats.shed_queue_full,
+        stats.shed_deadline,
+        stats.preemptions,
+        wall * 1e3,
+    );
+    println!(
+        "p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | goodput {:.0} req/s | violations {:.1}% | mean batch {:.2}",
+        stats.serve.latency_ms(50.0),
+        stats.serve.latency_ms(95.0),
+        stats.serve.latency_ms(99.0),
+        stats.serve.goodput_rps(),
+        stats.serve.violation_rate() * 100.0,
+        stats.serve.mean_batch(),
+    );
+    let mut t = Table::new(
+        "per-class SLO accounting",
+        &["class", "arrived", "completed", "shed", "slo met", "violated", "p50 ms", "p99 ms"],
+    );
+    for (class, m) in &stats.per_class {
+        t.row(vec![
+            class.label().to_string(),
+            m.arrived.to_string(),
+            m.completed.to_string(),
+            m.shed.to_string(),
+            m.slo_met.to_string(),
+            m.slo_violated.to_string(),
+            format!("{:.2}", stats.class_latency_ms(*class, 50.0)),
+            format!("{:.2}", stats.class_latency_ms(*class, 99.0)),
+        ]);
+    }
+    print!("{}", t.render());
+    if f.flag("verbose") {
+        let end = stats.serve.end_cycle();
+        let mut t = Table::new(
+            "per-package accounting (shard-major order)",
+            &["package", "completed", "batches", "mean batch", "busy %", "dist-plane %"],
+        );
+        for p in &stats.packages {
+            t.row(vec![
+                p.spec.name.clone(),
+                p.requests_completed.to_string(),
+                p.batches_dispatched.to_string(),
+                format!("{:.2}", p.mean_batch()),
+                format!("{:.1}", p.utilization(end) * 100.0),
+                format!("{:.1}", p.dist_plane_utilization(end) * 100.0),
+            ]);
+        }
+        print!("{}", t.render());
+        let memo = wienna::cost::memo::stats();
+        println!(
+            "shard cost caches: {} hits / {} misses | layer memo: {} entries (cap {}), {:.1}% hit rate, {} evictions",
+            stats.cache_hits,
+            stats.cache_misses,
+            memo.entries,
+            memo.capacity,
+            memo.hit_rate() * 100.0,
+            memo.evictions
+        );
+    }
+    if let Some(path) = f.0.get("stats-json") {
+        std::fs::write(path, stats.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("stats json -> {path}");
+    }
+    Ok(())
+}
+
 fn cmd_search(f: &Flags) -> anyhow::Result<()> {
-    use wienna::search::{autosize, AutosizeConfig, CostModel, SearchSpace};
+    use wienna::search::{autosize, AutosizeConfig, CostModel, MultiClassSlo, SearchSpace};
 
     let slo_ms = f.f64("slo", 25.0)?;
     let load_rps = f.f64("load", 3000.0)?;
@@ -316,6 +478,23 @@ fn cmd_search(f: &Flags) -> anyhow::Result<()> {
         cfg.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads: bad number '{t}'"))?;
     }
     cfg.prune = !f.flag("no-prune");
+    // --class-slos I,B,E switches to the multi-class mode: probes run on
+    // the sharded cluster engine and every class must meet its target.
+    if let Some(spec) = f.0.get("class-slos") {
+        let parts: Vec<&str> = spec.split(',').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "--class-slos takes three comma-separated p99 targets in ms (interactive,batch,best-effort; 'inf' allowed)"
+        );
+        let ms = |s: &str| -> anyhow::Result<f64> {
+            if s == "inf" {
+                Ok(f64::INFINITY)
+            } else {
+                s.parse::<f64>().map_err(|_| anyhow::anyhow!("--class-slos: bad target '{s}'"))
+            }
+        };
+        cfg.class_slos = Some(MultiClassSlo::with_targets(ms(parts[0])?, ms(parts[1])?, ms(parts[2])?));
+    }
     let mut space = SearchSpace::default();
     space.max_width = f.u64("max-width", 32)?;
     let costs = CostModel::default();
@@ -351,6 +530,14 @@ fn cmd_search(f: &Flags) -> anyhow::Result<()> {
                 best.goodput_rps,
                 best.violation_rate * 100.0
             );
+            if !best.class_p99_ms.is_empty() {
+                let per_class: Vec<String> = best
+                    .class_p99_ms
+                    .iter()
+                    .map(|(c, p)| format!("{} p99 {:.2} ms", c.label(), p))
+                    .collect();
+                println!("per-class: {}", per_class.join(" | "));
+            }
             if f.flag("verbose") {
                 let mut t = Table::new(
                     "feasible fleets, cheapest first",
@@ -476,6 +663,7 @@ fn main() -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&flags),
         "sweep" => cmd_sweep(&flags),
         "serve" => cmd_serve(&flags),
+        "cluster" => cmd_cluster(&flags),
         "search" => cmd_search(&flags),
         #[cfg(feature = "pjrt")]
         "e2e" => cmd_e2e(&flags),

@@ -18,6 +18,7 @@
 //!    the cheapest such fleet.
 
 use super::space::{CostModel, PackagePoint, SearchSpace};
+use crate::cluster::{Cluster, ClusterConfig, TrafficClass};
 use crate::config::CLOCK_HZ;
 use crate::cost::{par, CostEngine};
 use crate::serve::{ms_to_cycles, CostCache, Fleet, RoutePolicy, ServeStats, Source, WorkloadMix};
@@ -28,10 +29,49 @@ use crate::serve::{ms_to_cycles, CostCache, Fleet, RoutePolicy, ServeStats, Sour
 /// and latency-curve crossings between ladder rungs cannot hide from it.
 pub const PROBE_BATCHES: [u64; 6] = [1, 2, 4, 8, 16, 32];
 
+/// One class's p99 target in the multi-class sizing mode.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassSlo {
+    pub class: TrafficClass,
+    /// p99 latency target for this class, in milliseconds.
+    pub p99_ms: f64,
+}
+
+/// Multi-class sizing mode: probes run on the sharded `cluster` engine
+/// under this tenant population, and a fleet is feasible only when
+/// **every** listed class meets its own p99 target — the SLO is a vector,
+/// not a single fleet-level number.
+#[derive(Debug, Clone)]
+pub struct MultiClassSlo {
+    /// Per-class p99 targets. A class that received no traffic in a probe
+    /// trivially meets its target.
+    pub targets: Vec<ClassSlo>,
+    /// Cluster configuration of each probe (classes, admission,
+    /// preemption, shards). Probe threads are forced to 1 — candidates
+    /// already fan out over the search's own worker pool.
+    pub cluster: ClusterConfig,
+}
+
+impl MultiClassSlo {
+    /// The default tenant population with explicit per-class targets
+    /// (interactive / batch / best-effort, in that order).
+    pub fn with_targets(interactive_ms: f64, batch_ms: f64, best_effort_ms: f64) -> Self {
+        MultiClassSlo {
+            targets: vec![
+                ClassSlo { class: TrafficClass::Interactive, p99_ms: interactive_ms },
+                ClassSlo { class: TrafficClass::Batch, p99_ms: batch_ms },
+                ClassSlo { class: TrafficClass::BestEffort, p99_ms: best_effort_ms },
+            ],
+            cluster: ClusterConfig::default(),
+        }
+    }
+}
+
 /// What the auto-sizer is asked for.
 #[derive(Debug, Clone)]
 pub struct AutosizeConfig {
-    /// Fleet-level p99 target, in milliseconds.
+    /// Fleet-level p99 target, in milliseconds (ignored when
+    /// `class_slos` switches the search to the multi-class mode).
     pub slo_ms: f64,
     /// Offered load the fleet must absorb, in requests/second.
     pub load_rps: f64,
@@ -46,6 +86,10 @@ pub struct AutosizeConfig {
     pub threads: usize,
     /// Disable dominance pruning (exhaustive mode; tests compare the two).
     pub prune: bool,
+    /// Multi-class mode: size against a per-class SLO vector on the
+    /// sharded cluster engine instead of a single fleet-level p99 on
+    /// `serve::Fleet` probes.
+    pub class_slos: Option<MultiClassSlo>,
 }
 
 impl AutosizeConfig {
@@ -58,6 +102,7 @@ impl AutosizeConfig {
             seed: 42,
             threads: par::num_threads(),
             prune: true,
+            class_slos: None,
         }
     }
 }
@@ -90,6 +135,12 @@ pub struct FleetPlan {
     pub p99_ms: f64,
     pub goodput_rps: f64,
     pub violation_rate: f64,
+    /// Per-class p99 latencies from the cluster probe (`NaN` for a class
+    /// with no completions; empty in single-class mode).
+    pub class_p99_ms: Vec<(TrafficClass, f64)>,
+    /// Whether every class SLO target was met (`None` in single-class
+    /// mode, where feasibility is `p99_ms <= slo_ms`).
+    pub meets_class_slos: Option<bool>,
 }
 
 /// Outcome of one auto-sizing search.
@@ -151,24 +202,77 @@ fn dominates(b: &CandidateEval, a: &CandidateEval) -> bool {
 }
 
 /// Run one serve probe: `width` packages of `point` under the configured
-/// Poisson load, EDF routing, default dynamic batcher.
+/// Poisson load. Single-class mode replays on a `serve::Fleet` with EDF
+/// routing; multi-class mode replays on the sharded `cluster` engine and
+/// scores every class's p99 against its target.
 fn probe(point: &PackagePoint, width: u64, cfg: &AutosizeConfig, costs: &CostModel) -> FleetPlan {
-    let mut fleet = Fleet::new(point.fleet(width), RoutePolicy::EarliestDeadline);
-    let mut source = Source::poisson(cfg.mix.clone(), cfg.load_rps, cfg.seed);
-    let mut stats = ServeStats::new();
-    fleet.run(&mut source, ms_to_cycles(cfg.horizon_ms), &mut stats);
-    FleetPlan {
-        point: *point,
-        width,
-        fleet_cost: costs.fleet_cost(point, width),
-        p99_ms: stats.latency_ms(99.0),
-        goodput_rps: stats.goodput_rps(),
-        violation_rate: stats.violation_rate(),
+    match &cfg.class_slos {
+        None => {
+            let mut fleet = Fleet::new(point.fleet(width), RoutePolicy::EarliestDeadline);
+            let mut source = Source::poisson(cfg.mix.clone(), cfg.load_rps, cfg.seed);
+            let mut stats = ServeStats::new();
+            fleet.run(&mut source, ms_to_cycles(cfg.horizon_ms), &mut stats);
+            FleetPlan {
+                point: *point,
+                width,
+                fleet_cost: costs.fleet_cost(point, width),
+                p99_ms: stats.latency_ms(99.0),
+                goodput_rps: stats.goodput_rps(),
+                violation_rate: stats.violation_rate(),
+                class_p99_ms: Vec::new(),
+                meets_class_slos: None,
+            }
+        }
+        Some(mc) => {
+            // Probe threads stay at 1: candidates and bisections already
+            // fan out over the search's own worker pool, and nested pools
+            // would oversubscribe without changing results (the cluster
+            // engine is thread-count deterministic).
+            let cluster = Cluster::new(
+                point.fleet(width),
+                ClusterConfig { threads: 1, ..mc.cluster.clone() },
+            );
+            let mut source = Source::poisson(cfg.mix.clone(), cfg.load_rps, cfg.seed);
+            let stats = cluster.run(&mut source, ms_to_cycles(cfg.horizon_ms));
+            let class_p99_ms: Vec<(TrafficClass, f64)> =
+                mc.targets.iter().map(|t| (t.class, stats.class_latency_ms(t.class, 99.0))).collect();
+            let all_met = mc.targets.iter().all(|t| {
+                // An infinite target is explicitly unconstrained, and a
+                // class with no traffic at all is trivially met.
+                if t.p99_ms.is_infinite() {
+                    return true;
+                }
+                let (arrived, shed) =
+                    stats.per_class.get(&t.class).map_or((0, 0), |m| (m.arrived, m.shed));
+                // A constrained class is feasible only when the fleet
+                // served *all* its offered traffic within target: probes
+                // run with admission control on, so deadline shedding
+                // would otherwise prune the tail into compliance and an
+                // undersized fleet would read as feasible. (A finite
+                // target with a NaN p99 — completions exist but not for
+                // this class — fails the `<=` as it should.)
+                arrived == 0
+                    || (shed == 0 && stats.class_latency_ms(t.class, 99.0) <= t.p99_ms)
+            });
+            FleetPlan {
+                point: *point,
+                width,
+                fleet_cost: costs.fleet_cost(point, width),
+                p99_ms: stats.serve.latency_ms(99.0),
+                goodput_rps: stats.serve.goodput_rps(),
+                violation_rate: stats.serve.violation_rate(),
+                class_p99_ms,
+                meets_class_slos: Some(all_met),
+            }
+        }
     }
 }
 
 fn meets_slo(plan: &FleetPlan, cfg: &AutosizeConfig) -> bool {
-    plan.p99_ms <= cfg.slo_ms
+    match plan.meets_class_slos {
+        Some(met) => met,
+        None => plan.p99_ms <= cfg.slo_ms,
+    }
 }
 
 /// Find the narrowest feasible fleet of `point` by bisection, plus how
@@ -229,7 +333,13 @@ pub fn autosize(cfg: &AutosizeConfig, space: &SearchSpace, costs: &CostModel) ->
 
     // Stage 3: drop candidates that can never meet the SLO, then the
     // dominated ones (cheapest-first scan keeps the Pareto frontier).
-    let mut survivors: Vec<&CandidateEval> = evals.iter().filter(|e| e.feasible_alone).collect();
+    // The batch-1-vs-mix-SLO gate assumes arrival deadlines equal the mix
+    // SLO; multi-class mode rescales deadlines per class and scores
+    // against separate targets, so only the (SLO-agnostic) dominance
+    // prune applies there.
+    let multi_class = cfg.class_slos.is_some();
+    let mut survivors: Vec<&CandidateEval> =
+        evals.iter().filter(|e| multi_class || e.feasible_alone).collect();
     if cfg.prune {
         survivors.sort_by(|a, b| {
             a.package_cost
@@ -254,12 +364,11 @@ pub fn autosize(cfg: &AutosizeConfig, space: &SearchSpace, costs: &CostModel) ->
 
     let simulated_runs: usize = sized.iter().map(|(_, n)| *n).sum();
     let mut plans: Vec<FleetPlan> = sized.into_iter().filter_map(|(p, _)| p).collect();
-    plans.sort_by(|a, b| {
-        a.fleet_cost
-            .partial_cmp(&b.fleet_cost)
-            .expect("fleet costs are finite")
-            .then(a.p99_ms.partial_cmp(&b.p99_ms).expect("p99s are finite"))
-    });
+    // total_cmp, not partial_cmp: a multi-class plan whose probe saw no
+    // traffic at all carries a NaN p99 yet is legitimately feasible (all
+    // targets trivially met), and NaN must sort deterministically (last
+    // among equal costs) instead of panicking the search.
+    plans.sort_by(|a, b| a.fleet_cost.total_cmp(&b.fleet_cost).then(a.p99_ms.total_cmp(&b.p99_ms)));
     AutosizeResult { best: plans.first().cloned(), explored, pruned, simulated_runs, plans }
 }
 
@@ -322,6 +431,35 @@ mod tests {
         assert!(r.best.is_none());
         assert_eq!(r.pruned, r.explored, "every candidate is infeasible at batch 1");
         assert_eq!(r.simulated_runs, 0);
+    }
+
+    #[test]
+    fn multi_class_slo_vector_sizes_a_fleet() {
+        let mut cfg = tiny_cfg(1500.0);
+        // Generous per-class targets so the tiny space stays feasible:
+        // interactive at the base SLO, batch relaxed, best-effort free.
+        cfg.class_slos = Some(MultiClassSlo::with_targets(20.0, 80.0, f64::INFINITY));
+        let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+        let best = r.best.expect("tiny space must contain a class-feasible fleet");
+        assert_eq!(best.meets_class_slos, Some(true));
+        assert_eq!(best.class_p99_ms.len(), 3, "one probed p99 per target class");
+        for (class, p99) in &best.class_p99_ms {
+            let target = match class {
+                TrafficClass::Interactive => 20.0,
+                TrafficClass::Batch => 80.0,
+                TrafficClass::BestEffort => f64::INFINITY,
+            };
+            assert!(
+                p99.is_nan() || *p99 <= target,
+                "{} p99 {:.2} ms vs target {target}",
+                class.label(),
+                p99
+            );
+        }
+        // An unmeetable interactive target finds nothing.
+        cfg.class_slos = Some(MultiClassSlo::with_targets(0.001, 80.0, f64::INFINITY));
+        let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+        assert!(r.best.is_none(), "1 us interactive p99 must be infeasible");
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //! * [`space`] — candidate enumeration ([`SearchSpace`] →
 //!   [`PackagePoint`]) and the relative dollar [`CostModel`];
 //! * [`autosize`] — dominance pruning, fleet-width bisection over serve
-//!   probes, and the [`AutosizeResult`] report.
+//!   probes, and the [`AutosizeResult`] report. With
+//!   [`MultiClassSlo`](autosize::MultiClassSlo) set, probes run on the
+//!   sharded `cluster` engine and feasibility means every traffic class
+//!   meets its own p99 target (an SLO *vector* instead of one number).
 //!
 //! ## Example
 //!
@@ -46,6 +49,7 @@ pub mod autosize;
 pub mod space;
 
 pub use autosize::{
-    autosize, AutosizeConfig, AutosizeResult, CandidateEval, FleetPlan, PROBE_BATCHES,
+    autosize, AutosizeConfig, AutosizeResult, CandidateEval, ClassSlo, FleetPlan, MultiClassSlo,
+    PROBE_BATCHES,
 };
 pub use space::{CostModel, PackagePoint, SearchSpace};

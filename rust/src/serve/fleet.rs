@@ -8,7 +8,7 @@
 //! completion events only — service times come from the memoized cost
 //! model, so a multi-second traffic trace simulates in microseconds.
 
-use super::batcher::{choose_batch, BatcherConfig, CostCache};
+use super::batcher::{choose_batch, BatchCost, BatchDecision, BatcherConfig, CostCache};
 use super::queue::QueueSet;
 use super::request::{Request, Source};
 use super::stats::ServeStats;
@@ -56,6 +56,11 @@ pub struct Package {
     /// Cycle at which the in-flight batch completes.
     busy_until: f64,
     in_flight: Vec<Request>,
+    /// Cycle the in-flight batch started, and its full predicted cost —
+    /// kept so a preemption can roll the un-run share of the accounting
+    /// back (`Package::preempt_batch`).
+    batch_start: f64,
+    cur_cost: Option<BatchCost>,
     /// Batch-1 estimate of queued work, for load-aware routing.
     backlog_cycles: f64,
     // --- accounting ---
@@ -78,6 +83,8 @@ impl Package {
             queue: QueueSet::new(),
             busy_until: 0.0,
             in_flight: Vec::new(),
+            batch_start: 0.0,
+            cur_cost: None,
             backlog_cycles: 0.0,
             busy_cycles: 0.0,
             dist_busy_cycles: 0.0,
@@ -138,6 +145,70 @@ impl Package {
     /// Work backlog (busy remainder + queued batch-1 estimates) at `now`.
     pub fn load_cycles(&self, now: f64) -> f64 {
         (self.busy_until - now).max(0.0) + self.backlog_cycles
+    }
+
+    /// Cycle at which the in-flight batch completes (stale when idle).
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+
+    /// Grow the batch-1 backlog estimate by one admitted request.
+    pub(crate) fn add_backlog(&mut self, cycles: f64) {
+        self.backlog_cycles += cycles;
+    }
+
+    /// Shrink the backlog estimate after requests leave the queue.
+    pub(crate) fn drain_backlog(&mut self, cycles: f64) {
+        self.backlog_cycles = (self.backlog_cycles - cycles).max(0.0);
+    }
+
+    /// Start serving a dispatched batch: occupy the package until the
+    /// predicted completion and record the busy-cycle accounting. Both
+    /// event loops (`Fleet::run` and the cluster's per-shard loop) funnel
+    /// through here so their per-package accounting is identical.
+    pub(crate) fn begin_batch(&mut self, now: f64, decision: &BatchDecision, reqs: Vec<Request>) {
+        debug_assert!(self.in_flight.is_empty(), "package already serving a batch");
+        debug_assert_eq!(reqs.len(), decision.batch as usize);
+        self.busy_until = now + decision.cost.latency;
+        self.batch_start = now;
+        self.cur_cost = Some(decision.cost);
+        self.busy_cycles += decision.cost.latency;
+        self.dist_busy_cycles += decision.cost.dist_busy;
+        self.compute_busy_cycles += decision.cost.compute_busy;
+        self.collect_busy_cycles += decision.cost.collect_busy;
+        self.batches_dispatched += 1;
+        self.batch_size_sum += decision.batch;
+        self.max_batch_seen = self.max_batch_seen.max(decision.batch);
+        self.in_flight = reqs;
+    }
+
+    /// Complete the in-flight batch, returning its completion cycle and
+    /// the served requests.
+    pub(crate) fn finish_batch(&mut self) -> (f64, Vec<Request>) {
+        let t = self.busy_until;
+        let reqs = std::mem::take(&mut self.in_flight);
+        self.requests_completed += reqs.len() as u64;
+        self.cur_cost = None;
+        (t, reqs)
+    }
+
+    /// Abort the in-flight batch at `now < busy_until`, rolling back the
+    /// accounting for the share of the batch that never ran and returning
+    /// its requests so the caller can requeue them. The cycles already
+    /// burnt stay counted — preempted work is real (wasted) work, and the
+    /// utilization numbers must show it.
+    pub(crate) fn preempt_batch(&mut self, now: f64) -> Vec<Request> {
+        debug_assert!(!self.in_flight.is_empty(), "nothing in flight to preempt");
+        let cost = self.cur_cost.take().expect("in-flight batch has a recorded cost");
+        let total = self.busy_until - self.batch_start;
+        let done = if total > 0.0 { ((now - self.batch_start) / total).clamp(0.0, 1.0) } else { 1.0 };
+        let undone = 1.0 - done;
+        self.busy_cycles -= cost.latency * undone;
+        self.dist_busy_cycles -= cost.dist_busy * undone;
+        self.compute_busy_cycles -= cost.compute_busy * undone;
+        self.collect_busy_cycles -= cost.collect_busy * undone;
+        self.busy_until = now;
+        std::mem::take(&mut self.in_flight)
     }
 }
 
@@ -292,7 +363,7 @@ impl Fleet {
             )
             .latency;
         let p = &mut self.packages[idx];
-        p.backlog_cycles += est;
+        p.add_backlog(est);
         p.queue.push(req);
     }
 
@@ -328,25 +399,14 @@ impl Fleet {
         let p = &mut self.packages[idx];
         let reqs = p.queue.pop_batch(kind, decision.batch as usize);
         debug_assert_eq!(reqs.len(), decision.batch as usize);
-        p.backlog_cycles = (p.backlog_cycles - est1 * reqs.len() as f64).max(0.0);
-        p.busy_until = now + decision.cost.latency;
-        p.busy_cycles += decision.cost.latency;
-        p.dist_busy_cycles += decision.cost.dist_busy;
-        p.compute_busy_cycles += decision.cost.compute_busy;
-        p.collect_busy_cycles += decision.cost.collect_busy;
-        p.batches_dispatched += 1;
-        p.batch_size_sum += decision.batch;
-        p.max_batch_seen = p.max_batch_seen.max(decision.batch);
-        p.in_flight = reqs;
+        p.drain_backlog(est1 * reqs.len() as f64);
+        p.begin_batch(now, &decision, reqs);
         stats.record_dispatch(decision.batch);
     }
 
     /// Complete the in-flight batch on `idx`.
     fn complete(&mut self, idx: usize, stats: &mut ServeStats, source: &mut Source) {
-        let p = &mut self.packages[idx];
-        let t = p.busy_until;
-        let reqs = std::mem::take(&mut p.in_flight);
-        p.requests_completed += reqs.len() as u64;
+        let (t, reqs) = self.packages[idx].finish_batch();
         for r in &reqs {
             stats.record_completion(r, t);
             source.on_complete(t, r);

@@ -54,7 +54,10 @@ pub mod stats;
 pub use batcher::{choose_batch, BatchCost, BatchDecision, BatcherConfig, CostCache, CostKey};
 pub use fleet::{Fleet, Package, PackageSpec, RoutePolicy};
 pub use queue::QueueSet;
-pub use request::{cycles_to_ms, ms_to_cycles, MixEntry, ModelKind, Request, Source, WorkloadMix};
+pub use request::{
+    cycles_to_ms, ms_to_cycles, ClientTraceSource, MixEntry, ModelKind, Request, Source,
+    WorkloadMix,
+};
 pub use stats::{LatencyRecorder, ModelStats, ServeStats};
 
 #[cfg(test)]

@@ -57,11 +57,24 @@ impl QueueSet {
     }
 
     /// The model whose head-of-line request has the earliest deadline.
+    ///
+    /// Equal head deadlines are broken by the head request's arrival
+    /// sequence (`Request::id`), never by queue-vector position: position
+    /// depends on which model happened to arrive at this package first,
+    /// so sharded layouts that split the same stream differently would
+    /// otherwise dispatch in different orders (the cluster determinism
+    /// guarantee forbids that).
     pub fn edf_kind(&self) -> Option<ModelKind> {
         self.queues
             .iter()
             .filter(|(_, q)| !q.is_empty())
-            .min_by(|a, b| a.1[0].deadline.partial_cmp(&b.1[0].deadline).unwrap())
+            .min_by(|a, b| {
+                let (ra, rb) = (&a.1[0], &b.1[0]);
+                ra.deadline
+                    .partial_cmp(&rb.deadline)
+                    .expect("deadlines are never NaN")
+                    .then(ra.id.cmp(&rb.id))
+            })
             .map(|(k, _)| *k)
     }
 
@@ -79,6 +92,36 @@ impl QueueSet {
         let q = self.queue_mut(kind);
         let take = n.min(q.len());
         q.drain(..take).collect()
+    }
+
+    /// Remove and return the most recently admitted request (largest
+    /// arrival seq across all model queues) — the push-out victim when a
+    /// higher-priority arrival displaces queued lower-class work.
+    pub fn pop_newest(&mut self) -> Option<Request> {
+        let pos = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, q))| !q.is_empty())
+            .max_by_key(|(_, (_, q))| q.back().map_or(0, |r| r.id))
+            .map(|(i, _)| i)?;
+        self.queues[pos].1.pop_back()
+    }
+
+    /// Return preempted requests to the *front* of their model queues so
+    /// they are re-dispatched before anything that arrived after them.
+    /// Unlike [`QueueSet::push`] this does not count a new admission —
+    /// the requests were admitted once already.
+    pub fn requeue_front(&mut self, reqs: Vec<Request>) {
+        // Reverse so the earliest request of the preempted batch ends up
+        // back at the very head of its queue.
+        for req in reqs.into_iter().rev() {
+            self.queue_mut(req.kind).push_front(req);
+        }
+        let depth = self.depth_total();
+        if depth > self.peak_depth {
+            self.peak_depth = depth;
+        }
     }
 }
 
@@ -121,6 +164,49 @@ mod tests {
         assert_eq!(batch.len(), 1);
         assert!(q.is_empty());
         assert!(q.pop_batch(ModelKind::Mlp, 4).is_empty());
+    }
+
+    #[test]
+    fn edf_tie_breaks_on_arrival_seq_not_queue_position() {
+        // Two models whose heads share an identical deadline. Whichever
+        // request arrived first (lower id) must win, regardless of the
+        // order the model queues were created in.
+        let mut a = QueueSet::new();
+        a.push(req(7, ModelKind::TinyCnn, 50.0, 100.0)); // deadline 150, later arrival
+        a.push(req(3, ModelKind::Mlp, 50.0, 100.0)); // deadline 150, earlier id
+        assert_eq!(a.edf_kind(), Some(ModelKind::Mlp));
+
+        // Same requests, opposite insertion order: same winner.
+        let mut b = QueueSet::new();
+        b.push(req(3, ModelKind::Mlp, 50.0, 100.0));
+        b.push(req(7, ModelKind::TinyCnn, 50.0, 100.0));
+        assert_eq!(b.edf_kind(), Some(ModelKind::Mlp));
+    }
+
+    #[test]
+    fn pop_newest_takes_the_latest_admission_across_models() {
+        let mut q = QueueSet::new();
+        q.push(req(0, ModelKind::TinyCnn, 0.0, 100.0));
+        q.push(req(5, ModelKind::Mlp, 1.0, 100.0));
+        q.push(req(3, ModelKind::TinyCnn, 2.0, 100.0));
+        assert_eq!(q.pop_newest().map(|r| r.id), Some(5));
+        assert_eq!(q.pop_newest().map(|r| r.id), Some(3));
+        assert_eq!(q.pop_newest().map(|r| r.id), Some(0));
+        assert!(q.pop_newest().is_none());
+    }
+
+    #[test]
+    fn requeue_front_restores_fifo_without_recounting() {
+        let mut q = QueueSet::new();
+        for i in 0..4 {
+            q.push(req(i, ModelKind::TinyCnn, i as f64, 100.0));
+        }
+        let batch = q.pop_batch(ModelKind::TinyCnn, 2); // ids 0, 1
+        assert_eq!(q.arrived, 4);
+        q.requeue_front(batch);
+        assert_eq!(q.arrived, 4, "requeue must not count a new admission");
+        let again = q.pop_batch(ModelKind::TinyCnn, 4);
+        assert_eq!(again.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -175,12 +175,50 @@ pub struct ClosedLoopSource {
     next_id: u64,
 }
 
+impl ClosedLoopSource {
+    /// `(index, ready_at)` of every client with a pending issue time.
+    fn ready(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.clients.iter().enumerate().filter_map(|(i, c)| c.ready_at.map(|t| (i, t)))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct TraceClient {
+    /// Recorded issue timestamps in cycles, ascending.
+    times: Vec<f64>,
+    cursor: usize,
+    /// When this client issues its next request (`None`: in flight, or
+    /// its trace is exhausted).
+    ready_at: Option<f64>,
+}
+
+/// Closed-loop replay of recorded per-client issue timestamps: client
+/// `c`'s `i`-th request is issued at `max(trace[c][i], completion of its
+/// previous request)` — the recorded timestamp replaces the fixed think
+/// time of [`Source::closed_loop`], so real traces with bursts and lulls
+/// drive the load while service pushback still throttles each client.
+#[derive(Debug, Clone)]
+pub struct ClientTraceSource {
+    mix: WorkloadMix,
+    clients: Vec<TraceClient>,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl ClientTraceSource {
+    /// `(index, ready_at)` of every client with a pending issue time.
+    fn ready(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.clients.iter().enumerate().filter_map(|(i, c)| c.ready_at.map(|t| (i, t)))
+    }
+}
+
 /// An arrival process over a workload mix.
 #[derive(Debug, Clone)]
 pub enum Source {
     Poisson(PoissonSource),
     Replay(ReplaySource),
     ClosedLoop(ClosedLoopSource),
+    ClientTrace(ClientTraceSource),
 }
 
 impl Source {
@@ -217,6 +255,33 @@ impl Source {
         Source::ClosedLoop(ClosedLoopSource { mix, think_cycles, clients, rng, next_id: 0 })
     }
 
+    /// Closed-loop replay of recorded per-client issue timestamps
+    /// (milliseconds from run start, ascending per client; see
+    /// `workload::trace::parse_arrivals` for the on-disk format). Each
+    /// client issues its next request at the recorded timestamp, or at
+    /// its previous completion when the service is running behind.
+    pub fn client_trace(mix: WorkloadMix, clients_ms: &[Vec<f64>], seed: u64) -> Source {
+        assert!(!clients_ms.is_empty(), "client trace needs at least one client");
+        let clients: Vec<TraceClient> = clients_ms
+            .iter()
+            .map(|ts| {
+                assert!(!ts.is_empty(), "every client needs at least one timestamp");
+                assert!(
+                    ts.iter().all(|t| t.is_finite() && *t >= 0.0),
+                    "client timestamps must be finite and >= 0"
+                );
+                assert!(
+                    ts.windows(2).all(|w| w[0] <= w[1]),
+                    "client timestamps must be ascending"
+                );
+                let times: Vec<f64> = ts.iter().map(|&t| ms_to_cycles(t)).collect();
+                let first = times[0];
+                TraceClient { times, cursor: 0, ready_at: Some(first) }
+            })
+            .collect();
+        Source::ClientTrace(ClientTraceSource { mix, clients, rng: Rng::new(seed), next_id: 0 })
+    }
+
     /// Cycle of the next pending arrival, if any.
     pub fn next_arrival_at(&self) -> Option<f64> {
         match self {
@@ -228,11 +293,8 @@ impl Source {
                     None
                 }
             }
-            Source::ClosedLoop(s) => s
-                .clients
-                .iter()
-                .filter_map(|c| c.ready_at)
-                .fold(None, |m: Option<f64>, t| Some(m.map_or(t, |m| m.min(t)))),
+            Source::ClosedLoop(s) => earliest_ready(s.ready()).map(|(_, t)| t),
+            Source::ClientTrace(s) => earliest_ready(s.ready()).map(|(_, t)| t),
         }
     }
 
@@ -259,18 +321,24 @@ impl Source {
                 req
             }
             Source::ClosedLoop(s) => {
-                let (idx, at) = s
-                    .clients
-                    .iter()
-                    .enumerate()
-                    .filter_map(|(i, c)| c.ready_at.map(|t| (i, t)))
-                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                    .expect("closed-loop source has no ready client");
+                let (idx, at) =
+                    earliest_ready(s.ready()).expect("closed-loop source has no ready client");
                 let e = s.mix.draw(&mut s.rng);
                 let req = request(s.next_id, &e, at, Some(idx));
                 s.next_id += 1;
                 s.clients[idx].ready_at = None;
                 s.clients[idx].remaining -= 1;
+                req
+            }
+            Source::ClientTrace(s) => {
+                let (idx, at) =
+                    earliest_ready(s.ready()).expect("client-trace source has no ready client");
+                let e = s.mix.draw(&mut s.rng);
+                let req = request(s.next_id, &e, at, Some(idx));
+                s.next_id += 1;
+                let c = &mut s.clients[idx];
+                c.ready_at = None;
+                c.cursor += 1;
                 req
             }
         }
@@ -279,12 +347,25 @@ impl Source {
     /// Completion feedback; drives the closed-loop clients and is a no-op
     /// for open-loop sources.
     pub fn on_complete(&mut self, now: f64, req: &Request) {
-        if let Source::ClosedLoop(s) = self {
-            if let Some(idx) = req.client {
-                if s.clients[idx].remaining > 0 {
-                    s.clients[idx].ready_at = Some(now + s.think_cycles);
+        match self {
+            Source::ClosedLoop(s) => {
+                if let Some(idx) = req.client {
+                    if s.clients[idx].remaining > 0 {
+                        s.clients[idx].ready_at = Some(now + s.think_cycles);
+                    }
                 }
             }
+            Source::ClientTrace(s) => {
+                if let Some(idx) = req.client {
+                    let c = &mut s.clients[idx];
+                    if c.cursor < c.times.len() {
+                        // The recorded issue time, or right now when the
+                        // service is running behind the trace.
+                        c.ready_at = Some(c.times[c.cursor].max(now));
+                    }
+                }
+            }
+            _ => {}
         }
     }
 
@@ -294,19 +375,38 @@ impl Source {
             Source::Poisson(s) => s.next_id,
             Source::Replay(s) => s.next_id,
             Source::ClosedLoop(s) => s.next_id,
+            Source::ClientTrace(s) => s.next_id,
         }
     }
 
     /// Whether the source runs dry on its own. A Poisson source never
     /// does — running one needs a finite horizon (`Fleet::run` asserts
-    /// this); replay and closed-loop sources are finite by construction.
+    /// this); replay, closed-loop and client-trace sources are finite by
+    /// construction.
     pub fn is_bounded(&self) -> bool {
         !matches!(self, Source::Poisson(_))
+    }
+
+    /// Whether arrivals are independent of completions. Open-loop sources
+    /// (Poisson, gap replay) can be materialized up front, which the
+    /// sharded cluster engine requires; closed-loop sources (client pool,
+    /// client-trace replay) need completion feedback and only run under
+    /// the single-loop `Fleet::run`.
+    pub fn is_open_loop(&self) -> bool {
+        matches!(self, Source::Poisson(_) | Source::Replay(_))
     }
 }
 
 fn request(id: u64, e: &MixEntry, at: f64, client: Option<usize>) -> Request {
     Request { id, kind: e.kind, arrival: at, deadline: at + e.slo_cycles, client }
+}
+
+/// Earliest-ready client of a closed-loop pool: `(index, ready_at)` with
+/// ties going to the lowest index. Shared by the fixed-think-time and
+/// trace-replay sources so their selection (and any future tie-break or
+/// NaN-handling fix) cannot diverge.
+fn earliest_ready(ready: impl Iterator<Item = (usize, f64)>) -> Option<(usize, f64)> {
+    ready.min_by(|a, b| a.1.partial_cmp(&b.1).expect("ready times are never NaN"))
 }
 
 /// Exponential inter-arrival sample with the given mean.
@@ -409,6 +509,62 @@ mod tests {
         s.on_complete(r4.arrival + 50.0, &r4);
         assert!(s.next_arrival_at().is_none());
         assert_eq!(s.emitted(), 4);
+    }
+
+    #[test]
+    fn client_trace_replays_timestamps_when_service_keeps_up() {
+        // Two clients with recorded issue times; a fast service (instant
+        // completions) never delays an issue past its recorded timestamp.
+        let traces = vec![vec![1.0, 5.0, 9.0], vec![2.0, 3.0]];
+        let mut s = Source::client_trace(mix(), &traces, 7);
+        let mut issued = Vec::new();
+        while s.next_arrival_at().is_some() {
+            let r = s.pop();
+            issued.push((r.client.unwrap(), cycles_to_ms(r.arrival)));
+            s.on_complete(r.arrival, &r); // completes instantly
+        }
+        assert_eq!(s.emitted(), 5);
+        let expect = [(0, 1.0), (1, 2.0), (1, 3.0), (0, 5.0), (0, 9.0)];
+        for ((c, t), (ec, et)) in issued.iter().zip(expect.iter()) {
+            assert_eq!(c, ec);
+            assert!((t - et).abs() < 1e-9, "issued at {t} ms, trace says {et} ms");
+        }
+    }
+
+    #[test]
+    fn client_trace_defers_to_completion_under_pushback() {
+        // One client, issues recorded at 1 ms and 2 ms. Its first request
+        // completes only at 10 ms, so the second issue slips to 10 ms.
+        let mut s = Source::client_trace(mix(), &[vec![1.0, 2.0]], 3);
+        let r1 = s.pop();
+        assert!(s.next_arrival_at().is_none(), "client is in flight");
+        s.on_complete(ms_to_cycles(10.0), &r1);
+        let t = s.next_arrival_at().expect("client re-armed");
+        assert!((t - ms_to_cycles(10.0)).abs() < 1e-6);
+        let r2 = s.pop();
+        s.on_complete(r2.arrival + 1.0, &r2);
+        assert!(s.next_arrival_at().is_none(), "trace exhausted");
+        assert!(s.is_bounded());
+        assert!(!s.is_open_loop());
+    }
+
+    #[test]
+    fn ready_ties_go_to_the_lowest_client_index() {
+        // Pins the documented tie-break of `earliest_ready`: Iterator::
+        // min_by returns the FIRST of equally-minimum elements, i.e. the
+        // lowest client index (the cluster determinism story leans on
+        // stable tie-breaks everywhere).
+        let mut s = Source::client_trace(mix(), &[vec![5.0], vec![5.0], vec![5.0]], 1);
+        assert_eq!(s.pop().client, Some(0));
+        assert_eq!(s.pop().client, Some(1));
+        assert_eq!(s.pop().client, Some(2));
+    }
+
+    #[test]
+    fn open_loop_predicate() {
+        assert!(Source::poisson(mix(), 100.0, 1).is_open_loop());
+        assert!(Source::replay(mix(), &[1.0], 1).is_open_loop());
+        assert!(!Source::closed_loop(mix(), 1, 1.0, 1, 1).is_open_loop());
     }
 
     #[test]

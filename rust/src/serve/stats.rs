@@ -79,6 +79,25 @@ pub struct ModelStats {
     pub completed: u64,
     pub slo_met: u64,
     pub slo_violated: u64,
+    /// Requests refused by admission control (queue cap or deadline-aware
+    /// load shedding; always 0 for plain `Fleet::run`, which admits
+    /// everything).
+    pub shed: u64,
+}
+
+impl ModelStats {
+    /// Record one completion at `cycle` against `req`'s deadline. The
+    /// single definition of "met the SLO" — fleet-level, per-model and
+    /// the cluster's per-class accounting all funnel through here.
+    pub fn record_completion(&mut self, req: &Request, cycle: f64) {
+        self.latency.push(cycle - req.arrival);
+        self.completed += 1;
+        if cycle <= req.deadline {
+            self.slo_met += 1;
+        } else {
+            self.slo_violated += 1;
+        }
+    }
 }
 
 /// Fleet-wide serving statistics for one run.
@@ -103,22 +122,27 @@ impl ServeStats {
     }
 
     pub fn record_dispatch(&mut self, batch: u64) {
-        self.dispatches += 1;
-        *self.batch_hist.entry(batch).or_insert(0) += 1;
+        self.record_dispatches(batch, 1);
+    }
+
+    /// Record `n` dispatches of the same batch size at once (the cluster
+    /// merge folds whole per-shard histograms in).
+    pub fn record_dispatches(&mut self, batch: u64, n: u64) {
+        self.dispatches += n;
+        *self.batch_hist.entry(batch).or_insert(0) += n;
     }
 
     pub fn record_completion(&mut self, req: &Request, completion_cycle: f64) {
-        let latency = completion_cycle - req.arrival;
-        let met = completion_cycle <= req.deadline;
-        for m in [&mut self.all, self.per_model.entry(req.kind).or_default()] {
-            m.latency.push(latency);
-            m.completed += 1;
-            if met {
-                m.slo_met += 1;
-            } else {
-                m.slo_violated += 1;
-            }
-        }
+        self.all.record_completion(req, completion_cycle);
+        self.per_model.entry(req.kind).or_default().record_completion(req, completion_cycle);
+    }
+
+    /// Record a request refused by admission control. The request still
+    /// counts as arrived (record both), so
+    /// `arrived == completed + shed` holds after a drained run.
+    pub fn record_shed(&mut self, req: &Request) {
+        self.all.shed += 1;
+        self.per_model.entry(req.kind).or_default().shed += 1;
     }
 
     /// Mark the end of the run (cycle of the last event).
@@ -128,6 +152,20 @@ impl ServeStats {
 
     pub fn arrived(&self) -> u64 {
         self.all.arrived
+    }
+
+    /// Requests refused by admission control.
+    pub fn shed(&self) -> u64 {
+        self.all.shed
+    }
+
+    /// Fraction of arrivals refused by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.all.arrived == 0 {
+            0.0
+        } else {
+            self.all.shed as f64 / self.all.arrived as f64
+        }
     }
 
     pub fn completed(&self) -> u64 {
@@ -285,6 +323,21 @@ mod tests {
         assert_eq!((tiny.slo_met, tiny.slo_violated), (1, 0));
         let mlp = &s.per_model[&ModelKind::Mlp];
         assert_eq!((mlp.slo_met, mlp.slo_violated), (0, 1));
+    }
+
+    #[test]
+    fn shed_accounting_balances() {
+        let mut s = ServeStats::new();
+        let a = req(0, ModelKind::TinyCnn, 0.0, 100.0);
+        let b = req(1, ModelKind::TinyCnn, 5.0, 100.0);
+        s.record_arrival(&a);
+        s.record_arrival(&b);
+        s.record_shed(&b);
+        s.record_completion(&a, 50.0);
+        assert_eq!(s.arrived(), 2);
+        assert_eq!(s.completed() + s.shed(), s.arrived());
+        assert!((s.shed_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.per_model[&ModelKind::TinyCnn].shed, 1);
     }
 
     #[test]

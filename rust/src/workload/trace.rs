@@ -14,6 +14,16 @@
 //!
 //! `conv` takes *padded* input extents (as stored in [`Layer`]); use
 //! `convp` for "SAME"-style auto-padding from unpadded extents.
+//!
+//! The module also loads **client arrival traces** — recorded per-client
+//! request-issue timestamps that `serve::Source::client_trace` replays in
+//! place of the closed-loop source's fixed think time
+//! ([`parse_arrivals`] / [`load_arrivals`]):
+//!
+//! ```text
+//! # one line per client, timestamps in ms from run start, ascending
+//! client <name> <t0> <t1> <t2> ...
+//! ```
 
 use super::{conv_padded, Layer, Model};
 use crate::anyhow::{bail, Context, Result};
@@ -83,6 +93,54 @@ pub fn load(path: &std::path::Path) -> Result<Model> {
     parse(&text)
 }
 
+/// Parse a client arrival trace: one `client <name> <t_ms>...` line per
+/// client, timestamps in milliseconds from run start, ascending within a
+/// client. Returns one timestamp vector per client, in file order —
+/// ready to feed `serve::Source::client_trace`.
+pub fn parse_arrivals(text: &str) -> Result<Vec<Vec<f64>>> {
+    let mut clients = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        if tok[0] != "client" {
+            bail!("arrival trace line {}: expected 'client', got '{}'", i + 1, tok[0]);
+        }
+        if tok.len() < 3 {
+            bail!("arrival trace line {}: client takes a name + at least one timestamp", i + 1);
+        }
+        let mut times = Vec::with_capacity(tok.len() - 2);
+        for s in &tok[2..] {
+            let t: f64 = s
+                .parse()
+                .with_context(|| format!("arrival trace line {}: bad timestamp '{s}'", i + 1))?;
+            if !t.is_finite() || t < 0.0 {
+                bail!("arrival trace line {}: timestamp '{s}' must be finite and >= 0", i + 1);
+            }
+            if let Some(&prev) = times.last() {
+                if t < prev {
+                    bail!("arrival trace line {}: timestamps must be ascending ({t} after {prev})", i + 1);
+                }
+            }
+            times.push(t);
+        }
+        clients.push(times);
+    }
+    if clients.is_empty() {
+        bail!("arrival trace defines no clients");
+    }
+    Ok(clients)
+}
+
+/// Load a client arrival trace from a file.
+pub fn load_arrivals(path: &std::path::Path) -> Result<Vec<Vec<f64>>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading arrival trace {path:?}"))?;
+    parse_arrivals(&text)
+}
+
 /// Serialize a model back to trace text (round-trip support).
 pub fn dump(model: &Model) -> String {
     use super::OpKind;
@@ -141,5 +199,42 @@ mod tests {
         assert!(parse("fc too few\n").is_err());
         assert!(parse("conv c 1 2 3\n").is_err());
         assert!(parse("fc f 1 x 3\n").is_err());
+    }
+
+    #[test]
+    fn parses_arrival_traces() {
+        let text = "# burst then lull\nclient a 0.5 1.0 9.5\nclient b 2.0 2.0 3.5 8.0\n";
+        let clients = parse_arrivals(text).unwrap();
+        assert_eq!(clients.len(), 2);
+        assert_eq!(clients[0], vec![0.5, 1.0, 9.5]);
+        assert_eq!(clients[1], vec![2.0, 2.0, 3.5, 8.0]); // equal stamps allowed
+    }
+
+    #[test]
+    fn rejects_malformed_arrival_traces() {
+        assert!(parse_arrivals("").is_err(), "no clients");
+        assert!(parse_arrivals("server a 1.0\n").is_err(), "unknown keyword");
+        assert!(parse_arrivals("client a\n").is_err(), "no timestamps");
+        assert!(parse_arrivals("client a 1.0 x\n").is_err(), "bad number");
+        assert!(parse_arrivals("client a 5.0 1.0\n").is_err(), "descending");
+        assert!(parse_arrivals("client a -1.0\n").is_err(), "negative");
+    }
+
+    #[test]
+    fn arrival_fixture_loads_and_drives_the_client_trace_source() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/testdata/client_trace_small.txt");
+        let clients = load_arrivals(&path).expect("fixture parses");
+        assert!(clients.len() >= 4, "fixture has {} clients", clients.len());
+        let total: usize = clients.iter().map(|c| c.len()).sum();
+        let mix = crate::serve::WorkloadMix::single(crate::serve::ModelKind::TinyCnn, 20.0);
+        let mut src = crate::serve::Source::client_trace(mix, &clients, 11);
+        let mut emitted = 0;
+        while src.next_arrival_at().is_some() {
+            let r = src.pop();
+            src.on_complete(r.arrival + 1.0, &r);
+            emitted += 1;
+        }
+        assert_eq!(emitted, total as u64, "every recorded timestamp becomes one request");
     }
 }
