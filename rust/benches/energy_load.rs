@@ -1,0 +1,134 @@
+//! Energy/power load bench: sweep the fleet power cap and chart the
+//! throughput/energy knee.
+//!
+//! One 8-package WIENNA-C fleet serves the canonical CNN/transformer mix
+//! at 0.9x capacity. An uncapped pass establishes the fleet's natural
+//! draw P0; the sweep then re-runs the identical traffic under caps from
+//! 1.2x down to 0.35x P0 and reports, per cap: drain time, p99,
+//! dynamic/leakage energy, energy per request, achieved average power and
+//! the throttled-batch share. The interesting output is the **knee** —
+//! the cap below which the DVFS governor's V² energy savings stop paying
+//! for the throughput it gives up (p99 and drain time blow up faster
+//! than mJ/req falls).
+//!
+//! Each sweep point is also timed with `testutil::bench`, so the CI perf
+//! job uploads a machine-readable `BENCH_energy.json` alongside the
+//! other bench artifacts.
+
+use wienna::config::DesignPoint;
+use wienna::cost::memo;
+use wienna::power::PowerConfig;
+use wienna::report::Table;
+use wienna::serve::{
+    ms_to_cycles, Fleet, PackageSpec, RoutePolicy, ServeStats, Source, WorkloadMix,
+};
+use wienna::testutil::bench;
+
+const PACKAGES: usize = 8;
+/// Fixed request count per run (horizon derives from it): enough events
+/// to reach steady-state batching, small enough to keep the sweep quick.
+const REQUESTS: f64 = 4_000.0;
+
+fn mix() -> WorkloadMix {
+    WorkloadMix::cnn_transformer_default()
+}
+
+fn run_once(rate: f64, horizon_ms: f64, cap_w: Option<f64>) -> ServeStats {
+    let mut fleet = Fleet::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    );
+    if let Some(w) = cap_w {
+        fleet.power = PowerConfig::with_cap(w);
+    }
+    let mut source = Source::poisson(mix(), rate, 42);
+    let mut stats = ServeStats::new();
+    fleet.run(&mut source, ms_to_cycles(horizon_ms), &mut stats);
+    stats
+}
+
+fn main() {
+    println!("##### Energy/power cap sweep ({PACKAGES} x WIENNA-C)\n");
+    let capacity = Fleet::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    )
+    .estimate_capacity_rps(&mix(), 8);
+    let rate = 0.9 * capacity;
+    let horizon_ms = REQUESTS / rate * 1e3;
+    println!(
+        "estimated capacity {capacity:.0} req/s -> offered {rate:.0} req/s (0.9x) for {horizon_ms:.0} ms (~{REQUESTS:.0} requests)"
+    );
+
+    // Uncapped baseline fixes the sweep's power scale.
+    let base = run_once(rate, horizon_ms, None);
+    let e0 = base.energy.expect("serve runs meter energy");
+    let p0 = e0.avg_power_w(base.end_cycle());
+    println!(
+        "uncapped: {:.1} W avg | {:.2} mJ/req | p99 {:.2} ms\n",
+        p0,
+        e0.energy_per_req_j(base.completed()) * 1e3,
+        base.latency_ms(99.0)
+    );
+
+    // Warm pass above populated the layer memo; scope the sweep's inserts.
+    let _scope = memo::run_scope();
+
+    let mut t = Table::new(
+        &format!("power-cap sweep at {rate:.0} req/s (baseline {p0:.0} W)"),
+        &[
+            "cap W",
+            "drain ms",
+            "p99 ms",
+            "dynamic mJ",
+            "leakage mJ",
+            "mJ/req",
+            "avg W",
+            "throttled %",
+        ],
+    );
+    for frac in [None, Some(1.2), Some(1.0), Some(0.8), Some(0.65), Some(0.5), Some(0.35)] {
+        let cap = frac.map(|f| f * p0);
+        let label = frac.map_or("none".to_string(), |f| format!("{:.0}", f * p0));
+        bench(&format!("energy/cap_{label}w"), 3, || run_once(rate, horizon_ms, cap).completed());
+        let s = run_once(rate, horizon_ms, cap);
+        let e = s.energy.expect("serve runs meter energy");
+        let dispatches = s.dispatches().max(1);
+        t.row(vec![
+            label,
+            format!("{:.1}", wienna::serve::cycles_to_ms(s.end_cycle())),
+            format!("{:.2}", s.latency_ms(99.0)),
+            format!("{:.1}", e.dynamic_mj()),
+            format!("{:.1}", e.leakage_mj),
+            format!("{:.2}", e.energy_per_req_j(s.completed()) * 1e3),
+            format!("{:.1}", e.avg_power_w(s.end_cycle())),
+            format!("{:.1}", e.throttled_batches as f64 / dispatches as f64 * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/energy_cap_sweep.csv").ok();
+
+    // Sanity anchors the CI log can grep: the tightest cap must throttle,
+    // and a generous cap must not.
+    let loose = run_once(rate, horizon_ms, Some(1.2 * p0));
+    let tight = run_once(rate, horizon_ms, Some(0.35 * p0));
+    let e_loose = loose.energy.unwrap();
+    let e_tight = tight.energy.unwrap();
+    assert!(e_tight.throttled_batches > 0, "0.35x cap did not throttle");
+    assert!(
+        e_tight.dynamic_mj() < e_loose.dynamic_mj(),
+        "throttling did not cut dynamic energy"
+    );
+    println!(
+        "\nknee check: 0.35x cap throttled {:.1}% of batches and cut dynamic energy {:.1}% (drain {:.0} -> {:.0} ms)",
+        e_tight.throttled_batches as f64 / tight.dispatches().max(1) as f64 * 100.0,
+        (1.0 - e_tight.dynamic_mj() / e_loose.dynamic_mj()) * 100.0,
+        wienna::serve::cycles_to_ms(loose.end_cycle()),
+        wienna::serve::cycles_to_ms(tight.end_cycle()),
+    );
+
+    match wienna::testutil::write_bench_json("BENCH_energy.json") {
+        Ok(p) => println!("bench json -> {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

@@ -34,6 +34,48 @@ impl ShedReason {
     }
 }
 
+/// The in-class batching gain used by the *calibrated* completion
+/// estimate (`ClusterConfig::calibrated_eta`): the factor by which the
+/// dynamic batcher amortizes a depth-`queued_ahead` backlog of `kind`
+/// relative to serving it one request at a time.
+///
+/// The gain is `(latency(B)/B) / latency(1)` at the largest batcher
+/// candidate `B` that a dispatch over this backlog could use, clamped to
+/// `(0, 1]`. The clamp is a *correctness* bound, not cosmetics: the
+/// calibrated ETA scales only the queued-backlog term by this factor, so
+/// gain ≤ 1 guarantees `calibrated ETA ≤ conservative ETA` — and since
+/// `AdmissionConfig::admit` is monotone in the ETA, the calibrated
+/// estimator can never shed a request the conservative one would have
+/// served (property-tested below).
+pub fn batching_gain(
+    cache: &mut crate::serve::CostCache,
+    engine: &crate::cost::CostEngine,
+    dp: crate::config::DesignPoint,
+    kind: crate::serve::ModelKind,
+    queued_ahead: u64,
+    batcher: &crate::serve::BatcherConfig,
+    local_buffer_bytes: u64,
+) -> f64 {
+    if queued_ahead <= 1 {
+        return 1.0;
+    }
+    let limit = queued_ahead.min(batcher.max_batch);
+    // Candidates are ascending; the dispatcher favors the largest one the
+    // backlog admits (throughput-optimal under no deadline pressure).
+    let Some(&b) = batcher.candidates.iter().filter(|&&b| b <= limit).next_back() else {
+        return 1.0;
+    };
+    if b <= 1 {
+        return 1.0;
+    }
+    let l1 = cache.get(engine, dp, kind, 1, local_buffer_bytes).latency;
+    let lb = cache.get(engine, dp, kind, b, local_buffer_bytes).latency;
+    if l1 <= 0.0 {
+        return 1.0;
+    }
+    ((lb / b as f64) / l1).clamp(f64::MIN_POSITIVE, 1.0)
+}
+
 /// Admission-control knobs, applied per package.
 #[derive(Debug, Clone, Copy)]
 pub struct AdmissionConfig {
@@ -126,6 +168,58 @@ mod tests {
         let cfg = AdmissionConfig { queue_cap: Some(0), shed_late: true };
         assert_eq!(cfg.admit(0, 200.0, 100.0, true), Err(ShedReason::DeadlineHopeless));
         assert_eq!(cfg.admit(0, 200.0, 100.0, false), Err(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn prop_batching_gain_is_a_true_gain() {
+        // Across random kinds and depths: the gain stays in (0, 1] and
+        // never grows with depth beyond the ladder's reach — i.e. the
+        // calibrated backlog estimate is never *more* pessimistic than
+        // the conservative batch-1 one.
+        use crate::config::{DesignPoint, SystemConfig};
+        use crate::cost::CostEngine;
+        use crate::serve::{BatcherConfig, CostCache, ModelKind};
+        let mut rng = crate::testutil::Rng::new(0xE7A);
+        let sys = SystemConfig::default();
+        let batcher = BatcherConfig::default();
+        let mut cache = CostCache::new();
+        let kinds = [ModelKind::TinyCnn, ModelKind::Mlp];
+        for dp in [DesignPoint::WIENNA_C, DesignPoint::INTERPOSER_A] {
+            let engine = CostEngine::for_design_point(&sys, dp);
+            for _ in 0..32 {
+                let kind = *rng.pick(&kinds);
+                let depth = rng.range_u64(0, 300);
+                let g = batching_gain(&mut cache, &engine, dp, kind, depth, &batcher, 512 * 1024);
+                assert!(g > 0.0 && g <= 1.0, "gain {g} at depth {depth}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_calibrated_eta_never_sheds_what_conservative_serves() {
+        // `admit` is monotone in the ETA, and the calibrated ETA scales
+        // the backlog by a gain ≤ 1: whatever the conservative estimate
+        // admits, the calibrated one admits too (for any depth/deadline).
+        let mut rng = crate::testutil::Rng::new(0x5EED);
+        let cfg = AdmissionConfig::default();
+        for _ in 0..500 {
+            let busy = rng.next_f32() as f64 * 1e7;
+            let backlog = rng.next_f32() as f64 * 1e8;
+            let service1 = rng.next_f32() as f64 * 1e6;
+            let gain = (rng.next_f32() as f64).clamp(f64::MIN_POSITIVE, 1.0);
+            let deadline = rng.next_f32() as f64 * 2e8;
+            let depth = rng.range_u64(0, 200) as usize;
+            let conservative = busy + backlog + service1;
+            let calibrated = busy + backlog * gain + service1;
+            assert!(calibrated <= conservative);
+            if cfg.admit(depth, conservative, deadline, true).is_ok() {
+                assert!(
+                    cfg.admit(depth, calibrated, deadline, true).is_ok(),
+                    "calibrated ETA shed a request the conservative one served \
+                     (busy {busy}, backlog {backlog}, gain {gain}, deadline {deadline})"
+                );
+            }
+        }
     }
 
     #[test]

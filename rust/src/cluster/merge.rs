@@ -12,8 +12,9 @@
 //! --stats-json` + the CI determinism gate diff exactly this output.
 
 use super::admission::ShedReason;
-use super::class::TrafficClass;
+use super::class::{TrafficClass, NUM_CLASSES};
 use super::shard::{ShardEventOutcome, ShardOutcome};
+use crate::power::{FleetEnergy, PowerModel};
 use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
 use std::collections::BTreeMap;
 
@@ -37,6 +38,12 @@ pub struct ClusterStats {
     pub shards: usize,
     /// Final per-package accounting, shard-major deterministic order.
     pub packages: Vec<Package>,
+    /// The run's energy summary (`wienna::power`), aggregated over the
+    /// shard-major package list — deterministic at any thread count.
+    pub energy: FleetEnergy,
+    /// Dynamic energy attributed to each traffic class (dense
+    /// `TrafficClass::index()` order), summed over shards in shard order.
+    pub class_energy_mj: [f64; NUM_CLASSES],
     /// Shard-local cost-cache totals (hits, misses).
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -97,11 +104,23 @@ impl ClusterStats {
             s.push_str(&format!("  \"p{p:.0}_ms\": {},\n", num(self.serve.latency_ms(p))));
         }
         s.push_str(&format!("  \"violation_rate\": {},\n", num(self.serve.violation_rate())));
+        s.push_str(&format!("  \"dynamic_mj\": {},\n", num(self.energy.dynamic_mj())));
+        s.push_str(&format!("  \"leakage_mj\": {},\n", num(self.energy.leakage_mj)));
+        s.push_str(&format!("  \"total_energy_mj\": {},\n", num(self.energy.total_mj())));
+        s.push_str(&format!(
+            "  \"energy_per_req_j\": {},\n",
+            num(self.energy.energy_per_req_j(self.serve.completed()))
+        ));
+        s.push_str(&format!(
+            "  \"avg_power_w\": {},\n",
+            num(self.energy.avg_power_w(self.serve.end_cycle()))
+        ));
+        s.push_str(&format!("  \"throttled_batches\": {},\n", self.energy.throttled_batches));
         s.push_str("  \"per_class\": [\n");
         let n = self.per_class.len();
         for (i, (class, m)) in self.per_class.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}}}{}\n",
+                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"energy_mj\": {}}}{}\n",
                 class.label(),
                 m.arrived,
                 m.completed,
@@ -110,6 +129,7 @@ impl ClusterStats {
                 m.slo_violated,
                 num(cycles_to_ms(m.latency.percentile(50.0))),
                 num(cycles_to_ms(m.latency.percentile(99.0))),
+                num(self.class_energy_mj[class.index()]),
                 if i + 1 < n { "," } else { "" }
             ));
         }
@@ -119,21 +139,25 @@ impl ClusterStats {
 }
 
 /// Fold per-shard outcomes into `stats` via the deterministic k-way merge
-/// (see module docs for the ordering contract).
-pub(crate) fn merge_into(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>) {
+/// (see module docs for the ordering contract). `model` prices the
+/// leakage integral of the merged package list.
+pub(crate) fn merge_into(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>, model: &PowerModel) {
     debug_assert!(
         outcomes.iter().enumerate().all(|(i, o)| o.shard_id == i),
         "outcomes arrive in shard order (cost::par preserves input order)"
     );
 
-    // Dispatch histograms, package accounting and counters merge by
-    // shard id — plain sums, order-insensitive but kept deterministic.
+    // Dispatch histograms, package accounting, energy and counters merge
+    // by shard id — plain sums, order-insensitive but kept deterministic.
     let mut end_cycle = 0.0f64;
     for o in &outcomes {
         stats.preemptions += o.preemptions;
         stats.cache_hits += o.cache_hits;
         stats.cache_misses += o.cache_misses;
         end_cycle = end_cycle.max(o.end_cycle);
+        for ci in 0..NUM_CLASSES {
+            stats.class_energy_mj[ci] += o.class_energy_mj[ci];
+        }
         for (&batch, &n) in &o.dispatch_hist {
             stats.serve.record_dispatches(batch, n);
         }
@@ -183,6 +207,10 @@ pub(crate) fn merge_into(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>) 
         stats.packages.extend(o.packages);
     }
     stats.serve.finish(end_cycle);
+    // Shard-major package order + fixed-order summation: bit-identical
+    // energy at any worker-thread count.
+    stats.energy = FleetEnergy::collect(&stats.packages, end_cycle, model);
+    stats.serve.energy = Some(stats.energy);
 }
 
 #[cfg(test)]
@@ -211,6 +239,7 @@ mod tests {
             dispatch_hist: BTreeMap::new(),
             preemptions: 0,
             packages: Vec::new(),
+            class_energy_mj: [0.0; NUM_CLASSES],
             end_cycle: 0.0,
             cache_hits: 0,
             cache_misses: 0,
@@ -237,7 +266,7 @@ mod tests {
         for e in a.events.iter().chain(b.events.iter()) {
             stats.record_ingress(&e.req, e.class);
         }
-        merge_into(&mut stats, vec![a, b]);
+        merge_into(&mut stats, vec![a, b], &PowerModel::default());
         assert_eq!(stats.serve.completed(), 4);
         assert_eq!(stats.per_class[&TrafficClass::Interactive].completed, 2);
         assert_eq!(stats.per_class[&TrafficClass::Batch].completed, 2);
@@ -251,16 +280,19 @@ mod tests {
         let a = outcome(0, vec![completion(5.0, 0, TrafficClass::Interactive)]);
         let mut s1 = ClusterStats::new(1);
         s1.record_ingress(&a.events[0].req, TrafficClass::Interactive);
-        merge_into(&mut s1, vec![a]);
+        merge_into(&mut s1, vec![a], &PowerModel::default());
         let b = outcome(0, vec![completion(5.0, 0, TrafficClass::Interactive)]);
         let mut s2 = ClusterStats::new(1);
         s2.record_ingress(&b.events[0].req, TrafficClass::Interactive);
-        merge_into(&mut s2, vec![b]);
+        merge_into(&mut s2, vec![b], &PowerModel::default());
         assert_eq!(s1.to_json(), s2.to_json());
         let j = s1.to_json();
         assert!(j.contains("\"arrived\": 1"));
         assert!(j.contains("\"completed\": 1"));
         assert!(j.contains("\"class\": \"interactive\""));
+        assert!(j.contains("\"dynamic_mj\": "), "energy fields are part of the gated JSON");
+        assert!(j.contains("\"throttled_batches\": 0"));
+        assert!(j.contains("\"energy_mj\": "));
         assert!(!j.contains(",\n  ]"), "no trailing comma before array close");
     }
 }

@@ -68,6 +68,7 @@ pub use class::{ClassMix, ClassSpec, TrafficClass, NUM_CLASSES};
 pub use merge::ClusterStats;
 
 use crate::cost::par;
+use crate::power::PowerConfig;
 use crate::serve::{BatcherConfig, PackageSpec, RoutePolicy, Source};
 use shard::ClassedRequest;
 
@@ -89,6 +90,19 @@ pub struct ClusterConfig {
     pub admission: AdmissionConfig,
     /// Allow higher classes to abort in-flight lower-class batches.
     pub preemption: bool,
+    /// Energy metering + optional power-cap governor (`wienna::power`).
+    /// The fleet-level cap is statically partitioned across shards in
+    /// proportion to the packages each governs, so shard simulations stay
+    /// independent (and thread-count-deterministic). No cap by default.
+    pub power: PowerConfig,
+    /// Fold in-class batching gains into the deadline-shed / EDF-routing
+    /// completion estimate (ROADMAP: the batch-1 estimate is too
+    /// conservative under deep backlogs). The calibrated estimate is
+    /// never larger than the conservative one, so it can only *admit
+    /// more*, never shed a request the conservative estimate would have
+    /// served. Off by default: switching estimators changes scheduling
+    /// decisions, and the default output is kept byte-compatible.
+    pub calibrated_eta: bool,
     /// Seed of the class-assignment hash (independent of the arrival
     /// seed, so the same traffic can be re-tagged).
     pub class_seed: u64,
@@ -104,6 +118,8 @@ impl Default for ClusterConfig {
             classes: ClassMix::default(),
             admission: AdmissionConfig::default(),
             preemption: true,
+            power: PowerConfig::default(),
+            calibrated_eta: false,
             class_seed: 0xC1A5,
         }
     }
@@ -164,13 +180,23 @@ impl Cluster {
             inputs[(req.id % shards as u64) as usize].push(ClassedRequest { req, class });
         }
 
+        // The fleet power cap splits across shards in proportion to the
+        // packages each governs (shards simulate independently — a shared
+        // dynamic budget would couple them and break determinism).
+        let total_packages = self.packages_total();
+        let shard_caps: Vec<Option<f64>> = self
+            .specs_by_shard
+            .iter()
+            .map(|s| self.cfg.power.shard_cap(s.len(), total_packages))
+            .collect();
+
         // Shard simulations are pure functions of their input slice, so
         // the thread count can only change wall-clock time, not results.
         let outcomes = par::par_map(shards, self.cfg.threads, |s| {
-            shard::run_shard(s, self.specs_by_shard[s].clone(), &inputs[s], &self.cfg)
+            shard::run_shard(s, self.specs_by_shard[s].clone(), &inputs[s], &self.cfg, shard_caps[s])
         });
 
-        merge::merge_into(&mut stats, outcomes);
+        merge::merge_into(&mut stats, outcomes, &self.cfg.power.model);
         stats
     }
 }

@@ -21,9 +21,10 @@
 //!   that batch (`Package::preempt_batch`) and sends its requests back to
 //!   the front of their queue.
 
-use super::admission::ShedReason;
+use super::admission::{batching_gain, ShedReason};
 use super::class::{TrafficClass, NUM_CLASSES};
 use super::ClusterConfig;
+use crate::power::DvfsLevel;
 use crate::serve::{choose_batch, CostCache, ModelKind, Package, PackageSpec, QueueSet, Request, RoutePolicy};
 use std::collections::BTreeMap;
 
@@ -59,8 +60,12 @@ pub(crate) struct ShardOutcome {
     /// Dispatched-batch-size histogram.
     pub dispatch_hist: BTreeMap<u64, u64>,
     pub preemptions: u64,
-    /// Final package state (utilization accounting), shard-local order.
+    /// Final package state (utilization + energy accounting), shard-local
+    /// order.
     pub packages: Vec<Package>,
+    /// Dynamic energy attributed to each traffic class (a dispatched
+    /// batch is single-class), preemption-rollback included.
+    pub class_energy_mj: [f64; NUM_CLASSES],
     pub end_cycle: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -68,6 +73,8 @@ pub(crate) struct ShardOutcome {
 
 struct ShardSim<'a> {
     cfg: &'a ClusterConfig,
+    /// This shard's slice of the fleet power cap (`PowerConfig::shard_cap`).
+    cap_w: Option<f64>,
     packages: Vec<Package>,
     /// Admission queues, indexed `[package][class]`.
     queues: Vec<Vec<QueueSet>>,
@@ -80,15 +87,17 @@ struct ShardSim<'a> {
     rr_cursor: usize,
     events: Vec<ShardEvent>,
     dispatch_hist: BTreeMap<u64, u64>,
+    class_energy_mj: [f64; NUM_CLASSES],
     preemptions: u64,
 }
 
 impl<'a> ShardSim<'a> {
-    fn new(specs: Vec<PackageSpec>, cfg: &'a ClusterConfig) -> Self {
+    fn new(specs: Vec<PackageSpec>, cfg: &'a ClusterConfig, cap_w: Option<f64>) -> Self {
         assert!(!specs.is_empty(), "a shard needs at least one package");
         let n = specs.len();
         ShardSim {
             cfg,
+            cap_w,
             packages: specs.into_iter().map(Package::new).collect(),
             queues: (0..n).map(|_| (0..NUM_CLASSES).map(|_| QueueSet::new()).collect()).collect(),
             backlog: vec![[0.0; NUM_CLASSES]; n],
@@ -97,6 +106,7 @@ impl<'a> ShardSim<'a> {
             rr_cursor: 0,
             events: Vec::new(),
             dispatch_hist: BTreeMap::new(),
+            class_energy_mj: [0.0; NUM_CLASSES],
             preemptions: 0,
         }
     }
@@ -129,10 +139,28 @@ impl<'a> ShardSim<'a> {
     /// package `i`: the busy remainder, the backlog of classes at the
     /// same or higher priority (lower classes will be bypassed), and its
     /// own batch-1 service time.
+    ///
+    /// With `ClusterConfig::calibrated_eta` the backlog term is scaled by
+    /// the in-class batching gain the dispatcher will actually achieve at
+    /// this queue depth (`admission::batching_gain`, always ≤ 1), fixing
+    /// the ROADMAP's "too conservative under deep backlogs" shedding.
     fn eta_wait(&mut self, i: usize, class: TrafficClass, kind: ModelKind, now: f64) -> f64 {
         let service1 = self.est1(i, kind);
         let busy_rem = (self.packages[i].busy_until() - now).max(0.0);
-        let ahead: f64 = self.backlog[i][..=class.index()].iter().sum();
+        let mut ahead: f64 = self.backlog[i][..=class.index()].iter().sum();
+        if self.cfg.calibrated_eta {
+            let depth: usize =
+                self.queues[i][..=class.index()].iter().map(|q| q.depth_total()).sum();
+            ahead *= batching_gain(
+                &mut self.cache,
+                &self.packages[i].engine,
+                self.packages[i].spec.dp,
+                kind,
+                depth as u64,
+                &self.cfg.batcher,
+                self.packages[i].spec.local_buffer_bytes,
+            );
+        }
         busy_rem + ahead + service1
     }
 
@@ -285,13 +313,26 @@ impl<'a> ShardSim<'a> {
             // victim batch would burn its work for nothing.
             return;
         }
-        let reqs = self.packages[idx].preempt_batch(now);
+        let (reqs, rolled_mj) = self.packages[idx].preempt_batch(now);
+        self.class_energy_mj[victim.index()] -= rolled_mj;
         let vkind = reqs[0].kind;
         let v1 = self.est1(idx, vkind);
         self.backlog[idx][victim.index()] += v1 * reqs.len() as f64;
         self.queues[idx][victim.index()].requeue_front(reqs);
         self.inflight_class[idx] = None;
         self.preemptions += 1;
+    }
+
+    /// The governor's DVFS decision for this shard's cap slice (see
+    /// `Fleet::governor_level` — same projection, shard-local scope).
+    fn governor_level(&self, cost: &crate::serve::BatchCost) -> DvfsLevel {
+        let Some(cap) = self.cap_w else {
+            return DvfsLevel::NOMINAL;
+        };
+        let model = &self.cfg.power.model;
+        let floor: f64 = self.packages.iter().map(|p| model.active_leakage_w(&p.spec.sys)).sum();
+        let inflight: f64 = self.packages.iter().map(|p| p.meter.inflight_w()).sum();
+        self.cfg.power.choose_level(cap, floor, inflight, cost)
     }
 
     /// Dispatch one batch on idle package `i`: strict class priority,
@@ -319,10 +360,14 @@ impl<'a> ShardSim<'a> {
                 self.packages[i].spec.local_buffer_bytes,
             );
             let est1 = self.est1(i, kind);
+            let level = self.governor_level(&decision.cost);
+            let energy =
+                self.cfg.power.model.batch_dynamic(&decision.cost).scaled(level.energy_scale);
             let reqs = self.queues[i][ci].pop_batch(kind, decision.batch as usize);
             debug_assert_eq!(reqs.len(), decision.batch as usize);
             self.backlog[i][ci] = (self.backlog[i][ci] - est1 * reqs.len() as f64).max(0.0);
-            self.packages[i].begin_batch(now, &decision, reqs);
+            self.class_energy_mj[ci] += energy.total_mj();
+            self.packages[i].begin_batch(now, &decision, reqs, level, energy);
             self.inflight_class[i] = Some(class);
             *self.dispatch_hist.entry(decision.batch).or_insert(0) += 1;
             return;
@@ -380,6 +425,7 @@ impl<'a> ShardSim<'a> {
             dispatch_hist: self.dispatch_hist,
             preemptions: self.preemptions,
             packages: self.packages,
+            class_energy_mj: self.class_energy_mj,
             end_cycle: now,
             cache_hits: self.cache.hits,
             cache_misses: self.cache.misses,
@@ -388,13 +434,16 @@ impl<'a> ShardSim<'a> {
 }
 
 /// Run one shard to completion over its classified arrival slice.
+/// `cap_w` is this shard's (already partitioned) slice of the fleet
+/// power cap.
 pub(crate) fn run_shard(
     shard_id: usize,
     specs: Vec<PackageSpec>,
     arrivals: &[ClassedRequest],
     cfg: &ClusterConfig,
+    cap_w: Option<f64>,
 ) -> ShardOutcome {
-    ShardSim::new(specs, cfg).run(shard_id, arrivals)
+    ShardSim::new(specs, cfg, cap_w).run(shard_id, arrivals)
 }
 
 #[cfg(test)]
@@ -418,7 +467,7 @@ mod tests {
     }
 
     fn outcome_of(cfg: &ClusterConfig, arrivals: &[ClassedRequest]) -> ShardOutcome {
-        run_shard(0, vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], arrivals, cfg)
+        run_shard(0, vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], arrivals, cfg, None)
     }
 
     #[test]
@@ -528,5 +577,72 @@ mod tests {
         let shed =
             out.events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
         assert_eq!(shed, 1, "without preemption the interactive arrival is shed as hopeless");
+    }
+
+    #[test]
+    fn calibrated_eta_rescues_a_deep_backlog_arrival() {
+        // ROADMAP satellite: the conservative batch-1 ETA sheds requests
+        // that in-class batching would in fact serve in time. Build a deep
+        // same-class backlog, then offer an arrival whose deadline sits
+        // between the calibrated and the conservative completion estimate:
+        // the conservative estimator must shed it, the calibrated one must
+        // serve it. Timings derive from the model's own batch-1/batch-32
+        // latencies so the scenario survives cost-model drift. The MLP
+        // kind is used because its FC-heavy traffic amortizes strongly
+        // with batch (weights are batch-invariant), exactly the regime
+        // where the conservative estimate overshoots most.
+        let kind = ModelKind::Mlp;
+        let spec = PackageSpec::new("p0", DesignPoint::WIENNA_C);
+        let engine = crate::cost::CostEngine::for_design_point(&spec.sys, spec.dp);
+        let mut cache = crate::serve::CostCache::new();
+        let l1 = cache.get(&engine, spec.dp, kind, 1, spec.local_buffer_bytes).latency;
+        let l32 = cache.get(&engine, spec.dp, kind, 32, spec.local_buffer_bytes).latency;
+        let l1_ms = crate::serve::cycles_to_ms(l1);
+        let backlog = 40usize;
+        // Completion estimates for the probe arrival (it lands just after
+        // t=0, one batch-1 dispatch already in flight), both rounded *up*
+        // against the simulator's exact values: conservative walks the
+        // backlog at l1 each; calibrated amortizes it at ~l32/32.
+        let eta_cons = (backlog as f64 + 2.0) * l1;
+        let eta_cal = l1 * 2.0 + backlog as f64 * (l32 / 32.0);
+        assert!(eta_cal < 0.9 * eta_cons, "batching gain too small to discriminate");
+        let deadline = (eta_cal + eta_cons) / 2.0;
+
+        // All interactive (deadline shedding on), no preemption so the
+        // admission verdict is the only discriminator.
+        let mk = |calibrated| ClusterConfig {
+            preemption: false,
+            calibrated_eta: calibrated,
+            ..Default::default()
+        };
+        let req_of = |id: u64, at_ms: f64, slo_ms: f64| {
+            let at = ms_to_cycles(at_ms);
+            ClassedRequest {
+                req: Request { id, kind, arrival: at, deadline: at + ms_to_cycles(slo_ms), client: None },
+                class: TrafficClass::Interactive,
+            }
+        };
+        let mut arrivals: Vec<ClassedRequest> =
+            (0..backlog as u64).map(|i| req_of(i, 0.0, 1e6 * l1_ms)).collect();
+        arrivals.push(req_of(backlog as u64, 0.01 * l1_ms, crate::serve::cycles_to_ms(deadline)));
+
+        let cons = outcome_of(&mk(false), &arrivals);
+        let shed_cons: Vec<u64> = cons
+            .events
+            .iter()
+            .filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_)))
+            .map(|e| e.req.id)
+            .collect();
+        assert_eq!(shed_cons, vec![backlog as u64], "conservative ETA must shed the probe");
+
+        let cal = outcome_of(&mk(true), &arrivals);
+        let shed_cal =
+            cal.events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
+        assert_eq!(shed_cal, 0, "calibrated ETA must admit (and serve) everything");
+        // The property the satellite pins: calibrated sheds ⊆ conservative
+        // sheds on identical input.
+        let completed_cal =
+            cal.events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+        assert_eq!(completed_cal, backlog + 1);
     }
 }

@@ -142,6 +142,41 @@ mod tests {
     }
 
     #[test]
+    fn wireless_overhead_vs_interposer_baseline_is_modest() {
+        // Regression pin for the paper's "modest area and power
+        // overheads" claim: the wireless machinery (all RX rows + the TX)
+        // on top of an interposer-style baseline (PEs + routers + SRAM)
+        // must stay a minority share of the package — the §6 numbers put
+        // the RX at 16% of chiplet area / 25% of chiplet power, which
+        // dilutes further at package level once the SRAM chiplet counts.
+        let b = AreaPowerBreakdown::for_system(&SystemConfig::default(), 16.0, 1e-9);
+        let wireless_area: f64 = b
+            .components
+            .iter()
+            .filter(|c| c.name.contains("Wireless"))
+            .map(|c| c.area_mm2)
+            .sum();
+        let wireless_power: f64 = b
+            .components
+            .iter()
+            .filter(|c| c.name.contains("Wireless"))
+            .map(|c| c.power_mw)
+            .sum();
+        let area_overhead = wireless_area / (b.total_area_mm2() - wireless_area);
+        let power_overhead = wireless_power / (b.total_power_mw() - wireless_power);
+        assert!(
+            area_overhead > 0.03 && area_overhead < 0.30,
+            "area overhead {:.1}% out of the modest band",
+            area_overhead * 100.0
+        );
+        assert!(
+            power_overhead > 0.05 && power_overhead < 0.40,
+            "power overhead {:.1}% out of the modest band",
+            power_overhead * 100.0
+        );
+    }
+
+    #[test]
     fn sram_dominates_memory_chiplet() {
         let b = AreaPowerBreakdown::for_system(&SystemConfig::default(), 16.0, 1e-9);
         let sram = b.components.iter().find(|c| c.name == "Global SRAM").unwrap();

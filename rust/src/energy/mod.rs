@@ -7,4 +7,4 @@ pub mod system;
 
 pub use area::{AreaPowerBreakdown, ComponentBudget};
 pub use distribution::{model_distribution_energy, EnergyComparison};
-pub use system::{system_energy, EnergyConstants, SystemEnergy};
+pub use system::{system_energy, EnergyConstants, SystemEnergy, TrafficTotals};

@@ -8,7 +8,7 @@
 //! Constants are Eyeriss-derived 65-nm figures, consistent with Table 3.
 
 use crate::config::CLOCK_HZ;
-use crate::cost::ModelCost;
+use crate::cost::{LayerCost, ModelCost};
 
 /// Energy constants at 65 nm (pJ).
 #[derive(Debug, Clone)]
@@ -32,6 +32,49 @@ impl Default for EnergyConstants {
             collect_byte_hop_pj: 0.82 * 8.0,
             idle_mw: 5000.0,          // ~5% of the Table-3 power budget
         }
+    }
+}
+
+/// Traffic aggregates that drive dynamic energy — THE single definition
+/// shared by the static whole-system path ([`system_energy`]) and the
+/// runtime meter (`serve::CostCache` fills them into `BatchCost`;
+/// `power::PowerModel` prices them per batch), so the two can never
+/// desynchronize.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrafficTotals {
+    pub macs: f64,
+    /// Global-SRAM bytes: the SRAM reads every distributed byte and
+    /// writes every collected byte.
+    pub sram_bytes: f64,
+    /// Distribution energy in pJ, straight from the NoP models (Fig 9).
+    pub dist_energy_pj: f64,
+    /// Collected bytes × average mesh hops (collection-NoP traffic).
+    pub collect_byte_hops: f64,
+}
+
+impl TrafficTotals {
+    /// Aggregate per-layer costs. `avg_hops` is the collection mesh's
+    /// average hop count (√N_C/2).
+    pub fn from_layers(layers: &[LayerCost], avg_hops: f64) -> Self {
+        let mut t = TrafficTotals::default();
+        for l in layers {
+            t.macs += l.macs as f64;
+            t.sram_bytes += (l.dist_bytes + l.collect_bytes) as f64;
+            t.dist_energy_pj += l.dist_energy_pj;
+            t.collect_byte_hops += l.collect_bytes as f64 * avg_hops;
+        }
+        t
+    }
+
+    /// Price the aggregates at `k`, in mJ:
+    /// `[compute, sram, distribution, collection]`.
+    pub fn price_mj(&self, k: &EnergyConstants) -> [f64; 4] {
+        [
+            self.macs * k.mac_pj * 1e-9,
+            self.sram_bytes * k.sram_byte_pj * 1e-9,
+            self.dist_energy_pj * 1e-9,
+            self.collect_byte_hops * k.collect_byte_hop_pj * 1e-9,
+        ]
     }
 }
 
@@ -63,19 +106,13 @@ impl SystemEnergy {
 ///
 /// `avg_hops` is the collection mesh's average hop count (√N_C/2).
 pub fn system_energy(cost: &ModelCost, avg_hops: f64, k: &EnergyConstants) -> SystemEnergy {
-    let mut sram_bytes = 0.0;
-    let mut collect_byte_hops = 0.0;
-    for l in &cost.layers {
-        // The SRAM reads every distributed byte and writes every
-        // collected byte.
-        sram_bytes += l.dist_bytes as f64 + l.collect_bytes as f64;
-        collect_byte_hops += l.collect_bytes as f64 * avg_hops;
-    }
+    let t = TrafficTotals::from_layers(&cost.layers, avg_hops);
+    let [compute_mj, sram_mj, distribution_mj, collection_mj] = t.price_mj(k);
     SystemEnergy {
-        compute_mj: cost.total_macs as f64 * k.mac_pj * 1e-9,
-        sram_mj: sram_bytes * k.sram_byte_pj * 1e-9,
-        distribution_mj: cost.total_dist_energy_pj * 1e-9,
-        collection_mj: collect_byte_hops * k.collect_byte_hop_pj * 1e-9,
+        compute_mj,
+        sram_mj,
+        distribution_mj,
+        collection_mj,
         idle_mj: k.idle_mw * (cost.total_latency / CLOCK_HZ) * 1.0,
     }
 }

@@ -41,7 +41,15 @@
 //! * [`search`] — the fleet auto-sizer: enumerate package design points
 //!   (chiplet count × PEs × buffer × NoP), prune dominated candidates,
 //!   bisect fleet widths on short serve replays, and return the cheapest
-//!   fleet meeting a target SLO at a target load (`wienna search`);
+//!   fleet meeting a target SLO at a target load (`wienna search`) — or,
+//!   with `--pareto`, the full cost × energy/request × p99 non-dominated
+//!   front;
+//! * [`power`] — runtime energy telemetry and power capping: a per-batch
+//!   energy meter driven by the cost model's traffic phases (Table-3
+//!   calibrated, with idle-chiplet power gating), a power-cap governor
+//!   enforcing a fleet watt budget through a deterministic DVFS ladder
+//!   (`--power-cap-w`), and the Pareto filtering behind the search's
+//!   multi-objective mode;
 //! * [`runtime`] — loading and executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) via the XLA PJRT CPU client
 //!   (behind the `pjrt` cargo feature, together with
@@ -80,6 +88,7 @@ pub mod cost;
 pub mod dataflow;
 pub mod energy;
 pub mod nop;
+pub mod power;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
@@ -87,3 +96,10 @@ pub mod search;
 pub mod serve;
 pub mod testutil;
 pub mod workload;
+/// Compile-only stub of the `xla` PJRT bindings: keeps the `pjrt`-gated
+/// code type-checkable in the offline build (CI runs
+/// `cargo check --features pjrt`) while the real bindings are absent.
+/// Enable `xla-backend` (and add the real `xla` dependency) to link the
+/// actual runtime instead.
+#[cfg(all(feature = "pjrt", not(feature = "xla-backend")))]
+pub mod xla;

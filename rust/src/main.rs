@@ -50,15 +50,19 @@ common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --artifacts DIR  --wireless-bw B
 serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
               --load F (fraction of fleet capacity)  --duration-ms MS  --slo-ms MS  --seed N
+              --power-cap-w W (fleet power cap; DVFS governor)  --no-power-gating
               --client-trace FILE (closed-loop replay of recorded per-client timestamps;
               the trace sets the load and the run drains it fully — ignores --load/--duration-ms)
 cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|ll|edf  --mix ...
               --slo-ms MS  --load F (x capacity) | --rps R (absolute)  --duration-ms MS  --seed N
               --queue-cap N|none  --no-shed-late  --no-preempt  --stats-json FILE  --verbose
+              --power-cap-w W (statically partitioned across shards)  --no-power-gating
+              --calibrated-eta (fold in-class batching gains into the deadline-shed estimate)
 search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
               --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
               --class-slos I,B,E (per-class p99 targets in ms, 'inf' allowed; sizes on the
-              cluster engine against the SLO vector)  --no-prune (exhaustive)  --verbose";
+              cluster engine against the SLO vector)  --no-prune (exhaustive)  --verbose
+              --pareto (emit the cost x energy/request x p99 non-dominated front)";
 
 /// Parsed flags: `--key value` pairs plus bare `--switch`es.
 struct Flags(HashMap<String, String>);
@@ -72,7 +76,14 @@ impl Flags {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("unexpected argument '{a}'\n{USAGE}"))?;
-            if key == "verbose" || key == "no-prune" || key == "no-shed-late" || key == "no-preempt" {
+            if key == "verbose"
+                || key == "no-prune"
+                || key == "no-shed-late"
+                || key == "no-preempt"
+                || key == "no-power-gating"
+                || key == "calibrated-eta"
+                || key == "pareto"
+            {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
             } else {
@@ -248,6 +259,34 @@ fn parse_mix(s: &str, slo_ms: f64) -> anyhow::Result<WorkloadMix> {
     })
 }
 
+/// Shared `--power-cap-w` / `--no-power-gating` parsing for serve and
+/// cluster.
+fn parse_power(f: &Flags) -> anyhow::Result<wienna::power::PowerConfig> {
+    let mut power = wienna::power::PowerConfig::default();
+    if let Some(w) = f.0.get("power-cap-w") {
+        let w: f64 = w.parse().map_err(|_| anyhow::anyhow!("--power-cap-w: bad number '{w}'"))?;
+        anyhow::ensure!(w > 0.0, "--power-cap-w must be positive (watts)");
+        power.cap_w = Some(w);
+    }
+    if f.flag("no-power-gating") {
+        power.model.power_gating = false;
+    }
+    Ok(power)
+}
+
+/// One-line energy telemetry summary shared by serve and cluster.
+fn energy_line(e: &wienna::power::FleetEnergy, completed: u64, end_cycle: f64) -> String {
+    format!(
+        "energy {:.1} mJ (dynamic {:.1} + leakage {:.1}) | {:.2} mJ/req | avg power {:.1} W | throttled {} batches",
+        e.total_mj(),
+        e.dynamic_mj(),
+        e.leakage_mj,
+        e.energy_per_req_j(completed) * 1e3,
+        e.avg_power_w(end_cycle),
+        e.throttled_batches,
+    )
+}
+
 fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     let packages = f.u64("packages", 4)? as usize;
     let dp = parse_design(&f.str("design", "wienna-c"))?;
@@ -261,7 +300,8 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     anyhow::ensure!(slo_ms > 0.0, "--slo-ms must be positive");
     let mix = parse_mix(&f.str("mix", "cnn"), slo_ms)?;
 
-    let mut fleet = Fleet::new(PackageSpec::homogeneous(packages, dp), policy);
+    let mut fleet =
+        Fleet::new(PackageSpec::homogeneous(packages, dp), policy).with_power(parse_power(f)?);
     let capacity = fleet.estimate_capacity_rps(&mix, 8);
     // A recorded client trace replaces the Poisson source: closed-loop
     // replay of per-client issue timestamps (the trace sets the load, so
@@ -310,6 +350,9 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         stats.mean_batch(),
         stats.max_batch(),
     );
+    if let Some(e) = &stats.energy {
+        println!("{}", energy_line(e, stats.completed(), end));
+    }
     if f.flag("verbose") {
         let mut t = Table::new(
             "per-package accounting",
@@ -361,6 +404,8 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         policy,
         preemption: !f.flag("no-preempt"),
         admission: AdmissionConfig { queue_cap, shed_late: !f.flag("no-shed-late") },
+        power: parse_power(f)?,
+        calibrated_eta: f.flag("calibrated-eta"),
         ..Default::default()
     };
     if let Some(t) = f.0.get("threads") {
@@ -409,9 +454,10 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         stats.serve.violation_rate() * 100.0,
         stats.serve.mean_batch(),
     );
+    println!("{}", energy_line(&stats.energy, stats.serve.completed(), stats.serve.end_cycle()));
     let mut t = Table::new(
         "per-class SLO accounting",
-        &["class", "arrived", "completed", "shed", "slo met", "violated", "p50 ms", "p99 ms"],
+        &["class", "arrived", "completed", "shed", "slo met", "violated", "p50 ms", "p99 ms", "energy mJ"],
     );
     for (class, m) in &stats.per_class {
         t.row(vec![
@@ -423,6 +469,7 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
             m.slo_violated.to_string(),
             format!("{:.2}", stats.class_latency_ms(*class, 50.0)),
             format!("{:.2}", stats.class_latency_ms(*class, 99.0)),
+            format!("{:.1}", stats.class_energy_mj[class.index()]),
         ]);
     }
     print!("{}", t.render());
@@ -522,14 +569,37 @@ fn cmd_search(f: &Flags) -> anyhow::Result<()> {
         ),
         Some(best) => {
             println!(
-                "cheapest fleet: {} x{} | cost {:.0} | p99 {:.2} ms (SLO {slo_ms} ms) | goodput {:.0} req/s | violations {:.2}%",
+                "cheapest fleet: {} x{} | cost {:.0} | p99 {:.2} ms (SLO {slo_ms} ms) | {:.2} mJ/req | goodput {:.0} req/s | violations {:.2}%",
                 best.point.label(),
                 best.width,
                 best.fleet_cost,
                 best.p99_ms,
+                best.energy_per_req_j * 1e3,
                 best.goodput_rps,
                 best.violation_rate * 100.0
             );
+            if f.flag("pareto") {
+                let mut t = Table::new(
+                    "cost x energy x latency Pareto front (non-dominated fleets, cheapest first)",
+                    &["package", "width", "cost", "mJ/req", "p99 ms", "goodput req/s"],
+                );
+                for p in &result.pareto {
+                    t.row(vec![
+                        p.point.label(),
+                        p.width.to_string(),
+                        format!("{:.0}", p.fleet_cost),
+                        format!("{:.2}", p.energy_per_req_j * 1e3),
+                        format!("{:.2}", p.p99_ms),
+                        format!("{:.0}", p.goodput_rps),
+                    ]);
+                }
+                print!("{}", t.render());
+                println!(
+                    "front: {} of {} feasible fleets are non-dominated (cheapest-only answer is a member)",
+                    result.pareto.len(),
+                    result.plans.len()
+                );
+            }
             if !best.class_p99_ms.is_empty() {
                 let per_class: Vec<String> = best
                     .class_p99_ms

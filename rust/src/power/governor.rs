@@ -1,0 +1,262 @@
+//! The power-cap governor: a deterministic DVFS ladder under a fleet cap.
+//!
+//! The governor runs at dispatch time, inside the (deterministic)
+//! discrete-event loop: before a batch starts, it projects the fleet's
+//! instantaneous draw — the leakage floor of every powered package plus
+//! the dynamic power of every in-flight batch — and walks the DVFS ladder
+//! top-down for the fastest level whose added draw still fits under the
+//! cap. The chosen level then *closes the loop*: it stretches the batch's
+//! makespan by `1/freq` (so the package stays busy — and holds its power
+//! share — longer) and scales its dynamic energy by the level's V² term,
+//! which is exactly what later dispatch decisions observe. Throttling
+//! therefore propagates through the simulation like real DVFS, not like
+//! an after-the-fact discount.
+//!
+//! Everything is a pure function of simulation state, so a capped cluster
+//! run remains bit-identical at any worker-thread count; with no cap the
+//! governor always answers [`DvfsLevel::NOMINAL`] and the event loop's
+//! arithmetic is untouched (`x * (1.0/1.0)` is IEEE-exact).
+
+use super::meter::PowerModel;
+use crate::config::CLOCK_HZ;
+use crate::serve::BatchCost;
+
+/// Voltage retention floor of the DVFS model: V(f) = V_FLOOR + (1-V_FLOOR)·f,
+/// so dynamic energy/op scales by V(f)² (classic CV²f with V tracking f).
+pub const V_FLOOR: f64 = 0.55;
+
+/// One rung of the DVFS ladder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DvfsLevel {
+    /// Clock multiplier in (0, 1]: batch makespan stretches by 1/freq.
+    pub freq_scale: f64,
+    /// Dynamic energy/op multiplier (V² at the level's voltage).
+    pub energy_scale: f64,
+}
+
+impl DvfsLevel {
+    /// Full speed, full voltage — exactly scale 1.0 on both axes so an
+    /// ungoverned run's floating-point arithmetic is bit-identical to a
+    /// meter-less one.
+    pub const NOMINAL: DvfsLevel = DvfsLevel { freq_scale: 1.0, energy_scale: 1.0 };
+
+    /// The level at `freq_scale`, with voltage on the affine V(f) model.
+    pub fn at(freq_scale: f64) -> DvfsLevel {
+        assert!(freq_scale > 0.0 && freq_scale <= 1.0, "freq scale {freq_scale} out of (0, 1]");
+        if freq_scale >= 1.0 {
+            return DvfsLevel::NOMINAL;
+        }
+        let v = V_FLOOR + (1.0 - V_FLOOR) * freq_scale;
+        DvfsLevel { freq_scale, energy_scale: v * v }
+    }
+
+    pub fn is_nominal(&self) -> bool {
+        self.freq_scale >= 1.0
+    }
+
+    /// Dynamic *power* multiplier: energy/op × ops/s.
+    pub fn power_scale(&self) -> f64 {
+        self.energy_scale * self.freq_scale
+    }
+}
+
+/// The ladder of available levels, fastest first (first rung is nominal).
+#[derive(Debug, Clone)]
+pub struct DvfsLadder {
+    levels: Vec<DvfsLevel>,
+}
+
+impl Default for DvfsLadder {
+    /// Five rungs from full speed down to 0.4×, spanning a ~4.7× dynamic
+    /// power range (power scale 1.0 → 0.21).
+    fn default() -> Self {
+        DvfsLadder::new(&[1.0, 0.85, 0.7, 0.55, 0.4])
+    }
+}
+
+impl DvfsLadder {
+    /// Build from descending frequency scales; the first must be 1.0.
+    pub fn new(freq_scales: &[f64]) -> Self {
+        assert!(!freq_scales.is_empty(), "ladder needs at least one level");
+        assert!(freq_scales[0] >= 1.0, "the top rung must be nominal");
+        assert!(
+            freq_scales.windows(2).all(|w| w[0] > w[1]),
+            "ladder frequencies must strictly descend"
+        );
+        DvfsLadder { levels: freq_scales.iter().map(|&f| DvfsLevel::at(f)).collect() }
+    }
+
+    pub fn levels(&self) -> &[DvfsLevel] {
+        &self.levels
+    }
+
+    /// The slowest rung — the floor when even it exceeds the budget.
+    pub fn floor(&self) -> DvfsLevel {
+        *self.levels.last().expect("ladder is never empty")
+    }
+}
+
+/// Runtime power configuration of a fleet (or one cluster shard's slice
+/// of it): the cap, the energy model behind the meter, and the ladder.
+#[derive(Debug, Clone)]
+pub struct PowerConfig {
+    /// Fleet-level power cap in watts. `None` (the default) disables the
+    /// governor entirely: every batch runs at [`DvfsLevel::NOMINAL`] and
+    /// latency statistics are bit-identical to an unmetered run.
+    pub cap_w: Option<f64>,
+    pub model: PowerModel,
+    pub ladder: DvfsLadder,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig { cap_w: None, model: PowerModel::default(), ladder: DvfsLadder::default() }
+    }
+}
+
+impl PowerConfig {
+    pub fn with_cap(cap_w: f64) -> Self {
+        assert!(cap_w > 0.0, "power cap must be positive");
+        PowerConfig { cap_w: Some(cap_w), ..Default::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap_w.is_some()
+    }
+
+    /// Static cap partition for a cluster shard owning `local` of `total`
+    /// packages: shards simulate independently (that is what keeps the
+    /// cluster thread-count-deterministic), so the fleet cap is split
+    /// proportionally to the silicon each shard governs. Smarter dynamic
+    /// partitioning is a ROADMAP follow-up.
+    pub fn shard_cap(&self, local: usize, total: usize) -> Option<f64> {
+        assert!(local <= total && total > 0);
+        self.cap_w.map(|c| c * local as f64 / total as f64)
+    }
+
+    /// The governor decision for one dispatch: the fastest level whose
+    /// projected draw fits under the `cap_w` watts this governor slice
+    /// enforces (the fleet cap, or a shard's partitioned share — callers
+    /// resolve the no-cap case to [`DvfsLevel::NOMINAL`] before calling).
+    /// `leakage_floor_w` is the summed leakage of every package the cap
+    /// governs (conservative: charged at the active rate) and
+    /// `inflight_w` the dynamic draw of batches already running. Falls
+    /// back to the ladder floor when nothing fits — refusing to dispatch
+    /// could deadlock a backlogged queue, and the floor is the least
+    /// power the hardware can run at.
+    pub fn choose_level(
+        &self,
+        cap_w: f64,
+        leakage_floor_w: f64,
+        inflight_w: f64,
+        cost: &BatchCost,
+    ) -> DvfsLevel {
+        let seconds = cost.latency / CLOCK_HZ;
+        let nominal_mj = self.model.batch_dynamic(cost).total_mj();
+        if seconds <= 0.0 || nominal_mj <= 0.0 {
+            return DvfsLevel::NOMINAL;
+        }
+        let nominal_w = nominal_mj * 1e-3 / seconds;
+        let budget = cap_w - leakage_floor_w - inflight_w;
+        for level in self.ladder.levels() {
+            if nominal_w * level.power_scale() <= budget {
+                return *level;
+            }
+        }
+        self.ladder.floor()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost_with_power(total_pj: f64, latency: f64) -> BatchCost {
+        // All dynamic energy in the distribution component (1:1 pJ).
+        BatchCost {
+            latency,
+            dist_busy: 0.0,
+            compute_busy: 0.0,
+            collect_busy: 0.0,
+            macs: 0.0,
+            sram_bytes: 0.0,
+            dist_energy_pj: total_pj,
+            collect_byte_hops: 0.0,
+        }
+    }
+
+    /// A batch whose nominal dynamic power is exactly `w` watts.
+    fn batch_at_watts(w: f64) -> BatchCost {
+        let latency = CLOCK_HZ; // 1 simulated second
+        cost_with_power(w * 1e12, latency) // w J = w * 1e12 pJ over 1 s
+    }
+
+    #[test]
+    fn ladder_is_monotone_and_nominal_topped() {
+        let ladder = DvfsLadder::default();
+        assert_eq!(ladder.levels()[0], DvfsLevel::NOMINAL);
+        for w in ladder.levels().windows(2) {
+            assert!(w[0].freq_scale > w[1].freq_scale);
+            assert!(w[0].energy_scale > w[1].energy_scale);
+            assert!(w[0].power_scale() > w[1].power_scale());
+        }
+        let floor = ladder.floor();
+        assert!(floor.power_scale() < 0.25, "floor power scale {}", floor.power_scale());
+        assert!(floor.energy_scale > 0.0 && floor.energy_scale < 1.0);
+    }
+
+    #[test]
+    fn no_cap_disables_the_governor() {
+        // The no-cap case is resolved by the callers (both
+        // `governor_level` implementations) before `choose_level` runs.
+        assert!(!PowerConfig::default().enabled());
+        assert!(PowerConfig::with_cap(100.0).enabled());
+    }
+
+    #[test]
+    fn ample_budget_runs_at_nominal() {
+        let cfg = PowerConfig::with_cap(1000.0);
+        let lvl = cfg.choose_level(1000.0, 50.0, 100.0, &batch_at_watts(100.0));
+        assert_eq!(lvl, DvfsLevel::NOMINAL);
+    }
+
+    #[test]
+    fn shrinking_budget_walks_down_the_ladder() {
+        let cfg = PowerConfig::with_cap(100.0);
+        let batch = batch_at_watts(90.0);
+        // Remaining budget shrinks as in-flight draw grows: the level can
+        // only move down the ladder, monotonically.
+        let mut last = f64::INFINITY;
+        for inflight in [0.0, 30.0, 60.0, 80.0, 95.0] {
+            let lvl = cfg.choose_level(100.0, 0.0, inflight, &batch);
+            assert!(lvl.freq_scale <= last, "ladder went up as budget shrank");
+            last = lvl.freq_scale;
+        }
+        // 90 W nominal into a 5 W budget: nothing fits, floor applies.
+        assert_eq!(cfg.choose_level(100.0, 0.0, 95.0, &batch), cfg.ladder.floor());
+    }
+
+    #[test]
+    fn projection_respects_the_cap_when_feasible() {
+        let cfg = PowerConfig::with_cap(60.0);
+        let batch = batch_at_watts(55.0);
+        let lvl = cfg.choose_level(60.0, 10.0, 20.0, &batch);
+        // Budget is 30 W; the level chosen must project at most that.
+        assert!(55.0 * lvl.power_scale() <= 30.0 + 1e-9);
+        assert!(!lvl.is_nominal());
+    }
+
+    #[test]
+    fn shard_caps_partition_proportionally() {
+        let cfg = PowerConfig::with_cap(400.0);
+        assert_eq!(cfg.shard_cap(4, 16), Some(100.0));
+        assert_eq!(cfg.shard_cap(16, 16), Some(400.0));
+        assert_eq!(PowerConfig::default().shard_cap(4, 16), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly descend")]
+    fn unsorted_ladders_are_rejected() {
+        DvfsLadder::new(&[1.0, 0.5, 0.7]);
+    }
+}

@@ -1,0 +1,269 @@
+//! The energy meter: per-batch dynamic energy from the cost model's
+//! traffic phases, plus a Table-3-derived leakage model with power gating.
+//!
+//! Dynamic energy reuses exactly the machinery behind the paper's energy
+//! results: the distribution pJ of a batch comes from the NoP models
+//! (wireless multicast vs interposer mesh — the Fig-9 comparison), and
+//! the strategy-invariant components (MACs, global-SRAM bytes, collection
+//! byte-hops) are priced through the same 65-nm
+//! [`EnergyConstants`](crate::energy::EnergyConstants) as
+//! `energy::system`. Leakage is pinned to the Table-3 component budget
+//! (`energy::area`): a fixed fraction of each component's active power
+//! burns whenever the silicon is powered, and **power gating** sheds most
+//! of an idle chiplet's share while the always-on memory chiplet (global
+//! SRAM + TX) keeps leaking.
+
+use crate::config::SystemConfig;
+use crate::energy::area::{PE_POWER_MW, ROUTER_POWER_MW, SRAM_POWER_MW_PER_MIB};
+use crate::energy::EnergyConstants;
+use crate::serve::BatchCost;
+
+/// Dynamic energy of one dispatched batch, by component (mJ).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchEnergy {
+    pub compute_mj: f64,
+    pub sram_mj: f64,
+    pub dist_mj: f64,
+    pub collect_mj: f64,
+}
+
+impl BatchEnergy {
+    pub fn total_mj(&self) -> f64 {
+        self.compute_mj + self.sram_mj + self.dist_mj + self.collect_mj
+    }
+
+    /// Every component scaled by `k` (the DVFS ladder's V²·energy scale).
+    pub fn scaled(&self, k: f64) -> BatchEnergy {
+        BatchEnergy {
+            compute_mj: self.compute_mj * k,
+            sram_mj: self.sram_mj * k,
+            dist_mj: self.dist_mj * k,
+            collect_mj: self.collect_mj * k,
+        }
+    }
+}
+
+/// The runtime power model: dynamic per-op energies plus the leakage
+/// calibration against the Table-3 power budget.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// 65-nm dynamic energy constants (shared with `energy::system`).
+    pub constants: EnergyConstants,
+    /// Leakage as a fraction of the Table-3 *active* power budget. 65-nm
+    /// logic leaks well under 10% of its switching power; the default
+    /// charges 8% of each component's Table-3 row.
+    pub leakage_fraction: f64,
+    /// Gate idle chiplets: a package with no batch in flight sheds
+    /// `gating_efficiency` of its chiplet-side leakage (PE arrays +
+    /// collection routers). The memory chiplet (global SRAM + TX) is
+    /// always on — it holds live model weights.
+    pub power_gating: bool,
+    /// Share of chiplet leakage removed by gating (sleep transistors
+    /// retain state but cannot cut the rail entirely).
+    pub gating_efficiency: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            constants: EnergyConstants::default(),
+            leakage_fraction: 0.08,
+            power_gating: true,
+            gating_efficiency: 0.95,
+        }
+    }
+}
+
+impl PowerModel {
+    /// Dynamic energy of one batch from its memoized cost: MACs, SRAM
+    /// traffic (every distributed byte read + every collected byte
+    /// written), the NoP-model distribution energy, and collection
+    /// byte-hops over the wired mesh — priced by the same
+    /// [`TrafficTotals::price_mj`](crate::energy::TrafficTotals) formulas
+    /// as the static `energy::system_energy` path. Unscaled — the caller
+    /// applies the DVFS level's energy scale.
+    pub fn batch_dynamic(&self, cost: &BatchCost) -> BatchEnergy {
+        let t = crate::energy::TrafficTotals {
+            macs: cost.macs,
+            sram_bytes: cost.sram_bytes,
+            dist_energy_pj: cost.dist_energy_pj,
+            collect_byte_hops: cost.collect_byte_hops,
+        };
+        let [compute_mj, sram_mj, dist_mj, collect_mj] = t.price_mj(&self.constants);
+        BatchEnergy { compute_mj, sram_mj, dist_mj, collect_mj }
+    }
+
+    /// Leakage of the gateable chiplet side (PE arrays + collection
+    /// routers, Table-3 rows), in watts.
+    pub fn chiplet_leakage_w(&self, sys: &SystemConfig) -> f64 {
+        let per_chiplet_mw = PE_POWER_MW * sys.pes_per_chiplet as f64 + ROUTER_POWER_MW;
+        per_chiplet_mw * sys.num_chiplets as f64 * self.leakage_fraction * 1e-3
+    }
+
+    /// Leakage of the always-on memory chiplet (global SRAM), in watts.
+    pub fn always_on_leakage_w(&self, sys: &SystemConfig) -> f64 {
+        let sram_mib = sys.global_sram_bytes as f64 / (1024.0 * 1024.0);
+        SRAM_POWER_MW_PER_MIB * sram_mib * self.leakage_fraction * 1e-3
+    }
+
+    /// Whole-package leakage while a batch is in flight.
+    pub fn active_leakage_w(&self, sys: &SystemConfig) -> f64 {
+        self.always_on_leakage_w(sys) + self.chiplet_leakage_w(sys)
+    }
+
+    /// Whole-package leakage while idle: with power gating the chiplet
+    /// side drops to its retention floor, without it idle == active.
+    pub fn idle_leakage_w(&self, sys: &SystemConfig) -> f64 {
+        let gated = if self.power_gating { 1.0 - self.gating_efficiency } else { 1.0 };
+        self.always_on_leakage_w(sys) + self.chiplet_leakage_w(sys) * gated
+    }
+}
+
+/// Per-package runtime energy telemetry. Lives on `serve::Package`; both
+/// event loops (fleet and cluster shard) charge it through the package's
+/// batch lifecycle, so the accounting is identical wherever the package
+/// serves.
+#[derive(Debug, Clone, Default)]
+pub struct PackageMeter {
+    pub compute_mj: f64,
+    pub sram_mj: f64,
+    pub dist_mj: f64,
+    pub collect_mj: f64,
+    /// Batches dispatched below the nominal DVFS level.
+    pub throttled_batches: u64,
+    /// Dynamic power draw of the in-flight batch (W); 0 while idle. The
+    /// governor reads this to project fleet power at dispatch time.
+    inflight_w: f64,
+    /// The in-flight batch's (already level-scaled) energy, kept so a
+    /// preemption can roll the un-run share back.
+    cur: Option<BatchEnergy>,
+}
+
+impl PackageMeter {
+    /// Total dynamic energy metered so far (mJ).
+    pub fn dynamic_mj(&self) -> f64 {
+        self.compute_mj + self.sram_mj + self.dist_mj + self.collect_mj
+    }
+
+    pub fn inflight_w(&self) -> f64 {
+        self.inflight_w
+    }
+
+    /// Charge one dispatched batch: `energy` is the level-scaled dynamic
+    /// energy, `cycles` the level-stretched makespan.
+    pub(crate) fn begin(&mut self, energy: BatchEnergy, cycles: f64, throttled: bool) {
+        self.compute_mj += energy.compute_mj;
+        self.sram_mj += energy.sram_mj;
+        self.dist_mj += energy.dist_mj;
+        self.collect_mj += energy.collect_mj;
+        if throttled {
+            self.throttled_batches += 1;
+        }
+        self.inflight_w = if cycles > 0.0 {
+            energy.total_mj() * 1e-3 / (cycles / crate::config::CLOCK_HZ)
+        } else {
+            0.0
+        };
+        self.cur = Some(energy);
+    }
+
+    /// The in-flight batch completed.
+    pub(crate) fn finish(&mut self) {
+        self.inflight_w = 0.0;
+        self.cur = None;
+    }
+
+    /// The in-flight batch was preempted with `undone` of it un-run: the
+    /// energy already burnt stays counted (preempted work is real wasted
+    /// work), the un-run share is rolled back. Returns the mJ removed so
+    /// per-class attribution can roll back the same amount.
+    pub(crate) fn rollback(&mut self, undone: f64) -> f64 {
+        let cur = self.cur.take().expect("in-flight batch has metered energy");
+        self.compute_mj -= cur.compute_mj * undone;
+        self.sram_mj -= cur.sram_mj * undone;
+        self.dist_mj -= cur.dist_mj * undone;
+        self.collect_mj -= cur.collect_mj * undone;
+        self.inflight_w = 0.0;
+        cur.total_mj() * undone
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(macs: f64, sram: f64, dist_pj: f64, hops: f64, latency: f64) -> BatchCost {
+        BatchCost {
+            latency,
+            dist_busy: 0.0,
+            compute_busy: 0.0,
+            collect_busy: 0.0,
+            macs,
+            sram_bytes: sram,
+            dist_energy_pj: dist_pj,
+            collect_byte_hops: hops,
+        }
+    }
+
+    #[test]
+    fn batch_dynamic_prices_every_component() {
+        let m = PowerModel::default();
+        let e = m.batch_dynamic(&cost(1e9, 1e6, 5e6, 2e6, 1e6));
+        assert!(e.compute_mj > 0.0 && e.sram_mj > 0.0 && e.dist_mj > 0.0 && e.collect_mj > 0.0);
+        // MACs dominate this synthetic batch: 1e9 * 0.5 pJ = 0.5 mJ.
+        assert!((e.compute_mj - 0.5).abs() < 1e-12);
+        assert!((e.dist_mj - 5e-3).abs() < 1e-12);
+        let s = e.scaled(0.5);
+        assert!((s.total_mj() - e.total_mj() * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leakage_tracks_table3_budget() {
+        let m = PowerModel::default();
+        let sys = SystemConfig::default();
+        // Table-3 chiplet power: 256 x (90 mW PE array + 170 mW router)
+        // ~ 66.6 W; SRAM 10 W. At 8% leakage: ~5.3 W + 0.8 W.
+        let chip = m.chiplet_leakage_w(&sys);
+        let mem = m.always_on_leakage_w(&sys);
+        assert!(chip > 4.0 && chip < 7.0, "chiplet leakage {chip} W");
+        assert!(mem > 0.5 && mem < 1.2, "SRAM leakage {mem} W");
+        assert_eq!(m.active_leakage_w(&sys), chip + mem);
+    }
+
+    #[test]
+    fn gating_sheds_chiplet_leakage_only() {
+        let sys = SystemConfig::default();
+        let on = PowerModel::default();
+        let off = PowerModel { power_gating: false, ..PowerModel::default() };
+        assert_eq!(off.idle_leakage_w(&sys), off.active_leakage_w(&sys));
+        let idle = on.idle_leakage_w(&sys);
+        let expected = on.always_on_leakage_w(&sys)
+            + on.chiplet_leakage_w(&sys) * (1.0 - on.gating_efficiency);
+        assert!((idle - expected).abs() < 1e-12);
+        assert!(idle < on.active_leakage_w(&sys));
+        // The always-on memory chiplet never gates away.
+        assert!(idle > on.always_on_leakage_w(&sys) * 0.999);
+    }
+
+    #[test]
+    fn meter_begin_finish_rollback() {
+        let mut meter = PackageMeter::default();
+        assert_eq!(meter.dynamic_mj(), 0.0);
+        let e = BatchEnergy { compute_mj: 4.0, sram_mj: 2.0, dist_mj: 1.0, collect_mj: 1.0 };
+        meter.begin(e, crate::config::CLOCK_HZ, false); // 1 simulated second
+        assert!((meter.dynamic_mj() - 8.0).abs() < 1e-12);
+        // 8 mJ over 1 s = 8 mW.
+        assert!((meter.inflight_w() - 8e-3).abs() < 1e-15);
+        meter.finish();
+        assert_eq!(meter.inflight_w(), 0.0);
+
+        // Preempt a second batch three quarters un-run: 25% of its energy
+        // stays burnt.
+        meter.begin(e, crate::config::CLOCK_HZ, true);
+        assert_eq!(meter.throttled_batches, 1);
+        let rolled = meter.rollback(0.75);
+        assert!((rolled - 6.0).abs() < 1e-12);
+        assert!((meter.dynamic_mj() - 10.0).abs() < 1e-12);
+        assert_eq!(meter.inflight_w(), 0.0);
+    }
+}

@@ -1,0 +1,73 @@
+//! `wienna::power` — runtime energy telemetry, power capping, and the
+//! energy axis of the design-space search (substrate S15).
+//!
+//! The paper's second headline claim — 38.2% lower energy than the
+//! interposer NoP — had only a *static* counterpart in this crate
+//! (`energy::{area,distribution,system}` price one isolated inference).
+//! This module gives the discrete-event serving stack a *runtime* energy
+//! story:
+//!
+//! * [`meter`] — the energy meter. Every dispatched batch is charged its
+//!   dynamic energy, derived from the cost model's traffic phases
+//!   (distribution pJ straight from the NoP models behind Fig 9, SRAM
+//!   bytes, MACs, collection byte-hops) through the Table-3-consistent
+//!   [`EnergyConstants`](crate::energy::EnergyConstants); a leakage term
+//!   calibrated against the Table-3 power budget accrues over wall time,
+//!   with optional **power gating** that sheds most of an idle chiplet's
+//!   leakage. Telemetry lands in a per-package [`PackageMeter`].
+//! * [`governor`] — the power-cap governor. A fleet-level cap in watts is
+//!   enforced through a deterministic DVFS ladder: each dispatch picks
+//!   the fastest frequency level whose projected draw (leakage floor +
+//!   in-flight dynamic power + this batch) fits under the cap. The chosen
+//!   level stretches the batch's makespan (cycles → time) *and* scales
+//!   its dynamic energy (V² · f), so capping is a closed feedback loop —
+//!   throttled batches run longer, hold their power share longer, and
+//!   push later dispatches down the ladder — not post-hoc bookkeeping.
+//!   With no cap configured every batch runs at [`DvfsLevel::NOMINAL`]
+//!   and the serving simulation is bit-identical to the meter-less one.
+//! * [`pareto`] — exhaustive non-dominated filtering, the multi-objective
+//!   output of `search::autosize` (dollar cost × energy/request × p99
+//!   instead of cheapest-only; `wienna search --pareto`).
+//! * [`stats`] — fleet-level aggregation: [`FleetEnergy`] sums the
+//!   per-package meters and the leakage integral, and feeds the energy
+//!   fields of `serve::ServeStats` and the cluster stats JSON (which
+//!   stays bit-identical at any worker-thread count — energy accumulates
+//!   in deterministic shard-major order).
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use wienna::config::DesignPoint;
+//! use wienna::power::PowerConfig;
+//! use wienna::serve::{Fleet, ModelKind, PackageSpec, RoutePolicy, ServeStats, Source, WorkloadMix};
+//!
+//! let mut fleet = Fleet::new(
+//!     PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+//!     RoutePolicy::EarliestDeadline,
+//! );
+//! fleet.power = PowerConfig::with_cap(250.0); // 250 W fleet cap
+//! let mix = WorkloadMix::single(ModelKind::ResNet50, 25.0);
+//! let mut source = Source::poisson(mix, 2000.0, 42);
+//! let mut stats = ServeStats::new();
+//! fleet.run(&mut source, wienna::serve::ms_to_cycles(100.0), &mut stats);
+//! let e = stats.energy.expect("serve runs always meter energy");
+//! println!(
+//!     "{:.1} mJ total ({:.1} dynamic + {:.1} leakage) | {:.2} J/req | avg {:.1} W | {} throttled",
+//!     e.total_mj(),
+//!     e.dynamic_mj(),
+//!     e.leakage_mj,
+//!     e.energy_per_req_j(stats.completed()),
+//!     e.avg_power_w(stats.end_cycle()),
+//!     e.throttled_batches,
+//! );
+//! ```
+
+pub mod governor;
+pub mod meter;
+pub mod pareto;
+pub mod stats;
+
+pub use governor::{DvfsLadder, DvfsLevel, PowerConfig};
+pub use meter::{BatchEnergy, PackageMeter, PowerModel};
+pub use pareto::{dominates, pareto_front};
+pub use stats::FleetEnergy;

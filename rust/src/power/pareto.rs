@@ -1,0 +1,109 @@
+//! Exhaustive non-dominated (Pareto) filtering over small point sets.
+//!
+//! The auto-sizer's multi-objective output (`wienna search --pareto`)
+//! scores every feasible fleet on (dollar cost, energy/request, p99) and
+//! keeps the non-dominated subset. The sets involved are tiny (one sized
+//! plan per surviving candidate — dozens, not millions), so the O(n²)
+//! exhaustive check is both fastest in practice and trivially auditable:
+//! the integration suite re-verifies the front against this very
+//! definition.
+//!
+//! Orderings use `f64::total_cmp`, so a `NaN` coordinate (e.g. the p99 of
+//! a probe that saw no traffic) sorts as *worse than everything* instead
+//! of poisoning comparisons: a NaN-coordinate point can still be
+//! dominated, but can only dominate a point that is NaN there too.
+
+use std::cmp::Ordering;
+
+/// `true` when `a` dominates `b`: no worse on every axis (minimizing),
+/// strictly better on at least one.
+pub fn dominates<const D: usize>(a: &[f64; D], b: &[f64; D]) -> bool {
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        match x.total_cmp(y) {
+            Ordering::Greater => return false,
+            Ordering::Less => strictly_better = true,
+            Ordering::Equal => {}
+        }
+    }
+    strictly_better
+}
+
+/// Indices (ascending) of the non-dominated members of `points`.
+/// Duplicate points dominate nothing, so ties all stay on the front.
+pub fn pareto_front<const D: usize>(points: &[[f64; D]]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points.iter().enumerate().any(|(j, other)| j != i && dominates(other, &points[i]))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_definition() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(dominates(&[0.5, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]), "equal points never dominate");
+        assert!(!dominates(&[0.5, 4.0], &[1.0, 3.0]), "trade-offs never dominate");
+        assert!(!dominates(&[2.0, 2.0], &[1.0, 3.0]));
+    }
+
+    #[test]
+    fn nan_sorts_as_worst() {
+        // A NaN coordinate loses that axis to any real value…
+        assert!(dominates(&[1.0, 2.0], &[1.0, f64::NAN]));
+        assert!(!dominates(&[1.0, f64::NAN], &[1.0, 2.0]));
+        // …and two NaNs tie on it.
+        assert!(dominates(&[1.0, f64::NAN], &[2.0, f64::NAN]));
+    }
+
+    #[test]
+    fn front_of_a_known_set() {
+        let pts = [
+            [1.0, 10.0, 5.0], // on front (cheapest)
+            [2.0, 4.0, 5.0],  // on front (energy trade)
+            [2.0, 4.0, 6.0],  // dominated by [1]
+            [3.0, 3.0, 1.0],  // on front (latency trade)
+            [9.0, 9.0, 9.0],  // dominated by everything
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn front_properties_hold_on_a_pseudorandom_cloud() {
+        let mut rng = crate::testutil::Rng::new(7);
+        let pts: Vec<[f64; 3]> = (0..60)
+            .map(|_| [rng.next_f32() as f64, rng.next_f32() as f64, rng.next_f32() as f64])
+            .collect();
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        // No front member is dominated by any point…
+        for &i in &front {
+            assert!(pts.iter().all(|p| !dominates(p, &pts[i])));
+        }
+        // …and every non-member is dominated by some front member
+        // (dominance is transitive, so a maximal dominator is on the front).
+        for (i, p) in pts.iter().enumerate() {
+            if !front.contains(&i) {
+                assert!(front.iter().any(|&f| dominates(&pts[f], p)), "point {i} escaped");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_all_stay_on_the_front() {
+        let pts = [[1.0, 1.0], [1.0, 1.0], [2.0, 0.5]];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: [[f64; 2]; 0] = [];
+        assert!(pareto_front(&empty).is_empty());
+        assert_eq!(pareto_front(&[[3.0, 4.0]]), vec![0]);
+    }
+}

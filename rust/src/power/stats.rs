@@ -1,0 +1,134 @@
+//! Fleet-level energy aggregation: the run's energy/power summary.
+//!
+//! [`FleetEnergy`] folds the per-package meters and the leakage integral
+//! into one record. Both serving engines attach it to their stats —
+//! `serve::Fleet::run` sets `ServeStats::energy`, and the cluster's
+//! deterministic merge computes it from the merged (shard-major ordered)
+//! package list, so the value is bit-identical at any worker-thread
+//! count.
+
+use super::meter::PowerModel;
+use crate::config::CLOCK_HZ;
+use crate::serve::Package;
+
+/// One run's energy totals, by component (mJ).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FleetEnergy {
+    pub compute_mj: f64,
+    pub sram_mj: f64,
+    pub dist_mj: f64,
+    pub collect_mj: f64,
+    /// Leakage integral over the run: active leakage while a package
+    /// served, idle (possibly power-gated) leakage otherwise.
+    pub leakage_mj: f64,
+    /// Batches the governor dispatched below the nominal DVFS level.
+    pub throttled_batches: u64,
+}
+
+impl FleetEnergy {
+    /// Aggregate the fleet's meters at the end of a run spanning
+    /// `[0, end_cycle]`. Iterates `packages` in the given order and sums
+    /// with plain `+=`, so a deterministic package order (the cluster's
+    /// shard-major merge order) yields a bit-identical result.
+    pub fn collect(packages: &[Package], end_cycle: f64, model: &PowerModel) -> FleetEnergy {
+        let mut e = FleetEnergy::default();
+        let end_s = (end_cycle / CLOCK_HZ).max(0.0);
+        for p in packages {
+            e.compute_mj += p.meter.compute_mj;
+            e.sram_mj += p.meter.sram_mj;
+            e.dist_mj += p.meter.dist_mj;
+            e.collect_mj += p.meter.collect_mj;
+            e.throttled_batches += p.meter.throttled_batches;
+            // busy_cycles is already DVFS-stretched (wall time on the
+            // simulated clock) and preemption-rolled-back.
+            let busy_s = (p.busy_cycles / CLOCK_HZ).clamp(0.0, end_s);
+            let idle_s = end_s - busy_s;
+            e.leakage_mj += (model.active_leakage_w(&p.spec.sys) * busy_s
+                + model.idle_leakage_w(&p.spec.sys) * idle_s)
+                * 1e3;
+        }
+        e
+    }
+
+    /// Dynamic (switching) energy across all components.
+    pub fn dynamic_mj(&self) -> f64 {
+        self.compute_mj + self.sram_mj + self.dist_mj + self.collect_mj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.dynamic_mj() + self.leakage_mj
+    }
+
+    /// Whole-run energy per completed request, in joules (`NaN` when
+    /// nothing completed).
+    pub fn energy_per_req_j(&self, completed: u64) -> f64 {
+        if completed == 0 {
+            f64::NAN
+        } else {
+            self.total_mj() * 1e-3 / completed as f64
+        }
+    }
+
+    /// Mean power over the run, in watts (`NaN` for an empty run).
+    pub fn avg_power_w(&self, end_cycle: f64) -> f64 {
+        if end_cycle <= 0.0 {
+            f64::NAN
+        } else {
+            self.total_mj() * 1e-3 / (end_cycle / CLOCK_HZ)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignPoint;
+    use crate::serve::PackageSpec;
+
+    fn fresh_packages(n: usize) -> Vec<Package> {
+        PackageSpec::homogeneous(n, DesignPoint::WIENNA_C).into_iter().map(Package::new).collect()
+    }
+
+    #[test]
+    fn idle_fleet_accrues_exactly_leakage_times_time() {
+        // Satellite acceptance: an idle fleet's whole-run energy is the
+        // idle-leakage integral and nothing else — computed with the very
+        // same arithmetic, so the equality is exact.
+        let model = PowerModel { power_gating: false, ..PowerModel::default() };
+        let pkgs = fresh_packages(1);
+        let end = CLOCK_HZ * 2.0; // 2 simulated seconds
+        let e = FleetEnergy::collect(&pkgs, end, &model);
+        assert_eq!(e.dynamic_mj(), 0.0, "no batches, no dynamic energy");
+        assert_eq!(e.throttled_batches, 0);
+        assert_eq!(e.leakage_mj, model.idle_leakage_w(&pkgs[0].spec.sys) * 2.0 * 1e3);
+        // Without gating, idle leakage is the full active rate.
+        assert_eq!(e.leakage_mj, model.active_leakage_w(&pkgs[0].spec.sys) * 2.0 * 1e3);
+    }
+
+    #[test]
+    fn power_gating_cuts_idle_leakage() {
+        let gated = PowerModel::default();
+        let ungated = PowerModel { power_gating: false, ..PowerModel::default() };
+        let pkgs = fresh_packages(4);
+        let end = CLOCK_HZ;
+        let e_gated = FleetEnergy::collect(&pkgs, end, &gated);
+        let e_ungated = FleetEnergy::collect(&pkgs, end, &ungated);
+        assert!(
+            e_gated.leakage_mj < 0.5 * e_ungated.leakage_mj,
+            "gating saved too little: {} vs {}",
+            e_gated.leakage_mj,
+            e_ungated.leakage_mj
+        );
+        assert!(e_gated.leakage_mj > 0.0, "the memory chiplet never gates away");
+    }
+
+    #[test]
+    fn per_request_and_power_edges() {
+        let e = FleetEnergy { leakage_mj: 500.0, ..Default::default() };
+        assert!(e.energy_per_req_j(0).is_nan());
+        assert!((e.energy_per_req_j(100) - 5e-3).abs() < 1e-15);
+        assert!(e.avg_power_w(0.0).is_nan());
+        // 500 mJ over 1 simulated second = 0.5 W.
+        assert!((e.avg_power_w(CLOCK_HZ) - 0.5).abs() < 1e-12);
+    }
+}

@@ -11,6 +11,12 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
+// Without the `xla-backend` feature the compile-only stub (`crate::xla`)
+// stands in for the real bindings, so this module — and everything
+// pjrt-gated above it — stays type-checked in the offline build.
+#[cfg(not(feature = "xla-backend"))]
+use crate::xla;
+
 /// Compiled-executable cache over an artifact manifest.
 pub struct ExecutableCache {
     client: xla::PjRtClient,

@@ -135,6 +135,10 @@ pub struct FleetPlan {
     pub p99_ms: f64,
     pub goodput_rps: f64,
     pub violation_rate: f64,
+    /// Whole-run energy per completed request from the probe's meter
+    /// (`wienna::power`), in joules — the third Pareto axis. `NaN` when
+    /// the probe completed nothing.
+    pub energy_per_req_j: f64,
     /// Per-class p99 latencies from the cluster probe (`NaN` for a class
     /// with no completions; empty in single-class mode).
     pub class_p99_ms: Vec<(TrafficClass, f64)>,
@@ -156,6 +160,11 @@ pub struct AutosizeResult {
     pub simulated_runs: usize,
     /// Every survivor's best fleet, cheapest first.
     pub plans: Vec<FleetPlan>,
+    /// The non-dominated subset of `plans` over (dollar cost,
+    /// energy/request, p99), cheapest first (`wienna search --pareto`).
+    /// `best` is always a member: the plan sort breaks cost ties by p99
+    /// then energy, so the cheapest plan cannot be dominated.
+    pub pareto: Vec<FleetPlan>,
 }
 
 /// Characterize one candidate analytically. All cost-model work funnels
@@ -219,6 +228,9 @@ fn probe(point: &PackagePoint, width: u64, cfg: &AutosizeConfig, costs: &CostMod
                 p99_ms: stats.latency_ms(99.0),
                 goodput_rps: stats.goodput_rps(),
                 violation_rate: stats.violation_rate(),
+                energy_per_req_j: stats
+                    .energy
+                    .map_or(f64::NAN, |e| e.energy_per_req_j(stats.completed())),
                 class_p99_ms: Vec::new(),
                 meets_class_slos: None,
             }
@@ -261,6 +273,7 @@ fn probe(point: &PackagePoint, width: u64, cfg: &AutosizeConfig, costs: &CostMod
                 p99_ms: stats.serve.latency_ms(99.0),
                 goodput_rps: stats.serve.goodput_rps(),
                 violation_rate: stats.serve.violation_rate(),
+                energy_per_req_j: stats.energy.energy_per_req_j(stats.serve.completed()),
                 class_p99_ms,
                 meets_class_slos: Some(all_met),
             }
@@ -367,9 +380,22 @@ pub fn autosize(cfg: &AutosizeConfig, space: &SearchSpace, costs: &CostModel) ->
     // total_cmp, not partial_cmp: a multi-class plan whose probe saw no
     // traffic at all carries a NaN p99 yet is legitimately feasible (all
     // targets trivially met), and NaN must sort deterministically (last
-    // among equal costs) instead of panicking the search.
-    plans.sort_by(|a, b| a.fleet_cost.total_cmp(&b.fleet_cost).then(a.p99_ms.total_cmp(&b.p99_ms)));
-    AutosizeResult { best: plans.first().cloned(), explored, pruned, simulated_runs, plans }
+    // among equal costs) instead of panicking the search. The p99-then-
+    // energy tie-break also guarantees plans[0] is Pareto-non-dominated:
+    // any dominator would need cost <= the minimum with some strict
+    // improvement, which the tie-break order rules out.
+    plans.sort_by(|a, b| {
+        a.fleet_cost
+            .total_cmp(&b.fleet_cost)
+            .then(a.p99_ms.total_cmp(&b.p99_ms))
+            .then(a.energy_per_req_j.total_cmp(&b.energy_per_req_j))
+    });
+    // Multi-objective output: the (cost, energy/request, p99) front.
+    let points: Vec<[f64; 3]> =
+        plans.iter().map(|p| [p.fleet_cost, p.energy_per_req_j, p.p99_ms]).collect();
+    let pareto: Vec<FleetPlan> =
+        crate::power::pareto_front(&points).into_iter().map(|i| plans[i].clone()).collect();
+    AutosizeResult { best: plans.first().cloned(), explored, pruned, simulated_runs, plans, pareto }
 }
 
 #[cfg(test)]
@@ -460,6 +486,35 @@ mod tests {
         cfg.class_slos = Some(MultiClassSlo::with_targets(0.001, 80.0, f64::INFINITY));
         let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
         assert!(r.best.is_none(), "1 us interactive p99 must be infeasible");
+    }
+
+    #[test]
+    fn pareto_front_is_non_dominated_and_contains_the_cheapest() {
+        let cfg = tiny_cfg(1500.0);
+        let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+        assert!(!r.pareto.is_empty(), "a feasible search has a front");
+        let triple = |p: &FleetPlan| [p.fleet_cost, p.energy_per_req_j, p.p99_ms];
+        // No front member is dominated by any plan.
+        for f in &r.pareto {
+            for p in &r.plans {
+                assert!(
+                    !crate::power::dominates(&triple(p), &triple(f)),
+                    "front member {} x{} dominated by {} x{}",
+                    f.point.label(),
+                    f.width,
+                    p.point.label(),
+                    p.width
+                );
+            }
+        }
+        // The cheapest-only answer is on the front, with probed energy.
+        let best = r.best.expect("feasible search");
+        assert!(r.pareto.iter().any(|f| triple(f) == triple(&best)));
+        assert!(best.energy_per_req_j > 0.0, "probes meter energy");
+        // The front is cheapest-first like `plans`.
+        for w in r.pareto.windows(2) {
+            assert!(w[0].fleet_cost <= w[1].fleet_cost);
+        }
     }
 
     #[test]

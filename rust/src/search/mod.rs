@@ -23,6 +23,10 @@
 //!   [`MultiClassSlo`](autosize::MultiClassSlo) set, probes run on the
 //!   sharded `cluster` engine and feasibility means every traffic class
 //!   meets its own p99 target (an SLO *vector* instead of one number).
+//!   Every probe also meters energy (`wienna::power`), and the result
+//!   carries the (dollar cost × energy/request × p99) non-dominated
+//!   front — `wienna search --pareto` — with the cheapest-only answer
+//!   always a member of it.
 //!
 //! ## Example
 //!

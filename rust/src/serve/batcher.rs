@@ -49,6 +49,17 @@ pub struct BatchCost {
     pub compute_busy: f64,
     /// Busy cycles on the wired collection mesh.
     pub collect_busy: f64,
+    // --- energy inputs (consumed by `power::PowerModel::batch_dynamic`) ---
+    /// Total MACs in the batch.
+    pub macs: f64,
+    /// Global-SRAM traffic: every distributed byte read + every collected
+    /// byte written (mirrors `energy::system`).
+    pub sram_bytes: f64,
+    /// Distribution energy in pJ, straight from the NoP models (wireless
+    /// multicast vs interposer mesh — the Fig-9 machinery).
+    pub dist_energy_pj: f64,
+    /// Collected bytes × average mesh hops, for the collection-NoP energy.
+    pub collect_byte_hops: f64,
 }
 
 impl BatchCost {
@@ -101,11 +112,19 @@ impl CostCache {
         let model = kind.build(batch);
         let cost = evaluate_model(engine, &model, None);
         let pipe = pipeline_makespan(&cost.layers, local_buffer_bytes);
+        // The same aggregation the static whole-system path uses
+        // (`energy::system_energy`), so the runtime meter can never
+        // drift from the paper-figure energy numbers.
+        let t = crate::energy::TrafficTotals::from_layers(&cost.layers, engine.sys.avg_mesh_hops());
         let bc = BatchCost {
             latency: pipe.pipelined_cycles,
             dist_busy: cost.layers.iter().map(|l| l.timeline.preload + l.timeline.stream).sum(),
             compute_busy: cost.layers.iter().map(|l| l.timeline.compute).sum(),
             collect_busy: cost.layers.iter().map(|l| l.timeline.collect).sum(),
+            macs: t.macs,
+            sram_bytes: t.sram_bytes,
+            dist_energy_pj: t.dist_energy_pj,
+            collect_byte_hops: t.collect_byte_hops,
         };
         self.map.insert(key, bc);
         bc
@@ -247,6 +266,31 @@ mod tests {
         // Sub-linear latency growth: batch 8 costs less than 8x batch 1.
         assert!(c8.latency < 8.0 * c1.latency);
         assert!(c8.throughput_rps(8) > c1.throughput_rps(1));
+    }
+
+    #[test]
+    fn energy_inputs_are_populated_and_grow_with_batch() {
+        let e = engine(DesignPoint::WIENNA_C);
+        let mut cache = CostCache::new();
+        let c1 = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 1, BUF);
+        let c8 = cache.get(&e, DesignPoint::WIENNA_C, ModelKind::TinyCnn, 8, BUF);
+        assert!(c1.macs > 0.0 && c1.sram_bytes > 0.0);
+        assert!(c1.dist_energy_pj > 0.0 && c1.collect_byte_hops > 0.0);
+        // MACs scale exactly linearly with batch; traffic at least grows.
+        assert!((c8.macs - 8.0 * c1.macs).abs() < 1e-6 * c8.macs);
+        assert!(c8.sram_bytes > c1.sram_bytes);
+        assert!(c8.dist_energy_pj > c1.dist_energy_pj);
+    }
+
+    #[test]
+    fn wireless_distribution_energy_beats_interposer_per_batch() {
+        // The Fig-9 comparison must survive the serving-path aggregation.
+        let ew = engine(DesignPoint::WIENNA_C);
+        let ei = engine(DesignPoint::INTERPOSER_C);
+        let mut cache = CostCache::new();
+        let w = cache.get(&ew, DesignPoint::WIENNA_C, ModelKind::ResNet50, 4, BUF);
+        let i = cache.get(&ei, DesignPoint::INTERPOSER_C, ModelKind::ResNet50, 4, BUF);
+        assert!(w.dist_energy_pj < i.dist_energy_pj, "{} vs {}", w.dist_energy_pj, i.dist_energy_pj);
     }
 
     #[test]

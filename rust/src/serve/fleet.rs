@@ -14,6 +14,7 @@ use super::request::{Request, Source};
 use super::stats::ServeStats;
 use crate::config::{DesignPoint, SystemConfig};
 use crate::cost::CostEngine;
+use crate::power::{BatchEnergy, DvfsLevel, FleetEnergy, PackageMeter, PowerConfig};
 
 /// Static description of one package in the fleet.
 #[derive(Debug, Clone)]
@@ -61,6 +62,10 @@ pub struct Package {
     /// back (`Package::preempt_batch`).
     batch_start: f64,
     cur_cost: Option<BatchCost>,
+    /// Makespan stretch (1/freq) of the in-flight batch's DVFS level.
+    cur_stretch: f64,
+    /// Runtime energy telemetry (`wienna::power`).
+    pub meter: PackageMeter,
     /// Batch-1 estimate of queued work, for load-aware routing.
     backlog_cycles: f64,
     // --- accounting ---
@@ -85,6 +90,8 @@ impl Package {
             in_flight: Vec::new(),
             batch_start: 0.0,
             cur_cost: None,
+            cur_stretch: 1.0,
+            meter: PackageMeter::default(),
             backlog_cycles: 0.0,
             busy_cycles: 0.0,
             dist_busy_cycles: 0.0,
@@ -163,19 +170,34 @@ impl Package {
     }
 
     /// Start serving a dispatched batch: occupy the package until the
-    /// predicted completion and record the busy-cycle accounting. Both
-    /// event loops (`Fleet::run` and the cluster's per-shard loop) funnel
-    /// through here so their per-package accounting is identical.
-    pub(crate) fn begin_batch(&mut self, now: f64, decision: &BatchDecision, reqs: Vec<Request>) {
+    /// predicted completion and record the busy-cycle and energy
+    /// accounting. Both event loops (`Fleet::run` and the cluster's
+    /// per-shard loop) funnel through here so their per-package accounting
+    /// is identical. `level` is the governor's DVFS decision — it
+    /// stretches the makespan by `1/freq` — and `energy` the batch's
+    /// dynamic energy *already scaled* to that level. At
+    /// [`DvfsLevel::NOMINAL`] every multiplier is exactly 1.0, so an
+    /// ungoverned run's arithmetic is bit-identical to the pre-power one.
+    pub(crate) fn begin_batch(
+        &mut self,
+        now: f64,
+        decision: &BatchDecision,
+        reqs: Vec<Request>,
+        level: DvfsLevel,
+        energy: BatchEnergy,
+    ) {
         debug_assert!(self.in_flight.is_empty(), "package already serving a batch");
         debug_assert_eq!(reqs.len(), decision.batch as usize);
-        self.busy_until = now + decision.cost.latency;
+        let stretch = 1.0 / level.freq_scale;
+        self.busy_until = now + decision.cost.latency * stretch;
         self.batch_start = now;
         self.cur_cost = Some(decision.cost);
-        self.busy_cycles += decision.cost.latency;
-        self.dist_busy_cycles += decision.cost.dist_busy;
-        self.compute_busy_cycles += decision.cost.compute_busy;
-        self.collect_busy_cycles += decision.cost.collect_busy;
+        self.cur_stretch = stretch;
+        self.busy_cycles += decision.cost.latency * stretch;
+        self.dist_busy_cycles += decision.cost.dist_busy * stretch;
+        self.compute_busy_cycles += decision.cost.compute_busy * stretch;
+        self.collect_busy_cycles += decision.cost.collect_busy * stretch;
+        self.meter.begin(energy, decision.cost.latency * stretch, !level.is_nominal());
         self.batches_dispatched += 1;
         self.batch_size_sum += decision.batch;
         self.max_batch_seen = self.max_batch_seen.max(decision.batch);
@@ -189,26 +211,30 @@ impl Package {
         let reqs = std::mem::take(&mut self.in_flight);
         self.requests_completed += reqs.len() as u64;
         self.cur_cost = None;
+        self.meter.finish();
         (t, reqs)
     }
 
     /// Abort the in-flight batch at `now < busy_until`, rolling back the
     /// accounting for the share of the batch that never ran and returning
-    /// its requests so the caller can requeue them. The cycles already
-    /// burnt stay counted — preempted work is real (wasted) work, and the
-    /// utilization numbers must show it.
-    pub(crate) fn preempt_batch(&mut self, now: f64) -> Vec<Request> {
+    /// its requests (plus the mJ of dynamic energy rolled back, so class
+    /// attribution can subtract the same amount). The cycles and energy
+    /// already burnt stay counted — preempted work is real (wasted) work,
+    /// and the utilization and energy numbers must show it.
+    pub(crate) fn preempt_batch(&mut self, now: f64) -> (Vec<Request>, f64) {
         debug_assert!(!self.in_flight.is_empty(), "nothing in flight to preempt");
         let cost = self.cur_cost.take().expect("in-flight batch has a recorded cost");
+        let stretch = self.cur_stretch;
         let total = self.busy_until - self.batch_start;
         let done = if total > 0.0 { ((now - self.batch_start) / total).clamp(0.0, 1.0) } else { 1.0 };
         let undone = 1.0 - done;
-        self.busy_cycles -= cost.latency * undone;
-        self.dist_busy_cycles -= cost.dist_busy * undone;
-        self.compute_busy_cycles -= cost.compute_busy * undone;
-        self.collect_busy_cycles -= cost.collect_busy * undone;
+        self.busy_cycles -= cost.latency * stretch * undone;
+        self.dist_busy_cycles -= cost.dist_busy * stretch * undone;
+        self.compute_busy_cycles -= cost.compute_busy * stretch * undone;
+        self.collect_busy_cycles -= cost.collect_busy * stretch * undone;
+        let rolled_mj = self.meter.rollback(undone);
         self.busy_until = now;
-        std::mem::take(&mut self.in_flight)
+        (std::mem::take(&mut self.in_flight), rolled_mj)
     }
 }
 
@@ -240,11 +266,16 @@ impl RoutePolicy {
 }
 
 /// A fleet of packages sharing a routing policy, a batcher configuration,
-/// and one memoized cost cache.
+/// a power configuration (meter always on, governor only under a cap) and
+/// one memoized cost cache.
 pub struct Fleet {
     pub packages: Vec<Package>,
     pub policy: RoutePolicy,
     pub batcher: BatcherConfig,
+    /// Energy metering + optional power-cap governor (`wienna::power`).
+    /// The default has no cap: every batch runs at the nominal DVFS level
+    /// and latency statistics are bit-identical to an unmetered run.
+    pub power: PowerConfig,
     pub cache: CostCache,
     rr_cursor: usize,
 }
@@ -256,6 +287,7 @@ impl Fleet {
             packages: specs.into_iter().map(Package::new).collect(),
             policy,
             batcher: BatcherConfig::default(),
+            power: PowerConfig::default(),
             cache: CostCache::new(),
             rr_cursor: 0,
         }
@@ -264,6 +296,25 @@ impl Fleet {
     pub fn with_batcher(mut self, batcher: BatcherConfig) -> Self {
         self.batcher = batcher;
         self
+    }
+
+    pub fn with_power(mut self, power: PowerConfig) -> Self {
+        self.power = power;
+        self
+    }
+
+    /// The governor's DVFS decision for a batch about to start: project
+    /// the fleet's draw (leakage floor + in-flight dynamic power) and
+    /// pick the fastest level that keeps it under the cap. Nominal when
+    /// no cap is configured.
+    fn governor_level(&self, cost: &BatchCost) -> DvfsLevel {
+        let Some(cap) = self.power.cap_w else {
+            return DvfsLevel::NOMINAL;
+        };
+        let floor: f64 =
+            self.packages.iter().map(|p| self.power.model.active_leakage_w(&p.spec.sys)).sum();
+        let inflight: f64 = self.packages.iter().map(|p| p.meter.inflight_w()).sum();
+        self.power.choose_level(cap, floor, inflight, cost)
     }
 
     /// Requests sitting in admission queues.
@@ -396,11 +447,13 @@ impl Fleet {
                 self.packages[idx].spec.local_buffer_bytes,
             )
             .latency;
+        let level = self.governor_level(&decision.cost);
+        let energy = self.power.model.batch_dynamic(&decision.cost).scaled(level.energy_scale);
         let p = &mut self.packages[idx];
         let reqs = p.queue.pop_batch(kind, decision.batch as usize);
         debug_assert_eq!(reqs.len(), decision.batch as usize);
         p.drain_backlog(est1 * reqs.len() as f64);
-        p.begin_batch(now, &decision, reqs);
+        p.begin_batch(now, &decision, reqs, level, energy);
         stats.record_dispatch(decision.batch);
     }
 
@@ -459,6 +512,7 @@ impl Fleet {
             }
         }
         stats.finish(now);
+        stats.energy = Some(FleetEnergy::collect(&self.packages, now, &self.power.model));
         now
     }
 }
@@ -550,6 +604,73 @@ mod tests {
         assert_eq!(fleet.queued_total(), 0);
         assert_eq!(stats.arrived(), stats.completed());
         assert!(stats.end_cycle() > ms_to_cycles(20.0));
+    }
+
+    #[test]
+    fn energy_is_metered_and_additive() {
+        let (fleet, stats) = run_at(0.8, RoutePolicy::LeastLoaded);
+        let e = stats.energy.expect("Fleet::run meters energy");
+        assert!(e.dynamic_mj() > 0.0 && e.leakage_mj > 0.0);
+        assert_eq!(e.throttled_batches, 0, "no cap, no throttling");
+        // Fleet totals equal the sum of package meters (same order).
+        let by_pkg: f64 = fleet.packages.iter().map(|p| p.meter.dynamic_mj()).sum();
+        assert!((e.dynamic_mj() - by_pkg).abs() < 1e-9 * by_pkg.max(1.0));
+        assert!(e.energy_per_req_j(stats.completed()) > 0.0);
+        assert!(e.avg_power_w(stats.end_cycle()) > 0.0);
+    }
+
+    #[test]
+    fn generous_cap_leaves_latency_identical() {
+        // A cap far above the fleet's draw engages the governor plumbing
+        // but never throttles: every latency statistic must be *exactly*
+        // what the ungoverned run produces.
+        let (_, base) = run_at(0.9, RoutePolicy::EarliestDeadline);
+        let mut fleet = Fleet::new(
+            PackageSpec::homogeneous(2, DesignPoint::WIENNA_C),
+            RoutePolicy::EarliestDeadline,
+        )
+        .with_power(crate::power::PowerConfig::with_cap(1e6));
+        let mix = tiny_mix(50.0);
+        let cap = fleet.estimate_capacity_rps(&mix, 8);
+        let mut source = Source::poisson(mix, cap * 0.9, 11);
+        let mut stats = ServeStats::new();
+        fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+        assert_eq!(stats.end_cycle(), base.end_cycle());
+        assert_eq!(stats.latency_ms(50.0), base.latency_ms(50.0));
+        assert_eq!(stats.latency_ms(99.0), base.latency_ms(99.0));
+        assert_eq!(stats.completed(), base.completed());
+        assert_eq!(stats.energy.unwrap().throttled_batches, 0);
+    }
+
+    #[test]
+    fn tight_cap_throttles_and_cuts_dynamic_energy() {
+        let run_capped = |cap_w: Option<f64>| {
+            let mut fleet = Fleet::new(
+                PackageSpec::homogeneous(2, DesignPoint::WIENNA_C),
+                RoutePolicy::EarliestDeadline,
+            );
+            if let Some(w) = cap_w {
+                fleet.power = crate::power::PowerConfig::with_cap(w);
+            }
+            let mix = tiny_mix(50.0);
+            let cap = fleet.estimate_capacity_rps(&mix, 8);
+            let mut source = Source::poisson(mix, cap * 0.9, 11);
+            let mut stats = ServeStats::new();
+            fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+            stats
+        };
+        let base = run_capped(None);
+        let e0 = base.energy.unwrap();
+        let p0 = e0.avg_power_w(base.end_cycle());
+        let capped = run_capped(Some(p0 * 0.5));
+        let e1 = capped.energy.unwrap();
+        assert!(e1.throttled_batches > 0, "a 0.5x cap must throttle");
+        // Both runs drain the same arrivals; throttled batches burn less
+        // dynamic energy (V² scaling) but finish later.
+        assert_eq!(base.completed(), capped.completed());
+        assert!(e1.dynamic_mj() < e0.dynamic_mj(), "{} vs {}", e1.dynamic_mj(), e0.dynamic_mj());
+        assert!(capped.end_cycle() >= base.end_cycle());
+        assert!(capped.latency_ms(99.0) >= base.latency_ms(99.0));
     }
 
     #[test]

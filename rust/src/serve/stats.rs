@@ -107,6 +107,10 @@ pub struct ServeStats {
     all: ModelStats,
     /// Histogram of dispatched batch sizes.
     pub batch_hist: BTreeMap<u64, u64>,
+    /// The run's energy summary (`wienna::power`): per-batch dynamic
+    /// energy plus the leakage integral. Set by `Fleet::run` at the end
+    /// of the run; purely additive — no latency statistic depends on it.
+    pub energy: Option<crate::power::FleetEnergy>,
     dispatches: u64,
     end_cycle: f64,
 }

@@ -1,0 +1,199 @@
+//! Integration tests for `wienna::power`: energy conservation, governor
+//! behavior under a cap, thread-count determinism of the energy-extended
+//! cluster stats JSON, and the Pareto mode of the auto-sizer.
+
+use wienna::cluster::{Cluster, ClusterConfig, TrafficClass};
+use wienna::config::DesignPoint;
+use wienna::power::{dominates, PowerConfig};
+use wienna::search::{autosize, AutosizeConfig, CostModel, FleetPlan, SearchSpace};
+use wienna::serve::{
+    ms_to_cycles, Fleet, MixEntry, ModelKind, PackageSpec, RoutePolicy, ServeStats, Source,
+    WorkloadMix,
+};
+
+fn tiny_mix(slo_ms: f64) -> WorkloadMix {
+    WorkloadMix::new(vec![MixEntry {
+        kind: ModelKind::TinyCnn,
+        weight: 1.0,
+        slo_cycles: ms_to_cycles(slo_ms),
+    }])
+}
+
+fn run_fleet(packages: usize, load: f64, power: PowerConfig) -> ServeStats {
+    let mut fleet = Fleet::new(
+        PackageSpec::homogeneous(packages, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    )
+    .with_power(power);
+    let mix = tiny_mix(50.0);
+    let cap = fleet.estimate_capacity_rps(&mix, 8);
+    let mut source = Source::poisson(mix, cap * load, 7);
+    let mut stats = ServeStats::new();
+    fleet.run(&mut source, ms_to_cycles(25.0), &mut stats);
+    stats
+}
+
+fn run_cluster(threads: usize, rate: f64, cfg: ClusterConfig) -> wienna::cluster::ClusterStats {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+        ClusterConfig { shards: 4, threads, ..cfg },
+    );
+    let mut source = Source::poisson(tiny_mix(25.0), rate, 42);
+    cluster.run(&mut source, ms_to_cycles(10.0))
+}
+
+#[test]
+fn fleet_average_power_respects_the_cap() {
+    // Establish the uncapped draw, then cap at 70% of it: the governor's
+    // conservative projection (active-rate leakage floor for the whole
+    // fleet) means the realized average can only land below the cap.
+    let base = run_fleet(2, 0.9, PowerConfig::default());
+    let e0 = base.energy.unwrap();
+    let p0 = e0.avg_power_w(base.end_cycle());
+    assert!(p0 > 0.0);
+    let cap = 0.7 * p0;
+    // Scenario precondition: the cap must sit above the un-gateable
+    // leakage floor, or no governor could ever meet it.
+    let power = PowerConfig::with_cap(cap);
+    let floor =
+        2.0 * power.model.active_leakage_w(&wienna::config::SystemConfig::default());
+    assert!(cap > floor * 1.1, "ill-posed scenario: cap {cap:.1} W vs leakage floor {floor:.1} W");
+    let capped = run_fleet(2, 0.9, power);
+    let e1 = capped.energy.unwrap();
+    assert!(e1.throttled_batches > 0, "a 0.7x cap should throttle at 0.9x load");
+    let achieved = e1.avg_power_w(capped.end_cycle());
+    assert!(achieved <= cap * 1.05, "avg {achieved:.1} W vs cap {cap:.1} W");
+    // Closed loop, not bookkeeping: the same requests completed, later.
+    assert_eq!(base.completed(), capped.completed());
+    assert!(capped.end_cycle() > base.end_cycle());
+}
+
+#[test]
+fn cluster_energy_conserves_per_class_and_per_package() {
+    // Overloaded default cluster (preemption + admission on): per-class
+    // dynamic energies must still sum to the fleet's dynamic total, and
+    // the fleet total to the per-package meters.
+    let stats = run_cluster(2, 20_000.0, ClusterConfig::default());
+    assert!(stats.preemptions > 0 || stats.serve.shed() > 0, "want a stressed run");
+    let by_class: f64 = stats.class_energy_mj.iter().sum();
+    let dynamic = stats.energy.dynamic_mj();
+    assert!(dynamic > 0.0);
+    assert!(
+        (by_class - dynamic).abs() <= 1e-9 * dynamic.max(1.0),
+        "class sum {by_class} vs fleet dynamic {dynamic}"
+    );
+    let by_package: f64 = stats.packages.iter().map(|p| p.meter.dynamic_mj()).sum();
+    assert!(
+        (by_package - dynamic).abs() <= 1e-9 * dynamic.max(1.0),
+        "package sum {by_package} vs fleet dynamic {dynamic}"
+    );
+    // Every class that completed work burned energy.
+    for (class, m) in &stats.per_class {
+        if m.completed > 0 {
+            assert!(
+                stats.class_energy_mj[class.index()] > 0.0,
+                "{} completed {} requests on zero energy",
+                class.label(),
+                m.completed
+            );
+        }
+    }
+}
+
+#[test]
+fn cluster_stats_json_with_energy_is_thread_count_invariant() {
+    // The determinism gate, governor engaged: capped runs must still be
+    // bit-identical across worker-thread counts (the cap partitions
+    // statically across shards, never across threads). The cap derives
+    // from the uncapped run's measured draw so it reliably bites.
+    let base = run_cluster(1, 8_000.0, ClusterConfig::default());
+    let p0 = base.energy.avg_power_w(base.serve.end_cycle());
+    assert!(p0 > 0.0);
+    let cfg = || ClusterConfig { power: PowerConfig::with_cap(0.5 * p0), ..Default::default() };
+    let a = run_cluster(1, 8_000.0, cfg());
+    let b = run_cluster(2, 8_000.0, cfg());
+    let c = run_cluster(4, 8_000.0, cfg());
+    assert_eq!(a.to_json(), b.to_json(), "1 vs 2 threads (capped)");
+    assert_eq!(a.to_json(), c.to_json(), "1 vs 4 threads (capped)");
+    assert!(a.to_json().contains("\"dynamic_mj\": "));
+    assert!(a.energy.throttled_batches > 0, "a 0.5x cap should bite");
+}
+
+#[test]
+fn uncapped_cluster_latency_stats_match_a_power_disabled_config() {
+    // Energy is additive: flipping power gating (which changes only the
+    // leakage integral) must leave every latency statistic identical.
+    let gated = run_cluster(2, 6_000.0, ClusterConfig::default());
+    let ungated = run_cluster(
+        2,
+        6_000.0,
+        ClusterConfig {
+            power: PowerConfig {
+                model: wienna::power::PowerModel {
+                    power_gating: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    assert_eq!(gated.serve.completed(), ungated.serve.completed());
+    assert_eq!(gated.serve.end_cycle(), ungated.serve.end_cycle());
+    assert_eq!(gated.serve.latency_ms(99.0), ungated.serve.latency_ms(99.0));
+    assert_eq!(gated.energy.dynamic_mj(), ungated.energy.dynamic_mj());
+    assert!(gated.energy.leakage_mj < ungated.energy.leakage_mj, "gating must save leakage");
+    // Interactive class exists and its latency is unchanged too.
+    assert_eq!(
+        gated.class_latency_ms(TrafficClass::Interactive, 99.0),
+        ungated.class_latency_ms(TrafficClass::Interactive, 99.0)
+    );
+}
+
+#[test]
+fn search_pareto_front_survives_exhaustive_dominance_audit() {
+    let mix = tiny_mix(20.0);
+    let mut cfg = AutosizeConfig::new(20.0, 1800.0, mix);
+    cfg.horizon_ms = 10.0;
+    cfg.threads = 2;
+    let r = autosize(&cfg, &SearchSpace::tiny(), &CostModel::default());
+    assert!(!r.plans.is_empty(), "tiny space must produce feasible fleets");
+    assert!(!r.pareto.is_empty());
+    let triple = |p: &FleetPlan| [p.fleet_cost, p.energy_per_req_j, p.p99_ms];
+    let fronts: Vec<[f64; 3]> = r.pareto.iter().map(&triple).collect();
+    let all: Vec<[f64; 3]> = r.plans.iter().map(&triple).collect();
+    // 1. No front member is dominated by any plan (exhaustive).
+    for f in &fronts {
+        for p in &all {
+            assert!(!dominates(p, f), "front point {f:?} dominated by {p:?}");
+        }
+    }
+    // 2. Every plan off the front is dominated by some front member.
+    for p in &all {
+        if !fronts.contains(p) {
+            assert!(fronts.iter().any(|f| dominates(f, p)), "non-front point {p:?} undominated");
+        }
+    }
+    // 3. The cheapest-only answer is a member of the front.
+    let best = triple(&r.best.expect("feasible search has a best plan"));
+    assert!(fronts.contains(&best), "cheapest answer {best:?} missing from the front");
+    // 4. Probed energies are real measurements.
+    for p in &r.plans {
+        assert!(p.energy_per_req_j > 0.0, "plan without probed energy");
+    }
+}
+
+#[test]
+fn calibrated_eta_cluster_runs_conserve_and_drain() {
+    // The per-decision guarantee (calibrated never sheds what the
+    // conservative estimate serves) is property-tested in
+    // `cluster::admission` and pinned by the deep-backlog scenario in
+    // `cluster::shard`; here the calibrated estimator goes through the
+    // full sharded engine: conservation and determinism must hold.
+    let cfg = || ClusterConfig { calibrated_eta: true, ..Default::default() };
+    let a = run_cluster(1, 20_000.0, cfg());
+    let b = run_cluster(4, 20_000.0, cfg());
+    assert_eq!(a.to_json(), b.to_json(), "calibrated ETA must stay thread-deterministic");
+    assert_eq!(a.serve.arrived(), a.serve.completed() + a.serve.shed());
+    assert!(a.serve.completed() > 0);
+}
