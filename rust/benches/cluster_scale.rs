@@ -13,16 +13,27 @@
 //! goodput — the admission-control dial from "drop everything" to "queue
 //! everything".
 //!
-//! Both parts run under a `cost::memo::run_scope` after a warm-up pass,
+//! Part 3 — **skewed-mix steal sweep**: closed-loop client traces whose
+//! hot clients all stripe to 4 / 2 / 1 of the shards (session-affinity
+//! striping makes hot clients hot shards), run with and without the
+//! epoch-barrier work-stealing pass. Static striping strands the skewed
+//! load on the hot stripe's packages while the rest idle; stealing must
+//! recover **>= 20% goodput at the fully-skewed point** (asserted — this
+//! is the PR's acceptance criterion).
+//!
+//! All parts run under a `cost::memo::run_scope` after a warm-up pass,
 //! so the timed runs see a hot layer memo (steady-state behavior) and the
 //! bench process doesn't leak its working set into `memo::stats()`.
 
-use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, TrafficClass};
+use wienna::cluster::{AdmissionConfig, ClassMix, Cluster, ClusterConfig, SyncConfig, TrafficClass};
 use wienna::config::DesignPoint;
 use wienna::cost::memo;
 use wienna::report::Table;
-use wienna::serve::{ms_to_cycles, Fleet, PackageSpec, RoutePolicy, Source, WorkloadMix};
+use wienna::serve::{
+    ms_to_cycles, BatcherConfig, Fleet, ModelKind, PackageSpec, RoutePolicy, Source, WorkloadMix,
+};
 use wienna::testutil::bench;
+use wienna::workload::trace::synthetic_arrivals;
 
 const PACKAGES: usize = 16;
 const SHARDS: usize = 8;
@@ -125,6 +136,81 @@ fn main() {
     }
     print!("{}", t.render());
     t.save_csv("bench_out/cluster_shed.csv").ok();
+
+    // --- Part 3: skewed-mix steal sweep ---------------------------------
+    // Closed-loop client trace, 64 clients in 4 stripes of 16 (requests
+    // stripe by client). The hot stripes' clients issue back-to-back (the
+    // recorded cadence far outruns service, so pushback paces them); the
+    // rest issue one request each. Single interactive class, admit-all,
+    // batch capped at 4 so a hot stripe's two packages can absorb at most
+    // 8 of their 16 concurrent clients per dispatch round — backlog stays
+    // queued at every barrier, the regime where static striping strands
+    // work and stealing pays.
+    const STEAL_PACKAGES: usize = 8; // 2 per stripe: absorb 8 < 16 hot clients
+    const STRIPES: usize = 4;
+    const CLIENTS_PER_STRIPE: usize = 16;
+    const HOT_REQUESTS_TOTAL: usize = 4800;
+    let steal_mix = WorkloadMix::single(ModelKind::TinyCnn, 50.0);
+    let run_skewed = |hot_stripes: usize, steal: bool| {
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(STEAL_PACKAGES, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: STRIPES,
+                threads: 4,
+                classes: ClassMix::single(TrafficClass::Interactive, 1.0, false),
+                admission: AdmissionConfig::admit_all(),
+                preemption: false,
+                batcher: BatcherConfig { max_batch: 4, candidates: vec![1, 2, 4] },
+                sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.1) },
+                ..Default::default()
+            },
+        );
+        let per_hot = HOT_REQUESTS_TOTAL / (CLIENTS_PER_STRIPE * hot_stripes);
+        let counts: Vec<usize> = (0..STRIPES * CLIENTS_PER_STRIPE)
+            .map(|i| if i % STRIPES < hot_stripes { per_hot } else { 1 })
+            .collect();
+        let traces = synthetic_arrivals(&counts, 0.02, 0.5, 42);
+        let mut source = Source::client_trace(steal_mix.clone(), &traces, 42);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let mut t = Table::new(
+        &format!(
+            "skewed-mix steal sweep ({STEAL_PACKAGES} pkg / {STRIPES} shards, ~{HOT_REQUESTS_TOTAL} hot requests)"
+        ),
+        &["hot stripes", "steals", "static goodput", "steal goodput", "gain", "static p99 ms", "steal p99 ms"],
+    );
+    let mut gain_at_full_skew = 0.0f64;
+    for hot_stripes in [4usize, 2, 1] {
+        let stuck = run_skewed(hot_stripes, false);
+        let stolen = run_skewed(hot_stripes, true);
+        assert_eq!(
+            stuck.serve.completed(),
+            stolen.serve.completed(),
+            "admit-all: stealing must serve exactly the same requests"
+        );
+        let gain = stolen.serve.goodput_rps() / stuck.serve.goodput_rps();
+        if hot_stripes == 1 {
+            gain_at_full_skew = gain;
+        }
+        t.row(vec![
+            hot_stripes.to_string(),
+            stolen.steals.to_string(),
+            format!("{:.0}", stuck.serve.goodput_rps()),
+            format!("{:.0}", stolen.serve.goodput_rps()),
+            format!("{gain:.2}x"),
+            format!("{:.2}", stuck.serve.latency_ms(99.0)),
+            format!("{:.2}", stolen.serve.latency_ms(99.0)),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/cluster_steal.csv").ok();
+    println!(
+        "work stealing at full skew (1 hot stripe of {STRIPES}): {gain_at_full_skew:.2}x goodput vs static striping (target >= 1.2x)"
+    );
+    assert!(
+        gain_at_full_skew >= 1.2,
+        "stealing must recover >= 20% goodput on the fully-skewed mix, got {gain_at_full_skew:.2}x"
+    );
 
     let ms = memo::stats();
     println!(

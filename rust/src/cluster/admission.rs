@@ -70,7 +70,10 @@ pub fn batching_gain(
     }
     let l1 = cache.get(engine, dp, kind, 1, local_buffer_bytes).latency;
     let lb = cache.get(engine, dp, kind, b, local_buffer_bytes).latency;
-    if l1 <= 0.0 {
+    // Degenerate service rates (a zero- or infinite-latency estimate from
+    // a pathological package shape) make the ratio meaningless — fall
+    // back to the conservative gain of 1 rather than dividing through.
+    if l1 <= 0.0 || !l1.is_finite() || !lb.is_finite() {
         return 1.0;
     }
     ((lb / b as f64) / l1).clamp(f64::MIN_POSITIVE, 1.0)
@@ -117,6 +120,16 @@ impl AdmissionConfig {
     /// certifies the request was still viable — the cluster's push-out
     /// path relies on that to never displace queued work in favor of an
     /// arrival that would miss its deadline anyway.
+    ///
+    /// The gate checks `eta.is_nan() || eta > deadline` rather than the
+    /// bare comparison on purpose: the ETA upstream is built from
+    /// service-rate estimates, and a degenerate package (zero service
+    /// rate, or an ∞−∞ busy-remainder edge on an empty backlog) yields an
+    /// infinite or NaN prediction. `NaN > deadline` is `false`, so the
+    /// naive comparison would *silently admit* a request whose completion
+    /// estimate is garbage; an ∞ ETA sheds via the ordinary comparison
+    /// and the NaN edge is shed explicitly — the unit tests pin all four
+    /// corners.
     pub fn admit(
         &self,
         queued_depth: usize,
@@ -124,7 +137,10 @@ impl AdmissionConfig {
         deadline_cycles: f64,
         deadline_shed: bool,
     ) -> Result<(), ShedReason> {
-        if self.shed_late && deadline_shed && deadline_cycles.is_finite() && eta_cycles > deadline_cycles
+        if self.shed_late
+            && deadline_shed
+            && deadline_cycles.is_finite()
+            && (eta_cycles.is_nan() || eta_cycles > deadline_cycles)
         {
             return Err(ShedReason::DeadlineHopeless);
         }
@@ -220,6 +236,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn degenerate_eta_edges_shed_instead_of_slipping_through() {
+        // The ETA upstream divides by package service rates; a zero-rate
+        // package predicts an infinite completion and an ∞−∞ /
+        // empty-backlog edge predicts NaN. Neither may silently pass the
+        // deadline gate (NaN > d is false, so the naive comparison used
+        // to admit it).
+        let cfg = AdmissionConfig { queue_cap: None, shed_late: true };
+        assert_eq!(
+            cfg.admit(0, f64::INFINITY, 100.0, true),
+            Err(ShedReason::DeadlineHopeless),
+            "infinite ETA (zero service rate) against a finite deadline"
+        );
+        assert_eq!(
+            cfg.admit(0, f64::NAN, 100.0, true),
+            Err(ShedReason::DeadlineHopeless),
+            "NaN ETA must be treated as hopeless, not silently admitted"
+        );
+        // With no deadline to miss (or shedding off), the degenerate ETA
+        // is irrelevant and the request is admitted.
+        assert!(cfg.admit(0, f64::INFINITY, f64::INFINITY, true).is_ok());
+        assert!(cfg.admit(0, f64::NAN, f64::INFINITY, true).is_ok());
+        assert!(cfg.admit(0, f64::NAN, 100.0, false).is_ok());
+        // A NaN ETA at a full queue still reports the deadline verdict
+        // first (the gate-ordering contract the push-out path needs).
+        let capped = AdmissionConfig { queue_cap: Some(0), shed_late: true };
+        assert_eq!(capped.admit(0, f64::NAN, 100.0, true), Err(ShedReason::DeadlineHopeless));
+        assert_eq!(capped.admit(0, f64::NAN, 100.0, false), Err(ShedReason::QueueFull));
     }
 
     #[test]

@@ -1,19 +1,24 @@
 //! Deterministic merge of per-shard event streams into cluster stats.
 //!
 //! Shards emit chronologically ordered completion/shed streams that are
-//! independent of the worker-thread count (`cluster::shard`). This module
-//! interleaves them into one global stream ordered by
+//! independent of the worker-thread count (`cluster::shard`). At every
+//! epoch barrier the sync layer hands this module one event batch per
+//! shard; [`fold_events`] interleaves them into one stream ordered by
 //! `(cycle, shard id, emission index)` — exactly the order a
-//! single-threaded simulation of the whole cluster would produce, with
-//! the shard id as the total tie-break — and folds it into
-//! [`ClusterStats`]. Because both the inputs and the merge order are
-//! thread-count-independent, a fixed RNG seed yields **bit-identical**
-//! stats (and stats JSON) at any thread count; `wienna cluster
-//! --stats-json` + the CI determinism gate diff exactly this output.
+//! single-threaded simulation of that window would produce, with the
+//! shard id as the total tie-break — folds it into [`ClusterStats`], and
+//! relays completions to the closed-loop feedback hook in the same
+//! order. Across epochs the global fold order is therefore
+//! `(epoch, cycle, shard id, emission index)`. Because the inputs, the
+//! merge order and the feedback order are all thread-count-independent,
+//! a fixed RNG seed yields **bit-identical** stats (and stats JSON) at
+//! any thread count; `wienna cluster --stats-json` + the CI determinism
+//! gate diff exactly this output.
 
 use super::admission::ShedReason;
 use super::class::{TrafficClass, NUM_CLASSES};
-use super::shard::{ShardEventOutcome, ShardOutcome};
+use super::shard::{ShardEvent, ShardEventOutcome, ShardOutcome};
+use super::sync::TraceEvent;
 use crate::power::{FleetEnergy, PowerModel};
 use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
 use std::collections::BTreeMap;
@@ -29,6 +34,12 @@ pub struct ClusterStats {
     pub per_class: BTreeMap<TrafficClass, ModelStats>,
     /// Batches aborted by priority preemption.
     pub preemptions: u64,
+    /// Queued requests rebalanced to another shard by the epoch-barrier
+    /// work-stealing pass (`cluster::sync`).
+    pub steals: u64,
+    /// Time windows the synchronized run advanced through (1 for the
+    /// open-loop, no-steal fast path, which runs one unbounded epoch).
+    pub epochs: u64,
     /// Arrivals refused because the target package's queue was at cap.
     pub shed_queue_full: u64,
     /// Arrivals refused by deadline-aware load shedding.
@@ -80,7 +91,9 @@ impl ClusterStats {
     /// Machine-readable summary. Deterministic field order; floats are
     /// printed with Rust's shortest-round-trip formatting, so two JSON
     /// dumps are byte-identical iff the underlying stats are bit-identical
-    /// (the CI determinism gate diffs this across thread counts).
+    /// (the CI determinism gate diffs this across thread counts). The
+    /// field schema — names and order — is pinned by the golden fixture
+    /// at `rust/testdata/cluster_stats_schema.golden`.
     pub fn to_json(&self) -> String {
         fn num(v: f64) -> String {
             if v.is_finite() {
@@ -97,6 +110,8 @@ impl ClusterStats {
         s.push_str(&format!("  \"shed_queue_full\": {},\n", self.shed_queue_full));
         s.push_str(&format!("  \"shed_deadline\": {},\n", self.shed_deadline));
         s.push_str(&format!("  \"preemptions\": {},\n", self.preemptions));
+        s.push_str(&format!("  \"steals\": {},\n", self.steals));
+        s.push_str(&format!("  \"epochs\": {},\n", self.epochs));
         s.push_str(&format!("  \"dispatches\": {},\n", self.serve.dispatches()));
         s.push_str(&format!("  \"mean_batch\": {},\n", num(self.serve.mean_batch())));
         s.push_str(&format!("  \"end_cycle\": {},\n", num(self.serve.end_cycle())));
@@ -138,17 +153,80 @@ impl ClusterStats {
     }
 }
 
-/// Fold per-shard outcomes into `stats` via the deterministic k-way merge
-/// (see module docs for the ordering contract). `model` prices the
-/// leakage integral of the merged package list.
-pub(crate) fn merge_into(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>, model: &PowerModel) {
-    debug_assert!(
-        outcomes.iter().enumerate().all(|(i, o)| o.shard_id == i),
-        "outcomes arrive in shard order (cost::par preserves input order)"
-    );
+/// Fold one epoch's per-shard event batches into `stats` via the
+/// deterministic k-way merge (see module docs for the ordering contract).
+/// `by_shard[s]` is shard `s`'s chronological event stream for this
+/// epoch. Every finalized request — completion *or* shed — is relayed to
+/// `feedback` in merged order: that is the hook closed-loop sources hang
+/// their re-arm logic on, and a shed is a fast-fail response the client
+/// still observes (were sheds swallowed, one shed would silently cancel
+/// all of that client's remaining requests, shrinking the offered load
+/// under any shedding admission config). Every event also lands in
+/// `trace` (when asked for) so tests can audit exactly which shard
+/// finalized which request.
+pub(crate) fn fold_events(
+    stats: &mut ClusterStats,
+    by_shard: &[Vec<ShardEvent>],
+    mut feedback: impl FnMut(f64, &Request),
+    mut trace: Option<&mut Vec<TraceEvent>>,
+) {
+    let mut cursors = vec![0usize; by_shard.len()];
+    loop {
+        // Ties across shards resolve to the lower shard id (`c < bc`
+        // keeps the first-found minimum).
+        let mut best: Option<(f64, usize)> = None;
+        for (s, evs) in by_shard.iter().enumerate() {
+            if cursors[s] < evs.len() {
+                let c = evs[cursors[s]].cycle;
+                let better = match best {
+                    None => true,
+                    Some((bc, _)) => c < bc,
+                };
+                if better {
+                    best = Some((c, s));
+                }
+            }
+        }
+        let Some((_, s)) = best else {
+            break;
+        };
+        let ev = &by_shard[s][cursors[s]];
+        cursors[s] += 1;
+        let m = stats.per_class.entry(ev.class).or_default();
+        match ev.outcome {
+            ShardEventOutcome::Completed => {
+                m.record_completion(&ev.req, ev.cycle);
+                stats.serve.record_completion(&ev.req, ev.cycle);
+                feedback(ev.cycle, &ev.req);
+            }
+            ShardEventOutcome::Shed(reason) => {
+                m.shed += 1;
+                match reason {
+                    ShedReason::QueueFull => stats.shed_queue_full += 1,
+                    ShedReason::DeadlineHopeless => stats.shed_deadline += 1,
+                }
+                stats.serve.record_shed(&ev.req);
+                feedback(ev.cycle, &ev.req);
+            }
+        }
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceEvent {
+                cycle: ev.cycle,
+                shard: s,
+                id: ev.req.id,
+                class: ev.class,
+                completed: ev.outcome == ShardEventOutcome::Completed,
+            });
+        }
+    }
+}
 
-    // Dispatch histograms, package accounting, energy and counters merge
-    // by shard id — plain sums, order-insensitive but kept deterministic.
+/// Fold the shards' final accounting into `stats` after the last epoch:
+/// dispatch histograms, package state, per-class energy and counters
+/// merge by shard id — plain sums, order-insensitive but kept
+/// deterministic by the shard-major order. `model` prices the leakage
+/// integral of the merged package list.
+pub(crate) fn finalize(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>, model: &PowerModel) {
     let mut end_cycle = 0.0f64;
     for o in &outcomes {
         stats.preemptions += o.preemptions;
@@ -162,47 +240,6 @@ pub(crate) fn merge_into(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>, 
             stats.serve.record_dispatches(batch, n);
         }
     }
-
-    // K-way merge of the event streams by (cycle, shard id); within a
-    // shard the stream is already chronological, so per-shard cursors
-    // suffice. Ties across shards resolve to the lower shard id.
-    let mut cursors = vec![0usize; outcomes.len()];
-    loop {
-        let mut best: Option<(f64, usize)> = None;
-        for (s, o) in outcomes.iter().enumerate() {
-            if cursors[s] < o.events.len() {
-                let c = o.events[cursors[s]].cycle;
-                let better = match best {
-                    None => true,
-                    Some((bc, _)) => c < bc,
-                };
-                if better {
-                    best = Some((c, s));
-                }
-            }
-        }
-        let Some((_, s)) = best else {
-            break;
-        };
-        let ev = &outcomes[s].events[cursors[s]];
-        cursors[s] += 1;
-        let m = stats.per_class.entry(ev.class).or_default();
-        match ev.outcome {
-            ShardEventOutcome::Completed => {
-                m.record_completion(&ev.req, ev.cycle);
-                stats.serve.record_completion(&ev.req, ev.cycle);
-            }
-            ShardEventOutcome::Shed(reason) => {
-                m.shed += 1;
-                match reason {
-                    ShedReason::QueueFull => stats.shed_queue_full += 1,
-                    ShedReason::DeadlineHopeless => stats.shed_deadline += 1,
-                }
-                stats.serve.record_shed(&ev.req);
-            }
-        }
-    }
-
     for o in outcomes {
         stats.packages.extend(o.packages);
     }
@@ -223,8 +260,8 @@ mod tests {
         Request { id, kind: ModelKind::TinyCnn, arrival, deadline: arrival + slo, client: None }
     }
 
-    fn completion(cycle: f64, id: u64, class: TrafficClass) -> super::super::shard::ShardEvent {
-        super::super::shard::ShardEvent {
+    fn completion(cycle: f64, id: u64, class: TrafficClass) -> ShardEvent {
+        ShardEvent {
             cycle,
             outcome: ShardEventOutcome::Completed,
             class,
@@ -232,59 +269,67 @@ mod tests {
         }
     }
 
-    fn outcome(shard_id: usize, events: Vec<super::super::shard::ShardEvent>) -> ShardOutcome {
+    fn empty_outcome(end_cycle: f64) -> ShardOutcome {
         ShardOutcome {
-            shard_id,
-            events,
             dispatch_hist: BTreeMap::new(),
             preemptions: 0,
             packages: Vec::new(),
             class_energy_mj: [0.0; NUM_CLASSES],
-            end_cycle: 0.0,
+            end_cycle,
             cache_hits: 0,
             cache_misses: 0,
         }
     }
 
     #[test]
-    fn merge_orders_by_cycle_then_shard() {
-        let a = outcome(
-            0,
-            vec![
-                completion(10.0, 0, TrafficClass::Interactive),
-                completion(30.0, 1, TrafficClass::Interactive),
-            ],
-        );
-        let b = outcome(
-            1,
-            vec![
-                completion(10.0, 2, TrafficClass::Batch),
-                completion(20.0, 3, TrafficClass::Batch),
-            ],
-        );
+    fn merge_orders_by_cycle_then_shard_and_feeds_back_in_order() {
+        let a = vec![
+            completion(10.0, 0, TrafficClass::Interactive),
+            completion(30.0, 1, TrafficClass::Interactive),
+        ];
+        let b = vec![
+            completion(10.0, 2, TrafficClass::Batch),
+            completion(20.0, 3, TrafficClass::Batch),
+        ];
         let mut stats = ClusterStats::new(2);
-        for e in a.events.iter().chain(b.events.iter()) {
+        for e in a.iter().chain(b.iter()) {
             stats.record_ingress(&e.req, e.class);
         }
-        merge_into(&mut stats, vec![a, b], &PowerModel::default());
+        let mut feedback_order = Vec::new();
+        let mut trace = Vec::new();
+        fold_events(
+            &mut stats,
+            &[a, b],
+            |t, r| feedback_order.push((t, r.id)),
+            Some(&mut trace),
+        );
+        finalize(&mut stats, vec![empty_outcome(30.0), empty_outcome(20.0)], &PowerModel::default());
         assert_eq!(stats.serve.completed(), 4);
         assert_eq!(stats.per_class[&TrafficClass::Interactive].completed, 2);
         assert_eq!(stats.per_class[&TrafficClass::Batch].completed, 2);
         // The cycle-10 tie resolves to shard 0 first, then shard 1, then
-        // strictly by cycle — the recorder saw (10, 10, 20, 30).
+        // strictly by cycle — feedback and trace both saw (10/id 0,
+        // 10/id 2, 20/id 3, 30/id 1).
+        assert_eq!(feedback_order, vec![(10.0, 0), (10.0, 2), (20.0, 3), (30.0, 1)]);
+        let traced: Vec<(usize, u64)> = trace.iter().map(|t| (t.shard, t.id)).collect();
+        assert_eq!(traced, vec![(0, 0), (1, 2), (1, 3), (0, 1)]);
+        assert!(trace.iter().all(|t| t.completed));
         assert_eq!(stats.serve.latency_ms(100.0), cycles_to_ms(30.0));
+        assert_eq!(stats.serve.end_cycle(), 30.0, "end cycle is the max over shards");
     }
 
     #[test]
     fn json_is_deterministic_and_balanced() {
-        let a = outcome(0, vec![completion(5.0, 0, TrafficClass::Interactive)]);
-        let mut s1 = ClusterStats::new(1);
-        s1.record_ingress(&a.events[0].req, TrafficClass::Interactive);
-        merge_into(&mut s1, vec![a], &PowerModel::default());
-        let b = outcome(0, vec![completion(5.0, 0, TrafficClass::Interactive)]);
-        let mut s2 = ClusterStats::new(1);
-        s2.record_ingress(&b.events[0].req, TrafficClass::Interactive);
-        merge_into(&mut s2, vec![b], &PowerModel::default());
+        let mk = || {
+            let events = vec![completion(5.0, 0, TrafficClass::Interactive)];
+            let mut s = ClusterStats::new(1);
+            s.record_ingress(&events[0].req, TrafficClass::Interactive);
+            fold_events(&mut s, &[events], |_, _| {}, None);
+            finalize(&mut s, vec![empty_outcome(5.0)], &PowerModel::default());
+            s
+        };
+        let s1 = mk();
+        let s2 = mk();
         assert_eq!(s1.to_json(), s2.to_json());
         let j = s1.to_json();
         assert!(j.contains("\"arrived\": 1"));
@@ -292,7 +337,26 @@ mod tests {
         assert!(j.contains("\"class\": \"interactive\""));
         assert!(j.contains("\"dynamic_mj\": "), "energy fields are part of the gated JSON");
         assert!(j.contains("\"throttled_batches\": 0"));
+        assert!(j.contains("\"steals\": 0"), "sync counters are part of the gated JSON");
+        assert!(j.contains("\"epochs\": 0"));
         assert!(j.contains("\"energy_mj\": "));
         assert!(!j.contains(",\n  ]"), "no trailing comma before array close");
+    }
+
+    #[test]
+    fn folding_in_epochs_accumulates_across_calls() {
+        // Two fold_events calls (two epochs) must account the same as one
+        // call over the concatenation — the incremental-merge contract.
+        let mut stats = ClusterStats::new(2);
+        let e0 = vec![completion(1.0, 0, TrafficClass::Batch)];
+        let e1 = vec![completion(9.0, 1, TrafficClass::Batch)];
+        stats.record_ingress(&e0[0].req, TrafficClass::Batch);
+        stats.record_ingress(&e1[0].req, TrafficClass::Batch);
+        fold_events(&mut stats, &[e0, Vec::new()], |_, _| {}, None);
+        fold_events(&mut stats, &[Vec::new(), e1], |_, _| {}, None);
+        finalize(&mut stats, vec![empty_outcome(1.0), empty_outcome(9.0)], &PowerModel::default());
+        assert_eq!(stats.serve.completed(), 2);
+        assert_eq!(stats.per_class[&TrafficClass::Batch].completed, 2);
+        assert_eq!(stats.serve.end_cycle(), 9.0);
     }
 }

@@ -9,13 +9,17 @@
 //!
 //! 1. **Determinism at any thread count.** Arrivals are generated and
 //!    classified centrally (pure functions of the seed and request id),
-//!    statically striped across shards by request id, and each shard's
-//!    simulation depends only on its input slice. The per-shard event
-//!    streams are then interleaved by a deterministic
-//!    `(cycle, shard, seq)` merge ([`merge`]). A fixed seed therefore
-//!    yields **bit-identical [`ClusterStats`]** whether the run used 1
-//!    worker thread or 64 — the integration suite and the CI determinism
-//!    gate both diff the emitted stats JSON across thread counts.
+//!    statically striped across shards (by request id for open-loop
+//!    sources, by issuing client for closed-loop ones), and each shard's
+//!    window simulation depends only on its input. The per-shard event
+//!    streams are interleaved by a deterministic
+//!    `(epoch, cycle, shard, seq)` merge ([`merge`]), and everything that
+//!    crosses shards — closed-loop completion feedback, stolen work —
+//!    does so at single-threaded epoch barriers ([`sync`]). A fixed seed
+//!    therefore yields **bit-identical [`ClusterStats`]** whether the run
+//!    used 1 worker thread or 64 — the integration suite, the
+//!    `testutil::fuzz_determinism` harness and the CI determinism gate
+//!    all diff the emitted stats JSON across thread counts.
 //! 2. **Multi-tenant traffic classes.** Every request is tagged
 //!    interactive / batch / best-effort ([`class`]); dispatch is strict
 //!    priority across classes (EDF across models within a class), and an
@@ -29,32 +33,42 @@
 //!    crowd out interactive traffic. Shed counts and per-class SLO
 //!    attainment land in [`ClusterStats`].
 //!
-//! Sharding is static (round-robin by request id), mirroring how L7 load
-//! balancers stripe traffic across cells; the route policy balances load
-//! *within* each shard. Closed-loop sources need completion feedback and
-//! therefore stay on `Fleet::run`; the cluster engine takes open-loop
-//! sources (Poisson, trace replay), which it can materialize up front.
+//! Sharding is static, mirroring how L7 load balancers stripe traffic
+//! across cells; the route policy balances load *within* each shard, and
+//! the opt-in epoch-barrier **work-stealing pass**
+//! ([`SyncConfig::steal`]) rebalances queued batches *across* shards
+//! when skewed traffic leaves a stripe hot. Closed-loop sources
+//! (`Source::closed_loop`, `Source::client_trace`) run under the
+//! conservative time-window scheme of [`sync`]; open-loop sources
+//! without stealing take a zero-barrier fast path that is byte-identical
+//! to the pre-sync engine.
 //!
 //! ## Example
 //!
 //! ```no_run
-//! use wienna::cluster::{Cluster, ClusterConfig};
+//! use wienna::cluster::{Cluster, ClusterConfig, SyncConfig};
 //! use wienna::config::DesignPoint;
 //! use wienna::serve::{ms_to_cycles, ModelKind, PackageSpec, Source, WorkloadMix};
 //!
-//! // 16 WIENNA-C packages, 4 shards, default classes + admission.
+//! // 16 WIENNA-C packages, 4 shards, work stealing at the epoch edges.
 //! let cluster = Cluster::new(
 //!     PackageSpec::homogeneous(16, DesignPoint::WIENNA_C),
-//!     ClusterConfig { shards: 4, ..Default::default() },
+//!     ClusterConfig {
+//!         shards: 4,
+//!         sync: SyncConfig { steal: true, ..Default::default() },
+//!         ..Default::default()
+//!     },
 //! );
 //! let mix = WorkloadMix::single(ModelKind::ResNet50, 25.0);
-//! let mut source = Source::poisson(mix, 8000.0, 42);
-//! let stats = cluster.run(&mut source, ms_to_cycles(100.0));
+//! // A closed-loop client pool: 64 clients, 2 ms think time.
+//! let mut source = Source::closed_loop(mix, 64, 2.0, 50, 42);
+//! let stats = cluster.run(&mut source, f64::INFINITY);
 //! println!(
-//!     "interactive p99 {:.2} ms | shed {:.1}% | preemptions {}",
+//!     "interactive p99 {:.2} ms | shed {:.1}% | steals {} over {} epochs",
 //!     stats.class_latency_ms(wienna::cluster::TrafficClass::Interactive, 99.0),
 //!     stats.serve.shed_rate() * 100.0,
-//!     stats.preemptions,
+//!     stats.steals,
+//!     stats.epochs,
 //! );
 //! ```
 
@@ -62,15 +76,16 @@ pub mod admission;
 pub mod class;
 pub mod merge;
 pub mod shard;
+pub mod sync;
 
 pub use admission::{AdmissionConfig, ShedReason};
 pub use class::{ClassMix, ClassSpec, TrafficClass, NUM_CLASSES};
 pub use merge::ClusterStats;
+pub use sync::{SyncConfig, TraceEvent};
 
 use crate::cost::par;
 use crate::power::PowerConfig;
 use crate::serve::{BatcherConfig, PackageSpec, RoutePolicy, Source};
-use shard::ClassedRequest;
 
 /// Everything that configures a cluster besides its package specs.
 #[derive(Debug, Clone)]
@@ -90,10 +105,14 @@ pub struct ClusterConfig {
     pub admission: AdmissionConfig,
     /// Allow higher classes to abort in-flight lower-class batches.
     pub preemption: bool,
+    /// Time-window synchronization: epoch width and the epoch-barrier
+    /// work-stealing pass ([`sync`]).
+    pub sync: SyncConfig,
     /// Energy metering + optional power-cap governor (`wienna::power`).
     /// The fleet-level cap is statically partitioned across shards in
     /// proportion to the packages each governs, so shard simulations stay
-    /// independent (and thread-count-deterministic). No cap by default.
+    /// independent (and thread-count-deterministic); stolen work runs
+    /// under its *victim's* cap slice. No cap by default.
     pub power: PowerConfig,
     /// Fold in-class batching gains into the deadline-shed / EDF-routing
     /// completion estimate (ROADMAP: the batch-1 estimate is too
@@ -118,6 +137,7 @@ impl Default for ClusterConfig {
             classes: ClassMix::default(),
             admission: AdmissionConfig::default(),
             preemption: true,
+            sync: SyncConfig::default(),
             power: PowerConfig::default(),
             calibrated_eta: false,
             class_seed: 0xC1A5,
@@ -129,7 +149,7 @@ impl Default for ClusterConfig {
 pub struct Cluster {
     /// Package specs, already partitioned round-robin across shards so
     /// heterogeneous fleets spread evenly.
-    specs_by_shard: Vec<Vec<PackageSpec>>,
+    pub(crate) specs_by_shard: Vec<Vec<PackageSpec>>,
     pub cfg: ClusterConfig,
 }
 
@@ -152,52 +172,25 @@ impl Cluster {
         self.specs_by_shard.iter().map(|s| s.len()).sum()
     }
 
-    /// Run the sharded simulation: admit arrivals up to `horizon_cycles`,
-    /// classify and stripe them across shards, simulate every shard
-    /// (parallel over `cfg.threads` workers), and merge the event streams
-    /// deterministically.
+    /// Run the epoch-synchronized sharded simulation: admit arrivals
+    /// issued up to `horizon_cycles`, classify and stripe them across
+    /// shards, simulate window by window (parallel over `cfg.threads`
+    /// workers), exchange completion feedback and stolen work at the
+    /// deterministic epoch barriers, and drain everything admitted. Both
+    /// open- and closed-loop sources are accepted (see [`sync`]).
     pub fn run(&self, source: &mut Source, horizon_cycles: f64) -> ClusterStats {
-        assert!(
-            source.is_open_loop(),
-            "the cluster engine materializes arrivals up front; closed-loop sources need serve::Fleet::run"
-        );
-        assert!(
-            horizon_cycles.is_finite() || source.is_bounded(),
-            "an unbounded (Poisson) source needs a finite horizon"
-        );
-        let shards = self.shards();
-        let mut stats = ClusterStats::new(shards);
+        sync::run_sync(self, source, horizon_cycles, None)
+    }
 
-        // Ingress: classify (pure in (class_seed, id)) and stripe by id.
-        let mut inputs: Vec<Vec<ClassedRequest>> = (0..shards).map(|_| Vec::new()).collect();
-        while let Some(t) = source.next_arrival_at() {
-            if t > horizon_cycles {
-                break;
-            }
-            let mut req = source.pop();
-            let class = self.cfg.classes.classify(self.cfg.class_seed, &mut req);
-            stats.record_ingress(&req, class);
-            inputs[(req.id % shards as u64) as usize].push(ClassedRequest { req, class });
-        }
-
-        // The fleet power cap splits across shards in proportion to the
-        // packages each governs (shards simulate independently — a shared
-        // dynamic budget would couple them and break determinism).
-        let total_packages = self.packages_total();
-        let shard_caps: Vec<Option<f64>> = self
-            .specs_by_shard
-            .iter()
-            .map(|s| self.cfg.power.shard_cap(s.len(), total_packages))
-            .collect();
-
-        // Shard simulations are pure functions of their input slice, so
-        // the thread count can only change wall-clock time, not results.
-        let outcomes = par::par_map(shards, self.cfg.threads, |s| {
-            shard::run_shard(s, self.specs_by_shard[s].clone(), &inputs[s], &self.cfg, shard_caps[s])
-        });
-
-        merge::merge_into(&mut stats, outcomes, &self.cfg.power.model);
-        stats
+    /// [`Cluster::run`], additionally returning every finalized request
+    /// in merged event order — which shard served or shed it, and when.
+    /// The conservation property tests audit this trace (each admitted
+    /// request finalized exactly once, on exactly one shard, stealing or
+    /// not); it is also a useful debugging artifact.
+    pub fn run_traced(&self, source: &mut Source, horizon_cycles: f64) -> (ClusterStats, Vec<TraceEvent>) {
+        let mut trace = Vec::new();
+        let stats = sync::run_sync(self, source, horizon_cycles, Some(&mut trace));
+        (stats, trace)
     }
 }
 
@@ -232,6 +225,7 @@ mod tests {
         assert_eq!(a.to_json(), b.to_json(), "1 vs 2 threads");
         assert_eq!(a.to_json(), c.to_json(), "1 vs 4 threads");
         assert!(a.serve.completed() > 0);
+        assert_eq!(a.epochs, 1, "open-loop no-steal runs one unbounded epoch");
     }
 
     #[test]
@@ -287,13 +281,73 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "closed-loop")]
-    fn closed_loop_sources_are_rejected() {
+    fn closed_loop_sources_now_run_and_drain_fully() {
+        // The tentpole: the old engine rejected closed-loop sources; the
+        // sync layer runs them. Every client issues every request, all of
+        // them complete (admit-all so the count is exact), and the pool's
+        // pushback serializes each client's stream.
+        let clients = 6;
+        let per_client = 5u64;
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 2,
+                threads: 2,
+                admission: AdmissionConfig::admit_all(),
+                ..Default::default()
+            },
+        );
+        let mut source = Source::closed_loop(tiny_mix(), clients, 0.5, per_client, 9);
+        let stats = cluster.run(&mut source, f64::INFINITY);
+        assert_eq!(stats.serve.arrived(), clients as u64 * per_client);
+        assert_eq!(stats.serve.completed(), stats.serve.arrived());
+        assert_eq!(stats.serve.shed(), 0);
+        assert!(stats.epochs > 1, "closed-loop runs are windowed");
+    }
+
+    #[test]
+    fn shed_requests_still_rearm_their_closed_loop_clients() {
+        // A shed is a fast-fail response: the client observes it and
+        // issues its next request. A zero-cap cluster sheds every single
+        // arrival, yet every client must still issue its full session —
+        // were sheds swallowed, each client would stall after its first
+        // request and `arrived` would collapse to the client count.
+        let clients = 5;
+        let per_client = 4u64;
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 2,
+                threads: 2,
+                admission: AdmissionConfig { queue_cap: Some(0), shed_late: false },
+                ..Default::default()
+            },
+        );
+        let mut source = Source::closed_loop(tiny_mix(), clients, 0.3, per_client, 21);
+        let stats = cluster.run(&mut source, f64::INFINITY);
+        assert_eq!(stats.serve.arrived(), clients as u64 * per_client);
+        assert_eq!(stats.serve.shed(), stats.serve.arrived(), "cap 0 sheds everything");
+        assert_eq!(stats.serve.completed(), 0);
+    }
+
+    #[test]
+    fn client_trace_source_runs_on_the_cluster() {
+        // Recorded per-client timestamps replay under the sync layer; the
+        // run drains every recorded request exactly once.
+        let traces = vec![vec![0.1, 0.4, 2.0], vec![0.2, 0.9], vec![1.5]];
+        let total: u64 = traces.iter().map(|c| c.len() as u64).sum();
         let cluster = Cluster::new(
             PackageSpec::homogeneous(2, DesignPoint::WIENNA_C),
-            ClusterConfig::default(),
+            ClusterConfig {
+                shards: 2,
+                threads: 2,
+                admission: AdmissionConfig::admit_all(),
+                ..Default::default()
+            },
         );
-        let mut source = Source::closed_loop(tiny_mix(), 2, 1.0, 2, 1);
-        cluster.run(&mut source, f64::INFINITY);
+        let mut source = Source::client_trace(tiny_mix(), &traces, 4);
+        let stats = cluster.run(&mut source, f64::INFINITY);
+        assert_eq!(stats.serve.arrived(), total);
+        assert_eq!(stats.serve.completed(), total);
     }
 }

@@ -2,11 +2,20 @@
 //! one slice of the cluster's packages.
 //!
 //! A shard receives its arrivals **pre-routed and pre-classified** by the
-//! cluster ingress (`cluster::Cluster::run`), so its simulation depends
-//! only on that input slice — never on scheduling, other shards, or the
-//! worker-thread count. Shards therefore run embarrassingly parallel
-//! under `cost::par` and still produce bit-identical event streams at any
-//! thread count; `cluster::merge` interleaves the streams afterwards.
+//! cluster ingress (`cluster::sync`), so its simulation depends only on
+//! that input — never on scheduling, other shards, or the worker-thread
+//! count. Shards therefore run embarrassingly parallel under `cost::par`
+//! and still produce bit-identical event streams at any thread count;
+//! `cluster::merge` interleaves the streams afterwards.
+//!
+//! Since the time-window refactor a shard is **resumable**: the sync
+//! layer calls [`ShardSim::step`] once per epoch with that epoch's
+//! arrival slice and the window end, and the shard carries its clock,
+//! queues, in-flight batches and accounting across calls. A completion
+//! falling on or past the window end stays in flight until the epoch
+//! that contains it — that is the conservative synchronization contract
+//! that lets epoch barriers exchange completion feedback and stolen work
+//! deterministically.
 //!
 //! Inside a shard the loop mirrors `serve::Fleet::run`, extended with the
 //! multi-tenant machinery:
@@ -33,6 +42,22 @@ use std::collections::BTreeMap;
 pub(crate) struct ClassedRequest {
     pub req: Request,
     pub class: TrafficClass,
+    /// Cycle at which the request becomes visible to this shard. For a
+    /// fresh arrival this is `req.arrival`; for a request stolen at an
+    /// epoch barrier it is the barrier cycle (the request cannot be
+    /// served before the shard that held it handed it over).
+    pub ready_at: f64,
+    /// Stolen requests were admitted once already on their donor shard:
+    /// they bypass admission control here (dropping already-admitted work
+    /// would be worse — the same rule preemption requeues follow).
+    pub stolen: bool,
+}
+
+impl ClassedRequest {
+    /// A fresh (never-admitted) ingress arrival.
+    pub(crate) fn fresh(req: Request, class: TrafficClass) -> Self {
+        ClassedRequest { ready_at: req.arrival, stolen: false, req, class }
+    }
 }
 
 /// What happened to a request inside the shard.
@@ -51,12 +76,10 @@ pub(crate) struct ShardEvent {
     pub req: Request,
 }
 
-/// Everything a finished shard hands back for the deterministic merge.
+/// Everything a finished shard hands back for the final accounting merge
+/// (events travel separately, one batch per epoch via [`ShardSim::step`]).
 #[derive(Debug)]
 pub(crate) struct ShardOutcome {
-    pub shard_id: usize,
-    /// Completion and shed events, chronological within the shard.
-    pub events: Vec<ShardEvent>,
     /// Dispatched-batch-size histogram.
     pub dispatch_hist: BTreeMap<u64, u64>,
     pub preemptions: u64,
@@ -71,7 +94,7 @@ pub(crate) struct ShardOutcome {
     pub cache_misses: u64,
 }
 
-struct ShardSim<'a> {
+pub(crate) struct ShardSim<'a> {
     cfg: &'a ClusterConfig,
     /// This shard's slice of the fleet power cap (`PowerConfig::shard_cap`).
     cap_w: Option<f64>,
@@ -85,6 +108,9 @@ struct ShardSim<'a> {
     inflight_class: Vec<Option<TrafficClass>>,
     cache: CostCache,
     rr_cursor: usize,
+    /// Shard-local clock: the cycle of the last processed event. Persists
+    /// across [`ShardSim::step`] calls.
+    now: f64,
     events: Vec<ShardEvent>,
     dispatch_hist: BTreeMap<u64, u64>,
     class_energy_mj: [f64; NUM_CLASSES],
@@ -92,7 +118,7 @@ struct ShardSim<'a> {
 }
 
 impl<'a> ShardSim<'a> {
-    fn new(specs: Vec<PackageSpec>, cfg: &'a ClusterConfig, cap_w: Option<f64>) -> Self {
+    pub(crate) fn new(specs: Vec<PackageSpec>, cfg: &'a ClusterConfig, cap_w: Option<f64>) -> Self {
         assert!(!specs.is_empty(), "a shard needs at least one package");
         let n = specs.len();
         ShardSim {
@@ -104,6 +130,7 @@ impl<'a> ShardSim<'a> {
             inflight_class: vec![None; n],
             cache: CostCache::new(),
             rr_cursor: 0,
+            now: 0.0,
             events: Vec::new(),
             dispatch_hist: BTreeMap::new(),
             class_energy_mj: [0.0; NUM_CLASSES],
@@ -128,11 +155,72 @@ impl<'a> ShardSim<'a> {
         self.queues[i].iter().map(|q| q.depth_total()).sum()
     }
 
+    /// Requests waiting in this shard's admission queues (all packages).
+    pub(crate) fn queued_total_all(&self) -> usize {
+        (0..self.packages.len()).map(|i| self.queued_total(i)).sum()
+    }
+
+    /// Whether the shard holds no queued and no in-flight work.
+    pub(crate) fn is_drained(&self) -> bool {
+        self.packages.iter().all(|p| p.is_idle()) && self.queued_total_all() == 0
+    }
+
+    /// Earliest pending in-flight completion, if any batch is running.
+    pub(crate) fn next_completion(&self) -> Option<f64> {
+        self.packages
+            .iter()
+            .filter(|p| !p.is_idle())
+            .map(|p| p.busy_until())
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.min(t))))
+    }
+
     /// All pending work on package `i`: busy remainder plus every class's
     /// batch-1 backlog estimate.
     fn load(&self, i: usize, now: f64) -> f64 {
         let busy_rem = (self.packages[i].busy_until() - now).max(0.0);
         busy_rem + self.backlog[i].iter().sum::<f64>()
+    }
+
+    /// Total pending work across the shard at `at` (the barrier's load
+    /// metric for the steal pass: estimated cycles, not request counts,
+    /// so a queue of heavy models outweighs a deeper queue of light ones).
+    pub(crate) fn load_total(&self, at: f64) -> f64 {
+        (0..self.packages.len()).map(|i| self.load(i, at)).sum()
+    }
+
+    /// The `(package, class, kind)` of the newest-admitted queued request
+    /// on this shard — the steal candidate (newest-first stealing keeps
+    /// FIFO order intact for everything that stays behind).
+    fn newest_queued(&self) -> Option<(usize, usize, ModelKind)> {
+        let mut best: Option<(u64, usize, usize, ModelKind)> = None;
+        for i in 0..self.queues.len() {
+            for ci in 0..NUM_CLASSES {
+                if let Some(r) = self.queues[i][ci].peek_newest() {
+                    if best.map_or(true, |(id, ..)| r.id > id) {
+                        best = Some((r.id, i, ci, r.kind));
+                    }
+                }
+            }
+        }
+        best.map(|(_, i, ci, k)| (i, ci, k))
+    }
+
+    /// Batch-1 service estimate of the current steal candidate (`None`
+    /// when nothing is queued). The barrier uses this to decide whether a
+    /// move actually shrinks the donor/victim imbalance.
+    pub(crate) fn steal_cost(&mut self) -> Option<f64> {
+        let (i, _, kind) = self.newest_queued()?;
+        Some(self.est1(i, kind))
+    }
+
+    /// Remove and return the newest-admitted queued request for transfer
+    /// to another shard, rolling its share out of the backlog estimate.
+    pub(crate) fn steal_newest(&mut self) -> Option<(Request, TrafficClass)> {
+        let (i, ci, kind) = self.newest_queued()?;
+        let req = self.queues[i][ci].pop_newest()?;
+        let est = self.est1(i, kind);
+        self.backlog[i][ci] = (self.backlog[i][ci] - est).max(0.0);
+        Some((req, TrafficClass::ALL[ci]))
     }
 
     /// Estimated wait-plus-service for a `class` arrival of `kind` on
@@ -212,12 +300,22 @@ impl<'a> ShardSim<'a> {
         }
     }
 
+    /// Enqueue one request on package `idx` without admission control
+    /// (already-admitted work: the `Ok` path of [`ShardSim::admit`], and
+    /// stolen requests re-homed at an epoch barrier).
+    fn enqueue(&mut self, idx: usize, req: Request, class: TrafficClass, now: f64) {
+        let service1 = self.est1(idx, req.kind);
+        let deadline = req.deadline;
+        self.backlog[idx][class.index()] += service1;
+        self.queues[idx][class.index()].push(req);
+        self.maybe_preempt(idx, class, deadline, now);
+    }
+
     /// Route one arrival, apply admission control, enqueue or shed, and
     /// run the preemption check.
     fn admit(&mut self, now: f64, req: Request, class: TrafficClass) {
         let kind = req.kind;
         let idx = self.route(now, kind, class);
-        let service1 = self.est1(idx, kind);
         let eta = self.completion_eta(idx, class, kind, now);
         let depth = self.queued_total(idx);
         let deadline_shed =
@@ -228,10 +326,7 @@ impl<'a> ShardSim<'a> {
                 // make room: priority isolation extends to admission, so
                 // scavenger backlog can never crowd a full queue against
                 // higher-class arrivals.
-                let deadline = req.deadline;
-                self.backlog[idx][class.index()] += service1;
-                self.queues[idx][class.index()].push(req);
-                self.maybe_preempt(idx, class, deadline, now);
+                self.enqueue(idx, req, class, now);
             }
             Err(reason) => {
                 self.events.push(ShardEvent {
@@ -242,12 +337,20 @@ impl<'a> ShardSim<'a> {
                 });
             }
             Ok(()) => {
-                let deadline = req.deadline;
-                self.backlog[idx][class.index()] += service1;
-                self.queues[idx][class.index()].push(req);
-                self.maybe_preempt(idx, class, deadline, now);
+                self.enqueue(idx, req, class, now);
             }
         }
+    }
+
+    /// Re-home a request stolen from another shard at an epoch barrier:
+    /// route and enqueue, skipping admission control — the donor admitted
+    /// it once already, and shedding admitted work on transfer would make
+    /// stealing lossy (the conservation property test forbids that). The
+    /// queue cap may transiently overshoot, exactly like a preemption
+    /// requeue.
+    fn inject(&mut self, now: f64, req: Request, class: TrafficClass) {
+        let idx = self.route(now, req.kind, class);
+        self.enqueue(idx, req, class, now);
     }
 
     /// Push-out on a full queue: shed the *newest* queued request of the
@@ -383,18 +486,23 @@ impl<'a> ShardSim<'a> {
         }
     }
 
-    /// The event loop: admit arrivals in input order, then drain.
-    fn run(mut self, shard_id: usize, arrivals: &[ClassedRequest]) -> ShardOutcome {
-        let mut now = 0.0f64;
+    /// Run one epoch: admit `arrivals` (ascending `ready_at`, all below
+    /// `end`) in slice order interleaved with completions, processing
+    /// every event with cycle strictly below `end`; a completion landing
+    /// on or past `end` stays in flight for a later epoch. Returns the
+    /// events emitted this epoch, chronological within the shard. The
+    /// shard's clock, queues and accounting persist across calls; an
+    /// `end` of `f64::INFINITY` drains the shard completely.
+    pub(crate) fn step(&mut self, arrivals: &[ClassedRequest], end: f64) -> Vec<ShardEvent> {
         let mut cursor = 0usize;
         loop {
             for i in 0..self.packages.len() {
                 if self.packages[i].is_idle() && self.queued_total(i) > 0 {
-                    self.try_dispatch(i, now);
+                    self.try_dispatch(i, self.now);
                 }
             }
 
-            let next_arrival = arrivals.get(cursor).map(|a| a.req.arrival);
+            let next_arrival = arrivals.get(cursor).map(|a| a.ready_at);
             let mut next_completion = f64::INFINITY;
             let mut completing = usize::MAX;
             for (i, p) in self.packages.iter().enumerate() {
@@ -406,44 +514,61 @@ impl<'a> ShardSim<'a> {
 
             match next_arrival {
                 Some(t) if t <= next_completion => {
-                    now = now.max(t);
+                    // A `ready_at` in the shard's past (cross-shard
+                    // feedback or a stolen hand-off that landed inside an
+                    // already-simulated window) is admitted at the local
+                    // clock — the conservative-sync approximation, with
+                    // error bounded by one epoch.
+                    self.now = self.now.max(t);
                     let a = arrivals[cursor].clone();
                     cursor += 1;
-                    self.admit(now, a.req, a.class);
+                    if a.stolen {
+                        self.inject(self.now, a.req, a.class);
+                    } else {
+                        self.admit(self.now, a.req, a.class);
+                    }
                 }
-                _ if completing != usize::MAX => {
-                    now = now.max(next_completion);
+                _ if completing != usize::MAX && next_completion < end => {
+                    self.now = self.now.max(next_completion);
                     self.complete(completing);
                 }
                 _ => break,
             }
         }
-        debug_assert!((0..self.packages.len()).all(|i| self.queued_total(i) == 0));
+        debug_assert_eq!(cursor, arrivals.len(), "every epoch arrival is below the window end");
+        std::mem::take(&mut self.events)
+    }
+
+    /// Tear the shard down into its final accounting (after the last
+    /// epoch has drained it).
+    pub(crate) fn finish(self) -> ShardOutcome {
+        debug_assert!(self.is_drained(), "finish() called on an undrained shard");
         ShardOutcome {
-            shard_id,
-            events: self.events,
             dispatch_hist: self.dispatch_hist,
             preemptions: self.preemptions,
             packages: self.packages,
             class_energy_mj: self.class_energy_mj,
-            end_cycle: now,
+            end_cycle: self.now,
             cache_hits: self.cache.hits,
             cache_misses: self.cache.misses,
         }
     }
 }
 
-/// Run one shard to completion over its classified arrival slice.
-/// `cap_w` is this shard's (already partitioned) slice of the fleet
-/// power cap.
+/// Run one shard start-to-drain over a classified arrival slice (the
+/// single-epoch convenience the unit tests use; the sync layer drives
+/// [`ShardSim::step`] epoch by epoch instead). `cap_w` is this shard's
+/// (already partitioned) slice of the fleet power cap.
+#[cfg(test)]
 pub(crate) fn run_shard(
-    shard_id: usize,
     specs: Vec<PackageSpec>,
     arrivals: &[ClassedRequest],
     cfg: &ClusterConfig,
     cap_w: Option<f64>,
-) -> ShardOutcome {
-    ShardSim::new(specs, cfg, cap_w).run(shard_id, arrivals)
+) -> (Vec<ShardEvent>, ShardOutcome) {
+    let mut sim = ShardSim::new(specs, cfg, cap_w);
+    let events = sim.step(arrivals, f64::INFINITY);
+    (events, sim.finish())
 }
 
 #[cfg(test)]
@@ -454,8 +579,8 @@ mod tests {
 
     fn arrival(id: u64, at_ms: f64, slo_ms: f64, class: TrafficClass) -> ClassedRequest {
         let arrival = ms_to_cycles(at_ms);
-        ClassedRequest {
-            req: Request {
+        ClassedRequest::fresh(
+            Request {
                 id,
                 kind: ModelKind::TinyCnn,
                 arrival,
@@ -463,11 +588,11 @@ mod tests {
                 client: None,
             },
             class,
-        }
+        )
     }
 
-    fn outcome_of(cfg: &ClusterConfig, arrivals: &[ClassedRequest]) -> ShardOutcome {
-        run_shard(0, vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], arrivals, cfg, None)
+    fn outcome_of(cfg: &ClusterConfig, arrivals: &[ClassedRequest]) -> (Vec<ShardEvent>, ShardOutcome) {
+        run_shard(vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], arrivals, cfg, None)
     }
 
     #[test]
@@ -476,13 +601,53 @@ mod tests {
         let arrivals: Vec<ClassedRequest> = (0..40)
             .map(|i| arrival(i, 0.01 * i as f64, 50.0, TrafficClass::ALL[(i % 3) as usize]))
             .collect();
-        let out = outcome_of(&cfg, &arrivals);
+        let (events, out) = outcome_of(&cfg, &arrivals);
         let completed =
-            out.events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+            events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
         assert_eq!(completed, 40, "everything admitted completes");
         assert!(out.end_cycle > 0.0);
         // Events are chronological — the merge relies on this.
-        assert!(out.events.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+        assert!(events.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+    }
+
+    #[test]
+    fn stepping_in_windows_matches_one_unbounded_epoch() {
+        // The resumability contract: slicing the same arrival stream into
+        // fixed windows must reproduce the single-epoch run event for
+        // event — this is what makes the open-loop fast path (one
+        // unbounded epoch) byte-identical to a windowed run.
+        let cfg = ClusterConfig { admission: super::super::AdmissionConfig::admit_all(), ..Default::default() };
+        let arrivals: Vec<ClassedRequest> = (0..60)
+            .map(|i| arrival(i, 0.013 * i as f64, 50.0, TrafficClass::ALL[(i % 3) as usize]))
+            .collect();
+        let (whole, out_whole) = outcome_of(&cfg, &arrivals);
+
+        let window = ms_to_cycles(0.1);
+        let mut sim = ShardSim::new(vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], &cfg, None);
+        let mut stepped: Vec<ShardEvent> = Vec::new();
+        let mut cursor = 0usize;
+        let mut start = 0.0f64;
+        while !sim.is_drained() || cursor < arrivals.len() {
+            let end = start + window;
+            let mut slice = Vec::new();
+            while cursor < arrivals.len() && arrivals[cursor].ready_at < end {
+                slice.push(arrivals[cursor].clone());
+                cursor += 1;
+            }
+            stepped.extend(sim.step(&slice, end));
+            start = end;
+        }
+        stepped.extend(sim.step(&[], f64::INFINITY));
+        let out_stepped = sim.finish();
+
+        assert_eq!(whole.len(), stepped.len());
+        for (a, b) in whole.iter().zip(stepped.iter()) {
+            assert_eq!(a.req.id, b.req.id);
+            assert_eq!(a.cycle.to_bits(), b.cycle.to_bits(), "event time drifted for id {}", a.req.id);
+            assert_eq!(a.outcome, b.outcome);
+        }
+        assert_eq!(out_whole.end_cycle.to_bits(), out_stepped.end_cycle.to_bits());
+        assert_eq!(out_whole.dispatch_hist, out_stepped.dispatch_hist);
     }
 
     #[test]
@@ -493,13 +658,57 @@ mod tests {
         };
         let arrivals: Vec<ClassedRequest> =
             (0..10).map(|i| arrival(i, 0.01 * i as f64, 50.0, TrafficClass::Interactive)).collect();
-        let out = outcome_of(&cfg, &arrivals);
-        assert!(out
-            .events
+        let (events, out) = outcome_of(&cfg, &arrivals);
+        assert!(events
             .iter()
             .all(|e| e.outcome == ShardEventOutcome::Shed(ShedReason::QueueFull)));
-        assert_eq!(out.events.len(), 10);
+        assert_eq!(events.len(), 10);
         assert_eq!(out.dispatch_hist.len(), 0, "nothing admitted, nothing dispatched");
+    }
+
+    #[test]
+    fn stolen_requests_bypass_admission_and_keep_their_deadline() {
+        // A zero-cap queue sheds every fresh arrival, but a stolen
+        // hand-off was admitted on its donor already: it must be served,
+        // not shed, and its original deadline must ride along.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig { queue_cap: Some(0), shed_late: false },
+            ..Default::default()
+        };
+        let mut stolen = arrival(3, 0.0, 50.0, TrafficClass::Interactive);
+        stolen.stolen = true;
+        stolen.ready_at = ms_to_cycles(0.2); // handed over at a barrier
+        let (events, _) = outcome_of(&cfg, &[stolen.clone()]);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].outcome, ShardEventOutcome::Completed);
+        assert_eq!(events[0].req.deadline, stolen.req.deadline);
+        assert!(events[0].cycle >= stolen.ready_at, "served no earlier than the hand-off");
+    }
+
+    #[test]
+    fn steal_newest_pops_the_latest_admission_and_updates_load() {
+        // Batch-1 batcher so five of the six arrivals stay queued behind
+        // the single in-flight dispatch.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            batcher: crate::serve::BatcherConfig { max_batch: 1, candidates: vec![1] },
+            ..Default::default()
+        };
+        let mut sim = ShardSim::new(vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], &cfg, None);
+        let arrivals: Vec<ClassedRequest> =
+            (0..6).map(|i| arrival(i, 0.0, 1000.0, TrafficClass::Batch)).collect();
+        // Stop the clock before anything completes.
+        sim.step(&arrivals, 1.0);
+        let queued_before = sim.queued_total_all();
+        assert_eq!(queued_before, 5, "one in flight, five queued");
+        let load_before = sim.load_total(0.0);
+        let cost = sim.steal_cost().expect("candidate exists");
+        let (req, class) = sim.steal_newest().expect("steal succeeds");
+        assert_eq!(req.id, 5, "newest admission is stolen first");
+        assert_eq!(class, TrafficClass::Batch);
+        assert_eq!(sim.queued_total_all(), queued_before - 1);
+        let load_after = sim.load_total(0.0);
+        assert!((load_before - load_after - cost).abs() < 1e-6, "load drops by the candidate estimate");
     }
 
     #[test]
@@ -516,9 +725,8 @@ mod tests {
         let mut arrivals: Vec<ClassedRequest> =
             (0..4).map(|i| arrival(i, 0.0, 1000.0, TrafficClass::BestEffort)).collect();
         arrivals.push(arrival(4, 0.0, 1000.0, TrafficClass::Interactive));
-        let out = outcome_of(&cfg, &arrivals);
-        let shed: Vec<(u64, TrafficClass)> = out
-            .events
+        let (events, _) = outcome_of(&cfg, &arrivals);
+        let shed: Vec<(u64, TrafficClass)> = events
             .iter()
             .filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_)))
             .map(|e| (e.req.id, e.class))
@@ -527,8 +735,7 @@ mod tests {
         // displace); BE id 2 — the newest queued — was pushed out by the
         // interactive arrival. The interactive request itself completes.
         assert_eq!(shed, vec![(3, TrafficClass::BestEffort), (2, TrafficClass::BestEffort)]);
-        let completed: Vec<u64> = out
-            .events
+        let completed: Vec<u64> = events
             .iter()
             .filter(|e| e.outcome == ShardEventOutcome::Completed)
             .map(|e| e.req.id)
@@ -560,22 +767,22 @@ mod tests {
         let mut arrivals: Vec<ClassedRequest> =
             (0..16).map(|i| arrival(i, 0.0, 1000.0 * l1_ms, TrafficClass::BestEffort)).collect();
         arrivals.push(arrival(16, 0.05 * l1_ms, 1.5 * l1_ms, TrafficClass::Interactive));
-        let out = outcome_of(&cfg, &arrivals);
+        let (events, out) = outcome_of(&cfg, &arrivals);
         assert!(out.preemptions >= 1, "interactive arrival should preempt");
         // Everything still completes (preempted work is requeued, and the
         // rescued interactive request was admitted, not shed).
         let completed =
-            out.events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+            events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
         assert_eq!(completed, 17);
 
         // Same scenario with preemption off: no preemptions, and the
         // interactive request is now hopeless, so deadline shedding
         // (default-on) refuses it instead.
         let no = ClusterConfig { preemption: false, ..cfg };
-        let out = outcome_of(&no, &arrivals);
+        let (events, out) = outcome_of(&no, &arrivals);
         assert_eq!(out.preemptions, 0);
         let shed =
-            out.events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
+            events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
         assert_eq!(shed, 1, "without preemption the interactive arrival is shed as hopeless");
     }
 
@@ -617,32 +824,31 @@ mod tests {
         };
         let req_of = |id: u64, at_ms: f64, slo_ms: f64| {
             let at = ms_to_cycles(at_ms);
-            ClassedRequest {
-                req: Request { id, kind, arrival: at, deadline: at + ms_to_cycles(slo_ms), client: None },
-                class: TrafficClass::Interactive,
-            }
+            ClassedRequest::fresh(
+                Request { id, kind, arrival: at, deadline: at + ms_to_cycles(slo_ms), client: None },
+                TrafficClass::Interactive,
+            )
         };
         let mut arrivals: Vec<ClassedRequest> =
             (0..backlog as u64).map(|i| req_of(i, 0.0, 1e6 * l1_ms)).collect();
         arrivals.push(req_of(backlog as u64, 0.01 * l1_ms, crate::serve::cycles_to_ms(deadline)));
 
-        let cons = outcome_of(&mk(false), &arrivals);
-        let shed_cons: Vec<u64> = cons
-            .events
+        let (cons_events, _) = outcome_of(&mk(false), &arrivals);
+        let shed_cons: Vec<u64> = cons_events
             .iter()
             .filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_)))
             .map(|e| e.req.id)
             .collect();
         assert_eq!(shed_cons, vec![backlog as u64], "conservative ETA must shed the probe");
 
-        let cal = outcome_of(&mk(true), &arrivals);
+        let (cal_events, _) = outcome_of(&mk(true), &arrivals);
         let shed_cal =
-            cal.events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
+            cal_events.iter().filter(|e| matches!(e.outcome, ShardEventOutcome::Shed(_))).count();
         assert_eq!(shed_cal, 0, "calibrated ETA must admit (and serve) everything");
         // The property the satellite pins: calibrated sheds ⊆ conservative
         // sheds on identical input.
         let completed_cal =
-            cal.events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+            cal_events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
         assert_eq!(completed_cal, backlog + 1);
     }
 }

@@ -1,0 +1,307 @@
+//! Conservative time-window synchronization for the sharded engine.
+//!
+//! The original cluster engine materialized every (open-loop) arrival up
+//! front and ran each shard start-to-finish in isolation — which is why
+//! closed-loop sources were rejected and a hot shard could never hand
+//! work to an idle one. This module replaces that one-shot fan-out with
+//! the classic conservative parallel-discrete-event scheme: simulation
+//! advances in fixed-size **epochs** (the lookahead window), each shard
+//! simulates one window independently ([`ShardSim::step`]), and at every
+//! epoch edge a single-threaded, deterministic **barrier** runs:
+//!
+//! 1. the window's per-shard event streams are merged in
+//!    `(cycle, shard, seq)` order and folded into the stats
+//!    (`cluster::merge::fold_events`);
+//! 2. **closed-loop feedback** crosses shards: every merged completion
+//!    *and shed* (a shed is a fast-fail response the client still
+//!    observes) is relayed to the source in that same order, re-arming
+//!    `Source::closed_loop` / `Source::client_trace` clients — the two
+//!    sources the old engine had to refuse;
+//! 3. an optional **work-stealing pass** ([`SyncConfig::steal`])
+//!    rebalances queued requests from the most- to the least-loaded
+//!    shard in a fixed `(epoch, donor, victim, seq)` order;
+//! 4. the next window's arrivals are pulled from the source, classified,
+//!    and striped to shards.
+//!
+//! Everything at the barrier is single-threaded and every shard window is
+//! a pure function of its inputs, so stats stay **bit-identical at any
+//! worker-thread count** — the same guarantee the one-shot engine had,
+//! now with feedback and stealing in the loop.
+//!
+//! ## Conservatism, exactness, and the window size
+//!
+//! Feedback and stolen work only cross shards at epoch edges, so the
+//! effective cross-shard latency is up to one window
+//! ([`SyncConfig::epoch_cycles`]). A client re-armed *inside* the window
+//! just simulated is issued with its true ready time; the receiving
+//! shard admits it at `max(ready, shard clock)`, so the approximation
+//! error is bounded by one window and shrinks as the window does (at the
+//! price of more barriers). Two exactness results anchor the design:
+//!
+//! * **Open-loop, no stealing**: nothing ever crosses shards, so the
+//!   engine collapses to a single unbounded epoch that is *byte-identical*
+//!   to the old one-shot engine (the existing stats tests pin this).
+//! * **Any configuration**: slicing a shard's timeline into windows
+//!   without cross-shard traffic reproduces the unsliced run event for
+//!   event (`shard::tests::stepping_in_windows_matches_one_unbounded_epoch`).
+//!
+//! Striping: open-loop requests stripe by request id (as before);
+//! closed-loop requests stripe by issuing client, so one client's
+//! requests — which are serialized by its own completion feedback anyway
+//! — stay on one shard. That mirrors session-affinity load balancing and
+//! is exactly the regime where hot clients make hot shards and stealing
+//! pays (`benches/cluster_scale.rs` sweeps the skew).
+
+use super::merge;
+use super::shard::{ClassedRequest, ShardSim};
+use super::{Cluster, ClusterStats, TrafficClass};
+use crate::cost::par;
+use crate::serve::{ms_to_cycles, Request, Source};
+use std::sync::Mutex;
+
+/// Epoch-synchronization knobs (`ClusterConfig::sync`).
+#[derive(Debug, Clone)]
+pub struct SyncConfig {
+    /// Width of one synchronization window in cycles: the interval at
+    /// which closed-loop feedback and stolen work cross shards. Smaller
+    /// windows track a global event loop more closely but pay more
+    /// barriers. Ignored (one unbounded epoch) when the source is
+    /// open-loop and stealing is off, since nothing would cross shards.
+    pub epoch_cycles: f64,
+    /// Enable the epoch-barrier work-stealing pass: queued (never
+    /// in-flight) requests move from the most- to the least-loaded shard
+    /// until the move would no longer shrink the imbalance.
+    pub steal: bool,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        // 0.5 ms at the Table-4 clock: fine enough that default think
+        // times (≥ 1 ms) span multiple windows, coarse enough that a
+        // 100 ms run pays ~200 barriers.
+        SyncConfig { epoch_cycles: ms_to_cycles(0.5), steal: false }
+    }
+}
+
+/// One finalized request in the merged event order — which shard served
+/// (or shed) it and when. `Cluster::run_traced` returns these so tests
+/// can audit conservation: every admitted request is finalized exactly
+/// once, on exactly one shard, stealing or not.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub cycle: f64,
+    /// Shard that finalized the request (for a stolen request: the
+    /// victim it was moved to, never the donor).
+    pub shard: usize,
+    pub id: u64,
+    pub class: TrafficClass,
+    /// `true` for a completion, `false` for a shed.
+    pub completed: bool,
+}
+
+/// Which shard an arrival is striped to. Open-loop requests stripe by
+/// request id; closed-loop requests stripe by their issuing client
+/// (session affinity — see the module docs).
+fn stripe(req: &Request, shards: usize) -> usize {
+    (req.client.map_or(req.id, |c| c as u64) % shards as u64) as usize
+}
+
+/// The smaller of two optional event times.
+fn min_opt(a: Option<f64>, b: Option<f64>) -> Option<f64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+/// Run the epoch-synchronized simulation (see module docs). `horizon`
+/// bounds *admission*: arrivals issued past it are never admitted, but
+/// admitted work always drains. When `trace` is given, every finalized
+/// request is recorded in merged order.
+pub(crate) fn run_sync(
+    cluster: &Cluster,
+    source: &mut Source,
+    horizon: f64,
+    mut trace: Option<&mut Vec<TraceEvent>>,
+) -> ClusterStats {
+    let cfg = &cluster.cfg;
+    assert!(
+        horizon.is_finite() || source.is_bounded(),
+        "an unbounded (Poisson) source needs a finite horizon"
+    );
+    assert!(cfg.sync.epoch_cycles > 0.0, "epoch width must be positive");
+    assert!(
+        cfg.sync.epoch_cycles.is_finite() || (source.is_open_loop() && !cfg.sync.steal),
+        "closed-loop feedback and stealing need finite epochs"
+    );
+    let shards = cluster.shards();
+    let mut stats = ClusterStats::new(shards);
+
+    // Open-loop without stealing has no cross-shard traffic: one
+    // unbounded epoch reproduces the pre-sync engine byte for byte and
+    // pays no barrier cost.
+    let window = if cfg.sync.steal || !source.is_open_loop() {
+        cfg.sync.epoch_cycles
+    } else {
+        f64::INFINITY
+    };
+
+    // The fleet power cap splits across shards in proportion to the
+    // packages each governs (shards simulate independently — a shared
+    // dynamic budget would couple them and break determinism).
+    let total_packages = cluster.packages_total();
+    let sims: Vec<Mutex<ShardSim>> = cluster
+        .specs_by_shard
+        .iter()
+        .map(|specs| {
+            let cap = cfg.power.shard_cap(specs.len(), total_packages);
+            Mutex::new(ShardSim::new(specs.clone(), cfg, cap))
+        })
+        .collect();
+
+    // Requests stolen at the previous barrier, awaiting injection into
+    // the next window (ready at its start).
+    let mut pending: Vec<Vec<ClassedRequest>> = vec![Vec::new(); shards];
+    let mut start = 0.0f64;
+    loop {
+        let end = if window.is_finite() { start + window } else { f64::INFINITY };
+
+        // Ingress for this window: classify (pure in (class_seed, id))
+        // and stripe every arrival issued before `end`.
+        let mut inputs: Vec<Vec<ClassedRequest>> = std::mem::take(&mut pending);
+        // Stolen hand-offs are ready exactly at the window start; an
+        // arrival issued earlier (feedback landing inside the previous
+        // window) must precede them in the slice's ready order.
+        let stolen_counts: Vec<usize> = inputs.iter().map(|v| v.len()).collect();
+        while let Some(t) = source.next_arrival_at() {
+            if t >= end || t > horizon {
+                break;
+            }
+            let mut req = source.pop();
+            let class = cfg.classes.classify(cfg.class_seed, &mut req);
+            stats.record_ingress(&req, class);
+            let s = stripe(&req, shards);
+            let a = ClassedRequest::fresh(req, class);
+            if a.ready_at < start && stolen_counts[s] > 0 {
+                let at = inputs[s].len() - stolen_counts[s];
+                inputs[s].insert(at, a);
+            } else {
+                inputs[s].push(a);
+            }
+        }
+
+        // Simulate the window: each shard is a pure function of its
+        // accumulated state and this input slice, so the thread count
+        // only changes wall-clock time.
+        let events: Vec<_> = par::par_map(shards, cfg.threads, |s| {
+            sims[s].lock().expect("shard mutex").step(&inputs[s], end)
+        });
+        stats.epochs += 1;
+
+        // Barrier, single-threaded from here: merge + feedback ...
+        merge::fold_events(
+            &mut stats,
+            &events,
+            |t, req| source.on_complete(t, req),
+            trace.as_mut().map(|t| &mut **t),
+        );
+
+        if end.is_finite() {
+            // ... then the stealing pass over the post-window queue state.
+            pending = vec![Vec::new(); shards];
+            if cfg.sync.steal {
+                stats.steals += steal_pass(&sims, end, &mut pending);
+            }
+
+            let have_stolen = pending.iter().any(|p| !p.is_empty());
+            let next_arrival = source.next_arrival_at().filter(|&t| t <= horizon);
+            let next_completion = sims
+                .iter()
+                .map(|m| m.lock().expect("shard mutex").next_completion())
+                .fold(None, min_opt);
+            if !have_stolen && next_arrival.is_none() && next_completion.is_none() {
+                break; // drained: no queued work can exist without an in-flight batch
+            }
+            start = end;
+            if !have_stolen {
+                // Nothing due for several windows? Jump straight to the
+                // window containing the next event. Safe: with no events
+                // in between, shard loads cannot change, so the skipped
+                // barriers' steal passes would all be no-ops (the pass
+                // runs to convergence).
+                if let Some(t) = min_opt(next_arrival, next_completion) {
+                    if t >= start + window {
+                        start = (t / window).floor() * window;
+                    }
+                }
+            }
+        } else {
+            break; // the single unbounded epoch drained everything
+        }
+    }
+
+    let outcomes: Vec<_> = sims
+        .into_iter()
+        .map(|m| m.into_inner().expect("shard mutex").finish())
+        .collect();
+    merge::finalize(&mut stats, outcomes, &cfg.power.model);
+    stats
+}
+
+/// The epoch-barrier stealing pass at barrier cycle `bar`: repeatedly
+/// move the newest queued request of the most-loaded shard (the donor)
+/// to the least-loaded one (the victim), while the move still shrinks
+/// the donor/victim gap — i.e. while `load(donor) - load(victim)` exceeds
+/// the candidate's own service estimate. Load is estimated *cycles*
+/// (busy remainder + batch-1 backlog), not request counts, so a queue of
+/// heavy models out-donates a deeper queue of light ones. Ties resolve
+/// to the lower shard id, and a request stolen this barrier is not
+/// steal-able again until the next one (it travels via `pending`), so
+/// the pass terminates after at most the initially-queued request count
+/// and its `(epoch, donor, victim, seq)` move order is deterministic.
+///
+/// Stolen requests are appended to `pending[victim]` with
+/// `ready_at = bar`: the victim cannot serve work before the barrier
+/// that handed it over.
+fn steal_pass(sims: &[Mutex<ShardSim>], bar: f64, pending: &mut [Vec<ClassedRequest>]) -> u64 {
+    if sims.len() < 2 {
+        return 0;
+    }
+    let mut guards: Vec<_> =
+        sims.iter().map(|m| m.lock().expect("shard mutex")).collect();
+    let mut loads: Vec<f64> = guards.iter().map(|g| g.load_total(bar)).collect();
+    let mut moved = 0u64;
+    let mut budget: usize = guards.iter().map(|g| g.queued_total_all()).sum();
+    while budget > 0 {
+        // Donor: most-loaded shard that still has queued (steal-able)
+        // work; victim: least-loaded shard overall. Ties -> lower id.
+        let mut donor: Option<usize> = None;
+        let mut victim = 0usize;
+        for s in 0..guards.len() {
+            if guards[s].queued_total_all() > 0
+                && donor.map_or(true, |d| loads[s] > loads[d])
+            {
+                donor = Some(s);
+            }
+            if loads[s] < loads[victim] {
+                victim = s;
+            }
+        }
+        let Some(donor) = donor else { break };
+        if donor == victim {
+            break;
+        }
+        let Some(cost) = guards[donor].steal_cost() else { break };
+        if loads[donor] - loads[victim] <= cost {
+            break; // the move would overshoot: rebalancing has converged
+        }
+        let (req, class) = guards[donor].steal_newest().expect("steal_cost saw a candidate");
+        loads[donor] -= cost;
+        loads[victim] += cost;
+        pending[victim].push(ClassedRequest { ready_at: bar, stolen: true, req, class });
+        moved += 1;
+        budget -= 1;
+    }
+    moved
+}

@@ -9,8 +9,9 @@
 //!                  [--policy rr|ll|edf] [--load F] [--duration-ms MS] [--slo-ms MS]
 //!                  [--client-trace FILE]
 //! wienna cluster   [--packages N] [--shards N] [--threads N] [--mix ...] [--policy ...]
-//!                  [--load F | --rps R] [--queue-cap N|none] [--no-shed-late] [--no-preempt]
-//!                  [--stats-json FILE]
+//!                  [--load F | --rps R | --closed-loop N | --client-trace FILE]
+//!                  [--steal] [--epoch-cycles N] [--queue-cap N|none] [--no-shed-late]
+//!                  [--no-preempt] [--stats-json FILE]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -58,6 +59,11 @@ cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|
               --queue-cap N|none  --no-shed-late  --no-preempt  --stats-json FILE  --verbose
               --power-cap-w W (statically partitioned across shards)  --no-power-gating
               --calibrated-eta (fold in-class batching gains into the deadline-shed estimate)
+              --closed-loop N (N closed-loop clients instead of the Poisson source; drains fully,
+              ignores --load/--rps/--duration-ms)  --think-ms MS  --requests-per-client N
+              --client-trace FILE (closed-loop replay of recorded per-client timestamps)
+              --steal (epoch-barrier cross-shard work stealing)
+              --epoch-cycles N (sync window width; feedback + stealing cross shards at its edges)
 search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
               --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
               --class-slos I,B,E (per-class p99 targets in ms, 'inf' allowed; sizes on the
@@ -83,6 +89,7 @@ impl Flags {
                 || key == "no-power-gating"
                 || key == "calibrated-eta"
                 || key == "pareto"
+                || key == "steal"
             {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -376,7 +383,7 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
 }
 
 fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
-    use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig};
+    use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, SyncConfig};
 
     let packages = f.u64("packages", 16)? as usize;
     let shards = f.u64("shards", 4)? as usize;
@@ -399,11 +406,21 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     };
     let mix = parse_mix(&f.str("mix", "mixed"), slo_ms)?;
 
+    let mut sync = SyncConfig { steal: f.flag("steal"), ..Default::default() };
+    if let Some(e) = f.0.get("epoch-cycles") {
+        sync.epoch_cycles =
+            e.parse().map_err(|_| anyhow::anyhow!("--epoch-cycles: bad number '{e}'"))?;
+        anyhow::ensure!(
+            sync.epoch_cycles > 0.0 && sync.epoch_cycles.is_finite(),
+            "--epoch-cycles must be positive and finite"
+        );
+    }
     let mut cfg = ClusterConfig {
         shards,
         policy,
         preemption: !f.flag("no-preempt"),
         admission: AdmissionConfig { queue_cap, shed_late: !f.flag("no-shed-late") },
+        sync,
         power: parse_power(f)?,
         calibrated_eta: f.flag("calibrated-eta"),
         ..Default::default()
@@ -412,37 +429,75 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         cfg.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads: bad number '{t}'"))?;
     }
     let threads = cfg.threads;
+    let seed = f.u64("seed", 42)?;
 
     let specs = PackageSpec::homogeneous(packages, dp);
-    // Offered rate: absolute --rps, or --load as a fraction of the
-    // fleet's estimated capacity.
-    let rate = match f.0.get("rps") {
-        Some(r) => r.parse::<f64>().map_err(|_| anyhow::anyhow!("--rps: bad number '{r}'"))?,
-        None => Fleet::new(specs.clone(), policy).estimate_capacity_rps(&mix, 8) * load,
+    // Source: a recorded client trace or a synthetic closed-loop client
+    // pool replace the open-loop Poisson process; both set their own load
+    // and the run ends when they drain.
+    let (mut source, horizon, offered) = if let Some(path) = f.0.get("client-trace") {
+        if f.0.contains_key("load") || f.0.contains_key("rps") || f.0.contains_key("duration-ms") {
+            eprintln!(
+                "note: --load/--rps/--duration-ms are ignored with --client-trace — the recorded \
+                 trace sets the load and the run ends when it drains"
+            );
+        }
+        let clients = wienna::workload::trace::load_arrivals(std::path::Path::new(path))?;
+        let recorded: usize = clients.iter().map(|c| c.len()).sum();
+        let offered =
+            format!("replaying {} clients / {recorded} recorded requests from {path}", clients.len());
+        (Source::client_trace(mix, &clients, seed), f64::INFINITY, offered)
+    } else if let Some(c) = f.0.get("closed-loop") {
+        if f.0.contains_key("load") || f.0.contains_key("rps") || f.0.contains_key("duration-ms") {
+            eprintln!(
+                "note: --load/--rps/--duration-ms are ignored with --closed-loop — client \
+                 pushback sets the load and the run ends when every client finishes"
+            );
+        }
+        let clients: usize =
+            c.parse().map_err(|_| anyhow::anyhow!("--closed-loop: bad client count '{c}'"))?;
+        anyhow::ensure!(clients >= 1, "--closed-loop needs at least one client");
+        let think_ms = f.f64("think-ms", 2.0)?;
+        anyhow::ensure!(think_ms >= 0.0, "--think-ms must be >= 0");
+        let per_client = f.u64("requests-per-client", 64)?;
+        anyhow::ensure!(per_client >= 1, "--requests-per-client must be >= 1");
+        let offered =
+            format!("closed loop: {clients} clients x {per_client} requests, think {think_ms} ms");
+        (Source::closed_loop(mix, clients, think_ms, per_client, seed), f64::INFINITY, offered)
+    } else {
+        // Offered rate: absolute --rps, or --load as a fraction of the
+        // fleet's estimated capacity.
+        let rate = match f.0.get("rps") {
+            Some(r) => r.parse::<f64>().map_err(|_| anyhow::anyhow!("--rps: bad number '{r}'"))?,
+            None => Fleet::new(specs.clone(), policy).estimate_capacity_rps(&mix, 8) * load,
+        };
+        anyhow::ensure!(rate > 0.0, "offered rate must be positive");
+        let offered = format!("offered {rate:.0} req/s for {duration_ms:.0} ms");
+        (Source::poisson(mix, rate, seed), ms_to_cycles(duration_ms), offered)
     };
-    anyhow::ensure!(rate > 0.0, "offered rate must be positive");
 
     let cluster = Cluster::new(specs, cfg);
-    let mut source = Source::poisson(mix, rate, f.u64("seed", 42)?);
     let t0 = std::time::Instant::now();
-    let stats = cluster.run(&mut source, ms_to_cycles(duration_ms));
+    let stats = cluster.run(&mut source, horizon);
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
-        "cluster: {packages} x {} in {} shards ({} threads) | policy {} | offered {rate:.0} req/s for {duration_ms:.0} ms",
+        "cluster: {packages} x {} in {} shards ({} threads) | policy {} | {offered}",
         dp.label(),
         cluster.shards(),
         threads,
         policy.label()
     );
     println!(
-        "arrived {} | completed {} | shed {} (queue-full {}, deadline {}) | preemptions {} | {:.1} ms wall",
+        "arrived {} | completed {} | shed {} (queue-full {}, deadline {}) | preemptions {} | steals {} over {} epochs | {:.1} ms wall",
         stats.serve.arrived(),
         stats.serve.completed(),
         stats.serve.shed(),
         stats.shed_queue_full,
         stats.shed_deadline,
         stats.preemptions,
+        stats.steals,
+        stats.epochs,
         wall * 1e3,
     );
     println!(

@@ -94,9 +94,18 @@ impl QueueSet {
         q.drain(..take).collect()
     }
 
+    /// The most recently admitted queued request (largest arrival seq
+    /// across all model queues) — what [`QueueSet::pop_newest`] would
+    /// remove. The cluster's steal pass peeks here to price a candidate
+    /// move before committing it; the two must select identically.
+    pub fn peek_newest(&self) -> Option<&Request> {
+        self.queues.iter().filter_map(|(_, q)| q.back()).max_by_key(|r| r.id)
+    }
+
     /// Remove and return the most recently admitted request (largest
     /// arrival seq across all model queues) — the push-out victim when a
-    /// higher-priority arrival displaces queued lower-class work.
+    /// higher-priority arrival displaces queued lower-class work, and the
+    /// transfer unit of the cluster's epoch-barrier work stealing.
     pub fn pop_newest(&mut self) -> Option<Request> {
         let pos = self
             .queues
@@ -189,10 +198,15 @@ mod tests {
         q.push(req(0, ModelKind::TinyCnn, 0.0, 100.0));
         q.push(req(5, ModelKind::Mlp, 1.0, 100.0));
         q.push(req(3, ModelKind::TinyCnn, 2.0, 100.0));
+        // peek and pop must agree at every step (the steal pass prices
+        // the peeked candidate, then pops it).
+        assert_eq!(q.peek_newest().map(|r| r.id), Some(5));
         assert_eq!(q.pop_newest().map(|r| r.id), Some(5));
+        assert_eq!(q.peek_newest().map(|r| r.id), Some(3));
         assert_eq!(q.pop_newest().map(|r| r.id), Some(3));
         assert_eq!(q.pop_newest().map(|r| r.id), Some(0));
         assert!(q.pop_newest().is_none());
+        assert!(q.peek_newest().is_none());
     }
 
     #[test]

@@ -344,8 +344,12 @@ impl Source {
         }
     }
 
-    /// Completion feedback; drives the closed-loop clients and is a no-op
-    /// for open-loop sources.
+    /// Final-disposition feedback: drives the closed-loop clients and is
+    /// a no-op for open-loop sources. The cluster engine relays *sheds*
+    /// through here too, not just completions — a shed is a fast-fail
+    /// response the client still observes, so it re-arms and issues its
+    /// next request rather than silently abandoning the rest of its
+    /// session (`cluster::merge::fold_events`).
     pub fn on_complete(&mut self, now: f64, req: &Request) {
         match self {
             Source::ClosedLoop(s) => {
@@ -387,11 +391,13 @@ impl Source {
         !matches!(self, Source::Poisson(_))
     }
 
-    /// Whether arrivals are independent of completions. Open-loop sources
-    /// (Poisson, gap replay) can be materialized up front, which the
-    /// sharded cluster engine requires; closed-loop sources (client pool,
-    /// client-trace replay) need completion feedback and only run under
-    /// the single-loop `Fleet::run`.
+    /// Whether arrivals are independent of completions. Closed-loop
+    /// sources (client pool, client-trace replay) need completion
+    /// feedback: `Fleet::run` delivers it inline, and the sharded
+    /// cluster engine delivers it at its epoch barriers
+    /// (`cluster::sync`). Open-loop sources (Poisson, gap replay) need
+    /// none, which lets the cluster run them as one unbounded epoch when
+    /// work stealing is off.
     pub fn is_open_loop(&self) -> bool {
         matches!(self, Source::Poisson(_) | Source::Replay(_))
     }

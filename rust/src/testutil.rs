@@ -181,6 +181,147 @@ pub fn write_bench_json_to(path: &Path) -> std::io::Result<()> {
     std::fs::write(path, s)
 }
 
+/// Summary of one [`fuzz_determinism`] sweep, so callers can assert the
+/// harness actually exercised the interesting regimes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FuzzSummary {
+    pub trials: usize,
+    /// Trials driven by a closed-loop source (client pool or trace).
+    pub closed_loop_trials: usize,
+    /// Trials with the epoch-barrier work-stealing pass enabled.
+    pub steal_trials: usize,
+    /// Requests served or shed across all trials (at the 1-thread count).
+    pub requests: u64,
+}
+
+/// Determinism fuzz harness for the sharded cluster engine: generate
+/// `trials` randomized `ClusterConfig`s from `seed` — package/shard
+/// counts, routing policy, queue caps, deadline shedding, preemption,
+/// class populations, epoch widths, work stealing on/off, and all three
+/// source families (Poisson, closed-loop client pool, client-trace
+/// replay) — and assert for each that the emitted stats JSON is
+/// **byte-identical at 1, 2 and 4 worker threads**, and that request
+/// conservation (`arrived == completed + shed`, globally and per class)
+/// holds after the drain. Source family and stealing alternate
+/// round-robin across trials so even a short sweep covers every regime;
+/// everything else is drawn from the seeded RNG, so a failing seed
+/// reproduces exactly.
+///
+/// Panics (with the trial's parameters in the message) on any violation;
+/// returns a [`FuzzSummary`] of what was covered.
+pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
+    use crate::cluster::{
+        AdmissionConfig, ClassMix, ClassSpec, Cluster, ClusterConfig, SyncConfig, TrafficClass,
+    };
+    use crate::config::DesignPoint;
+    use crate::serve::{ms_to_cycles, MixEntry, ModelKind, PackageSpec, RoutePolicy, Source, WorkloadMix};
+    use crate::workload::trace::synthetic_arrivals;
+
+    let mut rng = Rng::new(seed);
+    let mut summary = FuzzSummary::default();
+    for trial in 0..trials {
+        let mix = WorkloadMix::new(vec![
+            MixEntry { kind: ModelKind::TinyCnn, weight: 3.0, slo_cycles: ms_to_cycles(20.0) },
+            MixEntry { kind: ModelKind::Mlp, weight: 1.0, slo_cycles: ms_to_cycles(40.0) },
+        ]);
+        let packages = rng.range_u64(1, 5) as usize;
+        let shards = rng.range_u64(1, 4) as usize;
+        let steal = trial % 2 == 1;
+        let queue_cap = match rng.range_u64(0, 3) {
+            0 => None,
+            1 => Some(0),
+            n => Some((4 * n) as usize),
+        };
+        // 1–3 distinct classes with random weights, SLO scales (possibly
+        // deadline-free) and shed policies.
+        let mask = rng.range_u64(1, 7);
+        let specs: Vec<ClassSpec> = TrafficClass::ALL
+            .iter()
+            .enumerate()
+            .filter(|(bit, _)| mask & (1u64 << *bit) != 0)
+            .map(|(_, &class)| ClassSpec {
+                class,
+                weight: 0.2 + rng.next_f32() as f64,
+                slo_scale: if rng.range_u64(0, 3) == 0 {
+                    f64::INFINITY
+                } else {
+                    1.0 + rng.next_f32() as f64 * 4.0
+                },
+                deadline_shed: rng.range_u64(0, 1) == 1,
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            shards,
+            threads: 1, // overridden per run below
+            policy: *rng.pick(&RoutePolicy::ALL),
+            classes: ClassMix::new(specs),
+            admission: AdmissionConfig { queue_cap, shed_late: rng.range_u64(0, 1) == 1 },
+            preemption: rng.range_u64(0, 1) == 1,
+            sync: SyncConfig {
+                epoch_cycles: ms_to_cycles(0.1 + rng.next_f32() as f64 * 1.4),
+                steal,
+            },
+            calibrated_eta: rng.range_u64(0, 1) == 1,
+            ..Default::default()
+        };
+        let horizon = ms_to_cycles(2.0 + rng.next_f32() as f64 * 4.0);
+        let src_seed = rng.next_u64();
+        let source = match trial % 3 {
+            0 => Source::poisson(mix, 1000.0 + rng.next_f32() as f64 * 11_000.0, src_seed),
+            1 => Source::closed_loop(
+                mix,
+                rng.range_u64(1, 8) as usize,
+                0.05 + rng.next_f32() as f64 * 1.5,
+                rng.range_u64(2, 8),
+                src_seed,
+            ),
+            _ => {
+                let counts: Vec<usize> =
+                    (0..rng.range_u64(1, 6)).map(|_| rng.range_u64(1, 12) as usize).collect();
+                let spacing = 0.1 + rng.next_f32() as f64 * 0.5;
+                Source::client_trace(mix, &synthetic_arrivals(&counts, spacing, 0.5, src_seed), src_seed)
+            }
+        };
+        let label = format!(
+            "fuzz trial {trial} (seed {seed:#x}): {packages} pkg, {shards} shards, steal {steal}, \
+             cap {queue_cap:?}, epoch {:.0} cyc, {}",
+            cfg.sync.epoch_cycles,
+            if source.is_open_loop() { "open-loop" } else { "closed-loop" },
+        );
+        if !source.is_open_loop() {
+            summary.closed_loop_trials += 1;
+        }
+        if steal {
+            summary.steal_trials += 1;
+        }
+
+        let mut jsons = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let cluster = Cluster::new(
+                PackageSpec::homogeneous(packages, DesignPoint::WIENNA_C),
+                ClusterConfig { threads, ..cfg.clone() },
+            );
+            let mut src = source.clone();
+            let stats = cluster.run(&mut src, horizon);
+            assert_eq!(
+                stats.serve.arrived(),
+                stats.serve.completed() + stats.serve.shed(),
+                "{label}: arrived != completed + shed at {threads} threads"
+            );
+            let per_class: u64 = stats.per_class.values().map(|m| m.completed + m.shed).sum();
+            assert_eq!(per_class, stats.serve.arrived(), "{label}: per-class balance");
+            if threads == 1 {
+                summary.requests += stats.serve.arrived();
+            }
+            jsons.push(stats.to_json());
+        }
+        assert_eq!(jsons[0], jsons[1], "{label}: 1-thread vs 2-thread stats JSON diverged");
+        assert_eq!(jsons[0], jsons[2], "{label}: 1-thread vs 4-thread stats JSON diverged");
+        summary.trials += 1;
+    }
+    summary
+}
+
 /// Relative-equality assertion helper (replaces `approx`).
 #[macro_export]
 macro_rules! assert_close {

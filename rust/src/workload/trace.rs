@@ -141,6 +141,45 @@ pub fn load_arrivals(path: &std::path::Path) -> Result<Vec<Vec<f64>>> {
     parse_arrivals(&text)
 }
 
+/// Synthesize a per-client arrival trace: client `i` issues
+/// `requests_per_client[i]` requests at a jittered `spacing_ms` cadence
+/// (each gap drawn uniformly from `spacing_ms * [1 - jitter, 1 + jitter]`,
+/// first issue staggered inside one spacing). Deterministic in `seed`,
+/// timestamps ascending per client — ready for
+/// `serve::Source::client_trace` and for `workload::trace::parse_arrivals`
+/// round-trips.
+///
+/// Skew is expressed through the counts vector: giving a few clients
+/// (whose *indices* choose their cluster shard — closed-loop requests
+/// stripe by client) most of the requests reproduces the hot-shard
+/// pattern the cluster's work-stealing pass exists for; the
+/// `cluster_scale` bench sweeps exactly that.
+pub fn synthetic_arrivals(
+    requests_per_client: &[usize],
+    spacing_ms: f64,
+    jitter: f64,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    assert!(!requests_per_client.is_empty(), "need at least one client");
+    assert!(requests_per_client.iter().all(|&n| n >= 1), "every client issues at least once");
+    assert!(spacing_ms > 0.0 && spacing_ms.is_finite(), "spacing must be positive");
+    assert!((0.0..=1.0).contains(&jitter), "jitter is a fraction of the spacing");
+    let mut rng = crate::testutil::Rng::new(seed);
+    requests_per_client
+        .iter()
+        .map(|&n| {
+            let mut t = rng.next_f32() as f64 * spacing_ms;
+            let mut times = Vec::with_capacity(n);
+            for _ in 0..n {
+                times.push(t);
+                let u = rng.next_f32() as f64; // [0, 1)
+                t += spacing_ms * (1.0 - jitter + 2.0 * jitter * u);
+            }
+            times
+        })
+        .collect()
+}
+
 /// Serialize a model back to trace text (round-trip support).
 pub fn dump(model: &Model) -> String {
     use super::OpKind;
@@ -218,6 +257,35 @@ mod tests {
         assert!(parse_arrivals("client a 1.0 x\n").is_err(), "bad number");
         assert!(parse_arrivals("client a 5.0 1.0\n").is_err(), "descending");
         assert!(parse_arrivals("client a -1.0\n").is_err(), "negative");
+    }
+
+    #[test]
+    fn synthetic_arrivals_are_deterministic_ascending_and_sized() {
+        let counts = [40usize, 1, 1, 7];
+        let a = synthetic_arrivals(&counts, 0.25, 0.5, 11);
+        let b = synthetic_arrivals(&counts, 0.25, 0.5, 11);
+        assert_eq!(a.len(), counts.len());
+        for (ts, &n) in a.iter().zip(counts.iter()) {
+            assert_eq!(ts.len(), n);
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ascending per client");
+            assert!(ts.iter().all(|t| t.is_finite() && *t >= 0.0));
+        }
+        assert_eq!(a, b, "same seed, same trace");
+        let c = synthetic_arrivals(&counts, 0.25, 0.5, 12);
+        assert_ne!(a, c, "seed steers the jitter");
+        // The skewed client dominates the issue volume but stays inside
+        // the same time span order of magnitude as the cadence implies.
+        let span = a[0].last().unwrap() - a[0][0];
+        assert!(span > 0.25 * 39.0 * 0.4, "hot client spans its cadence, got {span}");
+        // Zero jitter is an exact cadence.
+        let exact = synthetic_arrivals(&[3], 1.0, 0.0, 5);
+        assert!((exact[0][1] - exact[0][0] - 1.0).abs() < 1e-9);
+        assert!((exact[0][2] - exact[0][1] - 1.0).abs() < 1e-9);
+        // And the output feeds the closed-loop source directly.
+        let mix = crate::serve::WorkloadMix::single(crate::serve::ModelKind::TinyCnn, 20.0);
+        let mut src = crate::serve::Source::client_trace(mix, &a, 3);
+        assert!(src.next_arrival_at().is_some());
+        let _ = src.pop();
     }
 
     #[test]

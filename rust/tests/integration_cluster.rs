@@ -1,20 +1,31 @@
 //! Integration tests for `wienna::cluster`: the sharded multi-tenant
 //! serving engine, end to end.
 //!
-//! The two load-bearing guarantees proven here:
+//! The load-bearing guarantees proven here:
 //!
 //! 1. **Determinism**: a fixed seed yields bit-identical `ClusterStats`
 //!    (compared as the emitted stats JSON) across 1/2/4 worker threads —
-//!    the property the CI determinism gate re-checks on the built binary.
-//! 2. **Conservation under admission control**: shed + completed always
-//!    equals arrived after a drained run, across randomized
-//!    configurations; a zero-cap queue sheds everything and an uncapped,
-//!    non-shedding queue sheds nothing.
+//!    open-loop, closed-loop, and with epoch-barrier work stealing on;
+//!    the property the CI determinism gate re-checks on the built
+//!    binary, and the `testutil::fuzz_determinism` harness sweeps over
+//!    randomized configurations.
+//! 2. **Conservation under admission control and stealing**: shed +
+//!    completed always equals arrived after a drained run, per class and
+//!    globally, across randomized configurations — and the event trace
+//!    proves no request is ever finalized twice (i.e. executed on two
+//!    shards), however much the steal pass moves work around.
+//! 3. **Schema stability**: the stats-JSON field names and order are
+//!    pinned against a golden fixture, catching accidental renames and
+//!    reorders the (within-run) determinism diff cannot see.
 
-use wienna::cluster::{AdmissionConfig, ClassMix, Cluster, ClusterConfig, TrafficClass};
+use std::collections::HashMap;
+use wienna::cluster::{
+    AdmissionConfig, ClassMix, ClassSpec, Cluster, ClusterConfig, SyncConfig, TrafficClass,
+};
 use wienna::config::DesignPoint;
 use wienna::serve::{ms_to_cycles, MixEntry, ModelKind, PackageSpec, RoutePolicy, Source, WorkloadMix};
 use wienna::testutil::Rng;
+use wienna::workload::trace::synthetic_arrivals;
 
 fn tiny_mix(slo_ms: f64) -> WorkloadMix {
     WorkloadMix::new(vec![MixEntry {
@@ -194,6 +205,238 @@ fn per_class_accounting_reflects_the_population() {
     if let Some(be) = stats.per_class.get(&TrafficClass::BestEffort) {
         assert_eq!(be.slo_violated, 0, "best-effort has no deadline to violate");
     }
+}
+
+/// Acceptance criterion of the sync tentpole: 1/2/4-thread stats JSON is
+/// bit-identical with `--closed-loop` and `--steal` both enabled (the
+/// regime where completion feedback AND stolen work cross shards at
+/// every epoch barrier).
+#[test]
+fn closed_loop_with_stealing_is_bit_identical_across_threads() {
+    let run = |threads: usize| {
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(8, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 4,
+                threads,
+                sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.25) },
+                ..Default::default()
+            },
+        );
+        let mut source = Source::closed_loop(two_model_mix(), 24, 0.4, 12, 77);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let t1 = run(1);
+    let t2 = run(2);
+    let t4 = run(4);
+    assert_eq!(t1.serve.arrived(), 24 * 12, "every client request was issued");
+    assert!(t1.serve.completed() > 0);
+    assert!(t1.epochs > 1, "closed-loop runs are windowed");
+    let (j1, j2, j4) = (t1.to_json(), t2.to_json(), t4.to_json());
+    assert_eq!(j1, j2, "1-thread vs 2-thread closed-loop+steal JSON diverged");
+    assert_eq!(j1, j4, "1-thread vs 4-thread closed-loop+steal JSON diverged");
+    assert_eq!(t1.serve.latency_ms(99.0).to_bits(), t4.serve.latency_ms(99.0).to_bits());
+    assert_eq!(t1.steals, t4.steals);
+}
+
+/// The determinism fuzz harness (`testutil::fuzz_determinism`): random
+/// caps, class populations, epoch widths, steal on/off and all three
+/// source families, each asserted bit-identical at 1/2/4 threads. The
+/// harness panics on any divergence; here we also pin that it actually
+/// covered the closed-loop and stealing regimes.
+#[test]
+fn fuzz_determinism_sweeps_randomized_configs() {
+    let summary = wienna::testutil::fuzz_determinism(0xF00D, 9);
+    assert_eq!(summary.trials, 9);
+    assert!(summary.closed_loop_trials >= 3, "closed-loop regimes covered");
+    assert!(summary.steal_trials >= 3, "stealing regimes covered");
+    assert!(summary.requests > 0, "the sweep served real traffic");
+}
+
+/// Property test (steal satellite): with stealing enabled under
+/// randomized skewed class mixes, request conservation holds per class
+/// (`completed + shed == arrived`) and no request is ever finalized on
+/// two shards — the event trace shows every admitted id exactly once.
+#[test]
+fn stealing_conserves_requests_and_never_duplicates_execution() {
+    let mut rng = Rng::new(0x57EA1);
+    for trial in 0..8u64 {
+        // A deliberately skewed class population: one dominant class with
+        // the rest as slivers, random SLO handling.
+        let dominant = *rng.pick(&TrafficClass::ALL);
+        let classes = ClassMix::new(
+            TrafficClass::ALL
+                .iter()
+                .map(|&class| ClassSpec {
+                    class,
+                    weight: if class == dominant { 10.0 } else { 0.2 + rng.next_f32() as f64 },
+                    slo_scale: if rng.range_u64(0, 2) == 0 {
+                        f64::INFINITY
+                    } else {
+                        1.0 + rng.next_f32() as f64 * 3.0
+                    },
+                    deadline_shed: rng.range_u64(0, 1) == 1,
+                })
+                .collect(),
+        );
+        let queue_cap = match rng.range_u64(0, 2) {
+            0 => None,
+            n => Some((6 * n) as usize),
+        };
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(8, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 4,
+                threads: rng.range_u64(1, 4) as usize,
+                classes,
+                admission: AdmissionConfig { queue_cap, shed_late: rng.range_u64(0, 1) == 1 },
+                // Cap the batch so a hot package can't swallow its whole
+                // queue in one dispatch — queued work must exist for the
+                // steal pass to have anything to move.
+                batcher: wienna::serve::BatcherConfig { max_batch: 4, candidates: vec![1, 2, 4] },
+                sync: SyncConfig {
+                    steal: true,
+                    epoch_cycles: ms_to_cycles(0.1 + rng.next_f32() as f64),
+                },
+                ..Default::default()
+            },
+        );
+        // Skewed *arrival* pattern too: every client of stripe 0 (client
+        // index ≡ 0 mod 4) is hot, the rest issue one or two requests.
+        // Sixteen concurrent hot clients behind one 2-package stripe far
+        // exceed what one dispatch round can absorb at the batch cap
+        // above (2 packages x batch 4), so real backlog stays queued on
+        // the hot shard and the steal pass genuinely moves work.
+        let counts: Vec<usize> = (0..64)
+            .map(|i| if i % 4 == 0 { 20 } else { 1 + rng.range_u64(0, 1) as usize })
+            .collect();
+        let traces = synthetic_arrivals(&counts, 0.05 + rng.next_f32() as f64 * 0.1, 0.5, 100 + trial);
+        let mut source = Source::client_trace(two_model_mix(), &traces, 100 + trial);
+        let (stats, trace) = cluster.run_traced(&mut source, f64::INFINITY);
+        let label = format!("steal trial {trial}");
+
+        // Per-class and global conservation.
+        assert_eq!(
+            stats.serve.arrived(),
+            stats.serve.completed() + stats.serve.shed(),
+            "{label}: arrived != completed + shed"
+        );
+        for (class, m) in &stats.per_class {
+            assert_eq!(
+                m.arrived,
+                m.completed + m.shed,
+                "{label}: class {} does not balance",
+                class.label()
+            );
+        }
+        // No request is finalized twice (executed on two shards) and none
+        // vanishes: the trace holds every arrived id exactly once.
+        let mut seen: HashMap<u64, usize> = HashMap::new();
+        for ev in &trace {
+            if let Some(prev_shard) = seen.insert(ev.id, ev.shard) {
+                panic!(
+                    "{label}: request {} finalized on shard {} and shard {}",
+                    ev.id, prev_shard, ev.shard
+                );
+            }
+        }
+        assert_eq!(seen.len() as u64, stats.serve.arrived(), "{label}: trace covers every request");
+    }
+}
+
+/// Stealing actually rebalances a hot stripe: the same skewed trace runs
+/// with and without the steal pass; with it, work moves (steals > 0) and
+/// the drain finishes measurably earlier — one stripe owns all the real
+/// traffic, so without stealing a single package serves ~all of it while
+/// three sit idle. (The quantitative ≥20% goodput claim at bench scale
+/// lives in `benches/cluster_scale.rs`.)
+#[test]
+fn stealing_moves_work_off_a_hot_stripe_and_speeds_the_drain() {
+    let run = |steal: bool| {
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 4, // one package per shard: the skew has nowhere to hide
+                threads: 2,
+                classes: ClassMix::single(TrafficClass::Interactive, 1.0, false),
+                admission: AdmissionConfig::admit_all(),
+                preemption: false,
+                batcher: wienna::serve::BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
+                sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.1) },
+                ..Default::default()
+            },
+        );
+        // All real traffic on stripe 0: clients 0, 4, 8, ..., 60 are hot
+        // (16 concurrent clients against one batch-8-capped package, so
+        // at least half of them are queued at any barrier), the rest
+        // issue one request each.
+        let counts: Vec<usize> = (0..64).map(|i| if i % 4 == 0 { 40 } else { 1 }).collect();
+        let traces = synthetic_arrivals(&counts, 0.02, 0.5, 9);
+        let mut source = Source::client_trace(tiny_mix(25.0), &traces, 9);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let stuck = run(false);
+    let stolen = run(true);
+    assert_eq!(stuck.steals, 0);
+    assert!(stolen.steals > 0, "the hot stripe must donate work");
+    assert_eq!(stuck.serve.completed(), stolen.serve.completed(), "admit-all: same requests served");
+    assert!(
+        stolen.serve.end_cycle() <= 0.9 * stuck.serve.end_cycle(),
+        "stealing should cut the skewed drain by >=10%: {} vs {} cycles",
+        stolen.serve.end_cycle(),
+        stuck.serve.end_cycle()
+    );
+}
+
+/// Golden-file regression (schema satellite): the stats-JSON field names
+/// and order match the checked-in fixture. The determinism gate diffs
+/// runs of the *same* binary, so a renamed or reordered field would sail
+/// through it — this test catches exactly that. If the schema changes on
+/// purpose, regenerate the fixture to match `ClusterStats::to_json`.
+#[test]
+fn stats_json_schema_matches_the_golden_fixture() {
+    // Keys of one per-class JSON object line, in order: the segments of a
+    // `"`-split that are immediately followed by a `:`.
+    fn object_keys(line: &str) -> Vec<String> {
+        let parts: Vec<&str> = line.split('"').collect();
+        let mut keys = Vec::new();
+        let mut i = 1;
+        while i < parts.len() {
+            if parts.get(i + 1).is_some_and(|s| s.trim_start().starts_with(':')) {
+                keys.push(parts[i].to_string());
+            }
+            i += 2;
+        }
+        keys
+    }
+
+    let stats = run_cluster(4, 2, 2, 5000.0);
+    assert!(stats.serve.completed() > 0, "schema probe must fill the per-class array");
+    let json = stats.to_json();
+    let mut schema = String::new();
+    let mut class_done = false;
+    for line in json.lines() {
+        if let Some(rest) = line.strip_prefix("  \"") {
+            let key = rest.split('"').next().expect("top-level key closes its quote");
+            schema.push_str(&format!("top {key}\n"));
+        } else if line.starts_with("    {") && !class_done {
+            for key in object_keys(line) {
+                schema.push_str(&format!("class {key}\n"));
+            }
+            class_done = true;
+        }
+    }
+    assert!(class_done, "per-class array rendered at least one object");
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/testdata/cluster_stats_schema.golden");
+    let fixture = std::fs::read_to_string(&path).expect("golden schema fixture exists");
+    let pinned: String =
+        fixture.lines().filter(|l| !l.trim().is_empty() && !l.starts_with('#')).map(|l| format!("{l}\n")).collect();
+    assert_eq!(
+        schema, pinned,
+        "stats JSON schema drifted from {path:?} — if the change is deliberate, update the fixture"
+    );
 }
 
 /// Single-class cluster (best-effort only, admit-all, no preemption) on
