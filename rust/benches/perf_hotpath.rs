@@ -6,6 +6,8 @@
 //!   pool — the acceptance metric for the fast-path PR);
 //! * L3 cycle-level mesh simulator — flit-hop throughput;
 //! * L3 coordinator — schedule generation;
+//! * serve hot path — the request loop with telemetry off (the ≤2%
+//!   overhead guard for the observability PR) and with span recording on;
 //! * runtime — PJRT tile dispatch latency (only with `--features pjrt`
 //!   and built artifacts).
 //!
@@ -20,6 +22,11 @@ use wienna::cost::{
 };
 use wienna::dataflow::Strategy;
 use wienna::nop::sim::{MeshSim, Transfer};
+use wienna::serve::{
+    ms_to_cycles, Fleet, MixEntry, ModelKind, PackageSpec, RoutePolicy, ServeStats, Source,
+    WorkloadMix,
+};
+use wienna::telemetry::Recorder;
 use wienna::testutil::bench;
 use wienna::workload::resnet50::resnet50;
 use wienna::workload::unet::unet;
@@ -100,6 +107,36 @@ fn main() {
     println!(
         "  -> {:.2} Mflit-hops/s (target >= 1 M/s)",
         flit_hops / st.mean_ns * 1e9 / 1e6
+    );
+
+    // --- serve hot path: telemetry overhead guard ---
+    // With the recorder off, the only telemetry cost on the request path
+    // is the always-on attribution (~10 flops/request) plus one enum
+    // discriminant check — the acceptance guard is <= 2% vs the
+    // pre-telemetry baseline. The recorder-on row shows the opt-in span
+    // logging cost next to it.
+    let serve_mix = || {
+        WorkloadMix::new(vec![
+            MixEntry { kind: ModelKind::TinyCnn, weight: 3.0, slo_cycles: ms_to_cycles(25.0) },
+            MixEntry { kind: ModelKind::Mlp, weight: 1.0, slo_cycles: ms_to_cycles(50.0) },
+        ])
+    };
+    let serve_run = |record: bool| {
+        let mut fleet = Fleet::new(
+            PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+            RoutePolicy::EarliestDeadline,
+        );
+        fleet.recorder = Recorder::new(record);
+        let mut stats = ServeStats::new();
+        let mut source = Source::poisson(serve_mix(), 4000.0, 42);
+        fleet.run(&mut source, ms_to_cycles(50.0), &mut stats);
+        stats.completed()
+    };
+    let off = bench("serve/hot_path(telemetry off)", 20, || serve_run(false));
+    let on = bench("serve/hot_path(telemetry on)", 20, || serve_run(true));
+    println!(
+        "  -> span recording costs {:+.1}% on the serve hot path (off-path guard: <= 2%)",
+        (on.mean_ns / off.mean_ns - 1.0) * 100.0
     );
 
     // --- PJRT dispatch (needs `make artifacts` and `--features pjrt`) ---

@@ -21,6 +21,7 @@ use super::shard::{ShardEvent, ShardEventOutcome, ShardOutcome};
 use super::sync::TraceEvent;
 use crate::power::{FleetEnergy, PowerModel};
 use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
+use crate::telemetry::{PhaseTotals, Telemetry, PHASES};
 use std::collections::BTreeMap;
 
 /// Cluster-wide serving statistics: the fleet-level [`ServeStats`] plus
@@ -58,6 +59,14 @@ pub struct ClusterStats {
     /// Shard-local cost-cache totals (hits, misses).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Always-on per-class cycle attribution (`class.index()` order),
+    /// summed over shards in shard order. The run-level sums live in
+    /// `serve.attr`.
+    pub class_attr: [PhaseTotals; NUM_CLASSES],
+    /// Opt-in telemetry (`ClusterConfig::telemetry`): the merged span
+    /// log plus the metrics registry. `None` when disabled — one pointer
+    /// of overhead.
+    pub telemetry: Option<Box<Telemetry>>,
 }
 
 impl ClusterStats {
@@ -131,11 +140,24 @@ impl ClusterStats {
             num(self.energy.avg_power_w(self.serve.end_cycle()))
         ));
         s.push_str(&format!("  \"throttled_batches\": {},\n", self.energy.throttled_batches));
+        // Cycle attribution (`wienna::telemetry`): fraction of every
+        // completed request's end-to-end cycles spent in each phase.
+        // `null` when nothing completed.
+        let fracs = self.serve.attr.fractions();
+        for (name, v) in PHASES.iter().zip(fracs) {
+            s.push_str(&format!("  \"{name}_frac\": {},\n", num(v)));
+        }
         s.push_str("  \"per_class\": [\n");
         let n = self.per_class.len();
         for (i, (class, m)) in self.per_class.iter().enumerate() {
+            let cf = self.class_attr[class.index()].fractions();
+            let frac_fields: String = PHASES
+                .iter()
+                .zip(cf)
+                .map(|(name, v)| format!(", \"{name}_frac\": {}", num(v)))
+                .collect();
             s.push_str(&format!(
-                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"energy_mj\": {}}}{}\n",
+                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"energy_mj\": {}{}}}{}\n",
                 class.label(),
                 m.arrived,
                 m.completed,
@@ -145,11 +167,29 @@ impl ClusterStats {
                 num(cycles_to_ms(m.latency.percentile(50.0))),
                 num(cycles_to_ms(m.latency.percentile(99.0))),
                 num(self.class_energy_mj[class.index()]),
+                frac_fields,
                 if i + 1 < n { "," } else { "" }
             ));
         }
         s.push_str("  ]\n}\n");
         s
+    }
+
+    /// Serialize the collected telemetry (histograms, epoch series,
+    /// attribution, optional memo counters) — `wienna cluster
+    /// --metrics-out`. Panics unless the run enabled
+    /// `ClusterConfig::telemetry`.
+    pub fn metrics_json(&self, memo: Option<crate::cost::MemoStats>) -> String {
+        let t = self.telemetry.as_ref().expect("run with ClusterConfig::telemetry enabled");
+        crate::telemetry::metrics_json(t, &self.serve.attr, Some(&self.class_attr), memo)
+    }
+
+    /// Serialize the span log as a Chrome trace-event (Perfetto-loadable)
+    /// JSON — `wienna cluster --trace-out`. Panics unless the run enabled
+    /// `ClusterConfig::telemetry`.
+    pub fn chrome_trace(&self) -> String {
+        let t = self.telemetry.as_ref().expect("run with ClusterConfig::telemetry enabled");
+        crate::telemetry::chrome_trace(t)
     }
 }
 
@@ -235,13 +275,25 @@ pub(crate) fn finalize(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>, mo
         end_cycle = end_cycle.max(o.end_cycle);
         for ci in 0..NUM_CLASSES {
             stats.class_energy_mj[ci] += o.class_energy_mj[ci];
+            stats.class_attr[ci].merge(&o.attr_class[ci]);
         }
+        stats.serve.attr.merge(&o.attr_run);
         for (&batch, &n) in &o.dispatch_hist {
             stats.serve.record_dispatches(batch, n);
         }
     }
-    for o in outcomes {
+    for (s, o) in outcomes.into_iter().enumerate() {
+        if let Some(t) = stats.telemetry.as_mut() {
+            t.log.absorb(s, o.log);
+        }
         stats.packages.extend(o.packages);
+    }
+    if let Some(t) = stats.telemetry.as_mut() {
+        // Orders the merged span log `(cycle, shard, emission index)`
+        // and streams it through the histograms — the last
+        // thread-count-sensitive-looking step, made deterministic by the
+        // shard-order absorb above.
+        t.finish();
     }
     stats.serve.finish(end_cycle);
     // Shard-major package order + fixed-order summation: bit-identical
@@ -278,6 +330,9 @@ mod tests {
             end_cycle,
             cache_hits: 0,
             cache_misses: 0,
+            attr_run: PhaseTotals::default(),
+            attr_class: [PhaseTotals::default(); NUM_CLASSES],
+            log: crate::telemetry::SpanLog::default(),
         }
     }
 

@@ -125,6 +125,12 @@ pub struct ClusterConfig {
     /// Seed of the class-assignment hash (independent of the arrival
     /// seed, so the same traffic can be re-tagged).
     pub class_seed: u64,
+    /// Observability (`wienna::telemetry`): arm the per-request span
+    /// recorder and the per-epoch metrics sampler. Off by default — the
+    /// always-on cycle-attribution sums are collected regardless, but
+    /// span retention costs memory proportional to the request count.
+    /// Enabled output is still bit-identical at any thread count.
+    pub telemetry: crate::telemetry::TelemetryConfig,
 }
 
 impl Default for ClusterConfig {
@@ -141,6 +147,7 @@ impl Default for ClusterConfig {
             power: PowerConfig::default(),
             calibrated_eta: false,
             class_seed: 0xC1A5,
+            telemetry: crate::telemetry::TelemetryConfig::default(),
         }
     }
 }

@@ -35,6 +35,7 @@ use super::class::{TrafficClass, NUM_CLASSES};
 use super::ClusterConfig;
 use crate::power::DvfsLevel;
 use crate::serve::{choose_batch, CostCache, ModelKind, Package, PackageSpec, QueueSet, Request, RoutePolicy};
+use crate::telemetry::{PhaseBreakdown, PhaseTotals, PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
 use std::collections::BTreeMap;
 
 /// One ingress-classified request bound for a shard.
@@ -92,6 +93,13 @@ pub(crate) struct ShardOutcome {
     pub end_cycle: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Always-on cycle attribution over this shard's completions.
+    pub attr_run: PhaseTotals,
+    /// Same, split per traffic class (`class.index()` order).
+    pub attr_class: [PhaseTotals; NUM_CLASSES],
+    /// The shard's span log (empty unless `cfg.telemetry.enabled`); the
+    /// merge absorbs these in shard-id order and stamps the shard field.
+    pub log: SpanLog,
 }
 
 pub(crate) struct ShardSim<'a> {
@@ -115,6 +123,12 @@ pub(crate) struct ShardSim<'a> {
     dispatch_hist: BTreeMap<u64, u64>,
     class_energy_mj: [f64; NUM_CLASSES],
     preemptions: u64,
+    attr_run: PhaseTotals,
+    attr_class: [PhaseTotals; NUM_CLASSES],
+    /// Span recorder, armed by `cfg.telemetry.enabled`. Shard-local: the
+    /// records it accumulates depend only on this shard's deterministic
+    /// event stream, never on thread scheduling.
+    recorder: Recorder,
 }
 
 impl<'a> ShardSim<'a> {
@@ -135,6 +149,9 @@ impl<'a> ShardSim<'a> {
             dispatch_hist: BTreeMap::new(),
             class_energy_mj: [0.0; NUM_CLASSES],
             preemptions: 0,
+            attr_run: PhaseTotals::default(),
+            attr_class: [PhaseTotals::default(); NUM_CLASSES],
+            recorder: Recorder::new(cfg.telemetry.enabled),
         }
     }
 
@@ -329,6 +346,17 @@ impl<'a> ShardSim<'a> {
                 self.enqueue(idx, req, class, now);
             }
             Err(reason) => {
+                if let Some(log) = self.recorder.log_mut() {
+                    log.sheds.push(ShedSpan {
+                        id: req.id,
+                        kind: req.kind,
+                        class: Some(class),
+                        shard: 0,
+                        arrival: req.arrival,
+                        cycle: now,
+                        reason,
+                    });
+                }
                 self.events.push(ShardEvent {
                     cycle: now,
                     outcome: ShardEventOutcome::Shed(reason),
@@ -367,6 +395,17 @@ impl<'a> ShardSim<'a> {
             if let Some(victim) = self.queues[idx][ci].pop_newest() {
                 let v1 = self.est1(idx, victim.kind);
                 self.backlog[idx][ci] = (self.backlog[idx][ci] - v1).max(0.0);
+                if let Some(log) = self.recorder.log_mut() {
+                    log.sheds.push(ShedSpan {
+                        id: victim.id,
+                        kind: victim.kind,
+                        class: Some(*victim_class),
+                        shard: 0,
+                        arrival: victim.arrival,
+                        cycle: now,
+                        reason: ShedReason::QueueFull,
+                    });
+                }
                 self.events.push(ShardEvent {
                     cycle: now,
                     outcome: ShardEventOutcome::Shed(ShedReason::QueueFull),
@@ -418,6 +457,14 @@ impl<'a> ShardSim<'a> {
         }
         let (reqs, rolled_mj) = self.packages[idx].preempt_batch(now);
         self.class_energy_mj[victim.index()] -= rolled_mj;
+        if let Some(log) = self.recorder.log_mut() {
+            log.preemptions.push(PreemptSpan {
+                cycle: now,
+                shard: 0,
+                package: idx,
+                batch: reqs.len(),
+            });
+        }
         let vkind = reqs[0].kind;
         let v1 = self.est1(idx, vkind);
         self.backlog[idx][victim.index()] += v1 * reqs.len() as f64;
@@ -477,11 +524,36 @@ impl<'a> ShardSim<'a> {
         }
     }
 
-    /// Complete the in-flight batch on `i`, emitting completion events.
+    /// Complete the in-flight batch on `i`, emitting completion events
+    /// and folding each request's cycle attribution into the shard sums.
     fn complete(&mut self, i: usize) {
         let class = self.inflight_class[i].take().expect("completing package has a batch class");
+        // The dispatch cycle and predicted cost vanish with finish_batch —
+        // capture them first.
+        let span = self.packages[i].inflight_span();
         let (t, reqs) = self.packages[i].finish_batch();
+        let batch = reqs.len();
         for req in reqs {
+            if let Some((dispatched, cost)) = span {
+                let phases = PhaseBreakdown::attribute(req.arrival, dispatched, t, &cost);
+                self.attr_run.record(&phases);
+                self.attr_class[class.index()].record(&phases);
+                self.packages[i].attr.record(&phases);
+                if let Some(log) = self.recorder.log_mut() {
+                    log.spans.push(SpanRecord {
+                        id: req.id,
+                        kind: req.kind,
+                        class: Some(class),
+                        shard: 0,
+                        package: i,
+                        batch,
+                        arrival: req.arrival,
+                        dispatched,
+                        completed: t,
+                        phases,
+                    });
+                }
+            }
             self.events.push(ShardEvent { cycle: t, outcome: ShardEventOutcome::Completed, class, req });
         }
     }
@@ -539,9 +611,25 @@ impl<'a> ShardSim<'a> {
         std::mem::take(&mut self.events)
     }
 
+    /// Shard-local clock (cycle of the last processed event). Barrier
+    /// sampling reads this for the open-loop fast path's single sample.
+    pub(crate) fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Batches currently in flight across this shard's packages.
+    pub(crate) fn inflight_batches(&self) -> u64 {
+        self.packages.iter().filter(|p| !p.is_idle()).count() as u64
+    }
+
+    /// Dynamic power draw of the in-flight batches (watts).
+    pub(crate) fn inflight_power_w(&self) -> f64 {
+        self.packages.iter().map(|p| p.meter.inflight_w()).sum()
+    }
+
     /// Tear the shard down into its final accounting (after the last
     /// epoch has drained it).
-    pub(crate) fn finish(self) -> ShardOutcome {
+    pub(crate) fn finish(mut self) -> ShardOutcome {
         debug_assert!(self.is_drained(), "finish() called on an undrained shard");
         ShardOutcome {
             dispatch_hist: self.dispatch_hist,
@@ -551,6 +639,9 @@ impl<'a> ShardSim<'a> {
             end_cycle: self.now,
             cache_hits: self.cache.hits,
             cache_misses: self.cache.misses,
+            attr_run: self.attr_run,
+            attr_class: self.attr_class,
+            log: self.recorder.take_log(),
         }
     }
 }

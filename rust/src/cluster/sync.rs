@@ -54,9 +54,10 @@
 
 use super::merge;
 use super::shard::{ClassedRequest, ShardSim};
-use super::{Cluster, ClusterStats, TrafficClass};
+use super::{Cluster, ClusterStats, TrafficClass, NUM_CLASSES};
 use crate::cost::par;
 use crate::serve::{ms_to_cycles, Request, Source};
+use crate::telemetry::EpochSample;
 use std::sync::Mutex;
 
 /// Epoch-synchronization knobs (`ClusterConfig::sync`).
@@ -137,6 +138,9 @@ pub(crate) fn run_sync(
     );
     let shards = cluster.shards();
     let mut stats = ClusterStats::new(shards);
+    if cfg.telemetry.enabled {
+        stats.telemetry = Some(Box::default());
+    }
 
     // Open-loop without stealing has no cross-shard traffic: one
     // unbounded epoch reproduces the pre-sync engine byte for byte and
@@ -213,6 +217,7 @@ pub(crate) fn run_sync(
             if cfg.sync.steal {
                 stats.steals += steal_pass(&sims, end, &mut pending);
             }
+            sample_epoch(&mut stats, &sims, end);
 
             let have_stolen = pending.iter().any(|p| !p.is_empty());
             let next_arrival = source.next_arrival_at().filter(|&t| t <= horizon);
@@ -237,7 +242,15 @@ pub(crate) fn run_sync(
                 }
             }
         } else {
-            break; // the single unbounded epoch drained everything
+            // The single unbounded epoch drained everything; sample once
+            // at the last shard clock so the fast path still emits a
+            // (degenerate, all-drained) time series.
+            let last = sims
+                .iter()
+                .map(|m| m.lock().expect("shard mutex").now())
+                .fold(0.0f64, f64::max);
+            sample_epoch(&mut stats, &sims, last);
+            break;
         }
     }
 
@@ -247,6 +260,42 @@ pub(crate) fn run_sync(
         .collect();
     merge::finalize(&mut stats, outcomes, &cfg.power.model);
     stats
+}
+
+/// Sample the epoch-edge gauges into the metrics registry (no-op when
+/// telemetry is off): post-steal queue depth, in-flight batches, and
+/// inferred draw across all shards, plus the cumulative completion /
+/// shed / steal counters already folded into `stats`. Runs at the
+/// single-threaded barrier and locks shards in id order, so the series
+/// is bit-identical at any worker-thread count.
+fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) {
+    if stats.telemetry.is_none() {
+        return;
+    }
+    let mut queued = 0u64;
+    let mut in_flight_batches = 0u64;
+    let mut power_w = 0.0f64;
+    for sim in sims {
+        let g = sim.lock().expect("shard mutex");
+        queued += g.queued_total_all() as u64;
+        in_flight_batches += g.inflight_batches();
+        power_w += g.inflight_power_w();
+    }
+    let mut shed = [0u64; NUM_CLASSES];
+    for c in TrafficClass::ALL {
+        shed[c.index()] = stats.per_class.get(&c).map_or(0, |m| m.shed);
+    }
+    let sample = EpochSample {
+        epoch: stats.epochs,
+        cycle,
+        queued,
+        in_flight_batches,
+        completed: stats.serve.completed(),
+        shed,
+        steals: stats.steals,
+        power_w,
+    };
+    stats.telemetry.as_mut().expect("checked above").metrics.epochs.push(sample);
 }
 
 /// The epoch-barrier stealing pass at barrier cycle `bar`: repeatedly

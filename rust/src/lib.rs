@@ -50,6 +50,14 @@
 //!   enforcing a fleet watt budget through a deterministic DVFS ladder
 //!   (`--power-cap-w`), and the Pareto filtering behind the search's
 //!   multi-objective mode;
+//! * [`telemetry`] — deterministic observability over `serve` and
+//!   `cluster`: always-on cycle attribution (queue / NoP-distribute /
+//!   compute / collect / cap-throttle fractions per run, class, and
+//!   package), an opt-in request-span recorder with log-bucketed
+//!   histograms and per-epoch gauges sampled at the sync barrier, and
+//!   Chrome trace-event / metrics-JSON export
+//!   (`--trace-out` / `--metrics-out`) — bit-identical at any worker
+//!   thread count;
 //! * [`runtime`] — loading and executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) via the XLA PJRT CPU client
 //!   (behind the `pjrt` cargo feature, together with
@@ -94,6 +102,7 @@ pub mod report;
 pub mod runtime;
 pub mod search;
 pub mod serve;
+pub mod telemetry;
 pub mod testutil;
 pub mod workload;
 /// Compile-only stub of the `xla` PJRT bindings: keeps the `pjrt`-gated

@@ -7,11 +7,11 @@
 //! wienna sweep     [--workload ...] [--batch N]
 //! wienna serve     [--mix cnn|mixed|resnet50|bert] [--design ...] [--packages N]
 //!                  [--policy rr|ll|edf] [--load F] [--duration-ms MS] [--slo-ms MS]
-//!                  [--client-trace FILE]
+//!                  [--client-trace FILE] [--trace-out FILE] [--metrics-out FILE]
 //! wienna cluster   [--packages N] [--shards N] [--threads N] [--mix ...] [--policy ...]
 //!                  [--load F | --rps R | --closed-loop N | --client-trace FILE]
 //!                  [--steal] [--epoch-cycles N] [--queue-cap N|none] [--no-shed-late]
-//!                  [--no-preempt] [--stats-json FILE]
+//!                  [--no-preempt] [--stats-json FILE] [--trace-out FILE] [--metrics-out FILE]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -54,6 +54,9 @@ serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
               --power-cap-w W (fleet power cap; DVFS governor)  --no-power-gating
               --client-trace FILE (closed-loop replay of recorded per-client timestamps;
               the trace sets the load and the run drains it fully — ignores --load/--duration-ms)
+              --trace-out FILE (Chrome trace-event JSON; load in Perfetto or chrome://tracing)
+              --metrics-out FILE (metrics-registry JSON: latency/queue-wait/batch histograms,
+              cycle attribution, layer-memo counters)
 cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|ll|edf  --mix ...
               --slo-ms MS  --load F (x capacity) | --rps R (absolute)  --duration-ms MS  --seed N
               --queue-cap N|none  --no-shed-late  --no-preempt  --stats-json FILE  --verbose
@@ -64,6 +67,9 @@ cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|
               --client-trace FILE (closed-loop replay of recorded per-client timestamps)
               --steal (epoch-barrier cross-shard work stealing)
               --epoch-cycles N (sync window width; feedback + stealing cross shards at its edges)
+              --trace-out FILE (Chrome trace-event JSON of the merged span log; Perfetto-loadable)
+              --metrics-out FILE (metrics-registry JSON incl. per-epoch gauges + memo counters;
+              byte-identical at any --threads)
 search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
               --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
               --class-slos I,B,E (per-class p99 targets in ms, 'inf' allowed; sizes on the
@@ -307,8 +313,12 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     anyhow::ensure!(slo_ms > 0.0, "--slo-ms must be positive");
     let mix = parse_mix(&f.str("mix", "cnn"), slo_ms)?;
 
+    let telemetry_on = f.0.contains_key("trace-out") || f.0.contains_key("metrics-out");
     let mut fleet =
         Fleet::new(PackageSpec::homogeneous(packages, dp), policy).with_power(parse_power(f)?);
+    if telemetry_on {
+        fleet.recorder = wienna::telemetry::Recorder::new(true);
+    }
     let capacity = fleet.estimate_capacity_rps(&mix, 8);
     // A recorded client trace replaces the Poisson source: closed-loop
     // replay of per-client issue timestamps (the trace sets the load, so
@@ -379,6 +389,27 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         print!("{}", t.render());
         println!("cost cache: {} entries, {} hits, {} misses", fleet.cache.len(), fleet.cache.hits, fleet.cache.misses);
     }
+    if telemetry_on {
+        let mut tele = wienna::telemetry::Telemetry {
+            log: fleet.recorder.take_log(),
+            ..Default::default()
+        };
+        tele.finish();
+        if let Some(path) = f.0.get("trace-out") {
+            std::fs::write(path, wienna::telemetry::chrome_trace(&tele))
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!("chrome trace -> {path} (load in Perfetto or chrome://tracing)");
+        }
+        if let Some(path) = f.0.get("metrics-out") {
+            let memo = wienna::cost::memo::stats();
+            let json = wienna::telemetry::metrics_json(&tele, &stats.attr, None, Some(memo));
+            std::fs::write(path, json).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!(
+                "metrics json -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
+                memo.hits, memo.misses, memo.evictions, memo.entries, memo.capacity
+            );
+        }
+    }
     Ok(())
 }
 
@@ -405,6 +436,8 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         v => Some(v.parse::<usize>().map_err(|_| anyhow::anyhow!("--queue-cap: bad value '{v}' (number or 'none')"))?),
     };
     let mix = parse_mix(&f.str("mix", "mixed"), slo_ms)?;
+    let mix_kinds: Vec<ModelKind> = mix.entries.iter().map(|e| e.kind).collect();
+    let telemetry_on = f.0.contains_key("trace-out") || f.0.contains_key("metrics-out");
 
     let mut sync = SyncConfig { steal: f.flag("steal"), ..Default::default() };
     if let Some(e) = f.0.get("epoch-cycles") {
@@ -423,6 +456,7 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         sync,
         power: parse_power(f)?,
         calibrated_eta: f.flag("calibrated-eta"),
+        telemetry: wienna::telemetry::TelemetryConfig { enabled: telemetry_on },
         ..Default::default()
     };
     if let Some(t) = f.0.get("threads") {
@@ -476,6 +510,13 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         (Source::poisson(mix, rate, seed), ms_to_cycles(duration_ms), offered)
     };
 
+    if f.0.contains_key("metrics-out") {
+        // The global layer memo is the one piece of state shards share
+        // across threads: sweep its (model, batch) grid single-threaded
+        // up front so the parallel run only ever hits, keeping the
+        // exported hit/miss counters byte-identical at any --threads.
+        wienna::telemetry::prewarm_cost_model(&specs, &mix_kinds, &cfg.batcher);
+    }
     let cluster = Cluster::new(specs, cfg);
     let t0 = std::time::Instant::now();
     let stats = cluster.run(&mut source, horizon);
@@ -560,6 +601,20 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         std::fs::write(path, stats.to_json())
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
         println!("stats json -> {path}");
+    }
+    if let Some(path) = f.0.get("trace-out") {
+        std::fs::write(path, stats.chrome_trace())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("chrome trace -> {path} (load in Perfetto or chrome://tracing)");
+    }
+    if let Some(path) = f.0.get("metrics-out") {
+        let memo = wienna::cost::memo::stats();
+        std::fs::write(path, stats.metrics_json(Some(memo)))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!(
+            "metrics json -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
+            memo.hits, memo.misses, memo.evictions, memo.entries, memo.capacity
+        );
     }
     Ok(())
 }

@@ -15,6 +15,7 @@ use super::stats::ServeStats;
 use crate::config::{DesignPoint, SystemConfig};
 use crate::cost::CostEngine;
 use crate::power::{BatchEnergy, DvfsLevel, FleetEnergy, PackageMeter, PowerConfig};
+use crate::telemetry::{PhaseBreakdown, PhaseTotals, Recorder, SpanRecord};
 
 /// Static description of one package in the fleet.
 #[derive(Debug, Clone)]
@@ -77,6 +78,9 @@ pub struct Package {
     pub requests_completed: u64,
     pub batch_size_sum: u64,
     pub max_batch_seen: u64,
+    /// Always-on cycle attribution of requests this package completed
+    /// (`wienna::telemetry`).
+    pub attr: PhaseTotals,
 }
 
 impl Package {
@@ -101,6 +105,7 @@ impl Package {
             requests_completed: 0,
             batch_size_sum: 0,
             max_batch_seen: 0,
+            attr: PhaseTotals::default(),
         }
     }
 
@@ -204,6 +209,13 @@ impl Package {
         self.in_flight = reqs;
     }
 
+    /// Dispatch cycle and predicted cost of the in-flight batch — the
+    /// inputs cycle attribution needs. Capture *before*
+    /// [`Package::finish_batch`], which clears them.
+    pub(crate) fn inflight_span(&self) -> Option<(f64, BatchCost)> {
+        self.cur_cost.map(|c| (self.batch_start, c))
+    }
+
     /// Complete the in-flight batch, returning its completion cycle and
     /// the served requests.
     pub(crate) fn finish_batch(&mut self) -> (f64, Vec<Request>) {
@@ -277,6 +289,9 @@ pub struct Fleet {
     /// and latency statistics are bit-identical to an unmetered run.
     pub power: PowerConfig,
     pub cache: CostCache,
+    /// Opt-in request-span recorder (`wienna::telemetry`). `Off` by
+    /// default: the hot path pays one discriminant check per batch.
+    pub recorder: Recorder,
     rr_cursor: usize,
 }
 
@@ -289,6 +304,7 @@ impl Fleet {
             batcher: BatcherConfig::default(),
             power: PowerConfig::default(),
             cache: CostCache::new(),
+            recorder: Recorder::Off,
             rr_cursor: 0,
         }
     }
@@ -459,10 +475,31 @@ impl Fleet {
 
     /// Complete the in-flight batch on `idx`.
     fn complete(&mut self, idx: usize, stats: &mut ServeStats, source: &mut Source) {
+        let span = self.packages[idx].inflight_span();
         let (t, reqs) = self.packages[idx].finish_batch();
+        let batch = reqs.len();
         for r in &reqs {
             stats.record_completion(r, t);
             source.on_complete(t, r);
+            if let Some((dispatched, cost)) = span {
+                let phases = PhaseBreakdown::attribute(r.arrival, dispatched, t, &cost);
+                stats.attr.record(&phases);
+                self.packages[idx].attr.record(&phases);
+                if let Some(log) = self.recorder.log_mut() {
+                    log.spans.push(SpanRecord {
+                        id: r.id,
+                        kind: r.kind,
+                        class: None,
+                        shard: 0,
+                        package: idx,
+                        batch,
+                        arrival: r.arrival,
+                        dispatched,
+                        completed: t,
+                        phases,
+                    });
+                }
+            }
         }
     }
 

@@ -39,7 +39,10 @@ impl LatencyRecorder {
     fn sorted(&self) -> &[f64] {
         self.sorted.get_or_init(|| {
             let mut s = self.samples.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN sample
+            // (e.g. a degenerate latency) must not panic the whole run —
+            // the IEEE total order sorts NaNs after every finite value.
+            s.sort_by(f64::total_cmp);
             s
         })
     }
@@ -111,6 +114,10 @@ pub struct ServeStats {
     /// energy plus the leakage integral. Set by `Fleet::run` at the end
     /// of the run; purely additive — no latency statistic depends on it.
     pub energy: Option<crate::power::FleetEnergy>,
+    /// Always-on cycle attribution over every completed request
+    /// (`wienna::telemetry`): where the end-to-end cycles went —
+    /// queueing, NoP distribution, compute, collection, DVFS throttle.
+    pub attr: crate::telemetry::PhaseTotals,
     dispatches: u64,
     end_cycle: f64,
 }
@@ -247,7 +254,7 @@ mod tests {
     /// value whose cumulative sample count reaches `p`% of `n`.
     fn oracle_percentile(samples: &[f64], p: f64) -> f64 {
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         for (i, &v) in s.iter().enumerate() {
             if (i + 1) as f64 * 100.0 >= p * n as f64 {
@@ -342,6 +349,21 @@ mod tests {
         assert_eq!(s.completed() + s.shed(), s.arrived());
         assert!((s.shed_rate() - 0.5).abs() < 1e-12);
         assert_eq!(s.per_model[&ModelKind::TinyCnn].shed, 1);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        // A NaN latency must degrade gracefully, not unwrap-panic inside
+        // the sort. IEEE total order puts NaN last, so finite
+        // percentiles still answer from the finite samples.
+        let mut rec = LatencyRecorder::new();
+        for v in [3.0, f64::NAN, 1.0] {
+            rec.push(v);
+        }
+        assert_eq!(rec.percentile(33.0), 1.0);
+        assert_eq!(rec.percentile(50.0), 3.0);
+        assert!(rec.percentile(100.0).is_nan(), "NaN sorts to the top rank");
+        assert_eq!(rec.len(), 3);
     }
 
     #[test]

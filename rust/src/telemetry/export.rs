@@ -1,0 +1,316 @@
+//! Serializers: the metrics JSON and the Chrome trace-event export.
+//!
+//! Both are hand-rolled like `ClusterStats::to_json` — no JSON crate —
+//! and deterministic: every number renders through `format!("{v}")`
+//! (shortest round-trip), every collection iterates in a fixed order,
+//! and non-finite values become `null`. The field names and their order
+//! are pinned by `rust/testdata/telemetry_schema.golden`; update that
+//! fixture only for a deliberate schema change.
+//!
+//! The trace export follows the Chrome trace-event format (the JSON
+//! Perfetto and `chrome://tracing` load): `"X"` complete slices for
+//! request spans, `"i"` instants for sheds/preemptions, `"C"` counters
+//! for the per-epoch gauges, and `"M"` process-name metadata per shard.
+//! Timestamps are microseconds of simulated time.
+
+use crate::cluster::{TrafficClass, NUM_CLASSES};
+use crate::cost::memo::MemoStats;
+use crate::serve::cycles_to_ms;
+
+use super::profile::PhaseTotals;
+use super::Telemetry;
+
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Simulated cycle → trace-event timestamp (µs).
+fn ts_us(cycle: f64) -> f64 {
+    cycles_to_ms(cycle) * 1000.0
+}
+
+fn frac_fields(indent: &str, t: &PhaseTotals) -> String {
+    let f = t.fractions();
+    let mut s = String::new();
+    for (name, v) in super::profile::PHASES.iter().zip(f) {
+        s.push_str(&format!("{indent}\"{name}_frac\": {},\n", num(v)));
+    }
+    s
+}
+
+/// Serialize the metrics registry (plus the always-on attribution sums
+/// and, optionally, the process-wide cost-memo counters) as JSON.
+///
+/// `memo` is `None` when the caller needs cross-run comparability (the
+/// determinism harness): the memo counters are process-global, so two
+/// runs in one process see different cumulative values.
+pub fn metrics_json(
+    t: &Telemetry,
+    attr: &PhaseTotals,
+    class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
+    memo: Option<MemoStats>,
+) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"schema\": \"wienna-metrics-v1\",\n");
+    s.push_str(&format!("  \"requests\": {},\n", attr.requests));
+    s.push_str(&frac_fields("  ", attr));
+    s.push_str("  \"per_class\": [\n");
+    if let Some(by_class) = class_attr {
+        for (i, class) in TrafficClass::ALL.iter().enumerate() {
+            let a = &by_class[class.index()];
+            let mut line = format!(
+                "    {{ \"class\": \"{}\", \"requests\": {}, ",
+                class.label(),
+                a.requests
+            );
+            let f = a.fractions();
+            for (j, (name, v)) in super::profile::PHASES.iter().zip(f).enumerate() {
+                line.push_str(&format!("\"{name}_frac\": {}", num(v)));
+                if j + 1 < super::profile::PHASES.len() {
+                    line.push_str(", ");
+                }
+            }
+            line.push_str(" }");
+            if i + 1 < TrafficClass::ALL.len() {
+                line.push(',');
+            }
+            s.push_str(&line);
+            s.push('\n');
+        }
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"histograms\": [\n");
+    let hists = t.metrics.histograms();
+    for (i, (name, h)) in hists.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"name\": \"{name}\", \"count\": {}, \"sum\": {}, \"buckets\": [",
+            h.count,
+            num(h.sum)
+        ));
+        for (j, (exp, n)) in h.buckets.iter().enumerate() {
+            // The sentinel bucket (zero / negative / NaN samples) keys
+            // on a JSON-unfriendly i32::MIN; emit it as null.
+            let exp_s =
+                if *exp == i32::MIN { "null".to_string() } else { format!("{exp}") };
+            s.push_str(&format!("{{ \"exp\": {exp_s}, \"count\": {n} }}"));
+            if j + 1 < h.buckets.len() {
+                s.push_str(", ");
+            }
+        }
+        s.push_str("] }");
+        if i + 1 < hists.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"epochs\": [\n");
+    for (i, e) in t.metrics.epochs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"epoch\": {}, \"cycle\": {}, \"queued\": {}, \
+             \"in_flight_batches\": {}, \"completed\": {}",
+            e.epoch,
+            num(e.cycle),
+            e.queued,
+            e.in_flight_batches,
+            e.completed
+        ));
+        for (class, shed) in TrafficClass::ALL.iter().zip(e.shed) {
+            s.push_str(&format!(", \"shed_{}\": {shed}", class.label().replace('-', "_")));
+        }
+        s.push_str(&format!(", \"steals\": {}, \"power_w\": {} }}", e.steals, num(e.power_w)));
+        if i + 1 < t.metrics.epochs.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ],\n");
+    match memo {
+        Some(m) => {
+            s.push_str("  \"memo\": {\n");
+            s.push_str(&format!("    \"hits\": {},\n", m.hits));
+            s.push_str(&format!("    \"misses\": {},\n", m.misses));
+            s.push_str(&format!("    \"entries\": {},\n", m.entries));
+            s.push_str(&format!("    \"evictions\": {},\n", m.evictions));
+            s.push_str(&format!("    \"capacity\": {},\n", m.capacity));
+            s.push_str(&format!("    \"hit_rate\": {}\n", num(m.hit_rate())));
+            s.push_str("  }\n");
+        }
+        None => s.push_str("  \"memo\": null\n"),
+    }
+    s.push('}');
+    s.push('\n');
+    s
+}
+
+fn class_json(class: Option<TrafficClass>) -> String {
+    match class {
+        Some(c) => format!("\"{}\"", c.label()),
+        None => "null".to_string(),
+    }
+}
+
+/// Serialize the span log + epoch series in Chrome trace-event format.
+/// Load the file at <https://ui.perfetto.dev> or `chrome://tracing`.
+pub fn chrome_trace(t: &Telemetry) -> String {
+    let log = &t.log;
+    let mut events: Vec<String> = Vec::new();
+
+    // "M" process metadata: one row per shard that emitted anything.
+    let max_shard = log
+        .spans
+        .iter()
+        .map(|s| s.shard)
+        .chain(log.sheds.iter().map(|s| s.shard))
+        .chain(log.preemptions.iter().map(|p| p.shard))
+        .max();
+    if let Some(max_shard) = max_shard {
+        for shard in 0..=max_shard {
+            events.push(format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{shard},\"tid\":0,\
+                 \"args\":{{\"name\":\"shard {shard}\"}}}}"
+            ));
+        }
+    }
+
+    // "X" complete slices: one per request span, on the package's row.
+    for s in &log.spans {
+        events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"request\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+             \"ts\":{},\"dur\":{},\"args\":{{\"id\":{},\"batch\":{},\"class\":{},\
+             \"queue_ms\":{}}}}}",
+            s.kind.label(),
+            s.shard,
+            s.package,
+            num(ts_us(s.dispatched)),
+            num(ts_us(s.completed - s.dispatched)),
+            s.id,
+            s.batch,
+            class_json(s.class),
+            num(cycles_to_ms(s.phases.queue)),
+        ));
+    }
+
+    // "i" instants: sheds and preemptions.
+    for s in &log.sheds {
+        events.push(format!(
+            "{{\"name\":\"shed {}\",\"cat\":\"admission\",\"ph\":\"i\",\"pid\":{},\"tid\":0,\
+             \"ts\":{},\"s\":\"p\",\"args\":{{\"id\":{},\"model\":\"{}\",\"class\":{}}}}}",
+            s.reason.label(),
+            s.shard,
+            num(ts_us(s.cycle)),
+            s.id,
+            s.kind.label(),
+            class_json(s.class),
+        ));
+    }
+    for p in &log.preemptions {
+        events.push(format!(
+            "{{\"name\":\"preempt\",\"cat\":\"scheduler\",\"ph\":\"i\",\"pid\":{},\"tid\":{},\
+             \"ts\":{},\"s\":\"p\",\"args\":{{\"batch\":{}}}}}",
+            p.shard,
+            p.package,
+            num(ts_us(p.cycle)),
+            p.batch,
+        ));
+    }
+
+    // "C" counters: the epoch gauges, one track each, pinned to pid 0.
+    for e in &t.metrics.epochs {
+        let ts = num(ts_us(e.cycle));
+        for (name, v) in [
+            ("queued", e.queued as f64),
+            ("in_flight_batches", e.in_flight_batches as f64),
+            ("steals", e.steals as f64),
+            ("power_w", e.power_w),
+        ] {
+            events.push(format!(
+                "{{\"name\":\"{name}\",\"ph\":\"C\",\"pid\":0,\"tid\":0,\"ts\":{ts},\
+                 \"args\":{{\"{name}\":{}}}}}",
+                num(v)
+            ));
+        }
+    }
+
+    let mut s = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    s.push_str(&events.join(",\n"));
+    s.push_str("\n]}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::metrics::EpochSample;
+    use crate::telemetry::span::{PreemptSpan, ShedSpan, SpanRecord};
+    use crate::telemetry::PhaseBreakdown;
+    use crate::cluster::ShedReason;
+    use crate::serve::ModelKind;
+
+    fn sample_telemetry() -> Telemetry {
+        let mut t = Telemetry::default();
+        t.log.spans.push(SpanRecord {
+            id: 7,
+            kind: ModelKind::TinyCnn,
+            class: Some(TrafficClass::Interactive),
+            shard: 1,
+            package: 0,
+            batch: 2,
+            arrival: 0.0,
+            dispatched: 1000.0,
+            completed: 3000.0,
+            phases: PhaseBreakdown { queue: 1000.0, ..Default::default() },
+        });
+        t.log.sheds.push(ShedSpan {
+            id: 9,
+            kind: ModelKind::Mlp,
+            class: None,
+            shard: 0,
+            arrival: 10.0,
+            cycle: 20.0,
+            reason: ShedReason::QueueFull,
+        });
+        t.log.preemptions.push(PreemptSpan { cycle: 50.0, shard: 1, package: 1, batch: 4 });
+        t.metrics.epochs.push(EpochSample { epoch: 0, cycle: 4000.0, queued: 3, ..Default::default() });
+        t.metrics.latency_ms.record(2.5);
+        t
+    }
+
+    #[test]
+    fn trace_is_json_shaped_and_covers_all_event_kinds() {
+        let s = chrome_trace(&sample_telemetry());
+        assert!(s.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n"));
+        assert!(s.ends_with("\n]}\n"));
+        for needle in
+            ["\"ph\":\"M\"", "\"ph\":\"X\"", "\"ph\":\"i\"", "\"ph\":\"C\"", "shed queue-full"]
+        {
+            assert!(s.contains(needle), "missing {needle} in trace");
+        }
+        // Process metadata covers shards 0..=1 (shard 1 emitted a span).
+        assert!(s.contains("\"name\":\"shard 0\""));
+        assert!(s.contains("\"name\":\"shard 1\""));
+    }
+
+    #[test]
+    fn metrics_json_emits_null_for_empty_fraction_and_elided_memo() {
+        let t = Telemetry::default();
+        let s = metrics_json(&t, &PhaseTotals::default(), None, None);
+        assert!(s.contains("\"queue_frac\": null"));
+        assert!(s.contains("\"memo\": null"));
+        assert!(s.contains("\"schema\": \"wienna-metrics-v1\""));
+    }
+
+    #[test]
+    fn metrics_json_includes_memo_when_provided() {
+        let t = sample_telemetry();
+        let m = MemoStats { hits: 10, misses: 2, entries: 2, evictions: 0, capacity: 64 };
+        let s = metrics_json(&t, &PhaseTotals::default(), None, Some(m));
+        assert!(s.contains("\"hits\": 10"));
+        assert!(s.contains("\"hit_rate\": "));
+        assert!(s.contains("\"buckets\": [{ \"exp\": 1, \"count\": 1 }]"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Metrics registry: log-bucketed streaming histograms and per-epoch
+//! time-series samples.
+//!
+//! Both are built for determinism first: the histogram buckets by the
+//! raw IEEE-754 exponent (bit extraction, no `log2` libm call whose
+//! last ulp could differ across platforms), and the epoch series is
+//! sampled single-threaded at the `cluster::sync` epoch barrier, so the
+//! serialized registry is byte-identical at any thread count.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NUM_CLASSES;
+
+/// Bucket index of a sample: its unbiased binary exponent, so bucket
+/// `k` spans `[2^k, 2^(k+1))`. Zero, negative, and NaN samples land in
+/// a single sentinel bucket.
+pub fn bucket_index(v: f64) -> i32 {
+    if !(v > 0.0) {
+        return i32::MIN;
+    }
+    // Exponent field of the IEEE-754 double, unbiased. Subnormals all
+    // collapse into exponent -1023 — far below any cycle/ms quantity
+    // this simulator produces.
+    (((v.to_bits() >> 52) & 0x7ff) as i32) - 1023
+}
+
+/// A streaming histogram over power-of-two buckets.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    /// Bucket exponent → sample count. `BTreeMap` so iteration (and
+    /// therefore serialization) is ordered.
+    pub buckets: BTreeMap<i32, u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl LogHistogram {
+    pub fn record(&mut self, v: f64) {
+        *self.buckets.entry(bucket_index(v)).or_insert(0) += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum / self.count as f64
+    }
+}
+
+/// Gauges and cumulative counters captured at one epoch barrier.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochSample {
+    /// Epoch index (0-based).
+    pub epoch: u64,
+    /// Barrier cycle the sample was taken at.
+    pub cycle: f64,
+    /// Requests sitting in admission queues across all shards (gauge).
+    pub queued: u64,
+    /// Batches in flight across all packages (gauge).
+    pub in_flight_batches: u64,
+    /// Completions so far (cumulative).
+    pub completed: u64,
+    /// Per-class sheds so far, priority order (cumulative).
+    pub shed: [u64; NUM_CLASSES],
+    /// Requests rebalanced by work stealing so far (cumulative).
+    pub steals: u64,
+    /// Power draw of in-flight batches across the fleet (gauge, watts).
+    pub power_w: f64,
+}
+
+/// The full registry: named histograms plus the epoch time series.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    /// End-to-end request latency (ms).
+    pub latency_ms: LogHistogram,
+    /// Queue-phase wait per request (ms).
+    pub queue_wait_ms: LogHistogram,
+    /// Dispatched batch sizes.
+    pub batch_size: LogHistogram,
+    /// One sample per epoch barrier, epoch order.
+    pub epochs: Vec<EpochSample>,
+}
+
+impl MetricsRegistry {
+    /// Histograms with their pinned serialization names, emission order.
+    pub fn histograms(&self) -> [(&'static str, &LogHistogram); 3] {
+        [
+            ("latency_ms", &self.latency_ms),
+            ("queue_wait_ms", &self.queue_wait_ms),
+            ("batch_size", &self.batch_size),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_binary_exponents() {
+        assert_eq!(bucket_index(1.0), 0);
+        assert_eq!(bucket_index(1.5), 0);
+        assert_eq!(bucket_index(2.0), 1);
+        assert_eq!(bucket_index(3.99), 1);
+        assert_eq!(bucket_index(0.25), -2);
+        assert_eq!(bucket_index(1024.0), 10);
+    }
+
+    #[test]
+    fn nonpositive_and_nan_hit_the_sentinel() {
+        assert_eq!(bucket_index(0.0), i32::MIN);
+        assert_eq!(bucket_index(-4.0), i32::MIN);
+        assert_eq!(bucket_index(f64::NAN), i32::MIN);
+    }
+
+    #[test]
+    fn histogram_streams_count_and_sum() {
+        let mut h = LogHistogram::default();
+        for v in [1.0, 1.9, 4.0, 0.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 4);
+        assert_eq!(h.buckets[&0], 2);
+        assert_eq!(h.buckets[&2], 1);
+        assert_eq!(h.buckets[&i32::MIN], 1);
+        crate::assert_close!(h.sum, 6.9);
+    }
+}

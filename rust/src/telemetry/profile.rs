@@ -1,0 +1,192 @@
+//! Cycle-attribution profiling: where did a request's cycles go?
+//!
+//! Every completed request's end-to-end latency is split into five
+//! phases — queueing, NoP distribution, chiplet compute, collection-mesh
+//! gather, and DVFS cap-throttle stretch — using only quantities the
+//! event loop already has in hand at completion time (the dispatch
+//! timestamps and the batch's [`BatchCost`] plane-busy breakdown). The
+//! split is cheap enough to stay **always on**: ~10 flops per request,
+//! no allocation, accumulated into [`PhaseTotals`] sums that surface as
+//! `*_frac` fields in the stats JSON.
+//!
+//! [`BatchCost`]: crate::serve::BatchCost
+
+use crate::serve::BatchCost;
+
+/// Phase names, in canonical emission order. Keep in sync with
+/// [`PhaseBreakdown`] / [`PhaseTotals::fractions`].
+pub const PHASES: [&str; 5] = ["queue", "dist", "compute", "collect", "throttle"];
+
+/// One request's end-to-end latency split into attribution phases
+/// (cycles). Built by [`PhaseBreakdown::attribute`]; all phases are
+/// non-negative and sum to the end-to-end latency (up to float
+/// rounding — the conservation property test pins this at 1e-9
+/// relative).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseBreakdown {
+    /// Cycles between arrival and batch dispatch (admission queue wait,
+    /// including any aborted-then-requeued time for preempted requests
+    /// and the barrier delay for stolen ones).
+    pub queue: f64,
+    /// Cycles attributed to the NoP distribution plane.
+    pub dist: f64,
+    /// Cycles attributed to the chiplets' compute arrays.
+    pub compute: f64,
+    /// Cycles attributed to the wired collection mesh.
+    pub collect: f64,
+    /// Extra service cycles added by DVFS cap-throttle stretch (exactly
+    /// zero at nominal frequency).
+    pub throttle: f64,
+}
+
+impl PhaseBreakdown {
+    /// Split `completed - arrival` into phases.
+    ///
+    /// * `queue` is the dispatch wait, straight from timestamps.
+    /// * The *nominal* service time (`cost.latency`) is apportioned to
+    ///   dist/compute/collect pro rata to the planes' busy cycles, with
+    ///   `collect` taking the exact remainder so the three sum to
+    ///   `cost.latency` by construction.
+    /// * `throttle` is whatever the actual service time exceeds the
+    ///   nominal latency by — the DVFS stretch.
+    pub fn attribute(arrival: f64, dispatched: f64, completed: f64, cost: &BatchCost) -> Self {
+        let queue = (dispatched - arrival).max(0.0);
+        let service = (completed - dispatched).max(0.0);
+        let nominal = cost.latency.min(service);
+        let throttle = service - nominal;
+        let busy = cost.dist_busy + cost.compute_busy + cost.collect_busy;
+        let (dist, compute, collect) = if busy > 0.0 {
+            let dist = nominal * (cost.dist_busy / busy);
+            let compute = nominal * (cost.compute_busy / busy);
+            // Exact remainder: never lets rounding push the three-way
+            // split past the nominal latency.
+            (dist, compute, (nominal - dist - compute).max(0.0))
+        } else {
+            (0.0, 0.0, nominal)
+        };
+        PhaseBreakdown { queue, dist, compute, collect, throttle }
+    }
+
+    /// Sum of all phases — the reconstructed end-to-end latency.
+    pub fn total(&self) -> f64 {
+        self.queue + self.dist + self.compute + self.collect + self.throttle
+    }
+}
+
+/// Running sums of [`PhaseBreakdown`]s — one per run, per class, or per
+/// package. `Copy` so it rides stats structs without ceremony.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTotals {
+    pub queue: f64,
+    pub dist: f64,
+    pub compute: f64,
+    pub collect: f64,
+    pub throttle: f64,
+    /// Requests folded in.
+    pub requests: u64,
+}
+
+impl PhaseTotals {
+    /// Fold one completed request's breakdown into the totals.
+    pub fn record(&mut self, b: &PhaseBreakdown) {
+        self.queue += b.queue;
+        self.dist += b.dist;
+        self.compute += b.compute;
+        self.collect += b.collect;
+        self.throttle += b.throttle;
+        self.requests += 1;
+    }
+
+    /// Merge another accumulator (deterministic: caller fixes the order).
+    pub fn merge(&mut self, o: &PhaseTotals) {
+        self.queue += o.queue;
+        self.dist += o.dist;
+        self.compute += o.compute;
+        self.collect += o.collect;
+        self.throttle += o.throttle;
+        self.requests += o.requests;
+    }
+
+    /// Total attributed cycles.
+    pub fn total(&self) -> f64 {
+        self.queue + self.dist + self.compute + self.collect + self.throttle
+    }
+
+    /// Phase fractions in [`PHASES`] order; `NaN`s (emitted as JSON
+    /// `null`) when nothing has been recorded.
+    pub fn fractions(&self) -> [f64; 5] {
+        let t = self.total();
+        [self.queue / t, self.dist / t, self.compute / t, self.collect / t, self.throttle / t]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(latency: f64, d: f64, c: f64, k: f64) -> BatchCost {
+        BatchCost {
+            latency,
+            dist_busy: d,
+            compute_busy: c,
+            collect_busy: k,
+            macs: 0.0,
+            sram_bytes: 0.0,
+            dist_energy_pj: 0.0,
+            collect_byte_hops: 0.0,
+        }
+    }
+
+    #[test]
+    fn phases_are_nonnegative_and_sum_to_latency() {
+        let c = cost(100.0, 30.0, 60.0, 10.0);
+        let b = PhaseBreakdown::attribute(5.0, 25.0, 125.0, &c);
+        assert!(b.queue >= 0.0 && b.dist >= 0.0 && b.compute >= 0.0);
+        assert!(b.collect >= 0.0 && b.throttle >= 0.0);
+        crate::assert_close!(b.total(), 120.0);
+        crate::assert_close!(b.queue, 20.0);
+        // Pro-rata split of the nominal 100-cycle latency.
+        crate::assert_close!(b.dist, 30.0);
+        crate::assert_close!(b.compute, 60.0);
+        crate::assert_close!(b.collect, 10.0);
+        assert_eq!(b.throttle, 0.0, "no stretch at nominal service time");
+    }
+
+    #[test]
+    fn dvfs_stretch_lands_in_throttle() {
+        let c = cost(100.0, 50.0, 50.0, 0.0);
+        // Service took 150 cycles against a 100-cycle nominal latency.
+        let b = PhaseBreakdown::attribute(0.0, 0.0, 150.0, &c);
+        crate::assert_close!(b.throttle, 50.0);
+        crate::assert_close!(b.total(), 150.0);
+    }
+
+    #[test]
+    fn zero_busy_planes_fall_back_to_collect() {
+        let c = cost(40.0, 0.0, 0.0, 0.0);
+        let b = PhaseBreakdown::attribute(0.0, 10.0, 50.0, &c);
+        crate::assert_close!(b.collect, 40.0);
+        crate::assert_close!(b.queue, 10.0);
+    }
+
+    #[test]
+    fn totals_merge_and_fraction() {
+        let c = cost(100.0, 25.0, 50.0, 25.0);
+        let mut a = PhaseTotals::default();
+        let mut b = PhaseTotals::default();
+        a.record(&PhaseBreakdown::attribute(0.0, 10.0, 110.0, &c));
+        b.record(&PhaseBreakdown::attribute(0.0, 30.0, 130.0, &c));
+        a.merge(&b);
+        assert_eq!(a.requests, 2);
+        crate::assert_close!(a.total(), 240.0);
+        let f = a.fractions();
+        crate::assert_close!(f.iter().sum::<f64>(), 1.0);
+        crate::assert_close!(f[0], 40.0 / 240.0);
+    }
+
+    #[test]
+    fn empty_totals_yield_nan_fractions() {
+        let f = PhaseTotals::default().fractions();
+        assert!(f.iter().all(|v| v.is_nan()));
+    }
+}

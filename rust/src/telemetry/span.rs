@@ -1,0 +1,205 @@
+//! Request lifecycle spans and the opt-in span recorder.
+//!
+//! A [`SpanRecord`] captures one completed request's deterministic
+//! timeline (arrived → dispatched → completed) plus its
+//! [`PhaseBreakdown`]; [`ShedSpan`] and [`PreemptSpan`] capture the
+//! terminal/interrupt events. Recording is **opt-in**: the hot paths
+//! hold a [`Recorder`] enum whose disabled arm is a single discriminant
+//! check — no per-request allocation, no branch-heavy bookkeeping
+//! (bench-guarded in `benches/perf_hotpath.rs`).
+//!
+//! Determinism: each shard appends to its private [`SpanLog`] in local
+//! simulated-time order; `cluster::merge::finalize` absorbs the logs in
+//! shard-id order and [`SpanLog::sort_chronological`] stable-sorts by
+//! cycle, so the merged log is ordered by `(cycle, shard, emission
+//! index)` at any thread count.
+
+use crate::cluster::{ShedReason, TrafficClass};
+use crate::serve::ModelKind;
+
+use super::profile::PhaseBreakdown;
+
+/// One completed request's lifecycle span.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub kind: ModelKind,
+    /// Traffic class (`None` on the single-tenant `serve` path).
+    pub class: Option<TrafficClass>,
+    /// Owning shard (0 on the `serve` path; stamped by the merge).
+    pub shard: usize,
+    /// Package the batch ran on (shard-local index).
+    pub package: usize,
+    /// Requests in the batch this span rode.
+    pub batch: usize,
+    /// Arrival cycle.
+    pub arrival: f64,
+    /// Final successful dispatch cycle.
+    pub dispatched: f64,
+    /// Completion cycle.
+    pub completed: f64,
+    /// Cycle-attribution split of `completed - arrival`.
+    pub phases: PhaseBreakdown,
+}
+
+/// A request refused by admission control or deadline shedding.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedSpan {
+    pub id: u64,
+    pub kind: ModelKind,
+    pub class: Option<TrafficClass>,
+    pub shard: usize,
+    /// Arrival cycle.
+    pub arrival: f64,
+    /// Cycle the shed decision was made.
+    pub cycle: f64,
+    pub reason: ShedReason,
+}
+
+/// A batch aborted by priority preemption (its requests requeue and
+/// eventually produce ordinary [`SpanRecord`]s whose queue phase
+/// includes the burnt cycles).
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptSpan {
+    /// Cycle the preemption fired.
+    pub cycle: f64,
+    pub shard: usize,
+    pub package: usize,
+    /// Requests pushed back to the head of their queues.
+    pub batch: usize,
+}
+
+/// Per-shard (or per-fleet) span storage.
+#[derive(Debug, Clone, Default)]
+pub struct SpanLog {
+    pub spans: Vec<SpanRecord>,
+    pub sheds: Vec<ShedSpan>,
+    pub preemptions: Vec<PreemptSpan>,
+}
+
+impl SpanLog {
+    /// Move `other`'s records in, stamping them with `shard`. Call in
+    /// shard-id order — combined with the stable chronological sort
+    /// this yields the deterministic `(cycle, shard, index)` order.
+    pub fn absorb(&mut self, shard: usize, mut other: SpanLog) {
+        for s in &mut other.spans {
+            s.shard = shard;
+        }
+        for s in &mut other.sheds {
+            s.shard = shard;
+        }
+        for s in &mut other.preemptions {
+            s.shard = shard;
+        }
+        self.spans.extend(other.spans);
+        self.sheds.extend(other.sheds);
+        self.preemptions.extend(other.preemptions);
+    }
+
+    /// Stable sort every record stream by its cycle (`total_cmp`:
+    /// deterministic even against NaNs). Shard-order ties are preserved
+    /// by stability.
+    pub fn sort_chronological(&mut self) {
+        self.spans.sort_by(|a, b| a.completed.total_cmp(&b.completed));
+        self.sheds.sort_by(|a, b| a.cycle.total_cmp(&b.cycle));
+        self.preemptions.sort_by(|a, b| a.cycle.total_cmp(&b.cycle));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.sheds.is_empty() && self.preemptions.is_empty()
+    }
+}
+
+/// The opt-in recorder the hot paths hold. `Off` costs one discriminant
+/// check per would-be record; `On` boxes the log so the enum stays one
+/// word plus tag either way.
+#[derive(Debug, Clone, Default)]
+pub enum Recorder {
+    #[default]
+    Off,
+    On(Box<SpanLog>),
+}
+
+impl Recorder {
+    pub fn new(enabled: bool) -> Self {
+        if enabled {
+            Recorder::On(Box::default())
+        } else {
+            Recorder::Off
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, Recorder::On(_))
+    }
+
+    /// The entire disabled-path cost: match, return `None`.
+    #[inline]
+    pub fn log_mut(&mut self) -> Option<&mut SpanLog> {
+        match self {
+            Recorder::Off => None,
+            Recorder::On(log) => Some(log),
+        }
+    }
+
+    /// Take the accumulated log, leaving the recorder armed but empty.
+    pub fn take_log(&mut self) -> SpanLog {
+        match self {
+            Recorder::Off => SpanLog::default(),
+            Recorder::On(log) => std::mem::take(log),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(completed: f64) -> SpanRecord {
+        SpanRecord {
+            id: 0,
+            kind: ModelKind::TinyCnn,
+            class: None,
+            shard: 0,
+            package: 0,
+            batch: 1,
+            arrival: 0.0,
+            dispatched: 0.0,
+            completed,
+            phases: PhaseBreakdown::default(),
+        }
+    }
+
+    #[test]
+    fn recorder_off_is_inert() {
+        let mut r = Recorder::new(false);
+        assert!(!r.is_on());
+        assert!(r.log_mut().is_none());
+        assert!(r.take_log().is_empty());
+    }
+
+    #[test]
+    fn absorb_stamps_shard_and_sort_is_stable_across_shards() {
+        let mut merged = SpanLog::default();
+        // Shard 1 logged cycles [5, 5]; shard 0 logged [5, 2]. After
+        // shard-order absorb + stable sort, ties at cycle 5 keep shard
+        // order: 0 before 1, 1 before 1's second.
+        let a = SpanLog { spans: vec![span(5.0), span(2.0)], ..Default::default() };
+        let b = SpanLog { spans: vec![span(5.0), span(5.0)], ..Default::default() };
+        merged.absorb(0, a);
+        merged.absorb(1, b);
+        merged.sort_chronological();
+        let order: Vec<(f64, usize)> = merged.spans.iter().map(|s| (s.completed, s.shard)).collect();
+        assert_eq!(order, vec![(2.0, 0), (5.0, 0), (5.0, 1), (5.0, 1)]);
+    }
+
+    #[test]
+    fn take_log_leaves_recorder_armed() {
+        let mut r = Recorder::new(true);
+        r.log_mut().unwrap().spans.push(span(1.0));
+        let log = r.take_log();
+        assert_eq!(log.spans.len(), 1);
+        assert!(r.is_on());
+        assert!(r.take_log().is_empty());
+    }
+}

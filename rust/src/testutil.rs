@@ -199,10 +199,12 @@ pub struct FuzzSummary {
 /// counts, routing policy, queue caps, deadline shedding, preemption,
 /// class populations, epoch widths, work stealing on/off, and all three
 /// source families (Poisson, closed-loop client pool, client-trace
-/// replay) — and assert for each that the emitted stats JSON is
-/// **byte-identical at 1, 2 and 4 worker threads**, and that request
-/// conservation (`arrived == completed + shed`, globally and per class)
-/// holds after the drain. Source family and stealing alternate
+/// replay) — and assert for each that the emitted stats JSON, the
+/// telemetry metrics JSON, and the Chrome trace export (every trial runs
+/// with span recording on) are **byte-identical at 1, 2 and 4 worker
+/// threads**, and that request conservation (`arrived == completed +
+/// shed`, globally and per class) holds after the drain. Source family
+/// and stealing alternate
 /// round-robin across trials so even a short sweep covers every regime;
 /// everything else is drawn from the seeded RNG, so a failing seed
 /// reproduces exactly.
@@ -262,6 +264,7 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
                 steal,
             },
             calibrated_eta: rng.range_u64(0, 1) == 1,
+            telemetry: crate::telemetry::TelemetryConfig { enabled: true },
             ..Default::default()
         };
         let horizon = ms_to_cycles(2.0 + rng.next_f32() as f64 * 4.0);
@@ -296,6 +299,8 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
         }
 
         let mut jsons = Vec::new();
+        let mut metrics = Vec::new();
+        let mut traces = Vec::new();
         for threads in [1usize, 2, 4] {
             let cluster = Cluster::new(
                 PackageSpec::homogeneous(packages, DesignPoint::WIENNA_C),
@@ -314,9 +319,18 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
                 summary.requests += stats.serve.arrived();
             }
             jsons.push(stats.to_json());
+            // The memo counters are process-global (order-dependent under
+            // parallel misses), so the harness diffs everything but them;
+            // the CLI prewarms the memo before parallel runs instead.
+            metrics.push(stats.metrics_json(None));
+            traces.push(stats.chrome_trace());
         }
         assert_eq!(jsons[0], jsons[1], "{label}: 1-thread vs 2-thread stats JSON diverged");
         assert_eq!(jsons[0], jsons[2], "{label}: 1-thread vs 4-thread stats JSON diverged");
+        assert_eq!(metrics[0], metrics[1], "{label}: 1 vs 2-thread metrics JSON diverged");
+        assert_eq!(metrics[0], metrics[2], "{label}: 1 vs 4-thread metrics JSON diverged");
+        assert_eq!(traces[0], traces[1], "{label}: 1 vs 2-thread chrome trace diverged");
+        assert_eq!(traces[0], traces[2], "{label}: 1 vs 4-thread chrome trace diverged");
         summary.trials += 1;
     }
     summary

@@ -1,0 +1,368 @@
+//! Integration tests for `wienna::telemetry`:
+//!
+//! 1. **Span conservation**: every completed request carries a phase
+//!    breakdown whose parts are non-negative and sum exactly (1e-9
+//!    relative) to its end-to-end latency — including requests that were
+//!    preempted-then-resumed and requests moved across shards by the
+//!    work-stealing pass. Shed and preemption instants match the stats
+//!    counters one for one.
+//! 2. **Schema stability**: the metrics-JSON and Chrome-trace field
+//!    names and order are pinned against a golden fixture (the
+//!    determinism gate diffs runs of the same binary, so a renamed or
+//!    reordered field would sail through it).
+
+use wienna::assert_close;
+use wienna::cluster::{
+    AdmissionConfig, ClassMix, ClassSpec, Cluster, ClusterConfig, ClusterStats, ShedReason,
+    SyncConfig, TrafficClass, NUM_CLASSES,
+};
+use wienna::config::DesignPoint;
+use wienna::cost::MemoStats;
+use wienna::serve::{
+    ms_to_cycles, BatcherConfig, Fleet, MixEntry, ModelKind, PackageSpec, RoutePolicy, ServeStats,
+    Source, WorkloadMix,
+};
+use wienna::telemetry::{
+    chrome_trace, metrics_json, EpochSample, PhaseBreakdown, PhaseTotals, PreemptSpan, Recorder,
+    ShedSpan, SpanRecord, Telemetry, TelemetryConfig, PHASES,
+};
+use wienna::workload::trace::synthetic_arrivals;
+
+fn tiny_mix(slo_ms: f64) -> WorkloadMix {
+    WorkloadMix::new(vec![MixEntry {
+        kind: ModelKind::TinyCnn,
+        weight: 1.0,
+        slo_cycles: ms_to_cycles(slo_ms),
+    }])
+}
+
+fn two_model_mix() -> WorkloadMix {
+    WorkloadMix::new(vec![
+        MixEntry { kind: ModelKind::TinyCnn, weight: 3.0, slo_cycles: ms_to_cycles(25.0) },
+        MixEntry { kind: ModelKind::Mlp, weight: 1.0, slo_cycles: ms_to_cycles(50.0) },
+    ])
+}
+
+/// The span-conservation property over one telemetry-enabled cluster run:
+/// one span per completion (chronological), all phases non-negative and
+/// summing to the end-to-end latency; shed/preempt instants match the
+/// counters; the attribution sums and the registry agree with the stats.
+fn check_cluster_telemetry(stats: &ClusterStats, label: &str) {
+    let t = stats.telemetry.as_ref().expect("run had telemetry enabled");
+    assert_eq!(t.log.spans.len() as u64, stats.serve.completed(), "{label}: one span per completion");
+    assert_eq!(t.log.sheds.len() as u64, stats.serve.shed(), "{label}: one instant per shed");
+    assert_eq!(
+        t.log.preemptions.len() as u64,
+        stats.preemptions,
+        "{label}: one instant per preemption"
+    );
+
+    let mut prev = f64::NEG_INFINITY;
+    for s in &t.log.spans {
+        let p = &s.phases;
+        for (phase, v) in PHASES.iter().zip([p.queue, p.dist, p.compute, p.collect, p.throttle]) {
+            assert!(v >= 0.0, "{label}: negative {phase} phase on request {}", s.id);
+        }
+        assert!(
+            s.arrival <= s.dispatched && s.dispatched <= s.completed,
+            "{label}: span timestamps out of order on request {}",
+            s.id
+        );
+        // The heart of the property: the five phases reconstruct the
+        // end-to-end latency exactly, preempted/stolen or not.
+        assert_close!(p.total(), s.completed - s.arrival);
+        assert!(s.class.is_some(), "{label}: cluster spans carry their traffic class");
+        assert!(s.completed >= prev, "{label}: span log is not chronological");
+        prev = s.completed;
+    }
+
+    // Always-on attribution agrees with the opt-in span log.
+    assert_eq!(
+        stats.serve.attr.requests,
+        stats.serve.completed(),
+        "{label}: attribution folds every completion"
+    );
+    if stats.serve.completed() > 0 {
+        let f = stats.serve.attr.fractions();
+        assert_close!(f.iter().sum::<f64>(), 1.0);
+    }
+    let class_requests: u64 = stats.class_attr.iter().map(|a| a.requests).sum();
+    assert_eq!(class_requests, stats.serve.completed(), "{label}: per-class attribution covers all");
+    let class_total: f64 = stats.class_attr.iter().map(|a| a.total()).sum();
+    assert_close!(class_total, stats.serve.attr.total());
+
+    // The registry was filled at finalize / the epoch barriers.
+    assert_eq!(t.metrics.latency_ms.count, stats.serve.completed(), "{label}: latency histogram");
+    assert_eq!(t.metrics.batch_size.count, stats.serve.completed(), "{label}: batch histogram");
+    assert_eq!(t.metrics.epochs.len() as u64, stats.epochs, "{label}: one sample per epoch");
+    let last = t.metrics.epochs.last().expect("at least one epoch sample");
+    assert_eq!(last.completed, stats.serve.completed(), "{label}: final sample sees the drain");
+    assert_eq!(last.steals, stats.steals, "{label}: final sample sees every steal");
+}
+
+/// Preemption regime: one package, best-effort-dominant traffic with a
+/// sliver of tight-deadline interactive arrivals, deep overload. Swept
+/// over seeds and SLO widths so at least one run lands in the window
+/// where preempting rescues the deadline — the conservation property
+/// must then hold for the preempted-then-resumed spans (their queue
+/// phase absorbs the aborted service).
+#[test]
+fn preempted_spans_conserve_latency() {
+    let mut total_preemptions = 0u64;
+    let mut total_completed = 0u64;
+    for seed in [1u64, 2, 3] {
+        for slo_ms in [1.0f64, 3.0, 8.0] {
+            let cluster = Cluster::new(
+                PackageSpec::homogeneous(1, DesignPoint::WIENNA_C),
+                ClusterConfig {
+                    shards: 1,
+                    threads: 2,
+                    classes: ClassMix::new(vec![
+                        ClassSpec {
+                            class: TrafficClass::BestEffort,
+                            weight: 20.0,
+                            slo_scale: f64::INFINITY,
+                            deadline_shed: false,
+                        },
+                        ClassSpec {
+                            class: TrafficClass::Interactive,
+                            weight: 1.0,
+                            slo_scale: 1.0,
+                            deadline_shed: false,
+                        },
+                    ]),
+                    admission: AdmissionConfig::admit_all(),
+                    preemption: true,
+                    telemetry: TelemetryConfig { enabled: true },
+                    ..Default::default()
+                },
+            );
+            let mut source = Source::poisson(tiny_mix(slo_ms), 12_000.0, seed);
+            let stats = cluster.run(&mut source, ms_to_cycles(10.0));
+            check_cluster_telemetry(&stats, &format!("preempt regime seed {seed} slo {slo_ms}"));
+            total_preemptions += stats.preemptions;
+            total_completed += stats.serve.completed();
+        }
+    }
+    assert!(total_completed > 0, "the sweep served traffic");
+    assert!(
+        total_preemptions > 0,
+        "no sweep point preempted — the preempted-span property went unexercised"
+    );
+}
+
+/// Steal regime (mirrors the hot-stripe integration test, which proves
+/// this exact configuration steals): stolen spans — whose queue phase
+/// includes the barrier hand-off wait — still conserve latency, and the
+/// final epoch sample accounts for every move.
+#[test]
+fn stolen_spans_conserve_latency() {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: 4,
+            threads: 2,
+            classes: ClassMix::single(TrafficClass::Interactive, 1.0, false),
+            admission: AdmissionConfig::admit_all(),
+            preemption: false,
+            batcher: BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
+            sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1) },
+            telemetry: TelemetryConfig { enabled: true },
+            ..Default::default()
+        },
+    );
+    let counts: Vec<usize> = (0..64).map(|i| if i % 4 == 0 { 40 } else { 1 }).collect();
+    let traces = synthetic_arrivals(&counts, 0.02, 0.5, 9);
+    let mut source = Source::client_trace(tiny_mix(25.0), &traces, 9);
+    let stats = cluster.run(&mut source, f64::INFINITY);
+    assert!(stats.steals > 0, "the hot stripe must donate work");
+    check_cluster_telemetry(&stats, "steal regime");
+}
+
+/// Shed regime: overload against a cap-4 queue. Every shed leaves an
+/// instant whose reason tallies with the stats counters.
+#[test]
+fn shed_instants_match_the_shed_counters() {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(2, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: 2,
+            threads: 2,
+            admission: AdmissionConfig { queue_cap: Some(4), shed_late: true },
+            telemetry: TelemetryConfig { enabled: true },
+            ..Default::default()
+        },
+    );
+    let mut source = Source::poisson(two_model_mix(), 20_000.0, 5);
+    let stats = cluster.run(&mut source, ms_to_cycles(10.0));
+    check_cluster_telemetry(&stats, "shed regime");
+    assert!(stats.serve.shed() > 0, "overload against a cap-4 queue must shed");
+    let t = stats.telemetry.as_ref().unwrap();
+    let queue_full = t
+        .log
+        .sheds
+        .iter()
+        .filter(|s| matches!(s.reason, ShedReason::QueueFull))
+        .count() as u64;
+    let deadline = t
+        .log
+        .sheds
+        .iter()
+        .filter(|s| matches!(s.reason, ShedReason::DeadlineHopeless))
+        .count() as u64;
+    assert_eq!(queue_full, stats.shed_queue_full, "queue-full instants tally");
+    assert_eq!(deadline, stats.shed_deadline, "deadline instants tally");
+    for s in &t.log.sheds {
+        assert!(s.cycle >= s.arrival, "shed instant precedes the request's arrival");
+    }
+}
+
+/// The plain serve fleet records the same property through its own
+/// recorder hook — no classes, shard 0, and the per-package attribution
+/// sums to the fleet total.
+#[test]
+fn serve_fleet_spans_conserve_latency() {
+    let mut fleet = Fleet::new(
+        PackageSpec::homogeneous(2, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    );
+    fleet.recorder = Recorder::new(true);
+    let mut stats = ServeStats::new();
+    let mut source = Source::poisson(two_model_mix(), 3000.0, 11);
+    fleet.run(&mut source, ms_to_cycles(20.0), &mut stats);
+    assert!(stats.completed() > 0, "the run served traffic");
+
+    let mut tele = Telemetry { log: fleet.recorder.take_log(), ..Default::default() };
+    tele.finish();
+    assert_eq!(tele.log.spans.len() as u64, stats.completed(), "one span per completion");
+    for s in &tele.log.spans {
+        assert!(s.class.is_none(), "plain serve spans carry no traffic class");
+        let p = &s.phases;
+        for v in [p.queue, p.dist, p.compute, p.collect, p.throttle] {
+            assert!(v >= 0.0, "negative phase on request {}", s.id);
+        }
+        assert_close!(p.total(), s.completed - s.arrival);
+    }
+    assert_eq!(stats.attr.requests, stats.completed());
+    let f = stats.attr.fractions();
+    assert_close!(f.iter().sum::<f64>(), 1.0);
+    assert_eq!(tele.metrics.latency_ms.count, stats.completed());
+    assert_eq!(tele.metrics.batch_size.count, stats.completed());
+    let package_total: f64 = fleet.packages.iter().map(|p| p.attr.total()).sum();
+    assert_close!(package_total, stats.attr.total());
+}
+
+/// Golden-file regression (schema satellite): the metrics-JSON and
+/// Chrome-trace field names and order match the checked-in fixture,
+/// mirroring `cluster_stats_schema.golden`. Built from a synthetic
+/// `Telemetry` so every event kind (span, shed, preemption, epoch
+/// counter, memo block) is guaranteed present. If the schema changes on
+/// purpose, regenerate the fixture to match the serializers.
+#[test]
+fn telemetry_schema_matches_the_golden_fixture() {
+    // Keys of one single-line JSON object: the `"`-delimited segments
+    // immediately followed by a `:`, first occurrence only (nested args
+    // repeat keys like "name"/"count").
+    fn object_keys(line: &str) -> Vec<String> {
+        let parts: Vec<&str> = line.split('"').collect();
+        let mut keys = Vec::new();
+        let mut i = 1;
+        while i < parts.len() {
+            if parts.get(i + 1).is_some_and(|s| s.trim_start().starts_with(':')) {
+                let key = parts[i].to_string();
+                if !keys.contains(&key) {
+                    keys.push(key);
+                }
+            }
+            i += 2;
+        }
+        keys
+    }
+    fn keys_of_first(hay: &str, needle: &str) -> Vec<String> {
+        let line = hay
+            .lines()
+            .find(|l| l.contains(needle))
+            .unwrap_or_else(|| panic!("no line containing {needle:?}"));
+        object_keys(line)
+    }
+
+    let mut t = Telemetry::default();
+    t.log.spans.push(SpanRecord {
+        id: 7,
+        kind: ModelKind::TinyCnn,
+        class: Some(TrafficClass::Interactive),
+        shard: 0,
+        package: 0,
+        batch: 2,
+        arrival: 0.0,
+        dispatched: 1000.0,
+        completed: 3000.0,
+        phases: PhaseBreakdown { queue: 1000.0, compute: 2000.0, ..Default::default() },
+    });
+    t.log.sheds.push(ShedSpan {
+        id: 9,
+        kind: ModelKind::Mlp,
+        class: Some(TrafficClass::Batch),
+        shard: 0,
+        arrival: 10.0,
+        cycle: 20.0,
+        reason: ShedReason::QueueFull,
+    });
+    t.log.preemptions.push(PreemptSpan { cycle: 50.0, shard: 0, package: 1, batch: 4 });
+    t.metrics.epochs.push(EpochSample { epoch: 0, cycle: 4000.0, queued: 3, ..Default::default() });
+    t.finish();
+    let mut attr = PhaseTotals::default();
+    attr.record(&t.log.spans[0].phases);
+    let class_attr = [attr; NUM_CLASSES];
+    let memo = MemoStats { hits: 4, misses: 1, entries: 1, evictions: 0, capacity: 64 };
+
+    let metrics = metrics_json(&t, &attr, Some(&class_attr), Some(memo));
+    let trace = chrome_trace(&t);
+
+    let mut schema = String::new();
+    for line in metrics.lines() {
+        if let Some(rest) = line.strip_prefix("  \"") {
+            let key = rest.split('"').next().expect("top-level key closes its quote");
+            schema.push_str(&format!("metrics top {key}\n"));
+        }
+    }
+    for key in keys_of_first(&metrics, "{ \"class\"") {
+        schema.push_str(&format!("metrics class {key}\n"));
+    }
+    for key in keys_of_first(&metrics, "{ \"name\"") {
+        schema.push_str(&format!("metrics hist {key}\n"));
+    }
+    for key in keys_of_first(&metrics, "{ \"epoch\"") {
+        schema.push_str(&format!("metrics epoch {key}\n"));
+    }
+    for line in metrics.lines() {
+        if let Some(rest) = line.strip_prefix("    \"") {
+            let key = rest.split('"').next().expect("memo key closes its quote");
+            schema.push_str(&format!("metrics memo {key}\n"));
+        }
+    }
+    for (section, needle) in [
+        ("meta", "\"ph\":\"M\""),
+        ("span", "\"ph\":\"X\""),
+        ("shed", "\"cat\":\"admission\""),
+        ("preempt", "\"cat\":\"scheduler\""),
+        ("counter", "\"ph\":\"C\""),
+    ] {
+        for key in keys_of_first(&trace, needle) {
+            schema.push_str(&format!("trace {section} {key}\n"));
+        }
+    }
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/testdata/telemetry_schema.golden");
+    let fixture = std::fs::read_to_string(&path).expect("golden schema fixture exists");
+    let pinned: String = fixture
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    assert_eq!(
+        schema, pinned,
+        "telemetry schema drifted from {path:?} — if the change is deliberate, update the fixture"
+    );
+}
