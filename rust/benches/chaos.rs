@@ -1,0 +1,188 @@
+//! Chaos bench: the cost of failure, measured.
+//!
+//! Part 1 — **tail amplification under MAC contention**: one 8-package
+//! WIENNA-C fleet in 4 shards serves a single-model mix at 0.6x capacity
+//! twice — once clean, once with the shared wireless medium at 0.6
+//! steady background occupancy. Contention stretches every dispatch's
+//! `dist` phase through the closed-form token-queueing delay, and it
+//! stretches the *tail* harder than the median: the headline metric is
+//! tail amplification (p99/p50) clean vs contended, pinned into
+//! `BENCH_chaos.json` for the CI perf job.
+//!
+//! Part 2 — **time-to-drain a dead shard**: the same fleet, closed-loop
+//! clients, both packages of shard 1 killed for good at 2 ms with the
+//! steal/failover pass on. The failover sub-pass re-homes the dead
+//! shard's backlog onto survivors at the next epoch barrier; the bench
+//! pins how long the shard took to drain (death to empty), the goodput
+//! recovered vs the same run without failover, and the reroute count.
+//!
+//! Both parts run after a memo warm-up pass (steady-state layer costs)
+//! and record wall-clock timings alongside the scenario metrics.
+
+use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, SyncConfig};
+use wienna::config::DesignPoint;
+use wienna::cost::memo;
+use wienna::fault::{ContentionConfig, FaultPlan};
+use wienna::report::Table;
+use wienna::serve::{
+    ms_to_cycles, Fleet, MixEntry, ModelKind, PackageSpec, RoutePolicy, Source, WorkloadMix,
+};
+use wienna::testutil::{bench, record_metric};
+
+const PACKAGES: usize = 8;
+const SHARDS: usize = 4;
+const REQUESTS: f64 = 6_000.0;
+const BACKGROUND: f64 = 0.6;
+
+fn mix() -> WorkloadMix {
+    WorkloadMix::new(vec![MixEntry {
+        kind: ModelKind::TinyCnn,
+        weight: 1.0,
+        slo_cycles: ms_to_cycles(40.0),
+    }])
+}
+
+fn run_contended(background: f64, rate: f64, horizon_ms: f64) -> wienna::cluster::ClusterStats {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: SHARDS,
+            threads: 4,
+            admission: AdmissionConfig::admit_all(),
+            contention: if background > 0.0 {
+                ContentionConfig::with_background(background)
+            } else {
+                ContentionConfig::default()
+            },
+            ..Default::default()
+        },
+    );
+    let mut source = Source::poisson(mix(), rate, 42);
+    cluster.run(&mut source, ms_to_cycles(horizon_ms))
+}
+
+fn run_dead_shard(steal: bool) -> wienna::cluster::ClusterStats {
+    // Globals 1 and 5 on an 8-package / 4-shard fleet are exactly shard
+    // 1's two local packages — dead for good at 2 ms under closed-loop
+    // load, so real backlog is stranded there unless failover moves it.
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: SHARDS,
+            threads: 4,
+            admission: AdmissionConfig::admit_all(),
+            sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.25) },
+            faults: FaultPlan::parse("kill:1@2;kill:5@2").expect("bench fault spec"),
+            ..Default::default()
+        },
+    );
+    let mut source = Source::closed_loop(mix(), 32, 0.3, 10, 404);
+    cluster.run(&mut source, f64::INFINITY)
+}
+
+fn main() {
+    println!("##### Chaos engineering ({PACKAGES} packages, {SHARDS} shards)\n");
+    let capacity = Fleet::new(
+        PackageSpec::homogeneous(PACKAGES, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    )
+    .estimate_capacity_rps(&mix(), 8);
+    let rate = 0.6 * capacity;
+    let horizon_ms = REQUESTS / rate * 1e3;
+    println!(
+        "estimated fleet capacity {capacity:.0} req/s -> offered {rate:.0} req/s (0.6x) for {horizon_ms:.0} ms (~{REQUESTS:.0} requests)\n"
+    );
+
+    // Warm the layer memo once so every timed run sees steady state.
+    let _ = run_contended(0.0, rate, horizon_ms);
+    let _scope = memo::run_scope();
+
+    // --- Part 1: tail amplification under contention --------------------
+    bench(&format!("chaos/clean_{PACKAGES}pkg"), 3, || {
+        run_contended(0.0, rate, horizon_ms).serve.completed()
+    });
+    bench(&format!("chaos/contended_bg{BACKGROUND}"), 3, || {
+        run_contended(BACKGROUND, rate, horizon_ms).serve.completed()
+    });
+    let clean = run_contended(0.0, rate, horizon_ms);
+    let hot = run_contended(BACKGROUND, rate, horizon_ms);
+    assert_eq!(clean.token_wait_cycles, 0.0, "no contention, no token wait");
+    assert!(hot.token_wait_cycles > 0.0, "contention must book token-wait cycles");
+    assert!(
+        hot.serve.latency_ms(99.0) > clean.serve.latency_ms(99.0),
+        "contention must stretch the tail: p99 {:.3} vs {:.3} ms",
+        hot.serve.latency_ms(99.0),
+        clean.serve.latency_ms(99.0)
+    );
+    let mut t = Table::new(
+        &format!("tail amplification at {BACKGROUND} background MAC load"),
+        &["run", "completed", "p50 ms", "p99 ms", "tail amp", "dist frac", "token wait Mcyc"],
+    );
+    for (name, s) in [("clean", &clean), ("contended", &hot)] {
+        t.row(vec![
+            name.to_string(),
+            s.serve.completed().to_string(),
+            format!("{:.3}", s.serve.latency_ms(50.0)),
+            format!("{:.3}", s.serve.latency_ms(99.0)),
+            format!("{:.2}x", s.tail_amplification()),
+            format!("{:.3}", s.serve.attr.fractions()[1]),
+            format!("{:.2}", s.token_wait_cycles / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/chaos_tail.csv").ok();
+    record_metric("chaos/tail_amplification_clean_x", clean.tail_amplification());
+    record_metric("chaos/tail_amplification_contended_x", hot.tail_amplification());
+    println!();
+
+    // --- Part 2: dead-shard drain under failover -------------------------
+    bench("chaos/dead_shard_failover", 3, || run_dead_shard(true).serve.completed());
+    let stranded = run_dead_shard(false);
+    let rescued = run_dead_shard(true);
+    assert!(rescued.reroutes() > 0, "failover must re-home the dead shard's queue");
+    assert!(
+        rescued.serve.completed() > stranded.serve.completed(),
+        "failover must recover goodput: {} vs {} completions",
+        rescued.serve.completed(),
+        stranded.serve.completed()
+    );
+    let mut t = Table::new(
+        "dead shard (both packages of shard 1 killed at 2 ms)",
+        &["run", "completed", "failed", "retries", "reroutes", "drain ms", "failover goodput req/s"],
+    );
+    for (name, s) in [("static", &stranded), ("failover", &rescued)] {
+        t.row(vec![
+            name.to_string(),
+            s.serve.completed().to_string(),
+            s.serve.failed().to_string(),
+            s.retries().to_string(),
+            s.reroutes().to_string(),
+            format!("{:.3}", s.dead_shard_drain_ms()),
+            format!("{:.0}", s.failover_goodput_rps()),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv("bench_out/chaos_drain.csv").ok();
+    record_metric("chaos/dead_shard_drain_ms", rescued.dead_shard_drain_ms());
+    record_metric("chaos/failover_goodput_rps", rescued.failover_goodput_rps());
+    record_metric(
+        "chaos/failover_goodput_gain_x",
+        rescued.serve.completed() as f64 / stranded.serve.completed().max(1) as f64,
+    );
+
+    let ms = memo::stats();
+    println!(
+        "\nlayer memo: {} entries (cap {}), {:.1}% hit rate ({} hits / {} misses, {} evictions)",
+        ms.entries,
+        ms.capacity,
+        ms.hit_rate() * 100.0,
+        ms.hits,
+        ms.misses,
+        ms.evictions
+    );
+
+    match wienna::testutil::write_bench_json("BENCH_chaos.json") {
+        Ok(p) => println!("bench json -> {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

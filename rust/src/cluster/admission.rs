@@ -23,6 +23,10 @@ pub enum ShedReason {
     /// The predicted completion misses the request's deadline even before
     /// it queues (deadline-aware load shedding).
     DeadlineHopeless,
+    /// Graceful degradation under sustained shared-medium contention:
+    /// best-effort arrivals are shed while the effective MAC load sits at
+    /// or above `fault::ContentionConfig::shed_best_effort_above`.
+    Overload,
 }
 
 impl ShedReason {
@@ -30,6 +34,7 @@ impl ShedReason {
         match self {
             ShedReason::QueueFull => "queue-full",
             ShedReason::DeadlineHopeless => "deadline",
+            ShedReason::Overload => "overload",
         }
     }
 }

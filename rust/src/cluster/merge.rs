@@ -19,6 +19,7 @@ use super::admission::ShedReason;
 use super::class::{TrafficClass, NUM_CLASSES};
 use super::shard::{ShardEvent, ShardEventOutcome, ShardOutcome};
 use super::sync::TraceEvent;
+use crate::config::CLOCK_HZ;
 use crate::power::{FleetEnergy, PowerModel};
 use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
 use crate::telemetry::{PhaseTotals, Telemetry, PHASES};
@@ -45,6 +46,26 @@ pub struct ClusterStats {
     pub shed_queue_full: u64,
     /// Arrivals refused by deadline-aware load shedding.
     pub shed_deadline: u64,
+    /// Best-effort arrivals shed by graceful degradation under sustained
+    /// shared-medium contention (`wienna::fault`).
+    pub shed_overload: u64,
+    /// Retries scheduled per class under fault injection
+    /// (`class.index()` order; all-zero without a fault plan).
+    pub class_retries: [u64; NUM_CLASSES],
+    /// Requests re-routed off dead hardware per class — shard-internal
+    /// re-homes plus barrier failover hand-offs.
+    pub class_reroutes: [u64; NUM_CLASSES],
+    /// Cycles of the run during which at least one package was dead
+    /// (clipped to the run length) — the failover-goodput denominator.
+    pub outage_cycles: f64,
+    /// SLO-meeting completions that landed inside an outage window.
+    pub outage_slo_met: u64,
+    /// Epoch-resolution time from a shard losing its last package to
+    /// that shard holding no work (0 when no shard ever fully died).
+    pub dead_shard_drain_cycles: f64,
+    /// Cumulative shared-medium token-wait cycles across all dispatches
+    /// (exactly 0.0 with contention disabled).
+    pub token_wait_cycles: f64,
     /// Shards the run was partitioned into (thread count is deliberately
     /// *not* recorded here — stats must not depend on it).
     pub shards: usize,
@@ -97,6 +118,51 @@ impl ClusterStats {
         })
     }
 
+    /// Total retries scheduled across classes.
+    pub fn retries(&self) -> u64 {
+        self.class_retries.iter().sum()
+    }
+
+    /// Total re-routes off dead hardware across classes.
+    pub fn reroutes(&self) -> u64 {
+        self.class_reroutes.iter().sum()
+    }
+
+    /// Tail amplification: p99 / p50 latency. Contention and failover
+    /// stretch the tail much faster than the median, so this is the
+    /// headline chaos metric. 0 when fewer than one completion (or a
+    /// degenerate zero median).
+    pub fn tail_amplification(&self) -> f64 {
+        let p50 = self.serve.latency_ms(50.0);
+        let p99 = self.serve.latency_ms(99.0);
+        if p50.is_finite() && p50 > 0.0 && p99.is_finite() {
+            p99 / p50
+        } else {
+            0.0
+        }
+    }
+
+    /// Goodput (SLO-meeting completions per second) measured only over
+    /// the outage windows of the fault plan — how much useful work the
+    /// survivors pushed while part of the fleet was dead. 0 when the
+    /// plan had no outage overlapping the run.
+    pub fn failover_goodput_rps(&self) -> f64 {
+        if self.outage_cycles <= 0.0 {
+            return 0.0;
+        }
+        self.outage_slo_met as f64 / (self.outage_cycles / CLOCK_HZ)
+    }
+
+    /// Time-to-drain a fully dead shard, in milliseconds (0 when no
+    /// shard ever lost all its packages).
+    pub fn dead_shard_drain_ms(&self) -> f64 {
+        if self.dead_shard_drain_cycles > 0.0 {
+            cycles_to_ms(self.dead_shard_drain_cycles)
+        } else {
+            0.0
+        }
+    }
+
     /// Machine-readable summary. Deterministic field order; floats are
     /// printed with Rust's shortest-round-trip formatting, so two JSON
     /// dumps are byte-identical iff the underlying stats are bit-identical
@@ -104,11 +170,15 @@ impl ClusterStats {
     /// field schema — names and order — is pinned by the golden fixture
     /// at `rust/testdata/cluster_stats_schema.golden`.
     pub fn to_json(&self) -> String {
-        fn num(v: f64) -> String {
+        // Zero-completion (or otherwise degenerate) runs have NaN
+        // percentiles and fractions internally; the wire format pins
+        // them to `0` so downstream JSON consumers never see `null`/NaN
+        // in a rate, percentile, or fraction field.
+        fn z(v: f64) -> String {
             if v.is_finite() {
                 format!("{v}")
             } else {
-                "null".to_string()
+                "0".to_string()
             }
         }
         let mut s = String::from("{\n");
@@ -118,34 +188,44 @@ impl ClusterStats {
         s.push_str(&format!("  \"shed\": {},\n", self.serve.shed()));
         s.push_str(&format!("  \"shed_queue_full\": {},\n", self.shed_queue_full));
         s.push_str(&format!("  \"shed_deadline\": {},\n", self.shed_deadline));
+        s.push_str(&format!("  \"shed_overload\": {},\n", self.shed_overload));
+        s.push_str(&format!("  \"failed\": {},\n", self.serve.failed()));
+        s.push_str(&format!("  \"retries\": {},\n", self.retries()));
+        s.push_str(&format!("  \"reroutes\": {},\n", self.reroutes()));
         s.push_str(&format!("  \"preemptions\": {},\n", self.preemptions));
         s.push_str(&format!("  \"steals\": {},\n", self.steals));
         s.push_str(&format!("  \"epochs\": {},\n", self.epochs));
         s.push_str(&format!("  \"dispatches\": {},\n", self.serve.dispatches()));
-        s.push_str(&format!("  \"mean_batch\": {},\n", num(self.serve.mean_batch())));
-        s.push_str(&format!("  \"end_cycle\": {},\n", num(self.serve.end_cycle())));
+        s.push_str(&format!("  \"mean_batch\": {},\n", z(self.serve.mean_batch())));
+        s.push_str(&format!("  \"end_cycle\": {},\n", z(self.serve.end_cycle())));
         for p in [50.0, 95.0, 99.0] {
-            s.push_str(&format!("  \"p{p:.0}_ms\": {},\n", num(self.serve.latency_ms(p))));
+            s.push_str(&format!("  \"p{p:.0}_ms\": {},\n", z(self.serve.latency_ms(p))));
         }
-        s.push_str(&format!("  \"violation_rate\": {},\n", num(self.serve.violation_rate())));
-        s.push_str(&format!("  \"dynamic_mj\": {},\n", num(self.energy.dynamic_mj())));
-        s.push_str(&format!("  \"leakage_mj\": {},\n", num(self.energy.leakage_mj)));
-        s.push_str(&format!("  \"total_energy_mj\": {},\n", num(self.energy.total_mj())));
+        s.push_str(&format!("  \"tail_amplification\": {},\n", z(self.tail_amplification())));
+        s.push_str(&format!("  \"violation_rate\": {},\n", z(self.serve.violation_rate())));
+        s.push_str(&format!("  \"goodput_rps\": {},\n", z(self.serve.goodput_rps())));
+        s.push_str(&format!(
+            "  \"failover_goodput_rps\": {},\n",
+            z(self.failover_goodput_rps())
+        ));
+        s.push_str(&format!("  \"dead_shard_drain_ms\": {},\n", z(self.dead_shard_drain_ms())));
+        s.push_str(&format!("  \"dynamic_mj\": {},\n", z(self.energy.dynamic_mj())));
+        s.push_str(&format!("  \"leakage_mj\": {},\n", z(self.energy.leakage_mj)));
+        s.push_str(&format!("  \"total_energy_mj\": {},\n", z(self.energy.total_mj())));
         s.push_str(&format!(
             "  \"energy_per_req_j\": {},\n",
-            num(self.energy.energy_per_req_j(self.serve.completed()))
+            z(self.energy.energy_per_req_j(self.serve.completed()))
         ));
         s.push_str(&format!(
             "  \"avg_power_w\": {},\n",
-            num(self.energy.avg_power_w(self.serve.end_cycle()))
+            z(self.energy.avg_power_w(self.serve.end_cycle()))
         ));
         s.push_str(&format!("  \"throttled_batches\": {},\n", self.energy.throttled_batches));
         // Cycle attribution (`wienna::telemetry`): fraction of every
         // completed request's end-to-end cycles spent in each phase.
-        // `null` when nothing completed.
         let fracs = self.serve.attr.fractions();
         for (name, v) in PHASES.iter().zip(fracs) {
-            s.push_str(&format!("  \"{name}_frac\": {},\n", num(v)));
+            s.push_str(&format!("  \"{name}_frac\": {},\n", z(v)));
         }
         s.push_str("  \"per_class\": [\n");
         let n = self.per_class.len();
@@ -154,19 +234,22 @@ impl ClusterStats {
             let frac_fields: String = PHASES
                 .iter()
                 .zip(cf)
-                .map(|(name, v)| format!(", \"{name}_frac\": {}", num(v)))
+                .map(|(name, v)| format!(", \"{name}_frac\": {}", z(v)))
                 .collect();
             s.push_str(&format!(
-                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"energy_mj\": {}{}}}{}\n",
+                "    {{\"class\": \"{}\", \"arrived\": {}, \"completed\": {}, \"shed\": {}, \"failed\": {}, \"retries\": {}, \"reroutes\": {}, \"slo_met\": {}, \"slo_violated\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"energy_mj\": {}{}}}{}\n",
                 class.label(),
                 m.arrived,
                 m.completed,
                 m.shed,
+                m.failed,
+                self.class_retries[class.index()],
+                self.class_reroutes[class.index()],
                 m.slo_met,
                 m.slo_violated,
-                num(cycles_to_ms(m.latency.percentile(50.0))),
-                num(cycles_to_ms(m.latency.percentile(99.0))),
-                num(self.class_energy_mj[class.index()]),
+                z(cycles_to_ms(m.latency.percentile(50.0))),
+                z(cycles_to_ms(m.latency.percentile(99.0))),
+                z(self.class_energy_mj[class.index()]),
                 frac_fields,
                 if i + 1 < n { "," } else { "" }
             ));
@@ -244,8 +327,17 @@ pub(crate) fn fold_events(
                 match reason {
                     ShedReason::QueueFull => stats.shed_queue_full += 1,
                     ShedReason::DeadlineHopeless => stats.shed_deadline += 1,
+                    ShedReason::Overload => stats.shed_overload += 1,
                 }
                 stats.serve.record_shed(&ev.req);
+                feedback(ev.cycle, &ev.req);
+            }
+            ShardEventOutcome::Failed => {
+                // A fault-killed request out of retries: terminal, and a
+                // closed-loop client observes the error like any other
+                // response (it still re-arms).
+                m.failed += 1;
+                stats.serve.record_failed(&ev.req);
                 feedback(ev.cycle, &ev.req);
             }
         }
@@ -275,8 +367,12 @@ pub(crate) fn finalize(stats: &mut ClusterStats, outcomes: Vec<ShardOutcome>, mo
         end_cycle = end_cycle.max(o.end_cycle);
         for ci in 0..NUM_CLASSES {
             stats.class_energy_mj[ci] += o.class_energy_mj[ci];
+            stats.class_reroutes[ci] += o.class_reroutes[ci];
+            stats.class_retries[ci] += o.class_retries[ci];
             stats.class_attr[ci].merge(&o.attr_class[ci]);
         }
+        stats.outage_slo_met += o.outage_slo_met;
+        stats.token_wait_cycles += o.token_wait_cycles;
         stats.serve.attr.merge(&o.attr_run);
         for (&batch, &n) in &o.dispatch_hist {
             stats.serve.record_dispatches(batch, n);
@@ -332,6 +428,10 @@ mod tests {
             cache_misses: 0,
             attr_run: PhaseTotals::default(),
             attr_class: [PhaseTotals::default(); NUM_CLASSES],
+            class_retries: [0; NUM_CLASSES],
+            class_reroutes: [0; NUM_CLASSES],
+            outage_slo_met: 0,
+            token_wait_cycles: 0.0,
             log: crate::telemetry::SpanLog::default(),
         }
     }
@@ -395,7 +495,35 @@ mod tests {
         assert!(j.contains("\"steals\": 0"), "sync counters are part of the gated JSON");
         assert!(j.contains("\"epochs\": 0"));
         assert!(j.contains("\"energy_mj\": "));
+        assert!(j.contains("\"failed\": 0"), "fault counters are part of the gated JSON");
+        assert!(j.contains("\"shed_overload\": 0"));
+        assert!(j.contains("\"retries\": 0"));
+        assert!(j.contains("\"reroutes\": 0"));
+        assert!(j.contains("\"tail_amplification\": "));
+        assert!(j.contains("\"failover_goodput_rps\": 0"));
+        assert!(j.contains("\"dead_shard_drain_ms\": 0"));
         assert!(!j.contains(",\n  ]"), "no trailing comma before array close");
+    }
+
+    #[test]
+    fn zero_completion_json_has_no_null_or_nan_fields() {
+        // A run that completes nothing (everything shed, or an empty
+        // workload) must still emit well-formed numbers: percentiles,
+        // fractions and goodput are pinned to 0, never null/NaN.
+        let mut stats = ClusterStats::new(1);
+        finalize(&mut stats, vec![empty_outcome(0.0)], &PowerModel::default());
+        let j = stats.to_json();
+        assert!(!j.contains("null"), "zero-completion JSON leaked a null:\n{j}");
+        assert!(!j.contains("NaN"), "zero-completion JSON leaked a NaN:\n{j}");
+        assert!(j.contains("\"p50_ms\": 0,"));
+        assert!(j.contains("\"p99_ms\": 0,"));
+        assert!(j.contains("\"tail_amplification\": 0,"));
+        assert!(j.contains("\"goodput_rps\": 0,"));
+        assert!(j.contains("\"queue_frac\": 0,"));
+        assert!(j.contains("\"dist_frac\": 0,"));
+        assert_eq!(stats.tail_amplification(), 0.0);
+        assert_eq!(stats.failover_goodput_rps(), 0.0);
+        assert_eq!(stats.dead_shard_drain_ms(), 0.0);
     }
 
     #[test]

@@ -84,6 +84,7 @@ pub use merge::ClusterStats;
 pub use sync::{SyncConfig, TraceEvent};
 
 use crate::cost::par;
+use crate::fault::{ContentionConfig, FaultPlan, RetryPolicy};
 use crate::power::PowerConfig;
 use crate::serve::{BatcherConfig, PackageSpec, RoutePolicy, Source};
 
@@ -131,6 +132,17 @@ pub struct ClusterConfig {
     /// span retention costs memory proportional to the request count.
     /// Enabled output is still bit-identical at any thread count.
     pub telemetry: crate::telemetry::TelemetryConfig,
+    /// Seeded chaos scenario (`wienna::fault`): package deaths,
+    /// degradations, shard stalls and contention spikes at fixed cycles.
+    /// Empty by default — with no plan the engine's arithmetic is
+    /// untouched bit for bit.
+    pub faults: FaultPlan,
+    /// Shared-medium MAC contention model (`wienna::fault`). Disabled by
+    /// default for the same byte-compatibility reason.
+    pub contention: ContentionConfig,
+    /// Retry/backoff policy for dispatches that die under a package
+    /// death. Only consulted when a fault plan is active.
+    pub retry: RetryPolicy,
 }
 
 impl Default for ClusterConfig {
@@ -148,6 +160,9 @@ impl Default for ClusterConfig {
             calibrated_eta: false,
             class_seed: 0xC1A5,
             telemetry: crate::telemetry::TelemetryConfig::default(),
+            faults: FaultPlan::default(),
+            contention: ContentionConfig::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -240,13 +255,18 @@ mod tests {
         let stats = run(4, 2, 20_000.0); // overload → sheds
         assert_eq!(
             stats.serve.arrived(),
-            stats.serve.completed() + stats.serve.shed(),
-            "arrived = completed + shed after a drained run"
+            stats.serve.completed() + stats.serve.shed() + stats.serve.failed(),
+            "arrived = completed + shed + failed after a drained run"
         );
-        assert_eq!(stats.shed_queue_full + stats.shed_deadline, stats.serve.shed());
+        assert_eq!(
+            stats.shed_queue_full + stats.shed_deadline + stats.shed_overload,
+            stats.serve.shed()
+        );
+        assert_eq!(stats.serve.failed(), 0, "no faults injected, nothing may fail");
         let by_class_arrived: u64 = stats.per_class.values().map(|m| m.arrived).sum();
         assert_eq!(by_class_arrived, stats.serve.arrived());
-        let by_class_done: u64 = stats.per_class.values().map(|m| m.completed + m.shed).sum();
+        let by_class_done: u64 =
+            stats.per_class.values().map(|m| m.completed + m.shed + m.failed).sum();
         assert_eq!(by_class_done, stats.serve.arrived());
     }
 

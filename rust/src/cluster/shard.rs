@@ -33,10 +33,12 @@
 use super::admission::{batching_gain, ShedReason};
 use super::class::{TrafficClass, NUM_CLASSES};
 use super::ClusterConfig;
+use crate::fault::ShardFaults;
+use crate::nop::mac::token_wait_cycles;
 use crate::power::DvfsLevel;
 use crate::serve::{choose_batch, CostCache, ModelKind, Package, PackageSpec, QueueSet, Request, RoutePolicy};
 use crate::telemetry::{PhaseBreakdown, PhaseTotals, PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// One ingress-classified request bound for a shard.
 #[derive(Debug, Clone)]
@@ -66,6 +68,11 @@ impl ClassedRequest {
 pub(crate) enum ShardEventOutcome {
     Completed,
     Shed(ShedReason),
+    /// The request's dispatch died under it (package death) and every
+    /// retry was exhausted — or it was stranded on dead hardware past all
+    /// repair windows. Terminal, observed by closed-loop clients exactly
+    /// like a completion.
+    Failed,
 }
 
 /// One emitted event, in shard-chronological order.
@@ -97,6 +104,17 @@ pub(crate) struct ShardOutcome {
     pub attr_run: PhaseTotals,
     /// Same, split per traffic class (`class.index()` order).
     pub attr_class: [PhaseTotals; NUM_CLASSES],
+    /// Retries scheduled per class (chaos layer; all-zero without faults).
+    pub class_retries: [u64; NUM_CLASSES],
+    /// Requests re-routed off a dead package per class.
+    pub class_reroutes: [u64; NUM_CLASSES],
+    /// Completions that met their SLO while a package-death outage window
+    /// was open anywhere in the plan — the numerator of the failover
+    /// goodput stat.
+    pub outage_slo_met: u64,
+    /// Cumulative shared-medium token-wait cycles this shard's dispatches
+    /// accrued (exactly 0.0 with contention disabled).
+    pub token_wait_cycles: f64,
     /// The shard's span log (empty unless `cfg.telemetry.enabled`); the
     /// merge absorbs these in shard-id order and stamps the shard field.
     pub log: SpanLog,
@@ -129,6 +147,26 @@ pub(crate) struct ShardSim<'a> {
     /// records it accumulates depend only on this shard's deterministic
     /// event stream, never on thread scheduling.
     recorder: Recorder,
+    /// This shard's slice of the seeded fault plan (empty by default —
+    /// every fault query short-circuits and the pre-fault arithmetic is
+    /// untouched bit for bit).
+    faults: ShardFaults,
+    /// Requests whose dispatch died under them, waiting out a backoff:
+    /// `(ready_cycle, seq, class, request)`. Fired in `(ready, seq)`
+    /// order — deterministic regardless of insertion interleaving.
+    retry_pending: Vec<(f64, u64, TrafficClass, Request)>,
+    retry_seq: u64,
+    /// Per-request retry attempt counts (lookup only — never iterated, so
+    /// hash order cannot leak into the event stream).
+    attempts: HashMap<u64, u32>,
+    /// Requests this shard received via steal/failover. Donor-side
+    /// hysteresis: `newest_queued` never offers them again, so a request
+    /// cannot bounce between shards on alternating barriers.
+    stolen_ids: HashSet<u64>,
+    class_retries: [u64; NUM_CLASSES],
+    class_reroutes: [u64; NUM_CLASSES],
+    outage_slo_met: u64,
+    token_wait: f64,
 }
 
 impl<'a> ShardSim<'a> {
@@ -152,7 +190,23 @@ impl<'a> ShardSim<'a> {
             attr_run: PhaseTotals::default(),
             attr_class: [PhaseTotals::default(); NUM_CLASSES],
             recorder: Recorder::new(cfg.telemetry.enabled),
+            faults: ShardFaults::empty(n),
+            retry_pending: Vec::new(),
+            retry_seq: 0,
+            attempts: HashMap::new(),
+            stolen_ids: HashSet::new(),
+            class_retries: [0; NUM_CLASSES],
+            class_reroutes: [0; NUM_CLASSES],
+            outage_slo_met: 0,
+            token_wait: 0.0,
         }
+    }
+
+    /// Arm this shard's slice of a seeded fault plan (see
+    /// [`crate::fault::FaultPlan::for_shard`]).
+    pub(crate) fn with_faults(mut self, faults: ShardFaults) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Memoized batch-1 service estimate of `kind` on package `i`.
@@ -177,9 +231,12 @@ impl<'a> ShardSim<'a> {
         (0..self.packages.len()).map(|i| self.queued_total(i)).sum()
     }
 
-    /// Whether the shard holds no queued and no in-flight work.
+    /// Whether the shard holds no queued, in-flight, or retry-pending
+    /// work.
     pub(crate) fn is_drained(&self) -> bool {
-        self.packages.iter().all(|p| p.is_idle()) && self.queued_total_all() == 0
+        self.packages.iter().all(|p| p.is_idle())
+            && self.queued_total_all() == 0
+            && self.retry_pending.is_empty()
     }
 
     /// Earliest pending in-flight completion, if any batch is running.
@@ -205,21 +262,29 @@ impl<'a> ShardSim<'a> {
         (0..self.packages.len()).map(|i| self.load(i, at)).sum()
     }
 
-    /// The `(package, class, kind)` of the newest-admitted queued request
-    /// on this shard — the steal candidate (newest-first stealing keeps
-    /// FIFO order intact for everything that stays behind).
+    /// The `(package, class, kind)` of the steal candidate: the
+    /// newest-admitted queued request of the **lowest** queued class
+    /// (class-aware stealing moves best-effort work first — migrating a
+    /// deadline-critical interactive request is a last resort), skipping
+    /// requests this shard itself received via a steal (donor-side
+    /// hysteresis: once moved, a request never moves again, so it cannot
+    /// bounce between shards on alternating barriers). Newest-first keeps
+    /// FIFO order intact for everything that stays behind.
     fn newest_queued(&self) -> Option<(usize, usize, ModelKind)> {
-        let mut best: Option<(u64, usize, usize, ModelKind)> = None;
-        for i in 0..self.queues.len() {
-            for ci in 0..NUM_CLASSES {
+        for ci in (0..NUM_CLASSES).rev() {
+            let mut best: Option<(u64, usize, ModelKind)> = None;
+            for i in 0..self.queues.len() {
                 if let Some(r) = self.queues[i][ci].peek_newest() {
-                    if best.map_or(true, |(id, ..)| r.id > id) {
-                        best = Some((r.id, i, ci, r.kind));
+                    if !self.stolen_ids.contains(&r.id) && best.map_or(true, |(id, ..)| r.id > id) {
+                        best = Some((r.id, i, r.kind));
                     }
                 }
             }
+            if let Some((_, i, k)) = best {
+                return Some((i, ci, k));
+            }
         }
-        best.map(|(_, i, ci, k)| (i, ci, k))
+        None
     }
 
     /// Batch-1 service estimate of the current steal candidate (`None`
@@ -317,6 +382,29 @@ impl<'a> ShardSim<'a> {
         }
     }
 
+    /// Fault-aware routing wrapper: the policy's pick, unless that
+    /// package is currently dead — then the least-loaded live package
+    /// (deterministic scan, lowest index wins ties). With every package
+    /// dead the policy's pick stands: the request queues on dead hardware
+    /// and either a repair edge, the barrier failover pass, or terminal
+    /// stranding handles it. With no fault plan this is exactly `route`.
+    fn route_target(&mut self, now: f64, kind: ModelKind, class: TrafficClass) -> usize {
+        let idx = self.route(now, kind, class);
+        if self.faults.is_empty() || !self.faults.package_dead(idx, now) {
+            return idx;
+        }
+        let mut best: Option<usize> = None;
+        for i in 0..self.packages.len() {
+            if self.faults.package_dead(i, now) {
+                continue;
+            }
+            if best.map_or(true, |b| self.load(i, now) < self.load(b, now)) {
+                best = Some(i);
+            }
+        }
+        best.unwrap_or(idx)
+    }
+
     /// Enqueue one request on package `idx` without admission control
     /// (already-admitted work: the `Ok` path of [`ShardSim::admit`], and
     /// stolen requests re-homed at an epoch barrier).
@@ -331,8 +419,34 @@ impl<'a> ShardSim<'a> {
     /// Route one arrival, apply admission control, enqueue or shed, and
     /// run the preemption check.
     fn admit(&mut self, now: f64, req: Request, class: TrafficClass) {
+        // Graceful degradation under sustained shared-medium contention:
+        // shed arriving best-effort work before the token-wait stretch
+        // inflates every class's tail.
+        if self.cfg.contention.enabled && class == TrafficClass::BestEffort {
+            let load = self.cfg.contention.effective_load(self.faults.spike_extra(now));
+            if self.cfg.contention.sheds_best_effort(load) {
+                if let Some(log) = self.recorder.log_mut() {
+                    log.sheds.push(ShedSpan {
+                        id: req.id,
+                        kind: req.kind,
+                        class: Some(class),
+                        shard: 0,
+                        arrival: req.arrival,
+                        cycle: now,
+                        reason: ShedReason::Overload,
+                    });
+                }
+                self.events.push(ShardEvent {
+                    cycle: now,
+                    outcome: ShardEventOutcome::Shed(ShedReason::Overload),
+                    class,
+                    req,
+                });
+                return;
+            }
+        }
         let kind = req.kind;
-        let idx = self.route(now, kind, class);
+        let idx = self.route_target(now, kind, class);
         let eta = self.completion_eta(idx, class, kind, now);
         let depth = self.queued_total(idx);
         let deadline_shed =
@@ -377,7 +491,8 @@ impl<'a> ShardSim<'a> {
     /// queue cap may transiently overshoot, exactly like a preemption
     /// requeue.
     fn inject(&mut self, now: f64, req: Request, class: TrafficClass) {
-        let idx = self.route(now, req.kind, class);
+        self.stolen_ids.insert(req.id);
+        let idx = self.route_target(now, req.kind, class);
         self.enqueue(idx, req, class, now);
     }
 
@@ -489,6 +604,12 @@ impl<'a> ShardSim<'a> {
     /// then EDF across that class's model queues.
     fn try_dispatch(&mut self, i: usize, now: f64) {
         debug_assert!(self.packages[i].is_idle());
+        if !self.faults.is_empty() && (self.faults.stalled(now) || self.faults.package_dead(i, now)) {
+            // Dead packages serve nothing; a stalled shard's dispatcher is
+            // wedged (queues still accept arrivals). The next fault edge
+            // re-triggers dispatch.
+            return;
+        }
         for class in TrafficClass::ALL {
             let ci = class.index();
             if self.queues[i][ci].is_empty() {
@@ -498,7 +619,7 @@ impl<'a> ShardSim<'a> {
             let depth = self.queues[i][ci].depth(kind) as u64;
             let head_deadline =
                 self.queues[i][ci].head_deadline(kind).expect("EDF head has a deadline");
-            let decision = choose_batch(
+            let mut decision = choose_batch(
                 &self.cfg.batcher,
                 &mut self.cache,
                 &self.packages[i].engine,
@@ -509,6 +630,33 @@ impl<'a> ShardSim<'a> {
                 head_deadline,
                 self.packages[i].spec.local_buffer_bytes,
             );
+            if !self.faults.is_empty() {
+                // A degraded package runs the same work at a slower clock:
+                // latency and plane busy cycles stretch by 1/factor,
+                // dynamic energy (work, not time) is unchanged.
+                let factor = self.faults.degrade_factor(i, now);
+                if factor < 1.0 {
+                    let s = 1.0 / factor;
+                    decision.cost.latency *= s;
+                    decision.cost.dist_busy *= s;
+                    decision.cost.compute_busy *= s;
+                    decision.cost.collect_busy *= s;
+                }
+            }
+            if self.cfg.contention.enabled {
+                // Shared-medium contention: the distribution phase waits
+                // for the MAC token before it streams. The wait stretches
+                // both the batch latency and its dist busy cycles, so the
+                // meter and the five-phase attribution book it under
+                // `dist` automatically. Waiting burns no TX energy.
+                let load = self.cfg.contention.effective_load(self.faults.spike_extra(now));
+                let wait = token_wait_cycles(decision.cost.dist_busy, decision.cost.latency, load);
+                if wait > 0.0 {
+                    decision.cost.latency += wait;
+                    decision.cost.dist_busy += wait;
+                    self.token_wait += wait;
+                }
+            }
             let est1 = self.est1(i, kind);
             let level = self.governor_level(&decision.cost);
             let energy =
@@ -534,6 +682,9 @@ impl<'a> ShardSim<'a> {
         let (t, reqs) = self.packages[i].finish_batch();
         let batch = reqs.len();
         for req in reqs {
+            if !self.faults.is_empty() && self.faults.in_outage(t) && t <= req.deadline {
+                self.outage_slo_met += 1;
+            }
             if let Some((dispatched, cost)) = span {
                 let phases = PhaseBreakdown::attribute(req.arrival, dispatched, t, &cost);
                 self.attr_run.record(&phases);
@@ -558,13 +709,193 @@ impl<'a> ShardSim<'a> {
         }
     }
 
+    /// Record one retry attempt for `req` at cycle `t`: schedule it into
+    /// `retry_pending` behind a capped exponential backoff, or — past the
+    /// attempt cap — fail it terminally.
+    fn schedule_retry(&mut self, t: f64, req: Request, class: TrafficClass) {
+        let attempts = self.attempts.entry(req.id).or_insert(0);
+        *attempts += 1;
+        let attempt = *attempts;
+        if attempt > self.cfg.retry.max_retries {
+            self.fail(t, req, class);
+            return;
+        }
+        self.class_retries[class.index()] += 1;
+        let ready = t + self.cfg.retry.backoff_cycles(attempt);
+        self.retry_seq += 1;
+        self.retry_pending.push((ready, self.retry_seq, class, req));
+    }
+
+    /// Emit a terminal failure event (retries exhausted or stranded).
+    fn fail(&mut self, t: f64, req: Request, class: TrafficClass) {
+        self.events.push(ShardEvent { cycle: t, outcome: ShardEventOutcome::Failed, class, req });
+    }
+
+    /// Earliest pending retry-ready cycle, if any.
+    fn next_retry_at(&self) -> Option<f64> {
+        self.retry_pending
+            .iter()
+            .map(|&(ready, ..)| ready)
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.min(t))))
+    }
+
+    /// Fire the earliest pending retry (ties by scheduling sequence): if
+    /// any package is live it is re-routed and enqueued (admission is
+    /// skipped — the request was admitted once already); with every
+    /// package dead it backs off again, eventually failing at the cap.
+    fn fire_retry(&mut self) {
+        debug_assert!(!self.retry_pending.is_empty());
+        let mut best = 0;
+        for j in 1..self.retry_pending.len() {
+            let (tj, sj) = (self.retry_pending[j].0, self.retry_pending[j].1);
+            let (tb, sb) = (self.retry_pending[best].0, self.retry_pending[best].1);
+            if tj < tb || (tj == tb && sj < sb) {
+                best = j;
+            }
+        }
+        let (_, _, class, req) = self.retry_pending.swap_remove(best);
+        let t = self.now;
+        let any_live = (0..self.packages.len()).any(|p| !self.faults.package_dead(p, t));
+        if !any_live {
+            self.schedule_retry(t, req, class);
+            return;
+        }
+        let idx = self.route_target(t, req.kind, class);
+        self.enqueue(idx, req, class, t);
+    }
+
+    /// Apply every fault state flip at cycle `t`: abort in-flight batches
+    /// on packages that are now dead (their requests enter the retry
+    /// path), and re-route work queued on dead packages to survivors
+    /// (counted per class). Repair edges need no action — the dispatch
+    /// loop picks the package back up on the next iteration.
+    fn apply_fault_edges(&mut self, t: f64) {
+        for i in 0..self.packages.len() {
+            if !self.faults.package_dead(i, t) {
+                continue;
+            }
+            if !self.packages[i].is_idle() {
+                let class =
+                    self.inflight_class[i].take().expect("in-flight batch has a class");
+                let (reqs, rolled_mj) = self.packages[i].preempt_batch(t);
+                self.class_energy_mj[class.index()] -= rolled_mj;
+                for req in reqs {
+                    self.schedule_retry(t, req, class);
+                }
+            }
+            if self.queued_total(i) > 0 {
+                let live_exists =
+                    (0..self.packages.len()).any(|p| p != i && !self.faults.package_dead(p, t));
+                if live_exists {
+                    for ci in 0..NUM_CLASSES {
+                        let moved = self.drain_package_class(i, ci);
+                        self.class_reroutes[ci] += moved.len() as u64;
+                        for req in moved {
+                            let idx = self.route_target(t, req.kind, TrafficClass::ALL[ci]);
+                            self.enqueue(idx, req, TrafficClass::ALL[ci], t);
+                        }
+                    }
+                }
+                // With no survivor the work stays parked: a repair edge,
+                // the barrier failover pass, or terminal stranding will
+                // move it.
+            }
+        }
+    }
+
+    /// Pop every request queued under `(package, class)` in deterministic
+    /// EDF-head order, zeroing that backlog slot.
+    fn drain_package_class(&mut self, i: usize, ci: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(kind) = self.queues[i][ci].edf_kind() {
+            let depth = self.queues[i][ci].depth(kind) as usize;
+            out.extend(self.queues[i][ci].pop_batch(kind, depth));
+        }
+        self.backlog[i][ci] = 0.0;
+        out
+    }
+
+    /// Take every queued request off this shard (the barrier failover
+    /// pass for a fully dead shard): FIFO per model queue, package-major
+    /// then class-major order, backlogs zeroed. Deliberately bypasses the
+    /// steal-candidate hysteresis — a dead shard serves nothing, so
+    /// everything must move.
+    pub(crate) fn drain_all_queued(&mut self) -> Vec<(Request, TrafficClass)> {
+        let mut out = Vec::new();
+        for i in 0..self.packages.len() {
+            for ci in 0..NUM_CLASSES {
+                for req in self.drain_package_class(i, ci) {
+                    out.push((req, TrafficClass::ALL[ci]));
+                }
+            }
+        }
+        out
+    }
+
+    /// Whether every package of this shard is dead at `t` (the barrier's
+    /// failover trigger).
+    pub(crate) fn fully_dead_at(&self, t: f64) -> bool {
+        self.faults.fully_dead(t)
+    }
+
+    /// Earliest future cycle at which this shard can act without a new
+    /// arrival or an in-flight completion: the next pending retry, or —
+    /// when queued work sits wedged behind a fault window — the next
+    /// fault edge (package repair, stall end). `None` when nothing
+    /// shard-internal is scheduled; the epoch loop's drain check and
+    /// window-skip jump both consult this so fault runs neither stop
+    /// early nor leap over a wakeup.
+    pub(crate) fn next_wakeup(&self) -> Option<f64> {
+        let mut t = self.next_retry_at();
+        if !self.faults.is_empty() && self.queued_total_all() > 0 {
+            t = match (t, self.faults.next_edge_after(self.now)) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, None) => a,
+                (None, b) => b,
+            };
+        }
+        t
+    }
+
+    /// Work invisible to the arrival/completion scans that will still
+    /// fire later (see [`Self::next_wakeup`]).
+    pub(crate) fn has_future_work(&self) -> bool {
+        self.next_wakeup().is_some()
+    }
+
+    /// Batch-1 service estimate of `kind` on this shard's first package —
+    /// the barrier's load-update unit when failover hands a dead shard's
+    /// request to this (victim) shard.
+    pub(crate) fn estimate_service1(&mut self, kind: ModelKind) -> f64 {
+        self.est1(0, kind)
+    }
+
+    /// Terminal cleanup after the epoch loop: work still queued here can
+    /// never run (its hardware is dead or stalled past every repair
+    /// edge). Emit a `Failed` event for each so the run drains and the
+    /// conservation property (`arrived == completed + shed + failed`)
+    /// holds. Returns the emitted events for one final fold.
+    pub(crate) fn fail_stranded(&mut self) -> Vec<ShardEvent> {
+        let t = self.now;
+        for (req, class) in self.drain_all_queued() {
+            self.fail(t, req, class);
+        }
+        let mut pending = std::mem::take(&mut self.retry_pending);
+        pending.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (_, _, class, req) in pending {
+            self.fail(t, req, class);
+        }
+        std::mem::take(&mut self.events)
+    }
+
     /// Run one epoch: admit `arrivals` (ascending `ready_at`, all below
-    /// `end`) in slice order interleaved with completions, processing
-    /// every event with cycle strictly below `end`; a completion landing
-    /// on or past `end` stays in flight for a later epoch. Returns the
-    /// events emitted this epoch, chronological within the shard. The
-    /// shard's clock, queues and accounting persist across calls; an
-    /// `end` of `f64::INFINITY` drains the shard completely.
+    /// `end`) in slice order interleaved with completions, retry firings
+    /// and fault edges, processing every event with cycle strictly below
+    /// `end`; a completion landing on or past `end` stays in flight for a
+    /// later epoch. Returns the events emitted this epoch, chronological
+    /// within the shard. The shard's clock, queues and accounting persist
+    /// across calls; an `end` of `f64::INFINITY` drains the shard
+    /// completely (fault edges and backoffs included).
     pub(crate) fn step(&mut self, arrivals: &[ClassedRequest], end: f64) -> Vec<ShardEvent> {
         let mut cursor = 0usize;
         loop {
@@ -583,28 +914,52 @@ impl<'a> ShardSim<'a> {
                     completing = i;
                 }
             }
+            // Fault edges and retry firings compete with arrivals and
+            // completions for the next event. Tie order at an equal
+            // cycle: fault edge first (the state must flip before
+            // anything else books work at that cycle), then retry, then
+            // arrival, then completion — preserving the pre-fault
+            // arrival-before-completion tie rule. Without a fault plan
+            // both candidates are infinite and the selection below is
+            // arithmetically identical to the pre-fault loop.
+            let t_edge = if self.faults.is_empty() {
+                f64::INFINITY
+            } else {
+                self.faults.next_edge_after(self.now).filter(|&t| t < end).unwrap_or(f64::INFINITY)
+            };
+            let t_retry =
+                self.next_retry_at().filter(|&t| t < end).unwrap_or(f64::INFINITY);
+            let t_arrival = next_arrival.unwrap_or(f64::INFINITY);
 
-            match next_arrival {
-                Some(t) if t <= next_completion => {
-                    // A `ready_at` in the shard's past (cross-shard
-                    // feedback or a stolen hand-off that landed inside an
-                    // already-simulated window) is admitted at the local
-                    // clock — the conservative-sync approximation, with
-                    // error bounded by one epoch.
-                    self.now = self.now.max(t);
-                    let a = arrivals[cursor].clone();
-                    cursor += 1;
-                    if a.stolen {
-                        self.inject(self.now, a.req, a.class);
-                    } else {
-                        self.admit(self.now, a.req, a.class);
-                    }
+            if t_edge.is_finite()
+                && t_edge <= t_retry
+                && t_edge <= t_arrival
+                && t_edge <= next_completion
+            {
+                self.now = self.now.max(t_edge);
+                self.apply_fault_edges(self.now);
+            } else if t_retry.is_finite() && t_retry <= t_arrival && t_retry <= next_completion {
+                self.now = self.now.max(t_retry);
+                self.fire_retry();
+            } else if t_arrival.is_finite() && t_arrival <= next_completion {
+                // A `ready_at` in the shard's past (cross-shard feedback
+                // or a stolen hand-off that landed inside an already-
+                // simulated window) is admitted at the local clock — the
+                // conservative-sync approximation, with error bounded by
+                // one epoch.
+                self.now = self.now.max(t_arrival);
+                let a = arrivals[cursor].clone();
+                cursor += 1;
+                if a.stolen {
+                    self.inject(self.now, a.req, a.class);
+                } else {
+                    self.admit(self.now, a.req, a.class);
                 }
-                _ if completing != usize::MAX && next_completion < end => {
-                    self.now = self.now.max(next_completion);
-                    self.complete(completing);
-                }
-                _ => break,
+            } else if completing != usize::MAX && next_completion < end {
+                self.now = self.now.max(next_completion);
+                self.complete(completing);
+            } else {
+                break;
             }
         }
         debug_assert_eq!(cursor, arrivals.len(), "every epoch arrival is below the window end");
@@ -627,6 +982,23 @@ impl<'a> ShardSim<'a> {
         self.packages.iter().map(|p| p.meter.inflight_w()).sum()
     }
 
+    /// Cumulative shared-medium token-wait cycles accrued so far (epoch
+    /// gauge; exactly 0.0 with contention disabled).
+    pub(crate) fn token_wait_cycles(&self) -> f64 {
+        self.token_wait
+    }
+
+    /// Total distribution-plane busy cycles across this shard's packages
+    /// so far (numerator of the epoch MAC-occupancy gauge).
+    pub(crate) fn dist_busy_cycles(&self) -> f64 {
+        self.packages.iter().map(|p| p.dist_busy_cycles).sum()
+    }
+
+    /// Packages on this shard (MAC-occupancy gauge denominator).
+    pub(crate) fn package_count(&self) -> usize {
+        self.packages.len()
+    }
+
     /// Tear the shard down into its final accounting (after the last
     /// epoch has drained it).
     pub(crate) fn finish(mut self) -> ShardOutcome {
@@ -641,6 +1013,10 @@ impl<'a> ShardSim<'a> {
             cache_misses: self.cache.misses,
             attr_run: self.attr_run,
             attr_class: self.attr_class,
+            class_retries: self.class_retries,
+            class_reroutes: self.class_reroutes,
+            outage_slo_met: self.outage_slo_met,
+            token_wait_cycles: self.token_wait,
             log: self.recorder.take_log(),
         }
     }
@@ -941,5 +1317,259 @@ mod tests {
         let completed_cal =
             cal_events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
         assert_eq!(completed_cal, backlog + 1);
+    }
+
+    /// Batch-1 latency of `TinyCnn` on the test package, in ms — fault
+    /// scenarios scale their timings off this so they survive cost-model
+    /// drift.
+    fn l1_ms() -> f64 {
+        let spec = PackageSpec::new("p0", DesignPoint::WIENNA_C);
+        let engine = crate::cost::CostEngine::for_design_point(&spec.sys, spec.dp);
+        let l1 = crate::serve::CostCache::new()
+            .get(&engine, spec.dp, ModelKind::TinyCnn, 1, spec.local_buffer_bytes)
+            .latency;
+        crate::serve::cycles_to_ms(l1)
+    }
+
+    fn two_packages() -> Vec<PackageSpec> {
+        vec![
+            PackageSpec::new("p0", DesignPoint::WIENNA_C),
+            PackageSpec::new("p1", DesignPoint::WIENNA_C),
+        ]
+    }
+
+    #[test]
+    fn package_death_reroutes_and_retries_to_the_survivor() {
+        // Two packages, round-robin, batch-1. Package 0 dies mid-batch:
+        // its in-flight request enters the retry path, its queued work is
+        // re-routed to package 1, and *everything still completes*.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            batcher: crate::serve::BatcherConfig { max_batch: 1, candidates: vec![1] },
+            policy: RoutePolicy::RoundRobin,
+            ..Default::default()
+        };
+        let kill_at = 0.5 * l1_ms();
+        let plan = crate::fault::FaultPlan::parse(&format!("kill:0@{kill_at}")).unwrap();
+        let arrivals: Vec<ClassedRequest> =
+            (0..8).map(|i| arrival(i, 0.0, 1e6, TrafficClass::Batch)).collect();
+        let mut sim = ShardSim::new(two_packages(), &cfg, None).with_faults(plan.for_shard(0, 1, 2));
+        let events = sim.step(&arrivals, f64::INFINITY);
+        let out = sim.finish();
+        let completed =
+            events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+        assert_eq!(completed, 8, "survivor absorbs the dead package's work");
+        let ci = TrafficClass::Batch.index();
+        assert!(out.class_retries[ci] >= 1, "the aborted in-flight request retried");
+        assert!(out.class_reroutes[ci] >= 1, "queued work moved off the dead package");
+        // Terminal dispositions are unique per id.
+        let mut ids: Vec<u64> = events.iter().map(|e| e.req.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 8);
+    }
+
+    #[test]
+    fn total_death_fails_retries_and_strands_the_queue() {
+        // A single package dies permanently mid-batch: the in-flight
+        // request exhausts its retries (no survivor) and fails; queued
+        // work is stranded and failed by the terminal cleanup. Per-class
+        // conservation holds: arrived == completed + failed.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            batcher: crate::serve::BatcherConfig { max_batch: 1, candidates: vec![1] },
+            ..Default::default()
+        };
+        let kill_at = 0.5 * l1_ms();
+        let plan = crate::fault::FaultPlan::parse(&format!("kill:0@{kill_at}")).unwrap();
+        let arrivals: Vec<ClassedRequest> =
+            (0..4).map(|i| arrival(i, 0.0, 1e6, TrafficClass::Interactive)).collect();
+        let mut sim = ShardSim::new(
+            vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)],
+            &cfg,
+            None,
+        )
+        .with_faults(plan.for_shard(0, 1, 1));
+        let mut events = sim.step(&arrivals, f64::INFINITY);
+        assert!(!sim.is_drained(), "stranded work holds the shard open");
+        events.extend(sim.fail_stranded());
+        let out = sim.finish();
+        let completed =
+            events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+        let failed = events.iter().filter(|e| e.outcome == ShardEventOutcome::Failed).count();
+        assert_eq!(completed, 0, "nothing can complete after a total permanent death");
+        assert_eq!(failed, 4, "every request fails terminally exactly once");
+        assert!(out.class_retries[TrafficClass::Interactive.index()] >= 1);
+        let mut ids: Vec<u64> = events.iter().map(|e| e.req.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "no id finalized twice");
+    }
+
+    #[test]
+    fn repair_window_releases_work_queued_on_a_dead_package() {
+        // kill 0 over [0.1, 0.5)*L1: an arrival landing inside the window
+        // queues on the dead package (no survivor exists) and is served
+        // right after the repair edge — the `has_future_work` contract.
+        let cfg = ClusterConfig { admission: super::super::AdmissionConfig::admit_all(), ..Default::default() };
+        let l1 = l1_ms();
+        let plan = crate::fault::FaultPlan::parse(&format!("kill:0@{}..{}", 0.1 * l1, 0.5 * l1))
+            .unwrap();
+        let faults = plan.for_shard(0, 1, 1);
+        let arrivals = vec![arrival(0, 0.2 * l1, 1e6, TrafficClass::Interactive)];
+        let mut sim = ShardSim::new(
+            vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)],
+            &cfg,
+            None,
+        )
+        .with_faults(faults);
+        let events = sim.step(&arrivals, f64::INFINITY);
+        let out = sim.finish();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].outcome, ShardEventOutcome::Completed);
+        let repair = ms_to_cycles(0.5 * l1);
+        assert!(
+            events[0].cycle >= repair,
+            "service cannot start before the repair edge: {} < {repair}",
+            events[0].cycle
+        );
+        assert_eq!(out.class_reroutes, [0; NUM_CLASSES], "no survivor, nothing re-routed");
+    }
+
+    #[test]
+    fn stall_window_wedges_the_dispatcher_but_not_the_queues() {
+        let cfg = ClusterConfig { admission: super::super::AdmissionConfig::admit_all(), ..Default::default() };
+        let l1 = l1_ms();
+        let stall_end = 3.0 * l1;
+        let plan =
+            crate::fault::FaultPlan::parse(&format!("stall:0@0..{stall_end}")).unwrap();
+        let arrivals: Vec<ClassedRequest> =
+            (0..3).map(|i| arrival(i, 0.1 * l1 * i as f64, 1e6, TrafficClass::Batch)).collect();
+        let (events, _) = {
+            let mut sim = ShardSim::new(
+                vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)],
+                &cfg,
+                None,
+            )
+            .with_faults(plan.for_shard(0, 1, 1));
+            let ev = sim.step(&arrivals, f64::INFINITY);
+            (ev, sim.finish())
+        };
+        assert_eq!(events.len(), 3, "stall delays, never drops");
+        let stall_end_cycles = ms_to_cycles(stall_end);
+        for e in &events {
+            assert_eq!(e.outcome, ShardEventOutcome::Completed);
+            assert!(e.cycle > stall_end_cycles, "nothing completes inside the stall window");
+        }
+    }
+
+    #[test]
+    fn contention_stretches_the_run_and_books_token_wait() {
+        let base = ClusterConfig { admission: super::super::AdmissionConfig::admit_all(), ..Default::default() };
+        let contended = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            contention: crate::fault::ContentionConfig::with_background(0.6),
+            ..Default::default()
+        };
+        let arrivals: Vec<ClassedRequest> =
+            (0..20).map(|i| arrival(i, 0.02 * i as f64, 1e6, TrafficClass::Batch)).collect();
+        let (_, out0) = outcome_of(&base, &arrivals);
+        let (events, outc) = outcome_of(&contended, &arrivals);
+        assert_eq!(out0.token_wait_cycles, 0.0, "disabled contention books zero wait");
+        assert!(outc.token_wait_cycles > 0.0);
+        assert!(
+            outc.end_cycle > out0.end_cycle,
+            "token waits must stretch the run: {} <= {}",
+            outc.end_cycle,
+            out0.end_cycle
+        );
+        assert_eq!(
+            events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count(),
+            20,
+            "contention slows, never drops"
+        );
+        // The stretch lands in the dist phase (the attribution satellite).
+        let f0 = out0.attr_run.fractions();
+        let fc = outc.attr_run.fractions();
+        assert!(fc[1] > f0[1], "dist fraction must grow under contention: {fc:?} vs {f0:?}");
+    }
+
+    #[test]
+    fn sustained_contention_sheds_best_effort_first() {
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            contention: crate::fault::ContentionConfig {
+                enabled: true,
+                background_load: 0.5,
+                shed_best_effort_above: 0.9,
+            },
+            ..Default::default()
+        };
+        // A spike window pushes effective load to 1.0 >= 0.9 over [0, 5ms).
+        let plan = crate::fault::FaultPlan::parse("spike:0.5@0..5").unwrap();
+        let mut arrivals = vec![
+            arrival(0, 0.01, 1e6, TrafficClass::Interactive),
+            arrival(1, 0.02, 1e6, TrafficClass::BestEffort),
+            arrival(2, 0.03, 1e6, TrafficClass::Batch),
+        ];
+        arrivals.push(arrival(3, 0.04, 1e6, TrafficClass::BestEffort));
+        let mut sim = ShardSim::new(
+            vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)],
+            &cfg,
+            None,
+        )
+        .with_faults(plan.for_shard(0, 1, 1));
+        let events = sim.step(&arrivals, f64::INFINITY);
+        sim.finish();
+        let shed: Vec<u64> = events
+            .iter()
+            .filter(|e| e.outcome == ShardEventOutcome::Shed(ShedReason::Overload))
+            .map(|e| e.req.id)
+            .collect();
+        assert_eq!(shed, vec![1, 3], "exactly the best-effort arrivals are shed");
+        let completed =
+            events.iter().filter(|e| e.outcome == ShardEventOutcome::Completed).count();
+        assert_eq!(completed, 2, "higher classes ride through the spike");
+    }
+
+    #[test]
+    fn steal_candidates_prefer_best_effort_and_skip_stolen_work() {
+        // Batch-1 batcher: id 0 goes in flight, ids 1 (best-effort) and 2
+        // (batch, newer) stay queued. Class-aware stealing must offer the
+        // best-effort request even though the batch one is newer.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            batcher: crate::serve::BatcherConfig { max_batch: 1, candidates: vec![1] },
+            ..Default::default()
+        };
+        let mut sim = ShardSim::new(
+            vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)],
+            &cfg,
+            None,
+        );
+        let arrivals = vec![
+            arrival(0, 0.0, 1000.0, TrafficClass::Interactive),
+            arrival(1, 0.0, 1000.0, TrafficClass::BestEffort),
+            arrival(2, 0.0, 1000.0, TrafficClass::Batch),
+        ];
+        sim.step(&arrivals, 1.0);
+        let (req, class) = sim.steal_newest().expect("candidate exists");
+        assert_eq!((req.id, class), (1, TrafficClass::BestEffort), "lowest class moves first");
+
+        // Hysteresis: a shard holding only *stolen* queued work offers no
+        // steal candidate — once moved, a request never moves again.
+        let mut victim = ShardSim::new(
+            vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)],
+            &cfg,
+            None,
+        );
+        let fresh = arrival(7, 0.0, 1000.0, TrafficClass::Batch);
+        let mut handed = arrival(9, 0.0, 1000.0, TrafficClass::Batch);
+        handed.stolen = true;
+        victim.step(&[fresh, handed], 1.0);
+        assert_eq!(victim.queued_total_all(), 1, "stolen hand-off queued behind the dispatch");
+        assert!(victim.steal_cost().is_none(), "stolen work is never re-offered");
+        victim.step(&[], f64::INFINITY);
+        victim.finish();
     }
 }

@@ -57,7 +57,7 @@ use super::shard::{ClassedRequest, ShardSim};
 use super::{Cluster, ClusterStats, TrafficClass, NUM_CLASSES};
 use crate::cost::par;
 use crate::serve::{ms_to_cycles, Request, Source};
-use crate::telemetry::EpochSample;
+use crate::telemetry::{EpochSample, FlowRecord};
 use std::sync::Mutex;
 
 /// Epoch-synchronization knobs (`ClusterConfig::sync`).
@@ -158,11 +158,23 @@ pub(crate) fn run_sync(
     let sims: Vec<Mutex<ShardSim>> = cluster
         .specs_by_shard
         .iter()
-        .map(|specs| {
+        .enumerate()
+        .map(|(s, specs)| {
             let cap = cfg.power.shard_cap(specs.len(), total_packages);
-            Mutex::new(ShardSim::new(specs.clone(), cfg, cap))
+            // Each shard gets its slice of the fault plan (global package
+            // ids map round-robin onto shards, mirroring placement); an
+            // empty plan yields an all-empty `ShardFaults` and the
+            // pre-fault arithmetic byte for byte.
+            let faults = cfg.faults.for_shard(s, shards, specs.len());
+            Mutex::new(ShardSim::new(specs.clone(), cfg, cap).with_faults(faults))
         })
         .collect();
+
+    // Time-to-drain accounting for fully dead shards: the first barrier
+    // at which each shard had no live package, and the first barrier at
+    // or after that at which it held no work.
+    let mut death_bar: Vec<Option<f64>> = vec![None; shards];
+    let mut drain_bar: Vec<Option<f64>> = vec![None; shards];
 
     // Requests stolen at the previous barrier, awaiting injection into
     // the next window (ready at its start).
@@ -215,9 +227,27 @@ pub(crate) fn run_sync(
             // ... then the stealing pass over the post-window queue state.
             pending = vec![Vec::new(); shards];
             if cfg.sync.steal {
-                stats.steals += steal_pass(&sims, end, &mut pending);
+                let mut flows = Vec::new();
+                stats.steals +=
+                    steal_pass(&sims, end, &mut pending, &mut stats.class_reroutes, &mut flows);
+                if let Some(t) = stats.telemetry.as_mut() {
+                    t.log.flows.extend(flows);
+                }
             }
             sample_epoch(&mut stats, &sims, end);
+            if !cfg.faults.is_empty() {
+                for s in 0..shards {
+                    let g = sims[s].lock().expect("shard mutex");
+                    if g.fully_dead_at(end) {
+                        if death_bar[s].is_none() {
+                            death_bar[s] = Some(end);
+                        }
+                        if drain_bar[s].is_none() && g.is_drained() {
+                            drain_bar[s] = Some(end);
+                        }
+                    }
+                }
+            }
 
             let have_stolen = pending.iter().any(|p| !p.is_empty());
             let next_arrival = source.next_arrival_at().filter(|&t| t <= horizon);
@@ -225,7 +255,42 @@ pub(crate) fn run_sync(
                 .iter()
                 .map(|m| m.lock().expect("shard mutex").next_completion())
                 .fold(None, min_opt);
-            if !have_stolen && next_arrival.is_none() && next_completion.is_none() {
+            // Shard-internal wakeups (pending retries, fault edges that
+            // unlock wedged queues) also count as progress the drain
+            // check must wait for.
+            let next_wakeup = sims
+                .iter()
+                .map(|m| m.lock().expect("shard mutex").next_wakeup())
+                .fold(None, min_opt);
+            if !have_stolen
+                && next_arrival.is_none()
+                && next_completion.is_none()
+                && next_wakeup.is_none()
+            {
+                // Nothing can make progress on its own again. Under fault
+                // injection, work may still be stranded on hardware that
+                // never repairs: fail it now (shard-id order) so the
+                // conservation property holds and closed-loop clients
+                // observe the errors — which may re-arm them, in which
+                // case the run continues.
+                if !cfg.faults.is_empty() {
+                    let stranded: Vec<_> = sims
+                        .iter()
+                        .map(|m| m.lock().expect("shard mutex").fail_stranded())
+                        .collect();
+                    if stranded.iter().any(|v| !v.is_empty()) {
+                        merge::fold_events(
+                            &mut stats,
+                            &stranded,
+                            |t, req| source.on_complete(t, req),
+                            trace.as_mut().map(|t| &mut **t),
+                        );
+                        start = end;
+                        if source.next_arrival_at().filter(|&t| t <= horizon).is_some() {
+                            continue;
+                        }
+                    }
+                }
                 break; // drained: no queued work can exist without an in-flight batch
             }
             start = end;
@@ -235,7 +300,7 @@ pub(crate) fn run_sync(
                 // in between, shard loads cannot change, so the skipped
                 // barriers' steal passes would all be no-ops (the pass
                 // runs to convergence).
-                if let Some(t) = min_opt(next_arrival, next_completion) {
+                if let Some(t) = min_opt(min_opt(next_arrival, next_completion), next_wakeup) {
                     if t >= start + window {
                         start = (t / window).floor() * window;
                     }
@@ -250,8 +315,41 @@ pub(crate) fn run_sync(
                 .map(|m| m.lock().expect("shard mutex").now())
                 .fold(0.0f64, f64::max);
             sample_epoch(&mut stats, &sims, last);
+            // The fast path runs open-loop only, so failing stranded
+            // work here cannot re-arm anything: one cleanup fold drains
+            // the shards for `finish()`.
+            if !cfg.faults.is_empty() {
+                let stranded: Vec<_> = sims
+                    .iter()
+                    .map(|m| m.lock().expect("shard mutex").fail_stranded())
+                    .collect();
+                merge::fold_events(
+                    &mut stats,
+                    &stranded,
+                    |t, req| source.on_complete(t, req),
+                    trace.as_mut().map(|t| &mut **t),
+                );
+            }
             break;
         }
+    }
+
+    if !cfg.faults.is_empty() {
+        // A shard that died and never emptied before the run ended
+        // drains at its final clock (stranded work failed just above).
+        for s in 0..shards {
+            if death_bar[s].is_some() && drain_bar[s].is_none() {
+                drain_bar[s] = Some(sims[s].lock().expect("shard mutex").now());
+            }
+        }
+        stats.dead_shard_drain_cycles = death_bar
+            .iter()
+            .zip(&drain_bar)
+            .filter_map(|(d, r)| match (d, r) {
+                (Some(d), Some(r)) => Some((r - d).max(0.0)),
+                _ => None,
+            })
+            .fold(0.0f64, f64::max);
     }
 
     let outcomes: Vec<_> = sims
@@ -259,6 +357,17 @@ pub(crate) fn run_sync(
         .map(|m| m.into_inner().expect("shard mutex").finish())
         .collect();
     merge::finalize(&mut stats, outcomes, &cfg.power.model);
+    if !cfg.faults.is_empty() {
+        // Failover-goodput denominator: cycles of the run overlapped by
+        // at least one package-death window of the plan.
+        let run_end = stats.serve.end_cycle();
+        stats.outage_cycles = cfg
+            .faults
+            .outage_intervals()
+            .iter()
+            .map(|&(s, e)| (e.min(run_end) - s.min(run_end)).max(0.0))
+            .sum();
+    }
     stats
 }
 
@@ -275,12 +384,26 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
     let mut queued = 0u64;
     let mut in_flight_batches = 0u64;
     let mut power_w = 0.0f64;
+    let mut dist_busy = 0.0f64;
+    let mut token_wait = 0.0f64;
+    let mut packages = 0usize;
     for sim in sims {
         let g = sim.lock().expect("shard mutex");
         queued += g.queued_total_all() as u64;
         in_flight_batches += g.inflight_batches();
         power_w += g.inflight_power_w();
+        dist_busy += g.dist_busy_cycles();
+        token_wait += g.token_wait_cycles();
+        packages += g.package_count();
     }
+    // Fleet-average occupancy of the shared wireless medium so far: the
+    // fraction of elapsed package-cycles spent driving the distribution
+    // plane. Climbs toward `nop::mac::MAC_SATURATION` under contention.
+    let mac_occupancy = if cycle > 0.0 && cycle.is_finite() && packages > 0 {
+        dist_busy / (cycle * packages as f64)
+    } else {
+        0.0
+    };
     let mut shed = [0u64; NUM_CLASSES];
     for c in TrafficClass::ALL {
         shed[c.index()] = stats.per_class.get(&c).map_or(0, |m| m.shed);
@@ -294,6 +417,8 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
         shed,
         steals: stats.steals,
         power_w,
+        mac_occupancy,
+        token_wait_cycles: token_wait,
     };
     stats.telemetry.as_mut().expect("checked above").metrics.epochs.push(sample);
 }
@@ -313,31 +438,89 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
 /// Stolen requests are appended to `pending[victim]` with
 /// `ready_at = bar`: the victim cannot serve work before the barrier
 /// that handed it over.
-fn steal_pass(sims: &[Mutex<ShardSim>], bar: f64, pending: &mut [Vec<ClassedRequest>]) -> u64 {
+///
+/// **Failover** rides the same pass: before ordinary rebalancing, every
+/// *fully dead* shard (no live package at `bar`) is drained entirely —
+/// hysteresis does not protect work on hardware that cannot serve it —
+/// to the least-loaded live shards, counted per class into `reroutes`.
+/// Dead shards are never picked as victims. Every cross-shard move
+/// (steal or failover) appends a [`FlowRecord`] so the Chrome trace can
+/// draw a flow arrow from donor enqueue to victim service.
+fn steal_pass(
+    sims: &[Mutex<ShardSim>],
+    bar: f64,
+    pending: &mut [Vec<ClassedRequest>],
+    reroutes: &mut [u64; NUM_CLASSES],
+    flows: &mut Vec<FlowRecord>,
+) -> u64 {
     if sims.len() < 2 {
         return 0;
     }
     let mut guards: Vec<_> =
         sims.iter().map(|m| m.lock().expect("shard mutex")).collect();
     let mut loads: Vec<f64> = guards.iter().map(|g| g.load_total(bar)).collect();
+
+    // Failover sub-pass, shard-id order. Skipped entirely unless some
+    // shard is fully dead *and* a live shard exists to take the work
+    // (with the whole fleet dead the queues stay stranded and fail at
+    // the drain check).
+    for donor in 0..guards.len() {
+        if !guards[donor].fully_dead_at(bar) {
+            continue;
+        }
+        if !(0..guards.len()).any(|v| v != donor && !guards[v].fully_dead_at(bar)) {
+            break;
+        }
+        let drained = guards[donor].drain_all_queued();
+        if drained.is_empty() {
+            continue;
+        }
+        loads[donor] = guards[donor].load_total(bar);
+        for (req, class) in drained {
+            // Victim: least-loaded live shard, ties -> lower id,
+            // re-picked per request as hand-offs pile load on.
+            let mut victim: Option<usize> = None;
+            for v in 0..guards.len() {
+                if v == donor || guards[v].fully_dead_at(bar) {
+                    continue;
+                }
+                if victim.map_or(true, |b| loads[v] < loads[b]) {
+                    victim = Some(v);
+                }
+            }
+            let victim = victim.expect("live shard existence checked above");
+            loads[victim] += guards[victim].estimate_service1(req.kind);
+            reroutes[class.index()] += 1;
+            flows.push(FlowRecord {
+                id: req.id,
+                class,
+                from_shard: donor,
+                to_shard: victim,
+                cycle: bar,
+            });
+            pending[victim].push(ClassedRequest { ready_at: bar, stolen: true, req, class });
+        }
+    }
+
     let mut moved = 0u64;
     let mut budget: usize = guards.iter().map(|g| g.queued_total_all()).sum();
     while budget > 0 {
         // Donor: most-loaded shard that still has queued (steal-able)
-        // work; victim: least-loaded shard overall. Ties -> lower id.
+        // work; victim: least-loaded *live* shard. Ties -> lower id.
         let mut donor: Option<usize> = None;
-        let mut victim = 0usize;
+        let mut victim: Option<usize> = None;
         for s in 0..guards.len() {
             if guards[s].queued_total_all() > 0
                 && donor.map_or(true, |d| loads[s] > loads[d])
             {
                 donor = Some(s);
             }
-            if loads[s] < loads[victim] {
-                victim = s;
+            if !guards[s].fully_dead_at(bar) && victim.map_or(true, |v: usize| loads[s] < loads[v])
+            {
+                victim = Some(s);
             }
         }
-        let Some(donor) = donor else { break };
+        let (Some(donor), Some(victim)) = (donor, victim) else { break };
         if donor == victim {
             break;
         }
@@ -348,6 +531,13 @@ fn steal_pass(sims: &[Mutex<ShardSim>], bar: f64, pending: &mut [Vec<ClassedRequ
         let (req, class) = guards[donor].steal_newest().expect("steal_cost saw a candidate");
         loads[donor] -= cost;
         loads[victim] += cost;
+        flows.push(FlowRecord {
+            id: req.id,
+            class,
+            from_shard: donor,
+            to_shard: victim,
+            cycle: bar,
+        });
         pending[victim].push(ClassedRequest { ready_at: bar, stolen: true, req, class });
         moved += 1;
         budget -= 1;

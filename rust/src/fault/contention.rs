@@ -1,0 +1,80 @@
+//! Shared-medium contention configuration.
+//!
+//! The wireless NoP is a broadcast medium: only one transmitter per
+//! package speaks at a time, arbitrated by the token-passing MAC
+//! (`nop::mac`). Co-packaged chiplet multicasts therefore *serialize*,
+//! and under background load every dispatch's distribution phase waits
+//! for the token before it can stream. [`ContentionConfig`] sets that
+//! background load; the closed-form token-wait delay itself lives in
+//! [`crate::nop::mac::token_wait_cycles`] and is applied by
+//! `cluster::shard` when it prices a dispatch, so the meter and the
+//! five-phase attribution pick the stretch up automatically (it lands in
+//! `dist_frac`).
+
+/// Shared-medium contention knobs. The default is fully disabled:
+/// `enabled == false` skips the stretch arithmetic entirely, keeping the
+/// no-contention cluster path bit-identical to the pre-fault engine.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionConfig {
+    /// Model MAC contention at all.
+    pub enabled: bool,
+    /// Steady background occupancy of the shared medium in `[0, 1)` —
+    /// the fraction of token time other (un-simulated) traffic holds.
+    /// `FaultKind::ContentionSpike` windows add on top of this.
+    pub background_load: f64,
+    /// Sustained effective load at or above which arriving best-effort
+    /// requests are shed (`ShedReason::Overload`) — graceful degradation
+    /// sheds the lowest class first instead of letting contention stretch
+    /// every class's tail.
+    pub shed_best_effort_above: f64,
+}
+
+impl Default for ContentionConfig {
+    fn default() -> Self {
+        ContentionConfig { enabled: false, background_load: 0.0, shed_best_effort_above: 0.9 }
+    }
+}
+
+impl ContentionConfig {
+    /// Enabled with the given steady background load.
+    pub fn with_background(background_load: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&background_load),
+            "background load {background_load} outside [0, 1)"
+        );
+        ContentionConfig { enabled: true, background_load, ..Default::default() }
+    }
+
+    /// Effective shared-medium load at dispatch time: the steady
+    /// background plus whatever contention-spike windows are active.
+    pub fn effective_load(&self, spike_extra: f64) -> f64 {
+        self.background_load + spike_extra
+    }
+
+    /// Does graceful degradation shed an arriving best-effort request at
+    /// this effective load?
+    pub fn sheds_best_effort(&self, effective_load: f64) -> bool {
+        self.enabled && effective_load >= self.shed_best_effort_above
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fully_disabled() {
+        let c = ContentionConfig::default();
+        assert!(!c.enabled);
+        assert_eq!(c.background_load, 0.0);
+        assert!(!c.sheds_best_effort(2.0), "disabled config never sheds");
+    }
+
+    #[test]
+    fn spikes_stack_on_background_and_trigger_shedding() {
+        let c = ContentionConfig::with_background(0.5);
+        assert_eq!(c.effective_load(0.0), 0.5);
+        assert!(!c.sheds_best_effort(c.effective_load(0.0)));
+        assert!(c.sheds_best_effort(c.effective_load(0.45)), "0.95 >= 0.9 threshold");
+    }
+}

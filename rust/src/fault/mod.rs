@@ -1,0 +1,34 @@
+//! Deterministic contention and failure injection for the serving stack.
+//!
+//! The paper's shared wireless medium and the cluster tier's scale both
+//! invite failure modes the simulator never exercised: chiplets degrade,
+//! packages die, shards stall, and concurrent multicasts on co-packaged
+//! chiplets contend for the token-passing MAC. This module is the
+//! chaos-engineering layer that injects all of them **deterministically**
+//! — every fault fires at a seeded cycle from a declarative plan, so the
+//! 1/2/4-thread stats-JSON byte-identity contract survives intact:
+//!
+//! * [`plan`] — the [`FaultPlan`]: a list of `[start, end)` fault windows
+//!   (package death, chiplet degradation, shard stall, contention spike)
+//!   parsed from the CLI `--faults` grammar, plus the per-shard
+//!   [`ShardFaults`] projection `ShardSim` queries on its hot path;
+//! * [`contention`] — [`ContentionConfig`]: the shared-medium background
+//!   load that stretches every dispatch's `dist` phase through the
+//!   closed-form token-wait model in [`crate::nop::mac`], and the
+//!   sustained-load threshold above which best-effort work is shed
+//!   (graceful degradation);
+//! * [`retry`] — [`RetryPolicy`]: capped exponential backoff for
+//!   requests whose dispatch died under them before they fail for good.
+//!
+//! Reaction paths live where the machinery already is: retries and
+//! re-routing inside `cluster::shard`, dead-shard failover riding the
+//! `cluster::sync::steal_pass` barrier, and closed-loop clients observing
+//! failures through the same completion-feedback hook as sheds.
+
+pub mod contention;
+pub mod plan;
+pub mod retry;
+
+pub use contention::ContentionConfig;
+pub use plan::{FaultEvent, FaultKind, FaultPlan, ShardFaults};
+pub use retry::RetryPolicy;

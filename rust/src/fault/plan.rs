@@ -1,0 +1,410 @@
+//! Seeded fault plans and their per-shard projection.
+//!
+//! A [`FaultPlan`] is a declarative list of fault windows over simulated
+//! time. Every window is half-open `[at, until)` in cycles: the fault is
+//! active at its start cycle and repaired at its end (an omitted end
+//! means permanent). Plans are pure data — applying them is the job of
+//! `cluster::shard` (dispatch skips, retries) and `cluster::sync`
+//! (failover, drain accounting) — so injection cannot introduce any
+//! cross-shard coupling beyond what the epoch barrier already carries.
+//!
+//! The CLI grammar (`wienna cluster --faults SPEC`) is a `;`-separated
+//! clause list with all times in milliseconds:
+//!
+//! ```text
+//! kill:<pkg>@<start>[..<end>]          package death (global index)
+//! degrade:<pkg>:<factor>@<start>[..<end>]   package runs at <factor> speed
+//! stall:<shard>@<start>[..<end>]       shard dispatches nothing
+//! spike:<extra>@<start>[..<end>]       extra shared-medium load
+//! ```
+//!
+//! e.g. `--faults "kill:1@4;spike:0.5@2..8"` kills package 1 permanently
+//! at 4 ms and adds 0.5 of background MAC load between 2 ms and 8 ms.
+
+use crate::anyhow::{bail, Context, Result};
+use crate::serve::ms_to_cycles;
+
+/// What a fault window does while active.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The package (global, pre-striping index) serves nothing: its
+    /// in-flight batch aborts, queued work re-routes or fails over.
+    PackageDeath { package: usize },
+    /// The package serves at `factor` (in `(0, 1]`) of nominal speed —
+    /// chiplet degradation stretching every batch it runs.
+    Degrade { package: usize, factor: f64 },
+    /// The shard dispatches nothing (arrivals still queue; admission
+    /// still applies) — a coordinator hang, not a hardware loss.
+    ShardStall { shard: usize },
+    /// Extra shared-medium background load (added to
+    /// `ContentionConfig::background_load`) while the window is active.
+    ContentionSpike { extra_load: f64 },
+}
+
+/// One fault window: `kind` is active over `[at_cycle, until_cycle)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_cycle: f64,
+    /// `f64::INFINITY` = never repaired.
+    pub until_cycle: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic chaos scenario: fault windows over simulated time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the CLI `--faults` grammar (times in milliseconds; see the
+    /// module docs for the clause list).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            events.push(parse_clause(clause).with_context(|| format!("fault clause '{clause}'"))?);
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Merged union of every package-death window — the cluster-wide
+    /// outage intervals "goodput during failover" is measured over.
+    pub fn outage_intervals(&self) -> Vec<(f64, f64)> {
+        let mut spans: Vec<(f64, f64)> = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::PackageDeath { .. }))
+            .map(|e| (e.at_cycle, e.until_cycle))
+            .collect();
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut merged: Vec<(f64, f64)> = Vec::new();
+        for (s, e) in spans {
+            match merged.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => merged.push((s, e)),
+            }
+        }
+        merged
+    }
+
+    /// Project the plan onto one shard of a `shards`-way cluster with
+    /// `local_packages` packages on that shard. Global package `g` lives
+    /// on shard `g % shards` at local index `g / shards` (the
+    /// `Cluster::new` round-robin placement). Faults naming packages or
+    /// shards outside the cluster are ignored — a plan written for a
+    /// bigger fleet still parses and applies where it can.
+    pub fn for_shard(&self, shard: usize, shards: usize, local_packages: usize) -> ShardFaults {
+        let mut f = ShardFaults::empty(local_packages);
+        for ev in &self.events {
+            let win = (ev.at_cycle, ev.until_cycle);
+            match ev.kind {
+                FaultKind::PackageDeath { package } => {
+                    if package % shards == shard && package / shards < local_packages {
+                        f.dead[package / shards].push(win);
+                    }
+                }
+                FaultKind::Degrade { package, factor } => {
+                    if package % shards == shard && package / shards < local_packages {
+                        f.degrade[package / shards].push((win.0, win.1, factor));
+                    }
+                }
+                FaultKind::ShardStall { shard: s } => {
+                    if s == shard {
+                        f.stalls.push(win);
+                    }
+                }
+                FaultKind::ContentionSpike { extra_load } => {
+                    f.spikes.push((win.0, win.1, extra_load));
+                }
+            }
+        }
+        f.outages = self.outage_intervals();
+        f.collect_edges();
+        f
+    }
+}
+
+fn parse_clause(clause: &str) -> Result<FaultEvent> {
+    let (head, window) =
+        clause.split_once('@').context("missing '@<start_ms>[..<end_ms>]' window")?;
+    let (at_cycle, until_cycle) = parse_window(window)?;
+    let mut parts = head.split(':');
+    let kind = match parts.next().unwrap_or("") {
+        "kill" => FaultKind::PackageDeath { package: parse_index(parts.next(), "package")? },
+        "degrade" => {
+            let package = parse_index(parts.next(), "package")?;
+            let factor: f64 =
+                parts.next().context("degrade needs ':<factor>'")?.parse().context("factor")?;
+            if !(factor > 0.0 && factor <= 1.0) {
+                bail!("degrade factor {factor} outside (0, 1]");
+            }
+            FaultKind::Degrade { package, factor }
+        }
+        "stall" => FaultKind::ShardStall { shard: parse_index(parts.next(), "shard")? },
+        "spike" => {
+            let extra_load: f64 =
+                parts.next().context("spike needs ':<extra_load>'")?.parse().context("extra load")?;
+            if !(extra_load >= 0.0 && extra_load.is_finite()) {
+                bail!("spike load {extra_load} must be finite and >= 0");
+            }
+            FaultKind::ContentionSpike { extra_load }
+        }
+        other => bail!("unknown fault kind '{other}' (kill|degrade|stall|spike)"),
+    };
+    if parts.next().is_some() {
+        bail!("trailing ':' fields");
+    }
+    Ok(FaultEvent { at_cycle, until_cycle, kind })
+}
+
+fn parse_index(part: Option<&str>, what: &str) -> Result<usize> {
+    part.with_context(|| format!("missing {what} index"))?
+        .parse()
+        .with_context(|| format!("{what} index"))
+}
+
+fn parse_window(window: &str) -> Result<(f64, f64)> {
+    let (start_ms, end_ms) = match window.split_once("..") {
+        Some((s, e)) => {
+            (s.parse::<f64>().context("start ms")?, e.parse::<f64>().context("end ms")?)
+        }
+        None => (window.parse::<f64>().context("start ms")?, f64::INFINITY),
+    };
+    if !(start_ms >= 0.0 && start_ms.is_finite()) {
+        bail!("start {start_ms} ms must be finite and >= 0");
+    }
+    if end_ms <= start_ms {
+        bail!("window end {end_ms} ms must be after start {start_ms} ms");
+    }
+    Ok((ms_to_cycles(start_ms), if end_ms.is_finite() { ms_to_cycles(end_ms) } else { f64::INFINITY }))
+}
+
+fn covering<'a, I: Iterator<Item = &'a (f64, f64)>>(spans: I, t: f64) -> Option<&'a (f64, f64)> {
+    spans.into_iter().find(|(s, e)| *s <= t && t < *e)
+}
+
+/// One shard's view of a [`FaultPlan`]: local-package fault windows plus
+/// the global spike/outage windows, pre-projected so the per-shard hot
+/// path answers every query with a scan over a handful of intervals and
+/// no knowledge of the rest of the cluster.
+#[derive(Debug, Clone, Default)]
+pub struct ShardFaults {
+    /// Per local package: `[start, end)` death windows.
+    dead: Vec<Vec<(f64, f64)>>,
+    /// Per local package: `(start, end, factor)` degradation windows.
+    degrade: Vec<Vec<(f64, f64, f64)>>,
+    /// Shard-wide dispatch stalls.
+    stalls: Vec<(f64, f64)>,
+    /// Cluster-wide `(start, end, extra_load)` contention spikes.
+    spikes: Vec<(f64, f64, f64)>,
+    /// Merged cluster-wide package-death windows (failover-goodput
+    /// accounting counts completions landing inside these).
+    outages: Vec<(f64, f64)>,
+    /// Sorted, deduplicated finite window edges relevant to this shard —
+    /// the cycles at which dispatch eligibility can change.
+    edges: Vec<f64>,
+}
+
+impl ShardFaults {
+    pub fn empty(local_packages: usize) -> Self {
+        ShardFaults {
+            dead: vec![Vec::new(); local_packages],
+            degrade: vec![Vec::new(); local_packages],
+            ..Default::default()
+        }
+    }
+
+    fn collect_edges(&mut self) {
+        let mut edges = Vec::new();
+        let mut push = |s: f64, e: f64| {
+            edges.push(s);
+            if e.is_finite() {
+                edges.push(e);
+            }
+        };
+        for spans in &self.dead {
+            spans.iter().for_each(|&(s, e)| push(s, e));
+        }
+        for spans in &self.degrade {
+            spans.iter().for_each(|&(s, e, _)| push(s, e));
+        }
+        self.stalls.iter().for_each(|&(s, e)| push(s, e));
+        self.spikes.iter().for_each(|&(s, e, _)| push(s, e));
+        edges.sort_by(|a, b| a.total_cmp(b));
+        edges.dedup();
+        self.edges = edges;
+    }
+
+    /// No fault ever affects this shard — spikes and cluster-wide outage
+    /// windows included (the latter drive failover-goodput accounting on
+    /// shards with no local fault of their own).
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+            && self.dead.iter().all(Vec::is_empty)
+            && self.degrade.iter().all(Vec::is_empty)
+            && self.stalls.is_empty()
+            && self.spikes.is_empty()
+            && self.outages.is_empty()
+    }
+
+    /// Next cycle strictly after `t` at which a fault window opens or
+    /// closes on this shard.
+    pub fn next_edge_after(&self, t: f64) -> Option<f64> {
+        let i = self.edges.partition_point(|&e| e <= t);
+        self.edges.get(i).copied()
+    }
+
+    /// Is local package `p` dead at cycle `t`?
+    pub fn package_dead(&self, p: usize, t: f64) -> bool {
+        covering(self.dead[p].iter(), t).is_some()
+    }
+
+    /// End of the death window covering `(p, t)`, if it is dead
+    /// (`f64::INFINITY` = never repaired).
+    pub fn dead_until(&self, p: usize, t: f64) -> Option<f64> {
+        covering(self.dead[p].iter(), t).map(|&(_, e)| e)
+    }
+
+    /// Speed factor of local package `p` at `t`: 1.0 healthy, the
+    /// minimum active degradation factor otherwise (overlapping windows
+    /// do not compound — the slowest one governs).
+    pub fn degrade_factor(&self, p: usize, t: f64) -> f64 {
+        self.degrade[p]
+            .iter()
+            .filter(|(s, e, _)| *s <= t && t < *e)
+            .map(|&(_, _, f)| f)
+            .fold(1.0, f64::min)
+    }
+
+    /// Is the whole shard's dispatcher stalled at `t`?
+    pub fn stalled(&self, t: f64) -> bool {
+        covering(self.stalls.iter(), t).is_some()
+    }
+
+    /// Extra shared-medium load from active contention spikes at `t`
+    /// (concurrent spikes sum).
+    pub fn spike_extra(&self, t: f64) -> f64 {
+        self.spikes.iter().filter(|(s, e, _)| *s <= t && t < *e).map(|&(_, _, x)| x).sum()
+    }
+
+    /// Is any package cluster-wide dead at `t` (the failover-goodput
+    /// measurement window)?
+    pub fn in_outage(&self, t: f64) -> bool {
+        covering(self.outages.iter(), t).is_some()
+    }
+
+    /// Is every local package of this shard dead at `t`? (`false` for a
+    /// shard with no packages — nothing to fail.)
+    pub fn fully_dead(&self, t: f64) -> bool {
+        !self.dead.is_empty() && (0..self.dead.len()).all(|p| self.package_dead(p, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_clause_kind() {
+        let plan = FaultPlan::parse("kill:1@4; degrade:0:0.5@1..3 ;stall:2@0..9;spike:0.5@2..8")
+            .expect("valid spec");
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(plan.events[0].kind, FaultKind::PackageDeath { package: 1 });
+        assert_eq!(plan.events[0].at_cycle, ms_to_cycles(4.0));
+        assert_eq!(plan.events[0].until_cycle, f64::INFINITY, "no end = permanent");
+        assert_eq!(plan.events[1].kind, FaultKind::Degrade { package: 0, factor: 0.5 });
+        assert_eq!(plan.events[1].until_cycle, ms_to_cycles(3.0));
+        assert_eq!(plan.events[2].kind, FaultKind::ShardStall { shard: 2 });
+        assert_eq!(plan.events[3].kind, FaultKind::ContentionSpike { extra_load: 0.5 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses() {
+        for bad in [
+            "kill:1",            // no window
+            "kill@4",            // no index
+            "kill:x@4",          // bad index
+            "degrade:0@1",       // no factor
+            "degrade:0:1.5@1",   // factor > 1
+            "degrade:0:0@1",     // factor 0
+            "spike:-0.5@1",      // negative load
+            "kill:1@5..3",       // end before start
+            "kill:1@-1",         // negative start
+            "kill:1:2:3@4",      // trailing fields
+            "explode:1@4",       // unknown kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        assert!(FaultPlan::parse("").expect("empty spec").is_empty());
+    }
+
+    #[test]
+    fn for_shard_maps_global_packages_by_round_robin_stripe() {
+        // 8 packages over 4 shards: global 1 and 5 both land on shard 1
+        // (locals 0 and 1); global 2 lands on shard 2.
+        let plan = FaultPlan::parse("kill:1@1;kill:5@2;degrade:2:0.5@0..9").unwrap();
+        let s1 = plan.for_shard(1, 4, 2);
+        assert!(s1.package_dead(0, ms_to_cycles(1.0)));
+        assert!(!s1.package_dead(0, ms_to_cycles(0.5)), "window has not opened yet");
+        assert!(s1.package_dead(1, ms_to_cycles(2.0)));
+        assert!(s1.fully_dead(ms_to_cycles(2.0)));
+        assert!(!s1.fully_dead(ms_to_cycles(1.5)), "only one of two packages dead");
+        let s2 = plan.for_shard(2, 4, 2);
+        assert!(!s2.package_dead(0, ms_to_cycles(3.0)));
+        assert_eq!(s2.degrade_factor(0, ms_to_cycles(3.0)), 0.5);
+        assert_eq!(s2.degrade_factor(0, ms_to_cycles(9.5)), 1.0, "repaired at 9 ms");
+        // Shard 0 sees no local faults but still knows the outages.
+        let s0 = plan.for_shard(0, 4, 2);
+        assert!(s0.in_outage(ms_to_cycles(3.0)));
+        assert!(!s0.is_empty(), "outage edge-free but spike/owner queries still live");
+    }
+
+    #[test]
+    fn edges_and_windows_are_half_open() {
+        let plan = FaultPlan::parse("stall:0@1..2;spike:0.25@1..4").unwrap();
+        let f = plan.for_shard(0, 1, 1);
+        assert!(f.stalled(ms_to_cycles(1.0)), "active at its start cycle");
+        assert!(!f.stalled(ms_to_cycles(2.0)), "repaired at its end cycle");
+        assert_eq!(f.spike_extra(ms_to_cycles(3.0)), 0.25);
+        assert_eq!(f.spike_extra(ms_to_cycles(4.0)), 0.0);
+        // Edges: 1, 2, 4 ms; strictly-after semantics.
+        assert_eq!(f.next_edge_after(0.0), Some(ms_to_cycles(1.0)));
+        assert_eq!(f.next_edge_after(ms_to_cycles(1.0)), Some(ms_to_cycles(2.0)));
+        assert_eq!(f.next_edge_after(ms_to_cycles(4.0)), None);
+    }
+
+    #[test]
+    fn outage_intervals_merge_overlaps() {
+        let plan = FaultPlan::parse("kill:0@1..4;kill:1@2..6;kill:2@8..9").unwrap();
+        assert_eq!(
+            plan.outage_intervals(),
+            vec![
+                (ms_to_cycles(1.0), ms_to_cycles(6.0)),
+                (ms_to_cycles(8.0), ms_to_cycles(9.0))
+            ]
+        );
+    }
+
+    #[test]
+    fn dead_until_reports_repair_and_permanence() {
+        let plan = FaultPlan::parse("kill:0@1..4;kill:1@2").unwrap();
+        let f = plan.for_shard(0, 2, 1);
+        assert_eq!(f.dead_until(0, ms_to_cycles(2.0)), Some(ms_to_cycles(4.0)));
+        assert_eq!(f.dead_until(0, ms_to_cycles(5.0)), None, "already repaired");
+        let g = plan.for_shard(1, 2, 1);
+        assert_eq!(g.dead_until(0, ms_to_cycles(3.0)), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn overlapping_degradations_take_the_slowest_factor() {
+        let plan = FaultPlan::parse("degrade:0:0.8@0..10;degrade:0:0.25@2..4").unwrap();
+        let f = plan.for_shard(0, 1, 1);
+        assert_eq!(f.degrade_factor(0, ms_to_cycles(1.0)), 0.8);
+        assert_eq!(f.degrade_factor(0, ms_to_cycles(3.0)), 0.25);
+        assert_eq!(f.degrade_factor(0, ms_to_cycles(5.0)), 0.8);
+    }
+}

@@ -1,0 +1,52 @@
+//! Capped exponential backoff for failed dispatches.
+//!
+//! When a package dies under a request's in-flight batch (or a retry
+//! lands on a shard whose packages are all dead), the request is not
+//! silently completed or dropped: it waits a deterministic backoff and
+//! tries again, up to a cap, after which it is **failed** — a terminal
+//! disposition the closed-loop clients observe like any completion.
+
+/// Retry knobs for requests whose dispatch died under them.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries before a request fails for good. 0 = fail immediately.
+    pub max_retries: u32,
+    /// Backoff before the first retry, in cycles.
+    pub base_backoff_cycles: f64,
+    /// Ceiling on the exponential backoff, in cycles.
+    pub max_backoff_cycles: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff_cycles: crate::serve::ms_to_cycles(0.1),
+            max_backoff_cycles: crate::serve::ms_to_cycles(1.0),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based): `base * 2^(attempt-1)`,
+    /// capped. Deterministic — no jitter, so the 1/2/4-thread byte
+    /// identity of the stats JSON is untouched.
+    pub fn backoff_cycles(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(52);
+        (self.base_backoff_cycles * (1u64 << exp) as f64).min(self.max_backoff_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let p = RetryPolicy { max_retries: 5, base_backoff_cycles: 10.0, max_backoff_cycles: 35.0 };
+        assert_eq!(p.backoff_cycles(1), 10.0);
+        assert_eq!(p.backoff_cycles(2), 20.0);
+        assert_eq!(p.backoff_cycles(3), 35.0, "capped below 40");
+        assert_eq!(p.backoff_cycles(100), 35.0, "huge attempts stay finite at the cap");
+    }
+}

@@ -44,6 +44,16 @@
 //!   fleet meeting a target SLO at a target load (`wienna search`) — or,
 //!   with `--pareto`, the full cost × energy/request × p99 non-dominated
 //!   front;
+//! * [`fault`] — deterministic chaos engineering over the cluster tier:
+//!   a seeded [`fault::FaultPlan`] (chiplet-package death, degraded
+//!   service, shard stalls, contention spikes, optional repair windows)
+//!   applied at exact cycles inside the shard event loop, a shared-medium
+//!   MAC contention model stretching the `dist` phase via closed-form
+//!   token-queueing delay (`nop::mac::token_wait_cycles`), and the
+//!   reaction machinery — capped-backoff retries, failover re-routing of
+//!   dead hardware's queues, best-effort-first graceful degradation —
+//!   all preserving bit-identical stats at any thread count
+//!   (`wienna cluster --faults --contention`);
 //! * [`power`] — runtime energy telemetry and power capping: a per-batch
 //!   energy meter driven by the cost model's traffic phases (Table-3
 //!   calibrated, with idle-chiplet power gating), a power-cap governor
@@ -95,6 +105,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod dataflow;
 pub mod energy;
+pub mod fault;
 pub mod nop;
 pub mod power;
 pub mod report;

@@ -11,7 +11,8 @@
 //! wienna cluster   [--packages N] [--shards N] [--threads N] [--mix ...] [--policy ...]
 //!                  [--load F | --rps R | --closed-loop N | --client-trace FILE]
 //!                  [--steal] [--epoch-cycles N] [--queue-cap N|none] [--no-shed-late]
-//!                  [--no-preempt] [--stats-json FILE] [--trace-out FILE] [--metrics-out FILE]
+//!                  [--no-preempt] [--faults SPEC] [--contention F]
+//!                  [--stats-json FILE] [--trace-out FILE] [--metrics-out FILE]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -65,8 +66,14 @@ cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|
               --closed-loop N (N closed-loop clients instead of the Poisson source; drains fully,
               ignores --load/--rps/--duration-ms)  --think-ms MS  --requests-per-client N
               --client-trace FILE (closed-loop replay of recorded per-client timestamps)
-              --steal (epoch-barrier cross-shard work stealing)
+              --steal (epoch-barrier cross-shard work stealing; also enables failover re-routing
+              of a dead shard's queue to survivors under --faults)
               --epoch-cycles N (sync window width; feedback + stealing cross shards at its edges)
+              --faults SPEC (seeded chaos plan, ';'-separated, times in ms, '..END' optional:
+              kill:PKG@T[..T2]  degrade:PKG:FACTOR@T[..T2]  stall:SHARD@T[..T2]  spike:LOAD@T[..T2];
+              deterministic — stats stay byte-identical at any --threads)
+              --contention F (shared-medium MAC background load in [0,1): stretches the dist phase
+              via token-queueing delay; sheds best-effort when the medium saturates)
               --trace-out FILE (Chrome trace-event JSON of the merged span log; Perfetto-loadable)
               --metrics-out FILE (metrics-registry JSON incl. per-epoch gauges + memo counters;
               byte-identical at any --threads)
@@ -287,6 +294,17 @@ fn parse_power(f: &Flags) -> anyhow::Result<wienna::power::PowerConfig> {
     Ok(power)
 }
 
+/// Pin non-finite derived stats (zero-completion runs have NaN
+/// percentiles) to 0 in human-readable output — the same zero-guard the
+/// JSON emitters apply.
+fn z(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 /// One-line energy telemetry summary shared by serve and cluster.
 fn energy_line(e: &wienna::power::FleetEnergy, completed: u64, end_cycle: f64) -> String {
     format!(
@@ -355,16 +373,16 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         "served {} requests in {:.1} ms simulated | p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
         stats.completed(),
         wienna::serve::cycles_to_ms(end),
-        stats.latency_ms(50.0),
-        stats.latency_ms(95.0),
-        stats.latency_ms(99.0),
+        z(stats.latency_ms(50.0)),
+        z(stats.latency_ms(95.0)),
+        z(stats.latency_ms(99.0)),
     );
     println!(
         "throughput {:.0} req/s | goodput {:.0} req/s | SLO violations {:.1}% | mean batch {:.2} (max {})",
-        stats.throughput_rps(),
-        stats.goodput_rps(),
-        stats.violation_rate() * 100.0,
-        stats.mean_batch(),
+        z(stats.throughput_rps()),
+        z(stats.goodput_rps()),
+        z(stats.violation_rate()) * 100.0,
+        z(stats.mean_batch()),
         stats.max_batch(),
     );
     if let Some(e) = &stats.energy {
@@ -462,6 +480,19 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     if let Some(t) = f.0.get("threads") {
         cfg.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads: bad number '{t}'"))?;
     }
+    if let Some(spec) = f.0.get("faults") {
+        cfg.faults = wienna::fault::FaultPlan::parse(spec)?;
+    }
+    if let Some(bg) = f.0.get("contention") {
+        let bg: f64 =
+            bg.parse().map_err(|_| anyhow::anyhow!("--contention: bad number '{bg}'"))?;
+        anyhow::ensure!(
+            (0.0..1.0).contains(&bg),
+            "--contention must be a background load in [0, 1)"
+        );
+        cfg.contention = wienna::fault::ContentionConfig::with_background(bg);
+    }
+    let chaos_on = !cfg.faults.is_empty() || cfg.contention.enabled;
     let threads = cfg.threads;
     let seed = f.u64("seed", 42)?;
 
@@ -530,12 +561,13 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         policy.label()
     );
     println!(
-        "arrived {} | completed {} | shed {} (queue-full {}, deadline {}) | preemptions {} | steals {} over {} epochs | {:.1} ms wall",
+        "arrived {} | completed {} | shed {} (queue-full {}, deadline {}, overload {}) | preemptions {} | steals {} over {} epochs | {:.1} ms wall",
         stats.serve.arrived(),
         stats.serve.completed(),
         stats.serve.shed(),
         stats.shed_queue_full,
         stats.shed_deadline,
+        stats.shed_overload,
         stats.preemptions,
         stats.steals,
         stats.epochs,
@@ -543,17 +575,28 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     );
     println!(
         "p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms | goodput {:.0} req/s | violations {:.1}% | mean batch {:.2}",
-        stats.serve.latency_ms(50.0),
-        stats.serve.latency_ms(95.0),
-        stats.serve.latency_ms(99.0),
-        stats.serve.goodput_rps(),
-        stats.serve.violation_rate() * 100.0,
-        stats.serve.mean_batch(),
+        z(stats.serve.latency_ms(50.0)),
+        z(stats.serve.latency_ms(95.0)),
+        z(stats.serve.latency_ms(99.0)),
+        z(stats.serve.goodput_rps()),
+        z(stats.serve.violation_rate()) * 100.0,
+        z(stats.serve.mean_batch()),
     );
+    if chaos_on {
+        println!(
+            "chaos: failed {} | retries {} | reroutes {} | tail amplification {:.2}x | failover goodput {:.0} req/s | dead-shard drain {:.2} ms",
+            stats.serve.failed(),
+            stats.retries(),
+            stats.reroutes(),
+            stats.tail_amplification(),
+            stats.failover_goodput_rps(),
+            stats.dead_shard_drain_ms(),
+        );
+    }
     println!("{}", energy_line(&stats.energy, stats.serve.completed(), stats.serve.end_cycle()));
     let mut t = Table::new(
         "per-class SLO accounting",
-        &["class", "arrived", "completed", "shed", "slo met", "violated", "p50 ms", "p99 ms", "energy mJ"],
+        &["class", "arrived", "completed", "shed", "failed", "slo met", "violated", "p50 ms", "p99 ms", "energy mJ"],
     );
     for (class, m) in &stats.per_class {
         t.row(vec![
@@ -561,10 +604,11 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
             m.arrived.to_string(),
             m.completed.to_string(),
             m.shed.to_string(),
+            m.failed.to_string(),
             m.slo_met.to_string(),
             m.slo_violated.to_string(),
-            format!("{:.2}", stats.class_latency_ms(*class, 50.0)),
-            format!("{:.2}", stats.class_latency_ms(*class, 99.0)),
+            format!("{:.2}", z(stats.class_latency_ms(*class, 50.0))),
+            format!("{:.2}", z(stats.class_latency_ms(*class, 99.0))),
             format!("{:.1}", stats.class_energy_mj[class.index()]),
         ]);
     }

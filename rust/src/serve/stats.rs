@@ -86,6 +86,10 @@ pub struct ModelStats {
     /// load shedding; always 0 for plain `Fleet::run`, which admits
     /// everything).
     pub shed: u64,
+    /// Requests that failed terminally under fault injection — dispatch
+    /// died, retries exhausted, or stranded on dead hardware
+    /// (`wienna::fault`; always 0 without a fault plan).
+    pub failed: u64,
 }
 
 impl ModelStats {
@@ -150,10 +154,19 @@ impl ServeStats {
 
     /// Record a request refused by admission control. The request still
     /// counts as arrived (record both), so
-    /// `arrived == completed + shed` holds after a drained run.
+    /// `arrived == completed + shed + failed` holds after a drained run.
     pub fn record_shed(&mut self, req: &Request) {
         self.all.shed += 1;
         self.per_model.entry(req.kind).or_default().shed += 1;
+    }
+
+    /// Record a request that failed terminally under fault injection
+    /// (dispatch died and every retry was exhausted, or it was stranded
+    /// on dead hardware). Counts toward the same conservation identity as
+    /// sheds: `arrived == completed + shed + failed`.
+    pub fn record_failed(&mut self, req: &Request) {
+        self.all.failed += 1;
+        self.per_model.entry(req.kind).or_default().failed += 1;
     }
 
     /// Mark the end of the run (cycle of the last event).
@@ -168,6 +181,11 @@ impl ServeStats {
     /// Requests refused by admission control.
     pub fn shed(&self) -> u64 {
         self.all.shed
+    }
+
+    /// Requests that failed terminally under fault injection.
+    pub fn failed(&self) -> u64 {
+        self.all.failed
     }
 
     /// Fraction of arrivals refused by admission control.

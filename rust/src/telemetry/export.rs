@@ -9,9 +9,11 @@
 //!
 //! The trace export follows the Chrome trace-event format (the JSON
 //! Perfetto and `chrome://tracing` load): `"X"` complete slices for
-//! request spans, `"i"` instants for sheds/preemptions, `"C"` counters
-//! for the per-epoch gauges, and `"M"` process-name metadata per shard.
-//! Timestamps are microseconds of simulated time.
+//! request spans, `"i"` instants for sheds/preemptions, `"s"`/`"f"`
+//! flow pairs linking a cross-shard hand-off's donor enqueue to its
+//! victim-side service, `"C"` counters for the per-epoch gauges, and
+//! `"M"` process-name metadata per shard. Timestamps are microseconds
+//! of simulated time.
 
 use crate::cluster::{TrafficClass, NUM_CLASSES};
 use crate::cost::memo::MemoStats;
@@ -27,6 +29,13 @@ fn num(v: f64) -> String {
         "null".to_string()
     }
 }
+
+/// Dist-phase blowup alarm threshold: when completed requests spend
+/// this fraction (or more) of their end-to-end cycles in the `dist`
+/// phase, the shared wireless medium is the bottleneck — expected under
+/// injected contention (`wienna::fault`), a red flag otherwise. The
+/// metrics JSON carries the verdict as `"dist_alarm"`.
+pub const DIST_ALARM_FRAC: f64 = 0.4;
 
 /// Simulated cycle → trace-event timestamp (µs).
 fn ts_us(cycle: f64) -> f64 {
@@ -58,6 +67,10 @@ pub fn metrics_json(
     s.push_str("  \"schema\": \"wienna-metrics-v1\",\n");
     s.push_str(&format!("  \"requests\": {},\n", attr.requests));
     s.push_str(&frac_fields("  ", attr));
+    // NaN-safe: an empty run (NaN fractions) never alarms.
+    let dist = attr.fractions()[1];
+    let alarm = dist.is_finite() && dist >= DIST_ALARM_FRAC;
+    s.push_str(&format!("  \"dist_alarm\": {alarm},\n"));
     s.push_str("  \"per_class\": [\n");
     if let Some(by_class) = class_attr {
         for (i, class) in TrafficClass::ALL.iter().enumerate() {
@@ -122,7 +135,14 @@ pub fn metrics_json(
         for (class, shed) in TrafficClass::ALL.iter().zip(e.shed) {
             s.push_str(&format!(", \"shed_{}\": {shed}", class.label().replace('-', "_")));
         }
-        s.push_str(&format!(", \"steals\": {}, \"power_w\": {} }}", e.steals, num(e.power_w)));
+        s.push_str(&format!(
+            ", \"steals\": {}, \"power_w\": {}, \"mac_occupancy\": {}, \
+             \"token_wait_cycles\": {} }}",
+            e.steals,
+            num(e.power_w),
+            num(e.mac_occupancy),
+            num(e.token_wait_cycles)
+        ));
         if i + 1 < t.metrics.epochs.len() {
             s.push(',');
         }
@@ -167,6 +187,7 @@ pub fn chrome_trace(t: &Telemetry) -> String {
         .map(|s| s.shard)
         .chain(log.sheds.iter().map(|s| s.shard))
         .chain(log.preemptions.iter().map(|p| p.shard))
+        .chain(log.flows.iter().flat_map(|f| [f.from_shard, f.to_shard]))
         .max();
     if let Some(max_shard) = max_shard {
         for shard in 0..=max_shard {
@@ -219,6 +240,28 @@ pub fn chrome_trace(t: &Telemetry) -> String {
         ));
     }
 
+    // "s"/"f" flow pairs: one arrow per cross-shard hand-off (steal or
+    // failover re-route), from the donor's row to the victim's. Chrome
+    // binds the pair by `(cat, name, id)`; a request re-routed again
+    // later simply extends the chain.
+    for f in &log.flows {
+        let ts = num(ts_us(f.cycle));
+        events.push(format!(
+            "{{\"name\":\"handoff\",\"cat\":\"flow\",\"ph\":\"s\",\"pid\":{},\"tid\":0,\
+             \"ts\":{ts},\"id\":{},\"args\":{{\"class\":\"{}\"}}}}",
+            f.from_shard,
+            f.id,
+            f.class.label(),
+        ));
+        events.push(format!(
+            "{{\"name\":\"handoff\",\"cat\":\"flow\",\"ph\":\"f\",\"bp\":\"e\",\"pid\":{},\
+             \"tid\":0,\"ts\":{ts},\"id\":{},\"args\":{{\"class\":\"{}\"}}}}",
+            f.to_shard,
+            f.id,
+            f.class.label(),
+        ));
+    }
+
     // "C" counters: the epoch gauges, one track each, pinned to pid 0.
     for e in &t.metrics.epochs {
         let ts = num(ts_us(e.cycle));
@@ -227,6 +270,8 @@ pub fn chrome_trace(t: &Telemetry) -> String {
             ("in_flight_batches", e.in_flight_batches as f64),
             ("steals", e.steals as f64),
             ("power_w", e.power_w),
+            ("mac_occupancy", e.mac_occupancy),
+            ("token_wait_cycles", e.token_wait_cycles),
         ] {
             events.push(format!(
                 "{{\"name\":\"{name}\",\"ph\":\"C\",\"pid\":0,\"tid\":0,\"ts\":{ts},\
@@ -246,7 +291,7 @@ pub fn chrome_trace(t: &Telemetry) -> String {
 mod tests {
     use super::*;
     use crate::telemetry::metrics::EpochSample;
-    use crate::telemetry::span::{PreemptSpan, ShedSpan, SpanRecord};
+    use crate::telemetry::span::{FlowRecord, PreemptSpan, ShedSpan, SpanRecord};
     use crate::telemetry::PhaseBreakdown;
     use crate::cluster::ShedReason;
     use crate::serve::ModelKind;
@@ -275,6 +320,13 @@ mod tests {
             reason: ShedReason::QueueFull,
         });
         t.log.preemptions.push(PreemptSpan { cycle: 50.0, shard: 1, package: 1, batch: 4 });
+        t.log.flows.push(FlowRecord {
+            id: 42,
+            class: TrafficClass::BestEffort,
+            from_shard: 1,
+            to_shard: 2,
+            cycle: 2000.0,
+        });
         t.metrics.epochs.push(EpochSample { epoch: 0, cycle: 4000.0, queued: 3, ..Default::default() });
         t.metrics.latency_ms.record(2.5);
         t
@@ -285,14 +337,25 @@ mod tests {
         let s = chrome_trace(&sample_telemetry());
         assert!(s.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n"));
         assert!(s.ends_with("\n]}\n"));
-        for needle in
-            ["\"ph\":\"M\"", "\"ph\":\"X\"", "\"ph\":\"i\"", "\"ph\":\"C\"", "shed queue-full"]
-        {
+        for needle in [
+            "\"ph\":\"M\"",
+            "\"ph\":\"X\"",
+            "\"ph\":\"i\"",
+            "\"ph\":\"C\"",
+            "\"ph\":\"s\"",
+            "\"ph\":\"f\"",
+            "shed queue-full",
+        ] {
             assert!(s.contains(needle), "missing {needle} in trace");
         }
-        // Process metadata covers shards 0..=1 (shard 1 emitted a span).
+        // Process metadata covers shards 0..=2 (shard 2 only received a
+        // flow hand-off — it still gets a named row).
         assert!(s.contains("\"name\":\"shard 0\""));
-        assert!(s.contains("\"name\":\"shard 1\""));
+        assert!(s.contains("\"name\":\"shard 2\""));
+        // The flow pair binds donor to victim through one id.
+        assert!(s.contains("\"cat\":\"flow\",\"ph\":\"s\",\"pid\":1,"));
+        assert!(s.contains("\"ph\":\"f\",\"bp\":\"e\",\"pid\":2,"));
+        assert_eq!(s.matches("\"id\":42").count(), 2, "both flow ends carry the request id");
     }
 
     #[test]
@@ -302,6 +365,18 @@ mod tests {
         assert!(s.contains("\"queue_frac\": null"));
         assert!(s.contains("\"memo\": null"));
         assert!(s.contains("\"schema\": \"wienna-metrics-v1\""));
+        assert!(s.contains("\"dist_alarm\": false"), "an empty run never alarms");
+    }
+
+    #[test]
+    fn dist_alarm_trips_on_dist_heavy_attribution() {
+        let t = Telemetry::default();
+        let mut attr = PhaseTotals::default();
+        attr.requests = 1;
+        attr.dist = 60.0;
+        attr.compute = 40.0;
+        let s = metrics_json(&t, &attr, None, None);
+        assert!(s.contains("\"dist_alarm\": true"), "60% dist must trip the {DIST_ALARM_FRAC} alarm");
     }
 
     #[test]

@@ -65,6 +65,14 @@ pub struct EpochSample {
     pub steals: u64,
     /// Power draw of in-flight batches across the fleet (gauge, watts).
     pub power_w: f64,
+    /// Fleet-average occupancy of the shared wireless medium so far:
+    /// distribution-plane busy cycles over elapsed package-cycles
+    /// (gauge; climbs toward `nop::mac::MAC_SATURATION` under
+    /// contention).
+    pub mac_occupancy: f64,
+    /// Cycles dispatches have spent waiting for the shared-medium token
+    /// so far (cumulative; exactly 0.0 with contention disabled).
+    pub token_wait_cycles: f64,
 }
 
 /// The full registry: named histograms plus the epoch time series.

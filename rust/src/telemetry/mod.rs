@@ -33,7 +33,7 @@ pub mod span;
 pub use export::{chrome_trace, metrics_json};
 pub use metrics::{EpochSample, LogHistogram, MetricsRegistry};
 pub use profile::{PhaseBreakdown, PhaseTotals, PHASES};
-pub use span::{PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
+pub use span::{FlowRecord, PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
 
 use crate::serve::{BatcherConfig, CostCache, ModelKind, PackageSpec};
 

@@ -69,12 +69,31 @@ pub struct PreemptSpan {
     pub batch: usize,
 }
 
+/// One cross-shard hand-off at an epoch barrier — a work-steal or a
+/// failover re-route off a dead shard. The Chrome trace renders each as
+/// a paired flow event (`ph: "s"` on the donor, `ph: "f"` on the
+/// victim) so the donor-side enqueue visually links to the victim-side
+/// service. Recorded at the single-threaded barrier, so the stream is
+/// deterministic by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowRecord {
+    pub id: u64,
+    pub class: TrafficClass,
+    pub from_shard: usize,
+    pub to_shard: usize,
+    /// Barrier cycle the hand-off happened at.
+    pub cycle: f64,
+}
+
 /// Per-shard (or per-fleet) span storage.
 #[derive(Debug, Clone, Default)]
 pub struct SpanLog {
     pub spans: Vec<SpanRecord>,
     pub sheds: Vec<ShedSpan>,
     pub preemptions: Vec<PreemptSpan>,
+    /// Cross-shard hand-offs (barrier-recorded; `absorb` never stamps
+    /// these — they already carry both shard ids).
+    pub flows: Vec<FlowRecord>,
 }
 
 impl SpanLog {
@@ -94,6 +113,7 @@ impl SpanLog {
         self.spans.extend(other.spans);
         self.sheds.extend(other.sheds);
         self.preemptions.extend(other.preemptions);
+        self.flows.extend(other.flows);
     }
 
     /// Stable sort every record stream by its cycle (`total_cmp`:
@@ -103,10 +123,14 @@ impl SpanLog {
         self.spans.sort_by(|a, b| a.completed.total_cmp(&b.completed));
         self.sheds.sort_by(|a, b| a.cycle.total_cmp(&b.cycle));
         self.preemptions.sort_by(|a, b| a.cycle.total_cmp(&b.cycle));
+        self.flows.sort_by(|a, b| a.cycle.total_cmp(&b.cycle));
     }
 
     pub fn is_empty(&self) -> bool {
-        self.spans.is_empty() && self.sheds.is_empty() && self.preemptions.is_empty()
+        self.spans.is_empty()
+            && self.sheds.is_empty()
+            && self.preemptions.is_empty()
+            && self.flows.is_empty()
     }
 }
 

@@ -126,6 +126,18 @@ pub fn bench<T>(label: &str, iters: u64, mut f: impl FnMut() -> T) -> BenchStats
     stats
 }
 
+/// Record a *metric* (not a timing) in the bench registry, so scenario
+/// outputs — goodput, time-to-drain, tail amplification — land in the
+/// bench JSON next to the timings and CI can scrape them by name. The
+/// value is carried in the `mean_ms` field (min == max == mean,
+/// iters == 1); name metrics so the unit is obvious (`..._ms`, `..._x`).
+pub fn record_metric(label: &str, value: f64) {
+    let ns = value * 1e6; // mean_ms() == value
+    let stats = BenchStats { iters: 1, mean_ns: ns, min_ns: ns, max_ns: ns };
+    println!("metric {label:<44} {value:>12.4}");
+    bench_registry().lock().expect("bench registry").push((label.to_string(), stats));
+}
+
 fn bench_registry() -> &'static std::sync::Mutex<Vec<(String, BenchStats)>> {
     static REGISTRY: std::sync::OnceLock<std::sync::Mutex<Vec<(String, BenchStats)>>> =
         std::sync::OnceLock::new();
@@ -190,6 +202,8 @@ pub struct FuzzSummary {
     pub closed_loop_trials: usize,
     /// Trials with the epoch-barrier work-stealing pass enabled.
     pub steal_trials: usize,
+    /// Trials running under a non-empty fault plan or MAC contention.
+    pub chaos_trials: usize,
     /// Requests served or shed across all trials (at the 1-thread count).
     pub requests: u64,
 }
@@ -197,14 +211,16 @@ pub struct FuzzSummary {
 /// Determinism fuzz harness for the sharded cluster engine: generate
 /// `trials` randomized `ClusterConfig`s from `seed` — package/shard
 /// counts, routing policy, queue caps, deadline shedding, preemption,
-/// class populations, epoch widths, work stealing on/off, and all three
+/// class populations, epoch widths, work stealing on/off, randomized
+/// fault plans (kill / degrade / stall / spike windows) with MAC
+/// contention, and all three
 /// source families (Poisson, closed-loop client pool, client-trace
 /// replay) — and assert for each that the emitted stats JSON, the
 /// telemetry metrics JSON, and the Chrome trace export (every trial runs
 /// with span recording on) are **byte-identical at 1, 2 and 4 worker
 /// threads**, and that request conservation (`arrived == completed +
-/// shed`, globally and per class) holds after the drain. Source family
-/// and stealing alternate
+/// shed + failed`, globally and per class) holds after the drain.
+/// Source family, stealing, and chaos alternate
 /// round-robin across trials so even a short sweep covers every regime;
 /// everything else is drawn from the seeded RNG, so a failing seed
 /// reproduces exactly.
@@ -216,6 +232,7 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
         AdmissionConfig, ClassMix, ClassSpec, Cluster, ClusterConfig, SyncConfig, TrafficClass,
     };
     use crate::config::DesignPoint;
+    use crate::fault::{ContentionConfig, FaultPlan};
     use crate::serve::{ms_to_cycles, MixEntry, ModelKind, PackageSpec, RoutePolicy, Source, WorkloadMix};
     use crate::workload::trace::synthetic_arrivals;
 
@@ -252,6 +269,40 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
                 deadline_shed: rng.range_u64(0, 1) == 1,
             })
             .collect();
+        // Every other trial runs chaotic: 0–3 randomized fault windows
+        // (kill / degrade / stall / spike) plus, half the time, MAC
+        // contention with a random background load. The fault spec goes
+        // through the same `FaultPlan::parse` grammar the CLI uses so
+        // the fuzzer also exercises the parser.
+        let chaos = trial % 2 == 0;
+        let mut fault_spec = String::new();
+        let mut contention = ContentionConfig::default();
+        if chaos {
+            for _ in 0..rng.range_u64(0, 3) {
+                let start = 0.2 + rng.next_f32() as f64 * 2.0;
+                let end = start + 0.2 + rng.next_f32() as f64 * 2.0;
+                let ev = match rng.range_u64(0, 3) {
+                    0 => format!("kill:{}@{start:.3}..{end:.3}", rng.range_u64(0, packages as u64 - 1)),
+                    1 => format!(
+                        "degrade:{}:{:.2}@{start:.3}..{end:.3}",
+                        rng.range_u64(0, packages as u64 - 1),
+                        1.5 + rng.next_f32() as f64 * 2.0
+                    ),
+                    2 => format!("stall:{}@{start:.3}..{end:.3}", rng.range_u64(0, shards as u64 - 1)),
+                    _ => format!("spike:{:.2}@{start:.3}..{end:.3}", rng.next_f32() as f64 * 0.5),
+                };
+                if !fault_spec.is_empty() {
+                    fault_spec.push(';');
+                }
+                fault_spec.push_str(&ev);
+            }
+            // Contention on a coin flip — but always when the plan drew
+            // zero events, so every chaos trial exercises *something*.
+            if fault_spec.is_empty() || rng.range_u64(0, 1) == 1 {
+                contention = ContentionConfig::with_background(rng.next_f32() as f64 * 0.5);
+            }
+        }
+        let faults = FaultPlan::parse(&fault_spec).expect("fuzz-generated fault spec parses");
         let cfg = ClusterConfig {
             shards,
             threads: 1, // overridden per run below
@@ -265,6 +316,8 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
             },
             calibrated_eta: rng.range_u64(0, 1) == 1,
             telemetry: crate::telemetry::TelemetryConfig { enabled: true },
+            faults,
+            contention,
             ..Default::default()
         };
         let horizon = ms_to_cycles(2.0 + rng.next_f32() as f64 * 4.0);
@@ -287,15 +340,19 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
         };
         let label = format!(
             "fuzz trial {trial} (seed {seed:#x}): {packages} pkg, {shards} shards, steal {steal}, \
-             cap {queue_cap:?}, epoch {:.0} cyc, {}",
+             cap {queue_cap:?}, epoch {:.0} cyc, {}, faults \"{fault_spec}\", contention {}",
             cfg.sync.epoch_cycles,
             if source.is_open_loop() { "open-loop" } else { "closed-loop" },
+            cfg.contention.enabled,
         );
         if !source.is_open_loop() {
             summary.closed_loop_trials += 1;
         }
         if steal {
             summary.steal_trials += 1;
+        }
+        if !cfg.faults.is_empty() || cfg.contention.enabled {
+            summary.chaos_trials += 1;
         }
 
         let mut jsons = Vec::new();
@@ -310,10 +367,11 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
             let stats = cluster.run(&mut src, horizon);
             assert_eq!(
                 stats.serve.arrived(),
-                stats.serve.completed() + stats.serve.shed(),
-                "{label}: arrived != completed + shed at {threads} threads"
+                stats.serve.completed() + stats.serve.shed() + stats.serve.failed(),
+                "{label}: arrived != completed + shed + failed at {threads} threads"
             );
-            let per_class: u64 = stats.per_class.values().map(|m| m.completed + m.shed).sum();
+            let per_class: u64 =
+                stats.per_class.values().map(|m| m.completed + m.shed + m.failed).sum();
             assert_eq!(per_class, stats.serve.arrived(), "{label}: per-class balance");
             if threads == 1 {
                 summary.requests += stats.serve.arrived();

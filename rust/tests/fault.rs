@@ -1,0 +1,282 @@
+//! Integration tests for `wienna::fault`: deterministic chaos over the
+//! sharded cluster engine, end to end.
+//!
+//! The load-bearing guarantees proven here:
+//!
+//! 1. **Chaos determinism**: a seeded fault plan (package kill inside a
+//!    contention spike) yields bit-identical stats JSON across 1/2/4
+//!    worker threads — the same contract the fault-free engine holds,
+//!    now with mid-run topology edges, retries, and failover moves in
+//!    the event stream.
+//! 2. **Conservation under failure**: per class and globally,
+//!    `completed + shed + failed == arrived` after every drained run,
+//!    across randomized seeded plans; the event trace shows every
+//!    request finalized exactly once (a retried request still finalizes
+//!    once — retries are not finalizations), on exactly one shard.
+//! 3. **Recovery**: with stealing enabled, failover re-routes a dead
+//!    shard's backlog to survivors — the run completes strictly more
+//!    and fails strictly less than the same scenario without it.
+//! 4. **Zero-guards**: a run that completes nothing still emits `0`
+//!    (never `NaN`/`null`) for every fraction, percentile, and goodput
+//!    field of the stats JSON.
+
+use std::collections::HashMap;
+use wienna::cluster::{
+    AdmissionConfig, ClassMix, Cluster, ClusterConfig, SyncConfig, TrafficClass,
+};
+use wienna::config::DesignPoint;
+use wienna::fault::{ContentionConfig, FaultPlan};
+use wienna::serve::{ms_to_cycles, MixEntry, ModelKind, PackageSpec, Source, WorkloadMix};
+use wienna::telemetry::TelemetryConfig;
+
+fn mix(slo_ms: f64) -> WorkloadMix {
+    WorkloadMix::new(vec![MixEntry {
+        kind: ModelKind::TinyCnn,
+        weight: 1.0,
+        slo_cycles: ms_to_cycles(slo_ms),
+    }])
+}
+
+fn chaos_config(faults: &str, contention: f64, steal: bool, threads: usize) -> ClusterConfig {
+    ClusterConfig {
+        shards: 4,
+        threads,
+        admission: AdmissionConfig::admit_all(),
+        sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.25) },
+        faults: FaultPlan::parse(faults).expect("test fault spec"),
+        contention: if contention > 0.0 {
+            ContentionConfig::with_background(contention)
+        } else {
+            ContentionConfig::default()
+        },
+        telemetry: TelemetryConfig { enabled: true },
+        ..Default::default()
+    }
+}
+
+/// Acceptance criterion of the fault tentpole: the seeded chaos scenario
+/// — a package killed mid-run inside a cluster-wide contention spike,
+/// closed-loop clients observing the failures, stealing + failover on —
+/// is bit-identical at 1/2/4 worker threads, books token-wait cycles,
+/// and still conserves every request.
+#[test]
+fn seeded_chaos_scenario_is_bit_identical_across_threads() {
+    let run = |threads: usize| {
+        let cfg = chaos_config("kill:1@2..6;spike:0.4@1..5", 0.3, true, threads);
+        let cluster = Cluster::new(PackageSpec::homogeneous(8, DesignPoint::WIENNA_C), cfg);
+        let mut source = Source::closed_loop(mix(40.0), 24, 0.3, 12, 2026);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let t1 = run(1);
+    let t2 = run(2);
+    let t4 = run(4);
+    assert_eq!(t1.serve.arrived(), 24 * 12, "every client request was issued");
+    assert!(t1.serve.completed() > 0, "the fleet survives the plan");
+    assert_eq!(
+        t1.serve.arrived(),
+        t1.serve.completed() + t1.serve.shed() + t1.serve.failed(),
+        "conservation under chaos"
+    );
+    assert!(t1.token_wait_cycles > 0.0, "contention books token-wait time");
+    let (j1, j2, j4) = (t1.to_json(), t2.to_json(), t4.to_json());
+    assert_eq!(j1, j2, "1-thread vs 2-thread chaos stats JSON diverged");
+    assert_eq!(j1, j4, "1-thread vs 4-thread chaos stats JSON diverged");
+    assert_eq!(t1.serve.latency_ms(99.0).to_bits(), t4.serve.latency_ms(99.0).to_bits());
+    assert_eq!(t1.token_wait_cycles.to_bits(), t4.token_wait_cycles.to_bits());
+    assert_eq!(t1.retries(), t4.retries());
+    assert_eq!(t1.reroutes(), t4.reroutes());
+}
+
+/// A disabled fault layer is byte-invisible: empty plan + contention off
+/// produces the exact JSON of a build that never heard of `wienna::fault`
+/// (pinned against the same config with the fields defaulted).
+#[test]
+fn empty_plan_and_disabled_contention_change_nothing() {
+    let run = |cfg: ClusterConfig| {
+        let cluster = Cluster::new(PackageSpec::homogeneous(4, DesignPoint::WIENNA_C), cfg);
+        let mut source = Source::poisson(mix(25.0), 5000.0, 7);
+        cluster.run(&mut source, ms_to_cycles(10.0)).to_json()
+    };
+    let defaulted = run(ClusterConfig { shards: 2, threads: 2, ..Default::default() });
+    let explicit = run(ClusterConfig {
+        shards: 2,
+        threads: 2,
+        faults: FaultPlan::parse("").unwrap(),
+        contention: ContentionConfig::default(),
+        ..Default::default()
+    });
+    assert_eq!(defaulted, explicit, "disabled chaos must be byte-invisible");
+}
+
+/// Conservation property under randomized seeded plans (trace audit):
+/// across kill / degrade / stall / spike plans and both source families,
+/// `completed + shed + failed == arrived` per class and globally, and
+/// the merged event trace finalizes every arrived id exactly once — on
+/// exactly one shard — however many retries and failover moves happened
+/// along the way.
+#[test]
+fn seeded_plans_conserve_requests_and_finalize_each_id_once() {
+    let plans = [
+        "kill:0@1..3",
+        "kill:1@1;kill:5@1", // both packages of shard 1, permanently
+        "degrade:2:3.0@0.5..4;spike:0.5@1..3",
+        "stall:3@1..2;kill:6@2..5",
+        "kill:0@1..2;kill:4@1.5..3;degrade:1:2.0@0..6",
+    ];
+    for (trial, spec) in plans.iter().enumerate() {
+        for steal in [false, true] {
+            let cfg = chaos_config(spec, if trial % 2 == 0 { 0.2 } else { 0.0 }, steal, 2);
+            let cluster = Cluster::new(PackageSpec::homogeneous(8, DesignPoint::WIENNA_C), cfg);
+            let mut source =
+                Source::closed_loop(mix(30.0), 16, 0.2, 8, 0xC0FFEE + trial as u64);
+            let (stats, trace) = cluster.run_traced(&mut source, f64::INFINITY);
+            let label = format!("plan {trial} ({spec}), steal {steal}");
+
+            assert_eq!(
+                stats.serve.arrived(),
+                stats.serve.completed() + stats.serve.shed() + stats.serve.failed(),
+                "{label}: arrived != completed + shed + failed"
+            );
+            for (class, m) in &stats.per_class {
+                assert_eq!(
+                    m.arrived,
+                    m.completed + m.shed + m.failed,
+                    "{label}: class {} does not balance",
+                    class.label()
+                );
+            }
+            // Every id finalized exactly once, on exactly one shard.
+            let mut seen: HashMap<u64, usize> = HashMap::new();
+            for ev in &trace {
+                if let Some(prev) = seen.insert(ev.id, ev.shard) {
+                    panic!(
+                        "{label}: request {} finalized on shard {} and shard {}",
+                        ev.id, prev, ev.shard
+                    );
+                }
+            }
+            assert_eq!(
+                seen.len() as u64,
+                stats.serve.arrived(),
+                "{label}: trace covers every request exactly once"
+            );
+        }
+    }
+}
+
+/// Recovery (failover satellite): kill both packages of one shard
+/// permanently under closed-loop load. With stealing on, the failover
+/// pass re-homes the dead shard's backlog onto survivors; without it,
+/// everything striped to that shard is stranded and eventually failed.
+#[test]
+fn failover_rescues_a_dead_shards_backlog() {
+    let run = |steal: bool| {
+        // Globals 1 and 5 on an 8-package / 4-shard fleet are exactly
+        // shard 1's two local packages — killed for good at 1 ms.
+        let cfg = chaos_config("kill:1@1;kill:5@1", 0.0, steal, 2);
+        let cluster = Cluster::new(PackageSpec::homogeneous(8, DesignPoint::WIENNA_C), cfg);
+        let mut source = Source::closed_loop(mix(40.0), 24, 0.3, 8, 404);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let stranded = run(false);
+    let rescued = run(true);
+    assert_eq!(stranded.serve.arrived(), rescued.serve.arrived(), "same offered load");
+    assert!(
+        stranded.serve.failed() > 0,
+        "without failover, the dead shard's clients must observe failures"
+    );
+    assert!(rescued.reroutes() > 0, "failover must re-home the dead shard's queue");
+    assert!(
+        rescued.serve.completed() > stranded.serve.completed(),
+        "failover recovers goodput: {} vs {} completions",
+        rescued.serve.completed(),
+        stranded.serve.completed()
+    );
+    assert!(
+        rescued.serve.failed() < stranded.serve.failed(),
+        "failover cuts terminal failures: {} vs {}",
+        rescued.serve.failed(),
+        stranded.serve.failed()
+    );
+    // The drain gauge saw the shard die and (eventually) empty out.
+    assert!(rescued.dead_shard_drain_ms() >= 0.0);
+}
+
+/// No-bounce property (stealing satellite): with hysteresis, a stolen
+/// request is never stolen again — in a fault-free steal-heavy run every
+/// recorded hand-off flow carries a distinct request id, and there is
+/// exactly one flow per counted steal.
+#[test]
+fn stolen_work_never_bounces_between_shards() {
+    use wienna::workload::trace::synthetic_arrivals;
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: 4,
+            threads: 2,
+            classes: ClassMix::single(TrafficClass::Interactive, 1.0, false),
+            admission: AdmissionConfig::admit_all(),
+            batcher: wienna::serve::BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
+            sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1) },
+            telemetry: TelemetryConfig { enabled: true },
+            ..Default::default()
+        },
+    );
+    let counts: Vec<usize> = (0..64).map(|i| if i % 4 == 0 { 40 } else { 1 }).collect();
+    let traces = synthetic_arrivals(&counts, 0.02, 0.5, 9);
+    let mut source = Source::client_trace(mix(25.0), &traces, 9);
+    let stats = cluster.run(&mut source, f64::INFINITY);
+    assert!(stats.steals > 0, "the hot stripe must donate work");
+    let flows = &stats.telemetry.as_ref().expect("telemetry on").log.flows;
+    assert_eq!(
+        flows.len() as u64,
+        stats.steals,
+        "no faults: every flow is a steal, every steal leaves one flow"
+    );
+    let mut ids: Vec<u64> = flows.iter().map(|f| f.id).collect();
+    ids.sort_unstable();
+    let before = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), before, "a request id appears in two flows — stolen work bounced");
+    for f in flows {
+        assert_ne!(f.from_shard, f.to_shard, "a flow must cross shards");
+    }
+}
+
+/// Zero-guard regression (satellite): a cap-0 run completes nothing;
+/// every fraction, percentile, and goodput field of the stats JSON must
+/// read `0`, not `NaN`/`null`, in both the fault-free and chaotic
+/// configurations.
+#[test]
+fn zero_completion_runs_emit_zeroes_not_nan() {
+    for spec in ["", "kill:0@1..2"] {
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 2,
+                threads: 2,
+                admission: AdmissionConfig { queue_cap: Some(0), shed_late: false },
+                faults: FaultPlan::parse(spec).unwrap(),
+                ..Default::default()
+            },
+        );
+        let mut source = Source::poisson(mix(25.0), 3000.0, 3);
+        let stats = cluster.run(&mut source, ms_to_cycles(5.0));
+        assert!(stats.serve.arrived() > 0, "traffic was offered");
+        assert_eq!(stats.serve.completed(), 0, "cap 0 completes nothing");
+        let json = stats.to_json();
+        assert!(!json.contains("NaN"), "stats JSON leaked a NaN (faults {spec:?}):\n{json}");
+        assert!(!json.contains("null"), "stats JSON leaked a null (faults {spec:?}):\n{json}");
+        for field in
+            ["p50_ms", "p95_ms", "p99_ms", "tail_amplification", "goodput_rps", "mean_batch",
+             "queue_frac", "dist_frac", "compute_frac", "collect_frac", "throttle_frac"]
+        {
+            assert!(
+                json.contains(&format!("\"{field}\": 0")),
+                "{field} should be zero-guarded (faults {spec:?}):\n{json}"
+            );
+        }
+        assert_eq!(stats.tail_amplification(), 0.0);
+        assert_eq!(stats.failover_goodput_rps(), 0.0);
+    }
+}

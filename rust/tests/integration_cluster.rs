@@ -240,16 +240,18 @@ fn closed_loop_with_stealing_is_bit_identical_across_threads() {
 }
 
 /// The determinism fuzz harness (`testutil::fuzz_determinism`): random
-/// caps, class populations, epoch widths, steal on/off and all three
+/// caps, class populations, epoch widths, steal on/off, randomized
+/// fault plans with MAC contention, and all three
 /// source families, each asserted bit-identical at 1/2/4 threads. The
 /// harness panics on any divergence; here we also pin that it actually
-/// covered the closed-loop and stealing regimes.
+/// covered the closed-loop, stealing, and chaos regimes.
 #[test]
 fn fuzz_determinism_sweeps_randomized_configs() {
     let summary = wienna::testutil::fuzz_determinism(0xF00D, 9);
     assert_eq!(summary.trials, 9);
     assert!(summary.closed_loop_trials >= 3, "closed-loop regimes covered");
     assert!(summary.steal_trials >= 3, "stealing regimes covered");
+    assert!(summary.chaos_trials >= 4, "fault/contention regimes covered");
     assert!(summary.requests > 0, "the sweep served real traffic");
 }
 

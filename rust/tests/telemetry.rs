@@ -23,8 +23,8 @@ use wienna::serve::{
     Source, WorkloadMix,
 };
 use wienna::telemetry::{
-    chrome_trace, metrics_json, EpochSample, PhaseBreakdown, PhaseTotals, PreemptSpan, Recorder,
-    ShedSpan, SpanRecord, Telemetry, TelemetryConfig, PHASES,
+    chrome_trace, metrics_json, EpochSample, FlowRecord, PhaseBreakdown, PhaseTotals, PreemptSpan,
+    Recorder, ShedSpan, SpanRecord, Telemetry, TelemetryConfig, PHASES,
 };
 use wienna::workload::trace::synthetic_arrivals;
 
@@ -309,6 +309,13 @@ fn telemetry_schema_matches_the_golden_fixture() {
         reason: ShedReason::QueueFull,
     });
     t.log.preemptions.push(PreemptSpan { cycle: 50.0, shard: 0, package: 1, batch: 4 });
+    t.log.flows.push(FlowRecord {
+        id: 13,
+        class: TrafficClass::BestEffort,
+        from_shard: 0,
+        to_shard: 1,
+        cycle: 60.0,
+    });
     t.metrics.epochs.push(EpochSample { epoch: 0, cycle: 4000.0, queued: 3, ..Default::default() });
     t.finish();
     let mut attr = PhaseTotals::default();
@@ -346,6 +353,8 @@ fn telemetry_schema_matches_the_golden_fixture() {
         ("span", "\"ph\":\"X\""),
         ("shed", "\"cat\":\"admission\""),
         ("preempt", "\"cat\":\"scheduler\""),
+        ("flow_s", "\"ph\":\"s\""),
+        ("flow_f", "\"ph\":\"f\""),
         ("counter", "\"ph\":\"C\""),
     ] {
         for key in keys_of_first(&trace, needle) {
