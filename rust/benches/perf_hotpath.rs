@@ -7,7 +7,9 @@
 //! * L3 cycle-level mesh simulator — flit-hop throughput;
 //! * L3 coordinator — schedule generation;
 //! * serve hot path — the request loop with telemetry off (the ≤2%
-//!   overhead guard for the observability PR) and with span recording on;
+//!   overhead guard for the observability PR), with span recording on,
+//!   and with `--bounded-stats` histogram recorders (zero per-request
+//!   allocation asserted, same ≤2% envelope);
 //! * runtime — PJRT tile dispatch latency (only with `--features pjrt`
 //!   and built artifacts).
 //!
@@ -137,6 +139,32 @@ fn main() {
     println!(
         "  -> span recording costs {:+.1}% on the serve hot path (off-path guard: <= 2%)",
         (on.mean_ns / off.mean_ns - 1.0) * 100.0
+    );
+
+    // --- bounded stats (--bounded-stats): allocation + overhead guard ---
+    // Histogram-backed recorders replace the per-request latency Vecs;
+    // the guard is the same <= 2% envelope as the exact path, and the
+    // zero-allocation claim is asserted outright, not just timed.
+    let serve_run_stats = |bounded: bool| {
+        let mut fleet = Fleet::new(
+            PackageSpec::homogeneous(4, DesignPoint::WIENNA_C),
+            RoutePolicy::EarliestDeadline,
+        );
+        let mut stats = if bounded { ServeStats::bounded() } else { ServeStats::new() };
+        let mut source = Source::poisson(serve_mix(), 4000.0, 42);
+        fleet.run(&mut source, ms_to_cycles(50.0), &mut stats);
+        if bounded {
+            assert_eq!(stats.exact_samples(), 0, "bounded stats grew a latency Vec");
+        } else {
+            assert!(stats.exact_samples() > 0, "exact stats lost their samples");
+        }
+        stats.completed()
+    };
+    let exact_stats = bench("serve/hot_path(exact stats)", 20, || serve_run_stats(false));
+    let bounded_stats = bench("serve/hot_path(bounded stats)", 20, || serve_run_stats(true));
+    println!(
+        "  -> bounded stats cost {:+.1}% vs exact recorders (guard: <= 2%)",
+        (bounded_stats.mean_ns / exact_stats.mean_ns - 1.0) * 100.0
     );
 
     // --- PJRT dispatch (needs `make artifacts` and `--features pjrt`) ---

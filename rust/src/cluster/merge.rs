@@ -22,7 +22,7 @@ use super::sync::TraceEvent;
 use crate::config::CLOCK_HZ;
 use crate::power::{FleetEnergy, PowerModel};
 use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
-use crate::telemetry::{PhaseTotals, Telemetry, PHASES};
+use crate::telemetry::{PhaseTotals, SloEventKind, Telemetry, PHASES};
 use std::collections::BTreeMap;
 
 /// Cluster-wide serving statistics: the fleet-level [`ServeStats`] plus
@@ -88,17 +88,62 @@ pub struct ClusterStats {
     /// log plus the metrics registry. `None` when disabled — one pointer
     /// of overhead.
     pub telemetry: Option<Box<Telemetry>>,
+    /// `--bounded-stats`: every latency recorder (fleet and per-class,
+    /// lazily created ones included) is histogram-backed, and the event
+    /// fold feeds the telemetry histograms directly — O(buckets +
+    /// epochs) memory however many requests the run serves.
+    pub(crate) bounded: bool,
 }
 
 impl ClusterStats {
     pub(crate) fn new(shards: usize) -> Self {
-        ClusterStats { shards, ..Default::default() }
+        ClusterStats::with_mode(shards, false)
+    }
+
+    /// Stats in the given memory mode (`bounded` = `--bounded-stats`).
+    pub(crate) fn with_mode(shards: usize, bounded: bool) -> Self {
+        ClusterStats {
+            shards,
+            bounded,
+            serve: if bounded { ServeStats::bounded() } else { ServeStats::new() },
+            ..Default::default()
+        }
+    }
+
+    /// Whether the latency recorders are histogram-backed.
+    pub fn is_bounded(&self) -> bool {
+        self.bounded
+    }
+
+    /// A per-class entry in this run's memory mode.
+    fn class_entry(&mut self, class: TrafficClass) -> &mut ModelStats {
+        let bounded = self.bounded;
+        self.per_class.entry(class).or_insert_with(|| ModelStats::with_mode(bounded))
     }
 
     /// Record one classified arrival at cluster ingress.
     pub(crate) fn record_ingress(&mut self, req: &Request, class: TrafficClass) {
         self.serve.record_arrival(req);
-        self.per_class.entry(class).or_default().arrived += 1;
+        self.class_entry(class).arrived += 1;
+    }
+
+    /// SLO burn-rate alert totals over the run: `(raised, still active
+    /// at the end)`. `(0, 0)` without telemetry — the stats JSON never
+    /// goes null.
+    pub fn slo_alert_counts(&self) -> (u64, u64) {
+        let Some(t) = self.telemetry.as_ref() else { return (0, 0) };
+        let mut raised = 0u64;
+        let mut active = 0i64;
+        for e in &t.metrics.slo_events {
+            match e.kind {
+                SloEventKind::Raise => {
+                    raised += 1;
+                    active += 1;
+                }
+                SloEventKind::Clear => active -= 1,
+            }
+        }
+        (raised, active.max(0) as u64)
     }
 
     /// Latency percentile of one class, in milliseconds (`NaN` when the
@@ -221,6 +266,11 @@ impl ClusterStats {
             z(self.energy.avg_power_w(self.serve.end_cycle()))
         ));
         s.push_str(&format!("  \"throttled_batches\": {},\n", self.energy.throttled_batches));
+        // Burn-rate monitor totals (`telemetry::slo`); plain zeroes when
+        // telemetry is off, so the schema never shifts.
+        let (slo_raised, slo_active) = self.slo_alert_counts();
+        s.push_str(&format!("  \"slo_alerts_raised\": {slo_raised},\n"));
+        s.push_str(&format!("  \"slo_alerts_active\": {slo_active},\n"));
         // Cycle attribution (`wienna::telemetry`): fraction of every
         // completed request's end-to-end cycles spent in each phase.
         let fracs = self.serve.attr.fractions();
@@ -265,6 +315,16 @@ impl ClusterStats {
     pub fn metrics_json(&self, memo: Option<crate::cost::MemoStats>) -> String {
         let t = self.telemetry.as_ref().expect("run with ClusterConfig::telemetry enabled");
         crate::telemetry::metrics_json(t, &self.serve.attr, Some(&self.class_attr), memo)
+    }
+
+    /// [`ClusterStats::metrics_json`] with the epochs array left empty:
+    /// the summary line a `wienna-metrics-stream-v1` stream is sealed
+    /// with. `telemetry::stream_to_metrics_v1` splices the streamed
+    /// epoch lines back in to reproduce the buffered artifact byte for
+    /// byte.
+    pub fn metrics_json_summary(&self, memo: Option<crate::cost::MemoStats>) -> String {
+        let t = self.telemetry.as_ref().expect("run with ClusterConfig::telemetry enabled");
+        crate::telemetry::export::metrics_json_summary(t, &self.serve.attr, Some(&self.class_attr), memo)
     }
 
     /// Serialize the span log as a Chrome trace-event (Perfetto-loadable)
@@ -315,7 +375,8 @@ pub(crate) fn fold_events(
         };
         let ev = &by_shard[s][cursors[s]];
         cursors[s] += 1;
-        let m = stats.per_class.entry(ev.class).or_default();
+        let bounded = stats.bounded;
+        let m = stats.per_class.entry(ev.class).or_insert_with(|| ModelStats::with_mode(bounded));
         match ev.outcome {
             ShardEventOutcome::Completed => {
                 m.record_completion(&ev.req, ev.cycle);
@@ -339,6 +400,20 @@ pub(crate) fn fold_events(
                 m.failed += 1;
                 stats.serve.record_failed(&ev.req);
                 feedback(ev.cycle, &ev.req);
+            }
+        }
+        // Bounded mode has no span log to stream at finalize — the
+        // deterministically merged event stream feeds the telemetry
+        // histograms right here instead (same values, same order).
+        if stats.bounded && ev.outcome == ShardEventOutcome::Completed {
+            if let Some(t) = stats.telemetry.as_mut() {
+                let latency = cycles_to_ms(ev.cycle - ev.req.arrival);
+                let queue = cycles_to_ms(ev.queue_cycles);
+                t.metrics.latency_ms.record(latency);
+                t.metrics.queue_wait_ms.record(queue);
+                t.metrics.batch_size.record(ev.batch as f64);
+                t.metrics.class_latency_ms[ev.class.index()].record(latency);
+                t.metrics.class_queue_wait_ms[ev.class.index()].record(queue);
             }
         }
         if let Some(t) = trace.as_mut() {
@@ -414,6 +489,8 @@ mod tests {
             outcome: ShardEventOutcome::Completed,
             class,
             req: req(id, 0.0, 1e9),
+            queue_cycles: cycle / 2.0,
+            batch: 1,
         }
     }
 
@@ -502,7 +579,50 @@ mod tests {
         assert!(j.contains("\"tail_amplification\": "));
         assert!(j.contains("\"failover_goodput_rps\": 0"));
         assert!(j.contains("\"dead_shard_drain_ms\": 0"));
+        assert!(j.contains("\"slo_alerts_raised\": 0"), "SLO totals are part of the gated JSON");
+        assert!(j.contains("\"slo_alerts_active\": 0"));
         assert!(!j.contains(",\n  ]"), "no trailing comma before array close");
+    }
+
+    #[test]
+    fn bounded_fold_feeds_histograms_and_stays_within_the_bound() {
+        let events: Vec<ShardEvent> =
+            (0..200).map(|i| completion(100.0 + 37.0 * i as f64, i, TrafficClass::Batch)).collect();
+        let mut exact = ClusterStats::new(1);
+        let mut bounded = ClusterStats::with_mode(1, true);
+        bounded.telemetry = Some(Box::new(Telemetry { bounded: true, ..Default::default() }));
+        for e in &events {
+            exact.record_ingress(&e.req, e.class);
+            bounded.record_ingress(&e.req, e.class);
+        }
+        fold_events(&mut exact, &[events.clone()], |_, _| {}, None);
+        fold_events(&mut bounded, &[events], |_, _| {}, None);
+        finalize(&mut exact, vec![empty_outcome(7500.0)], &PowerModel::default());
+        finalize(&mut bounded, vec![empty_outcome(7500.0)], &PowerModel::default());
+
+        assert!(bounded.is_bounded());
+        assert_eq!(bounded.serve.exact_samples(), 0, "bounded mode grew a latency Vec");
+        assert_eq!(bounded.serve.completed(), exact.serve.completed());
+        let t = bounded.telemetry.as_ref().unwrap();
+        assert_eq!(t.metrics.latency_ms.count, 200, "fold feeds the registry in bounded mode");
+        assert_eq!(t.metrics.queue_wait_ms.count, 200);
+        assert_eq!(t.metrics.batch_size.count, 200);
+        assert_eq!(t.metrics.class_latency_ms[TrafficClass::Batch.index()].count, 200);
+        for p in [50.0, 95.0, 99.0] {
+            let ratio = bounded.serve.latency_ms(p) / exact.serve.latency_ms(p);
+            assert!(
+                ratio > 0.5 && ratio <= 2.0,
+                "p{p}: bounded {} vs exact {} outside the one-bucket bound",
+                bounded.serve.latency_ms(p),
+                exact.serve.latency_ms(p)
+            );
+            let cr = bounded.class_latency_ms(TrafficClass::Batch, p)
+                / exact.class_latency_ms(TrafficClass::Batch, p);
+            assert!(cr > 0.5 && cr <= 2.0, "per-class p{p} outside the bound");
+        }
+        // Double-finalize safety: `finish` must not re-stream the empty
+        // span log over the fold-fed histograms.
+        assert_eq!(t.metrics.latency_ms.count, 200);
     }
 
     #[test]

@@ -201,7 +201,7 @@ impl Cluster {
     /// deterministic epoch barriers, and drain everything admitted. Both
     /// open- and closed-loop sources are accepted (see [`sync`]).
     pub fn run(&self, source: &mut Source, horizon_cycles: f64) -> ClusterStats {
-        sync::run_sync(self, source, horizon_cycles, None)
+        sync::run_sync(self, source, horizon_cycles, None, None)
     }
 
     /// [`Cluster::run`], additionally returning every finalized request
@@ -211,8 +211,24 @@ impl Cluster {
     /// not); it is also a useful debugging artifact.
     pub fn run_traced(&self, source: &mut Source, horizon_cycles: f64) -> (ClusterStats, Vec<TraceEvent>) {
         let mut trace = Vec::new();
-        let stats = sync::run_sync(self, source, horizon_cycles, Some(&mut trace));
+        let stats = sync::run_sync(self, source, horizon_cycles, Some(&mut trace), None);
         (stats, trace)
+    }
+
+    /// [`Cluster::run`] with incremental metrics streaming: each epoch
+    /// barrier appends its sample (and any SLO raise/clear events) to
+    /// `writer` as `wienna-metrics-stream-v1` JSONL lines the moment it
+    /// completes. The writer only ever runs at the single-threaded
+    /// barrier, so the streamed byte sequence is identical at any worker
+    /// thread count. The caller finishes the artifact by writing the
+    /// summary line (see [`crate::telemetry::MetricsStreamWriter`]).
+    pub fn run_streaming(
+        &self,
+        source: &mut Source,
+        horizon_cycles: f64,
+        writer: &mut crate::telemetry::MetricsStreamWriter<'_>,
+    ) -> ClusterStats {
+        sync::run_sync(self, source, horizon_cycles, None, Some(writer))
     }
 }
 

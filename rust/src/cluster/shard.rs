@@ -82,6 +82,11 @@ pub(crate) struct ShardEvent {
     pub outcome: ShardEventOutcome,
     pub class: TrafficClass,
     pub req: Request,
+    /// Queue-phase cycles of a completion (0.0 for sheds/failures) —
+    /// feeds the bounded-stats queue-wait histogram without a span log.
+    pub queue_cycles: f64,
+    /// Size of the batch a completion rode in (0 for sheds/failures).
+    pub batch: u64,
 }
 
 /// Everything a finished shard hands back for the final accounting merge
@@ -167,6 +172,9 @@ pub(crate) struct ShardSim<'a> {
     class_reroutes: [u64; NUM_CLASSES],
     outage_slo_met: u64,
     token_wait: f64,
+    /// Token-wait cycles accrued per package (shard-local order); sums
+    /// to `token_wait`. Feeds the per-package epoch gauge tracks.
+    token_wait_by_pkg: Vec<f64>,
 }
 
 impl<'a> ShardSim<'a> {
@@ -189,7 +197,7 @@ impl<'a> ShardSim<'a> {
             preemptions: 0,
             attr_run: PhaseTotals::default(),
             attr_class: [PhaseTotals::default(); NUM_CLASSES],
-            recorder: Recorder::new(cfg.telemetry.enabled),
+            recorder: Recorder::new(cfg.telemetry.spans),
             faults: ShardFaults::empty(n),
             retry_pending: Vec::new(),
             retry_seq: 0,
@@ -199,6 +207,7 @@ impl<'a> ShardSim<'a> {
             class_reroutes: [0; NUM_CLASSES],
             outage_slo_met: 0,
             token_wait: 0.0,
+            token_wait_by_pkg: vec![0.0; n],
         }
     }
 
@@ -441,6 +450,8 @@ impl<'a> ShardSim<'a> {
                     outcome: ShardEventOutcome::Shed(ShedReason::Overload),
                     class,
                     req,
+                    queue_cycles: 0.0,
+                    batch: 0,
                 });
                 return;
             }
@@ -476,6 +487,8 @@ impl<'a> ShardSim<'a> {
                     outcome: ShardEventOutcome::Shed(reason),
                     class,
                     req,
+                    queue_cycles: 0.0,
+                    batch: 0,
                 });
             }
             Ok(()) => {
@@ -526,6 +539,8 @@ impl<'a> ShardSim<'a> {
                     outcome: ShardEventOutcome::Shed(ShedReason::QueueFull),
                     class: *victim_class,
                     req: victim,
+                    queue_cycles: 0.0,
+                    batch: 0,
                 });
                 return true;
             }
@@ -655,6 +670,7 @@ impl<'a> ShardSim<'a> {
                     decision.cost.latency += wait;
                     decision.cost.dist_busy += wait;
                     self.token_wait += wait;
+                    self.token_wait_by_pkg[i] += wait;
                 }
             }
             let est1 = self.est1(i, kind);
@@ -685,8 +701,10 @@ impl<'a> ShardSim<'a> {
             if !self.faults.is_empty() && self.faults.in_outage(t) && t <= req.deadline {
                 self.outage_slo_met += 1;
             }
+            let mut queue_cycles = 0.0;
             if let Some((dispatched, cost)) = span {
                 let phases = PhaseBreakdown::attribute(req.arrival, dispatched, t, &cost);
+                queue_cycles = phases.queue;
                 self.attr_run.record(&phases);
                 self.attr_class[class.index()].record(&phases);
                 self.packages[i].attr.record(&phases);
@@ -705,7 +723,14 @@ impl<'a> ShardSim<'a> {
                     });
                 }
             }
-            self.events.push(ShardEvent { cycle: t, outcome: ShardEventOutcome::Completed, class, req });
+            self.events.push(ShardEvent {
+                cycle: t,
+                outcome: ShardEventOutcome::Completed,
+                class,
+                req,
+                queue_cycles,
+                batch: batch as u64,
+            });
         }
     }
 
@@ -721,14 +746,21 @@ impl<'a> ShardSim<'a> {
             return;
         }
         self.class_retries[class.index()] += 1;
-        let ready = t + self.cfg.retry.backoff_cycles(attempt);
+        let ready = t + self.cfg.retry.backoff_cycles_jittered(req.id, attempt);
         self.retry_seq += 1;
         self.retry_pending.push((ready, self.retry_seq, class, req));
     }
 
     /// Emit a terminal failure event (retries exhausted or stranded).
     fn fail(&mut self, t: f64, req: Request, class: TrafficClass) {
-        self.events.push(ShardEvent { cycle: t, outcome: ShardEventOutcome::Failed, class, req });
+        self.events.push(ShardEvent {
+            cycle: t,
+            outcome: ShardEventOutcome::Failed,
+            class,
+            req,
+            queue_cycles: 0.0,
+            batch: 0,
+        });
     }
 
     /// Earliest pending retry-ready cycle, if any.
@@ -992,6 +1024,17 @@ impl<'a> ShardSim<'a> {
     /// so far (numerator of the epoch MAC-occupancy gauge).
     pub(crate) fn dist_busy_cycles(&self) -> f64 {
         self.packages.iter().map(|p| p.dist_busy_cycles).sum()
+    }
+
+    /// Distribution-plane busy cycles per package, shard-local order
+    /// (per-package MAC-occupancy gauge numerators).
+    pub(crate) fn dist_busy_by_pkg(&self) -> impl Iterator<Item = f64> + '_ {
+        self.packages.iter().map(|p| p.dist_busy_cycles)
+    }
+
+    /// Token-wait cycles per package, shard-local order.
+    pub(crate) fn token_wait_by_pkg(&self) -> &[f64] {
+        &self.token_wait_by_pkg
     }
 
     /// Packages on this shard (MAC-occupancy gauge denominator).

@@ -57,7 +57,9 @@ use super::shard::{ClassedRequest, ShardSim};
 use super::{Cluster, ClusterStats, TrafficClass, NUM_CLASSES};
 use crate::cost::par;
 use crate::serve::{ms_to_cycles, Request, Source};
-use crate::telemetry::{EpochSample, FlowRecord};
+use crate::telemetry::{
+    EpochSample, FlowRecord, MetricsStreamWriter, SloMonitor, Telemetry,
+};
 use std::sync::Mutex;
 
 /// Epoch-synchronization knobs (`ClusterConfig::sync`).
@@ -125,6 +127,7 @@ pub(crate) fn run_sync(
     source: &mut Source,
     horizon: f64,
     mut trace: Option<&mut Vec<TraceEvent>>,
+    mut stream: Option<&mut MetricsStreamWriter<'_>>,
 ) -> ClusterStats {
     let cfg = &cluster.cfg;
     assert!(
@@ -137,9 +140,15 @@ pub(crate) fn run_sync(
         "closed-loop feedback and stealing need finite epochs"
     );
     let shards = cluster.shards();
-    let mut stats = ClusterStats::new(shards);
+    let mut stats = ClusterStats::with_mode(shards, cfg.telemetry.bounded);
+    // The burn-rate monitor lives outside `stats` (it is evaluation
+    // state, not a result); only its raise/clear events land in the
+    // registry and the artifacts.
+    let mut monitor: Option<SloMonitor> = None;
     if cfg.telemetry.enabled {
-        stats.telemetry = Some(Box::default());
+        stats.telemetry =
+            Some(Box::new(Telemetry { bounded: cfg.telemetry.bounded, ..Default::default() }));
+        monitor = Some(SloMonitor::new(cfg.telemetry.slo));
     }
 
     // Open-loop without stealing has no cross-shard traffic: one
@@ -234,7 +243,7 @@ pub(crate) fn run_sync(
                     t.log.flows.extend(flows);
                 }
             }
-            sample_epoch(&mut stats, &sims, end);
+            sample_epoch(&mut stats, &sims, end, &mut monitor, &mut stream);
             if !cfg.faults.is_empty() {
                 for s in 0..shards {
                     let g = sims[s].lock().expect("shard mutex");
@@ -314,7 +323,7 @@ pub(crate) fn run_sync(
                 .iter()
                 .map(|m| m.lock().expect("shard mutex").now())
                 .fold(0.0f64, f64::max);
-            sample_epoch(&mut stats, &sims, last);
+            sample_epoch(&mut stats, &sims, last, &mut monitor, &mut stream);
             // The fast path runs open-loop only, so failing stranded
             // work here cannot re-arm anything: one cleanup fold drains
             // the shards for `finish()`.
@@ -373,11 +382,20 @@ pub(crate) fn run_sync(
 
 /// Sample the epoch-edge gauges into the metrics registry (no-op when
 /// telemetry is off): post-steal queue depth, in-flight batches, and
-/// inferred draw across all shards, plus the cumulative completion /
-/// shed / steal counters already folded into `stats`. Runs at the
-/// single-threaded barrier and locks shards in id order, so the series
-/// is bit-identical at any worker-thread count.
-fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) {
+/// inferred draw across all shards — fleet-wide and per package — plus
+/// the cumulative completion / shed / steal counters already folded
+/// into `stats`. The SLO burn-rate monitor observes the same barrier,
+/// and a streaming writer (when armed) appends the sample and any
+/// raise/clear events immediately. Runs at the single-threaded barrier
+/// and locks shards in id order, so the series — and the streamed
+/// artifact — is bit-identical at any worker-thread count.
+fn sample_epoch(
+    stats: &mut ClusterStats,
+    sims: &[Mutex<ShardSim>],
+    cycle: f64,
+    monitor: &mut Option<SloMonitor>,
+    stream: &mut Option<&mut MetricsStreamWriter<'_>>,
+) {
     if stats.telemetry.is_none() {
         return;
     }
@@ -387,6 +405,9 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
     let mut dist_busy = 0.0f64;
     let mut token_wait = 0.0f64;
     let mut packages = 0usize;
+    let mut mac_occupancy_by_pkg = Vec::new();
+    let mut token_wait_by_pkg = Vec::new();
+    let pkg_denominator = if cycle > 0.0 && cycle.is_finite() { cycle } else { f64::INFINITY };
     for sim in sims {
         let g = sim.lock().expect("shard mutex");
         queued += g.queued_total_all() as u64;
@@ -395,6 +416,16 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
         dist_busy += g.dist_busy_cycles();
         token_wait += g.token_wait_cycles();
         packages += g.package_count();
+        // Shard-major package order — the same order `stats.packages`
+        // ends up in, so the report's top-N indices are stable.
+        for busy in g.dist_busy_by_pkg() {
+            mac_occupancy_by_pkg.push(if pkg_denominator.is_finite() {
+                busy / pkg_denominator
+            } else {
+                0.0
+            });
+        }
+        token_wait_by_pkg.extend_from_slice(g.token_wait_by_pkg());
     }
     // Fleet-average occupancy of the shared wireless medium so far: the
     // fraction of elapsed package-cycles spent driving the distribution
@@ -405,8 +436,12 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
         0.0
     };
     let mut shed = [0u64; NUM_CLASSES];
+    let mut slo_counts = [(0u64, 0u64); NUM_CLASSES];
     for c in TrafficClass::ALL {
-        shed[c.index()] = stats.per_class.get(&c).map_or(0, |m| m.shed);
+        if let Some(m) = stats.per_class.get(&c) {
+            shed[c.index()] = m.shed;
+            slo_counts[c.index()] = (m.completed, m.slo_violated);
+        }
     }
     let sample = EpochSample {
         epoch: stats.epochs,
@@ -419,8 +454,24 @@ fn sample_epoch(stats: &mut ClusterStats, sims: &[Mutex<ShardSim>], cycle: f64) 
         power_w,
         mac_occupancy,
         token_wait_cycles: token_wait,
+        mac_occupancy_by_pkg,
+        token_wait_by_pkg,
     };
-    stats.telemetry.as_mut().expect("checked above").metrics.epochs.push(sample);
+    // Burn-rate evaluation at the same barrier, over the same
+    // deterministically merged counters.
+    let events = match monitor.as_mut() {
+        Some(m) => m.observe(stats.epochs, cycle, &slo_counts),
+        None => Vec::new(),
+    };
+    let t = stats.telemetry.as_mut().expect("checked above");
+    if let Some(w) = stream.as_mut() {
+        w.write_epoch(&sample);
+        for e in &events {
+            w.write_slo_event(e);
+        }
+    }
+    t.metrics.epochs.push(sample);
+    t.metrics.slo_events.extend(events);
 }
 
 /// The epoch-barrier stealing pass at barrier cycle `bar`: repeatedly

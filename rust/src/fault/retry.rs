@@ -1,10 +1,20 @@
-//! Capped exponential backoff for failed dispatches.
+//! Capped exponential backoff, with seeded decorrelating jitter, for
+//! failed dispatches.
 //!
 //! When a package dies under a request's in-flight batch (or a retry
 //! lands on a shard whose packages are all dead), the request is not
-//! silently completed or dropped: it waits a deterministic backoff and
-//! tries again, up to a cap, after which it is **failed** — a terminal
-//! disposition the closed-loop clients observe like any completion.
+//! silently completed or dropped: it waits a backoff and tries again,
+//! up to a cap, after which it is **failed** — a terminal disposition
+//! the closed-loop clients observe like any completion.
+//!
+//! Synchronized deterministic backoff is the worst case for retry
+//! storms: every request failed by one package kill retries at exactly
+//! the same cycle and hammers the survivors in lockstep. The jitter
+//! spreads those retries across a window *without* giving up the
+//! cluster's bit-identical-at-any-thread-count guarantee — it is a pure
+//! hash of `(jitter_seed, request id, attempt)`, independent of
+//! simulation state or thread schedule, exactly like
+//! `ClassMix::assign`'s class tagging.
 
 /// Retry knobs for requests whose dispatch died under them.
 #[derive(Debug, Clone, Copy)]
@@ -15,6 +25,15 @@ pub struct RetryPolicy {
     pub base_backoff_cycles: f64,
     /// Ceiling on the exponential backoff, in cycles.
     pub max_backoff_cycles: f64,
+    /// Jitter fraction in `[0, 1]`: retry `attempt` of request `id`
+    /// waits `backoff * (1 - jitter * u(id, attempt))` with
+    /// `u ∈ [0, 1)` — full backoff at 0.0, "anywhere in the second
+    /// half of the window" at the 0.5 default, full decorrelation at
+    /// 1.0. Always `<=` the un-jittered backoff, so the cap holds.
+    pub jitter: f64,
+    /// Seed for the per-request jitter hash; fixed by default so runs
+    /// stay reproducible, settable to decorrelate whole experiments.
+    pub jitter_seed: u64,
 }
 
 impl Default for RetryPolicy {
@@ -23,17 +42,44 @@ impl Default for RetryPolicy {
             max_retries: 3,
             base_backoff_cycles: crate::serve::ms_to_cycles(0.1),
             max_backoff_cycles: crate::serve::ms_to_cycles(1.0),
+            jitter: 0.5,
+            jitter_seed: 0x9E3779B9,
         }
     }
 }
 
 impl RetryPolicy {
-    /// Backoff before retry `attempt` (1-based): `base * 2^(attempt-1)`,
-    /// capped. Deterministic — no jitter, so the 1/2/4-thread byte
-    /// identity of the stats JSON is untouched.
+    /// Un-jittered backoff before retry `attempt` (1-based):
+    /// `base * 2^(attempt-1)`, capped. The jittered schedule never
+    /// exceeds this — it is both the storm worst case and the test
+    /// anchor.
     pub fn backoff_cycles(&self, attempt: u32) -> f64 {
         let exp = attempt.saturating_sub(1).min(52);
         (self.base_backoff_cycles * (1u64 << exp) as f64).min(self.max_backoff_cycles)
+    }
+
+    /// Jittered backoff before retry `attempt` of request `id`: the
+    /// capped exponential scaled into
+    /// `[(1 - jitter) * backoff, backoff]` by a SplitMix64-style hash
+    /// of `(jitter_seed, id, attempt)`. Deterministic — a pure function
+    /// of its arguments, so the same request retries at the same cycle
+    /// under any shard layout or thread count.
+    pub fn backoff_cycles_jittered(&self, id: u64, attempt: u32) -> f64 {
+        let base = self.backoff_cycles(attempt);
+        if self.jitter <= 0.0 {
+            return base;
+        }
+        // SplitMix64 finalizer over the combined key: one avalanche
+        // pass decorrelates consecutive ids and attempts fully.
+        let mut z = self
+            .jitter_seed
+            .wrapping_add(id.wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add((attempt as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+        base * (1.0 - self.jitter.min(1.0) * u)
     }
 }
 
@@ -43,10 +89,70 @@ mod tests {
 
     #[test]
     fn backoff_doubles_then_caps() {
-        let p = RetryPolicy { max_retries: 5, base_backoff_cycles: 10.0, max_backoff_cycles: 35.0 };
+        let p = RetryPolicy {
+            max_retries: 5,
+            base_backoff_cycles: 10.0,
+            max_backoff_cycles: 35.0,
+            ..Default::default()
+        };
         assert_eq!(p.backoff_cycles(1), 10.0);
         assert_eq!(p.backoff_cycles(2), 20.0);
         assert_eq!(p.backoff_cycles(3), 35.0, "capped below 40");
         assert_eq!(p.backoff_cycles(100), 35.0, "huge attempts stay finite at the cap");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_stays_in_window() {
+        let p = RetryPolicy {
+            max_retries: 5,
+            base_backoff_cycles: 10.0,
+            max_backoff_cycles: 1000.0,
+            jitter: 0.5,
+            jitter_seed: 42,
+        };
+        for id in 0..200u64 {
+            for attempt in 1..=4u32 {
+                let a = p.backoff_cycles_jittered(id, attempt);
+                let b = p.backoff_cycles_jittered(id, attempt);
+                assert_eq!(a, b, "pure function of (seed, id, attempt)");
+                let full = p.backoff_cycles(attempt);
+                assert!(
+                    a > 0.0 && a <= full && a >= full * 0.5 - 1e-9,
+                    "id {id} attempt {attempt}: {a} outside [{}, {full}]",
+                    full * 0.5
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_desynchronizes_the_storm() {
+        // The whole point: two requests failed by the same kill must not
+        // retry at the same cycle.
+        let p = RetryPolicy::default();
+        let offsets: Vec<f64> = (0..50).map(|id| p.backoff_cycles_jittered(id, 1)).collect();
+        let mut distinct = offsets.clone();
+        distinct.sort_by(f64::total_cmp);
+        distinct.dedup();
+        assert!(distinct.len() >= 45, "only {} distinct backoffs across 50 ids", distinct.len());
+    }
+
+    #[test]
+    fn zero_jitter_recovers_the_synchronized_schedule() {
+        let p = RetryPolicy { jitter: 0.0, ..Default::default() };
+        for id in [0u64, 7, 99] {
+            for attempt in 1..=3u32 {
+                assert_eq!(p.backoff_cycles_jittered(id, attempt), p.backoff_cycles(attempt));
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_seed_steers_the_offsets() {
+        let a = RetryPolicy { jitter_seed: 1, ..Default::default() };
+        let b = RetryPolicy { jitter_seed: 2, ..Default::default() };
+        let differs =
+            (0..50u64).any(|id| a.backoff_cycles_jittered(id, 1) != b.backoff_cycles_jittered(id, 1));
+        assert!(differs, "the seed must steer the jitter");
     }
 }

@@ -11,8 +11,9 @@
 //! wienna cluster   [--packages N] [--shards N] [--threads N] [--mix ...] [--policy ...]
 //!                  [--load F | --rps R | --closed-loop N | --client-trace FILE]
 //!                  [--steal] [--epoch-cycles N] [--queue-cap N|none] [--no-shed-late]
-//!                  [--no-preempt] [--faults SPEC] [--contention F]
-//!                  [--stats-json FILE] [--trace-out FILE] [--metrics-out FILE]
+//!                  [--no-preempt] [--faults SPEC] [--contention F] [--bounded-stats]
+//!                  [--stats-json FILE] [--trace-out FILE] [--metrics-out FILE(.jsonl streams)]
+//! wienna report    <metrics.json|.jsonl> [--trace FILE] [--top N]   (artifact analyzer)
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -45,7 +46,9 @@ const USAGE: &str = "usage: wienna <simulate|sweep|serve|cluster|search|e2e|sim-
   e2e           real-numerics inference through the PJRT artifacts (needs --features pjrt)
   sim-validate  analytical mesh model vs cycle-level simulator
   breakdown     Table-3 area/power breakdown
-  report        condensed Fig-7/Fig-9 evaluation of one workload
+  report        condensed Fig-7/Fig-9 evaluation of one workload, or — with a positional
+                path — offline analysis of an emitted metrics artifact:
+                report <metrics.json|.jsonl> [--trace FILE] [--top N]
 common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --design interposer-c|interposer-a|wienna-c|wienna-a
               --strategy kp-cp|np-cp|yp-xp|adaptive  --batch N  --chiplets N  --verbose
@@ -58,6 +61,7 @@ serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
               --trace-out FILE (Chrome trace-event JSON; load in Perfetto or chrome://tracing)
               --metrics-out FILE (metrics-registry JSON: latency/queue-wait/batch histograms,
               cycle attribution, layer-memo counters)
+              --bounded-stats (histogram-backed percentiles, no per-request latency vectors)
 cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|ll|edf  --mix ...
               --slo-ms MS  --load F (x capacity) | --rps R (absolute)  --duration-ms MS  --seed N
               --queue-cap N|none  --no-shed-late  --no-preempt  --stats-json FILE  --verbose
@@ -75,8 +79,12 @@ cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|
               --contention F (shared-medium MAC background load in [0,1): stretches the dist phase
               via token-queueing delay; sheds best-effort when the medium saturates)
               --trace-out FILE (Chrome trace-event JSON of the merged span log; Perfetto-loadable)
-              --metrics-out FILE (metrics-registry JSON incl. per-epoch gauges + memo counters;
-              byte-identical at any --threads)
+              --metrics-out FILE (metrics-registry JSON incl. per-epoch gauges, per-package MAC
+              occupancy and SLO burn-rate events; byte-identical at any --threads; a .jsonl
+              suffix streams wienna-metrics-stream-v1 lines incrementally at each epoch barrier)
+              --bounded-stats (O(buckets+epochs) telemetry: percentiles come off log-bucketed
+              histograms — within one power-of-two bucket of exact — and the per-request
+              latency vectors are never grown)
 search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
               --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
               --class-slos I,B,E (per-class p99 targets in ms, 'inf' allowed; sizes on the
@@ -103,6 +111,7 @@ impl Flags {
                 || key == "calibrated-eta"
                 || key == "pareto"
                 || key == "steal"
+                || key == "bounded-stats"
             {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -361,7 +370,8 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
             (Source::poisson(mix, rate, f.u64("seed", 42)?), ms_to_cycles(duration_ms), offered)
         }
     };
-    let mut stats = ServeStats::new();
+    let mut stats =
+        if f.flag("bounded-stats") { ServeStats::bounded() } else { ServeStats::new() };
     let end = fleet.run(&mut source, horizon, &mut stats);
 
     println!(
@@ -455,7 +465,11 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     };
     let mix = parse_mix(&f.str("mix", "mixed"), slo_ms)?;
     let mix_kinds: Vec<ModelKind> = mix.entries.iter().map(|e| e.kind).collect();
-    let telemetry_on = f.0.contains_key("trace-out") || f.0.contains_key("metrics-out");
+    let bounded = f.flag("bounded-stats");
+    let trace_on = f.0.contains_key("trace-out");
+    // --bounded-stats arms the registry even without an export path: the
+    // histograms ARE the percentile source in that mode.
+    let telemetry_on = trace_on || f.0.contains_key("metrics-out") || bounded;
 
     let mut sync = SyncConfig { steal: f.flag("steal"), ..Default::default() };
     if let Some(e) = f.0.get("epoch-cycles") {
@@ -474,7 +488,15 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         sync,
         power: parse_power(f)?,
         calibrated_eta: f.flag("calibrated-eta"),
-        telemetry: wienna::telemetry::TelemetryConfig { enabled: telemetry_on },
+        telemetry: wienna::telemetry::TelemetryConfig {
+            enabled: telemetry_on,
+            // Spans are the one O(requests) surface: on for --trace-out,
+            // otherwise only in the exact (un-bounded) mode, where
+            // Telemetry::finish feeds the histograms from them.
+            spans: trace_on || (telemetry_on && !bounded),
+            bounded,
+            ..Default::default()
+        },
         ..Default::default()
     };
     if let Some(t) = f.0.get("threads") {
@@ -549,8 +571,24 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         wienna::telemetry::prewarm_cost_model(&specs, &mix_kinds, &cfg.batcher);
     }
     let cluster = Cluster::new(specs, cfg);
+    // A .jsonl suffix on --metrics-out selects the incremental stream:
+    // epoch samples and SLO events land on disk at each barrier instead
+    // of buffering until the run ends.
+    let metrics_path = f.0.get("metrics-out").cloned();
+    let streaming = metrics_path.as_deref().is_some_and(|p| p.ends_with(".jsonl"));
     let t0 = std::time::Instant::now();
-    let stats = cluster.run(&mut source, horizon);
+    let stats = if streaming {
+        let path = metrics_path.as_deref().expect("streaming implies a path");
+        let mut file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
+        let mut w = wienna::telemetry::MetricsStreamWriter::new(&mut file);
+        let stats = cluster.run_streaming(&mut source, horizon, &mut w);
+        w.write_summary(&stats.metrics_json_summary(Some(wienna::cost::memo::stats())));
+        w.finish().map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        stats
+    } else {
+        cluster.run(&mut source, horizon)
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     println!(
@@ -582,6 +620,17 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         z(stats.serve.violation_rate()) * 100.0,
         z(stats.serve.mean_batch()),
     );
+    if telemetry_on {
+        let (raised, active) = stats.slo_alert_counts();
+        println!(
+            "slo burn-rate alerts: {raised} raised, {active} still active{}",
+            if stats.is_bounded() {
+                " | bounded stats: histogram percentiles (one-bucket error bound)"
+            } else {
+                ""
+            }
+        );
+    }
     if chaos_on {
         println!(
             "chaos: failed {} | retries {} | reroutes {} | tail amplification {:.2}x | failover goodput {:.0} req/s | dead-shard drain {:.2} ms",
@@ -653,11 +702,18 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     }
     if let Some(path) = f.0.get("metrics-out") {
         let memo = wienna::cost::memo::stats();
-        std::fs::write(path, stats.metrics_json(Some(memo)))
-            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        if !streaming {
+            std::fs::write(path, stats.metrics_json(Some(memo)))
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        }
         println!(
-            "metrics json -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
-            memo.hits, memo.misses, memo.evictions, memo.entries, memo.capacity
+            "metrics {} -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
+            if streaming { "stream (wienna-metrics-stream-v1)" } else { "json" },
+            memo.hits,
+            memo.misses,
+            memo.evictions,
+            memo.entries,
+            memo.capacity
         );
     }
     Ok(())
@@ -882,6 +938,13 @@ fn main() -> anyhow::Result<()> {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
+    // `wienna report <artifact>`: the positional form analyzes an emitted
+    // metrics artifact (buffered JSON or JSONL stream); the flags-only
+    // form below keeps the paper evaluation. Dispatched before
+    // Flags::parse, which rejects positional arguments.
+    if cmd == "report" && args.get(1).is_some_and(|a| !a.starts_with("--")) {
+        return wienna::report::artifact::run(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "simulate" => cmd_simulate(&flags),

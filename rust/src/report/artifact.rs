@@ -1,0 +1,592 @@
+//! `wienna report <metrics.json|.jsonl>` — the offline artifact
+//! analyzer: everything it renders comes from an emitted telemetry
+//! artifact alone, no re-simulation.
+//!
+//! Accepts either the buffered `wienna-metrics-v1` JSON or a
+//! `wienna-metrics-stream-v1` JSONL stream (reconstructed through
+//! [`crate::telemetry::stream_to_metrics_v1`] first), and renders:
+//!
+//! * the percentile table — p50/p95/p99/mean per histogram track,
+//!   re-estimated from the exported log buckets via
+//!   [`LogHistogram::quantile`] (within one power-of-two bucket of the
+//!   exact value, see that method's error bound);
+//! * the phase-attribution bottleneck verdict (+ the `dist_alarm`
+//!   shared-medium flag);
+//! * the SLO burn-rate alarm timeline with exact raise/clear cycles;
+//! * the top-N packages by MAC occupancy at the last epoch barrier,
+//!   with their cumulative token-wait cycles;
+//! * optionally (`--trace FILE`) a Chrome-trace event census.
+//!
+//! The JSON reader is a minimal recursive-descent parser over the
+//! crate's own hand-rolled emitters — offline build, no serde.
+
+use crate::anyhow::{bail, Context, Result};
+use crate::report::table::fmt;
+use crate::report::Table;
+use crate::telemetry::{LogHistogram, METRICS_STREAM_SCHEMA, PHASES};
+
+/// A parsed JSON value. Object fields keep emission order (`Vec`, not a
+/// map) — the artifacts are schema-pinned, order is meaningful.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// `get` + number in one step; `None` for missing, null or non-numeric.
+    fn num(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+}
+
+struct Parser {
+    c: Vec<char>,
+    i: usize,
+}
+
+impl Parser {
+    fn ws(&mut self) {
+        while self.i < self.c.len() && self.c[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.c.get(self.i).copied()
+    }
+
+    fn eat(&mut self, ch: char) -> Result<()> {
+        if self.peek() == Some(ch) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("JSON parse error at char {}: expected '{ch}'", self.i)
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        for ch in word.chars() {
+            self.eat(ch)?;
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat('"')?;
+        let mut out = String::new();
+        loop {
+            let ch = self.peek().context("JSON parse error: unterminated string")?;
+            self.i += 1;
+            match ch {
+                '"' => return Ok(out),
+                '\\' => {
+                    let esc = self.peek().context("JSON parse error: dangling escape")?;
+                    self.i += 1;
+                    match esc {
+                        '"' => out.push('"'),
+                        '\\' => out.push('\\'),
+                        '/' => out.push('/'),
+                        'n' => out.push('\n'),
+                        't' => out.push('\t'),
+                        'r' => out.push('\r'),
+                        'u' => {
+                            let hex: String = (0..4)
+                                .map(|_| {
+                                    let h = self.peek().unwrap_or('!');
+                                    self.i += 1;
+                                    h
+                                })
+                                .collect();
+                            let code = u32::from_str_radix(&hex, 16)
+                                .map_err(|_| crate::anyhow::Error::msg("bad \\u escape"))?;
+                            out.push(char::from_u32(code).context("bad \\u codepoint")?);
+                        }
+                        other => bail!("JSON parse error: unknown escape '\\{other}'"),
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || "+-.eE".contains(c))
+        {
+            self.i += 1;
+        }
+        let text: String = self.c[start..self.i].iter().collect();
+        let v: f64 = text
+            .parse()
+            .map_err(|_| crate::anyhow::Error::msg(format!("bad JSON number '{text}'")))?;
+        Ok(Json::Num(v))
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek().context("JSON parse error: unexpected end of input")? {
+            '{' => {
+                self.eat('{')?;
+                let mut fields = Vec::new();
+                self.ws();
+                if self.peek() == Some('}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.ws();
+                    let key = self.string()?;
+                    self.ws();
+                    self.eat(':')?;
+                    let v = self.value()?;
+                    fields.push((key, v));
+                    self.ws();
+                    match self.peek() {
+                        Some(',') => self.i += 1,
+                        Some('}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => bail!("JSON parse error at char {}: expected ',' or '}}'", self.i),
+                    }
+                }
+            }
+            '[' => {
+                self.eat('[')?;
+                let mut items = Vec::new();
+                self.ws();
+                if self.peek() == Some(']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(',') => self.i += 1,
+                        Some(']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => bail!("JSON parse error at char {}: expected ',' or ']'", self.i),
+                    }
+                }
+            }
+            '"' => Ok(Json::Str(self.string()?)),
+            't' => self.literal("true", Json::Bool(true)),
+            'f' => self.literal("false", Json::Bool(false)),
+            'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed).
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { c: text.chars().collect(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.c.len() {
+        bail!("JSON parse error: trailing garbage at char {}", p.i);
+    }
+    Ok(v)
+}
+
+/// Finite → engineering format, non-finite (exported as `null`) → "-".
+fn cell(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => fmt(x),
+        _ => "-".to_string(),
+    }
+}
+
+/// Rebuild a [`LogHistogram`] from its exported bucket list so the
+/// analyzer can re-run quantile estimation offline.
+fn histogram_from(obj: &Json) -> Result<(String, LogHistogram)> {
+    let name = obj.get("name").and_then(Json::as_str).context("histogram missing name")?;
+    let mut h = LogHistogram::default();
+    h.count = obj.num("count").context("histogram missing count")? as u64;
+    h.sum = obj.get("sum").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    for b in obj.get("buckets").and_then(Json::as_arr).context("histogram missing buckets")? {
+        let exp = match b.get("exp") {
+            Some(Json::Null) => i32::MIN, // the zero/negative/NaN sentinel
+            Some(j) => j.as_f64().context("bucket exp is not a number")? as i32,
+            None => bail!("bucket missing exp"),
+        };
+        let n = b.num("count").context("bucket missing count")? as u64;
+        h.buckets.insert(exp, n);
+    }
+    Ok((name.to_string(), h))
+}
+
+/// Render the full report from artifact text (buffered JSON or JSONL
+/// stream) plus an optional Chrome trace. Pure string-to-string so the
+/// tests can pin the output without touching the filesystem.
+pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<String> {
+    let streamed = artifact.starts_with(&format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}"));
+    let buffered;
+    let text = if streamed {
+        buffered = crate::telemetry::stream_to_metrics_v1(artifact)
+            .context("malformed or truncated wienna-metrics-stream-v1 stream")?;
+        &buffered
+    } else {
+        artifact
+    };
+    let root = parse_json(text).context("artifact is not valid JSON")?;
+    let schema = root.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
+    if schema != "wienna-metrics-v1" {
+        bail!("unsupported artifact schema '{schema}' (expected wienna-metrics-v1, or a wienna-metrics-stream-v1 stream)");
+    }
+
+    let mut out = String::new();
+    let requests = root.num("requests").unwrap_or(0.0) as u64;
+    let epochs = root.get("epochs").and_then(Json::as_arr).unwrap_or(&[]);
+    out.push_str(&format!(
+        "artifact: wienna-metrics-v1{} | {requests} completed requests | {} epoch samples\n\n",
+        if streamed { " (reconstructed from wienna-metrics-stream-v1 stream)" } else { "" },
+        epochs.len()
+    ));
+
+    // Percentile table, re-estimated from the exported buckets.
+    let mut t = Table::new(
+        "latency / queue-wait / batch percentiles (histogram-estimated)",
+        &["track", "count", "p50", "p95", "p99", "mean"],
+    );
+    for hj in root.get("histograms").and_then(Json::as_arr).unwrap_or(&[]) {
+        let (name, h) = histogram_from(hj)?;
+        if h.count == 0 {
+            continue;
+        }
+        t.row(vec![
+            name,
+            h.count.to_string(),
+            cell(Some(h.quantile(50.0))),
+            cell(Some(h.quantile(95.0))),
+            cell(Some(h.quantile(99.0))),
+            cell(Some(h.mean())),
+        ]);
+    }
+    if t.rows.is_empty() {
+        t.row(vec!["(no samples)".into(), "0".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+    }
+    out.push_str(&t.render());
+    out.push_str("(estimates are within one power-of-two bucket of the exact rank: est/exact in (1/2, 2])\n\n");
+
+    // Phase-attribution bottleneck verdict.
+    let mut best: Option<(&str, f64)> = None;
+    let mut frac_line = String::new();
+    for name in PHASES {
+        let v = root.num(&format!("{name}_frac"));
+        if !frac_line.is_empty() {
+            frac_line.push_str("  ");
+        }
+        frac_line.push_str(&format!("{name} {}", cell(v)));
+        if let Some(v) = v {
+            if best.is_none() || v > best.expect("checked").1 {
+                best = Some((name, v));
+            }
+        }
+    }
+    out.push_str(&format!("phase attribution (fraction of completed-request cycles): {frac_line}\n"));
+    match best {
+        Some((name, v)) => {
+            out.push_str(&format!("bottleneck verdict: {name} ({:.1}% of cycles)", v * 100.0));
+            if root.get("dist_alarm") == Some(&Json::Bool(true)) {
+                out.push_str(" | DIST ALARM: shared wireless medium is the bottleneck");
+            }
+            out.push('\n');
+        }
+        None => out.push_str("bottleneck verdict: no completed requests\n"),
+    }
+    out.push('\n');
+
+    // SLO burn-rate alarm timeline.
+    match root.get("slo") {
+        Some(slo) => {
+            let raised = slo.num("alerts_raised").unwrap_or(0.0) as u64;
+            let cleared = slo.num("alerts_cleared").unwrap_or(0.0) as u64;
+            out.push_str(&format!(
+                "slo burn-rate alerts: {raised} raised, {cleared} cleared, {} still active\n",
+                raised.saturating_sub(cleared)
+            ));
+            let events = slo.get("events").and_then(Json::as_arr).unwrap_or(&[]);
+            if !events.is_empty() {
+                let mut t = Table::new(
+                    "alarm timeline",
+                    &["epoch", "cycle", "class", "window", "event", "burn rate"],
+                );
+                for e in events {
+                    t.row(vec![
+                        cell(e.num("epoch")),
+                        cell(e.num("cycle")),
+                        e.get("class").and_then(Json::as_str).unwrap_or("-").to_string(),
+                        e.get("window").and_then(Json::as_str).unwrap_or("-").to_string(),
+                        e.get("kind").and_then(Json::as_str).unwrap_or("-").to_string(),
+                        cell(e.num("burn_rate")),
+                    ]);
+                }
+                out.push_str(&t.render());
+            }
+        }
+        None => out.push_str("slo burn-rate alerts: not recorded (pre-slo artifact)\n"),
+    }
+    out.push('\n');
+
+    // Per-package MAC occupancy at the last barrier, hottest first.
+    if let Some(last) = epochs.last() {
+        let occ = last.get("mac_occupancy_by_pkg").and_then(Json::as_arr).unwrap_or(&[]);
+        let wait = last.get("token_wait_by_pkg").and_then(Json::as_arr).unwrap_or(&[]);
+        if !occ.is_empty() {
+            let mut rows: Vec<(usize, f64, f64)> = occ
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    (
+                        i,
+                        v.as_f64().unwrap_or(f64::NAN),
+                        wait.get(i).and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    )
+                })
+                .collect();
+            rows.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            let shown = rows.len().min(top.max(1));
+            let mut t = Table::new(
+                &format!(
+                    "top {shown} of {} packages by MAC occupancy (last barrier, shard-major index)",
+                    rows.len()
+                ),
+                &["package", "mac occupancy", "token wait (cycles)"],
+            );
+            for &(i, o, w) in rows.iter().take(shown) {
+                t.row(vec![format!("pkg{i}"), cell(Some(o)), cell(Some(w))]);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+    }
+
+    // Optional Chrome-trace census.
+    if let Some(trace_text) = trace {
+        let tj = parse_json(trace_text).context("trace file is not valid JSON")?;
+        let events = tj.get("traceEvents").and_then(Json::as_arr).unwrap_or(&[]);
+        let count = |ph: &str| {
+            events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some(ph)).count()
+        };
+        out.push_str(&format!(
+            "trace: {} events | {} request slices, {} instants, {} counter samples, {} flow arrows, {} metadata rows\n",
+            events.len(),
+            count("X"),
+            count("i"),
+            count("C"),
+            count("s") + count("f"),
+            count("M"),
+        ));
+    }
+    Ok(out)
+}
+
+/// CLI entry: `wienna report <metrics.json|.jsonl> [--trace FILE] [--top N]`.
+pub fn run(args: &[String]) -> Result<()> {
+    let path = args.first().context("report needs an artifact path")?;
+    let mut trace_path: Option<&String> = None;
+    let mut top = 8usize;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--trace" => {
+                trace_path = Some(args.get(i + 1).context("--trace needs a file")?);
+                i += 2;
+            }
+            "--top" => {
+                let v = args.get(i + 1).context("--top needs a number")?;
+                top = v
+                    .parse()
+                    .map_err(|_| crate::anyhow::Error::msg(format!("--top: bad number '{v}'")))?;
+                i += 2;
+            }
+            other => bail!("unknown report flag '{other}' (expected --trace FILE or --top N)"),
+        }
+    }
+    let artifact =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let trace = match trace_path {
+        Some(p) => Some(std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?),
+        None => None,
+    };
+    print!("{}", render_report(&artifact, trace.as_deref(), top)?);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parser_round_trips_the_shapes_the_emitters_use() {
+        let doc = r#"{
+  "schema": "x",
+  "n": 3.5,
+  "neg": -2e3,
+  "flag": true,
+  "nothing": null,
+  "arr": [1, 2, { "exp": null, "count": 1 }],
+  "text": "a\"b\\c\nd"
+}"#;
+        let j = parse_json(doc).expect("valid doc");
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.num("n"), Some(3.5));
+        assert_eq!(j.num("neg"), Some(-2000.0));
+        assert_eq!(j.get("flag"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("nothing"), Some(&Json::Null));
+        let arr = j.get("arr").and_then(Json::as_arr).expect("arr");
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("exp"), Some(&Json::Null));
+        assert_eq!(j.get("text").and_then(Json::as_str), Some("a\"b\\c\nd"));
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("{} trailing").is_err());
+        assert!(parse_json("{\"a\": nope}").is_err());
+    }
+
+    fn sample_artifact() -> String {
+        let mut t = crate::telemetry::Telemetry::default();
+        for v in [1.0, 2.0, 4.0, 8.0, 100.0] {
+            t.metrics.latency_ms.record(v);
+        }
+        t.metrics.epochs.push(crate::telemetry::EpochSample {
+            epoch: 1,
+            cycle: 5000.0,
+            completed: 5,
+            mac_occupancy_by_pkg: vec![0.1, 0.9, 0.4],
+            token_wait_by_pkg: vec![0.0, 120.0, 30.0],
+            ..Default::default()
+        });
+        t.metrics.slo_events.push(crate::telemetry::SloEvent {
+            epoch: 1,
+            cycle: 5000.0,
+            class: crate::cluster::TrafficClass::Interactive,
+            window: crate::telemetry::SloWindow::Fast,
+            kind: crate::telemetry::SloEventKind::Raise,
+            burn_rate: 12.0,
+        });
+        let mut attr = crate::telemetry::PhaseTotals::default();
+        attr.requests = 5;
+        attr.queue = 10.0;
+        attr.dist = 70.0;
+        attr.compute = 20.0;
+        crate::telemetry::metrics_json(&t, &attr, None, None)
+    }
+
+    #[test]
+    fn report_renders_every_section_from_the_artifact_alone() {
+        let s = render_report(&sample_artifact(), None, 2).expect("well-formed artifact");
+        assert!(s.contains("artifact: wienna-metrics-v1 | 5 completed requests | 1 epoch samples"));
+        assert!(s.contains("latency_ms"), "percentile table row:\n{s}");
+        assert!(s.contains("bottleneck verdict: dist (70.0% of cycles)"));
+        assert!(s.contains("DIST ALARM"), "70% dist must carry the alarm:\n{s}");
+        assert!(s.contains("slo burn-rate alerts: 1 raised, 0 cleared, 1 still active"));
+        assert!(s.contains("alarm timeline"));
+        assert!(s.contains("top 2 of 3 packages"));
+        let pkg1 = s.find("pkg1").expect("hottest package listed");
+        let pkg2 = s.find("pkg2").expect("runner-up listed");
+        assert!(pkg1 < pkg2, "sorted hottest-first");
+        assert!(!s.contains("pkg0"), "--top 2 drops the coolest package");
+    }
+
+    #[test]
+    fn report_reads_a_stream_identically_to_the_buffered_artifact() {
+        // Round-trip the buffered artifact through the streaming format:
+        // the report must not care which one it was handed.
+        let buffered = sample_artifact();
+        let from_buffered = render_report(&buffered, None, 8).expect("buffered");
+
+        // Re-emit as a stream: pull the epochs back out via the parser.
+        let mut t = crate::telemetry::Telemetry::default();
+        for v in [1.0, 2.0, 4.0, 8.0, 100.0] {
+            t.metrics.latency_ms.record(v);
+        }
+        t.metrics.epochs.push(crate::telemetry::EpochSample {
+            epoch: 1,
+            cycle: 5000.0,
+            completed: 5,
+            mac_occupancy_by_pkg: vec![0.1, 0.9, 0.4],
+            token_wait_by_pkg: vec![0.0, 120.0, 30.0],
+            ..Default::default()
+        });
+        t.metrics.slo_events.push(crate::telemetry::SloEvent {
+            epoch: 1,
+            cycle: 5000.0,
+            class: crate::cluster::TrafficClass::Interactive,
+            window: crate::telemetry::SloWindow::Fast,
+            kind: crate::telemetry::SloEventKind::Raise,
+            burn_rate: 12.0,
+        });
+        let mut attr = crate::telemetry::PhaseTotals::default();
+        attr.requests = 5;
+        attr.queue = 10.0;
+        attr.dist = 70.0;
+        attr.compute = 20.0;
+        let mut sink: Vec<u8> = Vec::new();
+        let mut w = crate::telemetry::MetricsStreamWriter::new(&mut sink);
+        for e in &t.metrics.epochs {
+            w.write_epoch(e);
+        }
+        w.write_summary(&crate::telemetry::metrics_json_summary(&t, &attr, None, None));
+        w.finish().expect("Vec sink");
+        let stream = String::from_utf8(sink).expect("utf8");
+
+        let from_stream = render_report(&stream, None, 8).expect("streamed");
+        assert!(from_stream.contains("reconstructed from wienna-metrics-stream-v1"));
+        assert_eq!(
+            from_stream.replace(" (reconstructed from wienna-metrics-stream-v1 stream)", ""),
+            from_buffered,
+            "same artifact, same report"
+        );
+    }
+
+    #[test]
+    fn report_rejects_foreign_schemas_and_counts_trace_events() {
+        let err = render_report("{\"schema\": \"something-else\"}\n", None, 8).unwrap_err();
+        assert!(err.to_string().contains("unsupported artifact schema"));
+
+        let trace = "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n\
+                     {\"name\":\"a\",\"ph\":\"X\",\"pid\":0,\"tid\":0,\"ts\":0,\"dur\":1},\n\
+                     {\"name\":\"b\",\"ph\":\"C\",\"pid\":0,\"tid\":0,\"ts\":0}\n]}\n";
+        let s = render_report(&sample_artifact(), Some(trace), 8).expect("with trace");
+        assert!(s.contains("trace: 2 events | 1 request slices, 0 instants, 1 counter samples"));
+    }
+}

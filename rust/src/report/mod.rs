@@ -1,6 +1,7 @@
 //! Rendering layer (substrate S12): ASCII tables and CSV series used by
 //! the benchmark harnesses to print paper-figure-shaped output.
 
+pub mod artifact;
 pub mod table;
 
 pub use table::Table;

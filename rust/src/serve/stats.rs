@@ -1,21 +1,33 @@
 //! Serving statistics: tail latency, goodput, SLO violations, batches.
 //!
-//! Latency percentiles use the exact nearest-rank definition over all
-//! recorded samples (the simulator records every completion, so there is
-//! no need for streaming sketches), checked against a sorted-vector
-//! oracle in the tests.
+//! Latency percentiles have two modes. The exact path records every
+//! completion in a `Vec` and answers nearest-rank percentiles off a
+//! sorted view — the test oracle. The bounded path (`--bounded-stats`)
+//! streams every sample into a `telemetry::metrics::LogHistogram`
+//! instead and answers from [`LogHistogram::quantile`]: O(buckets)
+//! memory no matter how many requests the run serves, within one
+//! power-of-two bucket of the exact answer (the documented bound —
+//! `estimate/exact ∈ (1/2, 2]`).
 
 use super::request::{cycles_to_ms, ModelKind, Request};
 use crate::config::CLOCK_HZ;
+use crate::telemetry::LogHistogram;
 use std::collections::BTreeMap;
 
-/// Exact latency sample recorder.
+/// Latency sample recorder: exact (`Vec`-backed, the default) or
+/// bounded (histogram-backed, constant memory).
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples: Vec<f64>,
     /// Lazily sorted view, built at most once per recorder state (pushes
     /// invalidate it) so querying p50/p95/p99/p100 sorts only once.
     sorted: std::cell::OnceCell<Vec<f64>>,
+    /// Bounded mode: the histogram replaces `samples` entirely (the Vec
+    /// never grows), percentiles come from `LogHistogram::quantile`.
+    hist: Option<Box<LogHistogram>>,
+    /// Exact running max for bounded mode (`f64::max` skips the NaN
+    /// seed on the first sample).
+    max: f64,
 }
 
 impl LatencyRecorder {
@@ -23,17 +35,45 @@ impl LatencyRecorder {
         LatencyRecorder::default()
     }
 
+    /// A bounded-memory recorder: O(buckets), not O(samples).
+    pub fn bounded() -> Self {
+        LatencyRecorder {
+            hist: Some(Box::default()),
+            max: f64::NAN,
+            ..Default::default()
+        }
+    }
+
+    /// Whether this recorder is histogram-backed.
+    pub fn is_bounded(&self) -> bool {
+        self.hist.is_some()
+    }
+
+    /// How many samples sit in the exact `Vec` — stays 0 for the whole
+    /// life of a bounded recorder (bench-guarded in `perf_hotpath`).
+    pub fn exact_samples(&self) -> usize {
+        self.samples.len()
+    }
+
     pub fn push(&mut self, v: f64) {
+        if let Some(h) = &mut self.hist {
+            h.record(v);
+            self.max = self.max.max(v);
+            return;
+        }
         self.samples.push(v);
         self.sorted = std::cell::OnceCell::new();
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        match &self.hist {
+            Some(h) => h.count as usize,
+            None => self.samples.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.len() == 0
     }
 
     fn sorted(&self) -> &[f64] {
@@ -49,8 +89,13 @@ impl LatencyRecorder {
 
     /// Nearest-rank percentile: the smallest sample such that at least
     /// `p`% of samples are `<=` it. `NaN` when no samples were recorded.
+    /// Bounded recorders answer from the histogram — same rank, value
+    /// interpolated within its power-of-two bucket.
     pub fn percentile(&self, p: f64) -> f64 {
         assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+        if let Some(h) = &self.hist {
+            return h.quantile(p);
+        }
         if self.samples.is_empty() {
             return f64::NAN;
         }
@@ -61,6 +106,9 @@ impl LatencyRecorder {
     }
 
     pub fn mean(&self) -> f64 {
+        if let Some(h) = &self.hist {
+            return if h.count == 0 { f64::NAN } else { h.mean() };
+        }
         if self.samples.is_empty() {
             f64::NAN
         } else {
@@ -69,7 +117,10 @@ impl LatencyRecorder {
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NAN, f64::max)
+        match &self.hist {
+            Some(_) => self.max,
+            None => self.samples.iter().copied().fold(f64::NAN, f64::max),
+        }
     }
 }
 
@@ -93,6 +144,14 @@ pub struct ModelStats {
 }
 
 impl ModelStats {
+    /// Stats whose latency recorder matches the run's memory mode.
+    pub fn with_mode(bounded: bool) -> Self {
+        ModelStats {
+            latency: if bounded { LatencyRecorder::bounded() } else { LatencyRecorder::new() },
+            ..Default::default()
+        }
+    }
+
     /// Record one completion at `cycle` against `req`'s deadline. The
     /// single definition of "met the SLO" — fleet-level, per-model and
     /// the cluster's per-class accounting all funnel through here.
@@ -124,6 +183,10 @@ pub struct ServeStats {
     pub attr: crate::telemetry::PhaseTotals,
     dispatches: u64,
     end_cycle: f64,
+    /// `--bounded-stats`: every latency recorder (aggregate and
+    /// per-model, including ones lazily created later) is
+    /// histogram-backed.
+    bounded: bool,
 }
 
 impl ServeStats {
@@ -131,9 +194,32 @@ impl ServeStats {
         ServeStats::default()
     }
 
+    /// Stats in bounded-memory mode: O(buckets) latency recorders.
+    pub fn bounded() -> Self {
+        ServeStats { all: ModelStats::with_mode(true), bounded: true, ..Default::default() }
+    }
+
+    /// Whether the latency recorders are histogram-backed.
+    pub fn is_bounded(&self) -> bool {
+        self.bounded
+    }
+
+    /// Exact `Vec` samples held across all recorders — stays 0 for a
+    /// bounded run (the `perf_hotpath` allocation guard).
+    pub fn exact_samples(&self) -> usize {
+        self.all.latency.exact_samples()
+            + self.per_model.values().map(|m| m.latency.exact_samples()).sum::<usize>()
+    }
+
+    /// A per-model entry in this run's memory mode.
+    fn model_entry(&mut self, kind: ModelKind) -> &mut ModelStats {
+        let bounded = self.bounded;
+        self.per_model.entry(kind).or_insert_with(|| ModelStats::with_mode(bounded))
+    }
+
     pub fn record_arrival(&mut self, req: &Request) {
         self.all.arrived += 1;
-        self.per_model.entry(req.kind).or_default().arrived += 1;
+        self.model_entry(req.kind).arrived += 1;
     }
 
     pub fn record_dispatch(&mut self, batch: u64) {
@@ -149,7 +235,7 @@ impl ServeStats {
 
     pub fn record_completion(&mut self, req: &Request, completion_cycle: f64) {
         self.all.record_completion(req, completion_cycle);
-        self.per_model.entry(req.kind).or_default().record_completion(req, completion_cycle);
+        self.model_entry(req.kind).record_completion(req, completion_cycle);
     }
 
     /// Record a request refused by admission control. The request still
@@ -157,7 +243,7 @@ impl ServeStats {
     /// `arrived == completed + shed + failed` holds after a drained run.
     pub fn record_shed(&mut self, req: &Request) {
         self.all.shed += 1;
-        self.per_model.entry(req.kind).or_default().shed += 1;
+        self.model_entry(req.kind).shed += 1;
     }
 
     /// Record a request that failed terminally under fault injection
@@ -166,7 +252,7 @@ impl ServeStats {
     /// sheds: `arrived == completed + shed + failed`.
     pub fn record_failed(&mut self, req: &Request) {
         self.all.failed += 1;
-        self.per_model.entry(req.kind).or_default().failed += 1;
+        self.model_entry(req.kind).failed += 1;
     }
 
     /// Mark the end of the run (cycle of the last event).
@@ -326,6 +412,58 @@ mod tests {
         assert_eq!(rec.percentile(100.0), 7.0);
         assert_eq!(rec.mean(), 5.0);
         assert_eq!(rec.max(), 7.0);
+    }
+
+    #[test]
+    fn bounded_recorder_never_grows_the_vec() {
+        let mut rng = Rng::new(7);
+        let mut exact = LatencyRecorder::new();
+        let mut bounded = LatencyRecorder::bounded();
+        for _ in 0..5000 {
+            let v = 1.0 + rng.next_f32() as f64 * 1e5;
+            exact.push(v);
+            bounded.push(v);
+        }
+        assert!(bounded.is_bounded());
+        assert_eq!(bounded.exact_samples(), 0, "bounded mode must not grow the Vec");
+        assert_eq!(bounded.len(), exact.len());
+        crate::assert_close!(bounded.mean(), exact.mean());
+        assert_eq!(bounded.max(), exact.max(), "bounded max is tracked exactly");
+        for p in [1.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let ratio = bounded.percentile(p) / exact.percentile(p);
+            assert!(
+                ratio > 0.5 && ratio <= 2.0,
+                "p{p}: bounded {} vs exact {} outside the one-bucket bound",
+                bounded.percentile(p),
+                exact.percentile(p)
+            );
+        }
+    }
+
+    #[test]
+    fn bounded_recorder_edge_cases() {
+        let rec = LatencyRecorder::bounded();
+        assert!(rec.is_empty());
+        assert!(rec.percentile(50.0).is_nan());
+        assert!(rec.mean().is_nan());
+        assert!(rec.max().is_nan());
+        let mut rec = LatencyRecorder::bounded();
+        rec.push(7.0);
+        assert_eq!(rec.max(), 7.0, "first push replaces the NaN max seed");
+        assert_eq!(rec.len(), 1);
+    }
+
+    #[test]
+    fn bounded_stats_propagate_to_lazy_model_entries() {
+        let mut s = ServeStats::bounded();
+        let a = req(0, ModelKind::TinyCnn, 0.0, 100.0);
+        s.record_arrival(&a);
+        s.record_completion(&a, 90.0);
+        assert!(s.is_bounded());
+        assert!(s.per_model[&ModelKind::TinyCnn].latency.is_bounded());
+        assert_eq!(s.exact_samples(), 0);
+        assert_eq!(s.completed(), 1);
+        assert!(s.latency_ms(50.0) > 0.0);
     }
 
     fn req(id: u64, kind: ModelKind, arrival: f64, slo: f64) -> Request {

@@ -1,11 +1,28 @@
-//! Serializers: the metrics JSON and the Chrome trace-event export.
+//! Serializers: the metrics JSON, the `wienna-metrics-stream-v1`
+//! incremental JSONL writer (and its reconstructor), and the Chrome
+//! trace-event export.
 //!
-//! Both are hand-rolled like `ClusterStats::to_json` — no JSON crate —
+//! All are hand-rolled like `ClusterStats::to_json` — no JSON crate —
 //! and deterministic: every number renders through `format!("{v}")`
 //! (shortest round-trip), every collection iterates in a fixed order,
 //! and non-finite values become `null`. The field names and their order
 //! are pinned by `rust/testdata/telemetry_schema.golden`; update that
 //! fixture only for a deliberate schema change.
+//!
+//! ## Streaming
+//!
+//! The buffered artifact ([`metrics_json`]) holds the whole epoch
+//! series in memory until the run ends. The streaming mode instead
+//! appends one JSONL line per epoch barrier as the run progresses
+//! ([`MetricsStreamWriter`]): a schema header, `{"epoch_sample": ...}`
+//! lines carrying exactly the text the buffered export would have
+//! placed in its `epochs` array, `{"slo_event": ...}` lines the moment
+//! a burn-rate alert raises or clears, and a final `{"summary": "..."}`
+//! line holding the buffered artifact with an *empty* epochs array.
+//! [`stream_to_metrics_v1`] splices the epoch lines back into the
+//! summary's empty slot — reproducing [`metrics_json`]'s output **byte
+//! for byte** by construction, which is what the CI determinism gate
+//! checks across 1/2/4 worker threads.
 //!
 //! The trace export follows the Chrome trace-event format (the JSON
 //! Perfetto and `chrome://tracing` load): `"X"` complete slices for
@@ -19,7 +36,9 @@ use crate::cluster::{TrafficClass, NUM_CLASSES};
 use crate::cost::memo::MemoStats;
 use crate::serve::cycles_to_ms;
 
+use super::metrics::EpochSample;
 use super::profile::PhaseTotals;
+use super::slo::{SloEvent, SloEventKind};
 use super::Telemetry;
 
 fn num(v: f64) -> String {
@@ -30,12 +49,19 @@ fn num(v: f64) -> String {
     }
 }
 
+fn num_list(vs: &[f64]) -> String {
+    vs.iter().map(|&v| num(v)).collect::<Vec<_>>().join(", ")
+}
+
 /// Dist-phase blowup alarm threshold: when completed requests spend
 /// this fraction (or more) of their end-to-end cycles in the `dist`
 /// phase, the shared wireless medium is the bottleneck — expected under
 /// injected contention (`wienna::fault`), a red flag otherwise. The
 /// metrics JSON carries the verdict as `"dist_alarm"`.
 pub const DIST_ALARM_FRAC: f64 = 0.4;
+
+/// Schema tag on the first line of a streamed metrics artifact.
+pub const METRICS_STREAM_SCHEMA: &str = "wienna-metrics-stream-v1";
 
 /// Simulated cycle → trace-event timestamp (µs).
 fn ts_us(cycle: f64) -> f64 {
@@ -51,6 +77,52 @@ fn frac_fields(indent: &str, t: &PhaseTotals) -> String {
     s
 }
 
+/// One epoch sample as a single-line JSON object — shared verbatim by
+/// the buffered `epochs` array and the streamed `epoch_sample` lines,
+/// so reconstruction is byte-exact by construction.
+fn epoch_json(e: &EpochSample) -> String {
+    let mut s = format!(
+        "{{ \"epoch\": {}, \"cycle\": {}, \"queued\": {}, \"in_flight_batches\": {}, \
+         \"completed\": {}",
+        e.epoch,
+        num(e.cycle),
+        e.queued,
+        e.in_flight_batches,
+        e.completed
+    );
+    for (class, shed) in TrafficClass::ALL.iter().zip(e.shed) {
+        s.push_str(&format!(", \"shed_{}\": {shed}", class.label().replace('-', "_")));
+    }
+    s.push_str(&format!(
+        ", \"steals\": {}, \"power_w\": {}, \"mac_occupancy\": {}, \"token_wait_cycles\": {}",
+        e.steals,
+        num(e.power_w),
+        num(e.mac_occupancy),
+        num(e.token_wait_cycles)
+    ));
+    s.push_str(&format!(
+        ", \"mac_occupancy_by_pkg\": [{}], \"token_wait_by_pkg\": [{}] }}",
+        num_list(&e.mac_occupancy_by_pkg),
+        num_list(&e.token_wait_by_pkg)
+    ));
+    s
+}
+
+/// One SLO raise/clear event as a single-line JSON object — shared by
+/// the buffered `slo.events` array and the streamed `slo_event` lines.
+fn slo_event_json(e: &SloEvent) -> String {
+    format!(
+        "{{ \"epoch\": {}, \"cycle\": {}, \"class\": \"{}\", \"window\": \"{}\", \
+         \"kind\": \"{}\", \"burn_rate\": {} }}",
+        e.epoch,
+        num(e.cycle),
+        e.class.label(),
+        e.window.label(),
+        e.kind.label(),
+        num(e.burn_rate)
+    )
+}
+
 /// Serialize the metrics registry (plus the always-on attribution sums
 /// and, optionally, the process-wide cost-memo counters) as JSON.
 ///
@@ -62,6 +134,29 @@ pub fn metrics_json(
     attr: &PhaseTotals,
     class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
     memo: Option<MemoStats>,
+) -> String {
+    metrics_json_impl(t, attr, class_attr, memo, &t.metrics.epochs)
+}
+
+/// [`metrics_json`] with the `epochs` array left empty: the payload of
+/// a stream's final `summary` line. [`stream_to_metrics_v1`] splices
+/// the streamed epoch lines back into the empty slot to reproduce the
+/// buffered artifact exactly.
+pub fn metrics_json_summary(
+    t: &Telemetry,
+    attr: &PhaseTotals,
+    class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
+    memo: Option<MemoStats>,
+) -> String {
+    metrics_json_impl(t, attr, class_attr, memo, &[])
+}
+
+fn metrics_json_impl(
+    t: &Telemetry,
+    attr: &PhaseTotals,
+    class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
+    memo: Option<MemoStats>,
+    epochs: &[EpochSample],
 ) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"schema\": \"wienna-metrics-v1\",\n");
@@ -122,33 +217,33 @@ pub fn metrics_json(
     }
     s.push_str("  ],\n");
     s.push_str("  \"epochs\": [\n");
-    for (i, e) in t.metrics.epochs.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{ \"epoch\": {}, \"cycle\": {}, \"queued\": {}, \
-             \"in_flight_batches\": {}, \"completed\": {}",
-            e.epoch,
-            num(e.cycle),
-            e.queued,
-            e.in_flight_batches,
-            e.completed
-        ));
-        for (class, shed) in TrafficClass::ALL.iter().zip(e.shed) {
-            s.push_str(&format!(", \"shed_{}\": {shed}", class.label().replace('-', "_")));
-        }
-        s.push_str(&format!(
-            ", \"steals\": {}, \"power_w\": {}, \"mac_occupancy\": {}, \
-             \"token_wait_cycles\": {} }}",
-            e.steals,
-            num(e.power_w),
-            num(e.mac_occupancy),
-            num(e.token_wait_cycles)
-        ));
-        if i + 1 < t.metrics.epochs.len() {
+    for (i, e) in epochs.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&epoch_json(e));
+        if i + 1 < epochs.len() {
             s.push(',');
         }
         s.push('\n');
     }
     s.push_str("  ],\n");
+    // The burn-rate monitor's verdict: raise/clear counts plus the full
+    // event timeline with exact cycles. The opening line carries the
+    // scalar fields so the only 4-space-indented lines in this block
+    // are the event objects (the schema golden keys on that shape).
+    let raised = t.metrics.slo_events.iter().filter(|e| e.kind == SloEventKind::Raise).count();
+    let cleared = t.metrics.slo_events.len() - raised;
+    s.push_str(&format!(
+        "  \"slo\": {{ \"alerts_raised\": {raised}, \"alerts_cleared\": {cleared}, \"events\": [\n"
+    ));
+    for (i, e) in t.metrics.slo_events.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&slo_event_json(e));
+        if i + 1 < t.metrics.slo_events.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ] },\n");
     match memo {
         Some(m) => {
             s.push_str("  \"memo\": {\n");
@@ -165,6 +260,143 @@ pub fn metrics_json(
     s.push('}');
     s.push('\n');
     s
+}
+
+fn escape_json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 16);
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn unescape_json_string(s: &str) -> Option<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next()? {
+                '\\' => out.push('\\'),
+                '"' => out.push('"'),
+                'n' => out.push('\n'),
+                _ => return None,
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Some(out)
+}
+
+/// Incremental `wienna-metrics-stream-v1` JSONL writer.
+///
+/// Bounded-memory counterpart of buffering the run and calling
+/// [`metrics_json`] at the end: the header goes out on construction,
+/// [`MetricsStreamWriter::write_epoch`] appends each barrier's sample
+/// the moment it is taken (only ever called single-threaded, at the
+/// epoch barrier), [`MetricsStreamWriter::write_slo_event`] appends
+/// burn-rate raises/clears as they fire, and the caller seals the
+/// artifact with [`MetricsStreamWriter::write_summary`]. I/O errors are
+/// deferred — the simulation never unwinds mid-epoch over a full disk —
+/// and surfaced by [`MetricsStreamWriter::finish`].
+pub struct MetricsStreamWriter<'a> {
+    w: &'a mut dyn std::io::Write,
+    err: Option<std::io::Error>,
+}
+
+impl<'a> MetricsStreamWriter<'a> {
+    /// Wrap a sink and emit the schema header line.
+    pub fn new(w: &'a mut dyn std::io::Write) -> Self {
+        let mut s = MetricsStreamWriter { w, err: None };
+        s.put(&format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}"));
+        s
+    }
+
+    fn put(&mut self, line: &str) {
+        if self.err.is_some() {
+            return;
+        }
+        let r = self.w.write_all(line.as_bytes()).and_then(|()| self.w.write_all(b"\n"));
+        if let Err(e) = r {
+            self.err = Some(e);
+        }
+    }
+
+    /// Append one epoch sample (exactly the buffered export's line).
+    pub fn write_epoch(&mut self, e: &EpochSample) {
+        self.put(&format!("{{\"epoch_sample\": {}}}", epoch_json(e)));
+    }
+
+    /// Append one SLO raise/clear event as it fires.
+    pub fn write_slo_event(&mut self, e: &SloEvent) {
+        self.put(&format!("{{\"slo_event\": {}}}", slo_event_json(e)));
+    }
+
+    /// Seal the artifact: the buffered metrics JSON with an empty
+    /// epochs array ([`metrics_json_summary`]), JSON-string-escaped.
+    pub fn write_summary(&mut self, summary: &str) {
+        self.put(&format!("{{\"summary\": \"{}\"}}", escape_json_string(summary)));
+    }
+
+    /// Surface the first deferred I/O error, if any.
+    pub fn finish(self) -> std::io::Result<()> {
+        match self.err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Reconstruct the buffered `wienna-metrics-v1` artifact from a
+/// complete `wienna-metrics-stream-v1` stream: unescape the summary
+/// line and splice the streamed epoch lines into its empty `epochs`
+/// slot. Returns `None` on a malformed or truncated stream (wrong
+/// header, unknown line shape, or no summary). The result is
+/// byte-identical to what [`metrics_json`] would have produced — both
+/// sides render each epoch through the same single-line serializer.
+pub fn stream_to_metrics_v1(stream: &str) -> Option<String> {
+    let mut lines = stream.lines();
+    let header = lines.next()?;
+    if header != format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}") {
+        return None;
+    }
+    let mut epochs: Vec<&str> = Vec::new();
+    let mut summary: Option<String> = None;
+    for line in lines {
+        if let Some(rest) = line.strip_prefix("{\"epoch_sample\": ") {
+            epochs.push(rest.strip_suffix('}')?);
+        } else if let Some(rest) = line.strip_prefix("{\"summary\": \"") {
+            summary = Some(unescape_json_string(rest.strip_suffix("\"}")?)?);
+        } else if line.starts_with("{\"slo_event\": ") || line.is_empty() {
+            // Event lines are for live consumers; the summary already
+            // carries the full slo block. Blank lines are tolerated.
+        } else {
+            return None;
+        }
+    }
+    let summary = summary?;
+    let empty_slot = "  \"epochs\": [\n  ],\n";
+    let idx = summary.find(empty_slot)?;
+    let mut spliced = String::from("  \"epochs\": [\n");
+    for (i, e) in epochs.iter().enumerate() {
+        spliced.push_str("    ");
+        spliced.push_str(e);
+        if i + 1 < epochs.len() {
+            spliced.push(',');
+        }
+        spliced.push('\n');
+    }
+    spliced.push_str("  ],\n");
+    let mut out = String::with_capacity(summary.len() + spliced.len());
+    out.push_str(&summary[..idx]);
+    out.push_str(&spliced);
+    out.push_str(&summary[idx + empty_slot.len()..]);
+    Some(out)
 }
 
 fn class_json(class: Option<TrafficClass>) -> String {
@@ -291,6 +523,7 @@ pub fn chrome_trace(t: &Telemetry) -> String {
 mod tests {
     use super::*;
     use crate::telemetry::metrics::EpochSample;
+    use crate::telemetry::slo::{SloEvent, SloEventKind, SloWindow};
     use crate::telemetry::span::{FlowRecord, PreemptSpan, ShedSpan, SpanRecord};
     use crate::telemetry::PhaseBreakdown;
     use crate::cluster::ShedReason;
@@ -327,7 +560,23 @@ mod tests {
             to_shard: 2,
             cycle: 2000.0,
         });
-        t.metrics.epochs.push(EpochSample { epoch: 0, cycle: 4000.0, queued: 3, ..Default::default() });
+        t.metrics.epochs.push(EpochSample {
+            epoch: 0,
+            cycle: 4000.0,
+            queued: 3,
+            mac_occupancy_by_pkg: vec![0.25, 0.5],
+            token_wait_by_pkg: vec![0.0, 12.0],
+            ..Default::default()
+        });
+        t.metrics.epochs.push(EpochSample { epoch: 1, cycle: 8000.0, ..Default::default() });
+        t.metrics.slo_events.push(SloEvent {
+            epoch: 1,
+            cycle: 8000.0,
+            class: TrafficClass::Interactive,
+            window: SloWindow::Fast,
+            kind: SloEventKind::Raise,
+            burn_rate: 9.5,
+        });
         t.metrics.latency_ms.record(2.5);
         t
     }
@@ -366,6 +615,10 @@ mod tests {
         assert!(s.contains("\"memo\": null"));
         assert!(s.contains("\"schema\": \"wienna-metrics-v1\""));
         assert!(s.contains("\"dist_alarm\": false"), "an empty run never alarms");
+        assert!(
+            s.contains("\"slo\": { \"alerts_raised\": 0, \"alerts_cleared\": 0, \"events\": ["),
+            "the slo block is present even when no alert ever fired"
+        );
     }
 
     #[test]
@@ -387,5 +640,70 @@ mod tests {
         assert!(s.contains("\"hits\": 10"));
         assert!(s.contains("\"hit_rate\": "));
         assert!(s.contains("\"buckets\": [{ \"exp\": 1, \"count\": 1 }]"));
+    }
+
+    #[test]
+    fn epoch_line_carries_the_per_package_gauges_and_slo_events_render() {
+        let t = sample_telemetry();
+        let s = metrics_json(&t, &PhaseTotals::default(), None, None);
+        assert!(s.contains("\"mac_occupancy_by_pkg\": [0.25, 0.5]"));
+        assert!(s.contains("\"token_wait_by_pkg\": [0, 12]"));
+        assert!(s.contains("\"slo\": { \"alerts_raised\": 1, \"alerts_cleared\": 0, \"events\": ["));
+        assert!(s.contains(
+            "{ \"epoch\": 1, \"cycle\": 8000, \"class\": \"interactive\", \
+             \"window\": \"fast\", \"kind\": \"raise\", \"burn_rate\": 9.5 }"
+        ));
+    }
+
+    #[test]
+    fn stream_reconstructs_the_buffered_artifact_byte_for_byte() {
+        let t = sample_telemetry();
+        let attr = PhaseTotals::default();
+        let buffered = metrics_json(&t, &attr, None, None);
+
+        let mut sink: Vec<u8> = Vec::new();
+        let mut w = MetricsStreamWriter::new(&mut sink);
+        for e in &t.metrics.epochs {
+            w.write_epoch(e);
+        }
+        for ev in &t.metrics.slo_events {
+            w.write_slo_event(ev);
+        }
+        let summary = metrics_json_summary(&t, &attr, None, None);
+        w.write_summary(&summary);
+        w.finish().expect("Vec sink cannot fail");
+
+        let stream = String::from_utf8(sink).expect("stream is UTF-8");
+        assert!(stream.starts_with("{\"schema\": \"wienna-metrics-stream-v1\"}\n"));
+        assert!(stream.contains("{\"epoch_sample\": { \"epoch\": 0,"));
+        assert!(stream.contains("{\"slo_event\": { \"epoch\": 1,"));
+        let reconstructed = stream_to_metrics_v1(&stream).expect("well-formed stream");
+        assert_eq!(reconstructed, buffered, "splice must be byte-exact");
+    }
+
+    #[test]
+    fn stream_reconstruction_rejects_malformed_streams() {
+        assert_eq!(stream_to_metrics_v1(""), None, "empty stream");
+        assert_eq!(
+            stream_to_metrics_v1("{\"schema\": \"wienna-metrics-v1\"}\n"),
+            None,
+            "wrong schema header"
+        );
+        let headless = "{\"epoch_sample\": { \"epoch\": 0 }}\n";
+        assert_eq!(stream_to_metrics_v1(headless), None, "missing header");
+        let no_summary = "{\"schema\": \"wienna-metrics-stream-v1\"}\n\
+                          {\"epoch_sample\": { \"epoch\": 0 }}\n";
+        assert_eq!(stream_to_metrics_v1(no_summary), None, "truncated before summary");
+        let junk = "{\"schema\": \"wienna-metrics-stream-v1\"}\nnot json\n";
+        assert_eq!(stream_to_metrics_v1(junk), None, "unknown line shape");
+    }
+
+    #[test]
+    fn string_escaping_round_trips_artifact_text() {
+        let gnarly = "line one\n  \"quoted\" and a back\\slash\n";
+        let escaped = escape_json_string(gnarly);
+        assert!(!escaped.contains('\n'), "escaped text is single-line");
+        assert_eq!(unescape_json_string(&escaped).as_deref(), Some(gnarly));
+        assert_eq!(unescape_json_string("bad \\q escape"), None);
     }
 }

@@ -6,10 +6,16 @@
 //! last ulp could differ across platforms), and the epoch series is
 //! sampled single-threaded at the `cluster::sync` epoch barrier, so the
 //! serialized registry is byte-identical at any thread count.
+//!
+//! The histograms are also the bounded-memory percentile store behind
+//! `--bounded-stats`: [`LogHistogram::quantile`] estimates any
+//! percentile from the bucket counts alone in O(buckets), with a
+//! documented one-bucket error bound, so the per-request latency `Vec`
+//! can be dropped entirely on million-request traces.
 
 use std::collections::BTreeMap;
 
-use crate::cluster::NUM_CLASSES;
+use crate::cluster::{TrafficClass, NUM_CLASSES};
 
 /// Bucket index of a sample: its unbiased binary exponent, so bucket
 /// `k` spans `[2^k, 2^(k+1))`. Zero, negative, and NaN samples land in
@@ -22,6 +28,15 @@ pub fn bucket_index(v: f64) -> i32 {
     // collapse into exponent -1023 — far below any cycle/ms quantity
     // this simulator produces.
     (((v.to_bits() >> 52) & 0x7ff) as i32) - 1023
+}
+
+/// Lower bound `2^k` of bucket `k`, assembled by bit manipulation (no
+/// libm, same determinism rationale as [`bucket_index`]). Clamped to
+/// the normal-double exponent range; the simulator's ms-scale samples
+/// never leave it.
+fn bucket_lo(k: i32) -> f64 {
+    let e = (k + 1023).clamp(1, 2046) as u64;
+    f64::from_bits(e << 52)
 }
 
 /// A streaming histogram over power-of-two buckets.
@@ -44,10 +59,46 @@ impl LogHistogram {
     pub fn mean(&self) -> f64 {
         self.sum / self.count as f64
     }
+
+    /// Estimate the `p`-th percentile (nearest-rank convention, the
+    /// same one `serve::stats::LatencyRecorder` uses) from the bucket
+    /// counts alone, in O(buckets).
+    ///
+    /// The rank is resolved exactly — bucket counts are exact — then
+    /// the value is interpolated linearly inside the bucket: rank
+    /// fraction `f ∈ (0, 1]` of bucket `k` maps to `2^k · (1 + f)`.
+    ///
+    /// **Error bound:** the estimate and the exact nearest-rank sample
+    /// always share bucket `[2^k, 2^(k+1))` (estimate in `(2^k, 2^(k+1)]`,
+    /// exact in `[2^k, 2^(k+1))`), so `estimate / exact ∈ (1/2, 2]` —
+    /// within one power-of-two bucket. Pinned against the exact-`Vec`
+    /// oracle across seeded load sweeps in `rust/tests/telemetry.rs`.
+    ///
+    /// Returns NaN when empty and 0.0 when the rank lands in the
+    /// sentinel bucket (non-positive samples), mirroring the recorder.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let n = self.count;
+        let rank = (((p / 100.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut before = 0u64;
+        for (&k, &c) in &self.buckets {
+            if before + c >= rank {
+                if k == i32::MIN {
+                    return 0.0;
+                }
+                let frac = (rank - before) as f64 / c as f64;
+                return bucket_lo(k) * (1.0 + frac);
+            }
+            before += c;
+        }
+        f64::NAN // unreachable: bucket counts sum to `count`
+    }
 }
 
 /// Gauges and cumulative counters captured at one epoch barrier.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct EpochSample {
     /// Epoch index (0-based).
     pub epoch: u64,
@@ -73,6 +124,13 @@ pub struct EpochSample {
     /// Cycles dispatches have spent waiting for the shared-medium token
     /// so far (cumulative; exactly 0.0 with contention disabled).
     pub token_wait_cycles: f64,
+    /// Per-package MAC occupancy so far, shard-major package order
+    /// (gauge; the fleet-wide `mac_occupancy` is their mean). Localizes
+    /// *which* package is burning the shared medium.
+    pub mac_occupancy_by_pkg: Vec<f64>,
+    /// Per-package token-wait cycles so far, shard-major package order
+    /// (cumulative; sums to `token_wait_cycles`).
+    pub token_wait_by_pkg: Vec<f64>,
 }
 
 /// The full registry: named histograms plus the epoch time series.
@@ -84,18 +142,34 @@ pub struct MetricsRegistry {
     pub queue_wait_ms: LogHistogram,
     /// Dispatched batch sizes.
     pub batch_size: LogHistogram,
+    /// Per-class end-to-end latency (ms), priority order.
+    pub class_latency_ms: [LogHistogram; NUM_CLASSES],
+    /// Per-class queue-phase wait (ms), priority order.
+    pub class_queue_wait_ms: [LogHistogram; NUM_CLASSES],
     /// One sample per epoch barrier, epoch order.
     pub epochs: Vec<EpochSample>,
+    /// SLO burn-rate raise/clear events, epoch order (filled by the
+    /// `telemetry::slo` monitor at the sync barrier).
+    pub slo_events: Vec<crate::telemetry::slo::SloEvent>,
 }
 
 impl MetricsRegistry {
-    /// Histograms with their pinned serialization names, emission order.
-    pub fn histograms(&self) -> [(&'static str, &LogHistogram); 3] {
-        [
-            ("latency_ms", &self.latency_ms),
-            ("queue_wait_ms", &self.queue_wait_ms),
-            ("batch_size", &self.batch_size),
-        ]
+    /// Histograms with their pinned serialization names, emission
+    /// order: the three fleet-wide histograms, then the per-class
+    /// latency and queue-wait tracks (class labels `-` → `_`).
+    pub fn histograms(&self) -> Vec<(String, &LogHistogram)> {
+        let mut out: Vec<(String, &LogHistogram)> = vec![
+            ("latency_ms".into(), &self.latency_ms),
+            ("queue_wait_ms".into(), &self.queue_wait_ms),
+            ("batch_size".into(), &self.batch_size),
+        ];
+        for (class, h) in TrafficClass::ALL.iter().zip(&self.class_latency_ms) {
+            out.push((format!("latency_ms_{}", class.label().replace('-', "_")), h));
+        }
+        for (class, h) in TrafficClass::ALL.iter().zip(&self.class_queue_wait_ms) {
+            out.push((format!("queue_wait_ms_{}", class.label().replace('-', "_")), h));
+        }
+        out
     }
 }
 
@@ -131,5 +205,90 @@ mod tests {
         assert_eq!(h.buckets[&2], 1);
         assert_eq!(h.buckets[&i32::MIN], 1);
         crate::assert_close!(h.sum, 6.9);
+    }
+
+    #[test]
+    fn bucket_lo_inverts_bucket_index() {
+        for k in [-10, -1, 0, 1, 7, 40] {
+            let lo = bucket_lo(k);
+            assert_eq!(bucket_index(lo), k, "2^{k} opens bucket {k}");
+            assert_eq!(bucket_index(lo * 1.999), k, "bucket {k} spans up to 2^{}", k + 1);
+        }
+        assert_eq!(bucket_lo(0), 1.0);
+        assert_eq!(bucket_lo(3), 8.0);
+        assert_eq!(bucket_lo(-2), 0.25);
+    }
+
+    #[test]
+    fn quantile_is_empty_nan_and_sentinel_zero() {
+        let h = LogHistogram::default();
+        assert!(h.quantile(50.0).is_nan());
+        let mut h = LogHistogram::default();
+        h.record(0.0);
+        h.record(0.0);
+        assert_eq!(h.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_the_bucket() {
+        let mut h = LogHistogram::default();
+        // Four samples in bucket 0 ([1, 2)): ranks 1..=4 interpolate at
+        // fractions 1/4, 2/4, 3/4, 4/4 of the bucket.
+        for _ in 0..4 {
+            h.record(1.5);
+        }
+        crate::assert_close!(h.quantile(25.0), 1.25);
+        crate::assert_close!(h.quantile(50.0), 1.5);
+        crate::assert_close!(h.quantile(75.0), 1.75);
+        crate::assert_close!(h.quantile(100.0), 2.0);
+        // A fifth sample in bucket 2 ([4, 8)) absorbs the top rank.
+        h.record(5.0);
+        crate::assert_close!(h.quantile(100.0), 8.0);
+        crate::assert_close!(h.quantile(80.0), 1.0 + 4.0 / 4.0);
+    }
+
+    #[test]
+    fn quantile_stays_within_one_bucket_of_the_exact_rank() {
+        // Deterministic pseudo-random sweep: the estimate and the exact
+        // nearest-rank sample must share a power-of-two bucket, i.e.
+        // estimate/exact ∈ (1/2, 2] — the documented bound.
+        let mut h = LogHistogram::default();
+        let mut samples = Vec::new();
+        let mut x = 9u64;
+        for _ in 0..500 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 0.01 + (x >> 11) as f64 / (1u64 << 53) as f64 * 80.0;
+            h.record(v);
+            samples.push(v);
+        }
+        samples.sort_by(f64::total_cmp);
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let n = samples.len();
+            let rank = (((p / 100.0) * n as f64).ceil() as usize).clamp(1, n);
+            let exact = samples[rank - 1];
+            let est = h.quantile(p);
+            let ratio = est / exact;
+            assert!(
+                ratio > 0.5 && ratio <= 2.0,
+                "p{p}: estimate {est} vs exact {exact} outside the one-bucket bound"
+            );
+            assert_eq!(
+                if est == bucket_lo(bucket_index(est)) { bucket_index(est) - 1 } else { bucket_index(est) },
+                bucket_index(exact),
+                "p{p}: estimate {est} left the exact sample's bucket ({exact})"
+            );
+        }
+    }
+
+    #[test]
+    fn histograms_expose_per_class_tracks_in_order() {
+        let mut r = MetricsRegistry::default();
+        r.class_latency_ms[0].record(1.0);
+        let names: Vec<String> = r.histograms().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names[..3], ["latency_ms", "queue_wait_ms", "batch_size"]);
+        assert_eq!(names.len(), 3 + 2 * NUM_CLASSES);
+        assert!(names[3].starts_with("latency_ms_"));
+        assert!(names[3 + NUM_CLASSES].starts_with("queue_wait_ms_"));
+        assert!(!names.iter().any(|n| n.contains('-')), "labels are snake_cased");
     }
 }

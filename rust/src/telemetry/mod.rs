@@ -15,24 +15,36 @@
 //!   Disabled, the [`Recorder`] enum costs one discriminant check per
 //!   event and zero allocation (bench-guarded in `perf_hotpath`);
 //! * [`metrics`] — the metrics registry: log-bucketed streaming
-//!   histograms (bucketed by raw IEEE-754 exponent, no libm) and the
-//!   per-epoch time series sampled at the `cluster::sync` barrier;
-//! * [`export`] — hand-rolled serializers for the metrics JSON and the
-//!   Chrome trace-event (Perfetto-loadable) trace behind
-//!   `wienna serve|cluster --metrics-out FILE --trace-out FILE`.
+//!   histograms (bucketed by raw IEEE-754 exponent, no libm; quantile
+//!   estimation with a one-bucket error bound) and the per-epoch time
+//!   series sampled at the `cluster::sync` barrier;
+//! * [`slo`] — the deterministic multi-window SLO burn-rate monitor,
+//!   evaluated single-threaded at the epoch barrier; raise/clear events
+//!   carry exact cycles and surface in the stats and metrics exports;
+//! * [`export`] — hand-rolled serializers for the metrics JSON (plus
+//!   the `wienna-metrics-stream-v1` incremental JSONL writer and its
+//!   reconstructor) and the Chrome trace-event (Perfetto-loadable)
+//!   trace behind `wienna serve|cluster --metrics-out FILE --trace-out
+//!   FILE`.
 //!
 //! Schema stability: field names/order for both exports are pinned by
 //! `rust/testdata/telemetry_schema.golden`; the CI determinism gate
-//! diffs both artifacts across 1/2/4 worker threads.
+//! diffs both artifacts (buffered and streaming) across 1/2/4 worker
+//! threads.
 
 pub mod export;
 pub mod metrics;
 pub mod profile;
+pub mod slo;
 pub mod span;
 
-pub use export::{chrome_trace, metrics_json};
+pub use export::{
+    chrome_trace, metrics_json, metrics_json_summary, stream_to_metrics_v1, MetricsStreamWriter,
+    METRICS_STREAM_SCHEMA,
+};
 pub use metrics::{EpochSample, LogHistogram, MetricsRegistry};
 pub use profile::{PhaseBreakdown, PhaseTotals, PHASES};
+pub use slo::{SloEvent, SloEventKind, SloMonitor, SloPolicy, SloWindow};
 pub use span::{FlowRecord, PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
 
 use crate::serve::{BatcherConfig, CostCache, ModelKind, PackageSpec};
@@ -40,9 +52,35 @@ use crate::serve::{BatcherConfig, CostCache, ModelKind, PackageSpec};
 /// Telemetry knobs carried by `ClusterConfig` (and the serve CLI).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TelemetryConfig {
-    /// Arm the span recorder and the epoch-series sampler. The
-    /// always-on attribution sums are collected regardless.
+    /// Arm the metrics registry and the epoch-series sampler (and, via
+    /// `spans`, the span recorder). The always-on attribution sums are
+    /// collected regardless.
     pub enabled: bool,
+    /// Record per-request lifecycle spans (required for `--trace-out`).
+    /// The one O(requests) telemetry surface — `bounded` mode leaves it
+    /// off and feeds the histograms from the event stream instead.
+    pub spans: bool,
+    /// Bounded-memory stats (`--bounded-stats`): percentiles come off
+    /// the log-bucketed histograms and the per-request latency `Vec` is
+    /// never grown — O(buckets + epochs) telemetry for million-request
+    /// traces, within one power-of-two bucket of the exact path.
+    pub bounded: bool,
+    /// Burn-rate policy for the epoch-barrier SLO monitor.
+    pub slo: SloPolicy,
+}
+
+impl TelemetryConfig {
+    /// Full-fidelity telemetry: spans + registry (the pre-bounded
+    /// default behind `--trace-out`/`--metrics-out`).
+    pub fn enabled() -> Self {
+        TelemetryConfig { enabled: true, spans: true, ..Default::default() }
+    }
+
+    /// Bounded-memory telemetry: registry only, histogram percentiles,
+    /// no span log and no per-request `Vec`s.
+    pub fn bounded() -> Self {
+        TelemetryConfig { enabled: true, bounded: true, ..Default::default() }
+    }
 }
 
 /// A run's collected telemetry: the merged span log plus the metrics
@@ -52,18 +90,33 @@ pub struct TelemetryConfig {
 pub struct Telemetry {
     pub log: SpanLog,
     pub metrics: MetricsRegistry,
+    /// Bounded mode: the histograms were fed incrementally from the
+    /// deterministic event merge, so [`Telemetry::finish`] must not
+    /// stream the (empty) span log over them again.
+    pub bounded: bool,
 }
 
 impl Telemetry {
     /// Seal the run: order the merged span log deterministically and
-    /// stream every span through the histograms. Call once, after all
-    /// shard logs are absorbed.
+    /// stream every span through the histograms (fleet-wide and
+    /// per-class tracks). Call once, after all shard logs are absorbed.
+    /// In bounded mode the histograms were already fed at the event
+    /// merge — only the ordering pass runs.
     pub fn finish(&mut self) {
         self.log.sort_chronological();
+        if self.bounded {
+            return;
+        }
         for s in &self.log.spans {
-            self.metrics.latency_ms.record(crate::serve::cycles_to_ms(s.completed - s.arrival));
-            self.metrics.queue_wait_ms.record(crate::serve::cycles_to_ms(s.phases.queue));
+            let latency = crate::serve::cycles_to_ms(s.completed - s.arrival);
+            let queue = crate::serve::cycles_to_ms(s.phases.queue);
+            self.metrics.latency_ms.record(latency);
+            self.metrics.queue_wait_ms.record(queue);
             self.metrics.batch_size.record(s.batch as f64);
+            if let Some(class) = s.class {
+                self.metrics.class_latency_ms[class.index()].record(latency);
+                self.metrics.class_queue_wait_ms[class.index()].record(queue);
+            }
         }
     }
 }
@@ -92,6 +145,7 @@ pub fn prewarm_cost_model(specs: &[PackageSpec], kinds: &[ModelKind], batcher: &
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::TrafficClass;
     use crate::config::DesignPoint;
 
     #[test]
@@ -101,7 +155,7 @@ mod tests {
             t.log.spans.push(SpanRecord {
                 id: 0,
                 kind: ModelKind::TinyCnn,
-                class: None,
+                class: Some(TrafficClass::Batch),
                 shard: 0,
                 package: 0,
                 batch: 2,
@@ -114,7 +168,26 @@ mod tests {
         t.finish();
         assert_eq!(t.metrics.latency_ms.count, 2);
         assert_eq!(t.metrics.batch_size.count, 2);
+        assert_eq!(t.metrics.class_latency_ms[TrafficClass::Batch.index()].count, 2);
+        assert_eq!(t.metrics.class_queue_wait_ms[TrafficClass::Batch.index()].count, 2);
+        assert_eq!(t.metrics.class_latency_ms[TrafficClass::Interactive.index()].count, 0);
         assert!(t.log.spans[0].completed <= t.log.spans[1].completed);
+    }
+
+    #[test]
+    fn bounded_finish_leaves_prefed_histograms_alone() {
+        let mut t = Telemetry { bounded: true, ..Default::default() };
+        t.metrics.latency_ms.record(3.0);
+        t.finish();
+        assert_eq!(t.metrics.latency_ms.count, 1, "finish must not double-count bounded feeds");
+    }
+
+    #[test]
+    fn config_constructors_pick_consistent_modes() {
+        let full = TelemetryConfig::enabled();
+        assert!(full.enabled && full.spans && !full.bounded);
+        let bounded = TelemetryConfig::bounded();
+        assert!(bounded.enabled && !bounded.spans && bounded.bounded);
     }
 
     #[test]

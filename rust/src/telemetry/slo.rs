@@ -1,0 +1,333 @@
+//! Deterministic multi-window SLO burn-rate monitoring.
+//!
+//! The monitor watches each traffic class's cumulative
+//! `(completed, slo_violated)` counters as snapshotted **single-threaded
+//! at the `cluster::sync` epoch barrier** and raises/clears alerts when
+//! the *burn rate* — the observed violation fraction over a trailing
+//! window, divided by the error-budget objective — crosses a threshold.
+//! Two windows per class (the classic fast/slow pairing): a short
+//! window with a high threshold pages quickly on a cliff, a long window
+//! with a low threshold catches a slow bleed without flapping.
+//!
+//! Everything here is deterministic by construction: inputs are the
+//! deterministically merged per-class counters, evaluation happens at
+//! barrier cycles only, and events carry those exact cycles — so the
+//! alert timeline in the metrics artifact is byte-identical at any
+//! worker-thread count, like every other telemetry surface.
+//!
+//! Memory is bounded: the monitor keeps one ring of barrier snapshots
+//! per class, pruned past the slow window — O(slow_window /
+//! epoch_cycles) regardless of how many requests the run serves.
+
+use std::collections::VecDeque;
+
+use crate::cluster::{TrafficClass, NUM_CLASSES};
+use crate::serve::ms_to_cycles;
+
+/// Burn-rate policy knobs, carried by `TelemetryConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct SloPolicy {
+    /// Error-budget objective: the tolerated SLO-violation fraction.
+    /// Burn rate 1.0 means violations arrive exactly at budget.
+    pub objective: f64,
+    /// Trailing fast-window length, cycles.
+    pub fast_window_cycles: f64,
+    /// Trailing slow-window length, cycles.
+    pub slow_window_cycles: f64,
+    /// Raise threshold for the fast window (burn-rate multiple).
+    pub fast_burn: f64,
+    /// Raise threshold for the slow window (burn-rate multiple).
+    pub slow_burn: f64,
+    /// Minimum completions inside a window before its alert state may
+    /// change — below this the estimate is too noisy to act on.
+    pub min_requests: u64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            objective: 0.05,
+            fast_window_cycles: ms_to_cycles(2.0),
+            slow_window_cycles: ms_to_cycles(10.0),
+            fast_burn: 8.0,
+            slow_burn: 2.0,
+            min_requests: 10,
+        }
+    }
+}
+
+/// Which trailing window an alert belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloWindow {
+    Fast,
+    Slow,
+}
+
+impl SloWindow {
+    pub const ALL: [SloWindow; 2] = [SloWindow::Fast, SloWindow::Slow];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SloWindow::Fast => "fast",
+            SloWindow::Slow => "slow",
+        }
+    }
+}
+
+/// Alert transition kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloEventKind {
+    Raise,
+    Clear,
+}
+
+impl SloEventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SloEventKind::Raise => "raise",
+            SloEventKind::Clear => "clear",
+        }
+    }
+}
+
+/// One alert transition, stamped with the exact barrier it fired at.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloEvent {
+    /// Epoch index of the barrier that evaluated the transition.
+    pub epoch: u64,
+    /// Exact barrier cycle.
+    pub cycle: f64,
+    pub class: TrafficClass,
+    pub window: SloWindow,
+    pub kind: SloEventKind,
+    /// Burn rate observed at the transition (multiple of the budget).
+    pub burn_rate: f64,
+}
+
+/// One barrier snapshot of a class's cumulative counters.
+#[derive(Debug, Clone, Copy)]
+struct Snapshot {
+    cycle: f64,
+    completed: u64,
+    violated: u64,
+}
+
+/// The monitor: per-class snapshot rings plus per-(class, window)
+/// alert state. Evaluate with [`SloMonitor::observe`] at each barrier.
+#[derive(Debug, Clone)]
+pub struct SloMonitor {
+    policy: SloPolicy,
+    history: [VecDeque<Snapshot>; NUM_CLASSES],
+    active: [[bool; 2]; NUM_CLASSES],
+}
+
+impl SloMonitor {
+    pub fn new(policy: SloPolicy) -> Self {
+        SloMonitor { policy, history: Default::default(), active: [[false; 2]; NUM_CLASSES] }
+    }
+
+    /// Whether the `(class, window)` alert is currently raised.
+    pub fn is_active(&self, class: TrafficClass, window: SloWindow) -> bool {
+        self.active[class.index()][window as usize]
+    }
+
+    /// Count of currently raised alerts across all classes and windows.
+    pub fn active_count(&self) -> u64 {
+        self.active.iter().flatten().filter(|&&a| a).count() as u64
+    }
+
+    /// Burn rate of `class` over the trailing `window` ending at the
+    /// latest observed barrier, or NaN when the window holds fewer than
+    /// `min_requests` completions.
+    pub fn burn_rate(&self, class: TrafficClass, window: SloWindow) -> f64 {
+        let ring = &self.history[class.index()];
+        let Some(&cur) = ring.back() else { return f64::NAN };
+        let len = match window {
+            SloWindow::Fast => self.policy.fast_window_cycles,
+            SloWindow::Slow => self.policy.slow_window_cycles,
+        };
+        let base = Self::baseline(ring, cur.cycle - len);
+        let dc = cur.completed - base.completed;
+        if dc < self.policy.min_requests.max(1) {
+            return f64::NAN;
+        }
+        let dv = cur.violated - base.violated;
+        (dv as f64 / dc as f64) / self.policy.objective
+    }
+
+    /// The most recent snapshot at or before `cutoff` — the window
+    /// baseline. Before the run is a full window old, the zero origin
+    /// stands in, so early epochs are measured against run start.
+    fn baseline(ring: &VecDeque<Snapshot>, cutoff: f64) -> Snapshot {
+        let mut base = Snapshot { cycle: 0.0, completed: 0, violated: 0 };
+        for s in ring {
+            if s.cycle <= cutoff {
+                base = *s;
+            } else {
+                break;
+            }
+        }
+        base
+    }
+
+    /// Feed one barrier's cumulative per-class counters
+    /// (`counts[class.index()] = (completed, slo_violated)`) and return
+    /// the alert transitions it triggers, in deterministic
+    /// (class priority, fast-before-slow) order.
+    pub fn observe(
+        &mut self,
+        epoch: u64,
+        cycle: f64,
+        counts: &[(u64, u64); NUM_CLASSES],
+    ) -> Vec<SloEvent> {
+        let mut events = Vec::new();
+        for (ci, class) in TrafficClass::ALL.into_iter().enumerate() {
+            let (completed, violated) = counts[ci];
+            let ring = &mut self.history[ci];
+            ring.push_back(Snapshot { cycle, completed, violated });
+            // Prune: drop the front while the *next* entry can still
+            // serve as the slow-window baseline. Bounds the ring to
+            // O(slow_window / epoch_cycles).
+            let cutoff = cycle - self.policy.slow_window_cycles;
+            while ring.len() > 1 && ring[1].cycle <= cutoff {
+                ring.pop_front();
+            }
+            for (wi, window) in SloWindow::ALL.into_iter().enumerate() {
+                let burn = self.burn_rate(class, window);
+                if burn.is_nan() {
+                    continue; // too little traffic in the window to act
+                }
+                let threshold = match window {
+                    SloWindow::Fast => self.policy.fast_burn,
+                    SloWindow::Slow => self.policy.slow_burn,
+                };
+                let should = burn >= threshold;
+                if should != self.active[ci][wi] {
+                    self.active[ci][wi] = should;
+                    events.push(SloEvent {
+                        epoch,
+                        cycle,
+                        class,
+                        window,
+                        kind: if should { SloEventKind::Raise } else { SloEventKind::Clear },
+                        burn_rate: burn,
+                    });
+                }
+            }
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> SloPolicy {
+        SloPolicy {
+            objective: 0.1,
+            fast_window_cycles: 100.0,
+            slow_window_cycles: 1000.0,
+            fast_burn: 5.0,
+            slow_burn: 2.0,
+            min_requests: 5,
+        }
+    }
+
+    fn only_interactive(completed: u64, violated: u64) -> [(u64, u64); NUM_CLASSES] {
+        let mut c = [(0, 0); NUM_CLASSES];
+        c[0] = (completed, violated);
+        c
+    }
+
+    #[test]
+    fn quiet_traffic_never_alerts() {
+        let mut m = SloMonitor::new(policy());
+        for e in 0..20 {
+            let ev = m.observe(e, (e + 1) as f64 * 50.0, &only_interactive((e + 1) * 10, 0));
+            assert!(ev.is_empty(), "epoch {e} alerted on zero violations");
+        }
+        assert_eq!(m.active_count(), 0);
+    }
+
+    #[test]
+    fn cliff_raises_fast_then_clears() {
+        let mut m = SloMonitor::new(policy());
+        // Healthy for 10 epochs, then every completion violates.
+        for e in 0..10u64 {
+            assert!(m.observe(e, (e + 1) as f64 * 50.0, &only_interactive((e + 1) * 10, 0)).is_empty());
+        }
+        let ev = m.observe(10, 550.0, &only_interactive(110, 10));
+        assert!(
+            ev.iter().any(|e| e.window == SloWindow::Fast && e.kind == SloEventKind::Raise),
+            "a 100% violation burst must trip the fast window: {ev:?}"
+        );
+        let raised = ev[0];
+        assert_eq!(raised.cycle, 550.0);
+        assert!(raised.burn_rate >= 5.0);
+        // Back to healthy: the fast window forgets the burst and clears.
+        let mut cleared = false;
+        for e in 11..20u64 {
+            let evs = m.observe(e, (e + 1) as f64 * 50.0, &only_interactive((e + 1) * 10 + 10, 10));
+            cleared |= evs
+                .iter()
+                .any(|e| e.window == SloWindow::Fast && e.kind == SloEventKind::Clear);
+        }
+        assert!(cleared, "recovery must clear the fast alert");
+    }
+
+    #[test]
+    fn slow_bleed_trips_the_slow_window_only() {
+        let mut m = SloMonitor::new(policy());
+        // 25% violations forever: burn 2.5 — above slow_burn (2.0),
+        // below fast_burn (5.0).
+        let mut raised_windows = Vec::new();
+        for e in 0..30u64 {
+            let done = (e + 1) * 20;
+            for ev in m.observe(e, (e + 1) as f64 * 50.0, &only_interactive(done, done / 4)) {
+                if ev.kind == SloEventKind::Raise {
+                    raised_windows.push(ev.window);
+                }
+            }
+        }
+        assert!(raised_windows.contains(&SloWindow::Slow), "slow bleed must raise the slow window");
+        assert!(!raised_windows.contains(&SloWindow::Fast), "burn 2.5 is below the fast threshold");
+    }
+
+    #[test]
+    fn min_requests_gates_state_changes() {
+        let mut m = SloMonitor::new(policy());
+        // 2 completions, both violating: burn would be 10/objective but
+        // the window holds fewer than min_requests completions.
+        let ev = m.observe(0, 50.0, &only_interactive(2, 2));
+        assert!(ev.is_empty(), "thin traffic must not page");
+        assert!(m.burn_rate(TrafficClass::Interactive, SloWindow::Fast).is_nan());
+    }
+
+    #[test]
+    fn snapshot_ring_is_bounded() {
+        let mut m = SloMonitor::new(policy());
+        for e in 0..10_000u64 {
+            m.observe(e, (e + 1) as f64 * 50.0, &only_interactive((e + 1) * 10, 0));
+        }
+        // slow_window / epoch_spacing = 1000 / 50 = 20 snapshots, +1
+        // for the baseline candidate and +1 slack for the boundary.
+        assert!(
+            m.history[0].len() <= 22,
+            "ring grew to {} entries — pruning is broken",
+            m.history[0].len()
+        );
+    }
+
+    #[test]
+    fn alert_state_is_queryable() {
+        let mut m = SloMonitor::new(policy());
+        for e in 0..10u64 {
+            m.observe(e, (e + 1) as f64 * 50.0, &only_interactive((e + 1) * 10, (e + 1) * 10));
+        }
+        assert!(m.is_active(TrafficClass::Interactive, SloWindow::Fast));
+        assert!(m.is_active(TrafficClass::Interactive, SloWindow::Slow));
+        assert!(!m.is_active(TrafficClass::Batch, SloWindow::Fast));
+        assert_eq!(m.active_count(), 2);
+    }
+}

@@ -315,7 +315,7 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
                 steal,
             },
             calibrated_eta: rng.range_u64(0, 1) == 1,
-            telemetry: crate::telemetry::TelemetryConfig { enabled: true },
+            telemetry: crate::telemetry::TelemetryConfig::enabled(),
             faults,
             contention,
             ..Default::default()

@@ -49,7 +49,7 @@ fn chaos_config(faults: &str, contention: f64, steal: bool, threads: usize) -> C
         } else {
             ContentionConfig::default()
         },
-        telemetry: TelemetryConfig { enabled: true },
+        telemetry: TelemetryConfig::enabled(),
         ..Default::default()
     }
 }
@@ -218,7 +218,7 @@ fn stolen_work_never_bounces_between_shards() {
             admission: AdmissionConfig::admit_all(),
             batcher: wienna::serve::BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
             sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1) },
-            telemetry: TelemetryConfig { enabled: true },
+            telemetry: TelemetryConfig::enabled(),
             ..Default::default()
         },
     );
