@@ -17,12 +17,12 @@
 
 use super::admission::ShedReason;
 use super::class::{TrafficClass, NUM_CLASSES};
-use super::shard::{ShardEvent, ShardEventOutcome, ShardOutcome};
+use super::shard::{ShardEvent, ShardEventOutcome, ShardOutcome, ShardSketches};
 use super::sync::TraceEvent;
 use crate::config::CLOCK_HZ;
 use crate::power::{FleetEnergy, PowerModel};
 use crate::serve::{cycles_to_ms, ModelStats, Package, Request, ServeStats};
-use crate::telemetry::{PhaseTotals, SloEventKind, Telemetry, PHASES};
+use crate::telemetry::{PhaseTotals, SloEventKind, Telemetry, DEFAULT_QUANTILE_ERROR, PHASES};
 use std::collections::BTreeMap;
 
 /// Cluster-wide serving statistics: the fleet-level [`ServeStats`] plus
@@ -60,8 +60,11 @@ pub struct ClusterStats {
     pub outage_cycles: f64,
     /// SLO-meeting completions that landed inside an outage window.
     pub outage_slo_met: u64,
-    /// Epoch-resolution time from a shard losing its last package to
-    /// that shard holding no work (0 when no shard ever fully died).
+    /// Time from a shard losing its last package to the last of its
+    /// rerouted requests being finalized, at exact sub-epoch cycle
+    /// resolution (0 when no shard ever fully died). Shards whose
+    /// backlog produced no rerouted finalization fall back to the
+    /// epoch-edge drain bound.
     pub dead_shard_drain_cycles: f64,
     /// Cumulative shared-medium token-wait cycles across all dispatches
     /// (exactly 0.0 with contention disabled).
@@ -89,28 +92,33 @@ pub struct ClusterStats {
     /// of overhead.
     pub telemetry: Option<Box<Telemetry>>,
     /// `--bounded-stats`: every latency recorder (fleet and per-class,
-    /// lazily created ones included) is histogram-backed, and the event
-    /// fold feeds the telemetry histograms directly — O(buckets +
-    /// epochs) memory however many requests the run serves.
+    /// lazily created ones included) is sketch-backed, the event fold
+    /// books completion counters only, and per-shard latency sketches
+    /// are absorbed at the barrier — O(buckets + epochs) memory however
+    /// many requests the run serves.
     pub(crate) bounded: bool,
+    /// Sketch resolution (`--quantile-error`) for bounded recorders.
+    pub(crate) quantile_error: f64,
 }
 
 impl ClusterStats {
     pub(crate) fn new(shards: usize) -> Self {
-        ClusterStats::with_mode(shards, false)
+        ClusterStats::with_mode(shards, false, DEFAULT_QUANTILE_ERROR)
     }
 
-    /// Stats in the given memory mode (`bounded` = `--bounded-stats`).
-    pub(crate) fn with_mode(shards: usize, bounded: bool) -> Self {
+    /// Stats in the given memory mode (`bounded` = `--bounded-stats`,
+    /// `quantile_error` = the sketch resolution, bounded mode only).
+    pub(crate) fn with_mode(shards: usize, bounded: bool, quantile_error: f64) -> Self {
         ClusterStats {
             shards,
             bounded,
-            serve: if bounded { ServeStats::bounded() } else { ServeStats::new() },
+            quantile_error,
+            serve: if bounded { ServeStats::bounded_with(quantile_error) } else { ServeStats::new() },
             ..Default::default()
         }
     }
 
-    /// Whether the latency recorders are histogram-backed.
+    /// Whether the latency recorders are sketch-backed.
     pub fn is_bounded(&self) -> bool {
         self.bounded
     }
@@ -118,7 +126,31 @@ impl ClusterStats {
     /// A per-class entry in this run's memory mode.
     fn class_entry(&mut self, class: TrafficClass) -> &mut ModelStats {
         let bounded = self.bounded;
-        self.per_class.entry(class).or_insert_with(|| ModelStats::with_mode(bounded))
+        let eps = self.quantile_error;
+        self.per_class.entry(class).or_insert_with(|| ModelStats::with_error(bounded, eps))
+    }
+
+    /// Merge one shard's bounded-stats latency sketches into the fleet,
+    /// per-model, and per-class recorders. Called at the sync barrier in
+    /// shard-id order; sketch merges are integer-exact, so given that
+    /// fixed order the result is independent of the worker-thread count.
+    /// Empty tracks are skipped so the absorb never lazily creates a
+    /// stats entry for a class or model with no traffic.
+    pub(crate) fn absorb_shard_sketches(&mut self, sk: ShardSketches) {
+        debug_assert!(self.bounded, "sketch absorb on an exact-mode run");
+        if !sk.all.is_empty() {
+            self.serve.absorb_latency_sketch(&sk.all);
+        }
+        for (kind, s) in &sk.per_model {
+            if !s.is_empty() {
+                self.serve.absorb_model_latency_sketch(*kind, s);
+            }
+        }
+        for (ci, s) in sk.per_class.iter().enumerate() {
+            if !s.is_empty() {
+                self.class_entry(TrafficClass::ALL[ci]).latency.absorb_sketch(s);
+            }
+        }
     }
 
     /// Record one classified arrival at cluster ingress.
@@ -376,11 +408,23 @@ pub(crate) fn fold_events(
         let ev = &by_shard[s][cursors[s]];
         cursors[s] += 1;
         let bounded = stats.bounded;
-        let m = stats.per_class.entry(ev.class).or_insert_with(|| ModelStats::with_mode(bounded));
+        let eps = stats.quantile_error;
+        let m = stats
+            .per_class
+            .entry(ev.class)
+            .or_insert_with(|| ModelStats::with_error(bounded, eps));
         match ev.outcome {
             ShardEventOutcome::Completed => {
-                m.record_completion(&ev.req, ev.cycle);
-                stats.serve.record_completion(&ev.req, ev.cycle);
+                if bounded {
+                    // Latencies reach the recorders as whole per-shard
+                    // sketches at the barrier (`absorb_shard_sketches`)
+                    // — the fold books counters only.
+                    m.record_completion_counters(&ev.req, ev.cycle);
+                    stats.serve.record_completion_counters(&ev.req, ev.cycle);
+                } else {
+                    m.record_completion(&ev.req, ev.cycle);
+                    stats.serve.record_completion(&ev.req, ev.cycle);
+                }
                 feedback(ev.cycle, &ev.req);
             }
             ShardEventOutcome::Shed(reason) => {
@@ -589,14 +633,22 @@ mod tests {
         let events: Vec<ShardEvent> =
             (0..200).map(|i| completion(100.0 + 37.0 * i as f64, i, TrafficClass::Batch)).collect();
         let mut exact = ClusterStats::new(1);
-        let mut bounded = ClusterStats::with_mode(1, true);
+        let mut bounded = ClusterStats::with_mode(1, true, 0.01);
         bounded.telemetry = Some(Box::new(Telemetry { bounded: true, ..Default::default() }));
         for e in &events {
             exact.record_ingress(&e.req, e.class);
             bounded.record_ingress(&e.req, e.class);
         }
+        // The barrier path: the fold books counters only; latencies
+        // travel as a per-shard sketch absorbed right after (exactly
+        // what `cluster::sync` does each epoch).
+        let mut sk = ShardSketches::new(0.01);
+        for e in &events {
+            sk.record(e.req.kind, e.class, e.cycle - e.req.arrival);
+        }
         fold_events(&mut exact, &[events.clone()], |_, _| {}, None);
         fold_events(&mut bounded, &[events], |_, _| {}, None);
+        bounded.absorb_shard_sketches(sk);
         finalize(&mut exact, vec![empty_outcome(7500.0)], &PowerModel::default());
         finalize(&mut bounded, vec![empty_outcome(7500.0)], &PowerModel::default());
 
@@ -611,14 +663,14 @@ mod tests {
         for p in [50.0, 95.0, 99.0] {
             let ratio = bounded.serve.latency_ms(p) / exact.serve.latency_ms(p);
             assert!(
-                ratio > 0.5 && ratio <= 2.0,
-                "p{p}: bounded {} vs exact {} outside the one-bucket bound",
+                (ratio - 1.0).abs() <= 0.01 + 1e-9,
+                "p{p}: bounded {} vs exact {} outside the sketch's 1% bound",
                 bounded.serve.latency_ms(p),
                 exact.serve.latency_ms(p)
             );
             let cr = bounded.class_latency_ms(TrafficClass::Batch, p)
                 / exact.class_latency_ms(TrafficClass::Batch, p);
-            assert!(cr > 0.5 && cr <= 2.0, "per-class p{p} outside the bound");
+            assert!((cr - 1.0).abs() <= 0.01 + 1e-9, "per-class p{p} outside the bound");
         }
         // Double-finalize safety: `finish` must not re-stream the empty
         // span log over the fold-fed histograms.

@@ -37,7 +37,10 @@ use crate::fault::ShardFaults;
 use crate::nop::mac::token_wait_cycles;
 use crate::power::DvfsLevel;
 use crate::serve::{choose_batch, CostCache, ModelKind, Package, PackageSpec, QueueSet, Request, RoutePolicy};
-use crate::telemetry::{PhaseBreakdown, PhaseTotals, PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
+use crate::telemetry::{
+    PhaseBreakdown, PhaseTotals, PreemptSpan, QuantileSketch, Recorder, ShedSpan, SpanLog,
+    SpanRecord,
+};
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// One ingress-classified request bound for a shard.
@@ -87,6 +90,46 @@ pub(crate) struct ShardEvent {
     pub queue_cycles: f64,
     /// Size of the batch a completion rode in (0 for sheds/failures).
     pub batch: u64,
+}
+
+/// Shard-local bounded-stats latency sketches (`--bounded-stats`),
+/// recorded at completion time and handed to the merge at each epoch
+/// barrier in shard-major order ([`ShardSim::take_sketches`]). Purely
+/// shard-deterministic — the sketches depend only on this shard's event
+/// stream, so absorbing them in fixed shard order at the barrier keeps
+/// cluster quantiles bit-identical at any worker-thread count.
+#[derive(Debug)]
+pub(crate) struct ShardSketches {
+    /// Completion latency (cycles), all classes and models.
+    pub(crate) all: QuantileSketch,
+    /// Same, keyed per model kind (entries created on first completion).
+    pub(crate) per_model: BTreeMap<ModelKind, QuantileSketch>,
+    /// Same, per traffic class (`class.index()` order).
+    pub(crate) per_class: [QuantileSketch; NUM_CLASSES],
+    /// Resolution for lazily created `per_model` entries.
+    eps: f64,
+}
+
+impl ShardSketches {
+    pub(crate) fn new(eps: f64) -> Self {
+        ShardSketches {
+            all: QuantileSketch::new(eps),
+            per_model: BTreeMap::new(),
+            per_class: std::array::from_fn(|_| QuantileSketch::new(eps)),
+            eps,
+        }
+    }
+
+    pub(crate) fn record(&mut self, kind: ModelKind, class: TrafficClass, latency: f64) {
+        let eps = self.eps;
+        self.all.record(latency);
+        self.per_model.entry(kind).or_insert_with(|| QuantileSketch::new(eps)).record(latency);
+        self.per_class[class.index()].record(latency);
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.all.is_empty()
+    }
 }
 
 /// Everything a finished shard hands back for the final accounting merge
@@ -175,6 +218,9 @@ pub(crate) struct ShardSim<'a> {
     /// Token-wait cycles accrued per package (shard-local order); sums
     /// to `token_wait`. Feeds the per-package epoch gauge tracks.
     token_wait_by_pkg: Vec<f64>,
+    /// Bounded-stats latency sketches, armed by `cfg.telemetry.bounded`
+    /// and drained by the barrier via [`ShardSim::take_sketches`].
+    sketches: Option<Box<ShardSketches>>,
 }
 
 impl<'a> ShardSim<'a> {
@@ -208,7 +254,26 @@ impl<'a> ShardSim<'a> {
             outage_slo_met: 0,
             token_wait: 0.0,
             token_wait_by_pkg: vec![0.0; n],
+            sketches: if cfg.telemetry.bounded {
+                Some(Box::new(ShardSketches::new(cfg.telemetry.quantile_error)))
+            } else {
+                None
+            },
         }
+    }
+
+    /// Hand the sketches accumulated since the last call to the barrier,
+    /// leaving fresh (same-resolution) empties behind. `None` when the
+    /// run is not bounded or nothing completed this epoch — skipping
+    /// empty merges keeps the absorb from lazily creating spurious
+    /// per-model/per-class stats entries.
+    pub(crate) fn take_sketches(&mut self) -> Option<ShardSketches> {
+        let sk = self.sketches.as_mut()?;
+        if sk.is_empty() {
+            return None;
+        }
+        let eps = sk.eps;
+        Some(std::mem::replace(&mut **sk, ShardSketches::new(eps)))
     }
 
     /// Arm this shard's slice of a seeded fault plan (see
@@ -722,6 +787,9 @@ impl<'a> ShardSim<'a> {
                         phases,
                     });
                 }
+            }
+            if let Some(sk) = &mut self.sketches {
+                sk.record(req.kind, class, t - req.arrival);
             }
             self.events.push(ShardEvent {
                 cycle: t,

@@ -60,6 +60,7 @@ use crate::serve::{ms_to_cycles, Request, Source};
 use crate::telemetry::{
     EpochSample, FlowRecord, MetricsStreamWriter, SloMonitor, Telemetry,
 };
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// Epoch-synchronization knobs (`ClusterConfig::sync`).
@@ -140,7 +141,8 @@ pub(crate) fn run_sync(
         "closed-loop feedback and stealing need finite epochs"
     );
     let shards = cluster.shards();
-    let mut stats = ClusterStats::with_mode(shards, cfg.telemetry.bounded);
+    let mut stats =
+        ClusterStats::with_mode(shards, cfg.telemetry.bounded, cfg.telemetry.quantile_error);
     // The burn-rate monitor lives outside `stats` (it is evaluation
     // state, not a result); only its raise/clear events land in the
     // registry and the artifacts.
@@ -184,6 +186,13 @@ pub(crate) fn run_sync(
     // or after that at which it held no work.
     let mut death_bar: Vec<Option<f64>> = vec![None; shards];
     let mut drain_bar: Vec<Option<f64>> = vec![None; shards];
+    // Sub-epoch drain refinement: which dead shard each failed-over
+    // request was drained from (`steal_pass` failover sub-pass), and
+    // the latest *exact finalization cycle* observed among each donor's
+    // rerouted requests. The map is lookup-only — its hash order never
+    // reaches the event stream — so determinism holds.
+    let mut rerouted: HashMap<u64, usize> = HashMap::new();
+    let mut reroute_done: Vec<Option<f64>> = vec![None; shards];
 
     // Requests stolen at the previous barrier, awaiting injection into
     // the next window (ready at its start).
@@ -228,17 +237,39 @@ pub(crate) fn run_sync(
         merge::fold_events(
             &mut stats,
             &events,
-            |t, req| source.on_complete(t, req),
+            |t, req| {
+                if let Some(&d) = rerouted.get(&req.id) {
+                    reroute_done[d] = Some(reroute_done[d].map_or(t, |x| x.max(t)));
+                }
+                source.on_complete(t, req)
+            },
             trace.as_mut().map(|t| &mut **t),
         );
+        // Bounded mode: absorb each shard's per-epoch quantile sketches
+        // right after the fold, in shard-id order — the deterministic
+        // merge point for the sketch track (thread count invisible).
+        if stats.bounded {
+            for sim in sims.iter() {
+                let taken = sim.lock().expect("shard mutex").take_sketches();
+                if let Some(sk) = taken {
+                    stats.absorb_shard_sketches(sk);
+                }
+            }
+        }
 
         if end.is_finite() {
             // ... then the stealing pass over the post-window queue state.
             pending = vec![Vec::new(); shards];
             if cfg.sync.steal {
                 let mut flows = Vec::new();
-                stats.steals +=
-                    steal_pass(&sims, end, &mut pending, &mut stats.class_reroutes, &mut flows);
+                stats.steals += steal_pass(
+                    &sims,
+                    end,
+                    &mut pending,
+                    &mut stats.class_reroutes,
+                    &mut flows,
+                    &mut rerouted,
+                );
                 if let Some(t) = stats.telemetry.as_mut() {
                     t.log.flows.extend(flows);
                 }
@@ -291,7 +322,13 @@ pub(crate) fn run_sync(
                         merge::fold_events(
                             &mut stats,
                             &stranded,
-                            |t, req| source.on_complete(t, req),
+                            |t, req| {
+                                if let Some(&d) = rerouted.get(&req.id) {
+                                    reroute_done[d] =
+                                        Some(reroute_done[d].map_or(t, |x| x.max(t)));
+                                }
+                                source.on_complete(t, req)
+                            },
                             trace.as_mut().map(|t| &mut **t),
                         );
                         start = end;
@@ -335,7 +372,12 @@ pub(crate) fn run_sync(
                 merge::fold_events(
                     &mut stats,
                     &stranded,
-                    |t, req| source.on_complete(t, req),
+                    |t, req| {
+                        if let Some(&d) = rerouted.get(&req.id) {
+                            reroute_done[d] = Some(reroute_done[d].map_or(t, |x| x.max(t)));
+                        }
+                        source.on_complete(t, req)
+                    },
                     trace.as_mut().map(|t| &mut **t),
                 );
             }
@@ -351,12 +393,18 @@ pub(crate) fn run_sync(
                 drain_bar[s] = Some(sims[s].lock().expect("shard mutex").now());
             }
         }
+        // Per dead shard, the drain end is the exact finalization cycle
+        // of the last request failover rerouted off it (sub-epoch
+        // resolution); shards that drained without any reroute fall back
+        // to the epoch-edge bound recorded at the barrier.
         stats.dead_shard_drain_cycles = death_bar
             .iter()
             .zip(&drain_bar)
-            .filter_map(|(d, r)| match (d, r) {
-                (Some(d), Some(r)) => Some((r - d).max(0.0)),
-                _ => None,
+            .enumerate()
+            .filter_map(|(s, (d, r))| {
+                let death = (*d)?;
+                let end = reroute_done[s].or(*r)?;
+                Some((end - death).max(0.0))
             })
             .fold(0.0f64, f64::max);
     }
@@ -496,13 +544,18 @@ fn sample_epoch(
 /// to the least-loaded live shards, counted per class into `reroutes`.
 /// Dead shards are never picked as victims. Every cross-shard move
 /// (steal or failover) appends a [`FlowRecord`] so the Chrome trace can
-/// draw a flow arrow from donor enqueue to victim service.
+/// draw a flow arrow from donor enqueue to victim service. Failed-over
+/// requests are additionally recorded in `rerouted` (request id -> dead
+/// donor, first donor wins) so the run loop can timestamp each dead
+/// shard's drain with the exact finalization cycle of its last rerouted
+/// request instead of rounding up to the epoch edge.
 fn steal_pass(
     sims: &[Mutex<ShardSim>],
     bar: f64,
     pending: &mut [Vec<ClassedRequest>],
     reroutes: &mut [u64; NUM_CLASSES],
     flows: &mut Vec<FlowRecord>,
+    rerouted: &mut HashMap<u64, usize>,
 ) -> u64 {
     if sims.len() < 2 {
         return 0;
@@ -542,6 +595,7 @@ fn steal_pass(
             let victim = victim.expect("live shard existence checked above");
             loads[victim] += guards[victim].estimate_service1(req.kind);
             reroutes[class.index()] += 1;
+            rerouted.entry(req.id).or_insert(donor);
             flows.push(FlowRecord {
                 id: req.id,
                 class,

@@ -12,8 +12,11 @@
 //!                  [--load F | --rps R | --closed-loop N | --client-trace FILE]
 //!                  [--steal] [--epoch-cycles N] [--queue-cap N|none] [--no-shed-late]
 //!                  [--no-preempt] [--faults SPEC] [--contention F] [--bounded-stats]
-//!                  [--stats-json FILE] [--trace-out FILE] [--metrics-out FILE(.jsonl streams)]
+//!                  [--quantile-error EPS] [--stats-json FILE] [--trace-out FILE]
+//!                  [--metrics-out FILE(.jsonl streams)|tcp://HOST:PORT|-]
 //! wienna report    <metrics.json|.jsonl> [--trace FILE] [--top N]   (artifact analyzer)
+//! wienna report    --diff A B [--tolerance F] [--phase-tolerance F] [--occupancy-tolerance F]
+//! wienna watch     <tcp://HOST:PORT|FILE.jsonl|-> [--top N] [--raw] [--no-clear]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -23,6 +26,7 @@
 //! is not in the vendored crate set.)
 
 use std::collections::HashMap;
+use std::io::Write as _;
 use wienna::anyhow;
 use wienna::config::{DesignPoint, SystemConfig};
 use wienna::coordinator::collective::simulate_distribution;
@@ -37,7 +41,7 @@ use wienna::serve::{
 };
 use wienna::workload::{resnet50::resnet50, tiny::tiny_cnn, unet::unet, Model};
 
-const USAGE: &str = "usage: wienna <simulate|sweep|serve|cluster|search|e2e|sim-validate|breakdown|report> [--flag value ...]
+const USAGE: &str = "usage: wienna <simulate|sweep|serve|cluster|search|e2e|sim-validate|breakdown|report|watch> [--flag value ...]
   simulate      cost-model run of a workload on one design point
   sweep         Fig-8-style cluster-size sweep (fixed 16384 PEs)
   serve         request-serving simulation on a package fleet
@@ -49,6 +53,11 @@ const USAGE: &str = "usage: wienna <simulate|sweep|serve|cluster|search|e2e|sim-
   report        condensed Fig-7/Fig-9 evaluation of one workload, or — with a positional
                 path — offline analysis of an emitted metrics artifact:
                 report <metrics.json|.jsonl> [--trace FILE] [--top N]
+                report --diff A B [--tolerance F] [--phase-tolerance F] [--occupancy-tolerance F]
+                compares two artifacts and exits nonzero on a regression past tolerance
+  watch         live text dashboard over a wienna-metrics-stream-v1 stream:
+                watch <tcp://HOST:PORT|FILE.jsonl|-> [--top N] [--raw] [--no-clear]
+                (tcp:// listens; start watch first, then the run with --metrics-out tcp://...)
 common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --design interposer-c|interposer-a|wienna-c|wienna-a
               --strategy kp-cp|np-cp|yp-xp|adaptive  --batch N  --chiplets N  --verbose
@@ -62,6 +71,8 @@ serve flags:  --mix cnn|mixed|resnet50|bert  --packages N  --policy rr|ll|edf
               --metrics-out FILE (metrics-registry JSON: latency/queue-wait/batch histograms,
               cycle attribution, layer-memo counters)
               --bounded-stats (histogram-backed percentiles, no per-request latency vectors)
+              --quantile-error EPS (bounded-stats percentile resolution: relative error <= EPS,
+              default 0.01)
 cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|ll|edf  --mix ...
               --slo-ms MS  --load F (x capacity) | --rps R (absolute)  --duration-ms MS  --seed N
               --queue-cap N|none  --no-shed-late  --no-preempt  --stats-json FILE  --verbose
@@ -81,10 +92,14 @@ cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|
               --trace-out FILE (Chrome trace-event JSON of the merged span log; Perfetto-loadable)
               --metrics-out FILE (metrics-registry JSON incl. per-epoch gauges, per-package MAC
               occupancy and SLO burn-rate events; byte-identical at any --threads; a .jsonl
-              suffix streams wienna-metrics-stream-v1 lines incrementally at each epoch barrier)
-              --bounded-stats (O(buckets+epochs) telemetry: percentiles come off log-bucketed
-              histograms — within one power-of-two bucket of exact — and the per-request
-              latency vectors are never grown)
+              suffix streams wienna-metrics-stream-v1 lines incrementally at each epoch barrier;
+              tcp://HOST:PORT exports the same lines live over a non-blocking socket — pair with
+              `wienna watch tcp://...`, started first; '-' streams to stdout ahead of the report)
+              --bounded-stats (O(sketch buckets+epochs) telemetry: percentiles come off
+              mergeable quantile sketches — relative error <= --quantile-error — and the
+              per-request latency vectors are never grown)
+              --quantile-error EPS (bounded-stats sketch resolution, in (0,1); default 0.01;
+              per-shard sketches merge deterministically at each epoch barrier)
 search flags: --slo MS  --load RPS (absolute)  --mix cnn|mixed|resnet50|bert
               --duration-ms MS (per probe)  --max-width N  --threads N  --seed N
               --class-slos I,B,E (per-class p99 targets in ms, 'inf' allowed; sizes on the
@@ -370,8 +385,17 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
             (Source::poisson(mix, rate, f.u64("seed", 42)?), ms_to_cycles(duration_ms), offered)
         }
     };
-    let mut stats =
-        if f.flag("bounded-stats") { ServeStats::bounded() } else { ServeStats::new() };
+    let quantile_error =
+        f.f64("quantile-error", wienna::telemetry::DEFAULT_QUANTILE_ERROR)?;
+    anyhow::ensure!(
+        quantile_error > 0.0 && quantile_error < 1.0,
+        "--quantile-error must be in (0, 1)"
+    );
+    let mut stats = if f.flag("bounded-stats") {
+        ServeStats::bounded_with(quantile_error)
+    } else {
+        ServeStats::new()
+    };
     let end = fleet.run(&mut source, horizon, &mut stats);
 
     println!(
@@ -441,6 +465,36 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Backlog cap for the live tcp metrics export: ~4 MiB of queued lines
+/// before the non-blocking sink starts dropping oldest-first.
+const TCP_STREAM_BACKLOG_BYTES: usize = 4 << 20;
+
+/// Where `--metrics-out` stream lines go: a file (`.jsonl`), stdout
+/// (`-`), or a live non-blocking socket (`tcp://HOST:PORT`).
+enum StreamSink {
+    File(std::fs::File),
+    Stdout(std::io::Stdout),
+    Tcp(wienna::telemetry::NonBlockingLineSink<std::net::TcpStream>),
+}
+
+impl std::io::Write for StreamSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            StreamSink::File(f) => f.write(buf),
+            StreamSink::Stdout(s) => s.write(buf),
+            StreamSink::Tcp(t) => t.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            StreamSink::File(f) => f.flush(),
+            StreamSink::Stdout(s) => s.flush(),
+            StreamSink::Tcp(t) => t.flush(),
+        }
+    }
+}
+
 fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, SyncConfig};
 
@@ -466,6 +520,12 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     let mix = parse_mix(&f.str("mix", "mixed"), slo_ms)?;
     let mix_kinds: Vec<ModelKind> = mix.entries.iter().map(|e| e.kind).collect();
     let bounded = f.flag("bounded-stats");
+    let quantile_error =
+        f.f64("quantile-error", wienna::telemetry::DEFAULT_QUANTILE_ERROR)?;
+    anyhow::ensure!(
+        quantile_error > 0.0 && quantile_error < 1.0,
+        "--quantile-error must be in (0, 1)"
+    );
     let trace_on = f.0.contains_key("trace-out");
     // --bounded-stats arms the registry even without an export path: the
     // histograms ARE the percentile source in that mode.
@@ -495,6 +555,7 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
             // Telemetry::finish feeds the histograms from them.
             spans: trace_on || (telemetry_on && !bounded),
             bounded,
+            quantile_error,
             ..Default::default()
         },
         ..Default::default()
@@ -571,20 +632,51 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         wienna::telemetry::prewarm_cost_model(&specs, &mix_kinds, &cfg.batcher);
     }
     let cluster = Cluster::new(specs, cfg);
-    // A .jsonl suffix on --metrics-out selects the incremental stream:
-    // epoch samples and SLO events land on disk at each barrier instead
-    // of buffering until the run ends.
+    // --metrics-out selects its sink by shape: a .jsonl suffix streams
+    // wienna-metrics-stream-v1 lines to a file at each epoch barrier, a
+    // tcp://HOST:PORT target exports the same lines live over a
+    // non-blocking socket (a `wienna watch` listener, started first),
+    // '-' streams to stdout, and anything else buffers the run and
+    // writes the wienna-metrics-v1 JSON at the end.
     let metrics_path = f.0.get("metrics-out").cloned();
-    let streaming = metrics_path.as_deref().is_some_and(|p| p.ends_with(".jsonl"));
+    let streaming = metrics_path
+        .as_deref()
+        .is_some_and(|p| p.ends_with(".jsonl") || p.starts_with("tcp://") || p == "-");
+    let mut stream_dropped: Option<u64> = None;
     let t0 = std::time::Instant::now();
     let stats = if streaming {
         let path = metrics_path.as_deref().expect("streaming implies a path");
-        let mut file = std::fs::File::create(path)
-            .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
-        let mut w = wienna::telemetry::MetricsStreamWriter::new(&mut file);
+        let mut sink = if let Some(addr) = path.strip_prefix("tcp://") {
+            let conn = std::net::TcpStream::connect(addr)
+                .map_err(|e| anyhow::anyhow!("connecting to {path} (is `wienna watch {path}` listening?): {e}"))?;
+            // Nagle off so each epoch line leaves promptly; non-blocking
+            // so a stalled consumer can never stall the epoch barrier
+            // (the bounded sink drops oldest lines instead).
+            let _ = conn.set_nodelay(true);
+            conn.set_nonblocking(true)
+                .map_err(|e| anyhow::anyhow!("setting {path} non-blocking: {e}"))?;
+            StreamSink::Tcp(wienna::telemetry::NonBlockingLineSink::new(
+                conn,
+                TCP_STREAM_BACKLOG_BYTES,
+            ))
+        } else if path == "-" {
+            StreamSink::Stdout(std::io::stdout())
+        } else {
+            StreamSink::File(
+                std::fs::File::create(path)
+                    .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?,
+            )
+        };
+        let mut w = wienna::telemetry::MetricsStreamWriter::new(&mut sink);
         let stats = cluster.run_streaming(&mut source, horizon, &mut w);
         w.write_summary(&stats.metrics_json_summary(Some(wienna::cost::memo::stats())));
         w.finish().map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        if let StreamSink::Tcp(t) = sink {
+            // Post-run grace drain; whatever the consumer still hasn't
+            // taken after the deadline is dropped and reported below.
+            let (_, dropped) = t.finish(std::time::Duration::from_secs(5));
+            stream_dropped = Some(dropped);
+        }
         stats
     } else {
         cluster.run(&mut source, horizon)
@@ -625,7 +717,7 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
         println!(
             "slo burn-rate alerts: {raised} raised, {active} still active{}",
             if stats.is_bounded() {
-                " | bounded stats: histogram percentiles (one-bucket error bound)"
+                " | bounded stats: sketch percentiles (relative error <= --quantile-error)"
             } else {
                 ""
             }
@@ -706,15 +798,29 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
             std::fs::write(path, stats.metrics_json(Some(memo)))
                 .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
         }
+        let desc = if path.starts_with("tcp://") {
+            "stream (wienna-metrics-stream-v1, live tcp)"
+        } else if path == "-" {
+            "stream (wienna-metrics-stream-v1, stdout)"
+        } else if streaming {
+            "stream (wienna-metrics-stream-v1)"
+        } else {
+            "json"
+        };
         println!(
-            "metrics {} -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
-            if streaming { "stream (wienna-metrics-stream-v1)" } else { "json" },
+            "metrics {desc} -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
             memo.hits,
             memo.misses,
             memo.evictions,
             memo.entries,
             memo.capacity
         );
+        if let Some(dropped) = stream_dropped {
+            println!(
+                "metrics stream: {dropped} lines dropped{}",
+                if dropped > 0 { " (slow or disconnected consumer)" } else { "" }
+            );
+        }
     }
     Ok(())
 }
@@ -938,6 +1044,15 @@ fn main() -> anyhow::Result<()> {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
+    // `wienna report --diff A B`: the regression gate between two
+    // metrics artifacts; `wienna watch SRC`: the live stream dashboard.
+    // Both take positionals, so they dispatch before Flags::parse.
+    if cmd == "report" && args.get(1).map(String::as_str) == Some("--diff") {
+        return wienna::report::diff::run(&args[2..]);
+    }
+    if cmd == "watch" {
+        return wienna::report::watch::run(&args[1..]);
+    }
     // `wienna report <artifact>`: the positional form analyzes an emitted
     // metrics artifact (buffered JSON or JSONL stream); the flags-only
     // form below keeps the paper evaluation. Dispatched before

@@ -67,7 +67,7 @@ impl Json {
     }
 
     /// `get` + number in one step; `None` for missing, null or non-numeric.
-    fn num(&self, key: &str) -> Option<f64> {
+    pub(crate) fn num(&self, key: &str) -> Option<f64> {
         self.get(key).and_then(Json::as_f64)
     }
 }
@@ -236,8 +236,9 @@ fn cell(v: Option<f64>) -> String {
 }
 
 /// Rebuild a [`LogHistogram`] from its exported bucket list so the
-/// analyzer can re-run quantile estimation offline.
-fn histogram_from(obj: &Json) -> Result<(String, LogHistogram)> {
+/// analyzer (and the `--diff` regression gate) can re-run quantile
+/// estimation offline.
+pub(crate) fn histogram_from(obj: &Json) -> Result<(String, LogHistogram)> {
     let name = obj.get("name").and_then(Json::as_str).context("histogram missing name")?;
     let mut h = LogHistogram::default();
     h.count = obj.num("count").context("histogram missing count")? as u64;
@@ -254,10 +255,11 @@ fn histogram_from(obj: &Json) -> Result<(String, LogHistogram)> {
     Ok((name.to_string(), h))
 }
 
-/// Render the full report from artifact text (buffered JSON or JSONL
-/// stream) plus an optional Chrome trace. Pure string-to-string so the
-/// tests can pin the output without touching the filesystem.
-pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<String> {
+/// Load artifact text — buffered `wienna-metrics-v1` JSON or a
+/// `wienna-metrics-stream-v1` JSONL stream (reconstructed first) — into
+/// a parsed, schema-checked root object. Returns `(root, streamed)`.
+/// Shared by the report renderer and the `--diff` regression gate.
+pub(crate) fn load_metrics_artifact(artifact: &str) -> Result<(Json, bool)> {
     let streamed = artifact.starts_with(&format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}"));
     let buffered;
     let text = if streamed {
@@ -272,6 +274,14 @@ pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<
     if schema != "wienna-metrics-v1" {
         bail!("unsupported artifact schema '{schema}' (expected wienna-metrics-v1, or a wienna-metrics-stream-v1 stream)");
     }
+    Ok((root, streamed))
+}
+
+/// Render the full report from artifact text (buffered JSON or JSONL
+/// stream) plus an optional Chrome trace. Pure string-to-string so the
+/// tests can pin the output without touching the filesystem.
+pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<String> {
+    let (root, streamed) = load_metrics_artifact(artifact)?;
 
     let mut out = String::new();
     let requests = root.num("requests").unwrap_or(0.0) as u64;
@@ -281,6 +291,12 @@ pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<
         if streamed { " (reconstructed from wienna-metrics-stream-v1 stream)" } else { "" },
         epochs.len()
     ));
+    if requests == 0 && epochs.is_empty() {
+        // A run that recorded nothing is a valid artifact, not an
+        // analyzer error: say so explicitly instead of leaving the
+        // reader to infer it from a page of zeros and dashes.
+        out.push_str("verdict: no traffic recorded (0 completed requests, 0 epoch samples)\n\n");
+    }
 
     // Percentile table, re-estimated from the exported buckets.
     let mut t = Table::new(
@@ -576,6 +592,22 @@ mod tests {
             from_buffered,
             "same artifact, same report"
         );
+    }
+
+    #[test]
+    fn report_handles_a_zero_request_artifact_with_an_explicit_verdict() {
+        let t = crate::telemetry::Telemetry::default();
+        let artifact = crate::telemetry::metrics_json(
+            &t,
+            &crate::telemetry::PhaseTotals::default(),
+            None,
+            None,
+        );
+        let s = render_report(&artifact, None, 8).expect("a no-traffic artifact is not an error");
+        assert!(s.contains("0 completed requests | 0 epoch samples"));
+        assert!(s.contains("verdict: no traffic recorded"), "explicit no-traffic verdict:\n{s}");
+        assert!(s.contains("(no samples)"), "empty percentile table renders zeros/dashes");
+        assert!(s.contains("bottleneck verdict: no completed requests"));
     }
 
     #[test]

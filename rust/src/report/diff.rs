@@ -1,0 +1,465 @@
+//! `wienna report --diff A B` — the regression gate: compare two
+//! metrics artifacts (buffered `wienna-metrics-v1` JSON or
+//! `wienna-metrics-stream-v1` JSONL, mixed freely) and exit nonzero
+//! when the second one regressed past tolerance. CI points it at a
+//! known-good baseline artifact and the candidate run's artifact; a
+//! clean exit means "no regression within tolerance".
+//!
+//! Gated dimensions, each with its own knob:
+//!
+//! * **percentiles** — p50/p95/p99 per shared histogram track,
+//!   re-estimated from the exported buckets; one-sided (only a *rise*
+//!   beyond `--tolerance`, a relative fraction, regresses — latency
+//!   falling is an improvement, not a failure);
+//! * **goodput** — completed-request count falling more than the same
+//!   relative tolerance;
+//! * **phase attribution** — any phase fraction shifting more than
+//!   `--phase-tolerance` (absolute) in either direction, plus the
+//!   `dist_alarm` flag newly tripping;
+//! * **SLO alert timeline** — total raises growing, broken down per
+//!   class/window pair;
+//! * **per-package MAC occupancy** — any package at the last epoch
+//!   barrier shifting more than `--occupancy-tolerance` (absolute).
+//!
+//! Two zero-traffic artifacts compare clean with an explicit "no
+//! traffic" note; traffic in the baseline but none in the candidate is
+//! itself a regression.
+
+use std::collections::BTreeMap;
+
+use crate::anyhow::{bail, Context, Result};
+use crate::report::artifact::{histogram_from, load_metrics_artifact, Json};
+use crate::report::table::fmt;
+use crate::report::Table;
+use crate::telemetry::{LogHistogram, PHASES};
+
+/// Default relative tolerance on percentile / goodput deltas (10%).
+pub const DEFAULT_TOLERANCE: f64 = 0.1;
+/// Default absolute tolerance on phase-fraction shifts.
+pub const DEFAULT_PHASE_TOLERANCE: f64 = 0.05;
+/// Default absolute tolerance on per-package MAC-occupancy shifts.
+pub const DEFAULT_OCCUPANCY_TOLERANCE: f64 = 0.10;
+
+/// Everything the gate compares, pulled out of one parsed artifact.
+struct Facts {
+    requests: f64,
+    hists: Vec<(String, LogHistogram)>,
+    /// Phase fractions in [`PHASES`] order (`None` when exported null).
+    fracs: Vec<Option<f64>>,
+    slo_raised: u64,
+    slo_cleared: u64,
+    /// Raise counts per "class/window" key, iteration-stable.
+    slo_raises_by_key: BTreeMap<String, u64>,
+    /// `mac_occupancy_by_pkg` at the last epoch barrier.
+    occupancy: Vec<f64>,
+    dist_alarm: bool,
+}
+
+fn facts(artifact: &str) -> Result<Facts> {
+    let (root, _) = load_metrics_artifact(artifact)?;
+    let mut hists = Vec::new();
+    for hj in root.get("histograms").and_then(Json::as_arr).unwrap_or(&[]) {
+        hists.push(histogram_from(hj)?);
+    }
+    let fracs = PHASES.iter().map(|n| root.num(&format!("{n}_frac"))).collect();
+    let (slo_raised, slo_cleared, slo_raises_by_key) = match root.get("slo") {
+        Some(slo) => {
+            let mut by_key: BTreeMap<String, u64> = BTreeMap::new();
+            for e in slo.get("events").and_then(Json::as_arr).unwrap_or(&[]) {
+                if e.get("kind").and_then(Json::as_str) == Some("raise") {
+                    let key = format!(
+                        "{}/{}",
+                        e.get("class").and_then(Json::as_str).unwrap_or("?"),
+                        e.get("window").and_then(Json::as_str).unwrap_or("?")
+                    );
+                    *by_key.entry(key).or_insert(0) += 1;
+                }
+            }
+            (
+                slo.num("alerts_raised").unwrap_or(0.0) as u64,
+                slo.num("alerts_cleared").unwrap_or(0.0) as u64,
+                by_key,
+            )
+        }
+        None => (0, 0, BTreeMap::new()),
+    };
+    let occupancy = root
+        .get("epochs")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .last()
+        .and_then(|e| e.get("mac_occupancy_by_pkg"))
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().map(|v| v.as_f64().unwrap_or(f64::NAN)).collect())
+        .unwrap_or_default();
+    Ok(Facts {
+        requests: root.num("requests").unwrap_or(0.0),
+        hists,
+        fracs,
+        slo_raised,
+        slo_cleared,
+        slo_raises_by_key,
+        occupancy,
+        dist_alarm: root.get("dist_alarm") == Some(&Json::Bool(true)),
+    })
+}
+
+fn pct(rel: f64) -> String {
+    format!("{:+.1}%", rel * 100.0)
+}
+
+/// Compare two artifacts (text in, report + violation count out). Pure
+/// string-to-string so the tests can pin verdicts without touching the
+/// filesystem; [`run`] layers file I/O and the nonzero exit on top.
+pub fn diff_artifacts(
+    a: &str,
+    b: &str,
+    tol: f64,
+    phase_tol: f64,
+    occ_tol: f64,
+) -> Result<(String, usize)> {
+    let fa = facts(a).context("artifact A")?;
+    let fb = facts(b).context("artifact B")?;
+    let mut out = String::new();
+    let mut violations: Vec<String> = Vec::new();
+
+    out.push_str(&format!(
+        "diff: A ({} completed requests) vs B ({} completed requests)\n",
+        fa.requests, fb.requests
+    ));
+    out.push_str(&format!(
+        "tolerances: percentiles/goodput {:.1}% relative, phase fractions {} absolute, occupancy {} absolute\n\n",
+        tol * 100.0,
+        fmt(phase_tol),
+        fmt(occ_tol)
+    ));
+
+    if fa.requests == 0.0 && fb.requests == 0.0 {
+        out.push_str("verdict: no traffic in either artifact — nothing to compare\n");
+        return Ok((out, 0));
+    }
+    if fa.requests > 0.0 && fb.requests == 0.0 {
+        violations.push(format!(
+            "B completed no requests while A completed {} (traffic vanished)",
+            fa.requests
+        ));
+    } else if fa.requests > 0.0 {
+        let rel = (fb.requests - fa.requests) / fa.requests;
+        if rel < -tol {
+            violations.push(format!(
+                "completed requests fell {} (tolerance {:.1}%)",
+                pct(rel),
+                tol * 100.0
+            ));
+        }
+    }
+
+    // Percentile deltas per shared track, one-sided on rises.
+    let mut t = Table::new(
+        "percentile deltas (B vs A, histogram-estimated)",
+        &["track", "stat", "A", "B", "delta", "flag"],
+    );
+    for (name, ha) in &fa.hists {
+        let Some((_, hb)) = fb.hists.iter().find(|(n, _)| n == name) else { continue };
+        if ha.count == 0 || hb.count == 0 {
+            continue;
+        }
+        for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+            let va = ha.quantile(p);
+            let vb = hb.quantile(p);
+            if !(va.is_finite() && vb.is_finite() && va > 0.0) {
+                continue;
+            }
+            let rel = (vb - va) / va;
+            let flagged = rel > tol;
+            if flagged {
+                violations.push(format!(
+                    "{name} {label} rose {} (tolerance {:.1}%)",
+                    pct(rel),
+                    tol * 100.0
+                ));
+            }
+            t.row(vec![
+                name.clone(),
+                label.to_string(),
+                fmt(va),
+                fmt(vb),
+                pct(rel),
+                if flagged { "REGRESSED" } else { "ok" }.to_string(),
+            ]);
+        }
+    }
+    if t.rows.is_empty() {
+        t.row(vec![
+            "(no comparable tracks)".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // Phase-attribution shifts, two-sided: attribution moving at all
+    // means the workload's bottleneck structure changed.
+    let mut t = Table::new("phase attribution shifts", &["phase", "A", "B", "delta", "flag"]);
+    for (i, name) in PHASES.iter().enumerate() {
+        match (fa.fracs[i], fb.fracs[i]) {
+            (Some(va), Some(vb)) if va.is_finite() && vb.is_finite() => {
+                let d = vb - va;
+                let flagged = d.abs() > phase_tol;
+                if flagged {
+                    violations.push(format!(
+                        "{name} fraction shifted {:+.3} (tolerance {})",
+                        d,
+                        fmt(phase_tol)
+                    ));
+                }
+                t.row(vec![
+                    name.to_string(),
+                    fmt(va),
+                    fmt(vb),
+                    format!("{d:+.3}"),
+                    if flagged { "SHIFTED" } else { "ok" }.to_string(),
+                ]);
+            }
+            _ => t.row(vec![
+                name.to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]),
+        }
+    }
+    out.push_str(&t.render());
+    if !fa.dist_alarm && fb.dist_alarm {
+        violations
+            .push("dist alarm newly tripped: the shared wireless medium became the bottleneck".to_string());
+        out.push_str("dist alarm: A clear -> B TRIPPED\n");
+    } else {
+        out.push_str(&format!(
+            "dist alarm: A {} -> B {}\n",
+            if fa.dist_alarm { "tripped" } else { "clear" },
+            if fb.dist_alarm { "tripped" } else { "clear" }
+        ));
+    }
+    out.push('\n');
+
+    // SLO alert timeline: total raises growing is a regression; the
+    // per-class/window breakdown says where.
+    out.push_str(&format!(
+        "slo alerts: A {} raised / {} cleared | B {} raised / {} cleared\n",
+        fa.slo_raised, fa.slo_cleared, fb.slo_raised, fb.slo_cleared
+    ));
+    if fb.slo_raised > fa.slo_raised {
+        violations.push(format!(
+            "slo alerts raised grew {} -> {}",
+            fa.slo_raised, fb.slo_raised
+        ));
+    }
+    let mut keys: Vec<&String> =
+        fa.slo_raises_by_key.keys().chain(fb.slo_raises_by_key.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    for key in keys {
+        let na = fa.slo_raises_by_key.get(key).copied().unwrap_or(0);
+        let nb = fb.slo_raises_by_key.get(key).copied().unwrap_or(0);
+        if na != nb {
+            out.push_str(&format!("  {key}: {na} -> {nb} raises\n"));
+        }
+    }
+    out.push('\n');
+
+    // Per-package MAC occupancy at the last barrier, absolute shifts.
+    let n = fa.occupancy.len().max(fb.occupancy.len());
+    if n > 0 {
+        let mut t = Table::new(
+            "per-package MAC occupancy deltas (last barrier)",
+            &["package", "A", "B", "delta", "flag"],
+        );
+        for i in 0..n {
+            let va = fa.occupancy.get(i).copied().unwrap_or(f64::NAN);
+            let vb = fb.occupancy.get(i).copied().unwrap_or(f64::NAN);
+            let d = vb - va;
+            let flagged = d.is_finite() && d.abs() > occ_tol;
+            if flagged {
+                violations.push(format!(
+                    "pkg{i} MAC occupancy shifted {d:+.3} (tolerance {})",
+                    fmt(occ_tol)
+                ));
+            }
+            t.row(vec![
+                format!("pkg{i}"),
+                if va.is_finite() { fmt(va) } else { "-".to_string() },
+                if vb.is_finite() { fmt(vb) } else { "-".to_string() },
+                if d.is_finite() { format!("{d:+.3}") } else { "-".to_string() },
+                if flagged { "SHIFTED" } else { "ok" }.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+
+    if violations.is_empty() {
+        out.push_str("verdict: no regression (within tolerance)\n");
+    } else {
+        out.push_str(&format!("verdict: {} tolerance violation(s)\n", violations.len()));
+        for v in &violations {
+            out.push_str(&format!("  regression: {v}\n"));
+        }
+    }
+    Ok((out, violations.len()))
+}
+
+fn flag_f64(args: &[String], i: usize, name: &str) -> Result<f64> {
+    let v = args.get(i + 1).with_context(|| format!("{name} needs a number"))?;
+    v.parse::<f64>()
+        .ok()
+        .filter(|x| x.is_finite() && *x >= 0.0)
+        .with_context(|| format!("{name}: bad value '{v}' (expected a non-negative number)"))
+}
+
+/// CLI entry: `wienna report --diff A B [--tolerance F]
+/// [--phase-tolerance F] [--occupancy-tolerance F]` — `F` values are
+/// fractions (0.1 = 10%). Exits nonzero (via `Err`) when any tolerance
+/// is exceeded, so CI can gate directly on the exit status.
+pub fn run(args: &[String]) -> Result<()> {
+    let mut paths: Vec<&String> = Vec::new();
+    let mut tol = DEFAULT_TOLERANCE;
+    let mut phase_tol = DEFAULT_PHASE_TOLERANCE;
+    let mut occ_tol = DEFAULT_OCCUPANCY_TOLERANCE;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--tolerance" => {
+                tol = flag_f64(args, i, "--tolerance")?;
+                i += 2;
+            }
+            "--phase-tolerance" => {
+                phase_tol = flag_f64(args, i, "--phase-tolerance")?;
+                i += 2;
+            }
+            "--occupancy-tolerance" => {
+                occ_tol = flag_f64(args, i, "--occupancy-tolerance")?;
+                i += 2;
+            }
+            other if other.starts_with("--") => {
+                bail!("unknown report --diff flag '{other}' (expected --tolerance F, --phase-tolerance F or --occupancy-tolerance F)")
+            }
+            _ => {
+                paths.push(&args[i]);
+                i += 1;
+            }
+        }
+    }
+    let &[a_path, b_path] = paths.as_slice() else {
+        bail!("report --diff needs exactly two artifact paths (got {})", paths.len())
+    };
+    let a = std::fs::read_to_string(a_path).with_context(|| format!("reading {a_path}"))?;
+    let b = std::fs::read_to_string(b_path).with_context(|| format!("reading {b_path}"))?;
+    let (report, violations) = diff_artifacts(&a, &b, tol, phase_tol, occ_tol)?;
+    print!("{report}");
+    if violations > 0 {
+        bail!("regression: {violations} tolerance violation(s) between {a_path} and {b_path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TrafficClass;
+    use crate::telemetry::{
+        metrics_json, EpochSample, PhaseTotals, SloEvent, SloEventKind, SloWindow, Telemetry,
+    };
+
+    /// Build an artifact whose latency track holds `latencies`, with
+    /// `dist`/`compute` phase weight and one epoch of occupancy gauges.
+    fn artifact(latencies: &[f64], dist: f64, compute: f64, occ: &[f64], raises: usize) -> String {
+        let mut t = Telemetry::default();
+        for &v in latencies {
+            t.metrics.latency_ms.record(v);
+        }
+        t.metrics.epochs.push(EpochSample {
+            epoch: 0,
+            cycle: 5000.0,
+            completed: latencies.len() as u64,
+            mac_occupancy_by_pkg: occ.to_vec(),
+            token_wait_by_pkg: vec![0.0; occ.len()],
+            ..Default::default()
+        });
+        for i in 0..raises {
+            t.metrics.slo_events.push(SloEvent {
+                epoch: i as u64,
+                cycle: 1000.0 * i as f64,
+                class: TrafficClass::Interactive,
+                window: SloWindow::Fast,
+                kind: SloEventKind::Raise,
+                burn_rate: 10.0,
+            });
+        }
+        let mut attr = PhaseTotals::default();
+        attr.requests = latencies.len() as u64;
+        attr.dist = dist;
+        attr.compute = compute;
+        metrics_json(&t, &attr, None, None)
+    }
+
+    #[test]
+    fn identical_artifacts_diff_clean() {
+        let a = artifact(&[1.0, 2.0, 4.0, 8.0], 20.0, 80.0, &[0.3, 0.5], 0);
+        let (report, violations) = diff_artifacts(&a, &a, 0.1, 0.05, 0.1).expect("valid");
+        assert_eq!(violations, 0, "identical artifacts must gate clean:\n{report}");
+        assert!(report.contains("verdict: no regression (within tolerance)"));
+        assert!(report.contains("latency_ms"));
+    }
+
+    #[test]
+    fn latency_blowup_phase_shift_and_alerts_all_gate() {
+        let a = artifact(&[1.0, 1.0, 2.0, 2.0], 20.0, 80.0, &[0.3, 0.5], 0);
+        // B: 8x the latency, dist-dominated (trips the alarm), an SLO
+        // raise, and pkg0 occupancy up by 0.4.
+        let b = artifact(&[8.0, 8.0, 16.0, 16.0], 70.0, 30.0, &[0.7, 0.5], 1);
+        let (report, violations) = diff_artifacts(&a, &b, 0.1, 0.05, 0.1).expect("valid");
+        assert!(violations > 0, "the regressed artifact must trip the gate:\n{report}");
+        assert!(report.contains("REGRESSED"), "percentile rise flagged:\n{report}");
+        assert!(report.contains("dist alarm: A clear -> B TRIPPED"));
+        assert!(report.contains("slo alerts raised grew 0 -> 1") || report.contains("regression: slo alerts raised grew 0 -> 1"));
+        assert!(report.contains("interactive/fast: 0 -> 1 raises"));
+        assert!(report.contains("pkg0"), "occupancy delta table present:\n{report}");
+    }
+
+    #[test]
+    fn improvements_do_not_gate() {
+        let a = artifact(&[8.0, 8.0, 16.0, 16.0], 20.0, 80.0, &[0.5], 0);
+        let b = artifact(&[1.0, 1.0, 2.0, 2.0], 20.0, 80.0, &[0.5], 0);
+        let (report, violations) = diff_artifacts(&a, &b, 0.1, 0.05, 0.1).expect("valid");
+        assert_eq!(violations, 0, "faster is not a regression:\n{report}");
+    }
+
+    #[test]
+    fn vanished_traffic_is_a_regression_and_mutual_silence_is_not() {
+        let live = artifact(&[1.0, 2.0], 20.0, 80.0, &[0.5], 0);
+        let dead = metrics_json(&Telemetry::default(), &PhaseTotals::default(), None, None);
+        let (_, violations) = diff_artifacts(&live, &dead, 0.1, 0.05, 0.1).expect("valid");
+        assert!(violations > 0, "traffic vanished entirely");
+        let (report, violations) = diff_artifacts(&dead, &dead, 0.1, 0.05, 0.1).expect("valid");
+        assert_eq!(violations, 0);
+        assert!(report.contains("no traffic in either artifact"));
+    }
+
+    #[test]
+    fn tolerance_knob_widens_the_gate() {
+        let a = artifact(&[1.0, 1.0, 2.0, 2.0], 20.0, 80.0, &[0.5], 0);
+        // 4x rise — two full power-of-two buckets, so the histogram
+        // estimate resolves it regardless of in-bucket interpolation.
+        let b = artifact(&[4.0, 4.0, 8.0, 8.0], 20.0, 80.0, &[0.5], 0);
+        let (report, strict) = diff_artifacts(&a, &b, 0.1, 0.05, 0.1).expect("valid");
+        assert!(strict > 0, "10% tolerance must flag a 4x rise:\n{report}");
+        let (_, loose) = diff_artifacts(&a, &b, 10.0, 0.05, 0.1).expect("valid");
+        assert_eq!(loose, 0, "a 10x tolerance swallows it");
+    }
+}

@@ -1,7 +1,12 @@
 //! Rendering layer (substrate S12): ASCII tables and CSV series used by
-//! the benchmark harnesses to print paper-figure-shaped output.
+//! the benchmark harnesses to print paper-figure-shaped output, plus
+//! the offline artifact analyzers — `wienna report` ([`artifact`]),
+//! the `--diff` regression gate ([`diff`]) and the live stream
+//! dashboard `wienna watch` ([`watch`]).
 
 pub mod artifact;
+pub mod diff;
 pub mod table;
+pub mod watch;
 
 pub use table::Table;

@@ -1,0 +1,385 @@
+//! `wienna watch <tcp://HOST:PORT | FILE.jsonl | ->` — a refreshing
+//! text dashboard rendered from a `wienna-metrics-stream-v1` stream
+//! alone, no re-simulation and no access to the producing process.
+//!
+//! Sources:
+//!
+//! * `tcp://HOST:PORT` — **listen** on the address and accept one
+//!   connection; the simulator side connects out with
+//!   `--metrics-out tcp://HOST:PORT`, so the dashboard starts first;
+//! * `-` — read the stream from stdin (`wienna cluster ... --metrics-out -
+//!   | wienna watch -`);
+//! * any other argument — a `.jsonl` stream file (replays it).
+//!
+//! Each `epoch_sample` line refreshes the dashboard: instantaneous
+//! goodput (Δcompleted over the epoch window), queue/in-flight/power
+//! gauges, the top-N packages by MAC occupancy, and the active SLO
+//! alerts tracked from `slo_event` raise/clear lines. Percentiles and
+//! phase fractions come only from the final `summary` line — until it
+//! arrives they render as "(pending summary)". The screen is cleared
+//! between frames only when stdout is a terminal (`--no-clear` forces
+//! append mode).
+//!
+//! `--raw` echoes the received lines verbatim to stdout instead of
+//! rendering — the capture half of CI's loopback smoke test, which
+//! asserts the bytes that crossed the socket are identical to the
+//! stream file the same configuration writes.
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, IsTerminal, Write};
+
+use crate::anyhow::{bail, Context, Result};
+use crate::report::artifact::{histogram_from, parse_json, Json};
+use crate::serve::cycles_to_ms;
+use crate::telemetry::{METRICS_STREAM_SCHEMA, PHASES};
+
+/// Default number of packages shown in the MAC-occupancy leaderboard.
+const DEFAULT_TOP: usize = 4;
+
+/// Everything the dashboard knows, folded from the stream so far.
+#[derive(Default)]
+struct DashState {
+    epochs: u64,
+    /// The most recent `epoch_sample` object.
+    last: Option<Json>,
+    /// Δcompleted / Δwall between the last two samples, in req/s.
+    goodput_rps: f64,
+    slo_raised: u64,
+    slo_cleared: u64,
+    /// Currently-raised alerts as "class/window" keys, sorted.
+    active_alerts: BTreeSet<String>,
+    /// The parsed final summary artifact, once it has arrived.
+    summary: Option<Json>,
+}
+
+impl DashState {
+    fn ingest_epoch(&mut self, e: &Json) {
+        if let Some(prev) = &self.last {
+            let dc = e.num("completed").unwrap_or(0.0) - prev.num("completed").unwrap_or(0.0);
+            let dt_ms =
+                cycles_to_ms(e.num("cycle").unwrap_or(f64::NAN) - prev.num("cycle").unwrap_or(f64::NAN));
+            self.goodput_rps = if dt_ms > 0.0 { dc / dt_ms * 1000.0 } else { f64::NAN };
+        }
+        self.epochs += 1;
+        self.last = Some(e.clone());
+    }
+
+    fn ingest_slo(&mut self, e: &Json) {
+        let key = format!(
+            "{}/{}",
+            e.get("class").and_then(Json::as_str).unwrap_or("?"),
+            e.get("window").and_then(Json::as_str).unwrap_or("?")
+        );
+        match e.get("kind").and_then(Json::as_str) {
+            Some("raise") => {
+                self.slo_raised += 1;
+                self.active_alerts.insert(key);
+            }
+            _ => {
+                self.slo_cleared += 1;
+                self.active_alerts.remove(&key);
+            }
+        }
+    }
+}
+
+fn gauge(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.3}"),
+        _ => "-".to_string(),
+    }
+}
+
+/// Render one dashboard frame. Pure state-to-string so the unit tests
+/// can pin frames without a terminal or a socket.
+fn render_dashboard(state: &DashState, top: usize) -> String {
+    let mut out = String::new();
+    match &state.last {
+        Some(e) => {
+            out.push_str(&format!(
+                "wienna watch | epoch {} @ cycle {}\n",
+                e.num("epoch").unwrap_or(0.0),
+                gauge(e.num("cycle"))
+            ));
+            let goodput = if state.epochs >= 2 && state.goodput_rps.is_finite() {
+                format!("{:.1} req/s", state.goodput_rps)
+            } else {
+                "(one sample)".to_string()
+            };
+            out.push_str(&format!(
+                "goodput {goodput} | completed {} | queued {} | in-flight {} | power {} W\n",
+                e.num("completed").unwrap_or(0.0),
+                e.num("queued").unwrap_or(0.0),
+                e.num("in_flight_batches").unwrap_or(0.0),
+                gauge(e.num("power_w"))
+            ));
+            let occ = e.get("mac_occupancy_by_pkg").and_then(Json::as_arr).unwrap_or(&[]);
+            if occ.is_empty() {
+                out.push_str("mac occupancy: (no per-package gauges)\n");
+            } else {
+                let mut rows: Vec<(usize, f64)> = occ
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| (i, v.as_f64().unwrap_or(f64::NAN)))
+                    .collect();
+                rows.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+                let shown = rows.len().min(top.max(1));
+                out.push_str(&format!("mac occupancy top {shown} of {}:", rows.len()));
+                for &(i, o) in rows.iter().take(shown) {
+                    out.push_str(&format!("  pkg{i} {}", gauge(Some(o))));
+                }
+                out.push('\n');
+            }
+        }
+        None => out.push_str("wienna watch | waiting for the first epoch sample\n"),
+    }
+    out.push_str(&format!(
+        "slo alerts: {} raised, {} cleared | active: {}\n",
+        state.slo_raised,
+        state.slo_cleared,
+        if state.active_alerts.is_empty() {
+            "none".to_string()
+        } else {
+            state.active_alerts.iter().cloned().collect::<Vec<_>>().join(", ")
+        }
+    ));
+    match &state.summary {
+        Some(root) => {
+            out.push_str("percentiles (summary):\n");
+            for hj in root.get("histograms").and_then(Json::as_arr).unwrap_or(&[]) {
+                if let Ok((name, h)) = histogram_from(hj) {
+                    if h.count == 0 {
+                        continue;
+                    }
+                    out.push_str(&format!(
+                        "  {name}: n={} p50 {} p95 {} p99 {}\n",
+                        h.count,
+                        gauge(Some(h.quantile(50.0))),
+                        gauge(Some(h.quantile(95.0))),
+                        gauge(Some(h.quantile(99.0)))
+                    ));
+                }
+            }
+            let mut frac_line = String::new();
+            for name in PHASES {
+                if !frac_line.is_empty() {
+                    frac_line.push_str("  ");
+                }
+                frac_line.push_str(&format!("{name} {}", gauge(root.num(&format!("{name}_frac")))));
+            }
+            out.push_str(&format!("phase fractions: {frac_line}\n"));
+            out.push_str("stream complete\n");
+        }
+        None => out.push_str("percentiles / phase fractions: (pending summary)\n"),
+    }
+    out
+}
+
+/// CLI entry: `wienna watch <tcp://HOST:PORT | FILE.jsonl | ->
+/// [--top N] [--raw] [--no-clear]`.
+pub fn run(args: &[String]) -> Result<()> {
+    let mut source: Option<&String> = None;
+    let mut top = DEFAULT_TOP;
+    let mut raw = false;
+    let mut no_clear = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--top" => {
+                let v = args.get(i + 1).context("--top needs a number")?;
+                top = v
+                    .parse()
+                    .map_err(|_| crate::anyhow::Error::msg(format!("--top: bad number '{v}'")))?;
+                i += 2;
+            }
+            "--raw" => {
+                raw = true;
+                i += 1;
+            }
+            "--no-clear" => {
+                no_clear = true;
+                i += 1;
+            }
+            other if other.starts_with("--") => {
+                bail!("unknown watch flag '{other}' (expected --top N, --raw or --no-clear)")
+            }
+            _ if source.is_none() => {
+                source = Some(&args[i]);
+                i += 1;
+            }
+            other => bail!("watch takes one source, got a second: '{other}'"),
+        }
+    }
+    let source =
+        source.context("watch needs a source: tcp://HOST:PORT, a .jsonl file, or '-'")?;
+
+    // Status chatter goes to stderr so `--raw` stdout stays a clean
+    // byte-for-byte capture of the stream.
+    let reader: Box<dyn BufRead> = if let Some(addr) = source.strip_prefix("tcp://") {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding watch listener on {addr}"))?;
+        eprintln!("watch: listening on {addr} — start the run with --metrics-out {source}");
+        let (conn, peer) = listener.accept().context("accepting the stream connection")?;
+        eprintln!("watch: stream connected from {peer}");
+        Box::new(BufReader::new(conn))
+    } else if source == "-" {
+        Box::new(BufReader::new(std::io::stdin()))
+    } else {
+        Box::new(BufReader::new(
+            std::fs::File::open(source).with_context(|| format!("opening {source}"))?,
+        ))
+    };
+
+    if raw {
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        for line in reader.lines() {
+            let line = line.context("reading stream")?;
+            writeln!(out, "{line}").context("writing captured line")?;
+        }
+        out.flush().context("flushing capture")?;
+        return Ok(());
+    }
+
+    let mut lines = reader.lines();
+    let header = lines.next().context("empty stream")?.context("reading stream header")?;
+    if header != format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}") {
+        bail!("not a {METRICS_STREAM_SCHEMA} stream (header line: {header})");
+    }
+    let clear = !no_clear && std::io::stdout().is_terminal();
+    let mut state = DashState::default();
+    let redraw = |state: &DashState| {
+        let frame = render_dashboard(state, top);
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        if clear {
+            let _ = out.write_all(b"\x1b[2J\x1b[H");
+        }
+        let _ = out.write_all(frame.as_bytes());
+        let _ = out.flush();
+    };
+    for line in lines {
+        let line = line.context("reading stream")?;
+        if line.is_empty() {
+            continue;
+        }
+        let j = parse_json(&line).context("malformed stream line")?;
+        if let Some(e) = j.get("epoch_sample") {
+            state.ingest_epoch(e);
+            redraw(&state);
+        } else if let Some(e) = j.get("slo_event") {
+            state.ingest_slo(e);
+            redraw(&state);
+        } else if let Some(s) = j.get("summary").and_then(Json::as_str) {
+            state.summary = Some(parse_json(s).context("malformed summary payload")?);
+            redraw(&state);
+            return Ok(());
+        } else {
+            bail!("unknown stream line shape: {line}");
+        }
+    }
+    // EOF without a summary: a truncated (still-running or killed)
+    // stream. The frames already rendered are still the live view.
+    eprintln!("watch: stream ended without a summary line (truncated stream)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{
+        metrics_json_summary, EpochSample, MetricsStreamWriter, PhaseTotals, Telemetry,
+    };
+
+    fn sample(epoch: u64, cycle: f64, completed: u64) -> String {
+        let mut t = Telemetry::default();
+        t.metrics.epochs.push(EpochSample {
+            epoch,
+            cycle,
+            completed,
+            queued: 3,
+            in_flight_batches: 2,
+            mac_occupancy_by_pkg: vec![0.1, 0.9, 0.4],
+            token_wait_by_pkg: vec![0.0, 1.0, 2.0],
+            ..Default::default()
+        });
+        let mut sink: Vec<u8> = Vec::new();
+        let mut w = MetricsStreamWriter::new(&mut sink);
+        w.write_epoch(&t.metrics.epochs[0]);
+        w.finish().expect("Vec sink");
+        let s = String::from_utf8(sink).expect("utf8");
+        s.lines().nth(1).expect("epoch line").to_string()
+    }
+
+    fn ingest_line(state: &mut DashState, line: &str) {
+        let j = parse_json(line).expect("valid line");
+        if let Some(e) = j.get("epoch_sample") {
+            state.ingest_epoch(e);
+        } else if let Some(e) = j.get("slo_event") {
+            state.ingest_slo(e);
+        } else if let Some(s) = j.get("summary").and_then(Json::as_str) {
+            state.summary = Some(parse_json(s).expect("valid summary"));
+        } else {
+            panic!("unknown line {line}");
+        }
+    }
+
+    #[test]
+    fn dashboard_tracks_goodput_occupancy_and_alerts_from_lines_alone() {
+        let mut state = DashState::default();
+        let first = render_dashboard(&state, 4);
+        assert!(first.contains("waiting for the first epoch sample"));
+
+        ingest_line(&mut state, &sample(0, 0.0, 0));
+        ingest_line(&mut state, &sample(1, 1_000_000.0, 500));
+        ingest_line(
+            &mut state,
+            "{\"slo_event\": { \"epoch\": 1, \"cycle\": 1000000, \"class\": \"interactive\", \
+             \"window\": \"fast\", \"kind\": \"raise\", \"burn_rate\": 12 }}",
+        );
+        let frame = render_dashboard(&state, 2);
+        assert!(frame.contains("epoch 1 @ cycle 1000000"), "frame:\n{frame}");
+        assert!(frame.contains("goodput"), "frame:\n{frame}");
+        assert!(!frame.contains("(one sample)"), "two samples give a rate:\n{frame}");
+        assert!(frame.contains("completed 500"));
+        // Top-2 of 3 packages, hottest first; the coolest is dropped.
+        assert!(frame.contains("mac occupancy top 2 of 3:  pkg1 0.900  pkg2 0.400"));
+        assert!(frame.contains("slo alerts: 1 raised, 0 cleared | active: interactive/fast"));
+        assert!(frame.contains("(pending summary)"));
+
+        ingest_line(
+            &mut state,
+            "{\"slo_event\": { \"epoch\": 2, \"cycle\": 2000000, \"class\": \"interactive\", \
+             \"window\": \"fast\", \"kind\": \"clear\", \"burn_rate\": 0.5 }}",
+        );
+        let frame = render_dashboard(&state, 2);
+        assert!(frame.contains("slo alerts: 1 raised, 1 cleared | active: none"));
+    }
+
+    #[test]
+    fn dashboard_renders_percentiles_once_the_summary_arrives() {
+        let mut t = Telemetry::default();
+        for v in [1.0, 2.0, 4.0, 8.0] {
+            t.metrics.latency_ms.record(v);
+        }
+        let mut attr = PhaseTotals::default();
+        attr.requests = 4;
+        attr.compute = 80.0;
+        attr.queue = 20.0;
+        let summary = metrics_json_summary(&t, &attr, None, None);
+        let mut sink: Vec<u8> = Vec::new();
+        let mut w = MetricsStreamWriter::new(&mut sink);
+        w.write_summary(&summary);
+        w.finish().expect("Vec sink");
+        let stream = String::from_utf8(sink).expect("utf8");
+        let summary_line = stream.lines().nth(1).expect("summary line");
+
+        let mut state = DashState::default();
+        ingest_line(&mut state, summary_line);
+        let frame = render_dashboard(&state, 4);
+        assert!(frame.contains("latency_ms: n=4"), "frame:\n{frame}");
+        assert!(frame.contains("phase fractions: queue 0.200"), "frame:\n{frame}");
+        assert!(frame.contains("stream complete"));
+        assert!(!frame.contains("(pending summary)"));
+    }
+}

@@ -3,15 +3,17 @@
 //! Latency percentiles have two modes. The exact path records every
 //! completion in a `Vec` and answers nearest-rank percentiles off a
 //! sorted view — the test oracle. The bounded path (`--bounded-stats`)
-//! streams every sample into a `telemetry::metrics::LogHistogram`
-//! instead and answers from [`LogHistogram::quantile`]: O(buckets)
-//! memory no matter how many requests the run serves, within one
-//! power-of-two bucket of the exact answer (the documented bound —
-//! `estimate/exact ∈ (1/2, 2]`).
+//! streams every sample into a mergeable
+//! [`telemetry::sketch::QuantileSketch`](crate::telemetry::QuantileSketch)
+//! instead: O(buckets) memory no matter how many requests the run
+//! serves, within the configured relative error ε of the exact answer
+//! (`--quantile-error`, default 1%). Sketches merge exactly, so the
+//! cluster's per-shard sketches can be absorbed at the sync barrier
+//! without any quantile drift.
 
 use super::request::{cycles_to_ms, ModelKind, Request};
 use crate::config::CLOCK_HZ;
-use crate::telemetry::LogHistogram;
+use crate::telemetry::{QuantileSketch, DEFAULT_QUANTILE_ERROR};
 use std::collections::BTreeMap;
 
 /// Latency sample recorder: exact (`Vec`-backed, the default) or
@@ -22,9 +24,10 @@ pub struct LatencyRecorder {
     /// Lazily sorted view, built at most once per recorder state (pushes
     /// invalidate it) so querying p50/p95/p99/p100 sorts only once.
     sorted: std::cell::OnceCell<Vec<f64>>,
-    /// Bounded mode: the histogram replaces `samples` entirely (the Vec
-    /// never grows), percentiles come from `LogHistogram::quantile`.
-    hist: Option<Box<LogHistogram>>,
+    /// Bounded mode: the quantile sketch replaces `samples` entirely
+    /// (the Vec never grows), percentiles come from
+    /// `QuantileSketch::quantile` within its relative-error bound.
+    sketch: Option<Box<QuantileSketch>>,
     /// Exact running max for bounded mode (`f64::max` skips the NaN
     /// seed on the first sample).
     max: f64,
@@ -35,18 +38,37 @@ impl LatencyRecorder {
         LatencyRecorder::default()
     }
 
-    /// A bounded-memory recorder: O(buckets), not O(samples).
+    /// A bounded-memory recorder: O(buckets), not O(samples), at the
+    /// default sketch resolution.
     pub fn bounded() -> Self {
+        Self::bounded_with(DEFAULT_QUANTILE_ERROR)
+    }
+
+    /// A bounded-memory recorder with relative quantile error ≤ `eps`.
+    pub fn bounded_with(eps: f64) -> Self {
         LatencyRecorder {
-            hist: Some(Box::default()),
+            sketch: Some(Box::new(QuantileSketch::new(eps))),
             max: f64::NAN,
             ..Default::default()
         }
     }
 
-    /// Whether this recorder is histogram-backed.
+    /// Whether this recorder is sketch-backed.
     pub fn is_bounded(&self) -> bool {
-        self.hist.is_some()
+        self.sketch.is_some()
+    }
+
+    /// Merge a shard-local sketch into this (bounded) recorder — the
+    /// cluster sync barrier's absorption path. Exact: bucket counts add
+    /// as integers, so quantiles match a single-recorder run bit for
+    /// bit regardless of shard count or merge order.
+    pub fn absorb_sketch(&mut self, other: &QuantileSketch) {
+        let sk = self.sketch.as_mut().expect("absorb_sketch on an exact recorder");
+        sk.merge(other);
+        let m = other.max();
+        if !m.is_nan() {
+            self.max = self.max.max(m);
+        }
     }
 
     /// How many samples sit in the exact `Vec` — stays 0 for the whole
@@ -56,8 +78,8 @@ impl LatencyRecorder {
     }
 
     pub fn push(&mut self, v: f64) {
-        if let Some(h) = &mut self.hist {
-            h.record(v);
+        if let Some(sk) = &mut self.sketch {
+            sk.record(v);
             self.max = self.max.max(v);
             return;
         }
@@ -66,8 +88,8 @@ impl LatencyRecorder {
     }
 
     pub fn len(&self) -> usize {
-        match &self.hist {
-            Some(h) => h.count as usize,
+        match &self.sketch {
+            Some(sk) => sk.count() as usize,
             None => self.samples.len(),
         }
     }
@@ -89,12 +111,12 @@ impl LatencyRecorder {
 
     /// Nearest-rank percentile: the smallest sample such that at least
     /// `p`% of samples are `<=` it. `NaN` when no samples were recorded.
-    /// Bounded recorders answer from the histogram — same rank, value
-    /// interpolated within its power-of-two bucket.
+    /// Bounded recorders answer from the sketch — same rank, value
+    /// interpolated within its sub-bucket (relative error ≤ ε).
     pub fn percentile(&self, p: f64) -> f64 {
         assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
-        if let Some(h) = &self.hist {
-            return h.quantile(p);
+        if let Some(sk) = &self.sketch {
+            return sk.quantile(p);
         }
         if self.samples.is_empty() {
             return f64::NAN;
@@ -106,8 +128,8 @@ impl LatencyRecorder {
     }
 
     pub fn mean(&self) -> f64 {
-        if let Some(h) = &self.hist {
-            return if h.count == 0 { f64::NAN } else { h.mean() };
+        if let Some(sk) = &self.sketch {
+            return sk.mean();
         }
         if self.samples.is_empty() {
             f64::NAN
@@ -117,7 +139,7 @@ impl LatencyRecorder {
     }
 
     pub fn max(&self) -> f64 {
-        match &self.hist {
+        match &self.sketch {
             Some(_) => self.max,
             None => self.samples.iter().copied().fold(f64::NAN, f64::max),
         }
@@ -144,10 +166,16 @@ pub struct ModelStats {
 }
 
 impl ModelStats {
-    /// Stats whose latency recorder matches the run's memory mode.
+    /// Stats whose latency recorder matches the run's memory mode, at
+    /// the default sketch resolution.
     pub fn with_mode(bounded: bool) -> Self {
+        Self::with_error(bounded, DEFAULT_QUANTILE_ERROR)
+    }
+
+    /// Stats whose bounded-mode recorder uses quantile error ≤ `eps`.
+    pub fn with_error(bounded: bool, eps: f64) -> Self {
         ModelStats {
-            latency: if bounded { LatencyRecorder::bounded() } else { LatencyRecorder::new() },
+            latency: if bounded { LatencyRecorder::bounded_with(eps) } else { LatencyRecorder::new() },
             ..Default::default()
         }
     }
@@ -157,6 +185,13 @@ impl ModelStats {
     /// the cluster's per-class accounting all funnel through here.
     pub fn record_completion(&mut self, req: &Request, cycle: f64) {
         self.latency.push(cycle - req.arrival);
+        self.record_completion_counters(req, cycle);
+    }
+
+    /// The counter half of [`Self::record_completion`] — no latency
+    /// push. The cluster's bounded mode books completions through this
+    /// and absorbs the latency later as a whole per-shard sketch.
+    pub fn record_completion_counters(&mut self, req: &Request, cycle: f64) {
         self.completed += 1;
         if cycle <= req.deadline {
             self.slo_met += 1;
@@ -185,8 +220,11 @@ pub struct ServeStats {
     end_cycle: f64,
     /// `--bounded-stats`: every latency recorder (aggregate and
     /// per-model, including ones lazily created later) is
-    /// histogram-backed.
+    /// sketch-backed.
     bounded: bool,
+    /// Sketch resolution for bounded recorders (`--quantile-error`);
+    /// only consulted when `bounded` is set.
+    quantile_error: f64,
 }
 
 impl ServeStats {
@@ -194,9 +232,20 @@ impl ServeStats {
         ServeStats::default()
     }
 
-    /// Stats in bounded-memory mode: O(buckets) latency recorders.
+    /// Stats in bounded-memory mode: O(buckets) latency recorders at
+    /// the default sketch resolution.
     pub fn bounded() -> Self {
-        ServeStats { all: ModelStats::with_mode(true), bounded: true, ..Default::default() }
+        Self::bounded_with(DEFAULT_QUANTILE_ERROR)
+    }
+
+    /// Bounded-memory stats with quantile error ≤ `quantile_error`.
+    pub fn bounded_with(quantile_error: f64) -> Self {
+        ServeStats {
+            all: ModelStats::with_error(true, quantile_error),
+            bounded: true,
+            quantile_error,
+            ..Default::default()
+        }
     }
 
     /// Whether the latency recorders are histogram-backed.
@@ -214,7 +263,8 @@ impl ServeStats {
     /// A per-model entry in this run's memory mode.
     fn model_entry(&mut self, kind: ModelKind) -> &mut ModelStats {
         let bounded = self.bounded;
-        self.per_model.entry(kind).or_insert_with(|| ModelStats::with_mode(bounded))
+        let eps = self.quantile_error;
+        self.per_model.entry(kind).or_insert_with(|| ModelStats::with_error(bounded, eps))
     }
 
     pub fn record_arrival(&mut self, req: &Request) {
@@ -236,6 +286,25 @@ impl ServeStats {
     pub fn record_completion(&mut self, req: &Request, completion_cycle: f64) {
         self.all.record_completion(req, completion_cycle);
         self.model_entry(req.kind).record_completion(req, completion_cycle);
+    }
+
+    /// Counter-only completion (no latency push) — the cluster's
+    /// bounded mode, where latencies arrive later as per-shard sketches
+    /// via [`Self::absorb_latency_sketch`].
+    pub fn record_completion_counters(&mut self, req: &Request, completion_cycle: f64) {
+        self.all.record_completion_counters(req, completion_cycle);
+        self.model_entry(req.kind).record_completion_counters(req, completion_cycle);
+    }
+
+    /// Merge a shard-local latency sketch into the aggregate recorder
+    /// (bounded mode only).
+    pub fn absorb_latency_sketch(&mut self, sk: &QuantileSketch) {
+        self.all.latency.absorb_sketch(sk);
+    }
+
+    /// Merge a shard-local per-model latency sketch (bounded mode only).
+    pub fn absorb_model_latency_sketch(&mut self, kind: ModelKind, sk: &QuantileSketch) {
+        self.model_entry(kind).latency.absorb_sketch(sk);
     }
 
     /// Record a request refused by admission control. The request still
@@ -451,6 +520,29 @@ mod tests {
         rec.push(7.0);
         assert_eq!(rec.max(), 7.0, "first push replaces the NaN max seed");
         assert_eq!(rec.len(), 1);
+    }
+
+    #[test]
+    fn absorbing_a_shard_sketch_matches_direct_pushes() {
+        // The barrier path (record into a shard-local sketch, absorb at
+        // the merge) must be bit-identical to pushing straight into the
+        // recorder — that is what keeps cluster stats thread-count
+        // independent in bounded mode.
+        let mut direct = LatencyRecorder::bounded_with(0.01);
+        let mut absorbing = LatencyRecorder::bounded_with(0.01);
+        let mut sk = QuantileSketch::new(0.01);
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            let v = 1.0 + rng.next_f32() as f64 * 1e4;
+            direct.push(v);
+            sk.record(v);
+        }
+        absorbing.absorb_sketch(&sk);
+        assert_eq!(absorbing.len(), direct.len());
+        assert_eq!(absorbing.max(), direct.max());
+        for p in [1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(absorbing.percentile(p).to_bits(), direct.percentile(p).to_bits(), "p{p}");
+        }
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //! for byte** by construction, which is what the CI determinism gate
 //! checks across 1/2/4 worker threads.
 //!
+//! For *live* export (`--metrics-out tcp://HOST:PORT`) the same line
+//! protocol rides a non-blocking socket through
+//! [`NonBlockingLineSink`]: whole lines only, a bounded backlog that
+//! drops oldest-first under backpressure, and a post-run grace drain —
+//! so a slow or dead dashboard can never stall an epoch barrier or
+//! perturb the simulation.
+//!
 //! The trace export follows the Chrome trace-event format (the JSON
 //! Perfetto and `chrome://tracing` load): `"X"` complete slices for
 //! request spans, `"i"` instants for sheds/preemptions, `"s"`/`"f"`
@@ -31,6 +38,9 @@
 //! victim-side service, `"C"` counters for the per-epoch gauges, and
 //! `"M"` process-name metadata per shard. Timestamps are microseconds
 //! of simulated time.
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
 
 use crate::cluster::{TrafficClass, NUM_CLASSES};
 use crate::cost::memo::MemoStats;
@@ -349,6 +359,172 @@ impl<'a> MetricsStreamWriter<'a> {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+}
+
+/// Non-blocking, bounded, line-buffered adapter for live stream export.
+///
+/// Wraps a sink in non-blocking mode (a `TcpStream` after
+/// `set_nonblocking(true)`) so the epoch barrier can emit
+/// `wienna-metrics-stream-v1` lines without ever waiting on the
+/// consumer: a slow or dead dashboard must not stall the simulation or
+/// perturb its determinism. Bytes accumulate until a full line (`'\n'`)
+/// forms, whole lines park in a bounded backlog, and every write
+/// opportunistically drains until the first `WouldBlock`. When the
+/// backlog would exceed `cap_bytes`, the *oldest* queued lines are
+/// dropped and counted — a live consumer wants fresh epochs, not stale
+/// ones — but never a partially-sent line, so the wire only ever
+/// carries whole lines in order. A fatal I/O error kills the stream and
+/// counts everything after it as dropped. [`NonBlockingLineSink::finish`]
+/// grants a post-run grace period of short sleeps to flush the tail
+/// (wall-clock is fine there: simulated time has already ended).
+pub struct NonBlockingLineSink<W: Write> {
+    inner: W,
+    /// Partial line being accumulated (no `'\n'` seen yet).
+    line: Vec<u8>,
+    /// Line currently going out on the wire, possibly partially sent.
+    inflight: Vec<u8>,
+    sent: usize,
+    backlog: VecDeque<Vec<u8>>,
+    backlog_bytes: usize,
+    cap_bytes: usize,
+    dropped: u64,
+    dead: bool,
+}
+
+impl<W: Write> NonBlockingLineSink<W> {
+    /// Wrap `inner` with a backlog bounded at `cap_bytes`. A single
+    /// line larger than the cap (the stream's `summary` line can be)
+    /// is still kept — the bound applies when more than one line waits.
+    pub fn new(inner: W, cap_bytes: usize) -> Self {
+        NonBlockingLineSink {
+            inner,
+            line: Vec::new(),
+            inflight: Vec::new(),
+            sent: 0,
+            backlog: VecDeque::new(),
+            backlog_bytes: 0,
+            cap_bytes,
+            dropped: 0,
+            dead: false,
+        }
+    }
+
+    /// Lines dropped so far (backpressure overflow or a dead sink).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    fn push_line(&mut self, line: Vec<u8>) {
+        if self.dead {
+            self.dropped += 1;
+            return;
+        }
+        self.backlog_bytes += line.len();
+        self.backlog.push_back(line);
+        while self.backlog_bytes > self.cap_bytes && self.backlog.len() > 1 {
+            let old = self.backlog.pop_front().expect("len > 1");
+            self.backlog_bytes -= old.len();
+            self.dropped += 1;
+        }
+    }
+
+    fn fail(&mut self) {
+        self.dead = true;
+        self.dropped += self.backlog.len() as u64;
+        if !self.inflight.is_empty() {
+            self.dropped += 1;
+        }
+        self.backlog.clear();
+        self.backlog_bytes = 0;
+        self.inflight.clear();
+        self.sent = 0;
+    }
+
+    fn try_drain(&mut self) {
+        if self.dead {
+            return;
+        }
+        loop {
+            if self.inflight.is_empty() {
+                match self.backlog.pop_front() {
+                    Some(l) => {
+                        self.backlog_bytes -= l.len();
+                        self.inflight = l;
+                        self.sent = 0;
+                    }
+                    None => return,
+                }
+            }
+            match self.inner.write(&self.inflight[self.sent..]) {
+                Ok(0) => {
+                    self.fail();
+                    return;
+                }
+                Ok(n) => {
+                    self.sent += n;
+                    if self.sent == self.inflight.len() {
+                        self.inflight.clear();
+                        self.sent = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.fail();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Post-run drain: keep retrying (5 ms sleeps) until the backlog
+    /// empties, the sink dies, or `deadline` elapses — whatever is
+    /// still queued then counts as dropped. Returns the sink and the
+    /// total dropped-line count.
+    pub fn finish(mut self, deadline: std::time::Duration) -> (W, u64) {
+        if !self.line.is_empty() {
+            // A trailing partial line can never be completed now; the
+            // whole-lines-only contract says it must not hit the wire.
+            self.line.clear();
+            self.dropped += 1;
+        }
+        let start = std::time::Instant::now();
+        loop {
+            self.try_drain();
+            if self.dead || (self.inflight.is_empty() && self.backlog.is_empty()) {
+                break;
+            }
+            if start.elapsed() >= deadline {
+                self.dropped += self.backlog.len() as u64;
+                if !self.inflight.is_empty() {
+                    self.dropped += 1;
+                }
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let _ = self.inner.flush();
+        (self.inner, self.dropped)
+    }
+}
+
+impl<W: Write> Write for NonBlockingLineSink<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        for &b in buf {
+            self.line.push(b);
+            if b == b'\n' {
+                let line = std::mem::take(&mut self.line);
+                self.push_line(line);
+            }
+        }
+        self.try_drain();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.try_drain();
+        Ok(())
     }
 }
 
@@ -705,5 +881,93 @@ mod tests {
         assert!(!escaped.contains('\n'), "escaped text is single-line");
         assert_eq!(unescape_json_string(&escaped).as_deref(), Some(gnarly));
         assert_eq!(unescape_json_string("bad \\q escape"), None);
+    }
+
+    /// Scripted fake socket: each `write` consumes one step; an empty
+    /// script accepts everything.
+    enum Step {
+        Accept,
+        Partial(usize),
+        WouldBlock,
+        Broken,
+    }
+
+    struct ScriptedWriter {
+        script: VecDeque<Step>,
+        written: Vec<u8>,
+    }
+
+    impl ScriptedWriter {
+        fn new(script: Vec<Step>) -> Self {
+            ScriptedWriter { script: script.into(), written: Vec::new() }
+        }
+    }
+
+    impl Write for ScriptedWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            match self.script.pop_front().unwrap_or(Step::Accept) {
+                Step::Accept => {
+                    self.written.extend_from_slice(buf);
+                    Ok(buf.len())
+                }
+                Step::Partial(n) => {
+                    let n = n.min(buf.len());
+                    self.written.extend_from_slice(&buf[..n]);
+                    Ok(n)
+                }
+                Step::WouldBlock => Err(io::Error::new(io::ErrorKind::WouldBlock, "full")),
+                Step::Broken => Err(io::Error::new(io::ErrorKind::BrokenPipe, "gone")),
+            }
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn nonblocking_sink_reassembles_lines_across_partial_writes() {
+        let w = ScriptedWriter::new(vec![Step::Partial(2)]);
+        let mut sink = NonBlockingLineSink::new(w, 1 << 20);
+        sink.write_all(b"abc\n").expect("sink never errors");
+        let (w, dropped) = sink.finish(std::time::Duration::from_millis(50));
+        assert_eq!(w.written, b"abc\n");
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn nonblocking_sink_parks_lines_on_wouldblock_and_drains_in_order() {
+        let w = ScriptedWriter::new(vec![Step::WouldBlock]);
+        let mut sink = NonBlockingLineSink::new(w, 1 << 20);
+        sink.write_all(b"one\n").expect("sink never errors");
+        sink.write_all(b"two\n").expect("sink never errors");
+        let (w, dropped) = sink.finish(std::time::Duration::from_millis(50));
+        assert_eq!(w.written, b"one\ntwo\n", "order preserved across the stall");
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn nonblocking_sink_drops_oldest_lines_when_the_backlog_overflows() {
+        // Every write stalls; lines are 3 bytes, the cap fits two.
+        let w = ScriptedWriter::new((0..100).map(|_| Step::WouldBlock).collect());
+        let mut sink = NonBlockingLineSink::new(w, 6);
+        for l in [b"l1\n", b"l2\n", b"l3\n", b"l4\n", b"l5\n"] {
+            sink.write_all(l).expect("sink never errors");
+        }
+        assert_eq!(sink.dropped(), 2, "l2 and l3 evicted oldest-first (l1 is in flight)");
+        let (w, dropped) = sink.finish(std::time::Duration::ZERO);
+        assert!(w.written.is_empty(), "nothing ever reached the wire");
+        assert_eq!(dropped, 5, "the expired deadline counts the stranded tail");
+    }
+
+    #[test]
+    fn nonblocking_sink_survives_a_dead_peer_and_counts_the_loss() {
+        let w = ScriptedWriter::new(vec![Step::Broken]);
+        let mut sink = NonBlockingLineSink::new(w, 1 << 20);
+        sink.write_all(b"a\n").expect("a fatal sink error must not surface");
+        sink.write_all(b"b\n").expect("a fatal sink error must not surface");
+        let (w, dropped) = sink.finish(std::time::Duration::from_millis(50));
+        assert!(w.written.is_empty());
+        assert_eq!(dropped, 2, "every line after the break is accounted for");
     }
 }

@@ -7,11 +7,13 @@
 //! sampled single-threaded at the `cluster::sync` epoch barrier, so the
 //! serialized registry is byte-identical at any thread count.
 //!
-//! The histograms are also the bounded-memory percentile store behind
-//! `--bounded-stats`: [`LogHistogram::quantile`] estimates any
-//! percentile from the bucket counts alone in O(buckets), with a
-//! documented one-bucket error bound, so the per-request latency `Vec`
-//! can be dropped entirely on million-request traces.
+//! These histograms serialize into the metrics artifacts (schema-pinned
+//! names and bucket exponents). The bounded-memory percentile store
+//! behind `--bounded-stats` is the finer-grained, mergeable
+//! [`crate::telemetry::QuantileSketch`] (same no-libm bit-extraction
+//! idea, `--quantile-error`-many linear sub-buckets per octave); at
+//! `sub_bits = 0` its buckets coincide with [`LogHistogram`]'s octaves,
+//! which a sketch unit test pins.
 
 use std::collections::BTreeMap;
 

@@ -18,6 +18,10 @@
 //!   histograms (bucketed by raw IEEE-754 exponent, no libm; quantile
 //!   estimation with a one-bucket error bound) and the per-epoch time
 //!   series sampled at the `cluster::sync` barrier;
+//! * [`sketch`] — the mergeable relative-error quantile sketch behind
+//!   `--bounded-stats --quantile-error EPS`: linear mantissa-prefix
+//!   sub-buckets per octave (no libm), integer-exact merges at the sync
+//!   barrier in shard-major order, collapsible low tail;
 //! * [`slo`] — the deterministic multi-window SLO burn-rate monitor,
 //!   evaluated single-threaded at the epoch barrier; raise/clear events
 //!   carry exact cycles and surface in the stats and metrics exports;
@@ -35,22 +39,24 @@
 pub mod export;
 pub mod metrics;
 pub mod profile;
+pub mod sketch;
 pub mod slo;
 pub mod span;
 
 pub use export::{
     chrome_trace, metrics_json, metrics_json_summary, stream_to_metrics_v1, MetricsStreamWriter,
-    METRICS_STREAM_SCHEMA,
+    NonBlockingLineSink, METRICS_STREAM_SCHEMA,
 };
 pub use metrics::{EpochSample, LogHistogram, MetricsRegistry};
 pub use profile::{PhaseBreakdown, PhaseTotals, PHASES};
+pub use sketch::{QuantileSketch, DEFAULT_QUANTILE_ERROR};
 pub use slo::{SloEvent, SloEventKind, SloMonitor, SloPolicy, SloWindow};
 pub use span::{FlowRecord, PreemptSpan, Recorder, ShedSpan, SpanLog, SpanRecord};
 
 use crate::serve::{BatcherConfig, CostCache, ModelKind, PackageSpec};
 
 /// Telemetry knobs carried by `ClusterConfig` (and the serve CLI).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct TelemetryConfig {
     /// Arm the metrics registry and the epoch-series sampler (and, via
     /// `spans`, the span recorder). The always-on attribution sums are
@@ -61,12 +67,29 @@ pub struct TelemetryConfig {
     /// off and feeds the histograms from the event stream instead.
     pub spans: bool,
     /// Bounded-memory stats (`--bounded-stats`): percentiles come off
-    /// the log-bucketed histograms and the per-request latency `Vec` is
+    /// mergeable quantile sketches and the per-request latency `Vec` is
     /// never grown — O(buckets + epochs) telemetry for million-request
-    /// traces, within one power-of-two bucket of the exact path.
+    /// traces, within `quantile_error` of the exact path.
     pub bounded: bool,
+    /// Relative error ε of the bounded-mode quantile sketches
+    /// (`--quantile-error`); only consulted when `bounded` is set.
+    pub quantile_error: f64,
     /// Burn-rate policy for the epoch-barrier SLO monitor.
     pub slo: SloPolicy,
+}
+
+// Manual impl (not derived) so `..Default::default()` construction sites
+// get a *usable* sketch resolution instead of ε = 0.0.
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            spans: false,
+            bounded: false,
+            quantile_error: DEFAULT_QUANTILE_ERROR,
+            slo: SloPolicy::default(),
+        }
+    }
 }
 
 impl TelemetryConfig {
@@ -76,10 +99,15 @@ impl TelemetryConfig {
         TelemetryConfig { enabled: true, spans: true, ..Default::default() }
     }
 
-    /// Bounded-memory telemetry: registry only, histogram percentiles,
-    /// no span log and no per-request `Vec`s.
+    /// Bounded-memory telemetry: registry only, sketch percentiles at
+    /// the default ε, no span log and no per-request `Vec`s.
     pub fn bounded() -> Self {
         TelemetryConfig { enabled: true, bounded: true, ..Default::default() }
+    }
+
+    /// Bounded-memory telemetry at an explicit sketch resolution.
+    pub fn bounded_with(quantile_error: f64) -> Self {
+        TelemetryConfig { quantile_error, ..Self::bounded() }
     }
 }
 
@@ -188,6 +216,10 @@ mod tests {
         assert!(full.enabled && full.spans && !full.bounded);
         let bounded = TelemetryConfig::bounded();
         assert!(bounded.enabled && !bounded.spans && bounded.bounded);
+        assert_eq!(bounded.quantile_error, DEFAULT_QUANTILE_ERROR);
+        let fine = TelemetryConfig::bounded_with(0.001);
+        assert!(fine.bounded && fine.quantile_error == 0.001);
+        assert_eq!(TelemetryConfig::default().quantile_error, DEFAULT_QUANTILE_ERROR);
     }
 
     #[test]

@@ -1,0 +1,443 @@
+//! Mergeable relative-error quantile sketch — the tunable-accuracy
+//! successor to the fixed one-power-of-two [`LogHistogram`] bound behind
+//! `--bounded-stats`.
+//!
+//! DDSketch-style design, adapted to this crate's no-`libm` rule: instead
+//! of log-γ bucket keys (which need `ln`), each power-of-two octave is
+//! split into `m = 2^sub_bits` *linear* sub-buckets by taking the top
+//! `sub_bits` mantissa bits straight off the IEEE-754 representation:
+//!
+//! ```text
+//! key(v) = to_bits(v) >> (52 - sub_bits)        // positive finite v
+//! ```
+//!
+//! Positive doubles order exactly like their bit patterns, so the key is
+//! monotone and integer-exact — merging two sketches is bucket-wise `u64`
+//! addition, which is associative and commutative, making merge-then-
+//! quantile *identical* (not just close) to concat-then-quantile. The
+//! relative width of one sub-bucket is at most `1/m`, so every quantile
+//! estimate is within relative error `ε = 2^-sub_bits` of the true
+//! (nearest-rank) sample for normal floats. (Subnormals — latencies below
+//! ~1e-308 cycles — degrade toward one shared bucket; irrelevant at this
+//! crate's scales, noted for honesty.)
+//!
+//! `--quantile-error EPS` selects the smallest `sub_bits` whose `1/2^k`
+//! is ≤ EPS; `EPS ≥ 1.0` degenerates to `sub_bits = 0`, which is exactly
+//! the octave bucketing of [`LogHistogram`] (pinned by a unit test).
+//!
+//! Memory stays bounded by collapsing the *lowest* non-sentinel bucket
+//! into its neighbor once the bucket map exceeds `max_buckets` (DDSketch
+//! collapses the low tail for the same reason: high quantiles are the
+//! ones that matter). The collapsed count is tracked and surfaced.
+//!
+//! [`LogHistogram`]: crate::telemetry::metrics::LogHistogram
+
+use std::collections::BTreeMap;
+
+/// Default relative error when `--quantile-error` is not given: 1% maps
+/// to `sub_bits = 7` (128 sub-buckets per octave, true error ≤ 1/128).
+pub const DEFAULT_QUANTILE_ERROR: f64 = 0.01;
+
+/// Key for values ≤ 0 or NaN (reported as 0.0, like `LogHistogram`'s
+/// `i32::MIN` sentinel bucket).
+const SENTINEL_LOW: i64 = i64::MIN;
+/// Key for +∞ (reported as +∞ — it must not be folded into a finite
+/// bucket, or p100 would silently deflate).
+const SENTINEL_HIGH: i64 = i64::MAX;
+
+/// Hard ceiling on `sub_bits`: 2^16 sub-buckets per octave (ε ≈ 1.5e-5)
+/// is already far below any simulated-latency noise floor.
+const MAX_SUB_BITS: u32 = 16;
+
+/// Default bucket-count bound. At `sub_bits = 7` a full double-precision
+/// dynamic range is ~2048 octaves × 128 = impossible to fill in practice;
+/// real latency distributions span a handful of octaves, so 4096 buckets
+/// means collapse effectively never fires outside adversarial tests.
+const DEFAULT_MAX_BUCKETS: usize = 4096;
+
+/// Smallest `sub_bits` whose relative error `1/2^k` is ≤ `eps`; non-
+/// positive / NaN `eps` falls back to [`DEFAULT_QUANTILE_ERROR`].
+fn sub_bits_for(eps: f64) -> u32 {
+    let eps = if eps > 0.0 { eps } else { DEFAULT_QUANTILE_ERROR };
+    for k in 0..=MAX_SUB_BITS {
+        if 1.0 / (1u64 << k) as f64 <= eps {
+            return k;
+        }
+    }
+    MAX_SUB_BITS
+}
+
+/// A mergeable quantile sketch with bounded memory and a tunable
+/// relative-error guarantee (see the module docs for the construction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    sub_bits: u32,
+    /// Sparse bucket counts keyed by the monotone mantissa-prefix key.
+    buckets: BTreeMap<i64, u64>,
+    count: u64,
+    sum: f64,
+    /// Running maximum (`NEG_INFINITY` when empty — the identity under
+    /// `f64::max`, so merges need no empty-case branch).
+    max: f64,
+    /// Samples folded out of collapsed low-tail buckets (their count is
+    /// retained, their position degraded upward by one bucket at a time).
+    collapsed: u64,
+    max_buckets: usize,
+}
+
+impl QuantileSketch {
+    /// A sketch with relative error ≤ `eps` and the default memory bound.
+    pub fn new(eps: f64) -> Self {
+        Self::with_bound(eps, DEFAULT_MAX_BUCKETS)
+    }
+
+    /// A sketch with an explicit bucket-count bound (tests use tiny
+    /// bounds to exercise the collapse path).
+    pub fn with_bound(eps: f64, max_buckets: usize) -> Self {
+        assert!(max_buckets >= 2, "a sketch needs at least two buckets");
+        QuantileSketch {
+            sub_bits: sub_bits_for(eps),
+            buckets: BTreeMap::new(),
+            count: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+            collapsed: 0,
+            max_buckets,
+        }
+    }
+
+    fn key(&self, v: f64) -> i64 {
+        if !(v > 0.0) {
+            SENTINEL_LOW
+        } else if v.is_infinite() {
+            SENTINEL_HIGH
+        } else {
+            (v.to_bits() >> (52 - self.sub_bits)) as i64
+        }
+    }
+
+    /// Lower edge of bucket `k` (inverse of [`Self::key`]).
+    fn bucket_lo(&self, k: i64) -> f64 {
+        f64::from_bits((k as u64) << (52 - self.sub_bits))
+    }
+
+    /// Upper edge of bucket `k`, clamped to finite.
+    fn bucket_hi(&self, k: i64) -> f64 {
+        let hi = f64::from_bits(((k as u64) + 1) << (52 - self.sub_bits));
+        if hi.is_finite() {
+            hi
+        } else {
+            f64::MAX
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        let k = self.key(v);
+        *self.buckets.entry(k).or_insert(0) += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        if self.buckets.len() > self.max_buckets {
+            self.enforce_bound();
+        }
+    }
+
+    /// Merge `other` into `self` (bucket-wise integer addition — exact,
+    /// associative, and commutative, so merge order cannot change any
+    /// quantile). Both sketches must share a resolution.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert_eq!(
+            self.sub_bits, other.sub_bits,
+            "merging sketches with different --quantile-error resolutions"
+        );
+        for (&k, &c) in &other.buckets {
+            *self.buckets.entry(k).or_insert(0) += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.collapsed += other.collapsed;
+        self.max = self.max.max(other.max);
+        if self.buckets.len() > self.max_buckets {
+            self.enforce_bound();
+        }
+    }
+
+    /// Collapse lowest non-sentinel buckets upward until the bound holds.
+    fn enforce_bound(&mut self) {
+        while self.buckets.len() > self.max_buckets {
+            let mut low = self.buckets.keys().copied().filter(|&k| k != SENTINEL_LOW && k != SENTINEL_HIGH);
+            let (Some(lowest), Some(next)) = (low.next(), low.next()) else {
+                return; // nothing left to fold
+            };
+            let c = self.buckets.remove(&lowest).expect("lowest bucket exists");
+            *self.buckets.entry(next).or_insert(0) += c;
+            self.collapsed += c;
+        }
+    }
+
+    /// Nearest-rank quantile estimate for percentile `p` in `[0, 100]`
+    /// (`NaN` when empty) — the exact same rank rule as the exact path
+    /// and `LogHistogram`, with linear interpolation inside the bucket.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p} out of [0, 100]");
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut before = 0u64;
+        for (&k, &c) in &self.buckets {
+            if before + c >= rank {
+                if k == SENTINEL_LOW {
+                    return 0.0;
+                }
+                if k == SENTINEL_HIGH {
+                    return f64::INFINITY;
+                }
+                let lo = self.bucket_lo(k);
+                let hi = self.bucket_hi(k);
+                let frac = (rank - before) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            before += c;
+        }
+        f64::NAN
+    }
+
+    /// The guaranteed relative error bound `1/2^sub_bits`.
+    pub fn relative_error(&self) -> f64 {
+        1.0 / (1u64 << self.sub_bits) as f64
+    }
+
+    pub fn sub_bits(&self) -> u32 {
+        self.sub_bits
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact running maximum (`NaN` when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact mean (`NaN` when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Samples whose bucket was collapsed into a neighbor.
+    pub fn collapsed(&self) -> u64 {
+        self.collapsed
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::metrics::LogHistogram;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn eps_selects_the_smallest_sufficient_resolution() {
+        assert_eq!(sub_bits_for(1.0), 0);
+        assert_eq!(sub_bits_for(2.0), 0);
+        assert_eq!(sub_bits_for(0.5), 1);
+        assert_eq!(sub_bits_for(0.25), 2);
+        assert_eq!(sub_bits_for(0.01), 7);
+        assert_eq!(sub_bits_for(0.001), 10);
+        // Defensive fallbacks and the hard clamp.
+        assert_eq!(sub_bits_for(0.0), 7);
+        assert_eq!(sub_bits_for(-1.0), 7);
+        assert_eq!(sub_bits_for(f64::NAN), 7);
+        assert_eq!(sub_bits_for(1.0 / (1u64 << 20) as f64), MAX_SUB_BITS);
+    }
+
+    fn seeded_values(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let u = rng.next_f32() as f64;
+                // Heavy-tailed mix spanning several octaves.
+                0.001 + u * u * 5000.0
+            })
+            .collect()
+    }
+
+    fn exact_quantile(sorted: &[f64], p: f64) -> f64 {
+        let n = sorted.len() as u64;
+        let rank = (((p / 100.0) * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn quantiles_stay_within_the_relative_error_bound() {
+        for &eps in &[0.25, 0.05, 0.01, 0.001] {
+            for seed in 0..4u64 {
+                let values = seeded_values(seed * 31 + 1, 3000);
+                let mut sk = QuantileSketch::new(eps);
+                for &v in &values {
+                    sk.record(v);
+                }
+                let mut sorted = values.clone();
+                sorted.sort_by(|a, b| a.total_cmp(b));
+                for &p in &[1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+                    let exact = exact_quantile(&sorted, p);
+                    let est = sk.quantile(p);
+                    let bound = sk.relative_error();
+                    assert!(bound <= eps, "resolution looser than requested");
+                    let rel = (est - exact).abs() / exact;
+                    assert!(
+                        rel <= bound + 1e-12,
+                        "eps={eps} seed={seed} p={p}: est {est} vs exact {exact} (rel {rel} > {bound})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_then_quantile_equals_concat_then_quantile() {
+        let a_vals = seeded_values(5, 700);
+        let b_vals = seeded_values(9, 1300);
+        let mut merged = QuantileSketch::new(0.01);
+        let mut b = QuantileSketch::new(0.01);
+        let mut concat = QuantileSketch::new(0.01);
+        for &v in &a_vals {
+            merged.record(v);
+            concat.record(v);
+        }
+        for &v in &b_vals {
+            b.record(v);
+            concat.record(v);
+        }
+        merged.merge(&b);
+        assert_eq!(merged.count(), concat.count());
+        for &p in &[1.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(
+                merged.quantile(p).to_bits(),
+                concat.quantile(p).to_bits(),
+                "merge-then-quantile must be bit-identical to concat-then-quantile at p{p}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let parts: Vec<QuantileSketch> = (0..3)
+            .map(|i| {
+                let mut sk = QuantileSketch::new(0.01);
+                for v in seeded_values(i * 7 + 2, 400) {
+                    sk.record(v);
+                }
+                sk
+            })
+            .collect();
+        // Commutative, whole-struct: bucket adds are integer-exact and
+        // `a.sum + b.sum == b.sum + a.sum` bit-for-bit.
+        let mut ab = parts[0].clone();
+        ab.merge(&parts[1]);
+        let mut ba = parts[1].clone();
+        ba.merge(&parts[0]);
+        assert_eq!(ab, ba, "merge must be commutative");
+        // Associative on every quantile (integer bucket counts — float
+        // `sum` association differences never reach the quantiles).
+        let mut left = parts[0].clone();
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        let mut bc = parts[1].clone();
+        bc.merge(&parts[2]);
+        let mut right = parts[0].clone();
+        right.merge(&bc);
+        assert_eq!(left.count(), right.count());
+        for &p in &[1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(left.quantile(p).to_bits(), right.quantile(p).to_bits());
+        }
+    }
+
+    #[test]
+    fn collapse_keeps_the_count_and_the_high_quantiles() {
+        let mut sk = QuantileSketch::with_bound(0.01, 4);
+        let values = seeded_values(13, 500);
+        for &v in &values {
+            sk.record(v);
+        }
+        assert!(sk.bucket_count() <= 4, "bound not enforced");
+        assert_eq!(sk.count(), 500, "collapse must not lose samples");
+        assert!(sk.collapsed() > 0, "a 4-bucket bound over octaves must collapse");
+        // High quantiles live in the retained top buckets: still within ε.
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let exact = exact_quantile(&sorted, 99.0);
+        let est = sk.quantile(99.0);
+        assert!((est - exact).abs() / exact <= sk.relative_error() + 1e-12);
+    }
+
+    #[test]
+    fn sentinels_handle_nonpositive_and_infinite_samples() {
+        let mut sk = QuantileSketch::new(0.01);
+        sk.record(0.0);
+        sk.record(-3.0);
+        sk.record(f64::NAN);
+        sk.record(5.0);
+        sk.record(f64::INFINITY);
+        assert_eq!(sk.count(), 5);
+        assert_eq!(sk.quantile(10.0), 0.0, "non-positive samples report 0.0");
+        assert_eq!(sk.quantile(100.0), f64::INFINITY);
+        let mid = sk.quantile(70.0);
+        assert!((mid - 5.0).abs() / 5.0 <= sk.relative_error() + 1e-12);
+    }
+
+    #[test]
+    fn empty_sketch_reports_nan() {
+        let sk = QuantileSketch::new(0.01);
+        assert!(sk.is_empty());
+        assert!(sk.quantile(50.0).is_nan());
+        assert!(sk.mean().is_nan());
+        assert!(sk.max().is_nan());
+    }
+
+    #[test]
+    fn sub_bits_zero_matches_the_log_histogram_octaves() {
+        // eps ≥ 1.0 degenerates to one bucket per power of two — exactly
+        // the LogHistogram scheme PR 8 shipped. Quantiles must agree to
+        // float-association noise.
+        let values = seeded_values(21, 2000);
+        let mut sk = QuantileSketch::new(1.0);
+        let mut hist = LogHistogram::default();
+        for &v in &values {
+            sk.record(v);
+            hist.record(v);
+        }
+        assert_eq!(sk.sub_bits(), 0);
+        for &p in &[1.0, 50.0, 90.0, 99.0, 100.0] {
+            let a = sk.quantile(p);
+            let b = hist.quantile(p);
+            assert!(
+                (a - b).abs() <= 1e-9 * b.abs(),
+                "p{p}: sketch {a} vs LogHistogram {b}"
+            );
+        }
+    }
+}

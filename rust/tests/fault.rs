@@ -202,6 +202,43 @@ fn failover_rescues_a_dead_shards_backlog() {
     assert!(rescued.dead_shard_drain_ms() >= 0.0);
 }
 
+/// Sub-epoch drain resolution (PR 9 satellite): the drain gauge ends at
+/// the exact finalization cycle of the last request failover-rerouted
+/// off the dead shard, not at the epoch barrier that happened to follow
+/// it. Death is stamped at a barrier — an exact multiple of the epoch
+/// length — so an epoch-edge drain bound would make the measured drain
+/// an exact multiple too; the refined gauge lands strictly inside a
+/// window. The gauge is also thread-count-invariant.
+#[test]
+fn dead_shard_drain_is_measured_at_sub_epoch_resolution() {
+    let epoch_cycles = ms_to_cycles(0.25); // what chaos_config configures
+    let run = |threads: usize| {
+        let cfg = chaos_config("kill:1@1;kill:5@1", 0.0, true, threads);
+        let cluster = Cluster::new(PackageSpec::homogeneous(8, DesignPoint::WIENNA_C), cfg);
+        let mut source = Source::closed_loop(mix(40.0), 24, 0.3, 8, 404);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let stats = run(2);
+    assert!(stats.reroutes() > 0, "failover must re-home the dead shard's queue");
+    let drain = stats.dead_shard_drain_cycles;
+    assert!(drain > 0.0, "the dead shard took time to drain");
+    let frac = (drain / epoch_cycles).fract();
+    assert!(
+        frac > 1e-6 && frac < 1.0 - 1e-6,
+        "drain {drain} cycles is epoch-edge-rounded (epoch {epoch_cycles}, fraction {frac})"
+    );
+    assert_eq!(
+        drain.to_bits(),
+        run(1).dead_shard_drain_cycles.to_bits(),
+        "drain gauge depends on the worker-thread count"
+    );
+    assert_eq!(
+        drain.to_bits(),
+        run(4).dead_shard_drain_cycles.to_bits(),
+        "drain gauge depends on the worker-thread count"
+    );
+}
+
 /// No-bounce property (stealing satellite): with hysteresis, a stolen
 /// request is never stolen again — in a fault-free steal-heavy run every
 /// recorded hand-off flow carries a distinct request id, and there is

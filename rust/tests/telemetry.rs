@@ -401,7 +401,7 @@ fn telemetry_schema_matches_the_golden_fixture() {
 // Bounded-memory stats and the streaming metrics artifact (PR 8).
 // ---------------------------------------------------------------------------
 
-use wienna::telemetry::{stream_to_metrics_v1, MetricsStreamWriter};
+use wienna::telemetry::{stream_to_metrics_v1, MetricsStreamWriter, NonBlockingLineSink};
 
 /// A saturated two-shard cluster with tight SLOs — hot enough that the
 /// burn-rate monitor has something to page about — parameterized over
@@ -533,6 +533,108 @@ fn slo_monitor_pages_deterministically_under_overload() {
     }
     assert_eq!(timelines[0], timelines[1], "alert timeline differs between 1 and 2 threads");
     assert_eq!(timelines[0], timelines[2], "alert timeline differs between 1 and 4 threads");
+}
+
+/// Tentpole (PR 9): the sketch resolution knob (`--quantile-error EPS`)
+/// holds end to end — cluster-run quantiles from sketch-backed bounded
+/// runs land within EPS (relative) of the exact-oracle run at every
+/// swept resolution, with the per-shard sketches merged across epoch
+/// barriers along the way.
+#[test]
+fn sketch_resolution_knob_bounds_the_quantile_error_end_to_end() {
+    let (cluster, mut source) = hot_cluster(TelemetryConfig::enabled(), 2, 13);
+    let exact = cluster.run(&mut source, ms_to_cycles(8.0));
+    assert!(exact.serve.completed() > 50, "the regime must serve real traffic");
+    for eps in [0.05f64, 0.01, 0.005] {
+        let (cluster, mut source) = hot_cluster(TelemetryConfig::bounded_with(eps), 2, 13);
+        let bounded = cluster.run(&mut source, ms_to_cycles(8.0));
+        assert!(bounded.is_bounded(), "eps {eps}: run must be sketch-backed");
+        assert_eq!(
+            bounded.serve.exact_samples(),
+            0,
+            "eps {eps}: bounded mode grew a latency Vec"
+        );
+        assert_eq!(
+            exact.serve.completed(),
+            bounded.serve.completed(),
+            "eps {eps}: the simulation itself diverged"
+        );
+        for p in [50.0, 90.0, 95.0, 99.0, 100.0] {
+            let e = exact.serve.latency_ms(p);
+            let b = bounded.serve.latency_ms(p);
+            let rel = (b - e).abs() / e;
+            assert!(
+                rel <= eps + 1e-9,
+                "eps {eps} p{p}: sketch estimate {b} vs exact {e} escapes the \
+                 configured bound (relative error {rel})"
+            );
+        }
+    }
+}
+
+/// Sketch-backed bounded stats are byte-identical across worker-thread
+/// counts at a non-default resolution: the per-shard sketches merge as
+/// integer bucket counts in shard-id order at each barrier, so neither
+/// the stats JSON nor the metrics artifact can see the thread count.
+#[test]
+fn bounded_sketch_artifacts_are_byte_identical_across_threads() {
+    let mut artifacts = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let (cluster, mut source) = hot_cluster(TelemetryConfig::bounded_with(0.02), threads, 7);
+        let stats = cluster.run(&mut source, ms_to_cycles(8.0));
+        assert!(stats.is_bounded());
+        artifacts.push((stats.to_json(), stats.metrics_json(None)));
+    }
+    assert_eq!(artifacts[0], artifacts[1], "bounded artifacts differ between 1 and 2 threads");
+    assert_eq!(artifacts[0], artifacts[2], "bounded artifacts differ between 1 and 4 threads");
+}
+
+/// Tentpole (PR 9, live export): streaming a run through a non-blocking
+/// sink over a real loopback TCP socket delivers exactly the bytes a
+/// `Vec` sink records for the same seeded run — nothing reordered,
+/// nothing dropped, nothing perturbed by the socket's backpressure.
+#[test]
+fn tcp_streamed_metrics_match_the_in_memory_stream_byte_for_byte() {
+    use std::io::Read as _;
+
+    let (cluster, mut source) = hot_cluster(TelemetryConfig::enabled(), 2, 7);
+    let mut reference: Vec<u8> = Vec::new();
+    {
+        let mut w = MetricsStreamWriter::new(&mut reference);
+        let stats = cluster.run_streaming(&mut source, ms_to_cycles(8.0), &mut w);
+        w.write_summary(&stats.metrics_json_summary(None));
+        w.finish().expect("Vec sink never errors");
+    }
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
+    let addr = listener.local_addr().expect("bound socket has an address");
+    let reader = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().expect("simulator connects");
+        let mut buf = Vec::new();
+        conn.read_to_end(&mut buf).expect("drain the stream to EOF");
+        buf
+    });
+
+    let conn = std::net::TcpStream::connect(addr).expect("connect to the loopback listener");
+    let _ = conn.set_nodelay(true);
+    conn.set_nonblocking(true).expect("non-blocking export socket");
+    let mut sink = NonBlockingLineSink::new(conn, 4 << 20);
+    let (cluster, mut source) = hot_cluster(TelemetryConfig::enabled(), 2, 7);
+    {
+        let mut w = MetricsStreamWriter::new(&mut sink);
+        let stats = cluster.run_streaming(&mut source, ms_to_cycles(8.0), &mut w);
+        w.write_summary(&stats.metrics_json_summary(None));
+        w.finish().expect("non-blocking sink absorbs socket errors");
+    }
+    let (conn, dropped) = sink.finish(std::time::Duration::from_secs(30));
+    drop(conn); // close the write half so the reader sees EOF
+
+    let received = reader.join().expect("reader thread");
+    assert_eq!(dropped, 0, "a loopback reader keeps up — nothing may drop");
+    assert_eq!(
+        received, reference,
+        "bytes received over TCP differ from the in-memory stream"
+    );
 }
 
 /// Satellite 1: the per-package gauges ride every epoch sample — one
