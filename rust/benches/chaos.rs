@@ -71,7 +71,7 @@ fn run_dead_shard(steal: bool) -> wienna::cluster::ClusterStats {
             shards: SHARDS,
             threads: 4,
             admission: AdmissionConfig::admit_all(),
-            sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.25) },
+            sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.25), ..Default::default() },
             faults: FaultPlan::parse("kill:1@2;kill:5@2").expect("bench fault spec"),
             ..Default::default()
         },

@@ -161,7 +161,7 @@ fn main() {
                 admission: AdmissionConfig::admit_all(),
                 preemption: false,
                 batcher: BatcherConfig { max_batch: 4, candidates: vec![1, 2, 4] },
-                sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.1) },
+                sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.1), ..Default::default() },
                 ..Default::default()
             },
         );

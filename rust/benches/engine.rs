@@ -1,0 +1,195 @@
+//! Engine bench: calendar-queue scheduler vs the legacy scan loop.
+//!
+//! Part 1 — **scheduler head-to-head**: one fat shard (256 packages —
+//! the regime where the legacy loop's two O(packages)-per-event scans
+//! dominate) serves the canonical CNN/transformer mix open-loop at 0.9x
+//! capacity, timed under `--scheduler legacy` and the default calendar
+//! queue. Both runs are asserted byte-identical (outside the timed
+//! loop — the fuzz harness and CI gate re-prove this on every change);
+//! the headline metrics are `engine/requests_per_sec`,
+//! `engine/events_per_sec` and `engine/speedup_vs_legacy_x` (the PR
+//! acceptance target is >= 3x).
+//!
+//! Part 2 — **thread scaling**: the calendar engine across 8 shards at
+//! 1/2/4 worker threads, reporting `engine/thread_scaling_x` (4-thread
+//! speedup over 1). Shards are pure functions of their input slices, so
+//! the stats stay bit-identical (asserted) — threads only buy wall-clock.
+//!
+//! Everything runs under a `cost::memo::run_scope` after a warm-up pass
+//! so the timed runs see a hot layer memo, and every timing/metric lands
+//! in `BENCH_engine.json` for the CI perf job.
+
+use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, SchedulerKind};
+use wienna::config::DesignPoint;
+use wienna::cost::memo;
+use wienna::serve::{
+    ms_to_cycles, Fleet, PackageSpec, RoutePolicy, Source, WorkloadMix,
+};
+use wienna::testutil::{bench, record_metric};
+
+/// One fat shard: the legacy loop scans all packages twice per event,
+/// so per-event cost grows with the package count while the calendar
+/// queue's stays near-constant. 256 packages puts the difference well
+/// past measurement noise.
+const HEAD_PACKAGES: usize = 256;
+const HEAD_REQUESTS: f64 = 30_000.0;
+
+/// Part 2 topology (per-shard package count matters less here — this
+/// part measures the barrier/parallelism overhead, not the scans).
+const SCALE_PACKAGES: usize = 64;
+const SCALE_SHARDS: usize = 8;
+const SCALE_REQUESTS: f64 = 30_000.0;
+
+fn mix() -> WorkloadMix {
+    WorkloadMix::cnn_transformer_default()
+}
+
+fn run_once(
+    packages: usize,
+    shards: usize,
+    threads: usize,
+    scheduler: SchedulerKind,
+    rate: f64,
+    horizon_ms: f64,
+) -> wienna::cluster::ClusterStats {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(packages, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards,
+            threads,
+            scheduler,
+            admission: AdmissionConfig::admit_all(),
+            ..Default::default()
+        },
+    );
+    let mut source = Source::poisson(mix(), rate, 42);
+    cluster.run(&mut source, ms_to_cycles(horizon_ms))
+}
+
+/// Simulated events a run processed: every arrival plus every
+/// finalization (completion, shed or failure) is one trip around the
+/// engine's event loop.
+fn events_of(stats: &wienna::cluster::ClusterStats) -> u64 {
+    stats.serve.arrived() + stats.serve.completed() + stats.serve.shed() + stats.serve.failed()
+}
+
+fn main() {
+    println!("##### Engine: calendar queue vs legacy scan loop\n");
+
+    // --- Part 1: scheduler head-to-head ---------------------------------
+    let capacity = Fleet::new(
+        PackageSpec::homogeneous(HEAD_PACKAGES, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    )
+    .estimate_capacity_rps(&mix(), 8);
+    let rate = 0.9 * capacity;
+    let horizon_ms = HEAD_REQUESTS / rate * 1e3;
+    println!(
+        "1 shard x {HEAD_PACKAGES} packages: capacity {capacity:.0} req/s -> offered {rate:.0} req/s (0.9x) for {horizon_ms:.2} ms (~{HEAD_REQUESTS:.0} requests)\n"
+    );
+
+    // Warm the layer memo, and pin the equivalence outside the timed
+    // loop: the oracle must reproduce the calendar run byte for byte.
+    let reference = run_once(HEAD_PACKAGES, 1, 1, SchedulerKind::Calendar, rate, horizon_ms);
+    let legacy = run_once(HEAD_PACKAGES, 1, 1, SchedulerKind::Legacy, rate, horizon_ms);
+    assert_eq!(
+        reference.to_json(),
+        legacy.to_json(),
+        "calendar and legacy schedulers must produce byte-identical stats"
+    );
+    let events = events_of(&reference);
+    let completed = reference.serve.completed();
+    let _scope = memo::run_scope();
+
+    let cal = bench(&format!("engine/calendar_1shard_{HEAD_PACKAGES}pkg"), 5, || {
+        run_once(HEAD_PACKAGES, 1, 1, SchedulerKind::Calendar, rate, horizon_ms)
+            .serve
+            .completed()
+    });
+    let leg = bench(&format!("engine/legacy_1shard_{HEAD_PACKAGES}pkg"), 5, || {
+        run_once(HEAD_PACKAGES, 1, 1, SchedulerKind::Legacy, rate, horizon_ms)
+            .serve
+            .completed()
+    });
+
+    let cal_s = cal.mean_ns / 1e9;
+    let leg_s = leg.mean_ns / 1e9;
+    let rps = completed as f64 / cal_s;
+    let legacy_rps = completed as f64 / leg_s;
+    let eps = events as f64 / cal_s;
+    let speedup = leg.mean_ns / cal.mean_ns;
+    record_metric("engine/requests_per_sec", rps);
+    record_metric("engine/legacy_requests_per_sec", legacy_rps);
+    record_metric("engine/events_per_sec", eps);
+    record_metric("engine/speedup_vs_legacy_x", speedup);
+    println!(
+        "\ncalendar {:.2} ms/run ({rps:.0} req/s, {eps:.0} events/s) | legacy {:.2} ms/run ({legacy_rps:.0} req/s) | speedup {speedup:.2}x (target >= 3x)\n",
+        cal.mean_ms(),
+        leg.mean_ms()
+    );
+
+    // --- Part 2: thread scaling (calendar engine) -----------------------
+    let capacity = Fleet::new(
+        PackageSpec::homogeneous(SCALE_PACKAGES, DesignPoint::WIENNA_C),
+        RoutePolicy::EarliestDeadline,
+    )
+    .estimate_capacity_rps(&mix(), 8);
+    let rate = 0.9 * capacity;
+    let horizon_ms = SCALE_REQUESTS / rate * 1e3;
+    println!(
+        "{SCALE_SHARDS} shards x {} packages each: offered {rate:.0} req/s for {horizon_ms:.2} ms (~{SCALE_REQUESTS:.0} requests)\n",
+        SCALE_PACKAGES / SCALE_SHARDS
+    );
+
+    // Determinism cross-check outside the timed loop, as in
+    // `benches/cluster_scale.rs`.
+    let t1_json =
+        run_once(SCALE_PACKAGES, SCALE_SHARDS, 1, SchedulerKind::Calendar, rate, horizon_ms)
+            .to_json();
+    for threads in [2usize, 4] {
+        let s =
+            run_once(SCALE_PACKAGES, SCALE_SHARDS, threads, SchedulerKind::Calendar, rate, horizon_ms);
+        assert_eq!(s.to_json(), t1_json, "thread count changed the stats");
+    }
+    let mut means = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let st = bench(&format!("engine/calendar_{SCALE_SHARDS}shard_t{threads}"), 5, || {
+            run_once(SCALE_PACKAGES, SCALE_SHARDS, threads, SchedulerKind::Calendar, rate, horizon_ms)
+                .serve
+                .completed()
+        });
+        means.push((threads, st.mean_ns));
+    }
+    let scaling = means[0].1 / means[2].1;
+    record_metric("engine/thread_scaling_x", scaling);
+    println!();
+    for &(threads, mean) in &means {
+        println!(
+            "threads {threads}: {:>8.2} ms/run | speedup {:.2}x vs 1 thread",
+            mean / 1e6,
+            means[0].1 / mean
+        );
+    }
+    println!("\ncalendar-engine thread scaling at 4 threads: {scaling:.2}x vs single-threaded");
+
+    assert!(
+        speedup >= 1.0,
+        "the calendar queue must never lose to the legacy scan loop, got {speedup:.2}x"
+    );
+
+    let ms = memo::stats();
+    println!(
+        "\nlayer memo: {} entries (cap {}), {:.1}% hit rate ({} hits / {} misses, {} evictions)",
+        ms.entries,
+        ms.capacity,
+        ms.hit_rate() * 100.0,
+        ms.hits,
+        ms.misses,
+        ms.evictions
+    );
+
+    match wienna::testutil::write_bench_json("BENCH_engine.json") {
+        Ok(p) => println!("bench json -> {}", p.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+}

@@ -1,0 +1,176 @@
+//! Bucketed completion calendar — the calendar-queue scheduler's index of
+//! in-flight batch completions, keyed by cycle.
+//!
+//! The legacy event loop finds the next completion with an O(packages)
+//! scan over `Package::busy_until` on every event. This structure keeps
+//! the same information sorted: one entry per in-flight batch, bucketed
+//! by the high bits of the completion cycle's IEEE-754 representation.
+//! Positive finite doubles order exactly like their bit patterns, so
+//! `bits >> BUCKET_SHIFT` partitions the cycle axis monotonically — the
+//! first non-empty bucket always contains the globally earliest entry,
+//! and the bucket width adapts to the magnitude of the clock (each
+//! bucket spans a ~2⁻²⁰ relative range) with no tuning parameter.
+//!
+//! Entries are invalidated *lazily*: a preemption or fault abort simply
+//! leaves its entry behind, and [`CompletionCalendar::peek_min`] purges
+//! entries its caller's validity predicate rejects while scanning. That
+//! keeps every mutation site in the shard loop O(log buckets) and pushes
+//! all cleanup onto the (already bucket-local) peek path.
+//!
+//! Tie-breaking matters for determinism: entries compare as
+//! `(cycle_bits, package)` tuples, so two batches completing on the same
+//! cycle resolve to the lowest package index — exactly the order the
+//! legacy strict-`<` scan produced.
+
+use std::collections::BTreeMap;
+
+/// High bits of the f64 bit pattern used as the bucket key. Dropping the
+/// low 32 mantissa bits groups completions into buckets spanning about a
+/// 2⁻²⁰ relative range of the cycle value — fine enough that a bucket
+/// rarely holds more than the batches of one dispatch wave, coarse
+/// enough that the `BTreeMap` stays tiny.
+const BUCKET_SHIFT: u32 = 32;
+
+/// One entry per in-flight batch: `(busy_until.to_bits(), package)`.
+#[derive(Debug, Default)]
+pub(crate) struct CompletionCalendar {
+    buckets: BTreeMap<i64, Vec<(u64, usize)>>,
+    len: usize,
+}
+
+impl CompletionCalendar {
+    pub(crate) fn new() -> Self {
+        CompletionCalendar::default()
+    }
+
+    fn bucket_key(bits: u64) -> i64 {
+        (bits >> BUCKET_SHIFT) as i64
+    }
+
+    /// Index a batch completing at cycle `at` on `pkg`. `at` must be a
+    /// positive finite cycle (a dispatched batch always ends after 0).
+    pub(crate) fn insert(&mut self, at: f64, pkg: usize) {
+        debug_assert!(at.is_finite() && at > 0.0, "completion cycle {at} out of range");
+        let bits = at.to_bits();
+        self.buckets.entry(Self::bucket_key(bits)).or_default().push((bits, pkg));
+        self.len += 1;
+    }
+
+    /// Remove one known-present entry (the peeked minimum, about to be
+    /// completed). Stale aliases of the same `(bits, pkg)` pair are left
+    /// behind for the lazy purge.
+    pub(crate) fn remove(&mut self, bits: u64, pkg: usize) {
+        let key = Self::bucket_key(bits);
+        let bucket = self.buckets.get_mut(&key).expect("removing from a present bucket");
+        let pos = bucket
+            .iter()
+            .position(|&e| e == (bits, pkg))
+            .expect("removing a present calendar entry");
+        bucket.swap_remove(pos);
+        self.len -= 1;
+        if bucket.is_empty() {
+            self.buckets.remove(&key);
+        }
+    }
+
+    /// The earliest valid entry as `(cycle_bits, package)`, purging every
+    /// invalid (stale) entry encountered on the way. `valid(pkg, bits)`
+    /// decides liveness — the shard passes "package busy with exactly
+    /// this `busy_until`". Within a bucket the minimum is taken over the
+    /// `(bits, pkg)` tuple order, so equal-cycle ties resolve to the
+    /// lowest package index.
+    pub(crate) fn peek_min(
+        &mut self,
+        valid: impl Fn(usize, u64) -> bool,
+    ) -> Option<(u64, usize)> {
+        loop {
+            let (&key, _) = self.buckets.iter().next()?;
+            let bucket = self.buckets.get_mut(&key).expect("first bucket exists");
+            let before = bucket.len();
+            bucket.retain(|&(bits, pkg)| valid(pkg, bits));
+            self.len -= before - bucket.len();
+            match bucket.iter().copied().min() {
+                Some(entry) => return Some(entry),
+                None => {
+                    self.buckets.remove(&key);
+                }
+            }
+        }
+    }
+
+    /// Live + stale entries currently indexed (tests only).
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain_valid(cal: &mut CompletionCalendar) -> Vec<(f64, usize)> {
+        let mut out = Vec::new();
+        while let Some((bits, pkg)) = cal.peek_min(|_, _| true) {
+            cal.remove(bits, pkg);
+            out.push((f64::from_bits(bits), pkg));
+        }
+        out
+    }
+
+    #[test]
+    fn entries_pop_in_cycle_then_package_order() {
+        let mut cal = CompletionCalendar::new();
+        // Spread across magnitudes so several buckets exist, plus an
+        // exact tie on 500.0 that must resolve to the lower package.
+        for &(t, p) in &[(500.0, 3), (0.25, 1), (500.0, 2), (1e9, 0), (499.9999, 7)] {
+            cal.insert(t, p);
+        }
+        assert_eq!(cal.len(), 5);
+        let order = drain_valid(&mut cal);
+        assert_eq!(
+            order,
+            vec![(0.25, 1), (499.9999, 7), (500.0, 2), (500.0, 3), (1e9, 0)]
+        );
+        assert_eq!(cal.len(), 0);
+    }
+
+    #[test]
+    fn stale_entries_are_purged_by_peek() {
+        let mut cal = CompletionCalendar::new();
+        cal.insert(10.0, 0); // will be invalidated (e.g. preempted)
+        cal.insert(20.0, 1);
+        let got = cal.peek_min(|pkg, _| pkg != 0);
+        assert_eq!(got, Some((20.0f64.to_bits(), 1)));
+        assert_eq!(cal.len(), 1, "the stale entry is gone after the scan");
+        // A fully stale calendar answers None and ends empty.
+        let mut dead = CompletionCalendar::new();
+        dead.insert(1.0, 0);
+        dead.insert(2.0, 1);
+        assert_eq!(dead.peek_min(|_, _| false), None);
+        assert_eq!(dead.len(), 0);
+    }
+
+    #[test]
+    fn duplicate_alias_survives_a_single_remove() {
+        // A preempted batch's stale entry can alias a re-dispatch with an
+        // identical busy_until. Removing the peeked minimum must take
+        // exactly one of them; the twin is purged once it goes stale.
+        let mut cal = CompletionCalendar::new();
+        cal.insert(5.0, 2);
+        cal.insert(5.0, 2);
+        let (bits, pkg) = cal.peek_min(|_, _| true).unwrap();
+        cal.remove(bits, pkg);
+        assert_eq!(cal.len(), 1);
+        assert_eq!(cal.peek_min(|_, _| false), None, "the twin purges as stale");
+    }
+
+    #[test]
+    fn peek_skips_whole_stale_buckets() {
+        let mut cal = CompletionCalendar::new();
+        cal.insert(1.0, 0); // bucket A — goes stale
+        cal.insert(1e12, 1); // bucket far away
+        let got = cal.peek_min(|pkg, _| pkg == 1);
+        assert_eq!(got, Some((1e12f64.to_bits(), 1)));
+    }
+}

@@ -346,7 +346,8 @@ impl ClusterStats {
     /// `ClusterConfig::telemetry`.
     pub fn metrics_json(&self, memo: Option<crate::cost::MemoStats>) -> String {
         let t = self.telemetry.as_ref().expect("run with ClusterConfig::telemetry enabled");
-        crate::telemetry::metrics_json(t, &self.serve.attr, Some(&self.class_attr), memo)
+        let sketches = self.named_sketches();
+        crate::telemetry::metrics_json_with(t, &self.serve.attr, Some(&self.class_attr), memo, &sketches)
     }
 
     /// [`ClusterStats::metrics_json`] with the epochs array left empty:
@@ -356,7 +357,31 @@ impl ClusterStats {
     /// byte.
     pub fn metrics_json_summary(&self, memo: Option<crate::cost::MemoStats>) -> String {
         let t = self.telemetry.as_ref().expect("run with ClusterConfig::telemetry enabled");
-        crate::telemetry::export::metrics_json_summary(t, &self.serve.attr, Some(&self.class_attr), memo)
+        let sketches = self.named_sketches();
+        crate::telemetry::metrics_json_summary_with(
+            t,
+            &self.serve.attr,
+            Some(&self.class_attr),
+            memo,
+            &sketches,
+        )
+    }
+
+    /// The artifact's `sketches` block: under `--bounded-stats` the
+    /// fleet and per-class ε-bounded latency sketches ride along at
+    /// full sketch resolution (empty in exact mode), so `wienna
+    /// report` can answer the same quantiles the stats line printed.
+    fn named_sketches(&self) -> Vec<crate::telemetry::NamedSketch<'_>> {
+        let mut out = Vec::new();
+        if let Some(sk) = self.serve.latency_sketch() {
+            out.push(("latency_ms".to_string(), sk));
+        }
+        for (class, m) in &self.per_class {
+            if let Some(sk) = m.latency.sketch() {
+                out.push((format!("latency_ms_{}", class.label().replace('-', "_")), sk));
+            }
+        }
+        out
     }
 
     /// Serialize the span log as a Chrome trace-event (Perfetto-loadable)

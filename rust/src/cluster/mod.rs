@@ -73,6 +73,7 @@
 //! ```
 
 pub mod admission;
+mod calendar;
 pub mod class;
 pub mod merge;
 pub mod shard;
@@ -143,6 +144,29 @@ pub struct ClusterConfig {
     /// Retry/backoff policy for dispatches that die under a package
     /// death. Only consulted when a fault plan is active.
     pub retry: RetryPolicy,
+    /// Which per-shard event scheduler drives the simulation. The
+    /// default calendar queue and the legacy full-scan loop are
+    /// byte-identical in every artifact; the legacy path is kept as the
+    /// equivalence oracle behind `--scheduler legacy`.
+    pub scheduler: SchedulerKind,
+}
+
+/// Per-shard event-scheduler selection ([`ClusterConfig::scheduler`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Bucketed completion calendar + dirty-set dispatch (the fast
+    /// default): O(log buckets) completion lookup instead of an
+    /// O(packages) scan per event.
+    Calendar,
+    /// The original full-scan event loop, kept verbatim as the
+    /// determinism oracle the calendar path is tested against.
+    Legacy,
+}
+
+impl Default for SchedulerKind {
+    fn default() -> Self {
+        SchedulerKind::Calendar
+    }
 }
 
 impl Default for ClusterConfig {
@@ -163,6 +187,7 @@ impl Default for ClusterConfig {
             faults: FaultPlan::default(),
             contention: ContentionConfig::default(),
             retry: RetryPolicy::default(),
+            scheduler: SchedulerKind::Calendar,
         }
     }
 }

@@ -31,8 +31,9 @@
 //!   the front of their queue.
 
 use super::admission::{batching_gain, ShedReason};
+use super::calendar::CompletionCalendar;
 use super::class::{TrafficClass, NUM_CLASSES};
-use super::ClusterConfig;
+use super::{ClusterConfig, SchedulerKind};
 use crate::fault::ShardFaults;
 use crate::nop::mac::token_wait_cycles;
 use crate::power::DvfsLevel;
@@ -221,6 +222,16 @@ pub(crate) struct ShardSim<'a> {
     /// Bounded-stats latency sketches, armed by `cfg.telemetry.bounded`
     /// and drained by the barrier via [`ShardSim::take_sketches`].
     sketches: Option<Box<ShardSketches>>,
+    /// Calendar-queue completion index (`SchedulerKind::Calendar`): one
+    /// entry per in-flight batch, keyed by completion cycle. Entries
+    /// orphaned by a preemption or fault abort are purged lazily at the
+    /// next peek. `None` under the legacy scheduler.
+    cal: Option<CompletionCalendar>,
+    /// Dispatch dirty set (calendar scheduler): packages whose
+    /// dispatchability may have changed since the last dispatch pass.
+    /// The legacy loop rescans every package on every event instead.
+    dirty: Vec<bool>,
+    dirty_list: Vec<usize>,
 }
 
 impl<'a> ShardSim<'a> {
@@ -259,6 +270,28 @@ impl<'a> ShardSim<'a> {
             } else {
                 None
             },
+            cal: match cfg.scheduler {
+                SchedulerKind::Calendar => Some(CompletionCalendar::new()),
+                SchedulerKind::Legacy => None,
+            },
+            dirty: vec![false; n],
+            dirty_list: Vec::new(),
+        }
+    }
+
+    /// Flag package `i` for the calendar loop's next dispatch pass.
+    fn mark_dirty(&mut self, i: usize) {
+        if !self.dirty[i] {
+            self.dirty[i] = true;
+            self.dirty_list.push(i);
+        }
+    }
+
+    /// Flag every package (step entry, fault edges — anything that can
+    /// change dispatchability shard-wide).
+    fn mark_all_dirty(&mut self) {
+        for i in 0..self.packages.len() {
+            self.mark_dirty(i);
         }
     }
 
@@ -483,6 +516,7 @@ impl<'a> ShardSim<'a> {
     /// (already-admitted work: the `Ok` path of [`ShardSim::admit`], and
     /// stolen requests re-homed at an epoch barrier).
     fn enqueue(&mut self, idx: usize, req: Request, class: TrafficClass, now: f64) {
+        self.mark_dirty(idx);
         let service1 = self.est1(idx, req.kind);
         let deadline = req.deadline;
         self.backlog[idx][class.index()] += service1;
@@ -666,6 +700,9 @@ impl<'a> ShardSim<'a> {
         self.queues[idx][victim.index()].requeue_front(reqs);
         self.inflight_class[idx] = None;
         self.preemptions += 1;
+        // The aborted batch's calendar entry is now stale; the next peek
+        // purges it. The freed package is immediately dispatchable.
+        self.mark_dirty(idx);
     }
 
     /// The governor's DVFS decision for this shard's cap slice (see
@@ -747,6 +784,9 @@ impl<'a> ShardSim<'a> {
             self.backlog[i][ci] = (self.backlog[i][ci] - est1 * reqs.len() as f64).max(0.0);
             self.class_energy_mj[ci] += energy.total_mj();
             self.packages[i].begin_batch(now, &decision, reqs, level, energy);
+            if let Some(cal) = &mut self.cal {
+                cal.insert(self.packages[i].busy_until(), i);
+            }
             self.inflight_class[i] = Some(class);
             *self.dispatch_hist.entry(decision.batch).or_insert(0) += 1;
             return;
@@ -756,6 +796,7 @@ impl<'a> ShardSim<'a> {
     /// Complete the in-flight batch on `i`, emitting completion events
     /// and folding each request's cycle attribution into the shard sums.
     fn complete(&mut self, i: usize) {
+        self.mark_dirty(i);
         let class = self.inflight_class[i].take().expect("completing package has a batch class");
         // The dispatch cycle and predicted cost vanish with finish_batch —
         // capture them first.
@@ -997,6 +1038,29 @@ impl<'a> ShardSim<'a> {
     /// across calls; an `end` of `f64::INFINITY` drains the shard
     /// completely (fault edges and backoffs included).
     pub(crate) fn step(&mut self, arrivals: &[ClassedRequest], end: f64) -> Vec<ShardEvent> {
+        match self.cfg.scheduler {
+            SchedulerKind::Legacy => self.step_legacy(arrivals, end),
+            SchedulerKind::Calendar => self.step_calendar(arrivals.to_vec(), end),
+        }
+    }
+
+    /// [`ShardSim::step`] over an owned arrival slice — the sync layer's
+    /// hot path. The calendar scheduler consumes the requests in place
+    /// (no per-arrival clone on the dispatch path); the legacy oracle
+    /// still clones, exactly as it always did.
+    pub(crate) fn step_owned(&mut self, arrivals: Vec<ClassedRequest>, end: f64) -> Vec<ShardEvent> {
+        match self.cfg.scheduler {
+            SchedulerKind::Legacy => self.step_legacy(&arrivals, end),
+            SchedulerKind::Calendar => self.step_calendar(arrivals, end),
+        }
+    }
+
+    /// The pre-calendar event loop, kept verbatim as the equivalence
+    /// oracle (`--scheduler legacy`): O(packages) next-completion scan
+    /// and a full dispatch rescan on every event. Every scheduling
+    /// decision here must stay bit-identical to
+    /// [`ShardSim::step_calendar`] — the fuzz harness diffs the two.
+    fn step_legacy(&mut self, arrivals: &[ClassedRequest], end: f64) -> Vec<ShardEvent> {
         let mut cursor = 0usize;
         loop {
             for i in 0..self.packages.len() {
@@ -1064,6 +1128,120 @@ impl<'a> ShardSim<'a> {
         }
         debug_assert_eq!(cursor, arrivals.len(), "every epoch arrival is below the window end");
         std::mem::take(&mut self.events)
+    }
+
+    /// The calendar-queue event loop: decision-for-decision identical to
+    /// [`ShardSim::step_legacy`], with the two O(packages)-per-event
+    /// scans replaced —
+    ///
+    /// * the next completion comes from the [`CompletionCalendar`]
+    ///   (bucketed by cycle, `(cycle, package)` tie order — the same
+    ///   lowest-index rule the legacy strict-`<` scan used);
+    /// * the dispatch pass only revisits *dirty* packages (marked on
+    ///   enqueue, completion, preemption, and shard-wide on fault edges
+    ///   and step entry). Skipped packages cannot have become
+    ///   dispatchable: a declined `try_dispatch` has no side effects, and
+    ///   dispatching one package never changes another's queues.
+    ///
+    /// Arrivals are consumed from the owned vector — no per-request
+    /// clone. Equal-cycle tie order (edge, retry, arrival, completion)
+    /// is reproduced by the exact same `<=` chains.
+    fn step_calendar(&mut self, arrivals: Vec<ClassedRequest>, end: f64) -> Vec<ShardEvent> {
+        // Barrier mutations (stolen work drained, caps rebalanced) and
+        // the window edge itself can all change dispatchability.
+        self.mark_all_dirty();
+        let mut arrivals = arrivals.into_iter().peekable();
+        loop {
+            if !self.dirty_list.is_empty() {
+                // Ascending package order — the order the legacy full
+                // scan visits (token-wait accumulation order included).
+                self.dirty_list.sort_unstable();
+                let list = std::mem::take(&mut self.dirty_list);
+                for i in list {
+                    self.dirty[i] = false;
+                    if self.packages[i].is_idle() && self.queued_total(i) > 0 {
+                        self.try_dispatch(i, self.now);
+                    }
+                }
+            }
+
+            let next_arrival = arrivals.peek().map(|a| a.ready_at);
+            let (next_completion, completing) = {
+                let pkgs = &self.packages;
+                let cal = self.cal.as_mut().expect("calendar scheduler armed");
+                match cal.peek_min(|pkg, bits| {
+                    !pkgs[pkg].is_idle() && pkgs[pkg].busy_until().to_bits() == bits
+                }) {
+                    Some((bits, pkg)) => (f64::from_bits(bits), pkg),
+                    None => (f64::INFINITY, usize::MAX),
+                }
+            };
+            let t_edge = if self.faults.is_empty() {
+                f64::INFINITY
+            } else {
+                self.faults.next_edge_after(self.now).filter(|&t| t < end).unwrap_or(f64::INFINITY)
+            };
+            let t_retry =
+                self.next_retry_at().filter(|&t| t < end).unwrap_or(f64::INFINITY);
+            let t_arrival = next_arrival.unwrap_or(f64::INFINITY);
+
+            if t_edge.is_finite()
+                && t_edge <= t_retry
+                && t_edge <= t_arrival
+                && t_edge <= next_completion
+            {
+                self.now = self.now.max(t_edge);
+                self.apply_fault_edges(self.now);
+                // A fault edge can flip liveness / stall state shard-wide.
+                self.mark_all_dirty();
+            } else if t_retry.is_finite() && t_retry <= t_arrival && t_retry <= next_completion {
+                self.now = self.now.max(t_retry);
+                self.fire_retry();
+            } else if t_arrival.is_finite() && t_arrival <= next_completion {
+                self.now = self.now.max(t_arrival);
+                let a = arrivals.next().expect("peeked arrival exists");
+                if a.stolen {
+                    self.inject(self.now, a.req, a.class);
+                } else {
+                    self.admit(self.now, a.req, a.class);
+                }
+            } else if completing != usize::MAX && next_completion < end {
+                self.now = self.now.max(next_completion);
+                self.cal
+                    .as_mut()
+                    .expect("calendar scheduler armed")
+                    .remove(next_completion.to_bits(), completing);
+                self.complete(completing);
+            } else {
+                break;
+            }
+        }
+        debug_assert!(arrivals.next().is_none(), "every epoch arrival is below the window end");
+        std::mem::take(&mut self.events)
+    }
+
+    /// Replace this shard's power-cap slice — the sync barrier's
+    /// stranded-cap rebalance: when a fault plan kills every package on
+    /// some shard, the survivors' slices are re-derived from *live*
+    /// package counts so the fleet cap is never partially stranded.
+    pub(crate) fn set_cap_w(&mut self, cap: Option<f64>) {
+        self.cap_w = cap;
+    }
+
+    /// This shard's current power-cap slice (tests).
+    #[cfg(test)]
+    pub(crate) fn cap_w(&self) -> Option<f64> {
+        self.cap_w
+    }
+
+    /// Packages of this shard not dead at `t` (all of them without a
+    /// fault plan) — the numerator/denominator unit of the barrier cap
+    /// rebalance.
+    pub(crate) fn live_packages(&self, t: f64) -> usize {
+        if self.faults.is_empty() {
+            return self.packages.len();
+        }
+        (0..self.packages.len()).filter(|&i| !self.faults.package_dead(i, t)).count()
     }
 
     /// Shard-local clock (cycle of the last processed event). Barrier
@@ -1682,5 +1860,102 @@ mod tests {
         assert!(victim.steal_cost().is_none(), "stolen work is never re-offered");
         victim.step(&[], f64::INFINITY);
         victim.finish();
+    }
+
+    #[test]
+    fn calendar_scheduler_matches_the_legacy_oracle_event_for_event() {
+        // The tentpole's non-negotiable: the calendar-queue loop must
+        // reproduce the legacy loop's event stream bit for bit — under
+        // chaos (kills, spikes), contention, preemption, a power cap,
+        // AND windowed stepping (resumability), all at once.
+        let l1 = l1_ms();
+        let plan = crate::fault::FaultPlan::parse(&format!(
+            "kill:0@{}..{};spike:0.4@0..{}",
+            0.4 * l1,
+            2.0 * l1,
+            3.0 * l1
+        ))
+        .unwrap();
+        let arrivals: Vec<ClassedRequest> = (0..30)
+            .map(|i| arrival(i, 0.05 * l1 * i as f64, 30.0 * l1, TrafficClass::ALL[(i % 3) as usize]))
+            .collect();
+        let run = |scheduler: SchedulerKind| {
+            let cfg = ClusterConfig {
+                admission: super::super::AdmissionConfig::admit_all(),
+                batcher: crate::serve::BatcherConfig { max_batch: 1, candidates: vec![1] },
+                policy: RoutePolicy::RoundRobin,
+                contention: crate::fault::ContentionConfig::with_background(0.3),
+                scheduler,
+                ..Default::default()
+            };
+            let mut sim = ShardSim::new(two_packages(), &cfg, Some(300.0))
+                .with_faults(plan.for_shard(0, 1, 2));
+            let window = ms_to_cycles(0.5 * l1);
+            let mut events: Vec<ShardEvent> = Vec::new();
+            let mut cursor = 0usize;
+            let mut start = 0.0f64;
+            while !sim.is_drained() || cursor < arrivals.len() || sim.has_future_work() {
+                let end = start + window;
+                let mut slice = Vec::new();
+                while cursor < arrivals.len() && arrivals[cursor].ready_at < end {
+                    slice.push(arrivals[cursor].clone());
+                    cursor += 1;
+                }
+                events.extend(sim.step_owned(slice, end));
+                start = end;
+            }
+            events.extend(sim.step(&[], f64::INFINITY));
+            events.extend(sim.fail_stranded());
+            let out = sim.finish();
+            (events, out)
+        };
+        let (legacy, out_l) = run(SchedulerKind::Legacy);
+        let (calendar, out_c) = run(SchedulerKind::Calendar);
+        assert_eq!(legacy.len(), calendar.len(), "event counts diverge");
+        for (a, b) in legacy.iter().zip(calendar.iter()) {
+            assert_eq!(a.req.id, b.req.id);
+            assert_eq!(a.cycle.to_bits(), b.cycle.to_bits(), "cycle drifted for id {}", a.req.id);
+            assert_eq!(a.outcome, b.outcome, "outcome drifted for id {}", a.req.id);
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.queue_cycles.to_bits(), b.queue_cycles.to_bits());
+        }
+        assert_eq!(out_l.end_cycle.to_bits(), out_c.end_cycle.to_bits());
+        assert_eq!(out_l.dispatch_hist, out_c.dispatch_hist);
+        assert_eq!(out_l.preemptions, out_c.preemptions);
+        assert_eq!(out_l.class_retries, out_c.class_retries);
+        assert_eq!(out_l.class_reroutes, out_c.class_reroutes);
+        assert_eq!(out_l.token_wait_cycles.to_bits(), out_c.token_wait_cycles.to_bits());
+    }
+
+    #[test]
+    fn raising_the_cap_slice_unthrottles_dispatch() {
+        // The stranded-cap fix's mechanism: the sync barrier hands a
+        // survivor shard a larger cap slice via `set_cap_w`, and its
+        // governor must start choosing faster DVFS levels. A 1 W slice
+        // forces the ladder floor; lifting the cap before dispatch must
+        // complete bit-identically to a never-capped run.
+        let cfg = ClusterConfig {
+            admission: super::super::AdmissionConfig::admit_all(),
+            ..Default::default()
+        };
+        let arrivals = vec![arrival(0, 0.0, 1e6, TrafficClass::Interactive)];
+        let run_with = |cap: Option<f64>, raise: Option<Option<f64>>| {
+            let mut sim =
+                ShardSim::new(vec![PackageSpec::new("p0", DesignPoint::WIENNA_C)], &cfg, cap);
+            if let Some(c) = raise {
+                sim.set_cap_w(c);
+            }
+            let ev = sim.step(&arrivals, f64::INFINITY);
+            sim.finish();
+            ev[0].cycle
+        };
+        let throttled = run_with(Some(1.0), None);
+        let raised = run_with(Some(1.0), Some(None));
+        let nominal = run_with(None, None);
+        assert!(
+            raised < throttled,
+            "lifting the cap must speed the batch up: {raised} vs {throttled}"
+        );
+        assert_eq!(raised.to_bits(), nominal.to_bits(), "a lifted cap equals no cap");
     }
 }

@@ -76,6 +76,23 @@ pub struct SyncConfig {
     /// in-flight) requests move from the most- to the least-loaded shard
     /// until the move would no longer shrink the imbalance.
     pub steal: bool,
+    /// Adaptive epoch sizing (`--adaptive-epochs`): instead of a fixed
+    /// `epoch_cycles` stride, each window ends just past the earliest
+    /// in-flight completion bound across shards (clamped by pending
+    /// retry timers and fault edges via [`ShardSim::next_wakeup`]), so
+    /// quiet stretches pay no barriers and busy ones exchange feedback
+    /// at event resolution. Windows with no bound in sight fall back to
+    /// the fixed stride. Changes barrier placement — and therefore
+    /// cross-shard feedback timing — so outputs are *not* byte-identical
+    /// to fixed epochs; they remain bit-identical across thread counts
+    /// (the bound is computed single-threaded at the barrier). Ignored
+    /// on the open-loop no-steal fast path (one unbounded epoch).
+    pub adaptive: bool,
+    /// Re-split the fleet power cap over *live* packages at each barrier
+    /// when a fault plan is active, so a dead shard's cap slice flows to
+    /// the survivors instead of stranding (on by default; the off
+    /// position exists for regression tests of the pre-fix behavior).
+    pub rebalance_caps: bool,
 }
 
 impl Default for SyncConfig {
@@ -83,7 +100,12 @@ impl Default for SyncConfig {
         // 0.5 ms at the Table-4 clock: fine enough that default think
         // times (≥ 1 ms) span multiple windows, coarse enough that a
         // 100 ms run pays ~200 barriers.
-        SyncConfig { epoch_cycles: ms_to_cycles(0.5), steal: false }
+        SyncConfig {
+            epoch_cycles: ms_to_cycles(0.5),
+            steal: false,
+            adaptive: false,
+            rebalance_caps: true,
+        }
     }
 }
 
@@ -117,6 +139,15 @@ fn min_opt(a: Option<f64>, b: Option<f64>) -> Option<f64> {
         (x, None) => x,
         (None, y) => y,
     }
+}
+
+/// The least f64 strictly greater than a positive finite `x` — used by
+/// adaptive epochs to place a window end just *past* the event bounding
+/// it, so the event is consumed inside the window and every adaptive
+/// epoch makes progress.
+fn next_up(x: f64) -> f64 {
+    debug_assert!(x.is_finite() && x >= 0.0);
+    f64::from_bits(x.to_bits() + 1)
 }
 
 /// Run the epoch-synchronized simulation (see module docs). `horizon`
@@ -199,7 +230,30 @@ pub(crate) fn run_sync(
     let mut pending: Vec<Vec<ClassedRequest>> = vec![Vec::new(); shards];
     let mut start = 0.0f64;
     loop {
-        let end = if window.is_finite() { start + window } else { f64::INFINITY };
+        let end = if !window.is_finite() {
+            f64::INFINITY
+        } else if cfg.sync.adaptive {
+            // Adaptive epochs: end just past the earliest completion /
+            // wakeup bound across shards (id-order lock, so the bound —
+            // and every barrier placement derived from it — is
+            // thread-count-deterministic). Every bound is an event this
+            // window will consume, so each adaptive epoch progresses;
+            // with nothing in flight, fall back to the fixed stride and
+            // let the ingress below decide whether work exists at all.
+            let bound = sims
+                .iter()
+                .map(|m| {
+                    let g = m.lock().expect("shard mutex");
+                    min_opt(g.next_completion(), g.next_wakeup())
+                })
+                .fold(None, min_opt);
+            match bound {
+                Some(b) => next_up(b.max(start)),
+                None => start + window,
+            }
+        } else {
+            start + window
+        };
 
         // Ingress for this window: classify (pure in (class_seed, id))
         // and stripe every arrival issued before `end`.
@@ -227,9 +281,13 @@ pub(crate) fn run_sync(
 
         // Simulate the window: each shard is a pure function of its
         // accumulated state and this input slice, so the thread count
-        // only changes wall-clock time.
+        // only changes wall-clock time. Slices are handed over by move
+        // (`step_owned`) — the striping above was the only copy made.
+        let inputs: Vec<Mutex<Vec<ClassedRequest>>> =
+            inputs.into_iter().map(Mutex::new).collect();
         let events: Vec<_> = par::par_map(shards, cfg.threads, |s| {
-            sims[s].lock().expect("shard mutex").step(&inputs[s], end)
+            let taken = std::mem::take(&mut *inputs[s].lock().expect("input mutex"));
+            sims[s].lock().expect("shard mutex").step_owned(taken, end)
         });
         stats.epochs += 1;
 
@@ -286,6 +344,13 @@ pub(crate) fn run_sync(
                             drain_bar[s] = Some(end);
                         }
                     }
+                }
+                // Stranded-cap fix: re-split the fleet cap over *live*
+                // packages so a dead shard's slice flows to survivors
+                // (and flows back on repair). Barrier-state-only and
+                // shard-id-ordered, so thread-count-deterministic.
+                if cfg.sync.rebalance_caps && cfg.power.enabled() {
+                    rebalance_caps(cfg, &sims, end);
                 }
             }
 
@@ -426,6 +491,26 @@ pub(crate) fn run_sync(
             .sum();
     }
     stats
+}
+
+/// Re-split the fleet power cap across shards in proportion to each
+/// shard's *live* (not fault-killed) packages at barrier cycle `bar` —
+/// the stranded-cap fix. A fully dead shard's slice drops to zero (its
+/// governor floors, which is moot: it cannot dispatch) and the freed
+/// watts raise every survivor's slice, so the fleet keeps drawing up to
+/// the configured cap instead of throttling below it. Repair reverses
+/// the split at the next barrier. With the whole fleet dead there is
+/// nothing to rebalance toward, so the pre-kill slices are kept.
+fn rebalance_caps(cfg: &super::ClusterConfig, sims: &[Mutex<ShardSim>], bar: f64) {
+    let live: Vec<usize> =
+        sims.iter().map(|m| m.lock().expect("shard mutex").live_packages(bar)).collect();
+    let total: usize = live.iter().sum();
+    if total == 0 {
+        return;
+    }
+    for (s, m) in sims.iter().enumerate() {
+        m.lock().expect("shard mutex").set_cap_w(cfg.power.shard_cap(live[s], total));
+    }
 }
 
 /// Sample the epoch-edge gauges into the metrics registry (no-op when

@@ -10,13 +10,14 @@
 //!                  [--client-trace FILE] [--trace-out FILE] [--metrics-out FILE]
 //! wienna cluster   [--packages N] [--shards N] [--threads N] [--mix ...] [--policy ...]
 //!                  [--load F | --rps R | --closed-loop N | --client-trace FILE]
-//!                  [--steal] [--epoch-cycles N] [--queue-cap N|none] [--no-shed-late]
+//!                  [--steal] [--epoch-cycles N] [--adaptive-epochs] [--scheduler calendar|legacy]
+//!                  [--queue-cap N|none] [--no-shed-late]
 //!                  [--no-preempt] [--faults SPEC] [--contention F] [--bounded-stats]
 //!                  [--quantile-error EPS] [--stats-json FILE] [--trace-out FILE]
 //!                  [--metrics-out FILE(.jsonl streams)|tcp://HOST:PORT|-]
-//! wienna report    <metrics.json|.jsonl> [--trace FILE] [--top N]   (artifact analyzer)
+//! wienna report    <metrics.json|.jsonl|stats.json> [--trace FILE] [--top N]   (artifact analyzer)
 //! wienna report    --diff A B [--tolerance F] [--phase-tolerance F] [--occupancy-tolerance F]
-//! wienna watch     <tcp://HOST:PORT|FILE.jsonl|-> [--top N] [--raw] [--no-clear]
+//! wienna watch     <tcp://HOST:PORT|FILE.jsonl|-> [--top N] [--raw] [--no-clear] [--once]
 //! wienna e2e       [--artifacts DIR] [--batch N] [--chiplets N] [--strategy ...]
 //! wienna sim-validate [--chiplets N]
 //! wienna breakdown [--chiplets N] [--wireless-bw B]
@@ -54,10 +55,13 @@ const USAGE: &str = "usage: wienna <simulate|sweep|serve|cluster|search|e2e|sim-
                 path — offline analysis of an emitted metrics artifact:
                 report <metrics.json|.jsonl> [--trace FILE] [--top N]
                 report --diff A B [--tolerance F] [--phase-tolerance F] [--occupancy-tolerance F]
-                compares two artifacts and exits nonzero on a regression past tolerance
+                compares two artifacts — metrics or --stats-json dumps, mixed freely —
+                and exits nonzero on a regression past tolerance
   watch         live text dashboard over a wienna-metrics-stream-v1 stream:
-                watch <tcp://HOST:PORT|FILE.jsonl|-> [--top N] [--raw] [--no-clear]
-                (tcp:// listens; start watch first, then the run with --metrics-out tcp://...)
+                watch <tcp://HOST:PORT|FILE.jsonl|-> [--top N] [--raw] [--no-clear] [--once]
+                (tcp:// listens and keeps serving run after run; --once exits after the
+                first stream, --raw implies it; start watch first, then the run with
+                --metrics-out tcp://...)
 common flags: --workload resnet50|unet|tiny|mlp|rnn|bert|<file>.trace
               --design interposer-c|interposer-a|wienna-c|wienna-a
               --strategy kp-cp|np-cp|yp-xp|adaptive  --batch N  --chiplets N  --verbose
@@ -84,6 +88,10 @@ cluster flags: --packages N  --shards N  --threads N  --design ...  --policy rr|
               --steal (epoch-barrier cross-shard work stealing; also enables failover re-routing
               of a dead shard's queue to survivors under --faults)
               --epoch-cycles N (sync window width; feedback + stealing cross shards at its edges)
+              --adaptive-epochs (size each window to the earliest cross-shard event instead of
+              a fixed width: fewer barriers at low load, same per-thread determinism)
+              --scheduler calendar|legacy (per-shard event engine; default calendar — the
+              bucketed completion calendar; legacy is the O(packages)-scan oracle)
               --faults SPEC (seeded chaos plan, ';'-separated, times in ms, '..END' optional:
               kill:PKG@T[..T2]  degrade:PKG:FACTOR@T[..T2]  stall:SHARD@T[..T2]  spike:LOAD@T[..T2];
               deterministic — stats stay byte-identical at any --threads)
@@ -127,6 +135,7 @@ impl Flags {
                 || key == "pareto"
                 || key == "steal"
                 || key == "bounded-stats"
+                || key == "adaptive-epochs"
             {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
@@ -454,7 +463,20 @@ fn cmd_serve(f: &Flags) -> anyhow::Result<()> {
         }
         if let Some(path) = f.0.get("metrics-out") {
             let memo = wienna::cost::memo::stats();
-            let json = wienna::telemetry::metrics_json(&tele, &stats.attr, None, Some(memo));
+            // Bounded-stats runs carry the fleet latency sketch at full
+            // resolution so `wienna report` answers the same quantiles
+            // the stats line printed.
+            let mut sketches: Vec<wienna::telemetry::NamedSketch> = Vec::new();
+            if let Some(sk) = stats.latency_sketch() {
+                sketches.push(("latency_ms".to_string(), sk));
+            }
+            let json = wienna::telemetry::metrics_json_with(
+                &tele,
+                &stats.attr,
+                None,
+                Some(memo),
+                &sketches,
+            );
             std::fs::write(path, json).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
             println!(
                 "metrics json -> {path} | layer memo: {} hits / {} misses / {} evictions ({} entries, cap {})",
@@ -531,7 +553,11 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
     // histograms ARE the percentile source in that mode.
     let telemetry_on = trace_on || f.0.contains_key("metrics-out") || bounded;
 
-    let mut sync = SyncConfig { steal: f.flag("steal"), ..Default::default() };
+    let mut sync = SyncConfig {
+        steal: f.flag("steal"),
+        adaptive: f.flag("adaptive-epochs"),
+        ..Default::default()
+    };
     if let Some(e) = f.0.get("epoch-cycles") {
         sync.epoch_cycles =
             e.parse().map_err(|_| anyhow::anyhow!("--epoch-cycles: bad number '{e}'"))?;
@@ -540,12 +566,18 @@ fn cmd_cluster(f: &Flags) -> anyhow::Result<()> {
             "--epoch-cycles must be positive and finite"
         );
     }
+    let scheduler = match f.str("scheduler", "calendar").as_str() {
+        "calendar" => wienna::cluster::SchedulerKind::Calendar,
+        "legacy" => wienna::cluster::SchedulerKind::Legacy,
+        other => anyhow::bail!("--scheduler: unknown engine '{other}' (calendar|legacy)"),
+    };
     let mut cfg = ClusterConfig {
         shards,
         policy,
         preemption: !f.flag("no-preempt"),
         admission: AdmissionConfig { queue_cap, shed_late: !f.flag("no-shed-late") },
         sync,
+        scheduler,
         power: parse_power(f)?,
         calibrated_eta: f.flag("calibrated-eta"),
         telemetry: wienna::telemetry::TelemetryConfig {

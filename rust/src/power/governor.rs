@@ -255,6 +255,34 @@ mod tests {
     }
 
     #[test]
+    fn rebalanced_slices_conserve_the_fleet_cap_and_raise_survivors() {
+        // The stranded-cap fix re-splits over *live* packages: a dead
+        // shard's slice goes to zero, the freed watts raise every
+        // survivor's slice, and the slices still sum to exactly the
+        // fleet cap — the fleet never draws more than configured, and
+        // survivors stop throttling below what the cap requires.
+        let cfg = PowerConfig::with_cap(400.0);
+        let before: Vec<f64> =
+            (0..4).map(|_| cfg.shard_cap(4, 16).expect("cap set")).collect();
+        // Shard 0's four packages die: 12 live packages remain.
+        let live = [0usize, 4, 4, 4];
+        let after: Vec<f64> =
+            live.iter().map(|&l| cfg.shard_cap(l, 12).expect("cap set")).collect();
+        assert_eq!(after[0], 0.0, "a dead shard holds no slice");
+        for s in 1..4 {
+            assert!(after[s] > before[s], "survivor slice must rise: {} vs {}", after[s], before[s]);
+        }
+        let total: f64 = after.iter().sum();
+        assert!((total - 400.0).abs() < 1e-9, "slices sum to the fleet cap, got {total}");
+        // A survivor's governor now picks a faster level for the same
+        // batch than it could under the pre-kill slice.
+        let batch = batch_at_watts(120.0);
+        let throttled = cfg.choose_level(before[1], 10.0, 0.0, &batch);
+        let raised = cfg.choose_level(after[1], 10.0, 0.0, &batch);
+        assert!(raised.freq_scale > throttled.freq_scale, "survivor level must rise");
+    }
+
+    #[test]
     #[should_panic(expected = "strictly descend")]
     fn unsorted_ladders_are_rejected() {
         DvfsLadder::new(&[1.0, 0.5, 0.7]);

@@ -23,7 +23,7 @@
 use crate::anyhow::{bail, Context, Result};
 use crate::report::table::fmt;
 use crate::report::Table;
-use crate::telemetry::{LogHistogram, METRICS_STREAM_SCHEMA, PHASES};
+use crate::telemetry::{LogHistogram, QuantileSketch, METRICS_STREAM_SCHEMA, PHASES};
 
 /// A parsed JSON value. Object fields keep emission order (`Vec`, not a
 /// map) — the artifacts are schema-pinned, order is meaningful.
@@ -255,11 +255,93 @@ pub(crate) fn histogram_from(obj: &Json) -> Result<(String, LogHistogram)> {
     Ok((name.to_string(), h))
 }
 
-/// Load artifact text — buffered `wienna-metrics-v1` JSON or a
-/// `wienna-metrics-stream-v1` JSONL stream (reconstructed first) — into
-/// a parsed, schema-checked root object. Returns `(root, streamed)`.
-/// Shared by the report renderer and the `--diff` regression gate.
-pub(crate) fn load_metrics_artifact(artifact: &str) -> Result<(Json, bool)> {
+/// One entry of the artifact's `sketches` block, rebuilt into a live
+/// [`QuantileSketch`]. Bounded-stats runs export these alongside the
+/// power-of-two histograms so the analyzer can answer quantiles at the
+/// same ε resolution as the run's stats line, instead of degrading to
+/// within-one-power-of-two histogram estimates.
+pub(crate) struct SketchTrack {
+    pub(crate) name: String,
+    pub(crate) count: u64,
+    /// Recorded-unit → display-unit factor (sketches store cycles; the
+    /// artifact carries the run's cycles→ms conversion).
+    scale: f64,
+    sketch: QuantileSketch,
+}
+
+impl SketchTrack {
+    /// Percentile in display units (ms for the latency tracks).
+    pub(crate) fn quantile(&self, p: f64) -> f64 {
+        self.sketch.quantile(p) * self.scale
+    }
+
+    pub(crate) fn mean(&self) -> f64 {
+        self.sketch.mean() * self.scale
+    }
+
+    /// The sketch's relative error bound ε.
+    pub(crate) fn eps(&self) -> f64 {
+        self.sketch.relative_error()
+    }
+}
+
+/// Rebuild one sketch from its exported `[key, count]` bucket list
+/// (finite keys only; the zero/overflow sentinels travel as separate
+/// counts because their `i64::MIN`/`MAX` keys are not exact doubles).
+pub(crate) fn sketch_from(obj: &Json) -> Result<SketchTrack> {
+    let name = obj.get("name").and_then(Json::as_str).context("sketch missing name")?;
+    let sub_bits = obj.num("sub_bits").context("sketch missing sub_bits")? as u32;
+    let scale = obj.num("scale").context("sketch missing scale")?;
+    let zero = obj.num("zero").unwrap_or(0.0) as u64;
+    let inf = obj.num("inf").unwrap_or(0.0) as u64;
+    let sum = obj.get("sum").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let max = obj.get("max").and_then(Json::as_f64).unwrap_or(f64::NEG_INFINITY);
+    let mut buckets = Vec::new();
+    for b in obj.get("buckets").and_then(Json::as_arr).context("sketch missing buckets")? {
+        let pair = b.as_arr().context("sketch bucket is not a [key, count] pair")?;
+        let k = pair.first().and_then(Json::as_f64).context("sketch bucket missing key")? as i64;
+        let c = pair.get(1).and_then(Json::as_f64).context("sketch bucket missing count")? as u64;
+        buckets.push((k, c));
+    }
+    let sketch = QuantileSketch::from_parts(sub_bits, buckets, zero, inf, sum, max);
+    Ok(SketchTrack { name: name.to_string(), count: sketch.count(), scale, sketch })
+}
+
+/// All sketch tracks of an artifact (empty for exact-stats runs and
+/// pre-sketch artifacts, which have no `sketches` block).
+pub(crate) fn sketch_tracks(root: &Json) -> Result<Vec<SketchTrack>> {
+    root.get("sketches")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .map(sketch_from)
+        .collect()
+}
+
+/// A recognized artifact: either a telemetry metrics artifact or a
+/// `wienna cluster --stats-json` dump (which has no `schema` key and is
+/// recognized structurally). The `--diff` gate accepts both; the
+/// renderer only takes metrics artifacts.
+pub(crate) enum LoadedArtifact {
+    Metrics { root: Json, streamed: bool },
+    Stats { root: Json },
+}
+
+/// Structural fingerprint of a `--stats-json` dump: the cluster-stats
+/// schema has no `schema` key but always carries these counters (pinned
+/// by `rust/testdata/cluster_stats_schema.golden`).
+fn is_stats_dump(root: &Json) -> bool {
+    root.get("schema").is_none()
+        && root.get("arrived").is_some()
+        && root.get("completed").is_some()
+        && root.get("per_class").is_some()
+}
+
+/// Load and classify artifact text — buffered `wienna-metrics-v1` JSON,
+/// a `wienna-metrics-stream-v1` JSONL stream (reconstructed first), or
+/// a schema-less `--stats-json` dump. Anything else errors naming the
+/// schema that was actually detected.
+pub(crate) fn load_artifact(artifact: &str) -> Result<LoadedArtifact> {
     let streamed = artifact.starts_with(&format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}"));
     let buffered;
     let text = if streamed {
@@ -270,11 +352,29 @@ pub(crate) fn load_metrics_artifact(artifact: &str) -> Result<(Json, bool)> {
         artifact
     };
     let root = parse_json(text).context("artifact is not valid JSON")?;
-    let schema = root.get("schema").and_then(Json::as_str).unwrap_or("<missing>");
-    if schema != "wienna-metrics-v1" {
-        bail!("unsupported artifact schema '{schema}' (expected wienna-metrics-v1, or a wienna-metrics-stream-v1 stream)");
+    match root.get("schema").and_then(Json::as_str) {
+        Some("wienna-metrics-v1") => Ok(LoadedArtifact::Metrics { root, streamed }),
+        Some(schema) => bail!(
+            "unsupported artifact schema '{schema}' (expected wienna-metrics-v1, a wienna-metrics-stream-v1 stream, or a wienna --stats-json dump)"
+        ),
+        None if is_stats_dump(&root) => Ok(LoadedArtifact::Stats { root }),
+        None => bail!(
+            "unsupported artifact schema '<missing>' (expected wienna-metrics-v1, a wienna-metrics-stream-v1 stream, or a wienna --stats-json dump)"
+        ),
     }
-    Ok((root, streamed))
+}
+
+/// [`load_artifact`] restricted to metrics artifacts — the report
+/// renderer's loader. Returns `(root, streamed)`; a stats dump errors
+/// with the detected schema spelled out (only `report --diff` compares
+/// stats dumps, the renderer's sections need telemetry).
+pub(crate) fn load_metrics_artifact(artifact: &str) -> Result<(Json, bool)> {
+    match load_artifact(artifact)? {
+        LoadedArtifact::Metrics { root, streamed } => Ok((root, streamed)),
+        LoadedArtifact::Stats { .. } => bail!(
+            "unsupported artifact schema: detected a wienna --stats-json cluster-stats dump; `wienna report` renders wienna-metrics-v1 artifacts (use `report --diff`, which accepts stats dumps)"
+        ),
+    }
 }
 
 /// Render the full report from artifact text (buffered JSON or JSONL
@@ -298,13 +398,30 @@ pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<
         out.push_str("verdict: no traffic recorded (0 completed requests, 0 epoch samples)\n\n");
     }
 
-    // Percentile table, re-estimated from the exported buckets.
+    // Percentile table, re-estimated from the exported buckets. Tracks
+    // with an ε-bounded quantile sketch in the artifact (bounded-stats
+    // runs) are answered from the sketch at stats-line resolution and
+    // marked; the rest fall back to the power-of-two histogram buckets.
+    let sketches = sketch_tracks(&root)?;
+    let mut sketch_eps: Option<f64> = None;
     let mut t = Table::new(
         "latency / queue-wait / batch percentiles (histogram-estimated)",
         &["track", "count", "p50", "p95", "p99", "mean"],
     );
     for hj in root.get("histograms").and_then(Json::as_arr).unwrap_or(&[]) {
         let (name, h) = histogram_from(hj)?;
+        if let Some(sk) = sketches.iter().find(|s| s.name == name && s.count > 0) {
+            sketch_eps = Some(sk.eps());
+            t.row(vec![
+                format!("{name} (sketch)"),
+                sk.count.to_string(),
+                cell(Some(sk.quantile(50.0))),
+                cell(Some(sk.quantile(95.0))),
+                cell(Some(sk.quantile(99.0))),
+                cell(Some(sk.mean())),
+            ]);
+            continue;
+        }
         if h.count == 0 {
             continue;
         }
@@ -321,7 +438,13 @@ pub fn render_report(artifact: &str, trace: Option<&str>, top: usize) -> Result<
         t.row(vec!["(no samples)".into(), "0".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
     }
     out.push_str(&t.render());
-    out.push_str("(estimates are within one power-of-two bucket of the exact rank: est/exact in (1/2, 2])\n\n");
+    out.push_str("(estimates are within one power-of-two bucket of the exact rank: est/exact in (1/2, 2])\n");
+    if let Some(eps) = sketch_eps {
+        out.push_str(&format!(
+            "(tracks marked (sketch) use the run's ε-bounded quantile sketch: relative error <= {eps})\n"
+        ));
+    }
+    out.push('\n');
 
     // Phase-attribution bottleneck verdict.
     let mut best: Option<(&str, f64)> = None;
@@ -620,5 +743,53 @@ mod tests {
                      {\"name\":\"b\",\"ph\":\"C\",\"pid\":0,\"tid\":0,\"ts\":0}\n]}\n";
         let s = render_report(&sample_artifact(), Some(trace), 8).expect("with trace");
         assert!(s.contains("trace: 2 events | 1 request slices, 0 instants, 1 counter samples"));
+    }
+
+    #[test]
+    fn report_prefers_sketch_tracks_over_histogram_buckets() {
+        // A bounded-stats artifact: the latency_ms histogram rides along
+        // as usual, but the ε-bounded sketch (recorded in cycles) must
+        // win the percentile table at stats-line resolution.
+        let mut t = crate::telemetry::Telemetry::default();
+        let mut sk = crate::telemetry::QuantileSketch::new(0.01);
+        for v in [1.0, 2.0, 4.0, 8.0, 100.0] {
+            t.metrics.latency_ms.record(v);
+            sk.record(crate::serve::ms_to_cycles(v));
+        }
+        let mut attr = crate::telemetry::PhaseTotals::default();
+        attr.requests = 5;
+        attr.compute = 100.0;
+        let sketches = vec![("latency_ms".to_string(), &sk)];
+        let artifact = crate::telemetry::metrics_json_with(&t, &attr, None, None, &sketches);
+        assert!(artifact.contains("\"sketches\": ["), "sketch block exported:\n{artifact}");
+
+        let s = render_report(&artifact, None, 8).expect("bounded artifact");
+        assert!(s.contains("latency_ms (sketch)"), "sketch track preferred:\n{s}");
+        assert!(s.contains("ε-bounded quantile sketch"), "resolution footnote:\n{s}");
+
+        // The rebuilt sketch answers the same quantiles (in ms) the live
+        // one does — the export must be lossless.
+        let (root, _) = load_metrics_artifact(&artifact).expect("loads");
+        let tracks = sketch_tracks(&root).expect("parses");
+        assert_eq!(tracks.len(), 1);
+        for p in [50.0, 95.0, 99.0] {
+            let want = crate::serve::cycles_to_ms(sk.quantile(p));
+            let got = tracks[0].quantile(p);
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "p{p}: rebuilt {got} vs live {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn report_names_a_stats_dump_when_handed_one() {
+        let stats = crate::cluster::ClusterStats::default().to_json();
+        let err = render_report(&stats, None, 8).unwrap_err().to_string();
+        assert!(err.contains("stats-json"), "error names the detected schema: {err}");
+        assert!(err.contains("report --diff"), "error points at the gate that accepts it: {err}");
+
+        let err = render_report("{\"arrived\": 1}\n", None, 8).unwrap_err().to_string();
+        assert!(err.contains("'<missing>'"), "schema-less non-stats object: {err}");
     }
 }

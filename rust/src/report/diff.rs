@@ -1,9 +1,12 @@
 //! `wienna report --diff A B` — the regression gate: compare two
-//! metrics artifacts (buffered `wienna-metrics-v1` JSON or
-//! `wienna-metrics-stream-v1` JSONL, mixed freely) and exit nonzero
-//! when the second one regressed past tolerance. CI points it at a
-//! known-good baseline artifact and the candidate run's artifact; a
-//! clean exit means "no regression within tolerance".
+//! artifacts (buffered `wienna-metrics-v1` JSON,
+//! `wienna-metrics-stream-v1` JSONL, or a schema-less `wienna cluster
+//! --stats-json` dump, mixed freely) and exit nonzero when the second
+//! one regressed past tolerance. CI points it at a known-good baseline
+//! artifact and the candidate run's artifact; a clean exit means "no
+//! regression within tolerance". Stats dumps gate on the dimensions
+//! they carry (goodput, percentiles, phase fractions, SLO totals);
+//! the event timeline and occupancy gauges compare as absent.
 //!
 //! Gated dimensions, each with its own knob:
 //!
@@ -28,10 +31,12 @@
 use std::collections::BTreeMap;
 
 use crate::anyhow::{bail, Context, Result};
-use crate::report::artifact::{histogram_from, load_metrics_artifact, Json};
+use crate::report::artifact::{
+    histogram_from, load_artifact, sketch_tracks, Json, LoadedArtifact,
+};
 use crate::report::table::fmt;
 use crate::report::Table;
-use crate::telemetry::{LogHistogram, PHASES};
+use crate::telemetry::PHASES;
 
 /// Default relative tolerance on percentile / goodput deltas (10%).
 pub const DEFAULT_TOLERANCE: f64 = 0.1;
@@ -40,10 +45,25 @@ pub const DEFAULT_PHASE_TOLERANCE: f64 = 0.05;
 /// Default absolute tolerance on per-package MAC-occupancy shifts.
 pub const DEFAULT_OCCUPANCY_TOLERANCE: f64 = 0.10;
 
+/// One percentile track, already reduced to the three gated stats —
+/// the common denominator of every artifact kind the gate accepts
+/// (sketch-resolution when the artifact carries a sketch, histogram
+/// buckets otherwise, exact stats-line values from a `--stats-json`
+/// dump). A `NaN` entry means the artifact doesn't carry that stat for
+/// this track; the comparison skips it.
+struct Track {
+    name: String,
+    count: u64,
+    /// p50, p95, p99 — display units (ms for the latency tracks).
+    p: [f64; 3],
+}
+
+const TRACK_STATS: [(&str, f64); 3] = [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)];
+
 /// Everything the gate compares, pulled out of one parsed artifact.
 struct Facts {
     requests: f64,
-    hists: Vec<(String, LogHistogram)>,
+    tracks: Vec<Track>,
     /// Phase fractions in [`PHASES`] order (`None` when exported null).
     fracs: Vec<Option<f64>>,
     slo_raised: u64,
@@ -56,10 +76,33 @@ struct Facts {
 }
 
 fn facts(artifact: &str) -> Result<Facts> {
-    let (root, _) = load_metrics_artifact(artifact)?;
-    let mut hists = Vec::new();
+    match load_artifact(artifact)? {
+        LoadedArtifact::Metrics { root, .. } => metrics_facts(&root),
+        LoadedArtifact::Stats { root } => Ok(stats_facts(&root)),
+    }
+}
+
+fn metrics_facts(root: &Json) -> Result<Facts> {
+    // Prefer the ε-bounded sketch for a track when the artifact carries
+    // one (bounded-stats runs) — same resolution the stats line had —
+    // and fall back to the power-of-two histogram estimate otherwise.
+    let sketches = sketch_tracks(root)?;
+    let mut tracks = Vec::new();
     for hj in root.get("histograms").and_then(Json::as_arr).unwrap_or(&[]) {
-        hists.push(histogram_from(hj)?);
+        let (name, h) = histogram_from(hj)?;
+        if let Some(sk) = sketches.iter().find(|s| s.name == name && s.count > 0) {
+            tracks.push(Track {
+                name,
+                count: sk.count,
+                p: TRACK_STATS.map(|(_, p)| sk.quantile(p)),
+            });
+        } else {
+            tracks.push(Track {
+                name,
+                count: h.count,
+                p: TRACK_STATS.map(|(_, p)| h.quantile(p)),
+            });
+        }
     }
     let fracs = PHASES.iter().map(|n| root.num(&format!("{n}_frac"))).collect();
     let (slo_raised, slo_cleared, slo_raises_by_key) = match root.get("slo") {
@@ -94,7 +137,7 @@ fn facts(artifact: &str) -> Result<Facts> {
         .unwrap_or_default();
     Ok(Facts {
         requests: root.num("requests").unwrap_or(0.0),
-        hists,
+        tracks,
         fracs,
         slo_raised,
         slo_cleared,
@@ -102,6 +145,50 @@ fn facts(artifact: &str) -> Result<Facts> {
         occupancy,
         dist_alarm: root.get("dist_alarm") == Some(&Json::Bool(true)),
     })
+}
+
+/// Facts from a `wienna cluster --stats-json` dump: the latency
+/// percentiles are the run's exact (or ε-bounded) stats-line values,
+/// the fleet track is named `latency_ms` and the per-class tracks
+/// `latency_ms_<class>` so they line up with the metrics artifact's
+/// histogram/sketch track names when the two kinds are diffed against
+/// each other. The dump has no event timeline or occupancy gauges, so
+/// those dimensions compare as absent.
+fn stats_facts(root: &Json) -> Facts {
+    let completed = root.num("completed").unwrap_or(0.0);
+    let mut tracks = vec![Track {
+        name: "latency_ms".to_string(),
+        count: completed as u64,
+        p: [
+            root.num("p50_ms").unwrap_or(f64::NAN),
+            root.num("p95_ms").unwrap_or(f64::NAN),
+            root.num("p99_ms").unwrap_or(f64::NAN),
+        ],
+    }];
+    for c in root.get("per_class").and_then(Json::as_arr).unwrap_or(&[]) {
+        let Some(label) = c.get("class").and_then(Json::as_str) else { continue };
+        tracks.push(Track {
+            name: format!("latency_ms_{}", label.replace('-', "_")),
+            count: c.num("completed").unwrap_or(0.0) as u64,
+            p: [
+                c.num("p50_ms").unwrap_or(f64::NAN),
+                f64::NAN, // per-class p95 is not in the stats schema
+                c.num("p99_ms").unwrap_or(f64::NAN),
+            ],
+        });
+    }
+    let raised = root.num("slo_alerts_raised").unwrap_or(0.0) as u64;
+    let active = root.num("slo_alerts_active").unwrap_or(0.0) as u64;
+    Facts {
+        requests: completed,
+        tracks,
+        fracs: PHASES.iter().map(|n| root.num(&format!("{n}_frac"))).collect(),
+        slo_raised: raised,
+        slo_cleared: raised.saturating_sub(active),
+        slo_raises_by_key: BTreeMap::new(),
+        occupancy: Vec::new(),
+        dist_alarm: false,
+    }
 }
 
 fn pct(rel: f64) -> String {
@@ -154,19 +241,22 @@ pub fn diff_artifacts(
         }
     }
 
-    // Percentile deltas per shared track, one-sided on rises.
+    // Percentile deltas per shared track, one-sided on rises. Tracks
+    // carry sketch-resolution values when the artifact exported a
+    // sketch, histogram estimates otherwise, and exact stats-line
+    // values for --stats-json dumps — the comparison is agnostic.
     let mut t = Table::new(
-        "percentile deltas (B vs A, histogram-estimated)",
+        "percentile deltas (B vs A)",
         &["track", "stat", "A", "B", "delta", "flag"],
     );
-    for (name, ha) in &fa.hists {
-        let Some((_, hb)) = fb.hists.iter().find(|(n, _)| n == name) else { continue };
-        if ha.count == 0 || hb.count == 0 {
+    for ta in &fa.tracks {
+        let Some(tb) = fb.tracks.iter().find(|t| t.name == ta.name) else { continue };
+        if ta.count == 0 || tb.count == 0 {
             continue;
         }
-        for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
-            let va = ha.quantile(p);
-            let vb = hb.quantile(p);
+        for (i, (label, _)) in TRACK_STATS.iter().enumerate() {
+            let va = ta.p[i];
+            let vb = tb.p[i];
             if !(va.is_finite() && vb.is_finite() && va > 0.0) {
                 continue;
             }
@@ -174,13 +264,14 @@ pub fn diff_artifacts(
             let flagged = rel > tol;
             if flagged {
                 violations.push(format!(
-                    "{name} {label} rose {} (tolerance {:.1}%)",
+                    "{} {label} rose {} (tolerance {:.1}%)",
+                    ta.name,
                     pct(rel),
                     tol * 100.0
                 ));
             }
             t.row(vec![
-                name.clone(),
+                ta.name.clone(),
                 label.to_string(),
                 fmt(va),
                 fmt(vb),
@@ -449,6 +540,68 @@ mod tests {
         let (report, violations) = diff_artifacts(&dead, &dead, 0.1, 0.05, 0.1).expect("valid");
         assert_eq!(violations, 0);
         assert!(report.contains("no traffic in either artifact"));
+    }
+
+    #[test]
+    fn stats_json_dumps_diff_against_each_other_and_against_metrics() {
+        // Two hand-built stats dumps: B's p99 is 4x A's. The gate must
+        // accept the schema-less stats format and flag the rise.
+        let dump = |p50: f64, p99: f64| {
+            let mut s = crate::cluster::ClusterStats::default().to_json();
+            s = s.replace("\"completed\": 0", "\"completed\": 100");
+            s = s.replace("\"p50_ms\": 0", &format!("\"p50_ms\": {p50}"));
+            s = s.replace("\"p95_ms\": 0", &format!("\"p95_ms\": {}", p99 * 0.8));
+            s.replace("\"p99_ms\": 0", &format!("\"p99_ms\": {p99}"))
+        };
+        let a = dump(1.0, 2.0);
+        let b = dump(1.0, 8.0);
+        let (report, violations) = diff_artifacts(&a, &b, 0.1, 0.05, 0.1).expect("stats accepted");
+        assert!(violations > 0, "4x p99 rise must gate:\n{report}");
+        assert!(report.contains("latency_ms p99 rose"), "named violation:\n{report}");
+        let (_, clean) = diff_artifacts(&a, &a, 0.1, 0.05, 0.1).expect("valid");
+        assert_eq!(clean, 0, "identical dumps gate clean");
+
+        // Mixed kinds: a metrics artifact vs a stats dump share the
+        // latency_ms track, so the comparison still lands.
+        let m = artifact(&[1.0, 1.0, 2.0, 2.0], 20.0, 80.0, &[0.5], 0);
+        let (report, _) = diff_artifacts(&m, &b, 10.0, 10.0, 10.0).expect("mixed kinds accepted");
+        assert!(report.contains("latency_ms"), "shared track compared:\n{report}");
+    }
+
+    #[test]
+    fn unknown_schemas_still_error_with_the_detected_name() {
+        let err =
+            diff_artifacts("{\"schema\": \"what\"}\n", "{\"schema\": \"what\"}\n", 0.1, 0.05, 0.1)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("artifact A"), "which side failed: {err}");
+    }
+
+    #[test]
+    fn sketch_tracks_sharpen_the_percentile_gate() {
+        // Same distribution in both sketches -> identical quantiles,
+        // zero delta, clean gate even at a 1% tolerance (histogram
+        // estimates could wobble a whole power-of-two bucket).
+        let bounded = |vals: &[f64]| {
+            let mut t = Telemetry::default();
+            let mut sk = crate::telemetry::QuantileSketch::new(0.01);
+            for &v in vals {
+                t.metrics.latency_ms.record(v);
+                sk.record(crate::serve::ms_to_cycles(v));
+            }
+            let mut attr = PhaseTotals::default();
+            attr.requests = vals.len() as u64;
+            attr.compute = 100.0;
+            let sketches = vec![("latency_ms".to_string(), &sk)];
+            crate::telemetry::metrics_json_with(&t, &attr, None, None, &sketches)
+        };
+        let a = bounded(&[1.0, 2.0, 4.0, 8.0]);
+        let (report, violations) = diff_artifacts(&a, &a, 0.01, 0.05, 0.1).expect("valid");
+        assert_eq!(violations, 0, "identical sketches gate clean at 1%:\n{report}");
+
+        let b = bounded(&[4.0, 8.0, 16.0, 32.0]);
+        let (report, violations) = diff_artifacts(&a, &b, 0.1, 0.05, 0.1).expect("valid");
+        assert!(violations > 0, "4x shift through the sketch path:\n{report}");
     }
 
     #[test]

@@ -20,10 +20,18 @@
 //! between frames only when stdout is a terminal (`--no-clear` forces
 //! append mode).
 //!
+//! A TCP dashboard is **long-lived**: when a stream finishes (summary
+//! line or disconnect), the listener goes back to accepting, with the
+//! dashboard state reset for the new run — so one `wienna watch` pane
+//! survives back-to-back simulations. `--once` restores the original
+//! serve-one-connection-then-exit behavior for scripting.
+//!
 //! `--raw` echoes the received lines verbatim to stdout instead of
 //! rendering — the capture half of CI's loopback smoke test, which
 //! asserts the bytes that crossed the socket are identical to the
-//! stream file the same configuration writes.
+//! stream file the same configuration writes. A raw capture is a
+//! one-shot byte-for-byte artifact, so `--raw` implies `--once`
+//! (appending a second run's bytes would corrupt the capture).
 
 use std::collections::BTreeSet;
 use std::io::{BufRead, BufReader, IsTerminal, Write};
@@ -175,72 +183,22 @@ fn render_dashboard(state: &DashState, top: usize) -> String {
     out
 }
 
-/// CLI entry: `wienna watch <tcp://HOST:PORT | FILE.jsonl | ->
-/// [--top N] [--raw] [--no-clear]`.
-pub fn run(args: &[String]) -> Result<()> {
-    let mut source: Option<&String> = None;
-    let mut top = DEFAULT_TOP;
-    let mut raw = false;
-    let mut no_clear = false;
-    let mut i = 0;
-    while i < args.len() {
-        match args[i].as_str() {
-            "--top" => {
-                let v = args.get(i + 1).context("--top needs a number")?;
-                top = v
-                    .parse()
-                    .map_err(|_| crate::anyhow::Error::msg(format!("--top: bad number '{v}'")))?;
-                i += 2;
-            }
-            "--raw" => {
-                raw = true;
-                i += 1;
-            }
-            "--no-clear" => {
-                no_clear = true;
-                i += 1;
-            }
-            other if other.starts_with("--") => {
-                bail!("unknown watch flag '{other}' (expected --top N, --raw or --no-clear)")
-            }
-            _ if source.is_none() => {
-                source = Some(&args[i]);
-                i += 1;
-            }
-            other => bail!("watch takes one source, got a second: '{other}'"),
-        }
+/// Echo one stream's lines verbatim to stdout (the `--raw` capture).
+fn capture_raw(reader: Box<dyn BufRead>) -> Result<()> {
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in reader.lines() {
+        let line = line.context("reading stream")?;
+        writeln!(out, "{line}").context("writing captured line")?;
     }
-    let source =
-        source.context("watch needs a source: tcp://HOST:PORT, a .jsonl file, or '-'")?;
+    out.flush().context("flushing capture")
+}
 
-    // Status chatter goes to stderr so `--raw` stdout stays a clean
-    // byte-for-byte capture of the stream.
-    let reader: Box<dyn BufRead> = if let Some(addr) = source.strip_prefix("tcp://") {
-        let listener = std::net::TcpListener::bind(addr)
-            .with_context(|| format!("binding watch listener on {addr}"))?;
-        eprintln!("watch: listening on {addr} — start the run with --metrics-out {source}");
-        let (conn, peer) = listener.accept().context("accepting the stream connection")?;
-        eprintln!("watch: stream connected from {peer}");
-        Box::new(BufReader::new(conn))
-    } else if source == "-" {
-        Box::new(BufReader::new(std::io::stdin()))
-    } else {
-        Box::new(BufReader::new(
-            std::fs::File::open(source).with_context(|| format!("opening {source}"))?,
-        ))
-    };
-
-    if raw {
-        let stdout = std::io::stdout();
-        let mut out = stdout.lock();
-        for line in reader.lines() {
-            let line = line.context("reading stream")?;
-            writeln!(out, "{line}").context("writing captured line")?;
-        }
-        out.flush().context("flushing capture")?;
-        return Ok(());
-    }
-
+/// Render one stream's dashboard to completion: header check, then a
+/// redraw per line until the summary (or EOF on a truncated stream).
+/// State is local, so every stream — in particular every reconnect of a
+/// long-lived TCP dashboard — starts from a blank slate.
+fn serve_dashboard(reader: Box<dyn BufRead>, top: usize, no_clear: bool) -> Result<()> {
     let mut lines = reader.lines();
     let header = lines.next().context("empty stream")?.context("reading stream header")?;
     if header != format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}") {
@@ -282,6 +240,89 @@ pub fn run(args: &[String]) -> Result<()> {
     // stream. The frames already rendered are still the live view.
     eprintln!("watch: stream ended without a summary line (truncated stream)");
     Ok(())
+}
+
+/// CLI entry: `wienna watch <tcp://HOST:PORT | FILE.jsonl | ->
+/// [--top N] [--raw] [--no-clear] [--once]`.
+pub fn run(args: &[String]) -> Result<()> {
+    let mut source: Option<&String> = None;
+    let mut top = DEFAULT_TOP;
+    let mut raw = false;
+    let mut no_clear = false;
+    let mut once = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--top" => {
+                let v = args.get(i + 1).context("--top needs a number")?;
+                top = v
+                    .parse()
+                    .map_err(|_| crate::anyhow::Error::msg(format!("--top: bad number '{v}'")))?;
+                i += 2;
+            }
+            "--raw" => {
+                raw = true;
+                i += 1;
+            }
+            "--no-clear" => {
+                no_clear = true;
+                i += 1;
+            }
+            "--once" => {
+                once = true;
+                i += 1;
+            }
+            other if other.starts_with("--") => {
+                bail!(
+                    "unknown watch flag '{other}' (expected --top N, --raw, --no-clear or --once)"
+                )
+            }
+            _ if source.is_none() => {
+                source = Some(&args[i]);
+                i += 1;
+            }
+            other => bail!("watch takes one source, got a second: '{other}'"),
+        }
+    }
+    let source =
+        source.context("watch needs a source: tcp://HOST:PORT, a .jsonl file, or '-'")?;
+
+    // Status chatter goes to stderr so `--raw` stdout stays a clean
+    // byte-for-byte capture of the stream.
+    if let Some(addr) = source.strip_prefix("tcp://") {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding watch listener on {addr}"))?;
+        eprintln!("watch: listening on {addr} — start the run with --metrics-out {source}");
+        // A raw capture is a one-shot byte-for-byte artifact: appending a
+        // second run's bytes (header line included) would corrupt it.
+        let once = once || raw;
+        loop {
+            let (conn, peer) = listener.accept().context("accepting the stream connection")?;
+            eprintln!("watch: stream connected from {peer}");
+            let reader: Box<dyn BufRead> = Box::new(BufReader::new(conn));
+            if raw {
+                capture_raw(reader)?;
+            } else {
+                serve_dashboard(reader, top, no_clear)?;
+            }
+            if once {
+                return Ok(());
+            }
+            eprintln!("watch: run finished — listening on {addr} for the next one");
+        }
+    }
+    let reader: Box<dyn BufRead> = if source == "-" {
+        Box::new(BufReader::new(std::io::stdin()))
+    } else {
+        Box::new(BufReader::new(
+            std::fs::File::open(source).with_context(|| format!("opening {source}"))?,
+        ))
+    };
+    if raw {
+        capture_raw(reader)
+    } else {
+        serve_dashboard(reader, top, no_clear)
+    }
 }
 
 #[cfg(test)]
@@ -381,5 +422,38 @@ mod tests {
         assert!(frame.contains("phase fractions: queue 0.200"), "frame:\n{frame}");
         assert!(frame.contains("stream complete"));
         assert!(!frame.contains("(pending summary)"));
+    }
+
+    #[test]
+    fn tcp_listener_accepts_back_to_back_runs() {
+        // Regression: `wienna watch tcp://...` used to serve exactly one
+        // connection and exit. Without `--once` the listener must go
+        // back to accepting after a stream finishes, so a long-lived
+        // dashboard survives consecutive simulations.
+        use std::io::Write as _;
+        let port = 17_941u16;
+        let args: Vec<String> = vec![format!("tcp://127.0.0.1:{port}"), "--no-clear".into()];
+        std::thread::spawn(move || {
+            let _ = run(&args);
+        });
+        let header = format!("{{\"schema\": \"{METRICS_STREAM_SCHEMA}\"}}");
+        for attempt_run in 0..2 {
+            let mut conn = None;
+            for _ in 0..100 {
+                match std::net::TcpStream::connect(("127.0.0.1", port)) {
+                    Ok(c) => {
+                        conn = Some(c);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+                }
+            }
+            let mut conn = conn.unwrap_or_else(|| {
+                panic!("run {attempt_run}: the watch listener stopped accepting")
+            });
+            // A header-only stream: the dashboard treats EOF as a
+            // truncated run and goes back to listening.
+            writeln!(conn, "{header}").expect("writing stream header");
+        }
     }
 }

@@ -4,14 +4,93 @@
 //! (batches must be homogeneous in model), and the dispatcher picks the
 //! model whose head-of-line request has the earliest deadline (EDF across
 //! queues, FIFO within a queue).
+//!
+//! Storage is struct-of-arrays: one [`Lane`] per model keeps the request
+//! fields in parallel `VecDeque`s (the model kind is implied by the
+//! lane), so the dispatcher's hot probes — `edf_kind` reading only head
+//! deadlines and ids, `depth_total` reading a maintained counter — touch
+//! exactly the bytes they need instead of walking whole `Request`
+//! structs. `Request` values are materialized only at the API boundary
+//! (`pop_batch`, `pop_newest`), which the callers consume by move.
 
 use super::request::{ModelKind, Request};
 use std::collections::VecDeque;
 
+/// One model's FIFO lane, struct-of-arrays: index *i* across the four
+/// deques is one queued request. The model kind lives on the owning
+/// `(ModelKind, Lane)` pair, not per element.
+#[derive(Debug, Default)]
+struct Lane {
+    ids: VecDeque<u64>,
+    arrivals: VecDeque<f64>,
+    deadlines: VecDeque<f64>,
+    clients: VecDeque<Option<usize>>,
+}
+
+impl Lane {
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    fn push_back(&mut self, req: Request) {
+        self.ids.push_back(req.id);
+        self.arrivals.push_back(req.arrival);
+        self.deadlines.push_back(req.deadline);
+        self.clients.push_back(req.client);
+    }
+
+    fn push_front(&mut self, req: Request) {
+        self.ids.push_front(req.id);
+        self.arrivals.push_front(req.arrival);
+        self.deadlines.push_front(req.deadline);
+        self.clients.push_front(req.client);
+    }
+
+    fn pop_front(&mut self, kind: ModelKind) -> Option<Request> {
+        Some(Request {
+            id: self.ids.pop_front()?,
+            kind,
+            arrival: self.arrivals.pop_front().expect("lanes stay parallel"),
+            deadline: self.deadlines.pop_front().expect("lanes stay parallel"),
+            client: self.clients.pop_front().expect("lanes stay parallel"),
+        })
+    }
+
+    fn pop_back(&mut self, kind: ModelKind) -> Option<Request> {
+        Some(Request {
+            id: self.ids.pop_back()?,
+            kind,
+            arrival: self.arrivals.pop_back().expect("lanes stay parallel"),
+            deadline: self.deadlines.pop_back().expect("lanes stay parallel"),
+            client: self.clients.pop_back().expect("lanes stay parallel"),
+        })
+    }
+
+    /// The back element materialized (for the steal pass's peek).
+    fn back(&self, kind: ModelKind) -> Option<Request> {
+        let i = self.len().checked_sub(1)?;
+        Some(Request {
+            id: self.ids[i],
+            kind,
+            arrival: self.arrivals[i],
+            deadline: self.deadlines[i],
+            client: self.clients[i],
+        })
+    }
+}
+
 /// A set of per-model FIFO queues.
 #[derive(Debug, Default)]
 pub struct QueueSet {
-    queues: Vec<(ModelKind, VecDeque<Request>)>,
+    lanes: Vec<(ModelKind, Lane)>,
+    /// Total queued across lanes, maintained on every mutation so
+    /// `depth_total` — probed by the dispatcher, the steal pass, and the
+    /// epoch sampler — is O(1).
+    depth: usize,
     /// Requests ever admitted to this queue set.
     pub arrived: u64,
     /// Largest total depth observed.
@@ -23,37 +102,37 @@ impl QueueSet {
         QueueSet::default()
     }
 
-    fn queue_mut(&mut self, kind: ModelKind) -> &mut VecDeque<Request> {
-        if let Some(pos) = self.queues.iter().position(|(k, _)| *k == kind) {
-            &mut self.queues[pos].1
+    fn lane_mut(&mut self, kind: ModelKind) -> &mut Lane {
+        if let Some(pos) = self.lanes.iter().position(|(k, _)| *k == kind) {
+            &mut self.lanes[pos].1
         } else {
-            self.queues.push((kind, VecDeque::new()));
-            &mut self.queues.last_mut().unwrap().1
+            self.lanes.push((kind, Lane::default()));
+            &mut self.lanes.last_mut().unwrap().1
         }
     }
 
     /// Admit one request (FIFO within its model queue).
     pub fn push(&mut self, req: Request) {
         self.arrived += 1;
-        self.queue_mut(req.kind).push_back(req);
-        let depth = self.depth_total();
-        if depth > self.peak_depth {
-            self.peak_depth = depth;
+        self.lane_mut(req.kind).push_back(req);
+        self.depth += 1;
+        if self.depth > self.peak_depth {
+            self.peak_depth = self.depth;
         }
     }
 
     /// Queued requests for one model.
     pub fn depth(&self, kind: ModelKind) -> usize {
-        self.queues.iter().find(|(k, _)| *k == kind).map_or(0, |(_, q)| q.len())
+        self.lanes.iter().find(|(k, _)| *k == kind).map_or(0, |(_, q)| q.len())
     }
 
     /// Queued requests across all models.
     pub fn depth_total(&self) -> usize {
-        self.queues.iter().map(|(_, q)| q.len()).sum()
+        self.depth
     }
 
     pub fn is_empty(&self) -> bool {
-        self.depth_total() == 0
+        self.depth == 0
     }
 
     /// The model whose head-of-line request has the earliest deadline.
@@ -65,41 +144,45 @@ impl QueueSet {
     /// otherwise dispatch in different orders (the cluster determinism
     /// guarantee forbids that).
     pub fn edf_kind(&self) -> Option<ModelKind> {
-        self.queues
+        self.lanes
             .iter()
             .filter(|(_, q)| !q.is_empty())
             .min_by(|a, b| {
-                let (ra, rb) = (&a.1[0], &b.1[0]);
-                ra.deadline
-                    .partial_cmp(&rb.deadline)
+                a.1.deadlines[0]
+                    .partial_cmp(&b.1.deadlines[0])
                     .expect("deadlines are never NaN")
-                    .then(ra.id.cmp(&rb.id))
+                    .then(a.1.ids[0].cmp(&b.1.ids[0]))
             })
             .map(|(k, _)| *k)
     }
 
     /// Deadline of the head-of-line request for `kind`.
     pub fn head_deadline(&self, kind: ModelKind) -> Option<f64> {
-        self.queues
+        self.lanes
             .iter()
             .find(|(k, _)| *k == kind)
-            .and_then(|(_, q)| q.front())
-            .map(|r| r.deadline)
+            .and_then(|(_, q)| q.deadlines.front())
+            .copied()
     }
 
     /// Pop up to `n` requests of `kind` in FIFO order.
     pub fn pop_batch(&mut self, kind: ModelKind, n: usize) -> Vec<Request> {
-        let q = self.queue_mut(kind);
-        let take = n.min(q.len());
-        q.drain(..take).collect()
+        let lane = self.lane_mut(kind);
+        let take = n.min(lane.len());
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            out.push(lane.pop_front(kind).expect("take clamped to lane length"));
+        }
+        self.depth -= take;
+        out
     }
 
     /// The most recently admitted queued request (largest arrival seq
     /// across all model queues) — what [`QueueSet::pop_newest`] would
     /// remove. The cluster's steal pass peeks here to price a candidate
     /// move before committing it; the two must select identically.
-    pub fn peek_newest(&self) -> Option<&Request> {
-        self.queues.iter().filter_map(|(_, q)| q.back()).max_by_key(|r| r.id)
+    pub fn peek_newest(&self) -> Option<Request> {
+        self.lanes.iter().filter_map(|(k, q)| q.back(*k)).max_by_key(|r| r.id)
     }
 
     /// Remove and return the most recently admitted request (largest
@@ -108,13 +191,18 @@ impl QueueSet {
     /// transfer unit of the cluster's epoch-barrier work stealing.
     pub fn pop_newest(&mut self) -> Option<Request> {
         let pos = self
-            .queues
+            .lanes
             .iter()
             .enumerate()
             .filter(|(_, (_, q))| !q.is_empty())
-            .max_by_key(|(_, (_, q))| q.back().map_or(0, |r| r.id))
+            .max_by_key(|(_, (_, q))| q.ids.back().copied().unwrap_or(0))
             .map(|(i, _)| i)?;
-        self.queues[pos].1.pop_back()
+        let kind = self.lanes[pos].0;
+        let req = self.lanes[pos].1.pop_back(kind);
+        if req.is_some() {
+            self.depth -= 1;
+        }
+        req
     }
 
     /// Return preempted requests to the *front* of their model queues so
@@ -125,11 +213,11 @@ impl QueueSet {
         // Reverse so the earliest request of the preempted batch ends up
         // back at the very head of its queue.
         for req in reqs.into_iter().rev() {
-            self.queue_mut(req.kind).push_front(req);
+            self.lane_mut(req.kind).push_front(req);
+            self.depth += 1;
         }
-        let depth = self.depth_total();
-        if depth > self.peak_depth {
-            self.peak_depth = depth;
+        if self.depth > self.peak_depth {
+            self.peak_depth = self.depth;
         }
     }
 }

@@ -77,6 +77,14 @@ impl LatencyRecorder {
         self.samples.len()
     }
 
+    /// The backing sketch of a bounded recorder (`None` in exact mode) —
+    /// the artifact export serializes it so `wienna report` can answer
+    /// quantiles at sketch resolution instead of the coarser
+    /// power-of-two histogram buckets.
+    pub fn sketch(&self) -> Option<&QuantileSketch> {
+        self.sketch.as_deref()
+    }
+
     pub fn push(&mut self, v: f64) {
         if let Some(sk) = &mut self.sketch {
             sk.record(v);
@@ -305,6 +313,13 @@ impl ServeStats {
     /// Merge a shard-local per-model latency sketch (bounded mode only).
     pub fn absorb_model_latency_sketch(&mut self, kind: ModelKind, sk: &QuantileSketch) {
         self.model_entry(kind).latency.absorb_sketch(sk);
+    }
+
+    /// The aggregate latency sketch (`--bounded-stats` only; `None` in
+    /// exact mode) — exported into metrics artifacts at full sketch
+    /// resolution.
+    pub fn latency_sketch(&self) -> Option<&QuantileSketch> {
+        self.all.latency.sketch()
     }
 
     /// Record a request refused by admission control. The request still

@@ -48,8 +48,12 @@ use crate::serve::cycles_to_ms;
 
 use super::metrics::EpochSample;
 use super::profile::PhaseTotals;
+use super::sketch::QuantileSketch;
 use super::slo::{SloEvent, SloEventKind};
 use super::Telemetry;
+
+/// One named quantile sketch bound for the artifact's `sketches` block.
+pub type NamedSketch<'a> = (String, &'a QuantileSketch);
 
 fn num(v: f64) -> String {
     if v.is_finite() {
@@ -145,7 +149,22 @@ pub fn metrics_json(
     class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
     memo: Option<MemoStats>,
 ) -> String {
-    metrics_json_impl(t, attr, class_attr, memo, &t.metrics.epochs)
+    metrics_json_impl(t, attr, class_attr, memo, &[], &t.metrics.epochs)
+}
+
+/// [`metrics_json`] carrying quantile sketches: under `--bounded-stats`
+/// the cluster's ε-bounded latency sketches ride along in a `sketches`
+/// block at full sketch resolution, so `wienna report` can answer the
+/// same quantiles the stats line printed instead of degrading to the
+/// power-of-two histogram buckets.
+pub fn metrics_json_with(
+    t: &Telemetry,
+    attr: &PhaseTotals,
+    class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
+    memo: Option<MemoStats>,
+    sketches: &[NamedSketch<'_>],
+) -> String {
+    metrics_json_impl(t, attr, class_attr, memo, sketches, &t.metrics.epochs)
 }
 
 /// [`metrics_json`] with the `epochs` array left empty: the payload of
@@ -158,7 +177,51 @@ pub fn metrics_json_summary(
     class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
     memo: Option<MemoStats>,
 ) -> String {
-    metrics_json_impl(t, attr, class_attr, memo, &[])
+    metrics_json_impl(t, attr, class_attr, memo, &[], &[])
+}
+
+/// [`metrics_json_summary`] carrying quantile sketches (see
+/// [`metrics_json_with`]) — the bounded-mode stream summary, so the
+/// reconstructed artifact stays byte-identical to the buffered one.
+pub fn metrics_json_summary_with(
+    t: &Telemetry,
+    attr: &PhaseTotals,
+    class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
+    memo: Option<MemoStats>,
+    sketches: &[NamedSketch<'_>],
+) -> String {
+    metrics_json_impl(t, attr, class_attr, memo, sketches, &[])
+}
+
+/// One sketch as a single-line JSON object. Values were recorded in
+/// cycles; `scale` is the cycles→ms factor consumers multiply quantiles
+/// by, so the on-disk buckets stay integer-exact (`(key, count)` pairs
+/// straight out of [`QuantileSketch::buckets`]). The sentinel buckets
+/// travel as separate `zero`/`inf` counts — their `i64::MIN`/`MAX` keys
+/// are not exactly representable as JSON doubles.
+fn sketch_json(name: &str, sk: &QuantileSketch) -> String {
+    let mut s = format!(
+        "{{ \"name\": \"{name}\", \"sub_bits\": {}, \"eps\": {}, \"scale\": {}, \
+         \"count\": {}, \"sum\": {}, \"max\": {}, \"zero\": {}, \"inf\": {}, \"buckets\": [",
+        sk.sub_bits(),
+        num(sk.relative_error()),
+        num(cycles_to_ms(1.0)),
+        sk.count(),
+        num(sk.sum()),
+        num(sk.max()),
+        sk.zero_count(),
+        sk.inf_count(),
+    );
+    let finite: Vec<(i64, u64)> =
+        sk.buckets().filter(|&(k, _)| k != i64::MIN && k != i64::MAX).collect();
+    for (j, (k, c)) in finite.iter().enumerate() {
+        s.push_str(&format!("[{k}, {c}]"));
+        if j + 1 < finite.len() {
+            s.push_str(", ");
+        }
+    }
+    s.push_str("] }");
+    s
 }
 
 fn metrics_json_impl(
@@ -166,6 +229,7 @@ fn metrics_json_impl(
     attr: &PhaseTotals,
     class_attr: Option<&[PhaseTotals; NUM_CLASSES]>,
     memo: Option<MemoStats>,
+    sketches: &[NamedSketch<'_>],
     epochs: &[EpochSample],
 ) -> String {
     let mut s = String::from("{\n");
@@ -221,6 +285,16 @@ fn metrics_json_impl(
         }
         s.push_str("] }");
         if i + 1 < hists.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"sketches\": [\n");
+    for (i, (name, sk)) in sketches.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&sketch_json(name, sk));
+        if i + 1 < sketches.len() {
             s.push(',');
         }
         s.push('\n');

@@ -44,7 +44,8 @@ pub mod slo;
 pub mod span;
 
 pub use export::{
-    chrome_trace, metrics_json, metrics_json_summary, stream_to_metrics_v1, MetricsStreamWriter,
+    chrome_trace, metrics_json, metrics_json_summary, metrics_json_summary_with,
+    metrics_json_with, stream_to_metrics_v1, MetricsStreamWriter, NamedSketch,
     NonBlockingLineSink, METRICS_STREAM_SCHEMA,
 };
 pub use metrics::{EpochSample, LogHistogram, MetricsRegistry};

@@ -251,6 +251,62 @@ impl QuantileSketch {
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
+
+    /// The raw `(key, count)` buckets in ascending key order — sentinels
+    /// included. This is the sketch's exact serialized form: rebuilding
+    /// via [`QuantileSketch::from_parts`] from these pairs reproduces
+    /// every quantile bit for bit (the artifact export relies on that).
+    pub fn buckets(&self) -> impl Iterator<Item = (i64, u64)> + '_ {
+        self.buckets.iter().map(|(&k, &c)| (k, c))
+    }
+
+    /// Count of non-positive / NaN samples (the low sentinel bucket).
+    pub fn zero_count(&self) -> u64 {
+        self.buckets.get(&SENTINEL_LOW).copied().unwrap_or(0)
+    }
+
+    /// Count of +∞ samples (the high sentinel bucket).
+    pub fn inf_count(&self) -> u64 {
+        self.buckets.get(&SENTINEL_HIGH).copied().unwrap_or(0)
+    }
+
+    /// Rebuild a sketch from serialized parts: the resolution, the
+    /// finite `(key, count)` buckets, the sentinel counts, and the exact
+    /// `sum`/`max` moments. `count` is re-derived from the buckets, so a
+    /// round-trip through an artifact cannot desynchronize it. The
+    /// sentinel keys themselves (`i64::MIN`/`MAX`) never cross the
+    /// artifact boundary — they are not exactly representable as JSON
+    /// doubles — which is why they travel as separate counts.
+    pub fn from_parts(
+        sub_bits: u32,
+        finite_buckets: impl IntoIterator<Item = (i64, u64)>,
+        zero: u64,
+        inf: u64,
+        sum: f64,
+        max: f64,
+    ) -> Self {
+        let mut buckets: BTreeMap<i64, u64> = BTreeMap::new();
+        if zero > 0 {
+            buckets.insert(SENTINEL_LOW, zero);
+        }
+        if inf > 0 {
+            buckets.insert(SENTINEL_HIGH, inf);
+        }
+        for (k, c) in finite_buckets {
+            debug_assert!(k != SENTINEL_LOW && k != SENTINEL_HIGH, "sentinels travel separately");
+            *buckets.entry(k).or_insert(0) += c;
+        }
+        let count: u64 = buckets.values().sum();
+        QuantileSketch {
+            sub_bits: sub_bits.min(MAX_SUB_BITS),
+            buckets,
+            count,
+            sum,
+            max: if count == 0 { f64::NEG_INFINITY } else { max },
+            collapsed: 0,
+            max_buckets: DEFAULT_MAX_BUCKETS,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -407,6 +463,45 @@ mod tests {
         assert_eq!(sk.quantile(100.0), f64::INFINITY);
         let mid = sk.quantile(70.0);
         assert!((mid - 5.0).abs() / 5.0 <= sk.relative_error() + 1e-12);
+    }
+
+    #[test]
+    fn from_parts_round_trips_every_quantile_bit_for_bit() {
+        // The artifact export serializes (sub_bits, finite buckets,
+        // sentinel counts, sum, max); the report side rebuilds with
+        // `from_parts`. Quantiles on the rebuilt sketch must be
+        // bit-identical — that is what lets `wienna report` on a metrics
+        // artifact match the stats line exactly under --bounded-stats.
+        let mut sk = QuantileSketch::new(0.01);
+        for v in seeded_values(17, 1500) {
+            sk.record(v);
+        }
+        sk.record(0.0);
+        sk.record(f64::INFINITY);
+        let finite: Vec<(i64, u64)> = sk
+            .buckets()
+            .filter(|&(k, _)| k != SENTINEL_LOW && k != SENTINEL_HIGH)
+            .collect();
+        let rebuilt = QuantileSketch::from_parts(
+            sk.sub_bits(),
+            finite,
+            sk.zero_count(),
+            sk.inf_count(),
+            sk.sum(),
+            sk.max(),
+        );
+        assert_eq!(rebuilt.count(), sk.count());
+        assert_eq!(rebuilt.zero_count(), 1);
+        assert_eq!(rebuilt.inf_count(), 1);
+        for p in [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(
+                rebuilt.quantile(p).to_bits(),
+                sk.quantile(p).to_bits(),
+                "rebuilt quantile drifted at p{p}"
+            );
+        }
+        assert_eq!(rebuilt.max().to_bits(), sk.max().to_bits());
+        assert_eq!(rebuilt.mean().to_bits(), sk.mean().to_bits());
     }
 
     #[test]

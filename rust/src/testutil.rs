@@ -206,6 +206,9 @@ pub struct FuzzSummary {
     pub chaos_trials: usize,
     /// Requests served or shed across all trials (at the 1-thread count).
     pub requests: u64,
+    /// Trials replayed on the legacy scan engine and diffed byte-for-byte
+    /// against the calendar engine's output (every trial).
+    pub oracle_trials: usize,
 }
 
 /// Determinism fuzz harness for the sharded cluster engine: generate
@@ -220,6 +223,9 @@ pub struct FuzzSummary {
 /// with span recording on) are **byte-identical at 1, 2 and 4 worker
 /// threads**, and that request conservation (`arrived == completed +
 /// shed + failed`, globally and per class) holds after the drain.
+/// Every trial also replays once on the legacy O(packages)-scan
+/// scheduler and diffs all three exports byte-for-byte against the
+/// calendar engine — the cross-scheduler oracle gate.
 /// Source family, stealing, and chaos alternate
 /// round-robin across trials so even a short sweep covers every regime;
 /// everything else is drawn from the seeded RNG, so a failing seed
@@ -313,6 +319,7 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
             sync: SyncConfig {
                 epoch_cycles: ms_to_cycles(0.1 + rng.next_f32() as f64 * 1.4),
                 steal,
+                ..SyncConfig::default()
             },
             calibrated_eta: rng.range_u64(0, 1) == 1,
             telemetry: crate::telemetry::TelemetryConfig::enabled(),
@@ -389,6 +396,33 @@ pub fn fuzz_determinism(seed: u64, trials: usize) -> FuzzSummary {
         assert_eq!(metrics[0], metrics[2], "{label}: 1 vs 4-thread metrics JSON diverged");
         assert_eq!(traces[0], traces[1], "{label}: 1 vs 2-thread chrome trace diverged");
         assert_eq!(traces[0], traces[2], "{label}: 1 vs 4-thread chrome trace diverged");
+
+        // Oracle gate: the bucketed completion calendar must schedule
+        // byte-for-byte like the legacy O(packages)-scan loop it
+        // replaced — every trial (chaos included) replays once on the
+        // legacy engine and diffs the full stats + telemetry output.
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(packages, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                threads: 1,
+                scheduler: crate::cluster::SchedulerKind::Legacy,
+                ..cfg.clone()
+            },
+        );
+        let mut src = source.clone();
+        let legacy = cluster.run(&mut src, horizon);
+        assert_eq!(jsons[0], legacy.to_json(), "{label}: calendar vs legacy-oracle stats diverged");
+        assert_eq!(
+            metrics[0],
+            legacy.metrics_json(None),
+            "{label}: calendar vs legacy-oracle metrics diverged"
+        );
+        assert_eq!(
+            traces[0],
+            legacy.chrome_trace(),
+            "{label}: calendar vs legacy-oracle chrome trace diverged"
+        );
+        summary.oracle_trials += 1;
         summary.trials += 1;
     }
     summary

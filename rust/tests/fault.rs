@@ -42,7 +42,7 @@ fn chaos_config(faults: &str, contention: f64, steal: bool, threads: usize) -> C
         shards: 4,
         threads,
         admission: AdmissionConfig::admit_all(),
-        sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.25) },
+        sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.25), ..Default::default() },
         faults: FaultPlan::parse(faults).expect("test fault spec"),
         contention: if contention > 0.0 {
             ContentionConfig::with_background(contention)
@@ -254,7 +254,7 @@ fn stolen_work_never_bounces_between_shards() {
             classes: ClassMix::single(TrafficClass::Interactive, 1.0, false),
             admission: AdmissionConfig::admit_all(),
             batcher: wienna::serve::BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
-            sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1) },
+            sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1), ..Default::default() },
             telemetry: TelemetryConfig::enabled(),
             ..Default::default()
         },

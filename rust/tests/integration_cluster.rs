@@ -219,7 +219,7 @@ fn closed_loop_with_stealing_is_bit_identical_across_threads() {
             ClusterConfig {
                 shards: 4,
                 threads,
-                sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.25) },
+                sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.25), ..Default::default() },
                 ..Default::default()
             },
         );
@@ -299,6 +299,7 @@ fn stealing_conserves_requests_and_never_duplicates_execution() {
                 sync: SyncConfig {
                     steal: true,
                     epoch_cycles: ms_to_cycles(0.1 + rng.next_f32() as f64),
+                    ..Default::default()
                 },
                 ..Default::default()
             },
@@ -364,7 +365,7 @@ fn stealing_moves_work_off_a_hot_stripe_and_speeds_the_drain() {
                 admission: AdmissionConfig::admit_all(),
                 preemption: false,
                 batcher: wienna::serve::BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
-                sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.1) },
+                sync: SyncConfig { steal, epoch_cycles: ms_to_cycles(0.1), ..Default::default() },
                 ..Default::default()
             },
         );
@@ -471,4 +472,106 @@ fn single_class_single_shard_matches_fleet_throughput() {
 
     assert_eq!(cluster_stats.serve.arrived(), fleet_stats.arrived());
     assert_eq!(cluster_stats.serve.completed(), fleet_stats.completed());
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive epoch sizing (`SyncConfig::adaptive`).
+// ---------------------------------------------------------------------------
+
+/// One closed-loop run with adaptive windows: the window end is derived
+/// from the earliest cross-shard event instead of a fixed stride.
+fn run_adaptive(threads: usize, adaptive: bool) -> wienna::cluster::ClusterStats {
+    let cluster = Cluster::new(
+        PackageSpec::homogeneous(8, DesignPoint::WIENNA_C),
+        ClusterConfig {
+            shards: 4,
+            threads,
+            sync: SyncConfig { steal: true, adaptive, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    // Closed-loop so the run actually pays barriers (the open-loop
+    // no-steal fast path collapses to a single unbounded epoch).
+    let mut source = Source::closed_loop(two_model_mix(), 24, 0.4, 12, 77);
+    cluster.run(&mut source, f64::INFINITY)
+}
+
+/// Adaptive epochs keep every engine guarantee: request conservation,
+/// full drain, and byte-identical stats at 1/2/4 worker threads.
+#[test]
+fn adaptive_epochs_conserve_requests_and_stay_thread_deterministic() {
+    let t1 = run_adaptive(1, true);
+    let t2 = run_adaptive(2, true);
+    let t4 = run_adaptive(4, true);
+    assert!(t1.serve.completed() > 0, "the run must serve traffic");
+    assert_eq!(
+        t1.serve.arrived(),
+        t1.serve.completed() + t1.serve.shed() + t1.serve.failed(),
+        "conservation under adaptive windows"
+    );
+    let per_class: u64 = t1.per_class.values().map(|m| m.completed + m.shed + m.failed).sum();
+    assert_eq!(per_class, t1.serve.arrived(), "per-class balance");
+    let (j1, j2, j4) = (t1.to_json(), t2.to_json(), t4.to_json());
+    assert_eq!(j1, j2, "adaptive epochs: 1 vs 2-thread stats diverged");
+    assert_eq!(j1, j4, "adaptive epochs: 1 vs 4-thread stats diverged");
+}
+
+/// Adaptive windows end at event bounds instead of a fixed stride, which
+/// moves every barrier — and with it all cross-shard feedback timing —
+/// yet the engine still admits, serves, and drains exactly the same
+/// request population as the fixed stride. (Barrier *counts* differ by
+/// design: adaptive trades stride-granularity windows for
+/// event-resolution ones, paying more barriers under dense completion
+/// traffic and fewer across quiet stretches.)
+#[test]
+fn adaptive_epochs_complete_the_same_work_as_the_fixed_stride() {
+    let fixed = run_adaptive(2, false);
+    let adaptive = run_adaptive(2, true);
+    assert_eq!(
+        fixed.serve.arrived(),
+        adaptive.serve.arrived(),
+        "same client pool either way"
+    );
+    assert_eq!(
+        fixed.serve.completed(),
+        adaptive.serve.completed(),
+        "every request still completes"
+    );
+    assert!(fixed.epochs > 0 && adaptive.epochs > 0, "both modes must pay real barriers");
+    assert_eq!(
+        adaptive.serve.arrived(),
+        adaptive.serve.completed() + adaptive.serve.shed() + adaptive.serve.failed(),
+        "conservation with event-bound windows"
+    );
+}
+
+/// Adaptive windows compose with chaos: fault edges clamp the window so
+/// kills land on their exact cycle, and the run stays deterministic
+/// across thread counts.
+#[test]
+fn adaptive_epochs_stay_deterministic_under_faults() {
+    let run = |threads: usize| {
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(8, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 4,
+                threads,
+                sync: SyncConfig { steal: true, adaptive: true, ..Default::default() },
+                faults: wienna::fault::FaultPlan::parse("kill:1@1..4;spike:0.3@0..3")
+                    .expect("test fault spec"),
+                ..Default::default()
+            },
+        );
+        let mut source = Source::closed_loop(two_model_mix(), 16, 0.3, 8, 31);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert!(t1.serve.completed() > 0);
+    assert_eq!(
+        t1.serve.arrived(),
+        t1.serve.completed() + t1.serve.shed() + t1.serve.failed(),
+        "conservation under adaptive windows + faults"
+    );
+    assert_eq!(t1.to_json(), t4.to_json(), "adaptive + faults: 1 vs 4-thread stats diverged");
 }

@@ -2,8 +2,9 @@
 //! behavior under a cap, thread-count determinism of the energy-extended
 //! cluster stats JSON, and the Pareto mode of the auto-sizer.
 
-use wienna::cluster::{Cluster, ClusterConfig, TrafficClass};
+use wienna::cluster::{AdmissionConfig, Cluster, ClusterConfig, SyncConfig, TrafficClass};
 use wienna::config::DesignPoint;
+use wienna::fault::FaultPlan;
 use wienna::power::{dominates, PowerConfig};
 use wienna::search::{autosize, AutosizeConfig, CostModel, FleetPlan, SearchSpace};
 use wienna::serve::{
@@ -181,6 +182,88 @@ fn search_pareto_front_survives_exhaustive_dominance_audit() {
     for p in &r.plans {
         assert!(p.energy_per_req_j > 0.0, "plan without probed energy");
     }
+}
+
+/// The stranded-cap fix (`SyncConfig::rebalance_caps`), end to end: a
+/// fault plan kills every package of one of two shards mid-run under a
+/// biting fleet cap. Without rebalancing, the dead shard's half of the
+/// cap strands and the survivors — now serving the whole failover load —
+/// stay pinned to their original slice. With rebalancing (the default),
+/// the barrier re-splits the cap over live packages, so the survivors'
+/// slice doubles, the governor picks faster DVFS rungs, and fewer
+/// dispatches throttle — while the fleet-average draw still respects the
+/// configured cap, and the run stays thread-count-deterministic.
+#[test]
+fn rebalanced_caps_flow_a_dead_shards_watts_to_the_survivors() {
+    // Shard 0 of 2 owns global packages {0, 2, 4, 6}; killing all four
+    // at 1 ms leaves shard 1 serving everything from then on. Stealing
+    // must be on so the dead shard's backlog fails over.
+    let run = |rebalance: bool, cap_w: Option<f64>, threads: usize| {
+        let cluster = Cluster::new(
+            PackageSpec::homogeneous(8, DesignPoint::WIENNA_C),
+            ClusterConfig {
+                shards: 2,
+                threads,
+                admission: AdmissionConfig::admit_all(),
+                sync: SyncConfig { steal: true, rebalance_caps: rebalance, ..Default::default() },
+                faults: FaultPlan::parse("kill:0@1;kill:2@1;kill:4@1;kill:6@1")
+                    .expect("test fault spec"),
+                power: match cap_w {
+                    Some(w) => PowerConfig::with_cap(w),
+                    None => PowerConfig::default(),
+                },
+                ..Default::default()
+            },
+        );
+        let mut source = Source::closed_loop(tiny_mix(50.0), 24, 0.3, 10, 11);
+        cluster.run(&mut source, f64::INFINITY)
+    };
+
+    // Size the cap from the measured uncapped draw of the same faulted
+    // scenario so it reliably bites on the surviving half of the fleet.
+    let base = run(true, None, 2);
+    let p0 = base.energy.avg_power_w(base.serve.end_cycle());
+    assert!(p0 > 0.0, "baseline run must draw power");
+    let cap = 0.6 * p0;
+
+    let on = run(true, Some(cap), 2);
+    let off = run(false, Some(cap), 2);
+
+    // Same closed-loop population, conserved, in both modes.
+    assert_eq!(on.serve.arrived(), 24 * 10);
+    assert_eq!(off.serve.arrived(), 24 * 10);
+    for s in [&on, &off] {
+        assert!(s.serve.completed() > 0, "survivors must serve the failover load");
+        assert_eq!(
+            s.serve.arrived(),
+            s.serve.completed() + s.serve.shed() + s.serve.failed(),
+            "conservation under kill + cap"
+        );
+    }
+
+    // The cap bites: with half the cap stranded on dead silicon, the
+    // survivors cannot run everything at nominal.
+    assert!(off.energy.throttled_batches > 0, "a 0.6x cap must throttle the stranded config");
+    // Fleet-average draw respects the configured cap either way — the
+    // rebalanced slices still sum to the fleet cap.
+    for (name, s) in [("rebalanced", &on), ("stranded", &off)] {
+        let avg = s.energy.avg_power_w(s.serve.end_cycle());
+        assert!(avg <= cap * 1.05, "{name}: avg {avg:.1} W above cap {cap:.1} W");
+    }
+    // The fix itself: the survivors' doubled slice buys faster DVFS
+    // rungs, so strictly fewer dispatches throttle than when the dead
+    // shard's watts strand.
+    assert!(
+        on.energy.throttled_batches < off.energy.throttled_batches,
+        "rebalanced caps must throttle less (rebalanced {} vs stranded {})",
+        on.energy.throttled_batches,
+        off.energy.throttled_batches
+    );
+
+    // Determinism gate: the rebalance decision is barrier-state-only,
+    // so the fixed run is byte-identical across worker-thread counts.
+    let one = run(true, Some(cap), 1);
+    assert_eq!(one.to_json(), on.to_json(), "rebalance_caps: 1 vs 2-thread stats diverged");
 }
 
 #[test]

@@ -23,9 +23,9 @@ use wienna::serve::{
     Source, WorkloadMix,
 };
 use wienna::telemetry::{
-    chrome_trace, metrics_json, EpochSample, FlowRecord, PhaseBreakdown, PhaseTotals, PreemptSpan,
-    Recorder, ShedSpan, SloEvent, SloEventKind, SloWindow, SpanRecord, Telemetry, TelemetryConfig,
-    PHASES,
+    chrome_trace, metrics_json, metrics_json_with, EpochSample, FlowRecord, PhaseBreakdown,
+    PhaseTotals, PreemptSpan, QuantileSketch, Recorder, ShedSpan, SloEvent, SloEventKind,
+    SloWindow, SpanRecord, Telemetry, TelemetryConfig, PHASES,
 };
 use wienna::workload::trace::synthetic_arrivals;
 
@@ -167,7 +167,7 @@ fn stolen_spans_conserve_latency() {
             admission: AdmissionConfig::admit_all(),
             preemption: false,
             batcher: BatcherConfig { max_batch: 8, candidates: vec![1, 2, 4, 8] },
-            sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1) },
+            sync: SyncConfig { steal: true, epoch_cycles: ms_to_cycles(0.1), ..Default::default() },
             telemetry: TelemetryConfig::enabled(),
             ..Default::default()
         },
@@ -338,8 +338,13 @@ fn telemetry_schema_matches_the_golden_fixture() {
     attr.record(&t.log.spans[0].phases);
     let class_attr = [attr; NUM_CLASSES];
     let memo = MemoStats { hits: 4, misses: 1, entries: 1, evictions: 0, capacity: 64 };
+    // A bounded-stats artifact also carries ε-bounded quantile sketches;
+    // pin that object's shape too.
+    let mut sk = QuantileSketch::new(0.01);
+    sk.record(2000.0);
+    let sketches = vec![("latency_ms".to_string(), &sk)];
 
-    let metrics = metrics_json(&t, &attr, Some(&class_attr), Some(memo));
+    let metrics = metrics_json_with(&t, &attr, Some(&class_attr), Some(memo), &sketches);
     let trace = chrome_trace(&t);
 
     let mut schema = String::new();
@@ -354,6 +359,11 @@ fn telemetry_schema_matches_the_golden_fixture() {
     }
     for key in keys_of_first(&metrics, "{ \"name\"") {
         schema.push_str(&format!("metrics hist {key}\n"));
+    }
+    // Sketch entries also open with `{ "name"`, but only they carry
+    // "sub_bits" — that selects the first sketch object.
+    for key in keys_of_first(&metrics, "\"sub_bits\"") {
+        schema.push_str(&format!("metrics sketch {key}\n"));
     }
     for key in keys_of_first(&metrics, "{ \"epoch\"") {
         schema.push_str(&format!("metrics epoch {key}\n"));
